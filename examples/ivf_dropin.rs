@@ -1,0 +1,76 @@
+//! Drop-in integration demo (paper Sec. 4.4 / Fig. 5): feed KeyNet's
+//! predicted key ŷ(x) to an *unmodified* IVF index in place of the query
+//! and trace recall vs nprobe/FLOPs/latency for original vs mapped.
+//!
+//! ```bash
+//! cargo run --release --example ivf_dropin -- --dataset nq-s --size s [--steps N]
+//! ```
+
+use amips::bench_support::fixtures;
+use amips::bench_support::report::{pct, Report};
+use amips::coordinator::pipeline::{recall_against_truth, MappedSearchPipeline};
+use amips::index::ivf::IvfIndex;
+use amips::index::traits::VectorIndex;
+use amips::runtime::Engine;
+use amips::cli::Args;
+use amips::trainer::TrainOpts;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let dataset = args.get_or("dataset", "nq-s").to_string();
+    let size = args.get_or("size", "s").to_string();
+    let steps = args.get_usize("steps", 0)?;
+    let frac = args.get_f32("recall-frac", 0.01)?;
+    args.reject_unknown()?;
+
+    let manifest = fixtures::load_manifest()?;
+    let engine = Engine::new(manifest.dir.clone())?;
+    let config = format!("{dataset}.keynet.{size}.l4.c1");
+    let ds = fixtures::prepare_dataset(&manifest, &dataset, 1)?;
+    let opts = (steps > 0).then(|| TrainOpts {
+        steps,
+        ..TrainOpts::default()
+    });
+    let model = fixtures::trained_model(&engine, &manifest, &config, &ds, opts)?;
+
+    let nlist = fixtures::default_nlist(ds.n_keys());
+    let index = IvfIndex::build(&ds.keys, nlist, 15, 42);
+    let truth: Vec<usize> = (0..ds.val.gt.n_queries())
+        .map(|q| ds.val.gt.global_top1(q).0)
+        .collect();
+    let k = ((ds.n_keys() as f32 * frac).ceil() as usize).max(1);
+
+    let mut rep = Report::new(&format!(
+        "IVF drop-in: {config} vs orig (nlist={nlist}, Recall@{:.2}%={k})",
+        frac * 100.0
+    ));
+    rep.header(&[
+        "nprobe", "orig R", "mapped R", "orig MFLOP", "mapped MFLOP", "orig ms/q", "mapped ms/q",
+    ]);
+    for nprobe in [1usize, 2, 4, 8, 16, 32] {
+        if nprobe > nlist {
+            break;
+        }
+        let orig = MappedSearchPipeline::original(&index).run(&ds.val.x, k, nprobe)?;
+        let mapped = MappedSearchPipeline::mapped(&index, &model).run(&ds.val.x, k, nprobe)?;
+        let nq = ds.val.x.rows() as f64;
+        let orig_flops = orig.results[0].cost.flops as f64 / 1e6;
+        let mapped_flops =
+            (mapped.results[0].cost.flops + mapped.map_flops_per_query) as f64 / 1e6;
+        rep.row(&[
+            nprobe.to_string(),
+            pct(recall_against_truth(&orig.results, &truth, k)),
+            pct(recall_against_truth(&mapped.results, &truth, k)),
+            format!("{orig_flops:.3}"),
+            format!("{mapped_flops:.3}"),
+            format!("{:.3}", (orig.map_seconds + orig.search_seconds) / nq * 1e3),
+            format!(
+                "{:.3}",
+                (mapped.map_seconds + mapped.search_seconds) / nq * 1e3
+            ),
+        ]);
+    }
+    rep.emit("ivf_dropin");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Cluster-routing demo (paper Sec. 4.3 / Fig. 3): learned SupportNet /
+//! KeyNet routers vs the centroid baseline on a clustered database.
+//!
+//! ```bash
+//! cargo run --release --example routing -- --dataset nq-s [--size s] [--model keynet]
+//! ```
+
+use amips::bench_support::fixtures;
+use amips::bench_support::report::{pct, Report};
+use amips::cli::Args;
+use amips::coordinator::router::{routing_accuracy, AmortizedRouter, CentroidRouter, Router};
+use amips::metrics::flops;
+use amips::runtime::Engine;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let dataset = args.get_or("dataset", "nq-s").to_string();
+    let size = args.get_or("size", "s").to_string();
+    let model_kind = args.get_or("model", "keynet").to_string();
+    args.reject_unknown()?;
+
+    let manifest = fixtures::load_manifest()?;
+    let engine = Engine::new(manifest.dir.clone())?;
+    let config = format!("{dataset}.{model_kind}.{size}.l4.c10");
+    let ds = fixtures::prepare_dataset(&manifest, &dataset, 10)?;
+    let model = fixtures::trained_model(&engine, &manifest, &config, &ds, None)?;
+
+    let learned = AmortizedRouter::new(model);
+    let baseline = CentroidRouter::new(ds.centroids.clone());
+    let true_clusters: Vec<usize> = (0..ds.val.gt.n_queries())
+        .map(|q| ds.val.gt.top_cluster(q))
+        .collect();
+    let mut sizes = vec![0usize; ds.c];
+    for &a in &ds.assign {
+        sizes[a as usize] += 1;
+    }
+
+    let mut rep = Report::new(&format!("routing on {dataset} (c=10): {config} vs centroid"));
+    rep.header(&["router", "top-k", "accuracy", "kFLOP/query"]);
+    for k in 1..=5usize {
+        for router in [&learned as &dyn Router, &baseline as &dyn Router] {
+            let dec = router.route_batch(&ds.val.x, k)?;
+            let acc = routing_accuracy(&dec, &true_clusters);
+            let avg: f64 = dec
+                .iter()
+                .map(|d| {
+                    let picked: Vec<usize> =
+                        d.clusters.iter().map(|&c| sizes[c as usize]).collect();
+                    flops::routing_total_flops(d.selection_flops, &picked, ds.d()) as f64
+                })
+                .sum::<f64>()
+                / dec.len() as f64;
+            rep.row(&[
+                router.name().to_string(),
+                k.to_string(),
+                pct(acc),
+                format!("{:.1}", avg / 1e3),
+            ]);
+        }
+    }
+    rep.emit("routing_example");
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Serving demo: the full coordinator — dynamic batcher + model-runner
+//! thread (PJRT confined) + shared IVF index — under closed-loop client
+//! load, reporting recall, throughput and latency quantiles.
+//!
+//! ```bash
+//! cargo run --release --example serve -- [--requests 1024] [--clients 4] [--no-map]
+//! ```
+
+use amips::bench_support::fixtures;
+use amips::bench_support::report::{pct, Report};
+use amips::cli::Args;
+use amips::coordinator::{BatchPolicy, Server, ServerConfig};
+use amips::index::ivf::IvfIndex;
+use amips::runtime::Engine;
+use amips::trainer;
+use anyhow::Result;
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let dataset = args.get_or("dataset", "quora-s").to_string();
+    let requests = args.get_usize("requests", 1024)?;
+    let clients = args.get_usize("clients", 4)?;
+    let nprobe = args.get_usize("nprobe", 4)?;
+    let map_queries = !args.has("no-map");
+    args.reject_unknown()?;
+
+    let manifest = fixtures::load_manifest()?;
+    let config = format!("{dataset}.keynet.s.l4.c1");
+    let meta = manifest.meta(&config)?;
+    let ds = fixtures::prepare_dataset(&manifest, &dataset, 1)?;
+
+    // Train (or load) on the main thread, then hand params to the server.
+    let params = {
+        let engine = Engine::new(manifest.dir.clone())?;
+        let opts = trainer::TrainOpts {
+            steps: fixtures::default_steps(&meta.size),
+            ..Default::default()
+        };
+        trainer::train_or_load(&engine, &meta, &ds, &opts)?.params
+    };
+
+    let nlist = fixtures::default_nlist(ds.n_keys());
+    let index = Arc::new(IvfIndex::build(&ds.keys, nlist, 15, 99));
+    let (server, handle) = Server::start(
+        ServerConfig {
+            artifacts_dir: manifest.dir.clone(),
+            meta,
+            params,
+            policy: BatchPolicy::default(),
+            map_queries,
+            nprobe_default: nprobe,
+        },
+        index,
+    )?;
+
+    let nq = ds.val.x.rows();
+    let k = (ds.n_keys() / 40).max(10); // Recall@2.5%
+    let t0 = std::time::Instant::now();
+    let mut hits = 0usize;
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for t in 0..clients {
+            let handle = handle.clone();
+            let ds = &ds;
+            joins.push(s.spawn(move || -> usize {
+                let mut local = 0;
+                for i in (t..requests).step_by(clients) {
+                    let q = ds.val.x.row(i % nq).to_vec();
+                    if let Ok(resp) = handle.query(q, k) {
+                        let truth = ds.val.gt.global_top1(i % nq).0 as u32;
+                        if resp.ids.contains(&truth) {
+                            local += 1;
+                        }
+                    }
+                }
+                local
+            }));
+        }
+        for j in joins {
+            hits += j.join().unwrap();
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.latency_stats();
+    drop(handle);
+    server.shutdown()?;
+
+    let mut rep = Report::new(&format!(
+        "serve {config} map={map_queries} (IVF nlist={nlist} nprobe={nprobe}, {clients} clients)"
+    ));
+    rep.header(&["requests", "recall@2.5%", "qps", "mean ms", "p50 ms", "p95 ms"]);
+    rep.row(&[
+        requests.to_string(),
+        pct(hits as f64 / requests as f64),
+        format!("{:.0}", requests as f64 / wall),
+        format!("{:.2}", stats.mean_s() * 1e3),
+        format!("{:.2}", stats.quantile_s(0.5) * 1e3),
+        format!("{:.2}", stats.quantile_s(0.95) * 1e3),
+    ]);
+    rep.emit("serve_example");
+    Ok(())
+}

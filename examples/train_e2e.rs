@@ -1,0 +1,123 @@
+//! End-to-end driver (the repo's validation workload, EXPERIMENTS.md §E2E):
+//! exercises every layer in one run —
+//!
+//!   synthetic corpus -> exact targets (L3) -> AOT Adam training loop
+//!   (L2 graph + L1 kernel artifacts via PJRT) -> EMA checkpoint ->
+//!   inference handles -> routing + IVF integration + serving metrics.
+//!
+//! ```bash
+//! cargo run --release --example train_e2e [-- --dataset nq-s --steps 4000]
+//! ```
+
+use amips::bench_support::fixtures;
+use amips::bench_support::report::{f, pct, Report};
+use amips::cli::Args;
+use amips::coordinator::pipeline::{recall_against_truth, MappedSearchPipeline};
+use amips::coordinator::router::{routing_accuracy, AmortizedRouter, CentroidRouter, Router};
+use amips::index::ivf::IvfIndex;
+use amips::metrics::{retrieval, transport};
+use amips::runtime::Engine;
+use amips::tensor::Tensor;
+use amips::trainer::{self, TrainOpts};
+use amips::util::Timer;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let dataset = args.get_or("dataset", "nq-s").to_string();
+    let steps = args.get_usize("steps", 4000)?;
+    args.reject_unknown()?;
+
+    let manifest = fixtures::load_manifest()?;
+    let engine = Engine::new(manifest.dir.clone())?;
+    let total = Timer::start();
+
+    // ---- stage 1: data (L3 substrate) --------------------------------
+    let t = Timer::start();
+    let ds = fixtures::prepare_dataset(&manifest, &dataset, 1)?;
+    let ds10 = fixtures::prepare_dataset(&manifest, &dataset, 10)?;
+    println!(
+        "[data] {} keys, {} train q, {} val q  ({:.1}s)",
+        ds.n_keys(),
+        ds.train.x.rows(),
+        ds.val.x.rows(),
+        t.elapsed_s()
+    );
+
+    // ---- stage 2: training through the AOT step (fresh, no cache) ----
+    let config = format!("{dataset}.keynet.s.l4.c1");
+    let meta = manifest.meta(&config)?;
+    let opts = TrainOpts {
+        steps,
+        eval_every: (steps / 8).max(1),
+        ..Default::default()
+    };
+    let t = Timer::start();
+    let out = trainer::train(&engine, &meta, &ds, &opts)?;
+    let train_s = t.elapsed_s();
+    let spm = steps as f64 / train_s;
+    println!(
+        "[train] {config}: {steps} steps in {train_s:.1}s ({spm:.0} steps/s), loss curve:"
+    );
+    for p in out.curve.train.iter().step_by(4) {
+        println!("    step {:5}  loss {:.5}", p.step, p.loss);
+    }
+    println!(
+        "[train] E_rel trajectory: {}  (final {:.3})",
+        out.curve.e_rel_sparkline(),
+        out.curve.final_e_rel().unwrap_or(f32::NAN)
+    );
+
+    // ---- stage 3: inference metrics -----------------------------------
+    let model = amips::model::AmortizedModel::load(&engine, meta.clone(), &out.params)?;
+    let pred = model.map_queries(&ds.val.x)?;
+    let truth: Vec<usize> = (0..ds.val.gt.n_queries())
+        .map(|q| ds.val.gt.global_top1(q).0)
+        .collect();
+    let rm = retrieval::evaluate(&pred, &ds.keys, &truth);
+    let tgt: Tensor = ds.keys.gather_rows(&truth);
+    let e_rel = transport::relative_transport_error(&pred, &ds.val.x, &tgt);
+    println!(
+        "[eval] match {} R@10 {} R@100 {} MRR {} E_rel {}",
+        pct(rm.match_rate),
+        pct(rm.recall_at_10),
+        pct(rm.recall_at_100),
+        f(rm.mrr),
+        f(e_rel)
+    );
+
+    // ---- stage 4: routing (c=10, Sec. 4.3) ----------------------------
+    let cfg10 = format!("{dataset}.keynet.s.l4.c10");
+    let model10 = fixtures::trained_model(&engine, &manifest, &cfg10, &ds10, None)?;
+    let learned = AmortizedRouter::new(model10);
+    let centroid = CentroidRouter::new(ds10.centroids.clone());
+    let tc: Vec<usize> = (0..ds10.val.gt.n_queries())
+        .map(|q| ds10.val.gt.top_cluster(q))
+        .collect();
+    let mut rep = Report::new("e2e routing (k=1)");
+    rep.header(&["router", "accuracy"]);
+    for r in [&learned as &dyn Router, &centroid as &dyn Router] {
+        let dec = r.route_batch(&ds10.val.x, 1)?;
+        rep.row(&[r.name().to_string(), pct(routing_accuracy(&dec, &tc))]);
+    }
+    rep.emit("train_e2e");
+
+    // ---- stage 5: IVF integration (Sec. 4.4) ---------------------------
+    let index = IvfIndex::build(&ds.keys, fixtures::default_nlist(ds.n_keys()), 15, 42);
+    let k = (ds.n_keys() / 40).max(10);
+    let mut rep = Report::new("e2e IVF integration (Recall@2.5%)");
+    rep.header(&["nprobe", "orig", "mapped"]);
+    for nprobe in [1usize, 2, 4, 8] {
+        let orig = MappedSearchPipeline::original(&index).run(&ds.val.x, k, nprobe)?;
+        let mapped = MappedSearchPipeline::mapped(&index, &model).run(&ds.val.x, k, nprobe)?;
+        rep.row(&[
+            nprobe.to_string(),
+            pct(recall_against_truth(&orig.results, &truth, k)),
+            pct(recall_against_truth(&mapped.results, &truth, k)),
+        ]);
+    }
+    rep.emit("train_e2e");
+
+    println!("train_e2e OK in {:.1}s total", total.elapsed_s());
+    Ok(())
+}

@@ -1,0 +1,4 @@
+"""Build-time Python package: L1 Pallas kernels + L2 JAX models + AOT export.
+
+Never imported at runtime — the Rust binary only consumes artifacts/.
+"""

@@ -1,0 +1,230 @@
+"""AOT exporter: lower every manifest config to HLO text + metadata.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Per config <name> it writes:
+
+    <name>.init.hlo.txt    (seed u32[])            -> state...
+    <name>.train.hlo.txt   (state..., x, y*, sigma, hparams[8])
+                                                   -> state..., metrics[4]
+    <name>.fwd.hlo.txt     (params..., x[B,d])     -> scores[B,c], keys[B,c,d]
+    <name>.eval.hlo.txt    (params..., x, y*, sigma) -> metrics[4]
+    <name>.grad.hlo.txt    (SupportNet only: params..., x) -> scores, keys
+    <name>.fwd4096 / .grad4096 (timing configs, Table 1)
+    <name>.meta.txt        line-oriented metadata (parsed by Rust)
+
+Interchange is HLO **text**: jax>=0.5 serializes HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md). StableHLO from
+jit(...).lower() is converted through xla_client's mlir bridge with
+return_tuple=True, so every artifact returns a tuple the Rust side
+unpacks with `to_tuple`.
+
+The forward (inference) artifacts are lowered with use_pallas=True, so
+the L1 Pallas kernel (interpret mode) is what lands in the serving HLO.
+Gradient/training graphs use the numerically-identical jnp path (autodiff
+through interpret-mode pallas_call is unsupported); python/tests assert
+the two paths agree.
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import manifest as MF
+from . import model as M
+from . import sizing, train
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def state_specs(arch):
+    """(name, shape) for the full train state, in ABI order."""
+    ps = M.param_specs(arch)
+    out = []
+    for prefix in ("p", "m", "v", "ema"):
+        out += [(f"{prefix}.{n}", s) for n, s in ps]
+    out.append(("step", ()))
+    return out
+
+
+def export_config(cfg: MF.ModelCfg, outdir: str, force: bool = False):
+    arch = cfg.arch()
+    ds = MF.DATASETS[cfg.dataset]
+    B, Be = MF.TRAIN_BATCH, MF.EVAL_BATCH
+    d, c = arch.d, arch.c
+    pspecs = M.param_specs(arch)
+    sspecs = state_specs(arch)
+    meta_path = os.path.join(outdir, f"{cfg.name}.meta.txt")
+    if os.path.exists(meta_path) and not force:
+        return False
+
+    p_in = [_sds(s) for _, s in pspecs]
+    s_in = [_sds(s) for _, s in sspecs]
+    x_b, ys_b, sg_b = _sds((B, d)), _sds((B, c, d)), _sds((B, c))
+    x_e, ys_e, sg_e = _sds((Be, d)), _sds((Be, c, d)), _sds((Be, c))
+    hp = _sds((8,))
+
+    # ---- init: seed -> state -------------------------------------------
+    def init_fn(seed):
+        return tuple(train.init_state(arch, seed))
+    lowered = jax.jit(init_fn).lower(_sds((), jnp.uint32))
+    _write(os.path.join(outdir, f"{cfg.name}.init.hlo.txt"),
+           to_hlo_text(lowered))
+
+    # ---- train step -----------------------------------------------------
+    def train_fn(state, x, y_star, sigma, hparams):
+        new_state, metrics = train.train_step(list(state), x, y_star, sigma,
+                                              hparams, arch)
+        return tuple(new_state) + (metrics,)
+    lowered = jax.jit(train_fn).lower(tuple(s_in), x_b, ys_b, sg_b, hp)
+    _write(os.path.join(outdir, f"{cfg.name}.train.hlo.txt"),
+           to_hlo_text(lowered))
+
+    # ---- forward (serving path, pallas) ----------------------------------
+    def fwd_fn(params, x):
+        if arch.model == "supportnet":
+            scores = M.forward(list(params), x, arch, use_pallas=True)
+            return (scores,)
+        scores, keys = M.keynet_scores_and_keys(list(params), x, arch,
+                                                use_pallas=True)
+        return scores, keys
+    lowered = jax.jit(fwd_fn).lower(tuple(p_in), x_b)
+    _write(os.path.join(outdir, f"{cfg.name}.fwd.hlo.txt"),
+           to_hlo_text(lowered))
+
+    # ---- grad (SupportNet key recovery via autodiff) ---------------------
+    if arch.model == "supportnet":
+        def grad_fn(params, x):
+            return M.supportnet_scores_and_keys(list(params), x, arch)
+        lowered = jax.jit(grad_fn).lower(tuple(p_in), x_b)
+        _write(os.path.join(outdir, f"{cfg.name}.grad.hlo.txt"),
+               to_hlo_text(lowered))
+
+    # ---- eval -------------------------------------------------------------
+    def eval_fn(params, x, y_star, sigma):
+        return (train.eval_step(list(params), x, y_star, sigma, arch),)
+    lowered = jax.jit(eval_fn).lower(tuple(p_in), x_e, ys_e, sg_e)
+    _write(os.path.join(outdir, f"{cfg.name}.eval.hlo.txt"),
+           to_hlo_text(lowered))
+
+    # ---- Table-1 timing batches ------------------------------------------
+    if cfg.timing:
+        xt = _sds((MF.TIMING_BATCH, d))
+        lowered = jax.jit(fwd_fn).lower(tuple(p_in), xt)
+        _write(os.path.join(outdir, f"{cfg.name}.fwd4096.hlo.txt"),
+               to_hlo_text(lowered))
+        if arch.model == "supportnet":
+            lowered = jax.jit(grad_fn).lower(tuple(p_in), xt)
+            _write(os.path.join(outdir, f"{cfg.name}.grad4096.hlo.txt"),
+                   to_hlo_text(lowered))
+
+    # ---- metadata ----------------------------------------------------------
+    lines = [
+        f"name {cfg.name}",
+        f"dataset {cfg.dataset}",
+        f"model {arch.model}",
+        f"d {arch.d}",
+        f"c {arch.c}",
+        f"h {arch.h}",
+        f"layers {arch.layers}",
+        f"nx {arch.nx}",
+        f"inject {','.join(map(str, arch.inject)) or '-'}",
+        f"residual {int(arch.residual)}",
+        f"homogenize {int(arch.homogenize)}",
+        f"alpha {arch.alpha}",
+        f"beta {arch.beta}",
+        f"size {cfg.size}",
+        f"rho {sizing.RHO[cfg.size]}",
+        f"train_batch {B}",
+        f"eval_batch {Be}",
+        f"timing_batch {MF.TIMING_BATCH if cfg.timing else 0}",
+        f"n_params {arch.n_params}",
+        f"n_param_tensors {len(pspecs)}",
+        f"n_state_tensors {len(sspecs)}",
+        f"fwd_flops {sizing.forward_flops(d, arch.h, arch.layers, arch.nx, arch.d_out, arch.homogenize)}",
+        f"grad_flops {sizing.grad_flops(d, arch.h, arch.layers, arch.nx, arch.d_out, arch.homogenize) * arch.c}",
+    ]
+    for n, s in pspecs:
+        lines.append(f"param {n} {','.join(map(str, s)) or '-'}")
+    _write(meta_path, "\n".join(lines) + "\n")
+    return True
+
+
+def write_manifest_txt(outdir):
+    lines = [
+        "# generated by python -m compile.aot; parsed by rust/src/runtime/artifact.rs",
+        f"train_batch {MF.TRAIN_BATCH}",
+        f"eval_batch {MF.EVAL_BATCH}",
+        f"timing_batch {MF.TIMING_BATCH}",
+        f"aug_sigma {MF.AUG_SIGMA}",
+        f"val_queries {MF.VAL_QUERIES}",
+    ]
+    for ds in MF.DATASETS.values():
+        lines.append(
+            f"dataset {ds.name} n={ds.n} d={ds.d} n_queries={ds.n_queries} "
+            f"shift={ds.shift} spread={ds.spread} modes={ds.modes} seed={ds.seed}")
+    for cfg in MF.MANIFEST:
+        lines.append(f"config {cfg.name} dataset={cfg.dataset} "
+                     f"model={cfg.model} size={cfg.size} layers={cfg.layers} "
+                     f"c={cfg.c} timing={int(cfg.timing)}")
+    _write(os.path.join(outdir, "manifest.txt"), "\n".join(lines) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on config names")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    cfgs = MF.MANIFEST
+    if args.only:
+        cfgs = [c for c in cfgs if args.only in c.name]
+    if args.list:
+        for c in cfgs:
+            a = c.arch()
+            print(f"{c.name:46s} h={a.h:4d} params={a.n_params}")
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+    done = 0
+    for i, cfg in enumerate(cfgs):
+        t1 = time.time()
+        fresh = export_config(cfg, args.out, force=args.force)
+        done += fresh
+        status = "export" if fresh else "cached"
+        print(f"[{i + 1}/{len(cfgs)}] {status} {cfg.name} "
+              f"({time.time() - t1:.1f}s)", flush=True)
+    write_manifest_txt(args.out)
+    print(f"artifacts: {done} exported, {len(cfgs) - done} cached "
+          f"in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

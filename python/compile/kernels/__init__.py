@@ -1,0 +1,2 @@
+"""L1 Pallas kernels (build-time only; lowered into L2 HLO artifacts)."""
+from . import icnn_layer, mips_topk, ref  # noqa: F401

@@ -1,0 +1,127 @@
+"""L1 Pallas kernel: fused ICNN/MLP hidden layer.
+
+Computes  out = sigma_{alpha,beta}(z @ Wz + x @ Wx + b)  (optionally + z)
+in one pass, tiled for TPU VMEM.
+
+Hardware adaptation (DESIGN.md §6): the paper trains on GPU where this
+layer would be a cuBLAS GEMM + elementwise epilogue launched per layer.
+On TPU we instead express the HBM<->VMEM schedule with a BlockSpec grid:
+
+  grid = (B/BM, h/BN, h/BK-steps folded into the kernel body)
+
+Each program instance owns a (BM, BN) output tile; it streams the
+K-dimension of both matmuls (z-path over h, x-path over d) through the
+MXU with f32 accumulation (`preferred_element_type`), then applies the
+soft-leaky-ReLU epilogue on the VPU before a single writeback. The
+weight tiles plus one activation tile are sized to fit comfortably in
+VMEM (~16 MB/core budget; see `vmem_bytes`).
+
+interpret=True everywhere on this image: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so the kernel's *structure* is what we optimize and
+its numerics are validated against `ref.py`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128  # batch-tile rows (MXU-friendly multiple of 8)
+DEFAULT_BN = 128  # output-feature tile cols (lane dim multiple of 128)
+
+
+def _soft_leaky_relu(x, alpha, beta):
+    t = beta * x
+    softplus = jnp.maximum(t, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(t)))
+    return alpha * x + (1.0 - alpha) / beta * softplus
+
+
+def _layer_kernel(z_ref, x_ref, wz_ref, wx_ref, b_ref, o_ref, *,
+                  alpha, beta, residual):
+    """One (BM, BN) output tile: both matmul partials + fused epilogue.
+
+    z_ref  (BM, h)   full contraction dim kept resident: h*BM*4 bytes
+    x_ref  (BM, d)
+    wz_ref (h,  BN)
+    wx_ref (d,  BN)
+    b_ref  (1,  BN)
+    o_ref  (BM, BN)
+    """
+    acc = jnp.dot(z_ref[...], wz_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + jnp.dot(x_ref[...], wx_ref[...],
+                        preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    act = _soft_leaky_relu(acc, alpha, beta)
+    if residual:
+        act = act + z_ref[:, pl.dslice(pl.program_id(1) * o_ref.shape[1],
+                                       o_ref.shape[1])]
+    o_ref[...] = act.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "residual",
+                                             "bm", "bn"))
+def icnn_layer(z, x, wz, wx, b, *, alpha=0.1, beta=20.0, residual=False,
+               bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """Fused hidden layer via pallas_call. Shapes: z [B,h], x [B,d],
+    wz [h,h], wx [d,h], b [h] -> [B,h]."""
+    B, h = z.shape
+    d = x.shape[1]
+    bm = min(bm, B)
+    bn = min(bn, h)
+    # Grid must tile exactly in interpret mode for clean semantics; fall
+    # back to single-tile when shapes are ragged (tests cover both paths).
+    if B % bm != 0:
+        bm = B
+    if h % bn != 0:
+        bn = h
+    grid = (B // bm, h // bn)
+    b2 = b.reshape(1, h)
+    kernel = functools.partial(_layer_kernel, alpha=alpha, beta=beta,
+                               residual=residual)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, h), lambda i, j: (i, 0)),   # z: full K resident
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),   # x
+            pl.BlockSpec((h, bn), lambda i, j: (0, j)),   # wz column tile
+            pl.BlockSpec((d, bn), lambda i, j: (0, j)),   # wx column tile
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),   # bias tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, h), z.dtype),
+        interpret=True,
+    )(z, x, wz, wx, b2)
+
+
+def vmem_bytes(B, d, h, bm=DEFAULT_BM, bn=DEFAULT_BN, itemsize=4):
+    """Static VMEM footprint estimate for one program instance (bytes).
+
+    Used by the §Perf structural budget: tile choice must keep this under
+    ~half of a TPU core's ~16MB VMEM so double-buffering fits.
+    """
+    bm = min(bm, B)
+    bn = min(bn, h)
+    z_t = bm * h
+    x_t = bm * d
+    wz_t = h * bn
+    wx_t = d * bn
+    b_t = bn
+    o_t = bm * bn
+    return (z_t + x_t + wz_t + wx_t + b_t + o_t) * itemsize
+
+
+def mxu_utilization_estimate(B, d, h, bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """Fraction of MXU-issue slots doing useful work for one layer, under
+    the 128x128 systolic-array model: efficiency is the product of how
+    well each matmul dim fills its 128-lane tile."""
+    def fill(dim, tile):
+        t = min(tile, dim)
+        return dim / (pl.cdiv(dim, t) * max(t, 128))
+    # z-path dominates ((B,h)x(h,h)); x-path adds d/h fraction of work.
+    z_eff = fill(B, bm) * fill(h, bn) * fill(h, 128)
+    x_eff = fill(B, bm) * fill(h, bn) * fill(d, 128)
+    w_z = B * h * h
+    w_x = B * d * h
+    return (z_eff * w_z + x_eff * w_x) / (w_z + w_x)

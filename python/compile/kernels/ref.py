@@ -1,0 +1,53 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here; ``python/tests/test_kernel.py`` sweeps shapes/dtypes with
+hypothesis and asserts allclose between the two.
+"""
+
+import jax.numpy as jnp
+
+
+def soft_leaky_relu(x, alpha: float = 0.1, beta: float = 20.0):
+    """The paper's activation (Sec. 3.3):
+
+        sigma_{alpha,beta}(x) = alpha*x + (1-alpha)/beta * log(1 + exp(beta*x))
+
+    As beta -> inf this approaches leaky-ReLU with negative slope alpha.
+    Computed in a numerically-stable way: log1p(exp(t)) = max(t,0) + log1p(exp(-|t|)).
+    """
+    t = beta * x
+    softplus = jnp.maximum(t, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(t)))
+    return alpha * x + (1.0 - alpha) / beta * softplus
+
+
+def icnn_layer(z, x, wz, wx, b, alpha: float = 0.1, beta: float = 20.0,
+               residual: bool = False):
+    """Fused ICNN/MLP hidden layer:
+
+        out = sigma(z @ Wz + x @ Wx + b)         (+ z if residual)
+
+    Shapes: z [B,h], x [B,d], wz [h,h], wx [d,h], b [h].
+    This is the single hot compute block both SupportNet and KeyNet stack
+    L times; the Pallas kernel in `icnn_layer.py` computes the same thing
+    tile-by-tile.
+    """
+    pre = z @ wz + x @ wx + b
+    act = soft_leaky_relu(pre, alpha, beta)
+    return z + act if residual else act
+
+
+def input_layer(x, wx0, b0, alpha: float = 0.1, beta: float = 20.0):
+    """First layer: sigma(x @ Wx0 + b0). x [B,d], wx0 [d,h], b0 [h]."""
+    return soft_leaky_relu(x @ wx0 + b0, alpha, beta)
+
+
+def mips_scores(queries, keys):
+    """Exact MIPS score matrix <x_i, y_j>: queries [B,d], keys [n,d] -> [B,n]."""
+    return queries @ keys.T
+
+
+def mips_top1(queries, keys):
+    """Exact top-1 MIPS: returns (values [B], indices [B])."""
+    s = mips_scores(queries, keys)
+    return jnp.max(s, axis=1), jnp.argmax(s, axis=1)

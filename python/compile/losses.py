@@ -1,0 +1,64 @@
+"""L2: AMIPS loss functions (paper Sec. 3.2).
+
+Targets per batch (precomputed by the Rust data pipeline, Sec. 3.3):
+  x      [B, d]      queries ~ p_X (augmented offline)
+  y_star [B, c, d]   per-cluster optimal keys
+  sigma  [B, c]      per-cluster support values <x, y*_j>
+
+SupportNet:  L = lam_score * L_score + lam_grad * L_grad + lam_icnn * pen
+KeyNet:      L = lam_key   * L_key   + lam_consist * L_consist
+
+All lambdas arrive as *runtime inputs* to the AOT train step so the loss
+ablation (paper Fig. 14) runs without re-exporting artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+def supportnet_loss(params, x, y_star, sigma, arch, lam_score, lam_grad,
+                    lam_icnn):
+    """Score regression + gradient matching + convexity penalty.
+
+    Computing L_grad needs cross-derivatives d/dtheta d/dx f — handled by
+    jax autodiff through the jacrev (paper Sec. 3.2 note).
+    """
+    scores, keys = M.supportnet_scores_and_keys(params, x, arch)
+    l_score = jnp.mean(jnp.square(scores - sigma))            # mean over B,c
+    l_grad = jnp.mean(jnp.sum(jnp.square(keys - y_star), axis=-1))
+    pen = M.icnn_penalty(params, arch)
+    total = lam_score * l_score + lam_grad * l_grad + lam_icnn * pen
+    return total, (l_score, l_grad, pen)
+
+
+def keynet_loss(params, x, y_star, sigma, arch, lam_key, lam_consist):
+    """Key regression + Euler score-consistency."""
+    scores, keys = M.keynet_scores_and_keys(params, x, arch)
+    l_key = jnp.mean(jnp.sum(jnp.square(keys - y_star), axis=-1))
+    l_consist = jnp.mean(jnp.square(scores - sigma))
+    total = lam_key * l_key + lam_consist * l_consist
+    return total, (l_key, l_consist, jnp.zeros(()))
+
+
+def loss_fn(params, x, y_star, sigma, arch, lam_a, lam_b, lam_icnn):
+    """Uniform signature used by the train step.
+
+    SupportNet: lam_a = lam_score, lam_b = lam_grad.
+    KeyNet:     lam_a = lam_consist, lam_b = lam_key.
+    (lam_b always weights the vector-matching term the paper emphasizes.)
+    """
+    if arch.model == "supportnet":
+        return supportnet_loss(params, x, y_star, sigma, arch,
+                               lam_a, lam_b, lam_icnn)
+    return keynet_loss(params, x, y_star, sigma, arch, lam_b, lam_a)
+
+
+def relative_transport_error(pred_keys, x, y_star):
+    """Eval-only metric (Eq. 4.1): E[log ||yhat-y*||^2 / ||x-y*||^2],
+    averaged over batch and clusters. pred/y* [B,c,d], x [B,d]."""
+    num = jnp.sum(jnp.square(pred_keys - y_star), axis=-1)
+    den = jnp.sum(jnp.square(x[:, None, :] - y_star), axis=-1)
+    return jnp.mean(jnp.log(jnp.maximum(num, 1e-30) /
+                            jnp.maximum(den, 1e-30)))

@@ -1,0 +1,122 @@
+"""Export manifest: every dataset and model configuration the repo builds.
+
+This is the single source of truth shared by the AOT exporter (aot.py)
+and the Rust side (artifacts/manifest.txt is generated from it). Dataset
+scales are ~50-100x reductions of the paper's BEIR corpora (DESIGN.md §3
+substitution table) sized for the single-core CPU testbed; relative
+ordering (fiqa < quora < nq < hotpot < bioasq) and the query/key
+distribution-shift structure (App. A.10) are preserved.
+"""
+
+from dataclasses import dataclass, field
+
+from . import model as M
+
+# ---------------------------------------------------------------------------
+# Datasets. `shift` controls how far the query mixture is displaced from the
+# key mixture (App. A.10: Quora aligned -> low shift; NQ/HotpotQA shifted).
+# `spread` controls per-cluster anisotropy (outlier keys, Fig. 1).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DatasetCfg:
+    name: str
+    n: int
+    d: int
+    n_queries: int          # base (pre-augmentation) train queries
+    shift: float            # query-vs-key mixture displacement
+    spread: float           # anisotropy of clusters
+    modes: int              # mixture components in the generator
+    seed: int
+
+
+DATASETS = {
+    "fiqa-s": DatasetCfg("fiqa-s", 2048, 64, 4096, 0.30, 6.0, 12, 101),
+    "quora-s": DatasetCfg("quora-s", 6144, 64, 8192, 0.08, 1.6, 16, 102),
+    "nq-s": DatasetCfg("nq-s", 16384, 64, 16384, 0.45, 7.0, 24, 103),
+    "hotpot-s": DatasetCfg("hotpot-s", 32768, 64, 16384, 0.42, 7.0, 32, 104),
+    "bioasq-s": DatasetCfg("bioasq-s", 65536, 64, 12288, 0.42, 7.0, 40, 105),
+    # d=768-analog (App. A.5): doubled embedding dim, same corpus scale.
+    "nq-s-d128": DatasetCfg("nq-s-d128", 16384, 128, 8192, 0.45, 7.0, 24, 106),
+}
+
+TRAIN_BATCH = 256
+EVAL_BATCH = 1024
+TIMING_BATCH = 4096
+AUG_SIGMA = 0.02          # training-time query augmentation (Sec. 4.1)
+VAL_QUERIES = 1000        # validation set size (Sec. 4.1)
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    name: str               # unique artifact prefix
+    dataset: str
+    model: str              # supportnet | keynet
+    size: str               # xs/s/m/l/xl/xxl (rho)
+    layers: int
+    c: int = 1
+    nx: int | None = None   # None -> inject every layer (nx = L)
+    residual: bool = False
+    timing: bool = False    # also export batch-4096 artifacts (Table 1)
+
+    def arch(self) -> M.Arch:
+        ds = DATASETS[self.dataset]
+        from .sizing import RHO
+        return M.make_arch(self.model, ds.d, ds.n, RHO[self.size],
+                           self.layers, nx=self.nx, residual=self.residual,
+                           c=self.c)
+
+
+def _cfg(dataset, model, size, layers=4, **kw):
+    tag = kw.pop("tag", None)
+    c = kw.get("c", 1)
+    name = f"{dataset}.{model}.{size}.l{layers}.c{c}"
+    if tag:
+        name += f".{tag}"
+    return ModelCfg(name=name, dataset=dataset, model=model, size=size,
+                    layers=layers, **kw)
+
+
+def build_manifest():
+    cfgs = []
+    # --- Fig 3: c=10 routing on quora-s & nq-s, both models, xs/s/m ------
+    for ds in ("quora-s", "nq-s"):
+        for mdl in ("supportnet", "keynet"):
+            for size in ("xs", "s", "m"):
+                cfgs.append(_cfg(ds, mdl, size, layers=4, c=10))
+            # sparse re-injection variant (black-outlined markers, nx~L/4)
+            cfgs.append(_cfg(ds, mdl, "s", layers=4, c=10, nx=1, tag="nx1"))
+    # --- Fig 4: c=128 routing, XS SupportNet, L=8 ------------------------
+    cfgs.append(_cfg("nq-s", "supportnet", "xs", layers=8, c=128, nx=2))
+    # --- Fig 5 / 16-27 / Table 1: c=1 KeyNet for index integration -------
+    for ds in ("quora-s", "nq-s", "hotpot-s"):
+        for size in ("xs", "s", "m", "l"):
+            cfgs.append(_cfg(ds, "keynet", size, layers=4,
+                             timing=size in ("s", "m", "l")))
+    # --- Table 1 + Fig 14: c=1 SupportNet --------------------------------
+    for ds in ("quora-s", "nq-s", "hotpot-s"):
+        for size in ("s", "m", "l"):
+            cfgs.append(_cfg(ds, "supportnet", size, layers=4, timing=True))
+    # --- Fig 10: fiqa-s sweep over sizes x depths, both models -----------
+    for mdl in ("supportnet", "keynet"):
+        for size in ("xs", "s", "m"):
+            for layers in (2, 4):
+                cfgs.append(_cfg("fiqa-s", mdl, size, layers=layers))
+    # --- Fig 28: bioasq-s scale study -------------------------------------
+    for size in ("xs", "s"):
+        cfgs.append(_cfg("bioasq-s", "keynet", size, layers=4))
+    # --- App A.5: higher-dim encoder analog -------------------------------
+    for size in ("xs", "s"):
+        cfgs.append(_cfg("nq-s-d128", "keynet", size, layers=4))
+    # --- Residual-block ablation (Sec. 3.1) --------------------------------
+    cfgs.append(_cfg("quora-s", "keynet", "s", layers=4, residual=True,
+                     tag="res"))
+    cfgs.append(_cfg("quora-s", "supportnet", "s", layers=4, residual=True,
+                     tag="res"))
+    names = [c.name for c in cfgs]
+    assert len(names) == len(set(names)), "duplicate config names"
+    return cfgs
+
+
+MANIFEST = build_manifest()

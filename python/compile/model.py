@@ -1,0 +1,213 @@
+"""L2: SupportNet / KeyNet model definitions (paper Sec. 3.1).
+
+Both models share one rectangular skeleton:
+
+    z_1     = sigma(Wx0 x + b0)
+    z_{i+1} = sigma(Wz_i z_i [+ Wx_i x] + b_i)      (+ z_i if residual)
+    out     = W_L z_L + b_L
+
+* SupportNet: out in R^c, convexity encouraged by a non-negativity
+  *regularizer* on the Wz_i ("loosely constrained" ICNN, Sec. 2) plus a
+  non-negative init; always wrapped by the homogenization wrapper
+  H[g](x) = ||x|| g(x / ||x||)  (Eq. 3.4).
+* KeyNet: out in R^{c*d}, unconstrained.
+
+Parameters are carried as an explicit ordered list of arrays so the AOT
+boundary (Rust side) has a deterministic flattening; `param_specs`
+publishes (name, shape) in that exact order into the artifact metadata.
+
+The hidden layers call the L1 Pallas kernel (kernels.icnn_layer) when
+`use_pallas=True` — that is the path exported into the inference HLOs, so
+the kernel lowers into the artifact. Training/grad graphs use the
+numerically identical pure-jnp path (autodiff through interpret-mode
+pallas_call is not supported); equality of the two paths is asserted in
+python/tests.
+"""
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+from . import sizing
+from .kernels import icnn_layer as pallas_layer
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class Arch:
+    """Static architecture description (goes into artifact metadata)."""
+    model: str              # "supportnet" | "keynet"
+    d: int                  # embedding dim
+    c: int = 1              # number of clusters (output heads)
+    h: int = 64             # hidden width
+    layers: int = 4         # L: number of hidden layers (incl. first)
+    nx: int = 4             # input re-injections after first layer
+    residual: bool = False
+    homogenize: bool = True   # SupportNet only (forced off for KeyNet)
+    alpha: float = 0.1
+    beta: float = 20.0
+
+    @property
+    def d_out(self) -> int:
+        return self.c if self.model == "supportnet" else self.c * self.d
+
+    @property
+    def inject(self):
+        return sizing.inject_layers(self.layers, self.nx)
+
+    @property
+    def n_params(self) -> int:
+        return sizing.param_count(self.d, self.h, self.layers, self.nx,
+                                  self.d_out)
+
+
+def make_arch(model, d, n, rho, layers, nx=None, residual=False, c=1,
+              homogenize=None):
+    """Build an Arch from the paper's knobs: budget fraction rho of n*d."""
+    if nx is None:
+        nx = layers                      # paper default: inject every layer
+    P = rho * n * d
+    h = sizing.width_for_budget(P, layers, d, nx)
+    if homogenize is None:
+        homogenize = model == "supportnet"
+    if model == "keynet":
+        homogenize = False
+    return Arch(model=model, d=d, c=c, h=h, layers=layers, nx=nx,
+                residual=residual, homogenize=homogenize)
+
+
+def param_specs(arch: Arch):
+    """Ordered (name, shape) list — the AOT parameter ABI."""
+    d, h, L = arch.d, arch.h, arch.layers
+    specs = [("wx0", (d, h)), ("b0", (h,))]
+    inj = set(arch.inject)
+    for i in range(1, L):
+        specs.append((f"wz{i}", (h, h)))
+        if i in inj:
+            specs.append((f"wx{i}", (d, h)))
+        specs.append((f"b{i}", (h,)))
+    specs.append(("wout", (h, arch.d_out)))
+    specs.append(("bout", (arch.d_out,)))
+    return specs
+
+
+def wz_param_indices(arch: Arch):
+    """Indices into the param list of the Wz matrices (ICNN penalty targets).
+
+    The output head is included for SupportNet: convexity of W_L z_L + b_L
+    in z_L also needs W_L >= 0.
+    """
+    idx = [i for i, (name, _) in enumerate(param_specs(arch))
+           if name.startswith("wz")]
+    if arch.model == "supportnet":
+        idx.append(next(i for i, (n, _) in enumerate(param_specs(arch))
+                        if n == "wout"))
+    return idx
+
+
+def init_params(arch: Arch, key):
+    """Non-negative principled init for Wz (after Hoedt & Klambauer 2023:
+    half-normal scaled to preserve forward variance given E[w]>0),
+    LeCun-normal for passthroughs and head."""
+    specs = param_specs(arch)
+    wz_set = set(wz_param_indices(arch))
+    params = []
+    keys = jax.random.split(key, len(specs))
+    for i, ((name, shape), k) in enumerate(zip(specs, keys)):
+        if len(shape) == 1:
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif i in wz_set and arch.model == "supportnet":
+            fan_in = shape[0]
+            # Half-normal with Var|N| = (1 - 2/pi); scale to unit fan-in
+            # variance contribution, shrunk to temper the positive mean.
+            std = (2.0 / fan_in) ** 0.5
+            w = jnp.abs(jax.random.normal(k, shape, jnp.float32)) * std * 0.5
+            params.append(w)
+        else:
+            fan_in = shape[0]
+            std = (1.0 / fan_in) ** 0.5
+            params.append(jax.random.normal(k, shape, jnp.float32) * std)
+    return params
+
+
+def _unpack(params, arch: Arch):
+    """params list -> dict keyed by spec name."""
+    return {name: p for (name, _), p in zip(param_specs(arch), params)}
+
+
+def _backbone(params, x, arch: Arch, use_pallas: bool):
+    """Shared trunk: x [B,d] -> z_L [B,h]."""
+    P = _unpack(params, arch)
+    act = lambda t: ref.soft_leaky_relu(t, arch.alpha, arch.beta)
+    z = act(x @ P["wx0"] + P["b0"])
+    inj = set(arch.inject)
+    for i in range(1, arch.layers):
+        wz, b = P[f"wz{i}"], P[f"b{i}"]
+        if i in inj:
+            wx = P[f"wx{i}"]
+            if use_pallas:
+                z = pallas_layer.icnn_layer(z, x, wz, wx, b,
+                                            alpha=arch.alpha, beta=arch.beta,
+                                            residual=arch.residual)
+            else:
+                z = ref.icnn_layer(z, x, wz, wx, b, arch.alpha, arch.beta,
+                                   arch.residual)
+        else:
+            pre = z @ wz + b
+            a = act(pre)
+            z = z + a if arch.residual else a
+    return z
+
+
+def _raw_forward(params, x, arch: Arch, use_pallas: bool):
+    """Trunk + head, no homogenization: [B,d] -> [B,d_out]."""
+    P = _unpack(params, arch)
+    z = _backbone(params, x, arch, use_pallas)
+    return z @ P["wout"] + P["bout"]
+
+
+def forward(params, x, arch: Arch, use_pallas: bool = False):
+    """Model output.
+
+    SupportNet -> scores [B, c] (homogenized when arch.homogenize).
+    KeyNet     -> keys   [B, c, d].
+    """
+    if arch.model == "supportnet":
+        if arch.homogenize:
+            nrm = jnp.linalg.norm(x, axis=-1, keepdims=True)
+            nrm = jnp.maximum(nrm, 1e-12)
+            g = _raw_forward(params, x / nrm, arch, use_pallas)
+            return nrm * g
+        return _raw_forward(params, x, arch, use_pallas)
+    out = _raw_forward(params, x, arch, use_pallas)
+    return out.reshape(x.shape[0], arch.c, arch.d)
+
+
+def supportnet_scores_and_keys(params, x, arch: Arch):
+    """SupportNet inference: scores [B,c] and keys [B,c,d] = d f / d x.
+
+    The per-cluster key is the input-gradient of that cluster's output
+    (rows of the Jacobian, paper Sec. 3.1). Pure-jnp path: the c backward
+    passes must be differentiable, so no pallas here.
+    """
+    def per_example(xi):
+        f = lambda v: forward(params, v[None, :], arch)[0]   # [c]
+        scores = f(xi)
+        jac = jax.jacrev(f)(xi)                              # [c, d]
+        return scores, jac
+    return jax.vmap(per_example)(x)
+
+
+def keynet_scores_and_keys(params, x, arch: Arch, use_pallas: bool = False):
+    """KeyNet inference: keys [B,c,d] and scores <F_j(x), x> [B,c]."""
+    keys = forward(params, x, arch, use_pallas)
+    scores = jnp.einsum("bcd,bd->bc", keys, x)
+    return scores, keys
+
+
+def icnn_penalty(params, arch: Arch):
+    """sum_i || ReLU(-Wz_i) ||^2 — the loose convexity regularizer."""
+    idx = wz_param_indices(arch)
+    return sum(jnp.sum(jnp.square(jnp.maximum(-params[i], 0.0)))
+               for i in idx)

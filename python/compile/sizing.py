@@ -1,0 +1,73 @@
+"""Network sizing rule (paper Eq. 3.2/3.3) and parameter accounting.
+
+Given a parameter budget P = rho * n * d (a fraction rho of the database
+size), depth L, input dim d and the number of input re-injections n_x,
+the hidden width solves
+
+    (L-1) h^2 + (1+n_x) d h ~= P
+    h ~= (sqrt(D^2 + 4 (L-1) P) - D) / (2 (L-1)),   D = (1+n_x) d.
+
+The same module provides exact parameter counts and a FLOPs model that
+the Rust side mirrors (rust/src/metrics/flops.rs) for all Pareto plots.
+"""
+
+import math
+
+# Paper size names -> parameter fraction rho (Sec. 4.1).
+RHO = {"xs": 0.01, "s": 0.05, "m": 0.10, "l": 0.20, "xl": 0.40, "xxl": 0.50}
+
+
+def inject_layers(L: int, nx: int):
+    """Indices (1..L-1) of hidden layers that receive the x passthrough.
+
+    nx counts re-injections after the first layer. nx >= L-1 means every
+    hidden layer (the paper's n_x = L marker); nx = 0 means a plain MLP.
+    Chosen evenly spaced, matching the paper's "every 4 layers" setting
+    when nx ~= L/4.
+    """
+    if L <= 1 or nx <= 0:
+        return []
+    nx = min(nx, L - 1)
+    step = (L - 1) / nx
+    layers = sorted({min(L - 1, max(1, round((i + 1) * step))) for i in range(nx)})
+    return layers
+
+
+def width_for_budget(P: float, L: int, d: int, nx: int) -> int:
+    """Eq. 3.3, rounded to a multiple of 8 (>= 8) for tiling friendliness."""
+    D = (1 + min(nx, max(L - 1, 0))) * d
+    if L <= 1:
+        h = P / max(D, 1)
+    else:
+        h = (math.sqrt(D * D + 4 * (L - 1) * P) - D) / (2 * (L - 1))
+    return max(8, int(round(h / 8)) * 8)
+
+
+def param_count(d: int, h: int, L: int, nx: int, d_out: int) -> int:
+    """Exact parameter count for the rectangular architecture."""
+    inj = inject_layers(L, nx)
+    n = d * h + h                      # wx0, b0
+    n += (L - 1) * (h * h + h)         # wz_i, b_i
+    n += len(inj) * d * h              # wx_i at injected layers
+    n += h * d_out + d_out             # output head
+    return n
+
+
+def forward_flops(d: int, h: int, L: int, nx: int, d_out: int,
+                  homogenize: bool = False) -> int:
+    """FLOPs for one query forward pass (multiply+add = 2 flops)."""
+    inj = inject_layers(L, nx)
+    f = 2 * d * h                      # input layer
+    f += (L - 1) * 2 * h * h           # hidden z-paths
+    f += len(inj) * 2 * d * h          # re-injections
+    f += 2 * h * d_out                 # head
+    f += 8 * (h * L + d_out)           # activation epilogues (approx)
+    if homogenize:
+        f += 6 * d                     # normalize + rescale
+    return f
+
+
+def grad_flops(d, h, L, nx, d_out, homogenize=False):
+    """Backward pass ~2x forward (paper Sec 4.4: 1~2x); per-output-row
+    Jacobians for c outputs multiply by c at the caller."""
+    return 2 * forward_flops(d, h, L, nx, d_out, homogenize)

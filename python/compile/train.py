@@ -1,0 +1,113 @@
+"""L2: one fused Adam train step, AOT-compiled and driven from Rust.
+
+State ABI (flat tensor list, in this exact order — mirrored by
+rust/src/model/params.rs):
+
+    params[0..P) , m[0..P) , v[0..P) , ema[0..P) , step (f32 scalar)
+
+Step inputs after the state: x [B,d], y_star [B,c,d], sigma [B,c], and a
+single hparams vector f32[8]:
+
+    [0] lam_a      (SupportNet: lam_score;  KeyNet: lam_consist)
+    [1] lam_b      (SupportNet: lam_grad;   KeyNet: lam_key)
+    [2] lam_icnn   convexity penalty weight (SupportNet only)
+    [3] peak_lr
+    [4] total_steps
+    [5] warmup_frac (of total_steps)
+    [6] ema_decay
+    [7] weight_decay (AdamW-style, usually 0)
+
+Outputs: new state (same order/shapes) followed by metrics f32[4]:
+    [loss_total, loss_a, loss_b, penalty].
+
+Keeping LR schedule, EMA and the optimizer *inside* the HLO means Rust
+only shuttles batches; state tensors round-trip as device buffers
+(execute_b) and never touch the host during training.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import losses
+from . import model as M
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def lr_schedule(step, total, warmup_frac, peak):
+    """Cosine decay with linear warmup (paper Sec. 4.1)."""
+    warm = jnp.maximum(total * warmup_frac, 1.0)
+    warm_lr = peak * (step + 1.0) / warm
+    prog = jnp.clip((step - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+    cos_lr = 0.5 * peak * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warm, warm_lr, cos_lr)
+
+
+def init_state(arch: M.Arch, seed):
+    """seed (uint32 scalar) -> state list. Exported as the .init HLO."""
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(arch, key)
+    zeros = [jnp.zeros_like(p) for p in params]
+    ema = [p for p in params]
+    return params + zeros + [jnp.zeros_like(p) for p in params] + ema + \
+        [jnp.zeros((), jnp.float32)]
+
+
+def split_state(state, arch: M.Arch):
+    P = len(M.param_specs(arch))
+    return (state[0:P], state[P:2 * P], state[2 * P:3 * P],
+            state[3 * P:4 * P], state[4 * P])
+
+
+def train_step(state, x, y_star, sigma, hparams, arch: M.Arch):
+    """One fused Adam + EMA step. Returns (new_state, metrics[4])."""
+    params, m, v, ema, step = split_state(state, arch)
+    lam_a, lam_b, lam_icnn = hparams[0], hparams[1], hparams[2]
+    peak, total, warm, decay, wd = (hparams[3], hparams[4], hparams[5],
+                                    hparams[6], hparams[7])
+
+    def scalar_loss(ps):
+        total_l, parts = losses.loss_fn(ps, x, y_star, sigma, arch,
+                                        lam_a, lam_b, lam_icnn)
+        return total_l, parts
+
+    (loss, parts), grads = jax.value_and_grad(scalar_loss, has_aux=True)(params)
+
+    lr = lr_schedule(step, total, warm, peak)
+    t = step + 1.0
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+
+    new_params, new_m, new_v, new_ema = [], [], [], []
+    for p, g, mi, vi, ei in zip(params, grads, m, v, ema):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * jnp.square(g)
+        update = (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        p = p - lr * (update + wd * p)
+        ei = decay * ei + (1.0 - decay) * p
+        new_params.append(p)
+        new_m.append(mi)
+        new_v.append(vi)
+        new_ema.append(ei)
+
+    new_state = new_params + new_m + new_v + new_ema + [step + 1.0]
+    metrics = jnp.stack([loss, parts[0], parts[1], parts[2]])
+    return new_state, metrics
+
+
+def eval_step(params, x, y_star, sigma, arch: M.Arch):
+    """Validation metrics on one batch, AOT-exported as .eval HLO.
+
+    Returns f32[4]: [E_rel, mse_key, mse_score, mean_pred_score].
+    Uses EMA params (caller passes them).
+    """
+    if arch.model == "supportnet":
+        scores, keys = M.supportnet_scores_and_keys(params, x, arch)
+    else:
+        scores, keys = M.keynet_scores_and_keys(params, x, arch)
+    e_rel = losses.relative_transport_error(keys, x, y_star)
+    mse_key = jnp.mean(jnp.sum(jnp.square(keys - y_star), axis=-1))
+    mse_score = jnp.mean(jnp.square(scores - sigma))
+    return jnp.stack([e_rel, mse_key, mse_score, jnp.mean(scores)])

@@ -1,0 +1,78 @@
+"""AOT export consistency: meta sidecars must match the in-code ABI."""
+
+import os
+
+import pytest
+
+from compile import aot, manifest as MF, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.txt")),
+    reason="run `make artifacts` first")
+
+
+def parse_meta(path):
+    meta, params = {}, []
+    with open(path) as f:
+        for line in f:
+            key, _, val = line.strip().partition(" ")
+            if key == "param":
+                name, shape = val.split(" ")
+                dims = () if shape == "-" else tuple(
+                    int(t) for t in shape.split(","))
+                params.append((name, dims))
+            else:
+                meta[key] = val
+    return meta, params
+
+
+def test_manifest_unique_and_wellformed():
+    names = [c.name for c in MF.MANIFEST]
+    assert len(names) == len(set(names))
+    for cfg in MF.MANIFEST:
+        arch = cfg.arch()
+        assert arch.h >= 8 and arch.h % 8 == 0
+        assert arch.d_out >= 1
+        assert cfg.dataset in MF.DATASETS
+
+
+@needs_artifacts
+def test_meta_matches_abi():
+    checked = 0
+    for cfg in MF.MANIFEST:
+        path = os.path.join(ART, f"{cfg.name}.meta.txt")
+        if not os.path.exists(path):
+            continue
+        meta, params = parse_meta(path)
+        arch = cfg.arch()
+        assert int(meta["h"]) == arch.h
+        assert int(meta["c"]) == arch.c
+        assert int(meta["n_param_tensors"]) == len(M.param_specs(arch))
+        assert params == [(n, s) for n, s in M.param_specs(arch)]
+        # state = 4x params + step scalar
+        assert int(meta["n_state_tensors"]) == 4 * len(params) + 1
+        checked += 1
+    assert checked >= 1
+
+
+@needs_artifacts
+def test_expected_files_exist():
+    for cfg in MF.MANIFEST[:8]:
+        for part in ("init", "train", "fwd", "eval"):
+            p = os.path.join(ART, f"{cfg.name}.{part}.hlo.txt")
+            assert os.path.exists(p), p
+        if cfg.model == "supportnet":
+            assert os.path.exists(
+                os.path.join(ART, f"{cfg.name}.grad.hlo.txt"))
+
+
+@needs_artifacts
+def test_hlo_is_text_not_proto():
+    """The interchange gotcha: artifacts must be HLO text (parseable,
+    id-reassignable), never serialized protos."""
+    cfg = MF.MANIFEST[0]
+    p = os.path.join(ART, f"{cfg.name}.fwd.hlo.txt")
+    head = open(p, "rb").read(200)
+    assert head.startswith(b"HloModule"), head[:40]

@@ -1,0 +1,139 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and block sizes; allclose against ref is the
+core correctness signal for everything the AOT path lowers.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import icnn_layer as K
+from compile.kernels import mips_topk as T
+from compile.kernels import ref
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# soft leaky relu
+# ---------------------------------------------------------------------------
+
+def test_soft_leaky_relu_limits():
+    x = jnp.linspace(-6, 6, 101)
+    y = ref.soft_leaky_relu(x, alpha=0.1, beta=200.0)
+    leaky = jnp.where(x > 0, x, 0.1 * x)
+    np.testing.assert_allclose(y, leaky, atol=2e-2)
+
+
+def test_soft_leaky_relu_monotone_convex():
+    x = jnp.linspace(-10, 10, 401)
+    y = np.asarray(ref.soft_leaky_relu(x))
+    dy = np.diff(y)
+    assert (dy > 0).all(), "activation must be strictly increasing"
+    # convex up to f32 rounding noise on the finite-difference stencil
+    assert (np.diff(dy) >= -1e-5).all(), "activation must be convex"
+
+
+def test_soft_leaky_relu_no_overflow():
+    x = jnp.asarray([-1e4, -50.0, 0.0, 50.0, 1e4], jnp.float32)
+    y = np.asarray(ref.soft_leaky_relu(x))
+    assert np.isfinite(y).all()
+
+
+# ---------------------------------------------------------------------------
+# fused ICNN layer kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 8, 64, 130]),
+    d=st.sampled_from([8, 48, 64]),
+    h=st.sampled_from([8, 96, 128]),
+    residual=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_icnn_layer_matches_ref(b, d, h, residual, seed):
+    rng = np.random.default_rng(seed)
+    z, x = _rand(rng, b, h), _rand(rng, b, d)
+    wz, wx, bias = _rand(rng, h, h), _rand(rng, d, h), _rand(rng, h)
+    got = K.icnn_layer(z, x, wz, wx, bias, residual=residual)
+    want = ref.icnn_layer(z, x, wz, wx, bias, residual=residual)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("bm,bn", [(32, 32), (64, 128), (128, 64)])
+def test_icnn_layer_tile_invariance(bm, bn):
+    """Output must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(7)
+    b, d, h = 128, 64, 128
+    z, x = _rand(rng, b, h), _rand(rng, b, d)
+    wz, wx, bias = _rand(rng, h, h), _rand(rng, d, h), _rand(rng, h)
+    base = K.icnn_layer(z, x, wz, wx, bias)
+    tiled = K.icnn_layer(z, x, wz, wx, bias, bm=bm, bn=bn)
+    np.testing.assert_allclose(base, tiled, rtol=RTOL, atol=ATOL)
+
+
+def test_icnn_layer_alpha_beta_passthrough():
+    rng = np.random.default_rng(3)
+    b, d, h = 16, 8, 16
+    z, x = _rand(rng, b, h), _rand(rng, b, d)
+    wz, wx, bias = _rand(rng, h, h), _rand(rng, d, h), _rand(rng, h)
+    got = K.icnn_layer(z, x, wz, wx, bias, alpha=0.2, beta=5.0)
+    want = ref.icnn_layer(z, x, wz, wx, bias, alpha=0.2, beta=5.0)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_vmem_budget_default_tiles():
+    """Structural perf check: default tiles fit the TPU VMEM budget with
+    headroom for double-buffering (DESIGN.md §6)."""
+    # Largest exported config scale: h<=512, d<=128, B=4096.
+    assert K.vmem_bytes(4096, 128, 512) < 8 * 2**20
+    util = K.mxu_utilization_estimate(4096, 128, 512)
+    assert util > 0.5
+
+
+# ---------------------------------------------------------------------------
+# blocked MIPS top-1 kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 7, 32]),
+    n=st.sampled_from([16, 100, 1024]),
+    d=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mips_top1_matches_ref(b, n, d, seed):
+    rng = np.random.default_rng(seed)
+    q, keys = _rand(rng, b, d), _rand(rng, n, d)
+    v, i = T.mips_top1(q, keys)
+    rv, ri = ref.mips_top1(q, keys)
+    np.testing.assert_allclose(v, rv, rtol=RTOL, atol=ATOL)
+    # When scores tie, either index is a valid argmax: compare values.
+    scored = jnp.take_along_axis(q @ keys.T, i[:, None], axis=1)[:, 0]
+    np.testing.assert_allclose(scored, rv, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("bq,bk", [(8, 64), (16, 128), (32, 512)])
+def test_mips_top1_block_invariance(bq, bk):
+    rng = np.random.default_rng(11)
+    q, keys = _rand(rng, 32, 32), _rand(rng, 1024, 32)
+    v0, i0 = T.mips_top1(q, keys)
+    v1, i1 = T.mips_top1(q, keys, bq=bq, bk=bk)
+    np.testing.assert_allclose(v0, v1, rtol=RTOL, atOL=ATOL) if False else \
+        np.testing.assert_allclose(v0, v1, rtol=RTOL, atol=ATOL)
+    assert (np.asarray(i0) == np.asarray(i1)).all()
+
+
+def test_mips_top1_known_answer():
+    keys = jnp.eye(4, dtype=jnp.float32) * jnp.asarray([1., 2., 3., 4.])
+    q = jnp.asarray([[0., 0., 1., 0.], [1., 0., 0., 0.]], jnp.float32)
+    v, i = T.mips_top1(q, keys)
+    assert list(np.asarray(i)) == [2, 0]
+    np.testing.assert_allclose(v, [3.0, 1.0], rtol=RTOL)

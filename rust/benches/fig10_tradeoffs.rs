@@ -1,0 +1,56 @@
+//! Fig. 10: E_rel vs MRR at end of training on fiqa-s, across model
+//! families, sizes and depths (lower-right = best).
+
+use amips::bench_support::fixtures;
+use amips::bench_support::report::{f, Report};
+use amips::metrics::{retrieval, transport};
+use amips::runtime::Engine;
+use amips::tensor::Tensor;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let manifest = fixtures::load_manifest()?;
+    let engine = Engine::new(manifest.dir.clone())?;
+    let quick = std::env::var("AMIPS_BENCH_QUICK").is_ok();
+    let ds = fixtures::prepare_dataset(&manifest, "fiqa-s", 1)?;
+    let truth: Vec<usize> = (0..ds.val.gt.n_queries())
+        .map(|q| ds.val.gt.global_top1(q).0)
+        .collect();
+    let tgt: Tensor = ds.keys.gather_rows(&truth);
+
+    let mut rep = Report::new("Fig 10: E_rel vs MRR on fiqa-s (end of training)");
+    rep.header(&["model", "size", "L", "E_rel", "MRR", "match"]);
+    let sizes: &[&str] = if quick { &["s"] } else { &["xs", "s", "m"] };
+    let depths: &[usize] = if quick { &[4] } else { &[2, 4] };
+    for mdl in ["supportnet", "keynet"] {
+        for size in sizes {
+            for &layers in depths {
+                let config = format!("fiqa-s.{mdl}.{size}.l{layers}.c1");
+                let model =
+                    match fixtures::trained_model(&engine, &manifest, &config, &ds, None) {
+                        Ok(m) => m,
+                        Err(e) => {
+                            eprintln!("skip {config}: {e}");
+                            continue;
+                        }
+                    };
+                let (_s, keys) = model.scores_and_keys(&ds.val.x)?;
+                let n = ds.val.x.rows();
+                let pred = keys.reshape(&[n, ds.d()]);
+                let rm = retrieval::evaluate(&pred, &ds.keys, &truth);
+                let e_rel = transport::relative_transport_error(&pred, &ds.val.x, &tgt);
+                rep.row(&[
+                    mdl.to_string(),
+                    size.to_string(),
+                    layers.to_string(),
+                    f(e_rel),
+                    f(rm.mrr),
+                    f(rm.match_rate),
+                ]);
+            }
+        }
+    }
+    rep.note("paper shape: size is the main driver (improves both metrics); shallower >= deeper at small scale");
+    rep.emit("fig10_tradeoffs");
+    Ok(())
+}

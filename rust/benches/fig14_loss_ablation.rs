@@ -1,0 +1,60 @@
+//! Fig. 14 (App. A.6): loss-weight ablation on nq-s — grads-only,
+//! scores-only, and the combined default, at two peak LRs, for both
+//! model families. Because the lambdas are *runtime inputs* to the AOT
+//! train step, no artifact is re-exported.
+//!
+//! Reported per run: final gradient/key error vs score error — the two
+//! axes of the paper's scatter.
+
+use amips::bench_support::fixtures;
+use amips::bench_support::report::Report;
+use amips::runtime::Engine;
+use amips::trainer::{self, TrainOpts};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let manifest = fixtures::load_manifest()?;
+    let engine = Engine::new(manifest.dir.clone())?;
+    let quick = std::env::var("AMIPS_BENCH_QUICK").is_ok();
+    let ds = fixtures::prepare_dataset(&manifest, "nq-s", 1)?;
+    let steps = if quick { 500 } else { 2000 };
+
+    // (label, lam_a = score/consist weight, lam_b = grad/key weight)
+    let configs_loss: &[(&str, f32, f32)] = &[
+        ("grads-only", 0.0, 1.0),
+        ("scores-only", 0.01, 0.0),
+        ("combined", 0.01, 1.0),
+    ];
+    let lrs: &[f32] = if quick { &[1e-2] } else { &[3e-3, 1e-2] };
+
+    let mut rep = Report::new("Fig 14: loss-weight ablation on nq-s (final val errors)");
+    rep.header(&["model", "loss config", "peak lr", "key/grad mse", "score mse"]);
+    for mdl in ["supportnet", "keynet"] {
+        let config = format!("nq-s.{mdl}.s.l4.c1");
+        let meta = manifest.meta(&config)?;
+        for (label, la, lb) in configs_loss {
+            for &lr in lrs {
+                let opts = TrainOpts {
+                    steps,
+                    peak_lr: lr,
+                    lam_a: *la,
+                    lam_b: *lb,
+                    eval_every: 0, // only final eval
+                    ..Default::default()
+                };
+                let out = trainer::train(&engine, &meta, &ds, &opts)?;
+                let last = out.curve.eval.last().unwrap();
+                rep.row(&[
+                    mdl.to_string(),
+                    label.to_string(),
+                    format!("{lr:.0e}"),
+                    format!("{:.4}", last.mse_key),
+                    format!("{:.4}", last.mse_score),
+                ]);
+            }
+        }
+    }
+    rep.note("paper shape: single-objective runs land in opposite corners; combined sits near grads-only on key error while reducing score error");
+    rep.emit("fig14_loss_ablation");
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Figs. 16-27 (App. A.8): the backend × dataset × recall grid. One
+//! parameterized harness replaces the paper's twelve panels: every
+//! backbone (ivf / scann / soar / leanvec) × dataset × Recall@{1%,2.5%,5%}
+//! × cost axes, original vs XS/S-mapped queries.
+//!
+//! ```bash
+//! cargo bench --bench fig16_backends -- --backend scann --dataset nq-s
+//! ```
+//! Without flags it sweeps a representative subset; AMIPS_BENCH_QUICK=1
+//! shrinks it further.
+
+use amips::bench_support::fixtures;
+use amips::bench_support::report::{pct, Report};
+use amips::cli::Args;
+use amips::coordinator::pipeline::{recall_against_truth, MappedSearchPipeline};
+use amips::index::{
+    ivf::IvfIndex, leanvec::LeanVecIndex, scann::ScannIndex, soar::SoarIndex, traits::VectorIndex,
+};
+use amips::runtime::Engine;
+use anyhow::Result;
+
+fn build_backend(name: &str, ds: &amips::data::Dataset, nlist: usize) -> Box<dyn VectorIndex> {
+    match name {
+        "ivf" => Box::new(IvfIndex::build(&ds.keys, nlist, 15, 42)),
+        "scann" => Box::new(ScannIndex::build(&ds.keys, nlist, 8, 4.0, 42)),
+        "soar" => Box::new(SoarIndex::build(&ds.keys, nlist, 6, 42)),
+        "leanvec" => Box::new(LeanVecIndex::build(
+            &ds.keys,
+            (ds.d() / 2).max(8),
+            nlist,
+            Some(&ds.train.x),
+            42,
+        )),
+        other => panic!("unknown backend {other}"),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))?;
+    let backend_filter = args.get("backend").map(str::to_string);
+    let dataset_filter = args.get("dataset").map(str::to_string);
+    args.reject_unknown()?;
+    let quick = std::env::var("AMIPS_BENCH_QUICK").is_ok();
+
+    let manifest = fixtures::load_manifest()?;
+    let engine = Engine::new(manifest.dir.clone())?;
+
+    let backends: Vec<&str> = match &backend_filter {
+        Some(b) => vec![b.as_str()],
+        None if quick => vec!["ivf", "scann"],
+        None => vec!["ivf", "scann", "soar", "leanvec"],
+    };
+    let datasets: Vec<&str> = match &dataset_filter {
+        Some(d) => vec![d.as_str()],
+        None if quick => vec!["quora-s"],
+        None => vec!["quora-s", "nq-s", "hotpot-s"],
+    };
+    let fracs = [0.01f64, 0.025, 0.05];
+
+    for dataset in datasets {
+        let ds = fixtures::prepare_dataset(&manifest, dataset, 1)?;
+        let nlist = fixtures::default_nlist(ds.n_keys());
+        let truth: Vec<usize> = (0..ds.val.gt.n_queries())
+            .map(|q| ds.val.gt.global_top1(q).0)
+            .collect();
+        let sizes: &[&str] = if quick { &["xs"] } else { &["xs", "s"] };
+        let models: Vec<_> = sizes
+            .iter()
+            .filter_map(|size| {
+                let config = format!("{dataset}.keynet.{size}.l4.c1");
+                fixtures::trained_model(&engine, &manifest, &config, &ds, None)
+                    .map(|m| (size.to_string(), m))
+                    .map_err(|e| eprintln!("skip {config}: {e}"))
+                    .ok()
+            })
+            .collect();
+
+        for backend in &backends {
+            let index = build_backend(backend, &ds, nlist);
+            let mut rep = Report::new(&format!(
+                "Fig 16-27 grid: {backend} on {dataset} (nlist={nlist})"
+            ));
+            rep.header(&["variant", "nprobe", "R@1%", "R@2.5%", "R@5%", "MFLOP/q", "ms/q"]);
+            let nq = ds.val.x.rows() as f64;
+            let kmax = ((ds.n_keys() as f64 * 0.05).ceil()) as usize;
+            for nprobe in [1usize, 2, 4, 8, 16] {
+                let mut run_variant =
+                    |label: String, pipe: MappedSearchPipeline| -> Result<()> {
+                        let out = pipe.run(&ds.val.x, kmax, nprobe)?;
+                        let recalls: Vec<String> = fracs
+                            .iter()
+                            .map(|fr| {
+                                let k = ((ds.n_keys() as f64 * fr).ceil() as usize).max(1);
+                                pct(recall_against_truth(&out.results, &truth, k))
+                            })
+                            .collect();
+                        rep.row(&[
+                            label,
+                            nprobe.to_string(),
+                            recalls[0].clone(),
+                            recalls[1].clone(),
+                            recalls[2].clone(),
+                            format!(
+                                "{:.3}",
+                                (out.results[0].cost.flops + out.map_flops_per_query) as f64
+                                    / 1e6
+                            ),
+                            format!(
+                                "{:.3}",
+                                ((out.map_seconds + out.search_seconds) / nq) * 1e3
+                            ),
+                        ]);
+                        Ok(())
+                    };
+                run_variant("orig".into(), MappedSearchPipeline::original(index.as_ref()))?;
+                for (size, model) in &models {
+                    run_variant(
+                        format!("keynet-{size}"),
+                        MappedSearchPipeline::mapped(index.as_ref(), model),
+                    )?;
+                }
+            }
+            rep.note("paper shape: ordering of orig vs mapped stable across backends; SOAR narrows the regime; gains largest on shifted datasets");
+            rep.emit("fig16_backends");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Figs. 29-30 (App. A.10): distribution diagnostics — 2D PCA occupancy
+//! grids of keys vs queries (query-side modes with no key density) and
+//! top-1 MIPS score histograms with mean/median, across the three main
+//! corpora.
+
+use amips::bench_support::fixtures;
+use amips::bench_support::report::{f, pct, Report};
+use amips::data::SynthCorpus;
+use amips::metrics::histogram::{Grid2d, Histogram};
+use amips::tensor::{pca_project, power_iteration_pca};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let manifest = fixtures::load_manifest()?;
+    let mut rep = Report::new("Fig 29/30: query-vs-key distribution diagnostics");
+    rep.header(&[
+        "dataset",
+        "top1 mean",
+        "top1 median",
+        "query mass w/o key density",
+    ]);
+    for dataset in ["quora-s", "nq-s", "hotpot-s"] {
+        let spec = manifest.dataset(dataset)?.to_corpus_spec();
+        let corpus = SynthCorpus::generate(&spec);
+
+        // Fig 29: project into the leading 2 PCs of the KEYS.
+        let (comps, mean) = power_iteration_pca(&corpus.keys, 2, 15, 0);
+        let pk = pca_project(&corpus.keys, &comps, &mean);
+        let pq = pca_project(&corpus.queries, &comps, &mean);
+        let bound = pk
+            .data()
+            .iter()
+            .chain(pq.data().iter())
+            .fold(0.0f32, |m, v| m.max(v.abs())) as f64;
+        let mut gk = Grid2d::new([-bound, -bound], [bound, bound], 24);
+        let mut gq = Grid2d::new([-bound, -bound], [bound, bound], 24);
+        for i in 0..pk.rows() {
+            gk.record(pk.row(i)[0] as f64, pk.row(i)[1] as f64);
+        }
+        for i in 0..pq.rows() {
+            gq.record(pq.row(i)[0] as f64, pq.row(i)[1] as f64);
+        }
+
+        // Fig 30: top-1 MIPS score histogram.
+        let gt = amips::data::ground_truth::compute(&corpus.queries, &corpus.keys, 1, None);
+        let mut h = Histogram::new(0.0, 1.0, 20);
+        for q in 0..gt.n_queries() {
+            h.record(gt.score(q, 0) as f64);
+        }
+        rep.row(&[
+            dataset.to_string(),
+            f(h.mean()),
+            f(h.median()),
+            pct(gq.mass_outside(&gk)),
+        ]);
+        rep.note(format!("{dataset} keys density:\n{}", gk.render()));
+        rep.note(format!("{dataset} queries density:\n{}", gq.render()));
+        rep.note(format!("{dataset} top-1 histogram:\n{}", h.render(40)));
+    }
+    rep.note("paper shape: quora concentrated near 1.0 (mean .86 paper / aligned here); nq & hotpot peak lower with query-side-only modes visible");
+    rep.emit("fig29_distributions");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Fig. 3: routing accuracy vs FLOPs on quora-s and nq-s with c=10,
+//! sweeping model family (SupportNet / KeyNet), size (xs/s/m) and the
+//! sparse-reinjection variant, against the centroid baseline; top-k from
+//! 1 to 5 traces each router's Pareto curve.
+
+use amips::bench_support::fixtures;
+use amips::bench_support::pareto::{pareto_front, ParetoPoint};
+use amips::bench_support::report::{pct, Report};
+use amips::coordinator::router::{routing_accuracy, AmortizedRouter, CentroidRouter, Router};
+use amips::metrics::flops;
+use amips::runtime::Engine;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let manifest = fixtures::load_manifest()?;
+    let engine = Engine::new(manifest.dir.clone())?;
+    let quick = std::env::var("AMIPS_BENCH_QUICK").is_ok();
+
+    for dataset in ["quora-s", "nq-s"] {
+        let ds = fixtures::prepare_dataset(&manifest, dataset, 10)?;
+        let true_clusters: Vec<usize> = (0..ds.val.gt.n_queries())
+            .map(|q| ds.val.gt.top_cluster(q))
+            .collect();
+        let mut sizes = vec![0usize; ds.c];
+        for &a in &ds.assign {
+            sizes[a as usize] += 1;
+        }
+        let cost_of = |dec: &[amips::coordinator::router::RoutingDecision]| -> f64 {
+            dec.iter()
+                .map(|d| {
+                    let picked: Vec<usize> =
+                        d.clusters.iter().map(|&c| sizes[c as usize]).collect();
+                    flops::routing_total_flops(d.selection_flops, &picked, ds.d()) as f64
+                })
+                .sum::<f64>()
+                / dec.len() as f64
+        };
+
+        let mut rep = Report::new(&format!("Fig 3: routing accuracy vs FLOPs on {dataset} (c=10)"));
+        rep.header(&["router", "k", "accuracy", "kFLOP/q"]);
+        let mut points: Vec<ParetoPoint> = Vec::new();
+
+        // centroid baseline
+        let baseline = CentroidRouter::new(ds.centroids.clone());
+        for k in 1..=5usize {
+            let dec = baseline.route_batch(&ds.val.x, k)?;
+            let acc = routing_accuracy(&dec, &true_clusters);
+            let cost = cost_of(&dec);
+            rep.row(&["centroid".into(), k.to_string(), pct(acc), format!("{:.1}", cost / 1e3)]);
+            points.push(ParetoPoint {
+                label: format!("centroid k={k}"),
+                cost,
+                value: acc,
+            });
+        }
+
+        // learned routers across the sweep
+        let mut variants: Vec<String> = Vec::new();
+        for mdl in ["supportnet", "keynet"] {
+            for size in ["xs", "s", "m"] {
+                variants.push(format!("{dataset}.{mdl}.{size}.l4.c10"));
+            }
+            variants.push(format!("{dataset}.{mdl}.s.l4.c10.nx1"));
+        }
+        if quick {
+            variants.truncate(2);
+        }
+        for config in variants {
+            let model = match fixtures::trained_model(&engine, &manifest, &config, &ds, None) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("skip {config}: {e}");
+                    continue;
+                }
+            };
+            let router = AmortizedRouter::new(model);
+            for k in 1..=5usize {
+                let dec = router.route_batch(&ds.val.x, k)?;
+                let acc = routing_accuracy(&dec, &true_clusters);
+                let cost = cost_of(&dec);
+                rep.row(&[
+                    config.clone(),
+                    k.to_string(),
+                    pct(acc),
+                    format!("{:.1}", cost / 1e3),
+                ]);
+                points.push(ParetoPoint {
+                    label: format!("{config} k={k}"),
+                    cost,
+                    value: acc,
+                });
+            }
+        }
+
+        let front = pareto_front(&points);
+        let learned_on_front = front
+            .iter()
+            .filter(|p| !p.label.starts_with("centroid"))
+            .count();
+        rep.note(format!(
+            "Pareto front: {} points, {} learned (paper: learned routers dominate at higher budgets)",
+            front.len(),
+            learned_on_front
+        ));
+        rep.emit("fig3_routing");
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Figs. 6-8: robustness to query distribution shift. Re-runs the IVF
+//! integration with test queries perturbed by Gaussian noise
+//! σ ∈ {0 .. 0.06} (train-time augmentation used σ=0.02), reporting
+//! original / mapped / gap per (σ, nprobe).
+//!
+//! `--dataset quora-s` reproduces the Fig. 8 variant.
+
+use amips::bench_support::fixtures;
+use amips::bench_support::report::{pct, Report};
+use amips::cli::Args;
+use amips::coordinator::pipeline::{recall_against_truth, MappedSearchPipeline};
+use amips::index::ivf::IvfIndex;
+use amips::runtime::Engine;
+use amips::tensor::{normalize_rows, Tensor};
+use amips::util::Rng;
+use anyhow::Result;
+
+fn perturb(x: &Tensor, sigma: f32, seed: u64) -> Tensor {
+    let mut out = x.clone();
+    let mut rng = Rng::new(seed);
+    for v in out.data_mut().iter_mut() {
+        *v += rng.normal() as f32 * sigma;
+    }
+    normalize_rows(&mut out);
+    out
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))?;
+    let dataset = args.get_or("dataset", "nq-s").to_string();
+    args.reject_unknown()?;
+    let quick = std::env::var("AMIPS_BENCH_QUICK").is_ok();
+
+    let manifest = fixtures::load_manifest()?;
+    let engine = Engine::new(manifest.dir.clone())?;
+    let ds = fixtures::prepare_dataset(&manifest, &dataset, 1)?;
+    let config = format!("{dataset}.keynet.xs.l4.c1");
+    let model = fixtures::trained_model(&engine, &manifest, &config, &ds, None)?;
+    let nlist = fixtures::default_nlist(ds.n_keys());
+    let index = IvfIndex::build(&ds.keys, nlist, 15, 42);
+    let k = (ds.n_keys() / 40).max(10);
+
+    let sigmas: &[f32] = if quick {
+        &[0.0, 0.03]
+    } else {
+        &[0.0, 0.01, 0.02, 0.03, 0.04, 0.05, 0.06]
+    };
+    let mut rep = Report::new(&format!(
+        "Fig 6-8: shift robustness on {dataset} (XS KeyNet, Recall@2.5%={k})"
+    ));
+    rep.header(&["sigma", "nprobe", "orig", "mapped", "gap(orig-mapped)"]);
+    for &sigma in sigmas {
+        let qx = perturb(&ds.val.x, sigma, 0x5611F7 + (sigma * 1e3) as u64);
+        // recompute truth for the perturbed queries (exact MIPS)
+        let gt = amips::data::ground_truth::compute(&qx, &ds.keys, 1, None);
+        let truth: Vec<usize> = (0..gt.n_queries()).map(|q| gt.idx(q, 0)).collect();
+        for nprobe in [1usize, 2, 4, 8] {
+            let orig = MappedSearchPipeline::original(&index).run(&qx, k, nprobe)?;
+            let mapped = MappedSearchPipeline::mapped(&index, &model).run(&qx, k, nprobe)?;
+            let ro = recall_against_truth(&orig.results, &truth, k);
+            let rm = recall_against_truth(&mapped.results, &truth, k);
+            rep.row(&[
+                format!("{sigma:.2}"),
+                nprobe.to_string(),
+                pct(ro),
+                pct(rm),
+                format!("{:+.1}pp", (ro - rm) * 100.0),
+            ]);
+        }
+    }
+    rep.note("paper shape: degradation grows with sigma but is not catastrophic; mapped advantage persists at low nprobe through sigma~0.03");
+    rep.emit("fig6_distribution_shift");
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! §Perf: microbenchmarks of the request-path hot spots — exhaustive
+//! scan throughput (flat index), IVF probe, model forward, the batcher,
+//! and end-to-end serving throughput. Before/after numbers live in
+//! EXPERIMENTS.md §Perf.
+
+use amips::bench_support::fixtures;
+use amips::bench_support::report::Report;
+use amips::coordinator::{BatchPolicy, Server, ServerConfig};
+use amips::index::{flat::FlatIndex, ivf::IvfIndex, traits::VectorIndex};
+use amips::runtime::Engine;
+use amips::tensor::{gemm_nt, Tensor};
+use amips::trainer::{self, TrainOpts};
+use amips::util::timer::{time_reps, Stats};
+use anyhow::Result;
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let manifest = fixtures::load_manifest()?;
+    let engine = Engine::new(manifest.dir.clone())?;
+    let ds = fixtures::prepare_dataset(&manifest, "nq-s", 1)?;
+    let (n, d) = (ds.n_keys(), ds.d());
+    let mut rep = Report::new("§Perf: hot-path microbenchmarks (1-core)");
+    rep.header(&["path", "unit", "mean", "p95", "throughput"]);
+
+    // ---- 1. dot-product scan (the flat/ivf inner loop) -----------------
+    let flat = FlatIndex::new(ds.keys.clone());
+    let q = ds.val.x.row(0).to_vec();
+    let t = Stats::from(&time_reps(3, 30, || {
+        std::hint::black_box(flat.search(&q, 10, 0));
+    }));
+    rep.row(&[
+        "flat scan".into(),
+        format!("{n} keys"),
+        format!("{:.3} ms", t.mean * 1e3),
+        format!("{:.3} ms", t.p95 * 1e3),
+        format!("{:.2} GFLOP/s", (n * d * 2) as f64 / t.mean / 1e9),
+    ]);
+
+    // ---- 2. gemm_nt batch scoring --------------------------------------
+    let qb = ds.val.x.gather_rows(&(0..64).collect::<Vec<_>>());
+    let mut out = Tensor::zeros(&[64, n]);
+    let t = Stats::from(&time_reps(2, 10, || {
+        gemm_nt(&qb, &ds.keys, &mut out);
+    }));
+    rep.row(&[
+        "gemm_nt".into(),
+        format!("64x{n}"),
+        format!("{:.2} ms", t.mean * 1e3),
+        format!("{:.2} ms", t.p95 * 1e3),
+        format!("{:.2} GFLOP/s", (64 * n * d * 2) as f64 / t.mean / 1e9),
+    ]);
+
+    // ---- 3. IVF probe ----------------------------------------------------
+    let ivf = IvfIndex::build(&ds.keys, fixtures::default_nlist(n), 15, 42);
+    for nprobe in [1usize, 8] {
+        let t = Stats::from(&time_reps(3, 50, || {
+            std::hint::black_box(ivf.search(&q, 10, nprobe));
+        }));
+        rep.row(&[
+            format!("ivf probe={nprobe}"),
+            "1 query".into(),
+            format!("{:.1} us", t.mean * 1e6),
+            format!("{:.1} us", t.p95 * 1e6),
+            format!("{:.0} q/s", 1.0 / t.mean),
+        ]);
+    }
+
+    // ---- 4. model forward (batched inference) ---------------------------
+    let config = "nq-s.keynet.xs.l4.c1";
+    let model = fixtures::trained_model(&engine, &manifest, config, &ds, None)?;
+    let batch = ds.val.x.gather_rows(&(0..256).collect::<Vec<_>>());
+    let t = Stats::from(&time_reps(2, 20, || {
+        std::hint::black_box(model.map_queries(&batch).unwrap());
+    }));
+    rep.row(&[
+        "keynet fwd".into(),
+        "256 queries".into(),
+        format!("{:.2} ms", t.mean * 1e3),
+        format!("{:.2} ms", t.p95 * 1e3),
+        format!("{:.0} q/s", 256.0 / t.mean),
+    ]);
+
+    // ---- 5. end-to-end serving ------------------------------------------
+    let meta = manifest.meta(config)?;
+    let params = trainer::train_or_load(
+        &engine,
+        &meta,
+        &ds,
+        &TrainOpts {
+            steps: fixtures::default_steps(&meta.size),
+            ..Default::default()
+        },
+    )?
+    .params;
+    drop(engine); // server builds its own engine on the runner thread
+    let (server, handle) = Server::start(
+        ServerConfig {
+            artifacts_dir: manifest.dir.clone(),
+            meta,
+            params,
+            policy: BatchPolicy::default(),
+            map_queries: true,
+            nprobe_default: 4,
+        },
+        Arc::new(ivf),
+    )?;
+    let reqs = 512usize;
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..4usize {
+            let handle = handle.clone();
+            let ds = &ds;
+            s.spawn(move || {
+                for i in (c..reqs).step_by(4) {
+                    let _ = handle.query(ds.val.x.row(i % ds.val.x.rows()).to_vec(), 10);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.latency_stats();
+    drop(handle);
+    server.shutdown()?;
+    rep.row(&[
+        "serve e2e".into(),
+        format!("{reqs} reqs"),
+        format!("{:.2} ms p50", stats.quantile_s(0.5) * 1e3),
+        format!("{:.2} ms p95", stats.quantile_s(0.95) * 1e3),
+        format!("{:.0} q/s", reqs as f64 / wall),
+    ]);
+
+    rep.emit("perf_hotpath");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Table 1: score vs gradient wall-clock for SupportNet and KeyNet,
+//! batch 4096, across datasets and parameter fractions.
+//!
+//! Paper claim to reproduce: SupportNet's *grad* time ≈ 2x its *score*
+//! time (backward pass), while KeyNet's grad time ≈ its score time
+//! (keys come from the same forward).
+
+use amips::bench_support::fixtures;
+use amips::bench_support::report::Report;
+use amips::runtime::engine::lit_f32;
+use amips::runtime::Engine;
+use amips::util::timer::{time_reps, Stats};
+use amips::util::Rng;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let manifest = fixtures::load_manifest()?;
+    let engine = Engine::new(manifest.dir.clone())?;
+    let reps = std::env::var("AMIPS_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20usize);
+
+    let mut rep = Report::new("Table 1: batch-4096 score/grad seconds (paper: GPU; here: 1-core CPU PJRT)");
+    rep.header(&["dataset", "size", "model", "score s", "grad s", "grad/score"]);
+
+    for dataset in ["quora-s", "nq-s", "hotpot-s"] {
+        let d = manifest.dataset(dataset)?.d;
+        // random batch — timing does not depend on trained weights
+        let mut x = vec![0.0f32; manifest.timing_batch * d];
+        Rng::new(1).fill_normal(&mut x, 1.0);
+        let xlit = lit_f32(&[manifest.timing_batch, d], &x)?;
+        for size in ["s", "m", "l"] {
+            for model in ["supportnet", "keynet"] {
+                let config = format!("{dataset}.{model}.{size}.l4.c1");
+                let meta = match manifest.meta(&config) {
+                    Ok(m) => m,
+                    Err(_) => continue,
+                };
+                if meta.timing_batch == 0 {
+                    continue;
+                }
+                // random params with the right shapes
+                let mut rng = Rng::new(7);
+                let plits: Vec<xla::Literal> = meta
+                    .params
+                    .iter()
+                    .map(|(_, s)| {
+                        let n: usize = s.iter().product::<usize>().max(1);
+                        let mut v = vec![0.0f32; n];
+                        rng.fill_normal(&mut v, 0.05);
+                        lit_f32(s, &v).unwrap()
+                    })
+                    .collect();
+                let mut inputs: Vec<&xla::Literal> = plits.iter().collect();
+                inputs.push(&xlit);
+
+                let fwd = engine.load(&format!("{config}.fwd4096"))?;
+                let score_t = Stats::from(&time_reps(2, reps, || {
+                    fwd.run(&inputs).unwrap();
+                }));
+                // grad = the artifact that yields keys: grad4096 for
+                // SupportNet (backward), the same fwd4096 for KeyNet.
+                let grad_t = if meta.model == "supportnet" {
+                    let grad = engine.load(&format!("{config}.grad4096"))?;
+                    Stats::from(&time_reps(2, reps, || {
+                        grad.run(&inputs).unwrap();
+                    }))
+                } else {
+                    score_t
+                };
+                rep.row(&[
+                    dataset.to_string(),
+                    size.to_string(),
+                    meta.model.clone(),
+                    format!("{:.4}", score_t.mean),
+                    format!("{:.4}", grad_t.mean),
+                    format!("{:.2}", grad_t.mean / score_t.mean),
+                ]);
+            }
+        }
+    }
+    rep.note("expected shape: supportnet grad/score in 1.5-3x, keynet ~1x (Table 1)");
+    rep.emit("table1_timing");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Shared experiment fixtures: dataset preparation from the manifest and
+//! train-or-load model acquisition. Used by the CLI, the examples and
+//! every bench so all of them agree on seeds and scaling.
+
+use anyhow::Result;
+
+use crate::data::{Dataset, dataset::PrepareOpts};
+use crate::model::AmortizedModel;
+use crate::runtime::{Engine, Manifest};
+use crate::trainer::{self, TrainOpts};
+
+/// Load the artifacts manifest (run `make artifacts` first).
+pub fn load_manifest() -> Result<Manifest> {
+    Manifest::load(&crate::artifacts_dir())
+}
+
+/// Augmentation factor targeting ~10k train queries (paper: 5–100x,
+/// scaled to corpus size).
+pub fn augment_factor(base_queries: usize) -> usize {
+    (10_000 / base_queries.max(1)).clamp(1, 8)
+}
+
+/// Prepare a dataset by manifest name with `c` clusters.
+pub fn prepare_dataset(manifest: &Manifest, name: &str, c: usize) -> Result<Dataset> {
+    let spec = manifest.dataset(name)?.to_corpus_spec();
+    let base = spec.n_queries.saturating_sub(manifest.val_queries).max(1);
+    let opts = PrepareOpts {
+        c,
+        augment: augment_factor(base),
+        aug_sigma: manifest.aug_sigma,
+        val_queries: manifest.val_queries,
+        kmeans_restarts: 3,
+        seed: spec.seed ^ 0xDA7A,
+    };
+    Ok(Dataset::prepare(&spec, &opts))
+}
+
+/// Default step budget for a config, scaled by model size so benches
+/// stay tractable on the single-core testbed.
+pub fn default_steps(size: &str) -> usize {
+    match size {
+        "xs" => 4000,
+        "s" => 4000,
+        "m" => 3000,
+        "l" => 2000,
+        _ => 2500,
+    }
+}
+
+/// IVF cell count heuristic (~sqrt(n), the classic FAISS guidance).
+pub fn default_nlist(n_keys: usize) -> usize {
+    ((n_keys as f64).sqrt().round() as usize).clamp(4, 512)
+}
+
+/// Train (or load the cached checkpoint of) `config` on `ds`, returning
+/// a ready inference handle.
+pub fn trained_model(
+    engine: &Engine,
+    manifest: &Manifest,
+    config: &str,
+    ds: &Dataset,
+    opts: Option<TrainOpts>,
+) -> Result<AmortizedModel> {
+    let meta = manifest.meta(config)?;
+    let opts = opts.unwrap_or_else(|| TrainOpts {
+        steps: default_steps(&meta.size),
+        ..TrainOpts::default()
+    });
+    let out = trainer::train_or_load(engine, &meta, ds, &opts)?;
+    AmortizedModel::load(engine, meta, &out.params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn augment_factor_bounds() {
+        assert_eq!(augment_factor(100_000), 1);
+        assert_eq!(augment_factor(1), 8);
+        assert!(augment_factor(2000) >= 1);
+    }
+
+    #[test]
+    fn default_steps_by_size() {
+        assert!(default_steps("xs") >= default_steps("l"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared benchmark harness (criterion is unavailable offline): Pareto
+//! sweeps, aligned table reports, and the common experiment fixtures the
+//! per-figure benches reuse. Every bench binary prints the rows/series
+//! the corresponding paper table/figure reports and appends them to
+//! `bench_results/`.
+
+pub mod fixtures;
+pub mod pareto;
+pub mod report;
+
+pub use pareto::{pareto_front, ParetoPoint};
+pub use report::Report;

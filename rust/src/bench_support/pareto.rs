@@ -1,0 +1,81 @@
+//! Accuracy-vs-cost Pareto utilities for the figure reproductions.
+
+/// One operating point on a cost/quality trade-off curve.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoPoint {
+    pub label: String,
+    /// cost (flops, probes, seconds, …) — lower is better
+    pub cost: f64,
+    /// quality (accuracy/recall) — higher is better
+    pub value: f64,
+}
+
+/// Non-dominated subset, sorted by ascending cost. A point dominates
+/// another if it is no worse on both axes and better on one.
+pub fn pareto_front(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let mut sorted: Vec<ParetoPoint> = points.to_vec();
+    sorted.sort_by(|a, b| {
+        a.cost
+            .partial_cmp(&b.cost)
+            .unwrap()
+            .then(b.value.partial_cmp(&a.value).unwrap())
+    });
+    let mut front: Vec<ParetoPoint> = Vec::new();
+    let mut best = f64::NEG_INFINITY;
+    for p in sorted {
+        if p.value > best {
+            best = p.value;
+            front.push(p);
+        }
+    }
+    front
+}
+
+/// Area-under-curve style summary: mean value of the front over log-cost
+/// (used to compare methods in one number per figure).
+pub fn front_score(front: &[ParetoPoint]) -> f64 {
+    if front.is_empty() {
+        return 0.0;
+    }
+    front.iter().map(|p| p.value).sum::<f64>() / front.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(cost: f64, value: f64) -> ParetoPoint {
+        ParetoPoint {
+            label: String::new(),
+            cost,
+            value,
+        }
+    }
+
+    #[test]
+    fn removes_dominated_points() {
+        let front = pareto_front(&[p(1.0, 0.5), p(2.0, 0.4), p(3.0, 0.9)]);
+        assert_eq!(front.len(), 2);
+        assert_eq!(front[0].cost, 1.0);
+        assert_eq!(front[1].cost, 3.0);
+    }
+
+    #[test]
+    fn keeps_strictly_improving_chain() {
+        let front = pareto_front(&[p(1.0, 0.1), p(2.0, 0.2), p(3.0, 0.3)]);
+        assert_eq!(front.len(), 3);
+    }
+
+    #[test]
+    fn equal_cost_keeps_best_value() {
+        let front = pareto_front(&[p(1.0, 0.2), p(1.0, 0.8)]);
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].value, 0.8);
+    }
+
+    #[test]
+    fn empty_ok() {
+        assert!(pareto_front(&[]).is_empty());
+        assert_eq!(front_score(&[]), 0.0);
+    }
+}

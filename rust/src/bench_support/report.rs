@@ -1,0 +1,140 @@
+//! Aligned-table reports: every bench prints its paper-figure rows and
+//! appends the same text to `bench_results/<bench>.txt` so EXPERIMENTS.md
+//! can cite stable outputs.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+
+/// A simple column-aligned text table + free-form notes.
+pub struct Report {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Report {
+        Report {
+            title: title.to_string(),
+            header: Vec::new(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn header(&mut self, cols: &[&str]) -> &mut Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cols: &[String]) -> &mut Self {
+        self.rows.push(cols.to_vec());
+        self
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) -> &mut Self {
+        self.notes.push(s.into());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                if i >= widths.len() {
+                    widths.push(cell.len());
+                } else {
+                    widths[i] = widths[i].max(cell.len());
+                }
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        if !self.header.is_empty() {
+            let line: Vec<String> = self
+                .header
+                .iter()
+                .enumerate()
+                .map(|(i, h)| format!("{h:>w$}", w = widths[i]))
+                .collect();
+            let _ = writeln!(out, "{}", line.join("  "));
+            let _ = writeln!(
+                out,
+                "{}",
+                widths
+                    .iter()
+                    .map(|w| "-".repeat(*w))
+                    .collect::<Vec<_>>()
+                    .join("  ")
+            );
+        }
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{c:>w$}", w = widths.get(i).copied().unwrap_or(c.len())))
+                .collect();
+            let _ = writeln!(out, "{}", line.join("  "));
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+
+    /// Print to stdout and append to bench_results/<file>.txt.
+    pub fn emit(&self, file: &str) {
+        let text = self.render();
+        println!("{text}");
+        let dir = std::path::Path::new("bench_results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            if let Ok(mut f) = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(dir.join(format!("{file}.txt")))
+            {
+                let _ = writeln!(f, "{text}");
+            }
+        }
+    }
+}
+
+/// Format helpers shared by benches.
+pub fn f(v: f64) -> String {
+    format!("{v:.4}")
+}
+
+pub fn e(v: f64) -> String {
+    format!("{v:.3e}")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut r = Report::new("t");
+        r.header(&["a", "long-col"]);
+        r.row(&["1".into(), "2".into()]);
+        r.row(&["100".into(), "20000".into()]);
+        let text = r.render();
+        assert!(text.contains("== t =="));
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        // all data lines same length
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(f(0.12345), "0.1235"); // round-half-up
+        assert_eq!(pct(0.5), "50.0%");
+        assert!(e(12345.0).contains('e'));
+    }
+}

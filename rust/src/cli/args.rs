@@ -1,0 +1,165 @@
+//! Minimal `--flag value` / `--switch` argument parser: subcommand-first,
+//! typed getters with defaults, unknown-flag detection.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (first = subcommand unless it
+    /// starts with `-`).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.command = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    args.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, name: &str) {
+        self.consumed.borrow_mut().push(name.to_string());
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.mark(name);
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.get(name) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.mark(name);
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    /// Require a flag to be present.
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+
+    /// Error on flags nobody consumed (typo protection).
+    pub fn reject_unknown(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !consumed.contains(k))
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown flags: {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --config nq-s.keynet.xs.l4.c1 --steps 100 --verbose");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get("config"), Some("nq-s.keynet.xs.l4.c1"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("eval --k=5 --name=x");
+        assert_eq!(a.get_usize("k", 0).unwrap(), 5);
+        assert_eq!(a.get("name"), Some("x"));
+    }
+
+    #[test]
+    fn defaults_and_require() {
+        let a = parse("run");
+        assert_eq!(a.get_usize("steps", 42).unwrap(), 42);
+        assert!(a.require("config").is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("run --known 1 --typo 2");
+        let _ = a.get("known");
+        assert!(a.reject_unknown().is_err());
+        let _ = a.get("typo");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = parse("x --fast --n 3");
+        assert!(a.has("fast"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.command, None);
+        assert!(a.has("help"));
+    }
+}

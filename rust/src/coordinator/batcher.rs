@@ -1,0 +1,158 @@
+//! Dynamic batching: group request-path queries into fixed-size model
+//! batches under a latency deadline. The AOT artifacts have a static
+//! batch dimension `B`, so the batcher's job is to fill as much of `B`
+//! as arrives within `max_wait`, then flush (padding is the model
+//! runner's concern, not the batcher's).
+//!
+//! Generic over the item type so the policy is testable without PJRT.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Flush policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Hard cap = the artifact's batch dimension.
+    pub max_batch: usize,
+    /// Deadline from the *first* queued item.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 256,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Pull-based batcher over an mpsc receiver.
+pub struct Batcher<T> {
+    rx: Receiver<T>,
+    pub policy: BatchPolicy,
+}
+
+/// Why a batch was flushed (telemetry).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    Full,
+    Deadline,
+    Disconnected,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
+        Batcher { rx, policy }
+    }
+
+    /// Block for the next batch. Returns `None` when the channel is
+    /// closed *and* drained.
+    pub fn next_batch(&self) -> Option<(Vec<T>, FlushReason)> {
+        // Block indefinitely for the first item.
+        let first = match self.rx.recv() {
+            Ok(v) => v,
+            Err(_) => return None,
+        };
+        let mut batch = Vec::with_capacity(self.policy.max_batch);
+        batch.push(first);
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                return Some((batch, FlushReason::Deadline));
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(v) => batch.push(v),
+                Err(RecvTimeoutError::Timeout) => {
+                    return Some((batch, FlushReason::Deadline));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Some((batch, FlushReason::Disconnected));
+                }
+            }
+        }
+        Some((batch, FlushReason::Full))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn flushes_full_batch() {
+        let (tx, rx) = channel();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(50),
+            },
+        );
+        let (batch, reason) = b.next_batch().unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert_eq!(reason, FlushReason::Full);
+        let (rest, _) = b.next_batch().unwrap();
+        assert_eq!(rest, vec![4]);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 100,
+                max_wait: Duration::from_millis(5),
+            },
+        );
+        let t0 = Instant::now();
+        let (batch, reason) = b.next_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        assert_eq!(reason, FlushReason::Deadline);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+        drop(tx);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn drains_after_disconnect() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        drop(tx);
+        let b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 10,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        let (batch, _) = b.next_batch().unwrap();
+        assert_eq!(batch, vec![7, 8]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn waits_blocking_for_first_item() {
+        let (tx, rx) = channel();
+        let b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        let h = std::thread::spawn(move || b.next_batch());
+        std::thread::sleep(Duration::from_millis(10));
+        tx.send(42).unwrap();
+        let (batch, _) = h.join().unwrap().unwrap();
+        assert_eq!(batch, vec![42]);
+    }
+}

@@ -1,0 +1,14 @@
+//! The serving coordinator — L3's contribution: cluster routing with
+//! learned support functions, query mapping with KeyNet, dynamic
+//! batching, and a threaded request loop. Python never appears here;
+//! the models are the AOT artifacts loaded through [`crate::runtime`].
+
+pub mod batcher;
+pub mod pipeline;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use pipeline::MappedSearchPipeline;
+pub use router::{AmortizedRouter, CentroidRouter, Router, RoutingDecision};
+pub use server::{Server, ServerConfig, ServerHandle};

@@ -1,0 +1,132 @@
+//! The drop-in integration pipeline (paper Sec. 4.4): optionally map
+//! each query x -> ŷ(x) with a c=1 KeyNet, then hand the (mapped) vector
+//! to an *unmodified* index backbone. Cost accounting covers both stages
+//! so the FLOPs Pareto axes include the forward-pass overhead.
+
+use anyhow::Result;
+
+use crate::index::traits::{SearchResult, VectorIndex};
+use crate::model::AmortizedModel;
+use crate::tensor::Tensor;
+use crate::util::Timer;
+
+/// Search pipeline with an optional learned query map.
+pub struct MappedSearchPipeline<'a> {
+    pub index: &'a dyn VectorIndex,
+    /// None = "Original" baseline (query goes straight to the index).
+    pub mapper: Option<&'a AmortizedModel>,
+}
+
+/// Batch outcome with aggregate cost/latency.
+pub struct PipelineOutcome {
+    pub results: Vec<SearchResult>,
+    /// mapping flops per query (0 for the baseline)
+    pub map_flops_per_query: u64,
+    /// wall-clock for the mapping stage (whole batch)
+    pub map_seconds: f64,
+    /// wall-clock for the search stage (whole batch)
+    pub search_seconds: f64,
+}
+
+impl<'a> MappedSearchPipeline<'a> {
+    pub fn original(index: &'a dyn VectorIndex) -> Self {
+        MappedSearchPipeline {
+            index,
+            mapper: None,
+        }
+    }
+
+    pub fn mapped(index: &'a dyn VectorIndex, model: &'a AmortizedModel) -> Self {
+        MappedSearchPipeline {
+            index,
+            mapper: Some(model),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        if self.mapper.is_some() {
+            "mapped"
+        } else {
+            "orig"
+        }
+    }
+
+    /// Run the batch through (map?) -> index.search.
+    pub fn run(&self, queries: &Tensor, k: usize, nprobe: usize) -> Result<PipelineOutcome> {
+        let (mapped, map_flops, map_seconds) = match self.mapper {
+            Some(model) => {
+                let t = Timer::start();
+                let m = model.map_queries(queries)?;
+                (Some(m), model.key_flops(), t.elapsed_s())
+            }
+            None => (None, 0, 0.0),
+        };
+        let effective = mapped.as_ref().unwrap_or(queries);
+        let t = Timer::start();
+        let results = self.index.search_batch(effective, k, nprobe);
+        let search_seconds = t.elapsed_s();
+        Ok(PipelineOutcome {
+            results,
+            map_flops_per_query: map_flops,
+            map_seconds,
+            search_seconds,
+        })
+    }
+}
+
+/// Recall@k of a pipeline outcome against exact top-1 targets: the
+/// paper's "Recall@f%" metric is recall of y* within the top ⌈f·n⌉
+/// returned candidates.
+pub fn recall_against_truth(results: &[SearchResult], truth: &[usize], k: usize) -> f64 {
+    assert_eq!(results.len(), truth.len());
+    if results.is_empty() {
+        return 0.0;
+    }
+    let hits = results
+        .iter()
+        .zip(truth)
+        .filter(|(r, &t)| r.ids.iter().take(k).any(|&id| id as usize == t))
+        .count();
+    hits as f64 / results.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::flat::FlatIndex;
+    use crate::tensor::normalize_rows;
+    use crate::util::Rng;
+
+    fn unit(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        normalize_rows(&mut t);
+        t
+    }
+
+    #[test]
+    fn original_pipeline_is_passthrough() {
+        let keys = unit(&[100, 8], 1);
+        let idx = FlatIndex::new(keys.clone());
+        let pipe = MappedSearchPipeline::original(&idx);
+        let q = unit(&[5, 8], 2);
+        let out = pipe.run(&q, 3, 0).unwrap();
+        assert_eq!(out.results.len(), 5);
+        assert_eq!(out.map_flops_per_query, 0);
+        // matches a direct index call
+        let direct = idx.search(q.row(0), 3, 0);
+        assert_eq!(out.results[0].ids, direct.ids);
+    }
+
+    #[test]
+    fn recall_counts_prefix_hits() {
+        let keys = unit(&[50, 8], 3);
+        let idx = FlatIndex::new(keys.clone());
+        let pipe = MappedSearchPipeline::original(&idx);
+        // queries exactly equal to keys 7 and 9
+        let q = keys.gather_rows(&[7, 9]);
+        let out = pipe.run(&q, 1, 0).unwrap();
+        assert_eq!(recall_against_truth(&out.results, &[7, 9], 1), 1.0);
+        assert_eq!(recall_against_truth(&out.results, &[7, 0], 1), 0.5);
+    }
+}

@@ -1,0 +1,187 @@
+//! Cluster routing (paper Sec. 4.3): given a query, pick the top-k
+//! database partitions to search.
+//!
+//! * [`CentroidRouter`] — the IVF-style baseline: score the query against
+//!   each cluster centroid (Fig. 1 left).
+//! * [`AmortizedRouter`] — the paper's contribution: a multi-output
+//!   SupportNet (or KeyNet) predicts per-cluster support values
+//!   σ_{Y_j}(x); clusters are ranked by predicted attainable score, not
+//!   centroid alignment (Fig. 1 middle).
+
+use anyhow::Result;
+
+use crate::index::traits::TopK;
+use crate::metrics::flops;
+use crate::model::AmortizedModel;
+use crate::tensor::{dot, Tensor};
+
+/// Routed clusters for one query, with selection cost.
+#[derive(Clone, Debug)]
+pub struct RoutingDecision {
+    /// cluster ids, best first
+    pub clusters: Vec<u32>,
+    /// flops spent on the selection itself
+    pub selection_flops: u64,
+}
+
+/// A batched cluster router.
+pub trait Router {
+    fn name(&self) -> &str;
+    /// Number of clusters this router ranks over.
+    fn n_clusters(&self) -> usize;
+    /// Route every query to its top-k clusters.
+    fn route_batch(&self, queries: &Tensor, k: usize) -> Result<Vec<RoutingDecision>>;
+}
+
+/// Baseline: rank clusters by ⟨x, centroid_j⟩.
+pub struct CentroidRouter {
+    centroids: Tensor, // [c, d]
+}
+
+impl CentroidRouter {
+    pub fn new(centroids: Tensor) -> Self {
+        CentroidRouter { centroids }
+    }
+}
+
+impl Router for CentroidRouter {
+    fn name(&self) -> &str {
+        "centroid"
+    }
+
+    fn n_clusters(&self) -> usize {
+        self.centroids.rows()
+    }
+
+    fn route_batch(&self, queries: &Tensor, k: usize) -> Result<Vec<RoutingDecision>> {
+        let c = self.centroids.rows();
+        let d = self.centroids.row_width();
+        let k = k.clamp(1, c);
+        let cost = flops::centroid_routing_flops(c, d);
+        Ok((0..queries.rows())
+            .map(|i| {
+                let q = queries.row(i);
+                let mut top = TopK::new(k);
+                for j in 0..c {
+                    top.push(dot(q, self.centroids.row(j)), j as u32);
+                }
+                RoutingDecision {
+                    clusters: top.into_sorted().0,
+                    selection_flops: cost,
+                }
+            })
+            .collect())
+    }
+}
+
+/// Learned router: rank clusters by predicted support value.
+pub struct AmortizedRouter {
+    model: AmortizedModel,
+    label: String,
+}
+
+impl AmortizedRouter {
+    pub fn new(model: AmortizedModel) -> Self {
+        let label = format!("amortized-{}", model.meta.model);
+        AmortizedRouter { model, label }
+    }
+
+    pub fn model(&self) -> &AmortizedModel {
+        &self.model
+    }
+}
+
+impl Router for AmortizedRouter {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn n_clusters(&self) -> usize {
+        self.model.meta.c
+    }
+
+    fn route_batch(&self, queries: &Tensor, k: usize) -> Result<Vec<RoutingDecision>> {
+        let c = self.model.meta.c;
+        let k = k.clamp(1, c);
+        // One fused forward for the whole batch (the amortized win):
+        // per-query cost is the model's forward flops.
+        let scores = self.model.scores(queries)?;
+        let cost = self.model.score_flops();
+        Ok((0..queries.rows())
+            .map(|i| {
+                let row = scores.row(i);
+                let mut top = TopK::new(k);
+                for (j, &s) in row.iter().enumerate() {
+                    top.push(s, j as u32);
+                }
+                RoutingDecision {
+                    clusters: top.into_sorted().0,
+                    selection_flops: cost,
+                }
+            })
+            .collect())
+    }
+}
+
+/// Routing accuracy (Sec. 4.3): fraction of queries whose true top-1
+/// key's cluster is among the selected clusters.
+pub fn routing_accuracy(decisions: &[RoutingDecision], true_clusters: &[usize]) -> f64 {
+    assert_eq!(decisions.len(), true_clusters.len());
+    if decisions.is_empty() {
+        return 0.0;
+    }
+    let hits = decisions
+        .iter()
+        .zip(true_clusters)
+        .filter(|(dec, &t)| dec.clusters.iter().any(|&c| c as usize == t))
+        .count();
+    hits as f64 / decisions.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::normalize_rows;
+    use crate::util::Rng;
+
+    fn unit(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        normalize_rows(&mut t);
+        t
+    }
+
+    #[test]
+    fn centroid_router_picks_best_centroid() {
+        let centroids = unit(&[6, 8], 1);
+        let router = CentroidRouter::new(centroids.clone());
+        // query = centroid 4 exactly
+        let q = centroids.gather_rows(&[4]);
+        let dec = router.route_batch(&q, 2).unwrap();
+        assert_eq!(dec[0].clusters[0], 4);
+        assert_eq!(dec[0].selection_flops, 6 * 8 * 2);
+    }
+
+    #[test]
+    fn routing_accuracy_counts_topk() {
+        let d1 = RoutingDecision {
+            clusters: vec![2, 0],
+            selection_flops: 0,
+        };
+        let d2 = RoutingDecision {
+            clusters: vec![1],
+            selection_flops: 0,
+        };
+        let acc = routing_accuracy(&[d1, d2], &[0, 0]);
+        assert!((acc - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k_clamped_to_cluster_count() {
+        let centroids = unit(&[3, 4], 2);
+        let router = CentroidRouter::new(centroids);
+        let q = unit(&[2, 4], 3);
+        let dec = router.route_batch(&q, 10).unwrap();
+        assert_eq!(dec[0].clusters.len(), 3);
+    }
+}

@@ -1,0 +1,189 @@
+//! Threaded serving loop: the deployable shape of the system.
+//!
+//! Architecture (vLLM-router-like, scaled to one box):
+//!
+//! ```text
+//!  clients --> mpsc --> [batcher thread] --(dynamic batch)--> model runner
+//!                         |                (Engine confined here: PJRT
+//!                         |                 handles are !Send)
+//!                         +--> index search (shared Arc<dyn VectorIndex>)
+//!                         +--> per-request reply channel + latency stats
+//! ```
+//!
+//! The runner thread owns the `Engine`, the compiled KeyNet executable
+//! and the trained parameters; requests only carry `Vec<f32>` queries.
+
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::index::traits::VectorIndex;
+use crate::model::{AmortizedModel, ParamSet};
+use crate::runtime::{ArtifactMeta, Engine};
+use crate::tensor::Tensor;
+use crate::util::timer::LatencyHistogram;
+
+/// One search request.
+struct Request {
+    query: Vec<f32>,
+    k: usize,
+    nprobe: usize,
+    enqueued: Instant,
+    reply: SyncSender<Response>,
+}
+
+/// One search response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub ids: Vec<u32>,
+    pub scores: Vec<f32>,
+    /// end-to-end latency as measured by the server
+    pub latency: Duration,
+}
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    pub meta: ArtifactMeta,
+    pub params: ParamSet,
+    pub policy: BatchPolicy,
+    /// map queries through KeyNet before searching (Sec. 4.4) —
+    /// disable for an "original queries" baseline server.
+    pub map_queries: bool,
+    pub nprobe_default: usize,
+}
+
+/// Running server with its worker thread.
+pub struct Server {
+    handle_tx: Sender<Request>,
+    join: Option<std::thread::JoinHandle<Result<()>>>,
+    stats: Arc<Mutex<LatencyHistogram>>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Cloneable client handle.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: Sender<Request>,
+    nprobe_default: usize,
+}
+
+impl ServerHandle {
+    /// Blocking query.
+    pub fn query(&self, query: Vec<f32>, k: usize) -> Result<Response> {
+        self.query_nprobe(query, k, self.nprobe_default)
+    }
+
+    pub fn query_nprobe(&self, query: Vec<f32>, k: usize, nprobe: usize) -> Result<Response> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Request {
+                query,
+                k,
+                nprobe,
+                enqueued: Instant::now(),
+                reply: rtx,
+            })
+            .map_err(|_| anyhow!("server stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("server dropped request"))
+    }
+}
+
+impl Server {
+    /// Spawn the model-runner/batcher thread over a shared index.
+    pub fn start(cfg: ServerConfig, index: Arc<dyn VectorIndex>) -> Result<(Server, ServerHandle)> {
+        let (tx, rx) = channel::<Request>();
+        let stats = Arc::new(Mutex::new(LatencyHistogram::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats2 = stats.clone();
+        let stop2 = stop.clone();
+        let nprobe_default = cfg.nprobe_default;
+        let join = std::thread::Builder::new()
+            .name("amips-runner".into())
+            .spawn(move || -> Result<()> {
+                // Engine must be constructed on this thread (!Send).
+                let engine = Engine::new(cfg.artifacts_dir.clone())?;
+                let model = if cfg.map_queries {
+                    Some(AmortizedModel::load(&engine, cfg.meta.clone(), &cfg.params)?)
+                } else {
+                    None
+                };
+                let d = cfg.meta.d;
+                let batcher = Batcher::new(rx, cfg.policy);
+                while let Some((batch, _reason)) = batcher.next_batch() {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    // assemble the query matrix
+                    let mut q = Tensor::zeros(&[batch.len(), d]);
+                    for (i, r) in batch.iter().enumerate() {
+                        anyhow::ensure!(r.query.len() == d, "query dim {}", r.query.len());
+                        q.row_mut(i).copy_from_slice(&r.query);
+                    }
+                    let effective = match &model {
+                        Some(m) => m.map_queries(&q)?,
+                        None => q,
+                    };
+                    // search + reply per request
+                    for (i, req) in batch.into_iter().enumerate() {
+                        let res = index.search(effective.row(i), req.k, req.nprobe);
+                        let latency = req.enqueued.elapsed();
+                        stats2.lock().unwrap().record(latency.as_secs_f64());
+                        // client may have given up; ignore send errors
+                        let _ = req.reply.send(Response {
+                            ids: res.ids,
+                            scores: res.scores,
+                            latency,
+                        });
+                    }
+                }
+                Ok(())
+            })?;
+        let handle = ServerHandle {
+            tx: tx.clone(),
+            nprobe_default,
+        };
+        Ok((
+            Server {
+                handle_tx: tx,
+                join: Some(join),
+                stats,
+                stop,
+            },
+            handle,
+        ))
+    }
+
+    /// Snapshot latency statistics.
+    pub fn latency_stats(&self) -> LatencyHistogram {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Stop the server and join the worker. Note: the runner drains its
+    /// channel, so it exits once every [`ServerHandle`] clone (which each
+    /// hold a sender) is dropped too.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop.store(true, Ordering::Relaxed);
+        // Replace our sender with a dangling channel so the receiver can
+        // disconnect (Self implements Drop, so fields can't be moved out).
+        let (dangling, _) = channel::<Request>();
+        let _ = std::mem::replace(&mut self.handle_tx, dangling);
+        if let Some(j) = self.join.take() {
+            match j.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow!("runner thread panicked")),
+            }
+        } else {
+            Ok(())
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}

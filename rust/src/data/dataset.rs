@@ -1,0 +1,279 @@
+//! Prepared training datasets (paper Sec. 4.1 "Data Preparation"):
+//! generate corpus → (optionally) k-means partition the keys → augment
+//! train queries with Gaussian noise + renormalize → exact-MIPS targets.
+
+use crate::data::ground_truth::{self, GroundTruth};
+use crate::data::synth::{CorpusSpec, SynthCorpus};
+use crate::index::kmeans::KMeans;
+use crate::tensor::{normalize_rows, Tensor};
+use crate::util::Rng;
+
+/// Targets for one query set against one clustering.
+#[derive(Clone, Debug)]
+pub struct PreparedTargets {
+    pub x: Tensor, // [N, d] unit-norm queries
+    pub gt: GroundTruth,
+}
+
+/// A fully prepared dataset: keys, clustering, train/val targets.
+pub struct Dataset {
+    pub name: String,
+    pub keys: Tensor, // [n, d]
+    pub c: usize,
+    /// key -> cluster (all zeros when c == 1)
+    pub assign: Vec<u32>,
+    /// [c, d] cluster centroids (the routing baseline's scoring table)
+    pub centroids: Tensor,
+    pub train: PreparedTargets,
+    pub val: PreparedTargets,
+}
+
+/// Options for dataset preparation.
+#[derive(Clone, Debug)]
+pub struct PrepareOpts {
+    pub c: usize,
+    /// Augmentation multiplier for train queries (paper: 5–100x).
+    pub augment: usize,
+    /// Gaussian augmentation std (paper: 0.02).
+    pub aug_sigma: f32,
+    /// Validation queries held out from the base query pool.
+    pub val_queries: usize,
+    /// k-means restarts; the most size-balanced clustering wins (Sec 4.3).
+    pub kmeans_restarts: usize,
+    pub seed: u64,
+}
+
+impl Default for PrepareOpts {
+    fn default() -> Self {
+        PrepareOpts {
+            c: 1,
+            augment: 4,
+            aug_sigma: 0.02,
+            val_queries: 1000,
+            kmeans_restarts: 3,
+            seed: 0xA11CE,
+        }
+    }
+}
+
+/// Expand `base` queries by `factor` noisy copies each (plus the original)
+/// and renormalize to the unit sphere.
+pub fn augment_queries(base: &Tensor, factor: usize, sigma: f32, seed: u64) -> Tensor {
+    let (n, d) = (base.rows(), base.row_width());
+    let copies = factor.max(1);
+    let mut out = Tensor::zeros(&[n * copies, d]);
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        for c in 0..copies {
+            let row_idx = i * copies + c;
+            let src = base.row(i).to_vec();
+            let dst = out.row_mut(row_idx);
+            dst.copy_from_slice(&src);
+            if c > 0 {
+                for v in dst.iter_mut() {
+                    *v += rng.normal() as f32 * sigma;
+                }
+            }
+        }
+    }
+    normalize_rows(&mut out);
+    out
+}
+
+impl Dataset {
+    /// Full preparation pipeline from a corpus spec.
+    pub fn prepare(spec: &CorpusSpec, opts: &PrepareOpts) -> Dataset {
+        let corpus = SynthCorpus::generate(spec);
+        Self::prepare_from_corpus(corpus, opts)
+    }
+
+    pub fn prepare_from_corpus(corpus: SynthCorpus, opts: &PrepareOpts) -> Dataset {
+        let d = corpus.keys.row_width();
+        // --- clustering --------------------------------------------------
+        let (assign, centroids) = if opts.c > 1 {
+            let km = KMeans::fit_best_balance(
+                &corpus.keys,
+                opts.c,
+                25,
+                opts.kmeans_restarts,
+                opts.seed ^ 0xC1u64,
+            );
+            (km.assign, km.centroids)
+        } else {
+            (
+                vec![0u32; corpus.keys.rows()],
+                Tensor::zeros(&[1, d]), // unused for c=1
+            )
+        };
+
+        // --- query split + augmentation ----------------------------------
+        let nq = corpus.queries.rows();
+        let val_n = opts.val_queries.min(nq / 4).max(1);
+        let train_base_idx: Vec<usize> = (0..nq - val_n).collect();
+        let val_idx: Vec<usize> = (nq - val_n..nq).collect();
+        let train_base = corpus.queries.gather_rows(&train_base_idx);
+        let val_x = corpus.queries.gather_rows(&val_idx);
+        let train_x = augment_queries(&train_base, opts.augment, opts.aug_sigma, opts.seed ^ 0xA6);
+
+        // --- exact targets ------------------------------------------------
+        let assign_opt = if opts.c > 1 { Some(&assign[..]) } else { None };
+        let train_gt = ground_truth::compute(&train_x, &corpus.keys, opts.c.max(1), assign_opt);
+        let val_gt = ground_truth::compute(&val_x, &corpus.keys, opts.c.max(1), assign_opt);
+
+        Dataset {
+            name: corpus.spec.name.clone(),
+            keys: corpus.keys,
+            c: opts.c.max(1),
+            assign,
+            centroids,
+            train: PreparedTargets {
+                x: train_x,
+                gt: train_gt,
+            },
+            val: PreparedTargets {
+                x: val_x,
+                gt: val_gt,
+            },
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.keys.row_width()
+    }
+
+    pub fn n_keys(&self) -> usize {
+        self.keys.rows()
+    }
+
+    /// Materialize a training batch for the AOT train step:
+    /// x [B,d], y_star [B,c,d], sigma [B,c] — flattened row-major.
+    pub fn batch(
+        &self,
+        targets: &PreparedTargets,
+        indices: &[usize],
+        x: &mut Vec<f32>,
+        y_star: &mut Vec<f32>,
+        sigma: &mut Vec<f32>,
+    ) {
+        let d = self.d();
+        let c = self.c;
+        x.clear();
+        y_star.clear();
+        sigma.clear();
+        x.reserve(indices.len() * d);
+        y_star.reserve(indices.len() * c * d);
+        sigma.reserve(indices.len() * c);
+        for &q in indices {
+            x.extend_from_slice(targets.x.row(q));
+            for j in 0..c {
+                let k = targets.gt.idx(q, j);
+                y_star.extend_from_slice(self.keys.row(k));
+                sigma.push(targets.gt.score(q, j));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dot;
+
+    fn small_spec() -> CorpusSpec {
+        CorpusSpec {
+            name: "unit".into(),
+            n_keys: 300,
+            d: 16,
+            n_queries: 80,
+            shift: 0.5,
+            spread: 2.0,
+            modes: 6,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn augment_expands_and_normalizes() {
+        let mut base = Tensor::zeros(&[4, 8]);
+        Rng::new(1).fill_normal(base.data_mut(), 1.0);
+        normalize_rows(&mut base);
+        let aug = augment_queries(&base, 3, 0.05, 2);
+        assert_eq!(aug.shape(), &[12, 8]);
+        for i in 0..12 {
+            let n = dot(aug.row(i), aug.row(i)).sqrt();
+            assert!((n - 1.0).abs() < 1e-4);
+        }
+        // first copy of each is the original
+        assert_eq!(aug.row(0), base.row(0));
+        assert_ne!(aug.row(1), base.row(0));
+    }
+
+    #[test]
+    fn prepare_c1_shapes() {
+        let ds = Dataset::prepare(
+            &small_spec(),
+            &PrepareOpts {
+                c: 1,
+                augment: 2,
+                val_queries: 10,
+                ..Default::default()
+            },
+        );
+        assert_eq!(ds.c, 1);
+        assert_eq!(ds.val.x.rows(), 10);
+        assert_eq!(ds.train.x.rows(), 70 * 2);
+        assert_eq!(ds.train.gt.n_queries(), 140);
+    }
+
+    #[test]
+    fn prepare_clustered_consistent() {
+        let ds = Dataset::prepare(
+            &small_spec(),
+            &PrepareOpts {
+                c: 4,
+                augment: 1,
+                val_queries: 8,
+                ..Default::default()
+            },
+        );
+        assert_eq!(ds.c, 4);
+        assert_eq!(ds.assign.len(), 300);
+        assert!(ds.assign.iter().all(|&a| a < 4));
+        assert_eq!(ds.centroids.shape(), &[4, 16]);
+        // gt best key of cluster j must live in cluster j
+        for q in 0..ds.val.gt.n_queries() {
+            for j in 0..4 {
+                assert_eq!(ds.assign[ds.val.gt.idx(q, j)] as usize, j);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_materialization_matches_gt() {
+        let ds = Dataset::prepare(
+            &small_spec(),
+            &PrepareOpts {
+                c: 2,
+                augment: 1,
+                val_queries: 8,
+                ..Default::default()
+            },
+        );
+        let (mut x, mut y, mut s) = (Vec::new(), Vec::new(), Vec::new());
+        ds.batch(&ds.val, &[0, 3], &mut x, &mut y, &mut s);
+        let d = ds.d();
+        assert_eq!(x.len(), 2 * d);
+        assert_eq!(y.len(), 2 * 2 * d);
+        assert_eq!(s.len(), 2 * 2);
+        // sigma must equal <x, y*> for each (query, cluster)
+        for (bi, &q) in [0usize, 3].iter().enumerate() {
+            for j in 0..2 {
+                let xrow = &x[bi * d..(bi + 1) * d];
+                let yrow = &y[(bi * 2 + j) * d..(bi * 2 + j + 1) * d];
+                let got: f32 = xrow.iter().zip(yrow).map(|(a, b)| a * b).sum();
+                assert!((got - s[bi * 2 + j]).abs() < 1e-4);
+                assert_eq!(s[bi * 2 + j], ds.val.gt.score(q, j));
+            }
+        }
+    }
+}

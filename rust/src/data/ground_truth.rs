@@ -1,0 +1,200 @@
+//! Exact-MIPS ground-truth generation (paper Sec. 3.3): for every query,
+//! the per-cluster optimal key index and support value
+//!
+//! ```text
+//! y*_{i,j} = argmax_{y in Y_j} <x_i, y>,   sigma_j(x_i) = <x_i, y*_{i,j}>.
+//! ```
+//!
+//! One fused scan per query computes all clusters simultaneously: the
+//! O(n·d) dot products dominate, the per-cluster bookkeeping is O(n).
+//! Parallel over queries; single-pass; deterministic ties (lowest index).
+
+use crate::tensor::{dot, Tensor};
+use crate::util::threads::parallel_chunks;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Per-query, per-cluster optima.
+#[derive(Clone, Debug)]
+pub struct GroundTruth {
+    pub c: usize,
+    /// [n_queries * c] best key index per (query, cluster).
+    pub best_idx: Vec<u32>,
+    /// [n_queries * c] support value per (query, cluster).
+    pub sigma: Vec<f32>,
+}
+
+impl GroundTruth {
+    pub fn n_queries(&self) -> usize {
+        if self.c == 0 {
+            0
+        } else {
+            self.best_idx.len() / self.c
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, q: usize, j: usize) -> usize {
+        self.best_idx[q * self.c + j] as usize
+    }
+
+    #[inline]
+    pub fn score(&self, q: usize, j: usize) -> f32 {
+        self.sigma[q * self.c + j]
+    }
+
+    /// Global top-1 key for query `q` (argmax over clusters).
+    pub fn global_top1(&self, q: usize) -> (usize, f32) {
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for j in 0..self.c {
+            let s = self.score(q, j);
+            if s > best.1 {
+                best = (self.idx(q, j), s);
+            }
+        }
+        best
+    }
+
+    /// Cluster containing the global top-1 key.
+    pub fn top_cluster(&self, q: usize) -> usize {
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for j in 0..self.c {
+            let s = self.score(q, j);
+            if s > best.1 {
+                best = (j, s);
+            }
+        }
+        best.0
+    }
+}
+
+/// Compute per-cluster exact tops. `assign[k]` maps key k -> cluster id in
+/// [0, c). For the unclustered case pass `c = 1` and `assign = None`.
+pub fn compute(queries: &Tensor, keys: &Tensor, c: usize, assign: Option<&[u32]>) -> GroundTruth {
+    let nq = queries.rows();
+    let n = keys.rows();
+    let d = keys.row_width();
+    assert_eq!(queries.row_width(), d);
+    if let Some(a) = assign {
+        assert_eq!(a.len(), n);
+        debug_assert!(a.iter().all(|&x| (x as usize) < c));
+    } else {
+        assert_eq!(c, 1);
+    }
+
+    let best_idx: Vec<AtomicUsize> = (0..nq * c).map(|_| AtomicUsize::new(0)).collect();
+    // f32 bits stored as usize atomics to avoid locks; written once per
+    // (q, j) by exactly one worker, so plain stores are fine.
+    let sigma_bits: Vec<AtomicUsize> = (0..nq * c)
+        .map(|_| AtomicUsize::new(f32::NEG_INFINITY.to_bits() as usize))
+        .collect();
+
+    parallel_chunks(nq, 32, |_, q0, q1| {
+        let mut local_val = vec![f32::NEG_INFINITY; c];
+        let mut local_idx = vec![0u32; c];
+        for q in q0..q1 {
+            local_val.iter_mut().for_each(|v| *v = f32::NEG_INFINITY);
+            local_idx.iter_mut().for_each(|v| *v = 0);
+            let qr = queries.row(q);
+            for k in 0..n {
+                let s = dot(qr, keys.row(k));
+                let j = assign.map_or(0, |a| a[k] as usize);
+                if s > local_val[j] {
+                    local_val[j] = s;
+                    local_idx[j] = k as u32;
+                }
+            }
+            for j in 0..c {
+                best_idx[q * c + j].store(local_idx[j] as usize, Ordering::Relaxed);
+                sigma_bits[q * c + j].store(local_val[j].to_bits() as usize, Ordering::Relaxed);
+            }
+        }
+    });
+
+    GroundTruth {
+        c,
+        best_idx: best_idx
+            .into_iter()
+            .map(|a| a.into_inner() as u32)
+            .collect(),
+        sigma: sigma_bits
+            .into_iter()
+            .map(|a| f32::from_bits(a.into_inner() as u32))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    #[test]
+    fn matches_bruteforce_single_cluster() {
+        let q = randt(&[13, 24], 1);
+        let k = randt(&[101, 24], 2);
+        let gt = compute(&q, &k, 1, None);
+        for i in 0..13 {
+            let mut best = (0usize, f32::NEG_INFINITY);
+            for j in 0..101 {
+                let s = dot(q.row(i), k.row(j));
+                if s > best.1 {
+                    best = (j, s);
+                }
+            }
+            assert_eq!(gt.idx(i, 0), best.0);
+            assert!((gt.score(i, 0) - best.1).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn per_cluster_tops_partition_correctly() {
+        let q = randt(&[9, 16], 3);
+        let k = randt(&[60, 16], 4);
+        let assign: Vec<u32> = (0..60).map(|i| (i % 4) as u32).collect();
+        let gt = compute(&q, &k, 4, Some(&assign));
+        for i in 0..9 {
+            for j in 0..4 {
+                // the reported best must belong to cluster j …
+                assert_eq!(assign[gt.idx(i, j)] as usize, j);
+                // … and beat every other member of cluster j.
+                for m in 0..60 {
+                    if assign[m] as usize == j {
+                        assert!(dot(q.row(i), k.row(m)) <= gt.score(i, j) + 1e-5);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn global_top1_consistent_with_flat() {
+        let q = randt(&[5, 8], 5);
+        let k = randt(&[40, 8], 6);
+        let assign: Vec<u32> = (0..40).map(|i| (i % 3) as u32).collect();
+        let clustered = compute(&q, &k, 3, Some(&assign));
+        let flat = compute(&q, &k, 1, None);
+        for i in 0..5 {
+            let (gi, gs) = clustered.global_top1(i);
+            assert_eq!(gi, flat.idx(i, 0));
+            assert!((gs - flat.score(i, 0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn top_cluster_contains_top_key() {
+        let q = randt(&[7, 8], 8);
+        let k = randt(&[50, 8], 9);
+        let assign: Vec<u32> = (0..50).map(|i| (i % 5) as u32).collect();
+        let gt = compute(&q, &k, 5, Some(&assign));
+        for i in 0..7 {
+            let (gidx, _) = gt.global_top1(i);
+            assert_eq!(assign[gidx] as usize, gt.top_cluster(i));
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Data pipeline: synthetic BEIR-like corpora, query augmentation, and
+//! exact-MIPS ground-truth target generation (paper Sec. 3.3 / 4.1).
+
+pub mod dataset;
+pub mod ground_truth;
+pub mod synth;
+
+pub use dataset::{Dataset, PreparedTargets};
+pub use synth::{CorpusSpec, SynthCorpus};

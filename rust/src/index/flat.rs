@@ -1,0 +1,126 @@
+//! Exhaustive (flat) MIPS index: the exact baseline every approximate
+//! backbone is measured against, and the "exact search within selected
+//! clusters" stage of the routing experiments (Sec. 4.3).
+
+use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
+use crate::tensor::{dot, Tensor};
+
+/// Brute-force scan over all keys.
+pub struct FlatIndex {
+    keys: Tensor, // [n, d]
+}
+
+impl FlatIndex {
+    pub fn new(keys: Tensor) -> Self {
+        FlatIndex { keys }
+    }
+
+    pub fn keys(&self) -> &Tensor {
+        &self.keys
+    }
+
+    pub fn d(&self) -> usize {
+        self.keys.row_width()
+    }
+
+    /// Exact top-k over an explicit subset of key ids (cluster scan).
+    pub fn search_subset(&self, query: &[f32], ids: &[u32], k: usize) -> SearchResult {
+        let d = self.d();
+        let mut top = TopK::new(k);
+        for &id in ids {
+            top.push(dot(query, self.keys.row(id as usize)), id);
+        }
+        let (ids_out, scores) = top.into_sorted();
+        SearchResult {
+            ids: ids_out,
+            scores,
+            cost: SearchCost {
+                flops: (ids.len() * d * 2) as u64,
+                keys_scanned: ids.len() as u64,
+                cells_probed: 0,
+            },
+        }
+    }
+}
+
+impl VectorIndex for FlatIndex {
+    fn name(&self) -> &str {
+        "flat"
+    }
+
+    fn len(&self) -> usize {
+        self.keys.rows()
+    }
+
+    fn search(&self, query: &[f32], k: usize, _nprobe: usize) -> SearchResult {
+        let n = self.len();
+        let d = self.d();
+        let mut top = TopK::new(k);
+        for id in 0..n {
+            top.push(dot(query, self.keys.row(id)), id as u32);
+        }
+        let (ids, scores) = top.into_sorted();
+        SearchResult {
+            ids,
+            scores,
+            cost: SearchCost {
+                flops: (n * d * 2) as u64,
+                keys_scanned: n as u64,
+                cells_probed: 0,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    #[test]
+    fn finds_exact_top1() {
+        let keys = randt(&[200, 16], 1);
+        let idx = FlatIndex::new(keys.clone());
+        let q = randt(&[1, 16], 2);
+        let res = idx.search(q.row(0), 1, 0);
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for i in 0..200 {
+            let s = dot(q.row(0), keys.row(i));
+            if s > best.1 {
+                best = (i, s);
+            }
+        }
+        assert_eq!(res.ids[0] as usize, best.0);
+        assert!((res.scores[0] - best.1).abs() < 1e-5);
+        assert_eq!(res.cost.keys_scanned, 200);
+    }
+
+    #[test]
+    fn topk_sorted_descending() {
+        let keys = randt(&[100, 8], 3);
+        let idx = FlatIndex::new(keys);
+        let q = randt(&[1, 8], 4);
+        let res = idx.search(q.row(0), 10, 0);
+        assert_eq!(res.ids.len(), 10);
+        for w in res.scores.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn subset_search_restricts() {
+        let keys = randt(&[50, 8], 5);
+        let idx = FlatIndex::new(keys);
+        let q = randt(&[1, 8], 6);
+        let subset: Vec<u32> = vec![3, 9, 14];
+        let res = idx.search_subset(q.row(0), &subset, 2);
+        assert!(res.ids.iter().all(|id| subset.contains(id)));
+        assert_eq!(res.cost.keys_scanned, 3);
+    }
+}

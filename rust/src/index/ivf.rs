@@ -1,0 +1,203 @@
+//! IVF-Flat: the FAISS-IVF analog used in the headline integration
+//! experiment (Sec. 4.4, Fig. 5).
+//!
+//! Build: spherical k-means over the keys -> `nlist` Voronoi cells with
+//! contiguous per-cell key storage (cache-friendly scans). Query: score
+//! the query against all centroids, take the `nprobe` best cells, scan
+//! their members exhaustively. Swapping the query vector for KeyNet's
+//! ŷ(x) — and nothing else — is the paper's drop-in integration.
+
+use crate::index::kmeans::KMeans;
+use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
+use crate::tensor::{dot, Tensor};
+
+pub struct IvfIndex {
+    pub nlist: usize,
+    d: usize,
+    centroids: Tensor, // [nlist, d]
+    /// Keys regrouped contiguously by cell.
+    packed: Tensor, // [n, d]
+    /// Original key id for each packed row.
+    ids: Vec<u32>,
+    /// Cell start offsets into `packed`/`ids` (len = nlist + 1).
+    offsets: Vec<usize>,
+}
+
+impl IvfIndex {
+    /// Build from raw keys. `nlist` cells, `iters` Lloyd iterations.
+    pub fn build(keys: &Tensor, nlist: usize, iters: usize, seed: u64) -> IvfIndex {
+        let km = KMeans::fit(keys, nlist, iters, seed);
+        Self::from_clustering(keys, km.centroids, &km.assign)
+    }
+
+    /// Build from an existing clustering (shared with routing experiments).
+    pub fn from_clustering(keys: &Tensor, centroids: Tensor, assign: &[u32]) -> IvfIndex {
+        let n = keys.rows();
+        let d = keys.row_width();
+        let nlist = centroids.rows();
+        assert_eq!(assign.len(), n);
+        let mut counts = vec![0usize; nlist];
+        for &a in assign {
+            counts[a as usize] += 1;
+        }
+        let mut offsets = vec![0usize; nlist + 1];
+        for j in 0..nlist {
+            offsets[j + 1] = offsets[j] + counts[j];
+        }
+        let mut cursor = offsets.clone();
+        let mut packed = Tensor::zeros(&[n, d]);
+        let mut ids = vec![0u32; n];
+        for i in 0..n {
+            let cell = assign[i] as usize;
+            let pos = cursor[cell];
+            cursor[cell] += 1;
+            packed.row_mut(pos).copy_from_slice(keys.row(i));
+            ids[pos] = i as u32;
+        }
+        IvfIndex {
+            nlist,
+            d,
+            centroids,
+            packed,
+            ids,
+            offsets,
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn centroids(&self) -> &Tensor {
+        &self.centroids
+    }
+
+    pub fn cell_len(&self, j: usize) -> usize {
+        self.offsets[j + 1] - self.offsets[j]
+    }
+
+    /// Rank cells by centroid score (descending), returning the top
+    /// `nprobe` cell ids. Cost: nlist * d multiply-adds.
+    pub fn rank_cells(&self, query: &[f32], nprobe: usize) -> Vec<u32> {
+        let mut top = TopK::new(nprobe.max(1).min(self.nlist));
+        for j in 0..self.nlist {
+            top.push(dot(query, self.centroids.row(j)), j as u32);
+        }
+        top.into_sorted().0
+    }
+
+    /// Scan an explicit list of cells, maintaining a shared TopK.
+    fn scan_cells(&self, query: &[f32], cells: &[u32], top: &mut TopK) -> u64 {
+        let mut scanned = 0u64;
+        for &cell in cells {
+            let (s, e) = (self.offsets[cell as usize], self.offsets[cell as usize + 1]);
+            for pos in s..e {
+                top.push(dot(query, self.packed.row(pos)), self.ids[pos]);
+            }
+            scanned += (e - s) as u64;
+        }
+        scanned
+    }
+}
+
+impl VectorIndex for IvfIndex {
+    fn name(&self) -> &str {
+        "ivf"
+    }
+
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn search(&self, query: &[f32], k: usize, nprobe: usize) -> SearchResult {
+        let nprobe = nprobe.clamp(1, self.nlist);
+        let cells = self.rank_cells(query, nprobe);
+        let mut top = TopK::new(k);
+        let scanned = self.scan_cells(query, &cells, &mut top);
+        let (ids, scores) = top.into_sorted();
+        SearchResult {
+            ids,
+            scores,
+            cost: SearchCost {
+                flops: (self.nlist as u64 + scanned) * self.d as u64 * 2,
+                keys_scanned: scanned,
+                cells_probed: nprobe as u64,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::flat::FlatIndex;
+    use crate::tensor::normalize_rows;
+    use crate::util::Rng;
+
+    fn unit_keys(n: usize, d: usize, seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(&[n, d]);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        normalize_rows(&mut t);
+        t
+    }
+
+    #[test]
+    fn full_probe_matches_flat() {
+        let keys = unit_keys(400, 16, 1);
+        let ivf = IvfIndex::build(&keys, 8, 10, 2);
+        let flat = FlatIndex::new(keys.clone());
+        let q = unit_keys(10, 16, 3);
+        for i in 0..10 {
+            let a = ivf.search(q.row(i), 5, 8); // probe all cells
+            let b = flat.search(q.row(i), 5, 0);
+            assert_eq!(a.ids, b.ids, "query {i}");
+        }
+    }
+
+    #[test]
+    fn packed_rows_preserve_keys() {
+        let keys = unit_keys(100, 8, 4);
+        let ivf = IvfIndex::build(&keys, 4, 8, 5);
+        // every original key must appear exactly once in packed storage
+        let mut seen = vec![false; 100];
+        for pos in 0..100 {
+            let id = ivf.ids[pos] as usize;
+            assert!(!seen[id]);
+            seen[id] = true;
+            assert_eq!(ivf.packed.row(pos), keys.row(id));
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn recall_improves_with_nprobe() {
+        let keys = unit_keys(600, 16, 6);
+        let ivf = IvfIndex::build(&keys, 16, 10, 7);
+        let flat = FlatIndex::new(keys.clone());
+        let q = unit_keys(50, 16, 8);
+        let mut hits = vec![0usize; 3];
+        for i in 0..50 {
+            let truth = flat.search(q.row(i), 1, 0).ids[0];
+            for (pi, np) in [1usize, 4, 16].iter().enumerate() {
+                if ivf.search(q.row(i), 1, *np).ids.first() == Some(&truth) {
+                    hits[pi] += 1;
+                }
+            }
+        }
+        assert!(hits[0] <= hits[1] && hits[1] <= hits[2], "{hits:?}");
+        assert_eq!(hits[2], 50); // full probe is exact
+    }
+
+    #[test]
+    fn cost_accounting_scales_with_nprobe() {
+        let keys = unit_keys(300, 8, 9);
+        let ivf = IvfIndex::build(&keys, 10, 8, 10);
+        let q = unit_keys(1, 8, 11);
+        let c1 = ivf.search(q.row(0), 1, 1).cost;
+        let c5 = ivf.search(q.row(0), 1, 5).cost;
+        assert!(c5.keys_scanned > c1.keys_scanned);
+        assert_eq!(c1.cells_probed, 1);
+        assert_eq!(c5.cells_probed, 5);
+        assert!(c5.flops > c1.flops);
+    }
+}

@@ -1,0 +1,237 @@
+//! Spherical k-means: the coarse quantizer for every IVF-family backbone
+//! and the database partitioner for the routing experiments (Sec. 4.3).
+//!
+//! k-means++ seeding, Lloyd iterations with centroid renormalization
+//! (inner-product assignment on unit-norm data == cosine k-means), empty
+//! clusters re-seeded from the farthest points. `fit_best_balance` runs
+//! several restarts and keeps the most size-balanced clustering, exactly
+//! as the paper does ("select the clustering which yields the most even
+//! cluster sizes").
+
+use crate::tensor::{dot, normalize_rows, Tensor};
+use crate::util::threads::parallel_chunks;
+use crate::util::Rng;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Fitted clustering.
+pub struct KMeans {
+    pub centroids: Tensor, // [c, d]
+    pub assign: Vec<u32>,  // [n]
+    pub sizes: Vec<usize>, // [c]
+}
+
+impl KMeans {
+    /// Lloyd's algorithm with k-means++ init on inner-product similarity.
+    pub fn fit(x: &Tensor, c: usize, iters: usize, seed: u64) -> KMeans {
+        let n = x.rows();
+        let d = x.row_width();
+        assert!(c >= 1 && c <= n, "c={c} n={n}");
+        let mut rng = Rng::new(seed);
+
+        // --- k-means++ seeding (distance = 2 - 2<x, c> on unit sphere) --
+        let mut centroids = Tensor::zeros(&[c, d]);
+        let first = rng.below(n);
+        centroids.row_mut(0).copy_from_slice(x.row(first));
+        let mut d2 = vec![f32::MAX; n];
+        for ci in 1..c {
+            let prev = centroids.row(ci - 1).to_vec();
+            let mut total = 0.0f64;
+            for i in 0..n {
+                let dist = (2.0 - 2.0 * dot(x.row(i), &prev)).max(0.0);
+                if dist < d2[i] {
+                    d2[i] = dist;
+                }
+                total += d2[i] as f64;
+            }
+            let mut r = rng.uniform() * total;
+            let mut pick = n - 1;
+            for i in 0..n {
+                r -= d2[i] as f64;
+                if r <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            centroids.row_mut(ci).copy_from_slice(x.row(pick));
+        }
+
+        // --- Lloyd iterations --------------------------------------------
+        let mut assign = vec![0u32; n];
+        for _ in 0..iters {
+            // assignment (parallel)
+            let assign_atomic: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+            parallel_chunks(n, 256, |_, i0, i1| {
+                for i in i0..i1 {
+                    let xi = x.row(i);
+                    let mut best = (0u32, f32::NEG_INFINITY);
+                    for j in 0..c {
+                        let s = dot(xi, centroids.row(j));
+                        if s > best.1 {
+                            best = (j as u32, s);
+                        }
+                    }
+                    assign_atomic[i].store(best.0, Ordering::Relaxed);
+                }
+            });
+            let new_assign: Vec<u32> = assign_atomic.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+            let changed = new_assign
+                .iter()
+                .zip(&assign)
+                .filter(|(a, b)| a != b)
+                .count();
+            assign = new_assign;
+
+            // update
+            let mut sums = Tensor::zeros(&[c, d]);
+            let mut counts = vec![0usize; c];
+            for i in 0..n {
+                let j = assign[i] as usize;
+                counts[j] += 1;
+                let row = sums.row_mut(j);
+                for (a, b) in row.iter_mut().zip(x.row(i)) {
+                    *a += b;
+                }
+            }
+            for j in 0..c {
+                if counts[j] == 0 {
+                    // re-seed an empty cluster from a random point
+                    let pick = rng.below(n);
+                    sums.row_mut(j).copy_from_slice(x.row(pick));
+                    counts[j] = 1;
+                }
+            }
+            centroids = sums;
+            normalize_rows(&mut centroids);
+
+            if changed == 0 {
+                break;
+            }
+        }
+
+        let mut sizes = vec![0usize; c];
+        for &a in &assign {
+            sizes[a as usize] += 1;
+        }
+        KMeans {
+            centroids,
+            assign,
+            sizes,
+        }
+    }
+
+    /// Balance metric in [0,1]: 1 = perfectly even sizes.
+    pub fn balance(&self) -> f64 {
+        let n: usize = self.sizes.iter().sum();
+        let c = self.sizes.len();
+        if n == 0 || c == 0 {
+            return 0.0;
+        }
+        let ideal = n as f64 / c as f64;
+        let mad = self
+            .sizes
+            .iter()
+            .map(|&s| (s as f64 - ideal).abs())
+            .sum::<f64>()
+            / c as f64;
+        (1.0 - mad / ideal).max(0.0)
+    }
+
+    /// Run `restarts` independent fits; keep the most size-balanced one
+    /// (paper Sec. 4.3).
+    pub fn fit_best_balance(x: &Tensor, c: usize, iters: usize, restarts: usize, seed: u64) -> KMeans {
+        let mut best: Option<KMeans> = None;
+        for r in 0..restarts.max(1) {
+            let km = Self::fit(x, c, iters, seed.wrapping_add(r as u64 * 0x9E37));
+            if best.as_ref().map_or(true, |b| km.balance() > b.balance()) {
+                best = Some(km);
+            }
+        }
+        best.unwrap()
+    }
+
+    /// Inverted lists: cluster -> member key ids.
+    pub fn inverted_lists(&self) -> Vec<Vec<u32>> {
+        let mut lists = vec![Vec::new(); self.centroids.rows()];
+        for (i, &a) in self.assign.iter().enumerate() {
+            lists[a as usize].push(i as u32);
+        }
+        lists
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated directions on the sphere.
+    fn clustered_data(n_per: usize, seed: u64) -> Tensor {
+        let d = 16;
+        let mut rng = Rng::new(seed);
+        let mut centers = Tensor::zeros(&[3, d]);
+        centers.row_mut(0)[0] = 1.0;
+        centers.row_mut(1)[5] = 1.0;
+        centers.row_mut(2)[11] = 1.0;
+        let mut x = Tensor::zeros(&[3 * n_per, d]);
+        for i in 0..3 * n_per {
+            let c = i % 3;
+            let row = x.row_mut(i);
+            row.copy_from_slice(centers.row(c));
+            for v in row.iter_mut() {
+                *v += rng.normal() as f32 * 0.05;
+            }
+        }
+        normalize_rows(&mut x);
+        x
+    }
+
+    #[test]
+    fn recovers_separated_clusters() {
+        let x = clustered_data(60, 1);
+        let km = KMeans::fit(&x, 3, 20, 2);
+        // members generated from the same center must share a label
+        for base in 0..3 {
+            let label = km.assign[base];
+            for i in 0..60 {
+                assert_eq!(km.assign[base + 3 * i], label, "i={i}");
+            }
+        }
+        assert!(km.balance() > 0.95);
+    }
+
+    #[test]
+    fn centroids_unit_norm() {
+        let x = clustered_data(40, 3);
+        let km = KMeans::fit(&x, 3, 10, 4);
+        for j in 0..3 {
+            let n = dot(km.centroids.row(j), km.centroids.row(j)).sqrt();
+            assert!((n - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sizes_sum_to_n() {
+        let x = clustered_data(30, 5);
+        let km = KMeans::fit(&x, 5, 10, 6);
+        assert_eq!(km.sizes.iter().sum::<usize>(), 90);
+        assert_eq!(km.inverted_lists().iter().map(Vec::len).sum::<usize>(), 90);
+    }
+
+    #[test]
+    fn best_balance_at_least_single_run() {
+        let x = clustered_data(30, 7);
+        let single = KMeans::fit(&x, 4, 10, 100);
+        let multi = KMeans::fit_best_balance(&x, 4, 10, 4, 100);
+        assert!(multi.balance() >= single.balance() - 1e-9);
+    }
+
+    #[test]
+    fn inverted_lists_consistent_with_assign() {
+        let x = clustered_data(20, 9);
+        let km = KMeans::fit(&x, 3, 8, 10);
+        for (j, list) in km.inverted_lists().iter().enumerate() {
+            for &id in list {
+                assert_eq!(km.assign[id as usize] as usize, j);
+            }
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! LeanVec-analog backbone (Tepper et al. 2023): learn a linear
+//! projection that preserves inner products, search an IVF index in the
+//! reduced space, then re-rank candidates with full-dimension scores.
+//!
+//! The projection here is PCA over the keys (the canonical
+//! inner-product-distortion minimizer for centered data); LeanVec's
+//! query-aware refinement is approximated by optionally fitting PCA on
+//! the union of keys and sample queries.
+
+use crate::index::ivf::IvfIndex;
+use crate::index::traits::{SearchResult, TopK, VectorIndex};
+use crate::tensor::{dot, pca_project, power_iteration_pca, Tensor};
+
+pub struct LeanVecIndex {
+    d: usize,
+    d_low: usize,
+    comps: Tensor,  // [d_low, d]
+    mean: Vec<f32>, // [d]
+    inner: IvfIndex,
+    keys: Tensor, // full-dim keys for re-ranking
+    pub rerank: usize,
+}
+
+impl LeanVecIndex {
+    /// Build with target dimension `d_low`; optional `queries` sample
+    /// makes the projection query-aware.
+    pub fn build(
+        keys: &Tensor,
+        d_low: usize,
+        nlist: usize,
+        queries: Option<&Tensor>,
+        seed: u64,
+    ) -> LeanVecIndex {
+        let d = keys.row_width();
+        assert!(d_low <= d);
+        // Fit the projection (query-aware if a sample is given).
+        let fit_on = match queries {
+            Some(q) => {
+                let mut joint = Tensor::zeros(&[keys.rows() + q.rows(), d]);
+                joint.data_mut()[..keys.len()].copy_from_slice(keys.data());
+                joint.data_mut()[keys.len()..].copy_from_slice(q.data());
+                joint
+            }
+            None => keys.clone(),
+        };
+        let (comps, mean) = power_iteration_pca(&fit_on, d_low, 20, seed);
+        let low_keys = pca_project(keys, &comps, &mean);
+        let inner = IvfIndex::build(&low_keys, nlist, 15, seed ^ 0x1EA);
+        LeanVecIndex {
+            d,
+            d_low,
+            comps,
+            mean,
+            inner,
+            keys: keys.clone(),
+            rerank: 32,
+        }
+    }
+
+    fn project(&self, query: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.d_low];
+        for c in 0..self.d_low {
+            let v = self.comps.row(c);
+            out[c] = dot(query, v) - dot(&self.mean, v);
+        }
+        out
+    }
+}
+
+impl VectorIndex for LeanVecIndex {
+    fn name(&self) -> &str {
+        "leanvec"
+    }
+
+    fn len(&self) -> usize {
+        self.keys.rows()
+    }
+
+    fn search(&self, query: &[f32], k: usize, nprobe: usize) -> SearchResult {
+        // 1. project the query (d * d_low multiply-adds)
+        let q_low = self.project(query);
+        // 2. search in the reduced space for rerank candidates
+        let cand = self.inner.search(&q_low, self.rerank.max(k), nprobe);
+        // 3. exact full-dim re-rank
+        let mut top = TopK::new(k);
+        for &id in &cand.ids {
+            top.push(dot(query, self.keys.row(id as usize)), id);
+        }
+        let (ids, scores) = top.into_sorted();
+        let mut cost = cand.cost;
+        cost.flops += (self.d * self.d_low * 2) as u64; // projection
+        cost.flops += (cand.ids.len() * self.d * 2) as u64; // re-rank
+        SearchResult { ids, scores, cost }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::flat::FlatIndex;
+    use crate::tensor::normalize_rows;
+    use crate::util::Rng;
+
+    fn unit_keys(n: usize, d: usize, seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(&[n, d]);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        normalize_rows(&mut t);
+        t
+    }
+
+    #[test]
+    fn full_probe_recall_reasonable() {
+        let keys = unit_keys(500, 32, 1);
+        let lv = LeanVecIndex::build(&keys, 16, 10, None, 2);
+        let flat = FlatIndex::new(keys.clone());
+        let q = unit_keys(40, 32, 3);
+        let mut hits = 0;
+        for i in 0..40 {
+            let truth = flat.search(q.row(i), 1, 0).ids[0];
+            if lv.search(q.row(i), 5, 10).ids.contains(&truth) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 32, "recall@5 = {hits}/40");
+    }
+
+    #[test]
+    fn reduced_scan_flops_below_flat() {
+        let keys = unit_keys(600, 64, 4);
+        let lv = LeanVecIndex::build(&keys, 16, 12, None, 5);
+        let q = unit_keys(1, 64, 6);
+        let res = lv.search(q.row(0), 1, 3);
+        let flat_flops = (600 * 64 * 2) as u64;
+        assert!(res.cost.flops < flat_flops);
+    }
+
+    #[test]
+    fn query_aware_projection_builds() {
+        let keys = unit_keys(300, 32, 7);
+        let queries = unit_keys(50, 32, 8);
+        let lv = LeanVecIndex::build(&keys, 8, 6, Some(&queries), 9);
+        let res = lv.search(queries.row(0), 3, 2);
+        assert_eq!(res.ids.len(), 3);
+    }
+}

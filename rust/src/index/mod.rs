@@ -1,0 +1,22 @@
+//! Index substrates: every approximate-search backbone the paper
+//! evaluates KeyNet against (Sec. 4.4, App. A.8), built from scratch.
+//!
+//! * [`flat`] — exhaustive MIPS (ground truth + within-cluster scans)
+//! * [`kmeans`] — spherical k-means (coarse quantizer + dataset partitioner)
+//! * [`ivf`] — FAISS-IVF-Flat analog: coarse cells + `nprobe` scan
+//! * [`pq`] — product quantization (shared by scann)
+//! * [`scann`] — ScaNN analog: IVF + *anisotropic* PQ scoring
+//! * [`soar`] — SOAR analog: IVF with redundant spilled assignments
+//! * [`leanvec`] — LeanVec analog: learned linear projection + IVF,
+//!   full-dim rescoring
+
+pub mod flat;
+pub mod ivf;
+pub mod kmeans;
+pub mod leanvec;
+pub mod pq;
+pub mod scann;
+pub mod soar;
+pub mod traits;
+
+pub use traits::{SearchCost, SearchResult, VectorIndex};

@@ -1,0 +1,184 @@
+//! Common interface for all index backbones. The integration experiments
+//! (Figs. 5, 16–28) swap backbones behind this trait and swap the *query*
+//! between the original `x` and KeyNet's mapped `ŷ(x)` — the index itself
+//! is never modified, which is the paper's drop-in claim.
+
+use crate::tensor::Tensor;
+
+/// Cost accounting for one search call, used for the FLOPs axes of every
+/// Pareto plot. Distances are multiply-add pairs (2 flops each).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SearchCost {
+    /// f32 multiply-adds spent scoring (coarse + fine).
+    pub flops: u64,
+    /// Number of database vectors fully scored.
+    pub keys_scanned: u64,
+    /// Number of coarse cells probed.
+    pub cells_probed: u64,
+}
+
+impl SearchCost {
+    pub fn add(&mut self, other: SearchCost) {
+        self.flops += other.flops;
+        self.keys_scanned += other.keys_scanned;
+        self.cells_probed += other.cells_probed;
+    }
+}
+
+/// Result list for one query: key ids sorted by descending score.
+#[derive(Clone, Debug, Default)]
+pub struct SearchResult {
+    pub ids: Vec<u32>,
+    pub scores: Vec<f32>,
+    pub cost: SearchCost,
+}
+
+/// A maximum-inner-product index over a fixed key set.
+pub trait VectorIndex: Send + Sync {
+    /// Human-readable backbone name ("ivf", "scann", …).
+    fn name(&self) -> &str;
+
+    /// Number of indexed keys.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Top-`k` search with an effort knob (`nprobe` cells for IVF-family
+    /// backbones; ignored by exhaustive search).
+    fn search(&self, query: &[f32], k: usize, nprobe: usize) -> SearchResult;
+
+    /// Batch search (default: loop).
+    fn search_batch(&self, queries: &Tensor, k: usize, nprobe: usize) -> Vec<SearchResult> {
+        (0..queries.rows())
+            .map(|i| self.search(queries.row(i), k, nprobe))
+            .collect()
+    }
+}
+
+/// Keep the `k` largest (score, id) pairs; tiny binary heap on arrays.
+/// Deterministic: ties broken toward lower id.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    /// min-heap by score: heap[0] is the current floor.
+    heap: Vec<(f32, u32)>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        TopK {
+            k: k.max(1),
+            heap: Vec::with_capacity(k.max(1)),
+        }
+    }
+
+    #[inline]
+    fn less(a: (f32, u32), b: (f32, u32)) -> bool {
+        // "smaller" = worse: lower score, or equal score with higher id.
+        a.0 < b.0 || (a.0 == b.0 && a.1 > b.1)
+    }
+
+    #[inline]
+    pub fn floor(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::NEG_INFINITY
+        } else {
+            self.heap[0].0
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, score: f32, id: u32) {
+        if self.heap.len() < self.k {
+            self.heap.push((score, id));
+            let mut i = self.heap.len() - 1;
+            while i > 0 {
+                let p = (i - 1) / 2;
+                if Self::less(self.heap[i], self.heap[p]) {
+                    self.heap.swap(i, p);
+                    i = p;
+                } else {
+                    break;
+                }
+            }
+        } else if Self::less(self.heap[0], (score, id)) {
+            self.heap[0] = (score, id);
+            // sift down
+            let mut i = 0;
+            loop {
+                let (l, r) = (2 * i + 1, 2 * i + 2);
+                let mut m = i;
+                if l < self.heap.len() && Self::less(self.heap[l], self.heap[m]) {
+                    m = l;
+                }
+                if r < self.heap.len() && Self::less(self.heap[r], self.heap[m]) {
+                    m = r;
+                }
+                if m == i {
+                    break;
+                }
+                self.heap.swap(i, m);
+                i = m;
+            }
+        }
+    }
+
+    /// Drain into descending-score order.
+    pub fn into_sorted(mut self) -> (Vec<u32>, Vec<f32>) {
+        self.heap
+            .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        let ids = self.heap.iter().map(|e| e.1).collect();
+        let scores = self.heap.iter().map(|e| e.0).collect();
+        (ids, scores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_keeps_best() {
+        let mut t = TopK::new(3);
+        for (i, s) in [0.1f32, 0.9, 0.5, 0.7, 0.2, 0.8].iter().enumerate() {
+            t.push(*s, i as u32);
+        }
+        let (ids, scores) = t.into_sorted();
+        assert_eq!(ids, vec![1, 5, 3]);
+        assert_eq!(scores, vec![0.9, 0.8, 0.7]);
+    }
+
+    #[test]
+    fn topk_ties_prefer_lower_id() {
+        let mut t = TopK::new(2);
+        t.push(0.5, 7);
+        t.push(0.5, 1);
+        t.push(0.5, 3);
+        let (ids, _) = t.into_sorted();
+        assert_eq!(ids, vec![1, 3]);
+    }
+
+    #[test]
+    fn topk_fewer_than_k() {
+        let mut t = TopK::new(10);
+        t.push(1.0, 0);
+        t.push(2.0, 1);
+        let (ids, scores) = t.into_sorted();
+        assert_eq!(ids, vec![1, 0]);
+        assert_eq!(scores, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn topk_floor_transitions() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.floor(), f32::NEG_INFINITY);
+        t.push(0.3, 0);
+        assert_eq!(t.floor(), f32::NEG_INFINITY);
+        t.push(0.9, 1);
+        assert_eq!(t.floor(), 0.3);
+        t.push(0.5, 2);
+        assert_eq!(t.floor(), 0.5);
+    }
+}

@@ -1,0 +1,41 @@
+//! # AMIPS — Amortized Maximum Inner Product Search
+//!
+//! Rust + JAX + Pallas reproduction of *"Amortizing Maximum Inner Product
+//! Search with Learned Support Functions"* (Olausson et al., 2026).
+//!
+//! Three layers (DESIGN.md):
+//! * **L1** Pallas kernels and **L2** JAX models live under `python/` and
+//!   are AOT-lowered to HLO-text artifacts by `make artifacts`.
+//! * **L3** (this crate) is the runtime system: it loads the artifacts via
+//!   PJRT ([`runtime`]), owns the data pipeline ([`data`]), every index
+//!   substrate the paper evaluates against ([`index`]), the Rust-driven
+//!   training loop ([`trainer`]), the serving coordinator
+//!   ([`coordinator`]), and the metrics/benchmark machinery
+//!   ([`metrics`], [`bench_support`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `amips` binary is self-contained.
+
+pub mod bench_support;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod index;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod trainer;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Default artifacts directory, overridable with `AMIPS_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("AMIPS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,309 @@
+//! `amips` — leader binary: dataset prep, training, evaluation, routing
+//! and a serving demo over the AOT artifacts.
+//!
+//! ```text
+//! amips list                                  # configs + datasets
+//! amips gen-data  --dataset nq-s [--c 10]     # prepare + report a dataset
+//! amips train     --config <name> [--steps N] [--lr F] [--verbose]
+//! amips eval      --config <name> [--steps N] # retrieval metrics on val
+//! amips route     --dataset nq-s --config <name> [--topk 1..5]
+//! amips serve     --config <name> [--requests N] [--nprobe K]
+//! ```
+
+use amips::cli::Args;
+use amips::coordinator::router::{routing_accuracy, AmortizedRouter, CentroidRouter, Router};
+use amips::coordinator::{BatchPolicy, Server, ServerConfig};
+use amips::bench_support::fixtures;
+use amips::bench_support::report::{f, pct, Report};
+use amips::index::ivf::IvfIndex;
+use amips::metrics::{flops, retrieval, transport};
+use amips::runtime::Engine;
+use amips::tensor::Tensor;
+use amips::trainer::{self, TrainOpts};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("list") => cmd_list(),
+        Some("gen-data") => cmd_gen_data(&args),
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("route") => cmd_route(&args),
+        Some("serve") => cmd_serve(&args),
+        Some(other) => bail!("unknown command {other}; try `amips list`"),
+        None => {
+            println!("amips {} — amortized MIPS coordinator", amips::version());
+            println!("commands: list | gen-data | train | eval | route | serve");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_list() -> Result<()> {
+    let m = fixtures::load_manifest()?;
+    println!("datasets:");
+    for d in &m.datasets {
+        println!(
+            "  {:12} n={:<7} d={:<4} queries={:<5} shift={}",
+            d.name, d.n, d.d, d.n_queries, d.shift
+        );
+    }
+    println!("configs ({}):", m.configs.len());
+    for c in &m.configs {
+        println!("  {c}");
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let m = fixtures::load_manifest()?;
+    let name = args.require("dataset")?.to_string();
+    let c = args.get_usize("c", 1)?;
+    args.reject_unknown()?;
+    let ds = fixtures::prepare_dataset(&m, &name, c)?;
+    let mut rep = Report::new(&format!("dataset {name} (c={c})"));
+    rep.header(&["keys", "d", "train-q", "val-q", "mean top-1 <q,k*>"]);
+    let mean_top1: f64 = (0..ds.val.gt.n_queries())
+        .map(|q| ds.val.gt.global_top1(q).1 as f64)
+        .sum::<f64>()
+        / ds.val.gt.n_queries() as f64;
+    rep.row(&[
+        ds.n_keys().to_string(),
+        ds.d().to_string(),
+        ds.train.x.rows().to_string(),
+        ds.val.x.rows().to_string(),
+        f(mean_top1),
+    ]);
+    if c > 1 {
+        let sizes: Vec<String> = {
+            let mut s = vec![0usize; c];
+            for &a in &ds.assign {
+                s[a as usize] += 1;
+            }
+            s.iter().map(|v| v.to_string()).collect()
+        };
+        rep.note(format!("cluster sizes: {}", sizes.join(", ")));
+    }
+    rep.emit("gen_data");
+    Ok(())
+}
+
+fn train_opts_from(args: &Args) -> Result<TrainOpts> {
+    let mut o = TrainOpts {
+        verbose: args.has("verbose"),
+        ..TrainOpts::default()
+    };
+    o.steps = args.get_usize("steps", o.steps)?;
+    o.peak_lr = args.get_f32("lr", o.peak_lr)?;
+    o.lam_a = args.get_f32("lam-a", o.lam_a)?;
+    o.lam_b = args.get_f32("lam-b", o.lam_b)?;
+    o.seed = args.get_u64("seed", o.seed)?;
+    Ok(o)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let m = fixtures::load_manifest()?;
+    let config = args.require("config")?.to_string();
+    let opts = train_opts_from(args)?;
+    args.reject_unknown()?;
+    let meta = m.meta(&config)?;
+    let engine = Engine::new(artifacts_dir_of(&m))?;
+    let ds = fixtures::prepare_dataset(&m, &meta.dataset, meta.c)?;
+    let out = trainer::train(&engine, &meta, &ds, &opts)?;
+    let path = trainer::trainer::checkpoint_path(engine.dir(), &meta, &opts);
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    out.params.save(&meta, &path)?;
+    let mut rep = Report::new(&format!("train {config}"));
+    rep.header(&["steps", "final loss", "final E_rel", "E_rel curve"]);
+    rep.row(&[
+        out.steps.to_string(),
+        out.curve.final_loss().map(|v| f(v as f64)).unwrap_or_default(),
+        out.curve.final_e_rel().map(|v| f(v as f64)).unwrap_or_default(),
+        out.curve.e_rel_sparkline(),
+    ]);
+    rep.note(format!("checkpoint: {}", path.display()));
+    rep.emit("train");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let m = fixtures::load_manifest()?;
+    let config = args.require("config")?.to_string();
+    let steps = args.get_usize("steps", 0)?;
+    args.reject_unknown()?;
+    let meta = m.meta(&config)?;
+    let engine = Engine::new(m.dir.clone())?;
+    let ds = fixtures::prepare_dataset(&m, &meta.dataset, meta.c)?;
+    let opts = if steps > 0 {
+        Some(TrainOpts {
+            steps,
+            ..TrainOpts::default()
+        })
+    } else {
+        None
+    };
+    let model = fixtures::trained_model(&engine, &m, &config, &ds, opts)?;
+    // predicted keys on the validation queries
+    let (_scores, keys) = model.scores_and_keys(&ds.val.x)?;
+    let n = ds.val.x.rows();
+    let d = ds.d();
+    // global top-key predictions: for c>1 take the best-scoring cluster's key
+    let mut pred = Tensor::zeros(&[n, d]);
+    let mut targets = Vec::with_capacity(n);
+    for q in 0..n {
+        let j = ds.val.gt.top_cluster(q); // evaluate the true-cluster head
+        let off = (q * meta.c + j) * d;
+        pred.row_mut(q).copy_from_slice(&keys.data()[off..off + d]);
+        targets.push(ds.val.gt.global_top1(q).0);
+    }
+    let rm = retrieval::evaluate(&pred, &ds.keys, &targets);
+    let tgt = ds.keys.gather_rows(&targets);
+    let e_rel = transport::relative_transport_error(&pred, &ds.val.x, &tgt);
+    let mut rep = Report::new(&format!("eval {config}"));
+    rep.header(&["match", "R@10", "R@100", "MRR", "E_rel"]);
+    rep.row(&[
+        pct(rm.match_rate),
+        pct(rm.recall_at_10),
+        pct(rm.recall_at_100),
+        f(rm.mrr),
+        f(e_rel),
+    ]);
+    rep.emit("eval");
+    Ok(())
+}
+
+fn cmd_route(args: &Args) -> Result<()> {
+    let m = fixtures::load_manifest()?;
+    let config = args.require("config")?.to_string();
+    let topk_max = args.get_usize("topk", 5)?;
+    args.reject_unknown()?;
+    let meta = m.meta(&config)?;
+    if meta.c < 2 {
+        bail!("routing needs a clustered config (c>1), got c={}", meta.c);
+    }
+    let engine = Engine::new(m.dir.clone())?;
+    let ds = fixtures::prepare_dataset(&m, &meta.dataset, meta.c)?;
+    let model = fixtures::trained_model(&engine, &m, &config, &ds, None)?;
+    let learned = AmortizedRouter::new(model);
+    let baseline = CentroidRouter::new(ds.centroids.clone());
+    let true_clusters: Vec<usize> = (0..ds.val.gt.n_queries())
+        .map(|q| ds.val.gt.top_cluster(q))
+        .collect();
+    let mut sizes = vec![0usize; ds.c];
+    for &a in &ds.assign {
+        sizes[a as usize] += 1;
+    }
+    let mut rep = Report::new(&format!("routing {config} vs centroid"));
+    rep.header(&["router", "k", "accuracy", "flops/query"]);
+    for k in 1..=topk_max.min(ds.c) {
+        for router in [&learned as &dyn Router, &baseline as &dyn Router] {
+            let dec = router.route_batch(&ds.val.x, k)?;
+            let acc = routing_accuracy(&dec, &true_clusters);
+            // average scan cost of the selected clusters
+            let avg_scan: f64 = dec
+                .iter()
+                .map(|dd| {
+                    let picked: Vec<usize> =
+                        dd.clusters.iter().map(|&c| sizes[c as usize]).collect();
+                    flops::routing_total_flops(dd.selection_flops, &picked, ds.d()) as f64
+                })
+                .sum::<f64>()
+                / dec.len() as f64;
+            rep.row(&[
+                router.name().to_string(),
+                k.to_string(),
+                pct(acc),
+                format!("{avg_scan:.0}"),
+            ]);
+        }
+    }
+    rep.emit("route");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let m = fixtures::load_manifest()?;
+    let config = args.require("config")?.to_string();
+    let requests = args.get_usize("requests", 512)?;
+    let nprobe = args.get_usize("nprobe", 4)?;
+    let nlist = args.get_usize("nlist", 32)?;
+    args.reject_unknown()?;
+    let meta = m.meta(&config)?;
+    if meta.c != 1 {
+        bail!("serve uses a c=1 KeyNet mapper");
+    }
+    let engine = Engine::new(m.dir.clone())?;
+    let ds = fixtures::prepare_dataset(&m, &meta.dataset, 1)?;
+    // train (or load) the mapper, then hand everything to the server
+    let opts = TrainOpts {
+        steps: fixtures::default_steps(&meta.size),
+        ..TrainOpts::default()
+    };
+    let out = trainer::train_or_load(&engine, &meta, &ds, &opts)?;
+    let index = Arc::new(IvfIndex::build(&ds.keys, nlist, 15, 99));
+    let cfg = ServerConfig {
+        artifacts_dir: m.dir.clone(),
+        meta: meta.clone(),
+        params: out.params,
+        policy: BatchPolicy::default(),
+        map_queries: true,
+        nprobe_default: nprobe,
+    };
+    let (server, handle) = Server::start(cfg, index)?;
+    // fire traffic from a couple of client threads
+    let nq = ds.val.x.rows();
+    let t0 = std::time::Instant::now();
+    let mut hits = 0usize;
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for t in 0..2usize {
+            let handle = handle.clone();
+            let ds = &ds;
+            joins.push(s.spawn(move || -> Result<usize> {
+                let mut local_hits = 0;
+                for i in (t..requests).step_by(2) {
+                    let q = ds.val.x.row(i % nq).to_vec();
+                    let resp = handle.query(q, 10)?;
+                    let truth = ds.val.gt.global_top1(i % nq).0 as u32;
+                    if resp.ids.contains(&truth) {
+                        local_hits += 1;
+                    }
+                }
+                Ok(local_hits)
+            }));
+        }
+        for j in joins {
+            hits += j.join().unwrap().unwrap_or(0);
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.latency_stats();
+    server.shutdown()?;
+    let mut rep = Report::new(&format!("serve {config} (IVF nlist={nlist}, nprobe={nprobe})"));
+    rep.header(&["requests", "recall@10", "qps", "p50 ms", "p95 ms"]);
+    rep.row(&[
+        requests.to_string(),
+        pct(hits as f64 / requests as f64),
+        format!("{:.0}", requests as f64 / wall),
+        format!("{:.2}", stats.quantile_s(0.5) * 1e3),
+        format!("{:.2}", stats.quantile_s(0.95) * 1e3),
+    ]);
+    rep.emit("serve");
+    Ok(())
+}
+
+/// artifacts dir helper shared with Engine::new call sites.
+fn artifacts_dir_of(m: &amips::runtime::Manifest) -> std::path::PathBuf {
+    m.dir.clone()
+}

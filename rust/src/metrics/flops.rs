@@ -1,0 +1,51 @@
+//! FLOPs accounting for the paper's cost axes. One multiply-add = 2
+//! flops throughout (matches `python/compile/sizing.py`, which stamps the
+//! per-query model costs into the artifact metadata).
+
+/// Centroid-routing cost: score the query against `c` centroids.
+pub fn centroid_routing_flops(c: usize, d: usize) -> u64 {
+    (c * d * 2) as u64
+}
+
+/// Exhaustive scan cost over `n` keys.
+pub fn exhaustive_flops(n: usize, d: usize) -> u64 {
+    (n * d * 2) as u64
+}
+
+/// Routing experiment cost (Sec. 4.3): selection + exact search within
+/// the chosen clusters (sum of their sizes).
+pub fn routing_total_flops(selection_flops: u64, cluster_sizes: &[usize], d: usize) -> u64 {
+    let scan: usize = cluster_sizes.iter().sum();
+    selection_flops + exhaustive_flops(scan, d)
+}
+
+/// Integration experiment cost (Sec. 4.4): optional query mapping +
+/// index search cost.
+pub fn integration_total_flops(map_flops: u64, index_flops: u64) -> u64 {
+    map_flops + index_flops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn centroid_cost_linear_in_c() {
+        assert_eq!(centroid_routing_flops(10, 64), 10 * 64 * 2);
+        assert_eq!(
+            centroid_routing_flops(128, 64),
+            centroid_routing_flops(10, 64) / 10 * 128
+        );
+    }
+
+    #[test]
+    fn routing_total_adds_scan() {
+        let total = routing_total_flops(100, &[50, 30], 8);
+        assert_eq!(total, 100 + 80 * 8 * 2);
+    }
+
+    #[test]
+    fn integration_adds_components() {
+        assert_eq!(integration_total_flops(5, 7), 12);
+    }
+}

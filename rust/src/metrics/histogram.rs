@@ -1,0 +1,177 @@
+//! Fixed-range histograms + summary stats for the distribution
+//! diagnostics (Fig. 29 PCA densities, Fig. 30 top-1 score histograms).
+
+/// Equal-width histogram over [lo, hi].
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub n: u64,
+    sum: f64,
+    values: Vec<f32>, // kept for exact median (datasets here are small)
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Histogram {
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins.max(1)],
+            n: 0,
+            sum: 0.0,
+            values: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let bins = self.counts.len();
+        let t = ((v - self.lo) / (self.hi - self.lo)).clamp(0.0, 1.0);
+        let b = ((t * bins as f64) as usize).min(bins - 1);
+        self.counts[b] += 1;
+        self.n += 1;
+        self.sum += v;
+        self.values.push(v as f32);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.values.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2] as f64
+    }
+
+    /// Render as an ASCII bar chart (bench reports).
+    pub fn render(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let bins = self.counts.len();
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let x0 = self.lo + (self.hi - self.lo) * i as f64 / bins as f64;
+            let bar = "#".repeat((c as f64 / max as f64 * width as f64).round() as usize);
+            out.push_str(&format!("{x0:7.3} | {bar} {c}\n"));
+        }
+        out
+    }
+}
+
+/// 2D occupancy grid over [lo0,hi0]x[lo1,hi1] — the "kernel density"
+/// panel analog of Fig. 29, reported as a coarse grid.
+#[derive(Clone, Debug)]
+pub struct Grid2d {
+    pub bins: usize,
+    pub lo: [f64; 2],
+    pub hi: [f64; 2],
+    pub counts: Vec<u64>,
+    pub n: u64,
+}
+
+impl Grid2d {
+    pub fn new(lo: [f64; 2], hi: [f64; 2], bins: usize) -> Grid2d {
+        Grid2d {
+            bins,
+            lo,
+            hi,
+            counts: vec![0; bins * bins],
+            n: 0,
+        }
+    }
+
+    pub fn record(&mut self, x: f64, y: f64) {
+        let bx = (((x - self.lo[0]) / (self.hi[0] - self.lo[0])).clamp(0.0, 1.0)
+            * self.bins as f64) as usize;
+        let by = (((y - self.lo[1]) / (self.hi[1] - self.lo[1])).clamp(0.0, 1.0)
+            * self.bins as f64) as usize;
+        let (bx, by) = (bx.min(self.bins - 1), by.min(self.bins - 1));
+        self.counts[by * self.bins + bx] += 1;
+        self.n += 1;
+    }
+
+    /// Fraction of this grid's mass falling in cells where `other` has
+    /// (near-)zero mass — the "query-side modes with no key density"
+    /// statistic of Fig. 29.
+    pub fn mass_outside(&self, other: &Grid2d) -> f64 {
+        assert_eq!(self.bins, other.bins);
+        if self.n == 0 {
+            return 0.0;
+        }
+        let mut outside = 0u64;
+        for (a, b) in self.counts.iter().zip(&other.counts) {
+            if *b == 0 {
+                outside += a;
+            }
+        }
+        outside as f64 / self.n as f64
+    }
+
+    pub fn render(&self) -> String {
+        const SHADES: &[char] = &[' ', '.', ':', '+', '*', '#', '@'];
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for by in (0..self.bins).rev() {
+            for bx in 0..self.bins {
+                let c = self.counts[by * self.bins + bx];
+                let s = (c as f64 / max as f64 * (SHADES.len() - 1) as f64).round() as usize;
+                out.push(SHADES[s]);
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_median() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        for v in [0.1, 0.2, 0.3, 0.9] {
+            h.record(v);
+        }
+        assert!((h.mean() - 0.375).abs() < 1e-9);
+        assert!((h.median() - 0.3).abs() < 1e-6);
+        assert_eq!(h.n, 4);
+    }
+
+    #[test]
+    fn histogram_clamps_out_of_range() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.record(-5.0);
+        h.record(5.0);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[3], 1);
+    }
+
+    #[test]
+    fn grid_mass_outside() {
+        let mut keys = Grid2d::new([0.0, 0.0], [1.0, 1.0], 4);
+        let mut queries = Grid2d::new([0.0, 0.0], [1.0, 1.0], 4);
+        keys.record(0.1, 0.1);
+        queries.record(0.1, 0.1); // overlaps keys
+        queries.record(0.9, 0.9); // no key mass there
+        assert!((queries.mass_outside(&keys) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_shapes() {
+        let mut g = Grid2d::new([0.0, 0.0], [1.0, 1.0], 3);
+        g.record(0.5, 0.5);
+        let r = g.render();
+        assert_eq!(r.lines().count(), 3);
+        let mut h = Histogram::new(0.0, 1.0, 5);
+        h.record(0.5);
+        assert_eq!(h.render(10).lines().count(), 5);
+    }
+}

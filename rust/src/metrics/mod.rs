@@ -1,0 +1,10 @@
+//! Evaluation metrics (paper Sec. 4.2): retrieval metrics over predicted
+//! keys, the relative transport error, FLOPs accounting for the Pareto
+//! cost axes, and histogram utilities for the Fig. 29/30 diagnostics.
+
+pub mod flops;
+pub mod histogram;
+pub mod retrieval;
+pub mod transport;
+
+pub use retrieval::RetrievalMetrics;

@@ -1,0 +1,137 @@
+//! Retrieval metrics (Sec. 4.2): match rate, Recall@k and MRR of the
+//! predicted key ŷ(x) against the true top-1 key y*(x), ranked by
+//! distance from ŷ over the whole database.
+//!
+//! On unit-norm keys, argmin ||ŷ - y|| == argmax ⟨ŷ, y⟩ up to the keys'
+//! (constant) norms, so ranking uses inner products — the same flat-scan
+//! primitive as everything else.
+
+use crate::tensor::{dot, Tensor};
+use crate::util::threads::parallel_chunks;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Aggregate retrieval quality for a set of predictions.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RetrievalMetrics {
+    /// fraction with nearest key == y*
+    pub match_rate: f64,
+    /// fraction with y* among the 10 nearest keys
+    pub recall_at_10: f64,
+    /// fraction with y* among the 100 nearest
+    pub recall_at_100: f64,
+    /// mean reciprocal rank of y*
+    pub mrr: f64,
+    pub n: usize,
+}
+
+/// Compute metrics for predictions `pred` [n, d] whose true top keys are
+/// `target_idx[i]` into `keys`.
+pub fn evaluate(pred: &Tensor, keys: &Tensor, target_idx: &[usize]) -> RetrievalMetrics {
+    let n = pred.rows();
+    assert_eq!(n, target_idx.len());
+    let nk = keys.rows();
+    let hits1 = AtomicU64::new(0);
+    let hits10 = AtomicU64::new(0);
+    let hits100 = AtomicU64::new(0);
+    let mrr_milli = AtomicU64::new(0); // accumulate MRR * 1e6 as integer
+
+    parallel_chunks(n, 16, |_, q0, q1| {
+        for q in q0..q1 {
+            let p = pred.row(q);
+            let t = target_idx[q];
+            let target_score = dot(p, keys.row(t));
+            // rank = 1 + number of keys strictly better than the target
+            // (ties resolved toward lower index, matching TopK).
+            let mut better = 0usize;
+            for k in 0..nk {
+                let s = dot(p, keys.row(k));
+                if s > target_score || (s == target_score && k < t) {
+                    better += 1;
+                }
+            }
+            let rank = better + 1;
+            if rank == 1 {
+                hits1.fetch_add(1, Ordering::Relaxed);
+            }
+            if rank <= 10 {
+                hits10.fetch_add(1, Ordering::Relaxed);
+            }
+            if rank <= 100 {
+                hits100.fetch_add(1, Ordering::Relaxed);
+            }
+            mrr_milli.fetch_add((1e6 / rank as f64) as u64, Ordering::Relaxed);
+        }
+    });
+
+    RetrievalMetrics {
+        match_rate: hits1.load(Ordering::Relaxed) as f64 / n as f64,
+        recall_at_10: hits10.load(Ordering::Relaxed) as f64 / n as f64,
+        recall_at_100: hits100.load(Ordering::Relaxed) as f64 / n as f64,
+        mrr: mrr_milli.load(Ordering::Relaxed) as f64 / 1e6 / n as f64,
+        n,
+    }
+}
+
+/// Recall@k of a result list against a single ground-truth id.
+pub fn hit_at_k(result_ids: &[u32], truth: u32, k: usize) -> bool {
+    result_ids.iter().take(k).any(|&id| id == truth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::normalize_rows;
+    use crate::util::Rng;
+
+    fn unit(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        normalize_rows(&mut t);
+        t
+    }
+
+    #[test]
+    fn perfect_predictions_score_one() {
+        let keys = unit(&[50, 8], 1);
+        let targets: Vec<usize> = (0..10).collect();
+        let pred = keys.gather_rows(&targets);
+        let m = evaluate(&pred, &keys, &targets);
+        assert_eq!(m.match_rate, 1.0);
+        assert_eq!(m.mrr, 1.0);
+        assert_eq!(m.recall_at_10, 1.0);
+    }
+
+    #[test]
+    fn random_predictions_score_low() {
+        let keys = unit(&[200, 16], 2);
+        let pred = unit(&[50, 16], 3);
+        let targets: Vec<usize> = (0..50).collect();
+        let m = evaluate(&pred, &keys, &targets);
+        assert!(m.match_rate < 0.2);
+        assert!(m.mrr < 0.3);
+        assert!(m.recall_at_100 <= 1.0);
+    }
+
+    #[test]
+    fn mrr_rank_two_is_half() {
+        // Construct: prediction exactly equals key 1, target is key 0,
+        // and key 0 is the second-closest.
+        let mut keys = Tensor::zeros(&[3, 4]);
+        keys.row_mut(0).copy_from_slice(&[0.9, 0.1, 0.0, 0.0]);
+        keys.row_mut(1).copy_from_slice(&[1.0, 0.0, 0.0, 0.0]);
+        keys.row_mut(2).copy_from_slice(&[0.0, 1.0, 0.0, 0.0]);
+        normalize_rows(&mut keys);
+        let pred = keys.gather_rows(&[1]);
+        let m = evaluate(&pred, &keys, &[0]);
+        assert!((m.mrr - 0.5).abs() < 1e-6, "mrr {}", m.mrr);
+        assert_eq!(m.match_rate, 0.0);
+        assert_eq!(m.recall_at_10, 1.0);
+    }
+
+    #[test]
+    fn hit_at_k_respects_prefix() {
+        assert!(hit_at_k(&[5, 3, 9], 3, 2));
+        assert!(!hit_at_k(&[5, 3, 9], 9, 2));
+        assert!(hit_at_k(&[5, 3, 9], 9, 3));
+    }
+}

@@ -1,0 +1,113 @@
+//! Relative transport error (paper Eq. 4.1):
+//!
+//! ```text
+//! E_rel = E_x[ log ||ŷ(x) − y*||² / ||x − y*||² ]
+//! ```
+//!
+//! 0 = identity predictor; −1 ≈ e⁻¹ ≈ 0.37× closer; −∞ = perfect.
+
+use crate::tensor::Tensor;
+
+/// E_rel for predictions [n, d] vs queries [n, d] and targets [n, d].
+pub fn relative_transport_error(pred: &Tensor, queries: &Tensor, targets: &Tensor) -> f64 {
+    let n = pred.rows();
+    assert_eq!(queries.rows(), n);
+    assert_eq!(targets.rows(), n);
+    let d = pred.row_width();
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        let (p, q, t) = (pred.row(i), queries.row(i), targets.row(i));
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for j in 0..d {
+            num += ((p[j] - t[j]) as f64).powi(2);
+            den += ((q[j] - t[j]) as f64).powi(2);
+        }
+        acc += (num.max(1e-30) / den.max(1e-30)).ln();
+    }
+    acc / n as f64
+}
+
+/// Per-cluster variant: pred [n, c, d], targets [n, c, d], queries [n, d];
+/// averaged over batch and clusters (paper Sec. 4.2).
+pub fn relative_transport_error_clustered(
+    pred: &Tensor,
+    queries: &Tensor,
+    targets: &Tensor,
+) -> f64 {
+    let n = queries.rows();
+    let d = queries.row_width();
+    let c = pred.len() / (n * d);
+    assert_eq!(pred.len(), n * c * d);
+    assert_eq!(targets.len(), n * c * d);
+    let pd = pred.data();
+    let td = targets.data();
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        let q = queries.row(i);
+        for j in 0..c {
+            let off = (i * c + j) * d;
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for k in 0..d {
+                num += ((pd[off + k] - td[off + k]) as f64).powi(2);
+                den += ((q[k] - td[off + k]) as f64).powi(2);
+            }
+            acc += (num.max(1e-30) / den.max(1e-30)).ln();
+        }
+    }
+    acc / (n * c) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    #[test]
+    fn identity_predictor_is_zero() {
+        let q = randt(&[20, 8], 1);
+        let t = randt(&[20, 8], 2);
+        let e = relative_transport_error(&q, &q, &t);
+        assert!(e.abs() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_predictor_is_very_negative() {
+        let q = randt(&[20, 8], 3);
+        let t = randt(&[20, 8], 4);
+        let e = relative_transport_error(&t, &q, &t);
+        assert!(e < -20.0);
+    }
+
+    #[test]
+    fn halfway_is_negative() {
+        let q = randt(&[50, 8], 5);
+        let t = randt(&[50, 8], 6);
+        let mut mid = q.clone();
+        for (m, tv) in mid.data_mut().iter_mut().zip(t.data()) {
+            *m = 0.5 * *m + 0.5 * tv;
+        }
+        let e = relative_transport_error(&mid, &q, &t);
+        // ||mid - t|| = 0.5 ||q - t|| -> log(0.25) ≈ -1.386
+        assert!((e - (-1.386)).abs() < 0.01, "e = {e}");
+    }
+
+    #[test]
+    fn clustered_matches_flat_for_c1() {
+        let q = randt(&[10, 4], 7);
+        let t = randt(&[10, 4], 8);
+        let p = randt(&[10, 4], 9);
+        let flat = relative_transport_error(&p, &q, &t);
+        let pc = p.clone().reshape(&[10, 1, 4]);
+        let tc = t.clone().reshape(&[10, 1, 4]);
+        let clustered = relative_transport_error_clustered(&pc, &q, &tc);
+        assert!((flat - clustered).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,155 @@
+//! The user-facing amortized-model handle: load a trained SupportNet or
+//! KeyNet and run batched inference on the request path.
+//!
+//! Inference uses the AOT artifacts: `fwd` (scores, + keys for KeyNet;
+//! the Pallas L1 kernel lowered inside) and `grad` (SupportNet key
+//! recovery via autodiff). Queries are processed in fixed-size chunks of
+//! the artifact batch `B`, padding the tail — the same discipline the
+//! serving batcher uses.
+
+use anyhow::{bail, Result};
+use std::rc::Rc;
+
+use crate::runtime::engine::{lit_f32, literal_to_vec, Engine, Executable};
+use crate::runtime::ArtifactMeta;
+use crate::tensor::Tensor;
+
+/// A loaded amortized model (SupportNet or KeyNet) with trained params.
+pub struct AmortizedModel {
+    pub meta: ArtifactMeta,
+    fwd: Rc<Executable>,
+    /// SupportNet only: scores+keys via input-gradient.
+    grad: Option<Rc<Executable>>,
+    /// Parameter literals in ABI order, kept ready for execution.
+    param_lits: Vec<xla::Literal>,
+}
+
+/// Batched inference output.
+pub struct Inference {
+    /// [n, c] per-cluster support scores.
+    pub scores: Tensor,
+    /// [n, c, d] predicted keys (None for SupportNet via fwd-only path).
+    pub keys: Option<Tensor>,
+}
+
+impl AmortizedModel {
+    /// Load from engine + metadata + trained parameters.
+    pub fn load(engine: &Engine, meta: ArtifactMeta, params: &crate::model::ParamSet) -> Result<AmortizedModel> {
+        params.validate(&meta)?;
+        let fwd = engine.load(&format!("{}.fwd", meta.name))?;
+        let grad = if meta.model == "supportnet" {
+            Some(engine.load(&format!("{}.grad", meta.name))?)
+        } else {
+            None
+        };
+        let param_lits = params
+            .tensors
+            .iter()
+            .map(|t| lit_f32(t.shape(), t.data()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(AmortizedModel {
+            meta,
+            fwd,
+            grad,
+            param_lits,
+        })
+    }
+
+    pub fn is_supportnet(&self) -> bool {
+        self.meta.model == "supportnet"
+    }
+
+    /// FLOPs for scoring one query (paper's cost axes).
+    pub fn score_flops(&self) -> u64 {
+        self.meta.fwd_flops
+    }
+
+    /// FLOPs for recovering keys for one query.
+    pub fn key_flops(&self) -> u64 {
+        if self.is_supportnet() {
+            // fwd + c backward passes (paper Sec. 4.4: bwd ~ 2x fwd)
+            self.meta.grad_flops
+        } else {
+            self.meta.fwd_flops
+        }
+    }
+
+    fn run_chunked(
+        &self,
+        exe: &Executable,
+        queries: &Tensor,
+        want_keys: bool,
+    ) -> Result<Inference> {
+        let (n, d) = (queries.rows(), queries.row_width());
+        if d != self.meta.d {
+            bail!("query dim {d} != model dim {}", self.meta.d);
+        }
+        let b = self.meta.train_batch;
+        let c = self.meta.c;
+        let mut scores = Tensor::zeros(&[n, c]);
+        let mut keys = if want_keys {
+            Some(Tensor::zeros(&[n, c, d]))
+        } else {
+            None
+        };
+        let mut chunk = vec![0.0f32; b * d];
+        let mut start = 0;
+        while start < n {
+            let end = (start + b).min(n);
+            let take = end - start;
+            // pad the tail chunk by repeating the last row
+            chunk[..take * d].copy_from_slice(&queries.data()[start * d..end * d]);
+            for p in take..b {
+                chunk.copy_within((take - 1) * d..take * d, p * d);
+            }
+            let x = lit_f32(&[b, d], &chunk)?;
+            let mut inputs: Vec<&xla::Literal> = self.param_lits.iter().collect();
+            inputs.push(&x);
+            let out = exe.run(&inputs)?;
+            let s = literal_to_vec(&out[0])?;
+            scores.data_mut()[start * c..end * c].copy_from_slice(&s[..take * c]);
+            if want_keys {
+                let kv = literal_to_vec(&out[1])?;
+                keys.as_mut().unwrap().data_mut()[start * c * d..end * c * d]
+                    .copy_from_slice(&kv[..take * c * d]);
+            }
+            start = end;
+        }
+        Ok(Inference { scores, keys })
+    }
+
+    /// Per-cluster support scores for a batch of queries: [n, c].
+    ///
+    /// SupportNet reads them from the forward pass; KeyNet derives them
+    /// as ⟨F_j(x), x⟩ (computed in-graph).
+    pub fn scores(&self, queries: &Tensor) -> Result<Tensor> {
+        let want_keys = !self.is_supportnet();
+        let inf = self.run_chunked(&self.fwd, queries, want_keys)?;
+        Ok(inf.scores)
+    }
+
+    /// Scores **and** predicted keys: ([n,c], [n,c,d]).
+    ///
+    /// SupportNet pays the backward pass here (the paper's Table-1
+    /// asymmetry); KeyNet gets keys from the same forward.
+    pub fn scores_and_keys(&self, queries: &Tensor) -> Result<(Tensor, Tensor)> {
+        let exe = match &self.grad {
+            Some(g) => g.clone(),
+            None => self.fwd.clone(),
+        };
+        let inf = self.run_chunked(&exe, queries, true)?;
+        Ok((inf.scores, inf.keys.unwrap()))
+    }
+
+    /// Predicted top-key per query, flattened to [n, d] (c must be 1):
+    /// the drop-in replacement vector ŷ(x) of Sec. 4.4.
+    pub fn map_queries(&self, queries: &Tensor) -> Result<Tensor> {
+        if self.meta.c != 1 {
+            bail!("map_queries requires a c=1 model, got c={}", self.meta.c);
+        }
+        let (_, keys) = self.scores_and_keys(queries)?;
+        let n = queries.rows();
+        let d = self.meta.d;
+        Ok(keys.reshape(&[n, d]))
+    }
+}

@@ -1,0 +1,8 @@
+//! Model-side runtime objects: parameter sets (checkpoint IO) and the
+//! user-facing amortized-model handles (SupportNet / KeyNet inference).
+
+pub mod amortized;
+pub mod params;
+
+pub use amortized::AmortizedModel;
+pub use params::ParamSet;

@@ -1,0 +1,125 @@
+//! Parameter sets: the ordered tensor list crossing the AOT ABI, with
+//! checkpoint save/load in the `.amts` container format.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use crate::runtime::ArtifactMeta;
+use crate::tensor::{load_tensor_set, save_tensor_set, Tensor};
+
+/// Ordered parameter tensors for one model (ABI order = meta order).
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamSet {
+    /// Validate against the artifact metadata's declared shapes.
+    pub fn validate(&self, meta: &ArtifactMeta) -> Result<()> {
+        if self.tensors.len() != meta.params.len() {
+            bail!(
+                "{}: checkpoint has {} tensors, meta wants {}",
+                meta.name,
+                self.tensors.len(),
+                meta.params.len()
+            );
+        }
+        for (t, (pname, shape)) in self.tensors.iter().zip(&meta.params) {
+            if t.shape() != &shape[..] {
+                bail!(
+                    "{}: param {pname} shape {:?} != meta {:?}",
+                    meta.name,
+                    t.shape(),
+                    shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Total parameter count.
+    pub fn n_elems(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn save(&self, meta: &ArtifactMeta, path: &Path) -> Result<()> {
+        let items: Vec<(String, &Tensor)> = meta
+            .params
+            .iter()
+            .map(|(n, _)| n.clone())
+            .zip(self.tensors.iter())
+            .collect();
+        save_tensor_set(path, &items)
+    }
+
+    pub fn load(meta: &ArtifactMeta, path: &Path) -> Result<ParamSet> {
+        let items = load_tensor_set(path)?;
+        if items.len() != meta.params.len() {
+            bail!(
+                "checkpoint {} has {} tensors, meta {} wants {}",
+                path.display(),
+                items.len(),
+                meta.name,
+                meta.params.len()
+            );
+        }
+        // Enforce name order to catch ABI drift between exports.
+        for ((got_name, _), (want_name, _)) in items.iter().zip(&meta.params) {
+            if got_name != want_name {
+                bail!(
+                    "checkpoint {}: tensor {got_name} where {want_name} expected",
+                    path.display()
+                );
+            }
+        }
+        let ps = ParamSet {
+            tensors: items.into_iter().map(|(_, t)| t).collect(),
+        };
+        ps.validate(meta)?;
+        Ok(ps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::ArtifactMeta;
+
+    fn meta() -> ArtifactMeta {
+        ArtifactMeta::parse(
+            "name t\ndataset t\nmodel keynet\nd 4\nc 1\nh 8\nlayers 2\nnx 2\ninject 1\nresidual 0\nhomogenize 0\nalpha 0.1\nbeta 20.0\nsize xs\nrho 0.01\ntrain_batch 4\neval_batch 8\ntiming_batch 0\nn_params 10\nn_param_tensors 2\nn_state_tensors 9\nfwd_flops 1\ngrad_flops 2\nparam wx0 4,8\nparam b0 8\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn validate_accepts_matching() {
+        let ps = ParamSet {
+            tensors: vec![Tensor::zeros(&[4, 8]), Tensor::zeros(&[8])],
+        };
+        ps.validate(&meta()).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_wrong_shape() {
+        let ps = ParamSet {
+            tensors: vec![Tensor::zeros(&[4, 8]), Tensor::zeros(&[9])],
+        };
+        assert!(ps.validate(&meta()).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let m = meta();
+        let mut t0 = Tensor::zeros(&[4, 8]);
+        t0.data_mut()[3] = 1.5;
+        let ps = ParamSet {
+            tensors: vec![t0, Tensor::zeros(&[8])],
+        };
+        let path = std::env::temp_dir().join("amips_params_test.amts");
+        ps.save(&m, &path).unwrap();
+        let back = ParamSet::load(&m, &path).unwrap();
+        assert_eq!(back.tensors[0].data()[3], 1.5);
+        let _ = std::fs::remove_file(path);
+    }
+}

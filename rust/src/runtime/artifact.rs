@@ -1,0 +1,291 @@
+//! Artifact metadata: parses the line-oriented `<name>.meta.txt` and
+//! `manifest.txt` sidecars written by `python -m compile.aot`.
+//!
+//! The format is deliberately trivial (`key value` lines) because no
+//! serde/JSON crates exist offline — and because the metadata *is* the
+//! ABI: parameter order here must match the flatten order the jax export
+//! used, or execution scrambles tensors. `python/tests/test_export.py`
+//! asserts the Python side; `rust/tests/` asserts this side.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one exported model config.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub dataset: String,
+    pub model: String, // "supportnet" | "keynet"
+    pub d: usize,
+    pub c: usize,
+    pub h: usize,
+    pub layers: usize,
+    pub nx: usize,
+    pub residual: bool,
+    pub homogenize: bool,
+    pub alpha: f32,
+    pub beta: f32,
+    pub size: String,
+    pub rho: f32,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub timing_batch: usize,
+    pub n_params: usize,
+    pub n_param_tensors: usize,
+    pub n_state_tensors: usize,
+    pub fwd_flops: u64,
+    pub grad_flops: u64,
+    /// (name, shape) in exact ABI order.
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+impl ArtifactMeta {
+    pub fn load(path: &Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<ArtifactMeta> {
+        let mut kv: HashMap<&str, &str> = HashMap::new();
+        let mut params = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, val) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow!("bad meta line: {line}"))?;
+            if key == "param" {
+                let (pname, shape) = val
+                    .split_once(' ')
+                    .ok_or_else(|| anyhow!("bad param line: {line}"))?;
+                let dims: Vec<usize> = if shape == "-" {
+                    vec![]
+                } else {
+                    shape
+                        .split(',')
+                        .map(|t| t.parse().map_err(|e| anyhow!("bad dim {t}: {e}")))
+                        .collect::<Result<_>>()?
+                };
+                params.push((pname.to_string(), dims));
+            } else {
+                kv.insert(key, val);
+            }
+        }
+        let get = |k: &str| -> Result<&str> {
+            kv.get(k).copied().ok_or_else(|| anyhow!("missing key {k}"))
+        };
+        let gi = |k: &str| -> Result<usize> { Ok(get(k)?.parse()?) };
+        let gf = |k: &str| -> Result<f32> { Ok(get(k)?.parse()?) };
+        let meta = ArtifactMeta {
+            name: get("name")?.to_string(),
+            dataset: get("dataset")?.to_string(),
+            model: get("model")?.to_string(),
+            d: gi("d")?,
+            c: gi("c")?,
+            h: gi("h")?,
+            layers: gi("layers")?,
+            nx: gi("nx")?,
+            residual: gi("residual")? != 0,
+            homogenize: gi("homogenize")? != 0,
+            alpha: gf("alpha")?,
+            beta: gf("beta")?,
+            size: get("size")?.to_string(),
+            rho: gf("rho")?,
+            train_batch: gi("train_batch")?,
+            eval_batch: gi("eval_batch")?,
+            timing_batch: gi("timing_batch")?,
+            n_params: gi("n_params")?,
+            n_param_tensors: gi("n_param_tensors")?,
+            n_state_tensors: gi("n_state_tensors")?,
+            fwd_flops: get("fwd_flops")?.parse()?,
+            grad_flops: get("grad_flops")?.parse()?,
+            params,
+        };
+        if meta.params.len() != meta.n_param_tensors {
+            bail!(
+                "{}: param list {} != n_param_tensors {}",
+                meta.name,
+                meta.params.len(),
+                meta.n_param_tensors
+            );
+        }
+        if meta.n_state_tensors != 4 * meta.n_param_tensors + 1 {
+            bail!("{}: state ABI mismatch", meta.name);
+        }
+        Ok(meta)
+    }
+
+    /// Total f32 elements across all param tensors.
+    pub fn param_elems(&self) -> usize {
+        self.params
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>().max(1))
+            .sum()
+    }
+}
+
+/// Dataset spec parsed from manifest.txt (mirrors python manifest).
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub n: usize,
+    pub d: usize,
+    pub n_queries: usize,
+    pub shift: f32,
+    pub spread: f32,
+    pub modes: usize,
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    pub fn to_corpus_spec(&self) -> crate::data::CorpusSpec {
+        crate::data::CorpusSpec {
+            name: self.name.clone(),
+            n_keys: self.n,
+            d: self.d,
+            n_queries: self.n_queries,
+            shift: self.shift,
+            spread: self.spread,
+            modes: self.modes,
+            seed: self.seed,
+        }
+    }
+}
+
+/// Top-level manifest: datasets + exported config names.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub timing_batch: usize,
+    pub aug_sigma: f32,
+    pub val_queries: usize,
+    pub datasets: Vec<DatasetSpec>,
+    pub configs: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let mut m = Manifest {
+            dir: dir.to_path_buf(),
+            train_batch: 256,
+            eval_batch: 1024,
+            timing_batch: 4096,
+            aug_sigma: 0.02,
+            val_queries: 1000,
+            datasets: Vec::new(),
+            configs: Vec::new(),
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let key = it.next().unwrap();
+            match key {
+                "train_batch" => m.train_batch = it.next().unwrap().parse()?,
+                "eval_batch" => m.eval_batch = it.next().unwrap().parse()?,
+                "timing_batch" => m.timing_batch = it.next().unwrap().parse()?,
+                "aug_sigma" => m.aug_sigma = it.next().unwrap().parse()?,
+                "val_queries" => m.val_queries = it.next().unwrap().parse()?,
+                "dataset" => {
+                    let name = it.next().ok_or_else(|| anyhow!("dataset w/o name"))?;
+                    let mut fields: HashMap<&str, &str> = HashMap::new();
+                    for tok in it {
+                        if let Some((k, v)) = tok.split_once('=') {
+                            fields.insert(k, v);
+                        }
+                    }
+                    let g = |k: &str| -> Result<&str> {
+                        fields
+                            .get(k)
+                            .copied()
+                            .ok_or_else(|| anyhow!("dataset {name} missing {k}"))
+                    };
+                    m.datasets.push(DatasetSpec {
+                        name: name.to_string(),
+                        n: g("n")?.parse()?,
+                        d: g("d")?.parse()?,
+                        n_queries: g("n_queries")?.parse()?,
+                        shift: g("shift")?.parse()?,
+                        spread: g("spread")?.parse()?,
+                        modes: g("modes")?.parse()?,
+                        seed: g("seed")?.parse()?,
+                    });
+                }
+                "config" => {
+                    if let Some(name) = it.next() {
+                        m.configs.push(name.to_string());
+                    }
+                }
+                _ => {} // forward compatible
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetSpec> {
+        self.datasets
+            .iter()
+            .find(|d| d.name == name)
+            .ok_or_else(|| anyhow!("unknown dataset {name}"))
+    }
+
+    pub fn meta(&self, config: &str) -> Result<ArtifactMeta> {
+        ArtifactMeta::load(&self.dir.join(format!("{config}.meta.txt")))
+    }
+
+    /// Config names matching a substring filter.
+    pub fn configs_matching(&self, pat: &str) -> Vec<String> {
+        self.configs
+            .iter()
+            .filter(|c| c.contains(pat))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name t.keynet.xs.l2.c1\ndataset t\nmodel keynet\nd 8\nc 1\nh 16\nlayers 2\nnx 2\ninject 1\nresidual 0\nhomogenize 0\nalpha 0.1\nbeta 20.0\nsize xs\nrho 0.01\ntrain_batch 256\neval_batch 1024\ntiming_batch 0\nn_params 450\nn_param_tensors 6\nn_state_tensors 25\nfwd_flops 1000\ngrad_flops 2000\nparam wx0 8,16\nparam b0 16\nparam wz1 16,16\nparam wx1 8,16\nparam b1 16\nparam wout 16,8\n";
+
+    #[test]
+    fn parses_sample_meta() {
+        let m = ArtifactMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "t.keynet.xs.l2.c1");
+        assert_eq!(m.h, 16);
+        assert_eq!(m.params.len(), 6);
+        assert_eq!(m.params[0], ("wx0".to_string(), vec![8, 16]));
+        assert!(!m.homogenize);
+    }
+
+    #[test]
+    fn rejects_state_abi_mismatch() {
+        let bad = SAMPLE.replace("n_state_tensors 25", "n_state_tensors 24");
+        assert!(ArtifactMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_key() {
+        let bad = SAMPLE.replace("model keynet\n", "");
+        assert!(ArtifactMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn scalar_param_shape() {
+        let txt = SAMPLE.replace("param wout 16,8", "param wout -");
+        let m = ArtifactMeta::parse(&txt).unwrap();
+        assert_eq!(m.params[5].1, Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,141 @@
+//! PJRT engine: compile-once cache of HLO-text artifacts on the CPU
+//! client, plus the Literal conversion helpers used everywhere.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`); see
+//! DESIGN.md §2 for why serialized protos are rejected by this XLA build.
+//!
+//! `Engine` is intentionally `!Send`: PJRT handles are raw pointers. The
+//! serving coordinator confines one `Engine` to a dedicated model-runner
+//! thread and communicates over channels (coordinator/server.rs), which
+//! is also the right serving architecture (single compiled-executable
+//! owner, batched execution).
+
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::tensor::Tensor;
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with Literal inputs; returns the decomposed output tuple.
+    ///
+    /// Every artifact is lowered with `return_tuple=True`, so the single
+    /// result buffer is a tuple literal we split into its leaves.
+    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Compile cache over an artifacts directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client rooted at `dir` (the artifacts directory).
+    pub fn new(dir: PathBuf) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            dir,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default engine over [`crate::artifacts_dir`].
+    pub fn default_dir() -> Result<Engine> {
+        Self::new(crate::artifacts_dir())
+    }
+
+    pub fn dir(&self) -> &PathBuf {
+        &self.dir
+    }
+
+    /// Load + compile `<artifact>.hlo.txt` (cached).
+    pub fn load(&self, artifact: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(artifact) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{artifact}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {artifact}"))?;
+        let e = Rc::new(Executable {
+            name: artifact.to_string(),
+            exe,
+        });
+        self.cache.borrow_mut().insert(artifact.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Number of compiled executables held in cache.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal from a shape + slice.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    anyhow::ensure!(n == data.len(), "shape {shape:?} vs len {}", data.len());
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Scalar u32 literal (init seeds).
+pub fn lit_scalar_u32(v: u32) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U32,
+        &[],
+        &v.to_le_bytes(),
+    )?)
+}
+
+/// Copy a literal's f32 payload out.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Tensor -> Literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    lit_f32(t.shape(), t.data())
+}
+
+/// Literal -> Tensor with a caller-supplied shape (literals round-trip
+/// shape via meta, which the caller owns).
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let v = literal_to_vec(lit)?;
+    Ok(Tensor::from_vec(shape, v))
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by `make
+//! artifacts` and executes them on the CPU PJRT client. This is the only
+//! boundary between L3 (Rust) and the AOT-compiled L1/L2 stack.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use engine::{lit_f32, lit_scalar_u32, literal_to_vec, Engine, Executable};

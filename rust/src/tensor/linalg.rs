@@ -1,0 +1,263 @@
+//! Hot-path linear algebra: blocked `A·Bᵀ` (the MIPS scoring primitive),
+//! dot products, row normalization, and a power-iteration PCA used by the
+//! LeanVec-like index and the Fig. 29 diagnostics.
+//!
+//! Written to autovectorize under `-C target-cpu=native` (AVX-512 here):
+//! the inner loops are straight-line f32 FMA chains over contiguous rows
+//! with 4 independent accumulators to hide FMA latency.
+
+use crate::tensor::Tensor;
+use crate::util::threads::parallel_rows_mut;
+
+/// `dot(a, b)` with 4-way unrolled independent accumulators.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 16;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    // 16-wide blocks; LLVM maps each 4-lane accumulator onto vector FMAs.
+    for c in 0..chunks {
+        let i = c * 16;
+        let (a0, b0) = (&a[i..i + 16], &b[i..i + 16]);
+        let mut t0 = 0.0f32;
+        let mut t1 = 0.0f32;
+        let mut t2 = 0.0f32;
+        let mut t3 = 0.0f32;
+        for j in 0..4 {
+            t0 += a0[j] * b0[j];
+            t1 += a0[4 + j] * b0[4 + j];
+            t2 += a0[8 + j] * b0[8 + j];
+            t3 += a0[12 + j] * b0[12 + j];
+        }
+        s0 += t0;
+        s1 += t1;
+        s2 += t2;
+        s3 += t3;
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 16..n {
+        tail += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn scaled_add(y: &mut [f32], x: &[f32], alpha: f32) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// out[i, j] = <a_i, b_j>   for a [m,d], b [n,d]  (i.e. A·Bᵀ, the MIPS
+/// scoring matrix). Parallel over rows of `a`; inner loop blocked over
+/// `b` rows so a tile of B stays in L1/L2.
+pub fn gemm_nt(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    let (m, d) = (a.rows(), a.row_width());
+    let (n, db) = (b.rows(), b.row_width());
+    assert_eq!(d, db, "dim mismatch {d} vs {db}");
+    assert_eq!(out.shape(), &[m, n]);
+    let bd = b.data();
+    let ad = a.data();
+    const BN: usize = 64; // B-row tile: 64 rows * 64 dims * 4B = 16 KB (L1)
+    parallel_rows_mut(out.data_mut(), n, 16, |r0, r1, chunk| {
+        for (local, row_out) in chunk.chunks_mut(n).enumerate() {
+            let i = r0 + local;
+            debug_assert!(i < r1);
+            let ai = &ad[i * d..(i + 1) * d];
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + BN).min(n);
+                for j in j0..j1 {
+                    row_out[j] = dot(ai, &bd[j * d..(j + 1) * d]);
+                }
+                j0 = j1;
+            }
+        }
+    });
+}
+
+/// y = M x for M [m,d] (rows), x [d].
+pub fn matvec(m_rows: usize, d: usize, m: &[f32], x: &[f32], y: &mut [f32]) {
+    assert_eq!(m.len(), m_rows * d);
+    assert_eq!(x.len(), d);
+    assert_eq!(y.len(), m_rows);
+    for i in 0..m_rows {
+        y[i] = dot(&m[i * d..(i + 1) * d], x);
+    }
+}
+
+/// L2-normalize every row in place; zero rows are left untouched.
+pub fn normalize_rows(t: &mut Tensor) {
+    let w = t.row_width();
+    for row in t.data_mut().chunks_mut(w) {
+        let nrm = dot(row, row).sqrt();
+        if nrm > 1e-12 {
+            let inv = 1.0 / nrm;
+            for v in row {
+                *v *= inv;
+            }
+        }
+    }
+}
+
+/// Top-`k` principal components of the rows of `x` (mean-centered),
+/// via block power iteration with Gram–Schmidt re-orthonormalization.
+/// Returns (components [k,d], mean [d]).
+pub fn power_iteration_pca(x: &Tensor, k: usize, iters: usize, seed: u64) -> (Tensor, Vec<f32>) {
+    let (n, d) = (x.rows(), x.row_width());
+    assert!(k <= d && n > 0);
+    let mut mean = vec![0.0f32; d];
+    for i in 0..n {
+        scaled_add(&mut mean, x.row(i), 1.0 / n as f32);
+    }
+    let mut rng = crate::util::Rng::new(seed ^ 0x9E37);
+    let mut comps = Tensor::zeros(&[k, d]);
+    rng.fill_normal(comps.data_mut(), 1.0);
+    let mut proj = vec![0.0f32; n];
+    for _ in 0..iters {
+        for c in 0..k {
+            // proj = (X - mean) v_c ; v_c <- (X - mean)^T proj
+            {
+                let v = comps.row(c);
+                for i in 0..n {
+                    proj[i] = dot(x.row(i), v) - dot(&mean, v);
+                }
+            }
+            let mut newv = vec![0.0f32; d];
+            for i in 0..n {
+                scaled_add(&mut newv, x.row(i), proj[i]);
+            }
+            let psum: f32 = proj.iter().sum();
+            scaled_add(&mut newv, &mean, -psum);
+            // Gram–Schmidt against previous components.
+            for p in 0..c {
+                let coef = dot(&newv, comps.row(p));
+                let prev = comps.row(p).to_vec();
+                scaled_add(&mut newv, &prev, -coef);
+            }
+            let nrm = dot(&newv, &newv).sqrt().max(1e-12);
+            for v in &mut newv {
+                *v /= nrm;
+            }
+            comps.row_mut(c).copy_from_slice(&newv);
+        }
+    }
+    (comps, mean)
+}
+
+/// Project rows of `x` onto PCA components: out[i,c] = <x_i - mean, comp_c>.
+pub fn pca_project(x: &Tensor, comps: &Tensor, mean: &[f32]) -> Tensor {
+    let (n, d) = (x.rows(), x.row_width());
+    let k = comps.rows();
+    assert_eq!(comps.row_width(), d);
+    let mut out = Tensor::zeros(&[n, k]);
+    for i in 0..n {
+        let xi = x.row(i);
+        let o = out.row_mut(i);
+        for c in 0..k {
+            let v = comps.row(c);
+            o[c] = dot(xi, v) - dot(mean, v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(1);
+        for n in [0, 1, 15, 16, 17, 64, 100] {
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_naive() {
+        let a = randt(&[7, 33], 2);
+        let b = randt(&[9, 33], 3);
+        let mut out = Tensor::zeros(&[7, 9]);
+        gemm_nt(&a, &b, &mut out);
+        for i in 0..7 {
+            for j in 0..9 {
+                let naive: f32 = a.row(i).iter().zip(b.row(j)).map(|(x, y)| x * y).sum();
+                assert!((out.row(i)[j] - naive).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_rows_unit() {
+        let mut t = randt(&[5, 16], 4);
+        normalize_rows(&mut t);
+        for i in 0..5 {
+            let n = dot(t.row(i), t.row(i)).sqrt();
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn normalize_rows_zero_safe() {
+        let mut t = Tensor::zeros(&[2, 4]);
+        normalize_rows(&mut t);
+        assert!(t.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn pca_finds_dominant_direction() {
+        // Points spread along a known axis + small noise.
+        let d = 8;
+        let n = 400;
+        let mut rng = Rng::new(5);
+        let mut axis = vec![0.0f32; d];
+        axis[2] = 1.0;
+        let mut x = Tensor::zeros(&[n, d]);
+        for i in 0..n {
+            let t = rng.normal() as f32 * 5.0;
+            let row = x.row_mut(i);
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = axis[j] * t + rng.normal() as f32 * 0.05;
+            }
+        }
+        let (comps, _mean) = power_iteration_pca(&x, 1, 30, 0);
+        let c = comps.row(0);
+        assert!(c[2].abs() > 0.99, "pc0 = {c:?}");
+    }
+
+    #[test]
+    fn pca_components_orthonormal() {
+        let x = randt(&[200, 16], 6);
+        let (comps, _) = power_iteration_pca(&x, 3, 25, 1);
+        for i in 0..3 {
+            for j in 0..3 {
+                let d = dot(comps.row(i), comps.row(j));
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-3, "({i},{j}) -> {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn pca_project_shapes() {
+        let x = randt(&[10, 6], 7);
+        let (comps, mean) = power_iteration_pca(&x, 2, 10, 2);
+        let p = pca_project(&x, &comps, &mean);
+        assert_eq!(p.shape(), &[10, 2]);
+    }
+}

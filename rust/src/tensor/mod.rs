@@ -1,0 +1,8 @@
+//! Dense row-major f32 tensors + the linear algebra the substrates need.
+
+mod linalg;
+#[allow(clippy::module_inception)]
+mod tensor;
+
+pub use linalg::{dot, gemm_nt, matvec, normalize_rows, pca_project, power_iteration_pca, scaled_add};
+pub use tensor::{load_tensor_set, save_tensor_set, Tensor};

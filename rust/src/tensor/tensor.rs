@@ -1,0 +1,264 @@
+//! A deliberately small dense tensor: row-major `f32`, shape up to rank 3.
+//! It exists to carry embeddings/params between the substrates and the
+//! PJRT boundary — not to be a general ndarray.
+
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+
+/// Row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+/// Magic header for the single-tensor binary format (`.amt`).
+const MAGIC: &[u8; 4] = b"AMT1";
+/// Magic for a named-tensor container (`.amts`): checkpoints, datasets.
+const MAGIC_SET: &[u8; 4] = b"AMTS";
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} != data len {}",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows when interpreted as a matrix [rows, cols].
+    pub fn rows(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape[0]
+        }
+    }
+
+    /// Row width = product of trailing dims.
+    pub fn row_width(&self) -> usize {
+        self.shape.iter().skip(1).product::<usize>().max(1)
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.row_width();
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let w = self.row_width();
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Gather rows by index into a new tensor.
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        let w = self.row_width();
+        let mut out = Vec::with_capacity(idx.len() * w);
+        for &i in idx {
+            out.extend_from_slice(self.row(i));
+        }
+        let mut shape = self.shape.clone();
+        shape[0] = idx.len();
+        Tensor::from_vec(&shape, out)
+    }
+
+    // ------------------------------------------------------------------
+    // Binary IO (.amt / .amts): little-endian, versioned by magic.
+    // ------------------------------------------------------------------
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.shape.len() as u32).to_le_bytes())?;
+        for &d in &self.shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        // SAFETY-free byte copy of f32 LE data.
+        let mut buf = Vec::with_capacity(self.data.len() * 4);
+        for &v in &self.data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Tensor> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad tensor magic {magic:?}");
+        }
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let rank = u32::from_le_bytes(b4) as usize;
+        if rank > 8 {
+            bail!("implausible tensor rank {rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        let mut b8 = [0u8; 8];
+        for _ in 0..rank {
+            r.read_exact(&mut b8)?;
+            shape.push(u64::from_le_bytes(b8) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut raw = vec![0u8; n * 4];
+        r.read_exact(&mut raw)?;
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut f)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Tensor> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Self::read_from(&mut f)
+    }
+}
+
+/// Save a named tensor set (checkpoints, prepared datasets).
+pub fn save_tensor_set(path: &std::path::Path, items: &[(String, &Tensor)]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC_SET)?;
+    f.write_all(&(items.len() as u32).to_le_bytes())?;
+    for (name, t) in items {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        t.write_to(&mut f)?;
+    }
+    Ok(())
+}
+
+/// Load a named tensor set.
+pub fn load_tensor_set(path: &std::path::Path) -> Result<Vec<(String, Tensor)>> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC_SET {
+        bail!("bad tensor-set magic {magic:?}");
+    }
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)?;
+    let count = u32::from_le_bytes(b4) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        f.read_exact(&mut b4)?;
+        let nlen = u32::from_le_bytes(b4) as usize;
+        let mut nb = vec![0u8; nlen];
+        f.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb)?;
+        let t = Tensor::read_from(&mut f)?;
+        out.push((name, t));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_io() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        let back = Tensor::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar(4.25);
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        let back = Tensor::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.shape(), &[] as &[usize]);
+        assert_eq!(back.data()[0], 4.25);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let buf = b"NOPE0000".to_vec();
+        assert!(Tensor::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rows_and_gather() {
+        let t = Tensor::from_vec(&[3, 2], vec![0., 1., 10., 11., 20., 21.]);
+        assert_eq!(t.row(1), &[10., 11.]);
+        let g = t.gather_rows(&[2, 0]);
+        assert_eq!(g.data(), &[20., 21., 0., 1.]);
+        assert_eq!(g.shape(), &[2, 2]);
+    }
+
+    #[test]
+    fn tensor_set_roundtrip() {
+        let a = Tensor::from_vec(&[2], vec![1., 2.]);
+        let b = Tensor::zeros(&[2, 2]);
+        let dir = std::env::temp_dir().join("amips_test_set.amts");
+        save_tensor_set(&dir, &[("a".into(), &a), ("b".into(), &b)]).unwrap();
+        let back = load_tensor_set(&dir).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, "a");
+        assert_eq!(back[0].1, a);
+        assert_eq!(back[1].1, b);
+        let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+}

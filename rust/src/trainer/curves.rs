@@ -1,0 +1,83 @@
+//! Training/validation curves (paper Figs. 9, 11, 15): plain data
+//! holders plus text rendering for the bench reports.
+
+/// One logged optimization point.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub step: usize,
+    pub loss: f32,
+    /// SupportNet: score loss; KeyNet: key loss.
+    pub loss_a: f32,
+    /// SupportNet: grad loss; KeyNet: consistency loss.
+    pub loss_b: f32,
+}
+
+/// One validation checkpoint.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalPoint {
+    pub step: usize,
+    /// Relative transport error E_rel (Eq. 4.1), log scale.
+    pub e_rel: f32,
+    pub mse_key: f32,
+    pub mse_score: f32,
+}
+
+/// Full training trajectory.
+#[derive(Clone, Debug, Default)]
+pub struct TrainingCurve {
+    pub train: Vec<CurvePoint>,
+    pub eval: Vec<EvalPoint>,
+}
+
+impl TrainingCurve {
+    pub fn final_e_rel(&self) -> Option<f32> {
+        self.eval.last().map(|e| e.e_rel)
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.train.last().map(|p| p.loss)
+    }
+
+    /// ASCII sparkline of E_rel over training (bench reports).
+    pub fn e_rel_sparkline(&self) -> String {
+        const BARS: &[char] = &['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        if self.eval.is_empty() {
+            return String::new();
+        }
+        let vals: Vec<f32> = self.eval.iter().map(|e| e.e_rel).collect();
+        let (lo, hi) = vals
+            .iter()
+            .fold((f32::MAX, f32::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+        let span = (hi - lo).max(1e-9);
+        vals.iter()
+            .map(|v| BARS[(((v - lo) / span) * 7.0).round() as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparkline_len_matches_points() {
+        let mut c = TrainingCurve::default();
+        for (i, v) in [0.5f32, 0.0, -0.5, -1.0].iter().enumerate() {
+            c.eval.push(EvalPoint {
+                step: i,
+                e_rel: *v,
+                mse_key: 0.0,
+                mse_score: 0.0,
+            });
+        }
+        assert_eq!(c.e_rel_sparkline().chars().count(), 4);
+        assert_eq!(c.final_e_rel(), Some(-1.0));
+    }
+
+    #[test]
+    fn empty_curve_safe() {
+        let c = TrainingCurve::default();
+        assert!(c.e_rel_sparkline().is_empty());
+        assert_eq!(c.final_e_rel(), None);
+    }
+}

@@ -1,0 +1,11 @@
+//! Rust-driven training: the Adam step itself is the AOT-compiled
+//! `<config>.train` artifact (L2), this module owns everything around it
+//! — batch sampling, the step loop, EMA parameter extraction, validation
+//! curves, and checkpoint caching shared by the benches.
+
+pub mod curves;
+#[allow(clippy::module_inception)]
+pub mod trainer;
+
+pub use curves::{CurvePoint, EvalPoint, TrainingCurve};
+pub use trainer::{train, train_or_load, TrainOpts, TrainOutcome};

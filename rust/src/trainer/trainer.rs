@@ -1,0 +1,255 @@
+//! The training loop driver (paper Sec. 3.3 / 4.1, scaled to this
+//! testbed — DESIGN.md §3 substitution table).
+
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+use crate::data::Dataset;
+use crate::model::ParamSet;
+use crate::runtime::engine::{lit_f32, lit_scalar_u32, literal_to_vec, Engine};
+use crate::runtime::ArtifactMeta;
+use crate::tensor::Tensor;
+use crate::trainer::curves::{CurvePoint, EvalPoint, TrainingCurve};
+use crate::util::Rng;
+
+/// Training hyperparameters (runtime inputs to the AOT step, so sweeps
+/// like the Fig. 14 loss ablation never re-export artifacts).
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub steps: usize,
+    pub peak_lr: f32,
+    /// SupportNet: lam_score; KeyNet: lam_consist (paper default 0.01).
+    pub lam_a: f32,
+    /// SupportNet: lam_grad; KeyNet: lam_key (paper default 1.0).
+    pub lam_b: f32,
+    /// ICNN non-negativity penalty weight (SupportNet).
+    pub lam_icnn: f32,
+    pub ema_decay: f32,
+    pub warmup_frac: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    /// Evaluate every `eval_every` steps (0 = only at the end).
+    pub eval_every: usize,
+    /// Log a train point every `log_every` steps.
+    pub log_every: usize,
+    pub verbose: bool,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            steps: 1200,
+            peak_lr: 1e-2,
+            lam_a: 0.01,
+            lam_b: 1.0,
+            lam_icnn: 1e-4,
+            ema_decay: 0.995,
+            warmup_frac: 0.025,
+            weight_decay: 0.0,
+            seed: 7,
+            eval_every: 200,
+            log_every: 50,
+            verbose: false,
+        }
+    }
+}
+
+/// Result of a training run.
+pub struct TrainOutcome {
+    /// EMA parameters (what the paper evaluates).
+    pub params: ParamSet,
+    pub curve: TrainingCurve,
+    pub steps: usize,
+}
+
+fn shapes_of(meta: &ArtifactMeta) -> Vec<Vec<usize>> {
+    meta.params.iter().map(|(_, s)| s.clone()).collect()
+}
+
+/// Build the padded eval batch literals (x, y*, sigma) once.
+fn eval_batch_literals(
+    meta: &ArtifactMeta,
+    ds: &Dataset,
+) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+    let be = meta.eval_batch;
+    let (d, c) = (meta.d, meta.c);
+    let nval = ds.val.x.rows();
+    anyhow::ensure!(nval > 0, "empty validation set");
+    let idx: Vec<usize> = (0..be).map(|i| i % nval).collect();
+    let (mut x, mut y, mut s) = (Vec::new(), Vec::new(), Vec::new());
+    ds.batch(&ds.val, &idx, &mut x, &mut y, &mut s);
+    Ok((
+        lit_f32(&[be, d], &x)?,
+        lit_f32(&[be, c, d], &y)?,
+        lit_f32(&[be, c], &s)?,
+    ))
+}
+
+/// Extract the EMA parameter block from the state literals.
+fn ema_params(meta: &ArtifactMeta, state: &[xla::Literal]) -> Result<ParamSet> {
+    let p = meta.n_param_tensors;
+    let shapes = shapes_of(meta);
+    let mut tensors = Vec::with_capacity(p);
+    for (i, shape) in shapes.iter().enumerate() {
+        let v = literal_to_vec(&state[3 * p + i])?;
+        tensors.push(Tensor::from_vec(shape, v));
+    }
+    Ok(ParamSet { tensors })
+}
+
+/// Run the full training loop for `meta` on `ds`.
+pub fn train(engine: &Engine, meta: &ArtifactMeta, ds: &Dataset, opts: &TrainOpts) -> Result<TrainOutcome> {
+    if ds.c != meta.c {
+        bail!(
+            "dataset prepared with c={} but model {} wants c={}",
+            ds.c,
+            meta.name,
+            meta.c
+        );
+    }
+    if ds.d() != meta.d {
+        bail!("dataset d={} vs model d={}", ds.d(), meta.d);
+    }
+    let init = engine.load(&format!("{}.init", meta.name))?;
+    let step_exe = engine.load(&format!("{}.train", meta.name))?;
+    let eval_exe = engine.load(&format!("{}.eval", meta.name))?;
+
+    // state <- init(seed)
+    let seed_lit = lit_scalar_u32(opts.seed as u32)?;
+    let mut state = init.run(&[&seed_lit])?;
+    anyhow::ensure!(
+        state.len() == meta.n_state_tensors,
+        "init returned {} tensors, meta wants {}",
+        state.len(),
+        meta.n_state_tensors
+    );
+
+    let hparams = lit_f32(
+        &[8],
+        &[
+            opts.lam_a,
+            opts.lam_b,
+            opts.lam_icnn,
+            opts.peak_lr,
+            opts.steps as f32,
+            opts.warmup_frac,
+            opts.ema_decay,
+            opts.weight_decay,
+        ],
+    )?;
+
+    let b = meta.train_batch;
+    let (d, c) = (meta.d, meta.c);
+    let n_train = ds.train.x.rows();
+    anyhow::ensure!(n_train > 0, "empty train set");
+    let mut rng = Rng::new(opts.seed ^ 0xBA7C4);
+    let (ex, ey, es) = eval_batch_literals(meta, ds)?;
+
+    let mut curve = TrainingCurve::default();
+    let (mut xb, mut yb, mut sb) = (Vec::new(), Vec::new(), Vec::new());
+    let mut indices = vec![0usize; b];
+
+    for step in 0..opts.steps {
+        for i in indices.iter_mut() {
+            *i = rng.below(n_train);
+        }
+        ds.batch(&ds.train, &indices, &mut xb, &mut yb, &mut sb);
+        let xl = lit_f32(&[b, d], &xb)?;
+        let yl = lit_f32(&[b, c, d], &yb)?;
+        let sl = lit_f32(&[b, c], &sb)?;
+
+        let mut inputs: Vec<&xla::Literal> = state.iter().collect();
+        inputs.push(&xl);
+        inputs.push(&yl);
+        inputs.push(&sl);
+        inputs.push(&hparams);
+        let mut out = step_exe.run(&inputs)?;
+        let metrics_lit = out.pop().unwrap();
+        state = out;
+
+        let log_now = opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == opts.steps);
+        if log_now {
+            let m = literal_to_vec(&metrics_lit)?;
+            curve.train.push(CurvePoint {
+                step,
+                loss: m[0],
+                loss_a: m[1],
+                loss_b: m[2],
+            });
+            if opts.verbose {
+                eprintln!(
+                    "[{}] step {step}/{} loss {:.5} a {:.5} b {:.5}",
+                    meta.name, opts.steps, m[0], m[1], m[2]
+                );
+            }
+        }
+
+        let eval_now = (opts.eval_every > 0 && step > 0 && step % opts.eval_every == 0)
+            || step + 1 == opts.steps;
+        if eval_now {
+            let p = meta.n_param_tensors;
+            let mut inputs: Vec<&xla::Literal> = state[3 * p..4 * p].iter().collect();
+            inputs.push(&ex);
+            inputs.push(&ey);
+            inputs.push(&es);
+            let out = eval_exe.run(&inputs)?;
+            let m = literal_to_vec(&out[0])?;
+            curve.eval.push(EvalPoint {
+                step,
+                e_rel: m[0],
+                mse_key: m[1],
+                mse_score: m[2],
+            });
+            if opts.verbose {
+                eprintln!(
+                    "[{}] eval @ {step}: E_rel {:.4} mse_key {:.5} mse_score {:.5}",
+                    meta.name, m[0], m[1], m[2]
+                );
+            }
+        }
+    }
+
+    let params = ema_params(meta, &state)?;
+    Ok(TrainOutcome {
+        params,
+        curve,
+        steps: opts.steps,
+    })
+}
+
+/// Checkpoint path for a (config, steps, seed, lambda) combination.
+pub fn checkpoint_path(dir: &std::path::Path, meta: &ArtifactMeta, opts: &TrainOpts) -> PathBuf {
+    // lambdas are part of the identity so the Fig-14 ablation caches
+    // separately per configuration.
+    let tag = format!(
+        "{}.s{}.seed{}.la{:.0e}.lb{:.0e}.lr{:.0e}",
+        meta.name, opts.steps, opts.seed, opts.lam_a, opts.lam_b, opts.peak_lr
+    );
+    dir.join("checkpoints").join(format!("{tag}.amts"))
+}
+
+/// Train unless a cached checkpoint exists (benches share models).
+pub fn train_or_load(
+    engine: &Engine,
+    meta: &ArtifactMeta,
+    ds: &Dataset,
+    opts: &TrainOpts,
+) -> Result<TrainOutcome> {
+    let path = checkpoint_path(engine.dir(), meta, opts);
+    if path.exists() {
+        if let Ok(params) = ParamSet::load(meta, &path) {
+            return Ok(TrainOutcome {
+                params,
+                curve: TrainingCurve::default(),
+                steps: opts.steps,
+            });
+        }
+        // corrupt / stale checkpoint -> retrain below
+    }
+    let out = train(engine, meta, ds, opts)?;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    out.params.save(meta, &path)?;
+    Ok(out)
+}

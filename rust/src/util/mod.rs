@@ -1,0 +1,9 @@
+//! Small self-contained utilities (the offline environment vendors no
+//! `rand`, `rayon` or logging crates — these modules replace them).
+
+pub mod rng;
+pub mod threads;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

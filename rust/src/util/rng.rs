@@ -1,0 +1,203 @@
+//! Deterministic PRNG: xoshiro256++ seeded via SplitMix64, plus Gaussian
+//! sampling (Box–Muller). No external crates are available offline, and a
+//! fully deterministic generator is a feature here anyway: every dataset,
+//! clustering and augmentation in the repo is reproducible from a u64 seed.
+
+/// xoshiro256++ (Blackman & Vigna). Passes BigCrush; 2^256-1 period.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box–Muller output.
+    spare: Option<f64>,
+}
+
+#[inline(always)]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed deterministically; distinct seeds give independent streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare: None }
+    }
+
+    /// Derive an independent child stream (for per-shard determinism).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline(always)]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = (s[0].wrapping_add(s[3]))
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline(always)]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 high bits -> [0,1) double.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform u32 in [0, bound) without modulo bias (Lemire).
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0 && bound <= u32::MAX as usize);
+        let b = bound as u64;
+        let mut x = self.next_u64() & 0xFFFF_FFFF;
+        let mut m = x * b;
+        let mut l = m & 0xFFFF_FFFF;
+        if l < b {
+            let t = (u32::MAX as u64 + 1 - b) % b;
+            while l < t {
+                x = self.next_u64() & 0xFFFF_FFFF;
+                m = x * b;
+                l = m & 0xFFFF_FFFF;
+            }
+        }
+        (m >> 32) as usize
+    }
+
+    /// Standard normal via Box–Muller (caches the paired sample).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        // u1 in (0,1] to keep ln finite.
+        let u1 = 1.0 - self.uniform();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Fill a slice with i.i.d. N(0, std^2) f32 samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal() as f32 * std;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_differ() {
+        let (mut a, mut b) = (Rng::new(1), Rng::new(2));
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range_and_mean() {
+        let mut r = Rng::new(7);
+        let mut sum = 0.0;
+        for _ in 0..20_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / 20_000.0 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(9);
+        let n = 50_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            m1 += z;
+            m2 += z * z;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.03, "var {m2}");
+    }
+
+    #[test]
+    fn below_unbiased_small() {
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(4);
+        let idx = r.sample_indices(100, 30);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+        assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(5);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

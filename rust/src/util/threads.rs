@@ -1,0 +1,131 @@
+//! Minimal data-parallel helpers on `std::thread::scope` (no rayon
+//! offline). On this single-core testbed `parallel_for` degrades to a
+//! plain loop; the code is still structured for multi-core so the repo
+//! runs at full width elsewhere.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (respects `AMIPS_THREADS`).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("AMIPS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(chunk_index, start, end)` over `n` items split into contiguous
+/// chunks, one in-flight chunk per worker, work-stealing via an atomic
+/// cursor. `f` must be `Sync` (called concurrently).
+pub fn parallel_chunks<F>(n: usize, chunk: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let workers = num_threads();
+    let chunk = chunk.max(1);
+    if workers <= 1 || n <= chunk {
+        let mut start = 0;
+        let mut i = 0;
+        while start < n {
+            let end = (start + chunk).min(n);
+            f(i, start, end);
+            start = end;
+            i += 1;
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    let nchunks = n.div_ceil(chunk);
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(nchunks) {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= nchunks {
+                    break;
+                }
+                let start = i * chunk;
+                let end = (start + chunk).min(n);
+                f(i, start, end);
+            });
+        }
+    });
+}
+
+/// Map `f` over disjoint mutable row-chunks of `out` (rows of width
+/// `row_w`), passing the global row range. The classic "split a matrix by
+/// rows across workers" pattern without unsafe at call sites.
+pub fn parallel_rows_mut<F>(out: &mut [f32], row_w: usize, rows_per_task: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len() % row_w.max(1), 0);
+    let n_rows = if row_w == 0 { 0 } else { out.len() / row_w };
+    let workers = num_threads();
+    if workers <= 1 || n_rows <= rows_per_task {
+        for (i, chunk_rows) in out.chunks_mut(rows_per_task.max(1) * row_w).enumerate() {
+            let start = i * rows_per_task;
+            let end = start + chunk_rows.len() / row_w;
+            f(start, end, chunk_rows);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut start = 0;
+        while !rest.is_empty() {
+            let take = (rows_per_task * row_w).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let end = start + take / row_w;
+            let fref = &f;
+            s.spawn(move || fref(start, end, head));
+            rest = tail;
+            start = end;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_all_items_once() {
+        let n = 1003;
+        let seen = (0..n).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>();
+        parallel_chunks(n, 17, |_, s, e| {
+            for i in s..e {
+                seen[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(seen.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunks_handle_empty_and_single() {
+        parallel_chunks(0, 8, |_, _, _| panic!("no work expected"));
+        let hits = AtomicU64::new(0);
+        parallel_chunks(1, 8, |_, s, e| {
+            assert_eq!((s, e), (0, 1));
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn rows_mut_writes_disjoint() {
+        let mut out = vec![0.0f32; 10 * 4];
+        parallel_rows_mut(&mut out, 4, 3, |start, end, chunk| {
+            assert_eq!(chunk.len(), (end - start) * 4);
+            for (r, row) in chunk.chunks_mut(4).enumerate() {
+                row.fill((start + r) as f32);
+            }
+        });
+        for r in 0..10 {
+            assert!(out[r * 4..r * 4 + 4].iter().all(|&v| v == r as f32));
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Wall-clock timing + latency statistics used by Table 1 and every
+//! latency-axis Pareto plot (no criterion offline; `bench_support`
+//! builds the harness on these primitives).
+
+use std::time::Instant;
+
+/// Simple stopwatch.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Run `f` `reps` times after `warmup` runs; returns per-rep seconds.
+pub fn time_reps<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..reps)
+        .map(|_| {
+            let t = Timer::start();
+            f();
+            t.elapsed_s()
+        })
+        .collect()
+}
+
+/// Summary statistics over a sample of seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| sorted[((p * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1)];
+        Stats {
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: q(0.5),
+            p95: q(0.95),
+            max: *sorted.last().unwrap(),
+        }
+    }
+}
+
+/// Online latency histogram with fixed log-spaced buckets (1us..10s),
+/// allocation-free on the record path — used by the serving coordinator.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_s: f64,
+    max_s: f64,
+}
+
+const HIST_BUCKETS: usize = 64;
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum_s: 0.0,
+            max_s: 0.0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(s: f64) -> usize {
+        // log10 from 1e-6 .. 10 s over 64 buckets
+        let l = (s.max(1e-6)).log10(); // in [-6, ...]
+        (((l + 6.0) / 7.0 * HIST_BUCKETS as f64) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    #[inline]
+    pub fn record(&mut self, seconds: f64) {
+        self.buckets[Self::bucket_of(seconds)] += 1;
+        self.count += 1;
+        self.sum_s += seconds;
+        if seconds > self.max_s {
+            self.max_s = seconds;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket midpoints.
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let mid = (i as f64 + 0.5) / HIST_BUCKETS as f64 * 7.0 - 6.0;
+                return 10f64.powf(mid);
+            }
+        }
+        self.max_s
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_s += other.sum_s;
+        self.max_s = self.max_s.max(other.max_s);
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-5); // 10us .. 10ms
+        }
+        assert_eq!(h.count(), 1000);
+        let (p50, p95) = (h.quantile_s(0.5), h.quantile_s(0.95));
+        assert!(p50 < p95);
+        assert!(p50 > 1e-3 && p50 < 1e-2, "{p50}");
+        assert!((h.mean_s() - 5.0e-3).abs() < 1e-3);
+    }
+
+    #[test]
+    fn histogram_merge_adds() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(1e-3);
+        b.record(2e-3);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn time_reps_counts() {
+        let v = time_reps(1, 5, || {
+            std::hint::black_box(0);
+        });
+        assert_eq!(v.len(), 5);
+        assert!(v.iter().all(|&s| s >= 0.0));
+    }
+}

@@ -1,0 +1,273 @@
+//! Integration tests over the full AOT pipeline: artifact loading, PJRT
+//! execution, the training loop, inference handles, routing and the
+//! serving coordinator. Requires `make artifacts` (skips itself
+//! gracefully otherwise).
+
+use amips::bench_support::fixtures;
+use amips::coordinator::pipeline::MappedSearchPipeline;
+use amips::coordinator::router::{routing_accuracy, AmortizedRouter, CentroidRouter, Router};
+use amips::coordinator::{BatchPolicy, Server, ServerConfig};
+use amips::data::dataset::PrepareOpts;
+use amips::data::Dataset;
+use amips::index::ivf::IvfIndex;
+use amips::model::AmortizedModel;
+use amips::runtime::{Engine, Manifest};
+use amips::tensor::dot;
+use amips::trainer::{self, TrainOpts};
+use std::sync::Arc;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    match fixtures::load_manifest() {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("skipping integration test: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+fn tiny_dataset(manifest: &Manifest, name: &str, c: usize) -> Dataset {
+    // smaller than the bench fixture: fast exact targets for tests
+    let mut spec = manifest.dataset(name).unwrap().to_corpus_spec();
+    spec.n_queries = 600;
+    Dataset::prepare(
+        &spec,
+        &PrepareOpts {
+            c,
+            augment: 1,
+            val_queries: 128,
+            kmeans_restarts: 1,
+            ..Default::default()
+        },
+    )
+}
+
+fn quick_opts(steps: usize) -> TrainOpts {
+    TrainOpts {
+        steps,
+        eval_every: 0,
+        log_every: steps,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn artifact_metas_parse_and_match_manifest() {
+    let Some(m) = manifest_or_skip() else { return };
+    assert!(!m.configs.is_empty());
+    for config in m.configs.iter().take(12) {
+        let meta = m.meta(config).expect(config);
+        assert_eq!(&meta.name, config);
+        assert!(meta.h >= 8);
+        assert_eq!(meta.n_state_tensors, 4 * meta.n_param_tensors + 1);
+        // every advertised artifact file must exist
+        for part in ["init", "train", "fwd", "eval"] {
+            let p = m.dir.join(format!("{config}.{part}.hlo.txt"));
+            assert!(p.exists(), "{}", p.display());
+        }
+    }
+}
+
+#[test]
+fn init_artifact_produces_valid_state() {
+    let Some(m) = manifest_or_skip() else { return };
+    let engine = Engine::new(m.dir.clone()).unwrap();
+    let config = "fiqa-s.keynet.xs.l2.c1";
+    let meta = m.meta(config).unwrap();
+    let init = engine.load(&format!("{config}.init")).unwrap();
+    let seed = amips::runtime::lit_scalar_u32(3).unwrap();
+    let state = init.run(&[&seed]).unwrap();
+    assert_eq!(state.len(), meta.n_state_tensors);
+    // params (first block) should be finite and not all zero
+    let p0 = amips::runtime::literal_to_vec(&state[0]).unwrap();
+    assert!(p0.iter().all(|v| v.is_finite()));
+    assert!(p0.iter().any(|&v| v != 0.0));
+    // different seeds give different params
+    let seed2 = amips::runtime::lit_scalar_u32(4).unwrap();
+    let state2 = init.run(&[&seed2]).unwrap();
+    let p1 = amips::runtime::literal_to_vec(&state2[0]).unwrap();
+    assert_ne!(p0, p1);
+}
+
+#[test]
+fn training_reduces_loss_and_checkpoints_roundtrip() {
+    let Some(m) = manifest_or_skip() else { return };
+    let engine = Engine::new(m.dir.clone()).unwrap();
+    let config = "fiqa-s.keynet.xs.l2.c1";
+    let meta = m.meta(config).unwrap();
+    let ds = tiny_dataset(&m, "fiqa-s", 1);
+    let mut opts = quick_opts(150);
+    opts.log_every = 10;
+    let out = trainer::train(&engine, &meta, &ds, &opts).unwrap();
+    let first = out.curve.train.first().unwrap().loss;
+    let last = out.curve.train.last().unwrap().loss;
+    assert!(
+        last < first * 0.8,
+        "loss did not improve: {first} -> {last}"
+    );
+    // checkpoint roundtrip preserves params exactly
+    let path = std::env::temp_dir().join("amips_it_ckpt.amts");
+    out.params.save(&meta, &path).unwrap();
+    let back = amips::model::ParamSet::load(&meta, &path).unwrap();
+    assert_eq!(back.tensors[0], out.params.tensors[0]);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn supportnet_grad_satisfies_euler_identity() {
+    // <grad f(x), x> == f(x) for the homogenized SupportNet — checks the
+    // fwd and grad artifacts agree with each other through PJRT.
+    let Some(m) = manifest_or_skip() else { return };
+    let engine = Engine::new(m.dir.clone()).unwrap();
+    let config = "fiqa-s.supportnet.xs.l2.c1";
+    let meta = m.meta(config).unwrap();
+    let ds = tiny_dataset(&m, "fiqa-s", 1);
+    let out = trainer::train(&engine, &meta, &ds, &quick_opts(30)).unwrap();
+    let model = AmortizedModel::load(&engine, meta.clone(), &out.params).unwrap();
+    let (scores, keys) = model.scores_and_keys(&ds.val.x).unwrap();
+    let d = meta.d;
+    for q in 0..16 {
+        let f = scores.row(q)[0];
+        let g = &keys.data()[q * d..(q + 1) * d];
+        let euler = dot(g, ds.val.x.row(q));
+        assert!(
+            (euler - f).abs() < 1e-2 * f.abs().max(1.0),
+            "q={q}: <grad,x>={euler} vs f={f}"
+        );
+    }
+}
+
+#[test]
+fn keynet_scores_consistent_with_keys() {
+    let Some(m) = manifest_or_skip() else { return };
+    let engine = Engine::new(m.dir.clone()).unwrap();
+    let config = "fiqa-s.keynet.xs.l2.c1";
+    let meta = m.meta(config).unwrap();
+    let ds = tiny_dataset(&m, "fiqa-s", 1);
+    let out = trainer::train(&engine, &meta, &ds, &quick_opts(30)).unwrap();
+    let model = AmortizedModel::load(&engine, meta.clone(), &out.params).unwrap();
+    let (scores, keys) = model.scores_and_keys(&ds.val.x).unwrap();
+    let d = meta.d;
+    for q in 0..16 {
+        let k = &keys.data()[q * d..(q + 1) * d];
+        let want = dot(k, ds.val.x.row(q));
+        let got = scores.row(q)[0];
+        assert!((got - want).abs() < 1e-4, "q={q}: {got} vs {want}");
+    }
+}
+
+#[test]
+fn clustered_training_and_routing_beats_nothing() {
+    let Some(m) = manifest_or_skip() else { return };
+    let engine = Engine::new(m.dir.clone()).unwrap();
+    let config = "quora-s.keynet.xs.l4.c10";
+    let meta = m.meta(config).unwrap();
+    let ds = tiny_dataset(&m, "quora-s", 10);
+    let out = trainer::train(&engine, &meta, &ds, &quick_opts(250)).unwrap();
+    let model = AmortizedModel::load(&engine, meta, &out.params).unwrap();
+    let router = AmortizedRouter::new(model);
+    let baseline = CentroidRouter::new(ds.centroids.clone());
+    let tc: Vec<usize> = (0..ds.val.gt.n_queries())
+        .map(|q| ds.val.gt.top_cluster(q))
+        .collect();
+    let learned = routing_accuracy(&router.route_batch(&ds.val.x, 2).unwrap(), &tc);
+    let cent = routing_accuracy(&baseline.route_batch(&ds.val.x, 2).unwrap(), &tc);
+    // a briefly-trained router should already be in the baseline's league
+    assert!(learned > 0.5, "learned router accuracy {learned}");
+    assert!(cent > 0.5);
+}
+
+#[test]
+fn mapped_pipeline_runs_on_every_backend() {
+    let Some(m) = manifest_or_skip() else { return };
+    let engine = Engine::new(m.dir.clone()).unwrap();
+    let config = "fiqa-s.keynet.xs.l2.c1";
+    let meta = m.meta(config).unwrap();
+    let ds = tiny_dataset(&m, "fiqa-s", 1);
+    let out = trainer::train(&engine, &meta, &ds, &quick_opts(30)).unwrap();
+    let model = AmortizedModel::load(&engine, meta, &out.params).unwrap();
+    let nlist = 8;
+    let backends: Vec<Box<dyn amips::index::VectorIndex>> = vec![
+        Box::new(IvfIndex::build(&ds.keys, nlist, 8, 1)),
+        Box::new(amips::index::scann::ScannIndex::build(&ds.keys, nlist, 8, 4.0, 1)),
+        Box::new(amips::index::soar::SoarIndex::build(&ds.keys, nlist, 4, 1)),
+        Box::new(amips::index::leanvec::LeanVecIndex::build(&ds.keys, 16, nlist, None, 1)),
+    ];
+    for idx in &backends {
+        let pipe = MappedSearchPipeline::mapped(idx.as_ref(), &model);
+        let out = pipe.run(&ds.val.x, 5, 2).unwrap();
+        assert_eq!(out.results.len(), ds.val.x.rows(), "{}", idx.name());
+        assert!(out.results.iter().all(|r| !r.ids.is_empty()));
+        assert!(out.map_flops_per_query > 0);
+    }
+}
+
+#[test]
+fn server_end_to_end_under_concurrent_load() {
+    let Some(m) = manifest_or_skip() else { return };
+    let config = "fiqa-s.keynet.xs.l2.c1";
+    let meta = m.meta(config).unwrap();
+    let ds = tiny_dataset(&m, "fiqa-s", 1);
+    let params = {
+        let engine = Engine::new(m.dir.clone()).unwrap();
+        trainer::train(&engine, &meta, &ds, &quick_opts(30))
+            .unwrap()
+            .params
+    };
+    let index = Arc::new(IvfIndex::build(&ds.keys, 8, 8, 1));
+    let (server, handle) = Server::start(
+        ServerConfig {
+            artifacts_dir: m.dir.clone(),
+            meta,
+            params,
+            policy: BatchPolicy {
+                max_batch: 64,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            map_queries: true,
+            nprobe_default: 2,
+        },
+        index,
+    )
+    .unwrap();
+    let total = 64usize;
+    std::thread::scope(|s| {
+        for c in 0..4usize {
+            let handle = handle.clone();
+            let ds = &ds;
+            s.spawn(move || {
+                for i in (c..total).step_by(4) {
+                    let resp = handle
+                        .query(ds.val.x.row(i % ds.val.x.rows()).to_vec(), 5)
+                        .unwrap();
+                    assert_eq!(resp.ids.len(), 5);
+                }
+            });
+        }
+    });
+    let stats = server.latency_stats();
+    assert_eq!(stats.count(), total as u64);
+    drop(handle);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn failure_injection_bad_inputs_are_rejected() {
+    let Some(m) = manifest_or_skip() else { return };
+    let engine = Engine::new(m.dir.clone()).unwrap();
+    // unknown artifact
+    assert!(engine.load("no.such.artifact").is_err());
+    // checkpoint/meta shape mismatch
+    let meta_a = m.meta("fiqa-s.keynet.xs.l2.c1").unwrap();
+    let meta_b = m.meta("fiqa-s.keynet.s.l4.c1").unwrap();
+    let ds = tiny_dataset(&m, "fiqa-s", 1);
+    let out = trainer::train(&engine, &meta_a, &ds, &quick_opts(10)).unwrap();
+    assert!(out.params.validate(&meta_b).is_err());
+    // wrong dataset c for a clustered model
+    let meta_c10 = m.meta("quora-s.keynet.xs.l4.c10").unwrap();
+    assert!(trainer::train(&engine, &meta_c10, &ds, &quick_opts(5)).is_err());
+    // wrong query dimensionality through the model handle
+    let model = AmortizedModel::load(&engine, meta_a, &out.params).unwrap();
+    let bad = amips::tensor::Tensor::zeros(&[4, 3]);
+    assert!(model.scores(&bad).is_err());
+}

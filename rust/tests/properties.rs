@@ -1,0 +1,286 @@
+//! Randomized property tests over the coordinator and index invariants
+//! (proptest is not available offline; these use the repo's deterministic
+//! PRNG to sweep hundreds of generated cases per property).
+
+use amips::coordinator::batcher::{BatchPolicy, Batcher};
+use amips::coordinator::router::{routing_accuracy, CentroidRouter, Router, RoutingDecision};
+use amips::data::ground_truth;
+use amips::index::traits::{TopK, VectorIndex};
+use amips::index::{flat::FlatIndex, ivf::IvfIndex, kmeans::KMeans, soar::SoarIndex};
+use amips::tensor::{dot, normalize_rows, Tensor};
+use amips::util::Rng;
+use std::time::Duration;
+
+fn unit(shape: &[usize], seed: u64) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+    normalize_rows(&mut t);
+    t
+}
+
+// ---------------------------------------------------------------------------
+// TopK: equivalent to full sort + truncate, for arbitrary inputs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_topk_matches_sort() {
+    let mut rng = Rng::new(100);
+    for case in 0..300 {
+        let n = 1 + rng.below(200);
+        let k = 1 + rng.below(20);
+        let scores: Vec<f32> = (0..n).map(|_| (rng.normal() as f32 * 10.0).round() / 4.0).collect();
+        let mut topk = TopK::new(k);
+        for (i, &s) in scores.iter().enumerate() {
+            topk.push(s, i as u32);
+        }
+        let (got_ids, got_scores) = topk.into_sorted();
+        // oracle: stable sort desc by (score, -id)
+        let mut oracle: Vec<(f32, u32)> = scores
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| (s, i as u32))
+            .collect();
+        oracle.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        oracle.truncate(k);
+        assert_eq!(
+            got_ids,
+            oracle.iter().map(|e| e.1).collect::<Vec<_>>(),
+            "case {case}: n={n} k={k}"
+        );
+        assert_eq!(got_scores, oracle.iter().map(|e| e.0).collect::<Vec<_>>());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// IVF invariants: permutation-completeness and nprobe monotonicity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ivf_results_subset_of_keys_and_sorted() {
+    let mut rng = Rng::new(200);
+    for case in 0..30 {
+        let n = 50 + rng.below(400);
+        let d = 8 + 8 * rng.below(4);
+        let nlist = 2 + rng.below(12);
+        let keys = unit(&[n, d], 1000 + case);
+        let ivf = IvfIndex::build(&keys, nlist, 8, case);
+        let q = unit(&[1, d], 2000 + case);
+        let nprobe = 1 + rng.below(nlist);
+        let res = ivf.search(q.row(0), 10, nprobe);
+        assert!(res.ids.iter().all(|&id| (id as usize) < n));
+        for w in res.scores.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        // scores must be true inner products of the claimed ids
+        for (id, s) in res.ids.iter().zip(&res.scores) {
+            let want = dot(q.row(0), keys.row(*id as usize));
+            assert!((want - s).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn prop_ivf_recall_monotone_in_nprobe() {
+    // Top-1 score found can only improve as more cells are probed.
+    let mut rng = Rng::new(300);
+    for case in 0..20 {
+        let n = 100 + rng.below(300);
+        let keys = unit(&[n, 16], 3000 + case);
+        let nlist = 8;
+        let ivf = IvfIndex::build(&keys, nlist, 8, case);
+        let q = unit(&[1, 16], 4000 + case);
+        let mut prev = f32::NEG_INFINITY;
+        for nprobe in 1..=nlist {
+            let res = ivf.search(q.row(0), 1, nprobe);
+            let s = res.scores[0];
+            assert!(
+                s >= prev - 1e-5,
+                "case {case}: nprobe {nprobe} got {s} < {prev}"
+            );
+            prev = prev.max(s);
+        }
+    }
+}
+
+#[test]
+fn prop_soar_full_probe_equals_flat_and_never_duplicates() {
+    let mut rng = Rng::new(400);
+    for case in 0..15 {
+        let n = 80 + rng.below(200);
+        let keys = unit(&[n, 12], 5000 + case);
+        let nlist = 6;
+        let soar = SoarIndex::build(&keys, nlist, 3, case);
+        let flat = FlatIndex::new(keys.clone());
+        let q = unit(&[1, 12], 6000 + case);
+        let a = soar.search(q.row(0), 5, nlist);
+        let b = flat.search(q.row(0), 5, 0);
+        assert_eq!(a.ids, b.ids, "case {case}");
+        let mut ids = a.ids.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), a.ids.len());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// k-means invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_kmeans_partition_is_total_and_consistent() {
+    let mut rng = Rng::new(500);
+    for case in 0..10 {
+        let n = 60 + rng.below(300);
+        let c = 2 + rng.below(8);
+        let x = unit(&[n, 16], 7000 + case);
+        let km = KMeans::fit(&x, c, 10, case);
+        assert_eq!(km.assign.len(), n);
+        assert!(km.assign.iter().all(|&a| (a as usize) < c));
+        assert_eq!(km.sizes.iter().sum::<usize>(), n);
+        // every point's assigned centroid must be its argmax centroid
+        for i in 0..n {
+            let mut best = (0usize, f32::NEG_INFINITY);
+            for j in 0..c {
+                let s = dot(x.row(i), km.centroids.row(j));
+                if s > best.1 {
+                    best = (j, s);
+                }
+            }
+            // Lloyd updates centroids after the final assignment, so the
+            // stored labels are argmax w.r.t. the *previous* centroids;
+            // allow the one-step drift but require near-optimality.
+            let assigned = dot(x.row(i), km.centroids.row(km.assign[i] as usize));
+            assert!(assigned >= best.1 - 0.15, "case {case} point {i}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ground truth: per-cluster tops dominate their cluster members
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ground_truth_is_argmax_within_cluster() {
+    let mut rng = Rng::new(600);
+    for case in 0..10 {
+        let n = 50 + rng.below(150);
+        let c = 1 + rng.below(5);
+        let keys = unit(&[n, 8], 8000 + case);
+        let queries = unit(&[12, 8], 9000 + case);
+        let assign: Vec<u32> = (0..n).map(|i| (i % c) as u32).collect();
+        let gt = ground_truth::compute(
+            &queries,
+            &keys,
+            c,
+            if c > 1 { Some(&assign) } else { None },
+        );
+        for q in 0..12 {
+            for j in 0..c {
+                let best = gt.idx(q, j);
+                assert_eq!(assign[best] as usize % c, j % c);
+                for m in 0..n {
+                    if assign[m] as usize == j {
+                        assert!(dot(queries.row(q), keys.row(m)) <= gt.score(q, j) + 1e-5);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_centroid_router_accuracy_monotone_in_k() {
+    let mut rng = Rng::new(700);
+    for case in 0..10 {
+        let c = 4 + rng.below(8);
+        let centroids = unit(&[c, 16], 10_000 + case);
+        let router = CentroidRouter::new(centroids.clone());
+        let queries = unit(&[64, 16], 11_000 + case);
+        let truth: Vec<usize> = (0..64).map(|i| i % c).collect();
+        let mut prev = 0.0;
+        for k in 1..=c {
+            let dec = router.route_batch(&queries, k).unwrap();
+            // decisions have exactly k distinct clusters
+            for d in &dec {
+                assert_eq!(d.clusters.len(), k);
+                let mut u = d.clusters.clone();
+                u.sort_unstable();
+                u.dedup();
+                assert_eq!(u.len(), k);
+            }
+            let acc = routing_accuracy(&dec, &truth);
+            assert!(acc >= prev - 1e-9, "case {case} k={k}");
+            prev = acc;
+        }
+        // k = c must always hit
+        assert!((prev - 1.0).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn prop_routing_accuracy_bounds() {
+    let dec: Vec<RoutingDecision> = (0..50)
+        .map(|i| RoutingDecision {
+            clusters: vec![(i % 3) as u32],
+            selection_flops: 0,
+        })
+        .collect();
+    let truth: Vec<usize> = (0..50).map(|i| i % 3).collect();
+    assert_eq!(routing_accuracy(&dec, &truth), 1.0);
+    let wrong: Vec<usize> = (0..50).map(|i| (i + 1) % 3).collect();
+    assert_eq!(routing_accuracy(&dec, &wrong), 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// Batcher: no loss, no duplication, order preserved, under random load
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_conserves_items() {
+    let mut rng = Rng::new(800);
+    for case in 0..20 {
+        let total = 1 + rng.below(500);
+        let max_batch = 1 + rng.below(64);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..total {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        let mut seen = Vec::new();
+        while let Some((batch, _)) = b.next_batch() {
+            assert!(batch.len() <= max_batch, "case {case}");
+            seen.extend(batch);
+        }
+        assert_eq!(seen, (0..total).collect::<Vec<_>>(), "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tensor IO: roundtrip for arbitrary shapes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tensor_io_roundtrip() {
+    let mut rng = Rng::new(900);
+    for case in 0..50 {
+        let rank = rng.below(3) + 1;
+        let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(20)).collect();
+        let mut t = Tensor::zeros(&shape);
+        rng.fill_normal(t.data_mut(), 3.0);
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        let back = Tensor::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(t, back, "case {case} shape {shape:?}");
+    }
+}
