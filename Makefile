@@ -1,0 +1,25 @@
+# Top-level entry points. Tier-1 verification is `make verify`.
+
+.PHONY: build test verify fmt clippy artifacts clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+verify: build test
+
+fmt:
+	cargo fmt --all --check
+
+clippy:
+	cargo clippy --workspace --all-targets -- -D warnings
+
+# AOT-lower the Pallas/JAX models to HLO-text artifacts (needs the
+# python/ toolchain; the Rust request path then never runs Python).
+artifacts:
+	cd python && python -m compile.aot
+
+clean:
+	cargo clean

@@ -1,39 +1,21 @@
 //! Figs. 16-27 (App. A.8): the backend × dataset × recall grid. One
 //! parameterized harness replaces the paper's twelve panels: every
-//! backbone (ivf / scann / soar / leanvec) × dataset × Recall@{1%,2.5%,5%}
-//! × cost axes, original vs XS/S-mapped queries.
+//! backbone (ivf / pq / sq8 / scann / soar / leanvec) × dataset ×
+//! Recall@{1%,2.5%,5%} × cost axes, original vs XS/S-mapped queries —
+//! one `Searcher` loop for all of them.
 //!
 //! ```bash
-//! cargo bench --bench fig16_backends -- --backend scann --dataset nq-s
+//! cargo bench --features xla --bench fig16_backends -- --backend scann --dataset nq-s
 //! ```
 //! Without flags it sweeps a representative subset; AMIPS_BENCH_QUICK=1
 //! shrinks it further.
 
+use amips::api::{recall_against_truth, Effort, MappedSearcher, QueryMode, SearchRequest, Searcher};
 use amips::bench_support::fixtures;
 use amips::bench_support::report::{pct, Report};
 use amips::cli::Args;
-use amips::coordinator::pipeline::{recall_against_truth, MappedSearchPipeline};
-use amips::index::{
-    ivf::IvfIndex, leanvec::LeanVecIndex, scann::ScannIndex, soar::SoarIndex, traits::VectorIndex,
-};
 use amips::runtime::Engine;
 use anyhow::Result;
-
-fn build_backend(name: &str, ds: &amips::data::Dataset, nlist: usize) -> Box<dyn VectorIndex> {
-    match name {
-        "ivf" => Box::new(IvfIndex::build(&ds.keys, nlist, 15, 42)),
-        "scann" => Box::new(ScannIndex::build(&ds.keys, nlist, 8, 4.0, 42)),
-        "soar" => Box::new(SoarIndex::build(&ds.keys, nlist, 6, 42)),
-        "leanvec" => Box::new(LeanVecIndex::build(
-            &ds.keys,
-            (ds.d() / 2).max(8),
-            nlist,
-            Some(&ds.train.x),
-            42,
-        )),
-        other => panic!("unknown backend {other}"),
-    }
-}
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))?;
@@ -48,7 +30,7 @@ fn main() -> Result<()> {
     let backends: Vec<&str> = match &backend_filter {
         Some(b) => vec![b.as_str()],
         None if quick => vec!["ivf", "scann"],
-        None => vec!["ivf", "scann", "soar", "leanvec"],
+        None => vec!["ivf", "pq", "sq8", "scann", "soar", "leanvec"],
     };
     let datasets: Vec<&str> = match &dataset_filter {
         Some(d) => vec![d.as_str()],
@@ -76,48 +58,47 @@ fn main() -> Result<()> {
             .collect();
 
         for backend in &backends {
-            let index = build_backend(backend, &ds, nlist);
+            let index =
+                amips::index::build_backend(backend, &ds.keys, Some(&ds.train.x), nlist, 42)?;
             let mut rep = Report::new(&format!(
                 "Fig 16-27 grid: {backend} on {dataset} (nlist={nlist})"
             ));
             rep.header(&["variant", "nprobe", "R@1%", "R@2.5%", "R@5%", "MFLOP/q", "ms/q"]);
-            let nq = ds.val.x.rows() as f64;
             let kmax = ((ds.n_keys() as f64 * 0.05).ceil()) as usize;
             for nprobe in [1usize, 2, 4, 8, 16] {
-                let mut run_variant =
-                    |label: String, pipe: MappedSearchPipeline| -> Result<()> {
-                        let out = pipe.run(&ds.val.x, kmax, nprobe)?;
-                        let recalls: Vec<String> = fracs
-                            .iter()
-                            .map(|fr| {
-                                let k = ((ds.n_keys() as f64 * fr).ceil() as usize).max(1);
-                                pct(recall_against_truth(&out.results, &truth, k))
-                            })
-                            .collect();
-                        rep.row(&[
-                            label,
-                            nprobe.to_string(),
-                            recalls[0].clone(),
-                            recalls[1].clone(),
-                            recalls[2].clone(),
-                            format!(
-                                "{:.3}",
-                                (out.results[0].cost.flops + out.map_flops_per_query) as f64
-                                    / 1e6
-                            ),
-                            format!(
-                                "{:.3}",
-                                ((out.map_seconds + out.search_seconds) / nq) * 1e3
-                            ),
-                        ]);
-                        Ok(())
-                    };
-                run_variant("orig".into(), MappedSearchPipeline::original(index.as_ref()))?;
+                let mut run_variant = |label: String,
+                                       searcher: &dyn Searcher,
+                                       mode: QueryMode|
+                 -> Result<()> {
+                    let req = SearchRequest::top_k(kmax)
+                        .effort(Effort::Probes(nprobe))
+                        .mode(mode);
+                    let out = searcher.search(&ds.val.x, &req)?;
+                    let recalls: Vec<String> = fracs
+                        .iter()
+                        .map(|fr| {
+                            let k = ((ds.n_keys() as f64 * fr).ceil() as usize).max(1);
+                            pct(recall_against_truth(&out.hits, &truth, k))
+                        })
+                        .collect();
+                    rep.row(&[
+                        label,
+                        nprobe.to_string(),
+                        recalls[0].clone(),
+                        recalls[1].clone(),
+                        recalls[2].clone(),
+                        format!("{:.3}", out.flops_per_query() / 1e6),
+                        format!("{:.3}", out.seconds_per_query() * 1e3),
+                    ]);
+                    Ok(())
+                };
+                // wrap the bare backbone so the variants share one
+                // &dyn Searcher call site
+                let orig = MappedSearcher::original(index.as_ref());
+                run_variant("orig".into(), &orig, QueryMode::Original)?;
                 for (size, model) in &models {
-                    run_variant(
-                        format!("keynet-{size}"),
-                        MappedSearchPipeline::mapped(index.as_ref(), model),
-                    )?;
+                    let searcher = MappedSearcher::mapped(index.as_ref(), model);
+                    run_variant(format!("keynet-{size}"), &searcher, QueryMode::Mapped)?;
                 }
             }
             rep.note("paper shape: ordering of orig vs mapped stable across backends; SOAR narrows the regime; gains largest on shifted datasets");

@@ -2,9 +2,9 @@
 //! corpus, 2x hotpot-s / 4x nq-s here; 15M keys in the paper). XS KeyNet
 //! + FAISS-IVF-analog, all three cost axes.
 
+use amips::api::{recall_against_truth, Effort, MappedSearcher, QueryMode, SearchRequest, Searcher};
 use amips::bench_support::fixtures;
 use amips::bench_support::report::{pct, Report};
-use amips::coordinator::pipeline::{recall_against_truth, MappedSearchPipeline};
 use amips::index::ivf::IvfIndex;
 use amips::runtime::Engine;
 use anyhow::Result;
@@ -17,6 +17,7 @@ fn main() -> Result<()> {
     let model = fixtures::trained_model(&engine, &manifest, config, &ds, None)?;
     let nlist = fixtures::default_nlist(ds.n_keys());
     let index = IvfIndex::build(&ds.keys, nlist, 12, 42);
+    let searcher = MappedSearcher::mapped(&index, &model);
     let truth: Vec<usize> = (0..ds.val.gt.n_queries())
         .map(|q| ds.val.gt.global_top1(q).0)
         .collect();
@@ -27,24 +28,22 @@ fn main() -> Result<()> {
         ds.n_keys()
     ));
     rep.header(&["variant", "nprobe", "recall", "MFLOP/q", "ms/q"]);
-    let nq = ds.val.x.rows() as f64;
     for nprobe in [1usize, 2, 4, 8, 16] {
-        for mapped in [false, true] {
-            let pipe = if mapped {
-                MappedSearchPipeline::mapped(&index, &model)
-            } else {
-                MappedSearchPipeline::original(&index)
-            };
-            let out = pipe.run(&ds.val.x, k, nprobe)?;
+        for mode in [QueryMode::Original, QueryMode::Mapped] {
+            let req = SearchRequest::top_k(k)
+                .effort(Effort::Probes(nprobe))
+                .mode(mode);
+            let out = searcher.search(&ds.val.x, &req)?;
             rep.row(&[
-                pipe.label().to_string(),
+                if mode == QueryMode::Mapped {
+                    "mapped".to_string()
+                } else {
+                    "orig".to_string()
+                },
                 nprobe.to_string(),
-                pct(recall_against_truth(&out.results, &truth, k)),
-                format!(
-                    "{:.3}",
-                    (out.results[0].cost.flops + out.map_flops_per_query) as f64 / 1e6
-                ),
-                format!("{:.3}", ((out.map_seconds + out.search_seconds) / nq) * 1e3),
+                pct(recall_against_truth(&out.hits, &truth, k)),
+                format!("{:.3}", out.flops_per_query() / 1e6),
+                format!("{:.3}", out.seconds_per_query() * 1e3),
             ]);
         }
     }

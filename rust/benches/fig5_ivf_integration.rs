@@ -1,13 +1,14 @@
 //! Fig. 5: FAISS-IVF-analog integration on hotpot-s — Recall vs three
 //! cost axes (wall-clock latency, search budget nprobe, FLOPs) for
-//! KeyNet sizes XS/S/M/L vs the unmodified query.
+//! KeyNet sizes XS/S/M/L vs the unmodified query, all through
+//! `api::{MappedSearcher, SearchRequest}`.
 //!
 //! `--dim 128` reruns on the d=128 corpus (App. A.5 analog, Figs 12-13).
 
+use amips::api::{recall_against_truth, Effort, MappedSearcher, QueryMode, SearchRequest, Searcher};
 use amips::bench_support::fixtures;
 use amips::bench_support::report::{pct, Report};
 use amips::cli::Args;
-use amips::coordinator::pipeline::{recall_against_truth, MappedSearchPipeline};
 use amips::index::ivf::IvfIndex;
 use amips::runtime::Engine;
 use anyhow::Result;
@@ -36,15 +37,15 @@ fn main() -> Result<()> {
     ));
     rep.header(&["variant", "nprobe", "recall", "MFLOP/q", "ms/q"]);
 
-    let nq = ds.val.x.rows() as f64;
     for nprobe in [1usize, 2, 4, 8, 16, 32] {
-        let out = MappedSearchPipeline::original(&index).run(&ds.val.x, k, nprobe)?;
+        let req = SearchRequest::top_k(k).effort(Effort::Probes(nprobe));
+        let out = index.search(&ds.val.x, &req)?;
         rep.row(&[
             "orig".into(),
             nprobe.to_string(),
-            pct(recall_against_truth(&out.results, &truth, k)),
-            format!("{:.3}", out.results[0].cost.flops as f64 / 1e6),
-            format!("{:.3}", (out.search_seconds / nq) * 1e3),
+            pct(recall_against_truth(&out.hits, &truth, k)),
+            format!("{:.3}", out.flops_per_query() / 1e6),
+            format!("{:.3}", out.seconds_per_query() * 1e3),
         ]);
     }
     for size in sizes {
@@ -56,17 +57,18 @@ fn main() -> Result<()> {
                 continue;
             }
         };
+        let searcher = MappedSearcher::mapped(&index, &model);
         for nprobe in [1usize, 2, 4, 8, 16, 32] {
-            let out = MappedSearchPipeline::mapped(&index, &model).run(&ds.val.x, k, nprobe)?;
+            let req = SearchRequest::top_k(k)
+                .effort(Effort::Probes(nprobe))
+                .mode(QueryMode::Mapped);
+            let out = searcher.search(&ds.val.x, &req)?;
             rep.row(&[
                 format!("keynet-{size}"),
                 nprobe.to_string(),
-                pct(recall_against_truth(&out.results, &truth, k)),
-                format!(
-                    "{:.3}",
-                    (out.results[0].cost.flops + out.map_flops_per_query) as f64 / 1e6
-                ),
-                format!("{:.3}", ((out.map_seconds + out.search_seconds) / nq) * 1e3),
+                pct(recall_against_truth(&out.hits, &truth, k)),
+                format!("{:.3}", out.flops_per_query() / 1e6),
+                format!("{:.3}", out.seconds_per_query() * 1e3),
             ]);
         }
     }

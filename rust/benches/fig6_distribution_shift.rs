@@ -5,10 +5,10 @@
 //!
 //! `--dataset quora-s` reproduces the Fig. 8 variant.
 
+use amips::api::{recall_against_truth, Effort, MappedSearcher, QueryMode, SearchRequest, Searcher};
 use amips::bench_support::fixtures;
 use amips::bench_support::report::{pct, Report};
 use amips::cli::Args;
-use amips::coordinator::pipeline::{recall_against_truth, MappedSearchPipeline};
 use amips::index::ivf::IvfIndex;
 use amips::runtime::Engine;
 use amips::tensor::{normalize_rows, Tensor};
@@ -38,6 +38,7 @@ fn main() -> Result<()> {
     let model = fixtures::trained_model(&engine, &manifest, &config, &ds, None)?;
     let nlist = fixtures::default_nlist(ds.n_keys());
     let index = IvfIndex::build(&ds.keys, nlist, 15, 42);
+    let searcher = MappedSearcher::mapped(&index, &model);
     let k = (ds.n_keys() / 40).max(10);
 
     let sigmas: &[f32] = if quick {
@@ -55,10 +56,11 @@ fn main() -> Result<()> {
         let gt = amips::data::ground_truth::compute(&qx, &ds.keys, 1, None);
         let truth: Vec<usize> = (0..gt.n_queries()).map(|q| gt.idx(q, 0)).collect();
         for nprobe in [1usize, 2, 4, 8] {
-            let orig = MappedSearchPipeline::original(&index).run(&qx, k, nprobe)?;
-            let mapped = MappedSearchPipeline::mapped(&index, &model).run(&qx, k, nprobe)?;
-            let ro = recall_against_truth(&orig.results, &truth, k);
-            let rm = recall_against_truth(&mapped.results, &truth, k);
+            let req = SearchRequest::top_k(k).effort(Effort::Probes(nprobe));
+            let orig = searcher.search(&qx, &req)?;
+            let mapped = searcher.search(&qx, &req.mode(QueryMode::Mapped))?;
+            let ro = recall_against_truth(&orig.hits, &truth, k);
+            let rm = recall_against_truth(&mapped.hits, &truth, k);
             rep.row(&[
                 format!("{sigma:.2}"),
                 nprobe.to_string(),

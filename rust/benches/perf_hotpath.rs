@@ -1,8 +1,9 @@
 //! §Perf: microbenchmarks of the request-path hot spots — exhaustive
-//! scan throughput (flat index), IVF probe, model forward, the batcher,
-//! and end-to-end serving throughput. Before/after numbers live in
-//! EXPERIMENTS.md §Perf.
+//! scan throughput (flat index), IVF probe, the parallel batched
+//! `Searcher` path, model forward, and end-to-end serving throughput.
+//! Before/after numbers live in EXPERIMENTS.md §Perf.
 
+use amips::api::{Effort, QueryMode, SearchRequest, Searcher};
 use amips::bench_support::fixtures;
 use amips::bench_support::report::Report;
 use amips::coordinator::{BatchPolicy, Server, ServerConfig};
@@ -19,14 +20,14 @@ fn main() -> Result<()> {
     let engine = Engine::new(manifest.dir.clone())?;
     let ds = fixtures::prepare_dataset(&manifest, "nq-s", 1)?;
     let (n, d) = (ds.n_keys(), ds.d());
-    let mut rep = Report::new("§Perf: hot-path microbenchmarks (1-core)");
+    let mut rep = Report::new("§Perf: hot-path microbenchmarks");
     rep.header(&["path", "unit", "mean", "p95", "throughput"]);
 
     // ---- 1. dot-product scan (the flat/ivf inner loop) -----------------
     let flat = FlatIndex::new(ds.keys.clone());
     let q = ds.val.x.row(0).to_vec();
     let t = Stats::from(&time_reps(3, 30, || {
-        std::hint::black_box(flat.search(&q, 10, 0));
+        std::hint::black_box(flat.search_effort(&q, 10, Effort::Exhaustive));
     }));
     rep.row(&[
         "flat scan".into(),
@@ -54,7 +55,7 @@ fn main() -> Result<()> {
     let ivf = IvfIndex::build(&ds.keys, fixtures::default_nlist(n), 15, 42);
     for nprobe in [1usize, 8] {
         let t = Stats::from(&time_reps(3, 50, || {
-            std::hint::black_box(ivf.search(&q, 10, nprobe));
+            std::hint::black_box(ivf.search_effort(&q, 10, Effort::Probes(nprobe)));
         }));
         rep.row(&[
             format!("ivf probe={nprobe}"),
@@ -65,7 +66,21 @@ fn main() -> Result<()> {
         ]);
     }
 
-    // ---- 4. model forward (batched inference) ---------------------------
+    // ---- 4. parallel batched Searcher over the thread pool --------------
+    let req = SearchRequest::top_k(10).effort(Effort::Probes(8));
+    let t = Stats::from(&time_reps(2, 10, || {
+        std::hint::black_box(ivf.search(&ds.val.x, &req).unwrap());
+    }));
+    let nq = ds.val.x.rows();
+    rep.row(&[
+        "ivf batch (Searcher)".into(),
+        format!("{nq} queries"),
+        format!("{:.2} ms", t.mean * 1e3),
+        format!("{:.2} ms", t.p95 * 1e3),
+        format!("{:.0} q/s", nq as f64 / t.mean),
+    ]);
+
+    // ---- 5. model forward (batched inference) ---------------------------
     let config = "nq-s.keynet.xs.l4.c1";
     let model = fixtures::trained_model(&engine, &manifest, config, &ds, None)?;
     let batch = ds.val.x.gather_rows(&(0..256).collect::<Vec<_>>());
@@ -80,7 +95,7 @@ fn main() -> Result<()> {
         format!("{:.0} q/s", 256.0 / t.mean),
     ]);
 
-    // ---- 5. end-to-end serving ------------------------------------------
+    // ---- 6. end-to-end serving ------------------------------------------
     let meta = manifest.meta(config)?;
     let params = trainer::train_or_load(
         &engine,
@@ -93,15 +108,17 @@ fn main() -> Result<()> {
     )?
     .params;
     drop(engine); // server builds its own engine on the runner thread
+    let default_request = SearchRequest::top_k(10)
+        .effort(Effort::Probes(4))
+        .mode(QueryMode::Mapped);
     let (server, handle) = Server::start(
-        ServerConfig {
-            artifacts_dir: manifest.dir.clone(),
+        ServerConfig::with_model(
+            manifest.dir.clone(),
             meta,
             params,
-            policy: BatchPolicy::default(),
-            map_queries: true,
-            nprobe_default: 4,
-        },
+            BatchPolicy::default(),
+            default_request,
+        ),
         Arc::new(ivf),
     )?;
     let reqs = 512usize;
@@ -112,7 +129,7 @@ fn main() -> Result<()> {
             let ds = &ds;
             s.spawn(move || {
                 for i in (c..reqs).step_by(4) {
-                    let _ = handle.query(ds.val.x.row(i % ds.val.x.rows()).to_vec(), 10);
+                    let _ = handle.search(ds.val.x.row(i % ds.val.x.rows()).to_vec());
                 }
             });
         }

@@ -1,18 +1,18 @@
 //! Drop-in integration demo (paper Sec. 4.4 / Fig. 5): feed KeyNet's
 //! predicted key ŷ(x) to an *unmodified* IVF index in place of the query
-//! and trace recall vs nprobe/FLOPs/latency for original vs mapped.
+//! and trace recall vs nprobe/FLOPs/latency for original vs mapped — a
+//! one-field change on the `SearchRequest`.
 //!
 //! ```bash
-//! cargo run --release --example ivf_dropin -- --dataset nq-s --size s [--steps N]
+//! cargo run --release --features xla --example ivf_dropin -- --dataset nq-s --size s [--steps N]
 //! ```
 
+use amips::api::{recall_against_truth, Effort, MappedSearcher, QueryMode, SearchRequest, Searcher};
 use amips::bench_support::fixtures;
 use amips::bench_support::report::{pct, Report};
-use amips::coordinator::pipeline::{recall_against_truth, MappedSearchPipeline};
-use amips::index::ivf::IvfIndex;
-use amips::index::traits::VectorIndex;
-use amips::runtime::Engine;
 use amips::cli::Args;
+use amips::index::ivf::IvfIndex;
+use amips::runtime::Engine;
 use amips::trainer::TrainOpts;
 use anyhow::Result;
 
@@ -36,6 +36,7 @@ fn main() -> Result<()> {
 
     let nlist = fixtures::default_nlist(ds.n_keys());
     let index = IvfIndex::build(&ds.keys, nlist, 15, 42);
+    let searcher = MappedSearcher::mapped(&index, &model);
     let truth: Vec<usize> = (0..ds.val.gt.n_queries())
         .map(|q| ds.val.gt.global_top1(q).0)
         .collect();
@@ -52,23 +53,17 @@ fn main() -> Result<()> {
         if nprobe > nlist {
             break;
         }
-        let orig = MappedSearchPipeline::original(&index).run(&ds.val.x, k, nprobe)?;
-        let mapped = MappedSearchPipeline::mapped(&index, &model).run(&ds.val.x, k, nprobe)?;
-        let nq = ds.val.x.rows() as f64;
-        let orig_flops = orig.results[0].cost.flops as f64 / 1e6;
-        let mapped_flops =
-            (mapped.results[0].cost.flops + mapped.map_flops_per_query) as f64 / 1e6;
+        let req = SearchRequest::top_k(k).effort(Effort::Probes(nprobe));
+        let orig = searcher.search(&ds.val.x, &req)?;
+        let mapped = searcher.search(&ds.val.x, &req.mode(QueryMode::Mapped))?;
         rep.row(&[
             nprobe.to_string(),
-            pct(recall_against_truth(&orig.results, &truth, k)),
-            pct(recall_against_truth(&mapped.results, &truth, k)),
-            format!("{orig_flops:.3}"),
-            format!("{mapped_flops:.3}"),
-            format!("{:.3}", (orig.map_seconds + orig.search_seconds) / nq * 1e3),
-            format!(
-                "{:.3}",
-                (mapped.map_seconds + mapped.search_seconds) / nq * 1e3
-            ),
+            pct(recall_against_truth(&orig.hits, &truth, k)),
+            pct(recall_against_truth(&mapped.hits, &truth, k)),
+            format!("{:.3}", orig.flops_per_query() / 1e6),
+            format!("{:.3}", mapped.flops_per_query() / 1e6),
+            format!("{:.3}", orig.seconds_per_query() * 1e3),
+            format!("{:.3}", mapped.seconds_per_query() * 1e3),
         ]);
     }
     rep.emit("ivf_dropin");

@@ -1,0 +1,122 @@
+//! Quickstart: the 60-second tour of the public API — pure Rust, no
+//! artifacts or XLA required.
+//!
+//! One request type drives every query path:
+//!
+//! * any index backbone behind `Searcher` (here: IVF),
+//! * the mapped pipeline (`MappedSearcher` + a `QueryMap`) — the paper's
+//!   Sec. 4.4 drop-in integration (with `--features xla` a trained
+//!   KeyNet `AmortizedModel` is the `QueryMap`; here an identity map
+//!   stands in),
+//! * routed search (`RoutedSearcher` + any `Router`) — Sec. 4.3.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use amips::api::{
+    recall_against_truth, Effort, LinearQueryMap, MappedSearcher, QueryMode, RoutedSearcher,
+    SearchRequest, Searcher,
+};
+use amips::coordinator::router::CentroidRouter;
+use amips::data::dataset::PrepareOpts;
+use amips::data::{CorpusSpec, Dataset};
+use amips::index::ivf::IvfIndex;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    // 1. A prepared dataset: synthetic clustered corpus + exact-MIPS
+    //    targets (the same generator the benches use).
+    let spec = CorpusSpec {
+        name: "quickstart".into(),
+        n_keys: 8_000,
+        d: 32,
+        n_queries: 2_400,
+        shift: 0.5,
+        spread: 2.0,
+        modes: 10,
+        seed: 7,
+    };
+    let ds = Dataset::prepare(
+        &spec,
+        &PrepareOpts {
+            c: 8,
+            augment: 1,
+            val_queries: 600,
+            kmeans_restarts: 1,
+            ..Default::default()
+        },
+    );
+    println!(
+        "dataset {}: {} keys (d={}), {} val queries, {} clusters",
+        ds.name,
+        ds.n_keys(),
+        ds.d(),
+        ds.val.x.rows(),
+        ds.c
+    );
+    let truth: Vec<usize> = (0..ds.val.gt.n_queries())
+        .map(|q| ds.val.gt.global_top1(q).0)
+        .collect();
+
+    // 2. Build an IVF index over the dataset's own clustering — the
+    //    index is never modified by any of the query paths below.
+    let index = IvfIndex::from_clustering(&ds.keys, ds.centroids.clone(), &ds.assign);
+
+    // 3. One request type, three query paths.
+    let k = 10;
+    let map = LinearQueryMap::identity(ds.d()); // KeyNet stand-in
+    let mapped = MappedSearcher::mapped(&index, &map);
+    let router = CentroidRouter::new(ds.centroids.clone());
+    let routed = RoutedSearcher::new(&router, &index)?;
+
+    println!(
+        "\n{:>14}  {:>10}  {:>11}  {:>11}  {:>9}",
+        "effort", "orig R@10", "mapped R@10", "routed R@10", "kFLOP/q"
+    );
+    for effort in [
+        Effort::Probes(1),
+        Effort::Probes(2),
+        Effort::Probes(4),
+        Effort::Exhaustive,
+    ] {
+        let req = SearchRequest::top_k(k).effort(effort);
+        // original queries straight into the backbone (blanket Searcher)
+        let orig = index.search(&ds.val.x, &req)?;
+        // mapped pipeline: map the batch, then the same unmodified index
+        let via_map = mapped.search(&ds.val.x, &req.mode(QueryMode::Mapped))?;
+        // routed: the router picks the cells instead of centroid ranking
+        let via_router = routed.search(&ds.val.x, &req.mode(QueryMode::Routed))?;
+        println!(
+            "{:>14}  {:>10}  {:>11}  {:>11}  {:>9.1}",
+            format!("{effort:?}"),
+            format!("{:.1}%", 100.0 * recall_against_truth(&orig.hits, &truth, k)),
+            format!("{:.1}%", 100.0 * recall_against_truth(&via_map.hits, &truth, k)),
+            format!(
+                "{:.1}%",
+                100.0 * recall_against_truth(&via_router.hits, &truth, k)
+            ),
+            orig.flops_per_query() / 1e3,
+        );
+    }
+
+    // 4. The cost breakdown separates the stages.
+    let resp = mapped.search(
+        &ds.val.x,
+        &SearchRequest::top_k(k)
+            .effort(Effort::Probes(2))
+            .mode(QueryMode::Mapped),
+    )?;
+    println!(
+        "\nmapped @ Probes(2): map {} flops + scan {} flops over {} keys in {} cells \
+         ({:.2} ms map, {:.2} ms scan)",
+        resp.cost.map_flops,
+        resp.cost.scan_flops,
+        resp.cost.keys_scanned,
+        resp.cost.cells_probed,
+        resp.cost.map_seconds * 1e3,
+        resp.cost.search_seconds * 1e3,
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,11 +1,13 @@
 //! Serving demo: the full coordinator — dynamic batcher + model-runner
 //! thread (PJRT confined) + shared IVF index — under closed-loop client
-//! load, reporting recall, throughput and latency quantiles.
+//! load, reporting recall, throughput and latency quantiles. Clients and
+//! server speak `api::SearchRequest` / `CostBreakdown` end to end.
 //!
 //! ```bash
-//! cargo run --release --example serve -- [--requests 1024] [--clients 4] [--no-map]
+//! cargo run --release --features xla --example serve -- [--requests 1024] [--clients 4] [--no-map]
 //! ```
 
+use amips::api::{Effort, QueryMode, SearchRequest};
 use amips::bench_support::fixtures;
 use amips::bench_support::report::{pct, Report};
 use amips::cli::Args;
@@ -42,20 +44,28 @@ fn main() -> Result<()> {
 
     let nlist = fixtures::default_nlist(ds.n_keys());
     let index = Arc::new(IvfIndex::build(&ds.keys, nlist, 15, 99));
-    let (server, handle) = Server::start(
-        ServerConfig {
-            artifacts_dir: manifest.dir.clone(),
+    let k = (ds.n_keys() / 40).max(10); // Recall@2.5%
+    let default_request = SearchRequest::top_k(k)
+        .effort(Effort::Probes(nprobe))
+        .mode(if map_queries {
+            QueryMode::Mapped
+        } else {
+            QueryMode::Original
+        });
+    let cfg = if map_queries {
+        ServerConfig::with_model(
+            manifest.dir.clone(),
             meta,
             params,
-            policy: BatchPolicy::default(),
-            map_queries,
-            nprobe_default: nprobe,
-        },
-        index,
-    )?;
+            BatchPolicy::default(),
+            default_request,
+        )
+    } else {
+        ServerConfig::unmapped(BatchPolicy::default(), default_request)
+    };
+    let (server, handle) = Server::start(cfg, index)?;
 
     let nq = ds.val.x.rows();
-    let k = (ds.n_keys() / 40).max(10); // Recall@2.5%
     let t0 = std::time::Instant::now();
     let mut hits = 0usize;
     std::thread::scope(|s| {
@@ -67,9 +77,9 @@ fn main() -> Result<()> {
                 let mut local = 0;
                 for i in (t..requests).step_by(clients) {
                     let q = ds.val.x.row(i % nq).to_vec();
-                    if let Ok(resp) = handle.query(q, k) {
+                    if let Ok(resp) = handle.search(q) {
                         let truth = ds.val.gt.global_top1(i % nq).0 as u32;
-                        if resp.ids.contains(&truth) {
+                        if resp.hits.ids.contains(&truth) {
                             local += 1;
                         }
                     }

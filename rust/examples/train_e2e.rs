@@ -3,16 +3,17 @@
 //!
 //!   synthetic corpus -> exact targets (L3) -> AOT Adam training loop
 //!   (L2 graph + L1 kernel artifacts via PJRT) -> EMA checkpoint ->
-//!   inference handles -> routing + IVF integration + serving metrics.
+//!   inference handles -> routing + IVF integration + serving metrics,
+//!   all through the `amips::api` search surface.
 //!
 //! ```bash
-//! cargo run --release --example train_e2e [-- --dataset nq-s --steps 4000]
+//! cargo run --release --features xla --example train_e2e [-- --dataset nq-s --steps 4000]
 //! ```
 
+use amips::api::{recall_against_truth, Effort, MappedSearcher, QueryMode, SearchRequest, Searcher};
 use amips::bench_support::fixtures;
 use amips::bench_support::report::{f, pct, Report};
 use amips::cli::Args;
-use amips::coordinator::pipeline::{recall_against_truth, MappedSearchPipeline};
 use amips::coordinator::router::{routing_accuracy, AmortizedRouter, CentroidRouter, Router};
 use amips::index::ivf::IvfIndex;
 use amips::metrics::{retrieval, transport};
@@ -104,16 +105,18 @@ fn main() -> Result<()> {
 
     // ---- stage 5: IVF integration (Sec. 4.4) ---------------------------
     let index = IvfIndex::build(&ds.keys, fixtures::default_nlist(ds.n_keys()), 15, 42);
+    let searcher = MappedSearcher::mapped(&index, &model);
     let k = (ds.n_keys() / 40).max(10);
     let mut rep = Report::new("e2e IVF integration (Recall@2.5%)");
     rep.header(&["nprobe", "orig", "mapped"]);
     for nprobe in [1usize, 2, 4, 8] {
-        let orig = MappedSearchPipeline::original(&index).run(&ds.val.x, k, nprobe)?;
-        let mapped = MappedSearchPipeline::mapped(&index, &model).run(&ds.val.x, k, nprobe)?;
+        let req = SearchRequest::top_k(k).effort(Effort::Probes(nprobe));
+        let orig = searcher.search(&ds.val.x, &req)?;
+        let mapped = searcher.search(&ds.val.x, &req.mode(QueryMode::Mapped))?;
         rep.row(&[
             nprobe.to_string(),
-            pct(recall_against_truth(&orig.results, &truth, k)),
-            pct(recall_against_truth(&mapped.results, &truth, k)),
+            pct(recall_against_truth(&orig.hits, &truth, k)),
+            pct(recall_against_truth(&mapped.hits, &truth, k)),
         ]);
     }
     rep.emit("train_e2e");

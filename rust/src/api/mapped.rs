@@ -1,0 +1,235 @@
+//! Query mapping (paper Sec. 4.4): a [`QueryMap`] turns `x` into the
+//! predicted key `ŷ(x)`, and a [`MappedSearcher`] feeds the mapped batch
+//! to an *unmodified* backbone — the paper's drop-in claim as a
+//! composable [`Searcher`] wrapper.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::api::{QueryMode, SearchRequest, SearchResponse, Searcher};
+use crate::index::traits::VectorIndex;
+use crate::tensor::{gemm_nt, Tensor};
+use crate::util::Timer;
+
+/// A batched query transform `x -> ŷ(x)`.
+///
+/// Implemented by `model::AmortizedModel` (a trained c=1 KeyNet, behind
+/// the `xla` feature) and by the pure-Rust [`LinearQueryMap`] used for
+/// tests and offline demos. Deliberately *not* `Send`: the PJRT-backed
+/// implementation pins to one thread; the server builds it on its runner
+/// thread via a factory.
+pub trait QueryMap {
+    /// Human-readable label for reports.
+    fn label(&self) -> &str;
+
+    /// Flops charged per query for the mapping forward pass.
+    fn map_flops_per_query(&self) -> u64;
+
+    /// Map the whole batch: `[n, d] -> [n, d']`.
+    fn map(&self, queries: &Tensor) -> Result<Tensor>;
+}
+
+/// A pure-Rust linear query map `ŷ(x) = W x` (rows of `w` are output
+/// dims). `LinearQueryMap::identity(d)` is the no-op used by tests to
+/// exercise the mapped path without a trained model.
+pub struct LinearQueryMap {
+    label: String,
+    w: Tensor, // [d_out, d]
+}
+
+impl LinearQueryMap {
+    pub fn new(label: impl Into<String>, w: Tensor) -> LinearQueryMap {
+        LinearQueryMap {
+            label: label.into(),
+            w,
+        }
+    }
+
+    /// The identity map in `d` dimensions.
+    pub fn identity(d: usize) -> LinearQueryMap {
+        let mut w = Tensor::zeros(&[d, d]);
+        for i in 0..d {
+            w.row_mut(i)[i] = 1.0;
+        }
+        LinearQueryMap::new("identity", w)
+    }
+}
+
+impl QueryMap for LinearQueryMap {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn map_flops_per_query(&self) -> u64 {
+        (self.w.rows() * self.w.row_width() * 2) as u64
+    }
+
+    fn map(&self, queries: &Tensor) -> Result<Tensor> {
+        ensure!(
+            queries.row_width() == self.w.row_width(),
+            "query dim {} != map dim {}",
+            queries.row_width(),
+            self.w.row_width()
+        );
+        let mut out = Tensor::zeros(&[queries.rows(), self.w.rows()]);
+        gemm_nt(queries, &self.w, &mut out);
+        Ok(out)
+    }
+}
+
+/// A [`Searcher`] that optionally maps queries before handing them to an
+/// unmodified index backbone. With no map (or [`QueryMode::Original`])
+/// it is a pure passthrough, so the original-vs-mapped comparison is a
+/// one-field change in the request.
+pub struct MappedSearcher<'a> {
+    index: &'a dyn VectorIndex,
+    map: Option<&'a dyn QueryMap>,
+}
+
+impl<'a> MappedSearcher<'a> {
+    /// Baseline: queries go straight to the index.
+    pub fn original(index: &'a dyn VectorIndex) -> MappedSearcher<'a> {
+        MappedSearcher { index, map: None }
+    }
+
+    /// Drop-in integration: queries run through `map` first when the
+    /// request asks for [`QueryMode::Mapped`].
+    pub fn mapped(index: &'a dyn VectorIndex, map: &'a dyn QueryMap) -> MappedSearcher<'a> {
+        MappedSearcher {
+            index,
+            map: Some(map),
+        }
+    }
+}
+
+impl Searcher for MappedSearcher<'_> {
+    fn label(&self) -> String {
+        match self.map {
+            Some(m) => format!("mapped[{}->{}]", m.label(), self.index.name()),
+            None => self.index.name().to_string(),
+        }
+    }
+
+    fn num_keys(&self) -> usize {
+        self.index.len()
+    }
+
+    fn search(&self, queries: &Tensor, request: &SearchRequest) -> Result<SearchResponse> {
+        match request.mode {
+            QueryMode::Routed => bail!(
+                "MappedSearcher cannot serve QueryMode::Routed; use a RoutedSearcher"
+            ),
+            QueryMode::Original => {
+                // passthrough baseline: same index, unmapped queries
+                self.index.search(queries, &request.mode(QueryMode::Original))
+            }
+            QueryMode::Mapped => {
+                let Some(map) = self.map else {
+                    bail!("no query map configured; build with MappedSearcher::mapped")
+                };
+                let timer = Timer::start();
+                let mapped = map.map(queries)?;
+                let map_seconds = timer.elapsed_s();
+                ensure!(
+                    mapped.row_width() == self.index.dim(),
+                    "query map '{}' produced dim {} but index '{}' expects {}",
+                    map.label(),
+                    mapped.row_width(),
+                    self.index.name(),
+                    self.index.dim()
+                );
+                let inner = request.mode(QueryMode::Original);
+                let mut resp = self.index.search(&mapped, &inner)?;
+                resp.cost.map_flops += map.map_flops_per_query() * queries.rows() as u64;
+                resp.cost.map_seconds += map_seconds;
+                Ok(resp)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Effort;
+    use crate::index::flat::FlatIndex;
+    use crate::tensor::normalize_rows;
+    use crate::util::Rng;
+
+    fn unit(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        normalize_rows(&mut t);
+        t
+    }
+
+    #[test]
+    fn original_mode_is_passthrough() {
+        let keys = unit(&[100, 8], 1);
+        let idx = FlatIndex::new(keys.clone());
+        let map = LinearQueryMap::identity(8);
+        let searcher = MappedSearcher::mapped(&idx, &map);
+        let q = unit(&[5, 8], 2);
+        let req = SearchRequest::top_k(3).effort(Effort::Exhaustive);
+        let via_wrapper = searcher.search(&q, &req).unwrap();
+        let direct = idx.search(&q, &req).unwrap();
+        for i in 0..5 {
+            assert_eq!(via_wrapper.hits[i], direct.hits[i]);
+        }
+        assert_eq!(via_wrapper.cost.map_flops, 0);
+    }
+
+    #[test]
+    fn identity_map_reproduces_unmapped_hits_with_map_cost() {
+        let keys = unit(&[100, 8], 3);
+        let idx = FlatIndex::new(keys);
+        let map = LinearQueryMap::identity(8);
+        let searcher = MappedSearcher::mapped(&idx, &map);
+        let q = unit(&[7, 8], 4);
+        let base = SearchRequest::top_k(4).effort(Effort::Exhaustive);
+        let orig = searcher.search(&q, &base).unwrap();
+        let mapped = searcher
+            .search(&q, &base.mode(QueryMode::Mapped))
+            .unwrap();
+        for i in 0..7 {
+            assert_eq!(orig.hits[i].ids, mapped.hits[i].ids, "query {i}");
+        }
+        assert_eq!(mapped.cost.map_flops, 7 * 8 * 8 * 2);
+        assert_eq!(orig.cost.map_flops, 0);
+    }
+
+    #[test]
+    fn dimension_changing_map_is_rejected() {
+        // a map whose output dim != index dim must error, not silently
+        // score truncated vectors
+        let idx = FlatIndex::new(unit(&[20, 8], 10));
+        let map = LinearQueryMap::new("narrow", Tensor::zeros(&[4, 8]));
+        let searcher = MappedSearcher::mapped(&idx, &map);
+        let q = unit(&[2, 8], 11);
+        let req = SearchRequest::top_k(1).mode(QueryMode::Mapped);
+        assert!(searcher.search(&q, &req).is_err());
+    }
+
+    #[test]
+    fn mapped_mode_without_map_errors() {
+        let idx = FlatIndex::new(unit(&[10, 4], 5));
+        let searcher = MappedSearcher::original(&idx);
+        let q = unit(&[1, 4], 6);
+        let req = SearchRequest::top_k(1).mode(QueryMode::Mapped);
+        assert!(searcher.search(&q, &req).is_err());
+    }
+
+    #[test]
+    fn linear_map_applies_matrix() {
+        // W swaps the two coordinates
+        let mut w = Tensor::zeros(&[2, 2]);
+        w.row_mut(0)[1] = 1.0;
+        w.row_mut(1)[0] = 1.0;
+        let map = LinearQueryMap::new("swap", w);
+        let q = Tensor::from_vec(&[1, 2], vec![3.0, 5.0]);
+        let out = map.map(&q).unwrap();
+        assert_eq!(out.row(0), &[5.0, 3.0]);
+        assert_eq!(map.map_flops_per_query(), 8);
+        // dim mismatch rejected
+        assert!(map.map(&Tensor::zeros(&[1, 3])).is_err());
+    }
+}

@@ -1,0 +1,46 @@
+//! The unified search API: one typed request/response surface over every
+//! index backbone, mapped (KeyNet) pipelines, learned routers, and the
+//! serving coordinator.
+//!
+//! The paper's central systems claim is that amortized models are
+//! *drop-in*: the same index is queried either with the original `x` or
+//! with KeyNet's mapped `ŷ(x)` (Sec. 4.4), and routing swaps centroid
+//! scoring for learned support values (Sec. 4.3). This module makes that
+//! claim an API contract instead of ad-hoc glue:
+//!
+//! * [`SearchRequest`] — `k`, a typed [`Effort`] knob (replacing the old
+//!   positional `nprobe` that every backbone interpreted differently),
+//!   and a [`QueryMode`] selecting original / mapped / routed execution.
+//! * [`SearchResponse`] — per-query [`Hits`] plus one [`CostBreakdown`]
+//!   covering the route, map and scan stages (flops, keys scanned, cells
+//!   probed, stage wall-clock).
+//! * [`Searcher`] — the batch-first polymorphic search trait. A blanket
+//!   impl covers every [`crate::index::VectorIndex`] backbone (with the
+//!   batch parallelized over the [`crate::util::threads`] pool);
+//!   [`MappedSearcher`] composes a [`QueryMap`] in front of any backbone;
+//!   [`RoutedSearcher`] composes any [`crate::coordinator::Router`] with
+//!   IVF cells. The serving coordinator speaks the same types
+//!   ([`crate::coordinator::ServerHandle::search`]).
+//!
+//! ```no_run
+//! use amips::api::{Effort, SearchRequest, Searcher};
+//! use amips::index::ivf::IvfIndex;
+//! # let keys = amips::tensor::Tensor::zeros(&[100, 8]);
+//! # let queries = amips::tensor::Tensor::zeros(&[4, 8]);
+//! let index = IvfIndex::build(&keys, 16, 15, 42);
+//! let req = SearchRequest::top_k(10).effort(Effort::Probes(4));
+//! let resp = index.search(&queries, &req).unwrap();
+//! println!("{} hits, {} flops", resp.hits.len(), resp.cost.total_flops());
+//! ```
+
+mod mapped;
+mod request;
+mod response;
+mod routed;
+mod searcher;
+
+pub use mapped::{LinearQueryMap, MappedSearcher, QueryMap};
+pub use request::{Effort, QueryMode, SearchRequest};
+pub use response::{recall_against_truth, CostBreakdown, Hits, SearchResponse};
+pub use routed::RoutedSearcher;
+pub use searcher::Searcher;

@@ -1,0 +1,140 @@
+//! Typed search requests: the effort knob and query mode that used to be
+//! positional arguments (`search(query, k, nprobe)`) with per-backbone
+//! folklore semantics.
+
+/// How much work a backbone may spend on one query.
+///
+/// Each backbone translates the effort into its native knob via
+/// [`Effort::resolve`] against its own cell count: IVF-family backbones
+/// probe that many coarse cells; exhaustive backbones (flat / pq / sq8)
+/// have one "cell" and instead widen their exact re-rank to the whole
+/// database under [`Effort::Exhaustive`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Effort {
+    /// Maximum effort: probe every cell and re-rank exactly. Every
+    /// backbone returns the exact MIPS answer at this level.
+    Exhaustive,
+    /// Probe exactly `n` coarse cells (clamped to the backbone's count).
+    Probes(usize),
+    /// Probe `ceil(f * n_cells)` cells, `f` in (0, 1].
+    Frac(f32),
+    /// Backbone-chosen default (≈ √cells, the classic IVF guidance).
+    Auto,
+}
+
+impl Effort {
+    /// Translate into a probe count against `n_cells` partitions.
+    /// Always returns a value in `1..=max(n_cells, 1)`.
+    pub fn resolve(self, n_cells: usize) -> usize {
+        let n = n_cells.max(1);
+        match self {
+            Effort::Exhaustive => n,
+            Effort::Probes(p) => p.clamp(1, n),
+            Effort::Frac(f) => {
+                let f = if f.is_finite() { f.max(0.0) } else { 1.0 };
+                ((f as f64 * n as f64).ceil() as usize).clamp(1, n)
+            }
+            Effort::Auto => ((n as f64).sqrt().round() as usize).clamp(1, n),
+        }
+    }
+
+    /// True when this effort level demands the exact answer.
+    pub fn is_exhaustive(self) -> bool {
+        matches!(self, Effort::Exhaustive)
+    }
+}
+
+/// Which query vector the searcher should score with (paper Fig. 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryMode {
+    /// Score with the raw query `x` (the baseline).
+    Original,
+    /// Map `x -> ŷ(x)` through a [`crate::api::QueryMap`] first
+    /// (Sec. 4.4 drop-in integration). Requires a mapped searcher.
+    Mapped,
+    /// Select cells with a learned [`crate::coordinator::Router`] instead
+    /// of centroid scoring (Sec. 4.3). Requires a routed searcher.
+    Routed,
+}
+
+/// One batched search request: built with a tiny fluent builder so call
+/// sites read as `SearchRequest::top_k(10).effort(Effort::Probes(4))`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SearchRequest {
+    /// Number of hits to return per query.
+    pub k: usize,
+    pub effort: Effort,
+    pub mode: QueryMode,
+}
+
+impl SearchRequest {
+    /// Request the top `k` hits at default effort in original mode.
+    pub fn top_k(k: usize) -> SearchRequest {
+        SearchRequest {
+            k: k.max(1),
+            effort: Effort::Auto,
+            mode: QueryMode::Original,
+        }
+    }
+
+    /// Set the effort level.
+    pub fn effort(mut self, effort: Effort) -> SearchRequest {
+        self.effort = effort;
+        self
+    }
+
+    /// Set the query mode.
+    pub fn mode(mut self, mode: QueryMode) -> SearchRequest {
+        self.mode = mode;
+        self
+    }
+}
+
+impl Default for SearchRequest {
+    fn default() -> Self {
+        SearchRequest::top_k(10)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_clamps_and_scales() {
+        assert_eq!(Effort::Exhaustive.resolve(16), 16);
+        assert_eq!(Effort::Probes(4).resolve(16), 4);
+        assert_eq!(Effort::Probes(0).resolve(16), 1);
+        assert_eq!(Effort::Probes(99).resolve(16), 16);
+        assert_eq!(Effort::Frac(0.25).resolve(16), 4);
+        assert_eq!(Effort::Frac(0.0).resolve(16), 1);
+        assert_eq!(Effort::Frac(1.0).resolve(16), 16);
+        assert_eq!(Effort::Auto.resolve(16), 4);
+        // exhaustive-only backbones have a single cell
+        for e in [Effort::Exhaustive, Effort::Probes(7), Effort::Auto] {
+            assert_eq!(e.resolve(1), 1);
+            assert_eq!(e.resolve(0), 1);
+        }
+    }
+
+    #[test]
+    fn builder_reads_fluently() {
+        let r = SearchRequest::top_k(5)
+            .effort(Effort::Probes(2))
+            .mode(QueryMode::Mapped);
+        assert_eq!(r.k, 5);
+        assert_eq!(r.effort, Effort::Probes(2));
+        assert_eq!(r.mode, QueryMode::Mapped);
+        assert_eq!(SearchRequest::top_k(0).k, 1);
+    }
+
+    #[test]
+    fn probes_resolution_is_monotone() {
+        let mut prev = 0;
+        for p in 1..=32 {
+            let r = Effort::Probes(p).resolve(16);
+            assert!(r >= prev);
+            prev = r;
+        }
+    }
+}

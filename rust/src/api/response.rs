@@ -1,0 +1,208 @@
+//! Typed search responses: per-query hit lists plus one unified cost
+//! breakdown that subsumes the seed's `SearchCost` / `PipelineOutcome` /
+//! `RoutingDecision` cost triplicate.
+
+use crate::index::traits::{SearchCost, SearchResult};
+
+/// Result list for one query: key ids sorted by descending score.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Hits {
+    pub ids: Vec<u32>,
+    pub scores: Vec<f32>,
+}
+
+impl Hits {
+    /// Best hit, if any.
+    pub fn top1(&self) -> Option<(u32, f32)> {
+        Some((*self.ids.first()?, *self.scores.first()?))
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+}
+
+impl From<SearchResult> for Hits {
+    fn from(r: SearchResult) -> Hits {
+        Hits {
+            ids: r.ids,
+            scores: r.scores,
+        }
+    }
+}
+
+/// Cost accounting for one [`SearchResponse`], accumulated over the whole
+/// batch. Stages follow the request path: *route* (cell selection, by
+/// centroids or a learned router), *map* (KeyNet query mapping), *scan*
+/// (candidate scoring + re-rank inside the backbone). Flops count
+/// multiply-add pairs as 2, matching `metrics::flops`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostBreakdown {
+    /// Flops spent selecting cells in an explicit routing stage.
+    /// Backbone-internal coarse ranking (e.g. plain IVF centroid scoring)
+    /// is accounted under `scan_flops` instead.
+    pub route_flops: u64,
+    /// Flops spent mapping queries (`x -> ŷ(x)`).
+    pub map_flops: u64,
+    /// Flops spent scoring candidates inside the backbone.
+    pub scan_flops: u64,
+    /// Database vectors fully scored.
+    pub keys_scanned: u64,
+    /// Coarse cells probed.
+    pub cells_probed: u64,
+    /// Wall-clock of the routing stage (whole batch).
+    pub route_seconds: f64,
+    /// Wall-clock of the mapping stage (whole batch).
+    pub map_seconds: f64,
+    /// Wall-clock of the scan stage (whole batch).
+    pub search_seconds: f64,
+}
+
+impl CostBreakdown {
+    /// Total flops across all stages.
+    pub fn total_flops(&self) -> u64 {
+        self.route_flops + self.map_flops + self.scan_flops
+    }
+
+    /// Total wall-clock across all stages.
+    pub fn total_seconds(&self) -> f64 {
+        self.route_seconds + self.map_seconds + self.search_seconds
+    }
+
+    /// Fold one backbone scan cost into the scan stage.
+    pub fn absorb_scan(&mut self, cost: &SearchCost) {
+        self.scan_flops += cost.flops;
+        self.keys_scanned += cost.keys_scanned;
+        self.cells_probed += cost.cells_probed;
+    }
+
+    /// Accumulate another breakdown (e.g. sharded / staged searchers).
+    pub fn add(&mut self, other: &CostBreakdown) {
+        self.route_flops += other.route_flops;
+        self.map_flops += other.map_flops;
+        self.scan_flops += other.scan_flops;
+        self.keys_scanned += other.keys_scanned;
+        self.cells_probed += other.cells_probed;
+        self.route_seconds += other.route_seconds;
+        self.map_seconds += other.map_seconds;
+        self.search_seconds += other.search_seconds;
+    }
+}
+
+/// Batched response: one [`Hits`] per query plus the aggregate cost.
+#[derive(Clone, Debug, Default)]
+pub struct SearchResponse {
+    pub hits: Vec<Hits>,
+    pub cost: CostBreakdown,
+}
+
+impl SearchResponse {
+    /// Build from per-query backbone results, absorbing their scan costs
+    /// into `cost`.
+    pub fn from_results(results: Vec<SearchResult>, mut cost: CostBreakdown) -> SearchResponse {
+        for r in &results {
+            cost.absorb_scan(&r.cost);
+        }
+        SearchResponse {
+            hits: results.into_iter().map(Hits::from).collect(),
+            cost,
+        }
+    }
+
+    pub fn n_queries(&self) -> usize {
+        self.hits.len()
+    }
+
+    /// Mean flops per query across all stages.
+    pub fn flops_per_query(&self) -> f64 {
+        if self.hits.is_empty() {
+            0.0
+        } else {
+            self.cost.total_flops() as f64 / self.hits.len() as f64
+        }
+    }
+
+    /// Mean wall-clock seconds per query across all stages.
+    pub fn seconds_per_query(&self) -> f64 {
+        if self.hits.is_empty() {
+            0.0
+        } else {
+            self.cost.total_seconds() / self.hits.len() as f64
+        }
+    }
+}
+
+/// Recall@k of a batch of hits against exact top-1 targets: the paper's
+/// "Recall@f%" metric is recall of `y*` within the top `⌈f·n⌉` returned
+/// candidates.
+pub fn recall_against_truth(hits: &[Hits], truth: &[usize], k: usize) -> f64 {
+    assert_eq!(hits.len(), truth.len());
+    if hits.is_empty() {
+        return 0.0;
+    }
+    let found = hits
+        .iter()
+        .zip(truth)
+        .filter(|(h, &t)| h.ids.iter().take(k).any(|&id| id as usize == t))
+        .count();
+    found as f64 / hits.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_totals_and_absorb() {
+        let mut c = CostBreakdown::default();
+        c.absorb_scan(&SearchCost {
+            flops: 100,
+            keys_scanned: 10,
+            cells_probed: 2,
+        });
+        c.route_flops = 7;
+        c.map_flops = 5;
+        assert_eq!(c.total_flops(), 112);
+        assert_eq!(c.keys_scanned, 10);
+        let mut sum = CostBreakdown::default();
+        sum.add(&c);
+        sum.add(&c);
+        assert_eq!(sum.total_flops(), 224);
+        assert_eq!(sum.cells_probed, 4);
+    }
+
+    #[test]
+    fn from_results_collects_hits() {
+        let r = SearchResult {
+            ids: vec![3, 1],
+            scores: vec![0.9, 0.5],
+            cost: SearchCost {
+                flops: 8,
+                keys_scanned: 4,
+                cells_probed: 1,
+            },
+        };
+        let resp = SearchResponse::from_results(vec![r.clone(), r], CostBreakdown::default());
+        assert_eq!(resp.n_queries(), 2);
+        assert_eq!(resp.hits[0].top1(), Some((3, 0.9)));
+        assert_eq!(resp.cost.scan_flops, 16);
+        assert_eq!(resp.flops_per_query(), 8.0);
+    }
+
+    #[test]
+    fn recall_counts_prefix_hits() {
+        let h = |ids: &[u32]| Hits {
+            ids: ids.to_vec(),
+            scores: vec![0.0; ids.len()],
+        };
+        let hits = vec![h(&[7, 2]), h(&[9, 4])];
+        assert_eq!(recall_against_truth(&hits, &[7, 9], 1), 1.0);
+        assert_eq!(recall_against_truth(&hits, &[2, 9], 1), 0.5);
+        assert_eq!(recall_against_truth(&hits, &[2, 4], 2), 1.0);
+        assert_eq!(recall_against_truth(&[], &[], 3), 0.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Routed search (paper Sec. 4.3): any [`Router`] — the centroid
+//! baseline or a learned `AmortizedRouter` — selects IVF cells, and the
+//! cells are scanned exactly. The [`Effort`] knob controls how many
+//! cells the router may pick, so learned and baseline routing trace the
+//! same Pareto axes through one request type.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::api::searcher::batch_map;
+use crate::api::{CostBreakdown, QueryMode, SearchRequest, SearchResponse, Searcher};
+use crate::coordinator::router::Router;
+use crate::index::ivf::IvfIndex;
+use crate::tensor::Tensor;
+use crate::util::Timer;
+
+/// A [`Searcher`] that pairs a cluster [`Router`] with IVF cell storage.
+///
+/// * [`QueryMode::Routed`] — the router picks `Effort::resolve(nlist)`
+///   cells per query; only those cells are scanned. Selection cost lands
+///   in [`CostBreakdown::route_flops`].
+/// * [`QueryMode::Original`] — plain IVF search (centroid coarse
+///   ranking), the baseline the router is measured against.
+pub struct RoutedSearcher<'a> {
+    router: &'a dyn Router,
+    index: &'a IvfIndex,
+}
+
+impl<'a> RoutedSearcher<'a> {
+    pub fn new(router: &'a dyn Router, index: &'a IvfIndex) -> Result<RoutedSearcher<'a>> {
+        ensure!(
+            router.n_clusters() == index.nlist,
+            "router ranks {} clusters but index has {} cells",
+            router.n_clusters(),
+            index.nlist
+        );
+        Ok(RoutedSearcher { router, index })
+    }
+}
+
+impl Searcher for RoutedSearcher<'_> {
+    fn label(&self) -> String {
+        format!("routed[{}->ivf]", self.router.name())
+    }
+
+    fn num_keys(&self) -> usize {
+        self.index.len()
+    }
+
+    fn search(&self, queries: &Tensor, request: &SearchRequest) -> Result<SearchResponse> {
+        match request.mode {
+            QueryMode::Mapped => bail!(
+                "RoutedSearcher cannot serve QueryMode::Mapped; use a MappedSearcher"
+            ),
+            QueryMode::Original => self.index.search(queries, request),
+            QueryMode::Routed => {
+                let n_cells = request.effort.resolve(self.index.nlist);
+                let timer = Timer::start();
+                let decisions = self.router.route_batch(queries, n_cells)?;
+                let route_seconds = timer.elapsed_s();
+                ensure!(
+                    decisions.len() == queries.rows(),
+                    "router returned {} decisions for {} queries",
+                    decisions.len(),
+                    queries.rows()
+                );
+                let timer = Timer::start();
+                let results = batch_map(queries.rows(), |i| {
+                    self.index
+                        .search_cells(queries.row(i), &decisions[i].clusters, request.k)
+                });
+                let mut cost = CostBreakdown {
+                    route_seconds,
+                    search_seconds: timer.elapsed_s(),
+                    ..CostBreakdown::default()
+                };
+                for dec in &decisions {
+                    cost.route_flops += dec.selection_flops;
+                }
+                Ok(SearchResponse::from_results(results, cost))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Effort;
+    use crate::coordinator::router::CentroidRouter;
+    use crate::tensor::normalize_rows;
+    use crate::util::Rng;
+
+    fn unit(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        normalize_rows(&mut t);
+        t
+    }
+
+    #[test]
+    fn centroid_routing_matches_plain_ivf() {
+        // Routing through a CentroidRouter over the index's own centroids
+        // must reproduce plain IVF exactly: same cell ranking, same scan.
+        let keys = unit(&[300, 16], 1);
+        let ivf = IvfIndex::build(&keys, 8, 10, 2);
+        let router = CentroidRouter::new(ivf.centroids().clone());
+        let searcher = RoutedSearcher::new(&router, &ivf).unwrap();
+        let q = unit(&[12, 16], 3);
+        for probes in [1usize, 3, 8] {
+            let req = SearchRequest::top_k(5).effort(Effort::Probes(probes));
+            let routed = searcher.search(&q, &req.mode(QueryMode::Routed)).unwrap();
+            let plain = ivf.search(&q, &req).unwrap();
+            for i in 0..12 {
+                assert_eq!(routed.hits[i].ids, plain.hits[i].ids, "probes {probes} q {i}");
+                assert_eq!(routed.hits[i].scores, plain.hits[i].scores);
+            }
+            // same keys scanned; selection flops split out of the scan stage
+            assert_eq!(routed.cost.keys_scanned, plain.cost.keys_scanned);
+            assert!(routed.cost.route_flops > 0);
+        }
+    }
+
+    #[test]
+    fn cluster_count_mismatch_rejected() {
+        let keys = unit(&[100, 8], 4);
+        let ivf = IvfIndex::build(&keys, 6, 8, 5);
+        let router = CentroidRouter::new(unit(&[4, 8], 6));
+        assert!(RoutedSearcher::new(&router, &ivf).is_err());
+    }
+
+    #[test]
+    fn mapped_mode_rejected() {
+        let keys = unit(&[100, 8], 7);
+        let ivf = IvfIndex::build(&keys, 4, 8, 8);
+        let router = CentroidRouter::new(ivf.centroids().clone());
+        let searcher = RoutedSearcher::new(&router, &ivf).unwrap();
+        let q = unit(&[2, 8], 9);
+        let req = SearchRequest::top_k(1).mode(QueryMode::Mapped);
+        assert!(searcher.search(&q, &req).is_err());
+    }
+}

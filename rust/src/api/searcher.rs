@@ -1,0 +1,168 @@
+//! The batch-first [`Searcher`] trait and its blanket implementation over
+//! every index backbone. Wrappers ([`crate::api::MappedSearcher`],
+//! [`crate::api::RoutedSearcher`], future sharded/cached searchers)
+//! implement the same trait, so every bench, example and the server
+//! compose against one polymorphic surface.
+
+use anyhow::{bail, Result};
+use std::sync::Mutex;
+
+use crate::api::{CostBreakdown, QueryMode, SearchRequest, SearchResponse};
+use crate::index::traits::{SearchResult, VectorIndex};
+use crate::tensor::Tensor;
+use crate::util::threads::{num_threads, parallel_chunks};
+use crate::util::Timer;
+
+/// A polymorphic batched MIPS searcher.
+///
+/// `search` takes the whole query batch at once — implementations are
+/// free to fuse stage work across the batch (one model forward for all
+/// queries, parallel scans) and report one [`CostBreakdown`] covering it.
+pub trait Searcher {
+    /// Human-readable label ("ivf", "mapped[keynet->ivf]", …).
+    fn label(&self) -> String;
+
+    /// Number of database keys served.
+    fn num_keys(&self) -> usize;
+
+    /// Batched top-k search.
+    fn search(&self, queries: &Tensor, request: &SearchRequest) -> Result<SearchResponse>;
+
+    /// Single-query convenience wrapper around [`Searcher::search`].
+    fn search_one(&self, query: &[f32], request: &SearchRequest) -> Result<SearchResponse> {
+        let q = Tensor::from_vec(&[1, query.len()], query.to_vec());
+        self.search(&q, request)
+    }
+}
+
+/// Run `f(query_index)` for every query in `0..n` on the shared thread
+/// pool, preserving input order in the output.
+pub(crate) fn batch_map<F>(n: usize, f: F) -> Vec<SearchResult>
+where
+    F: Fn(usize) -> SearchResult + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    // ~4 chunks per worker: enough slack for uneven per-query cost
+    // without drowning in coordination.
+    let chunk = n.div_ceil(num_threads().max(1) * 4).max(1);
+    let parts: Mutex<Vec<(usize, Vec<SearchResult>)>> = Mutex::new(Vec::new());
+    parallel_chunks(n, chunk, |_, start, end| {
+        let block: Vec<SearchResult> = (start..end).map(&f).collect();
+        parts.lock().unwrap().push((start, block));
+    });
+    let mut parts = parts.into_inner().unwrap();
+    parts.sort_by_key(|(start, _)| *start);
+    let mut out = Vec::with_capacity(n);
+    for (_, block) in parts {
+        out.extend(block);
+    }
+    out
+}
+
+/// Every index backbone is a [`Searcher`] serving [`QueryMode::Original`]
+/// directly; the batch is parallelized over the `util::threads` pool.
+/// Mapped/routed modes need the corresponding wrapper, which owns the
+/// extra stage (and its cost accounting).
+impl<T: VectorIndex + ?Sized> Searcher for T {
+    fn label(&self) -> String {
+        self.name().to_string()
+    }
+
+    fn num_keys(&self) -> usize {
+        self.len()
+    }
+
+    fn search(&self, queries: &Tensor, request: &SearchRequest) -> Result<SearchResponse> {
+        if request.mode != QueryMode::Original {
+            bail!(
+                "backbone '{}' serves QueryMode::Original only; wrap it in a \
+                 MappedSearcher or RoutedSearcher for {:?}",
+                self.name(),
+                request.mode
+            );
+        }
+        let timer = Timer::start();
+        let results = batch_map(queries.rows(), |i| {
+            self.search_effort(queries.row(i), request.k, request.effort)
+        });
+        let cost = CostBreakdown {
+            search_seconds: timer.elapsed_s(),
+            ..CostBreakdown::default()
+        };
+        Ok(SearchResponse::from_results(results, cost))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Effort;
+    use crate::index::flat::FlatIndex;
+    use crate::tensor::normalize_rows;
+    use crate::util::Rng;
+
+    fn unit(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        normalize_rows(&mut t);
+        t
+    }
+
+    #[test]
+    fn blanket_impl_matches_per_query_scan() {
+        let keys = unit(&[120, 8], 1);
+        let idx = FlatIndex::new(keys);
+        let q = unit(&[33, 8], 2);
+        let req = SearchRequest::top_k(5).effort(Effort::Exhaustive);
+        let resp = idx.search(&q, &req).unwrap();
+        assert_eq!(resp.n_queries(), 33);
+        for i in 0..33 {
+            let single = idx.search_effort(q.row(i), 5, Effort::Exhaustive);
+            assert_eq!(resp.hits[i].ids, single.ids, "query {i}");
+            assert_eq!(resp.hits[i].scores, single.scores);
+        }
+        // cost aggregates the whole batch
+        assert_eq!(resp.cost.keys_scanned, 33 * 120);
+        assert!(resp.cost.scan_flops > 0);
+    }
+
+    #[test]
+    fn non_original_mode_is_rejected_on_bare_backbone() {
+        let idx = FlatIndex::new(unit(&[10, 4], 3));
+        let q = unit(&[2, 4], 4);
+        for mode in [QueryMode::Mapped, QueryMode::Routed] {
+            let req = SearchRequest::top_k(1).mode(mode);
+            assert!(idx.search(&q, &req).is_err(), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn search_one_wraps_single_query() {
+        let keys = unit(&[50, 8], 5);
+        let idx = FlatIndex::new(keys);
+        let q = unit(&[1, 8], 6);
+        let resp = idx
+            .search_one(q.row(0), &SearchRequest::top_k(3).effort(Effort::Exhaustive))
+            .unwrap();
+        assert_eq!(resp.n_queries(), 1);
+        assert_eq!(resp.hits[0].len(), 3);
+    }
+
+    #[test]
+    fn batch_map_preserves_order_under_threads() {
+        // force multi-chunk execution regardless of core count
+        let n = 257;
+        let out = batch_map(n, |i| SearchResult {
+            ids: vec![i as u32],
+            scores: vec![i as f32],
+            cost: Default::default(),
+        });
+        assert_eq!(out.len(), n);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.ids[0] as usize, i);
+        }
+        assert!(batch_map(0, |_| unreachable!()).is_empty());
+    }
+}

@@ -1,13 +1,12 @@
 //! Shared experiment fixtures: dataset preparation from the manifest and
-//! train-or-load model acquisition. Used by the CLI, the examples and
-//! every bench so all of them agree on seeds and scaling.
+//! (behind the `xla` feature) train-or-load model acquisition. Used by
+//! the CLI, the examples and every bench so all of them agree on seeds
+//! and scaling.
 
 use anyhow::Result;
 
-use crate::data::{Dataset, dataset::PrepareOpts};
-use crate::model::AmortizedModel;
-use crate::runtime::{Engine, Manifest};
-use crate::trainer::{self, TrainOpts};
+use crate::data::{dataset::PrepareOpts, Dataset};
+use crate::runtime::Manifest;
 
 /// Load the artifacts manifest (run `make artifacts` first).
 pub fn load_manifest() -> Result<Manifest> {
@@ -54,20 +53,22 @@ pub fn default_nlist(n_keys: usize) -> usize {
 
 /// Train (or load the cached checkpoint of) `config` on `ds`, returning
 /// a ready inference handle.
+#[cfg(feature = "xla")]
 pub fn trained_model(
-    engine: &Engine,
+    engine: &crate::runtime::Engine,
     manifest: &Manifest,
     config: &str,
     ds: &Dataset,
-    opts: Option<TrainOpts>,
-) -> Result<AmortizedModel> {
+    opts: Option<crate::trainer::TrainOpts>,
+) -> Result<crate::model::AmortizedModel> {
+    use crate::trainer::{self, TrainOpts};
     let meta = manifest.meta(config)?;
     let opts = opts.unwrap_or_else(|| TrainOpts {
         steps: default_steps(&meta.size),
         ..TrainOpts::default()
     });
     let out = trainer::train_or_load(engine, &meta, ds, &opts)?;
-    AmortizedModel::load(engine, meta, &out.params)
+    crate::model::AmortizedModel::load(engine, meta, &out.params)
 }
 
 #[cfg(test)]

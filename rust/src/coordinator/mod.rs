@@ -1,14 +1,18 @@
 //! The serving coordinator — L3's contribution: cluster routing with
-//! learned support functions, query mapping with KeyNet, dynamic
-//! batching, and a threaded request loop. Python never appears here;
-//! the models are the AOT artifacts loaded through [`crate::runtime`].
+//! learned support functions, dynamic batching, and a threaded request
+//! loop speaking the [`crate::api`] request/response types. Query
+//! mapping (the old `MappedSearchPipeline`) lives in
+//! [`crate::api::MappedSearcher`]; routed search over IVF cells in
+//! [`crate::api::RoutedSearcher`]. Python never appears here; the models
+//! are AOT artifacts loaded through `crate::runtime` (behind the `xla`
+//! feature).
 
 pub mod batcher;
-pub mod pipeline;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use pipeline::MappedSearchPipeline;
-pub use router::{AmortizedRouter, CentroidRouter, Router, RoutingDecision};
-pub use server::{Server, ServerConfig, ServerHandle};
+#[cfg(feature = "xla")]
+pub use router::AmortizedRouter;
+pub use router::{CentroidRouter, Router, RoutingDecision};
+pub use server::{MapperFactory, Response, Server, ServerConfig, ServerHandle};

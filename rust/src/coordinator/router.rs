@@ -12,6 +12,7 @@ use anyhow::Result;
 
 use crate::index::traits::TopK;
 use crate::metrics::flops;
+#[cfg(feature = "xla")]
 use crate::model::AmortizedModel;
 use crate::tensor::{dot, Tensor};
 
@@ -75,11 +76,13 @@ impl Router for CentroidRouter {
 }
 
 /// Learned router: rank clusters by predicted support value.
+#[cfg(feature = "xla")]
 pub struct AmortizedRouter {
     model: AmortizedModel,
     label: String,
 }
 
+#[cfg(feature = "xla")]
 impl AmortizedRouter {
     pub fn new(model: AmortizedModel) -> Self {
         let label = format!("amortized-{}", model.meta.model);
@@ -91,6 +94,7 @@ impl AmortizedRouter {
     }
 }
 
+#[cfg(feature = "xla")]
 impl Router for AmortizedRouter {
     fn name(&self) -> &str {
         &self.label

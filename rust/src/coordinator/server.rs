@@ -1,17 +1,22 @@
-//! Threaded serving loop: the deployable shape of the system.
+//! Threaded serving loop: the deployable shape of the system, speaking
+//! the [`crate::api`] request/response types end to end.
 //!
 //! Architecture (vLLM-router-like, scaled to one box):
 //!
 //! ```text
-//!  clients --> mpsc --> [batcher thread] --(dynamic batch)--> model runner
-//!                         |                (Engine confined here: PJRT
-//!                         |                 handles are !Send)
+//!  clients --> mpsc --> [batcher thread] --(dynamic batch)--> query map
+//!                         |                (QueryMap built here via the
+//!                         |                 MapperFactory: PJRT handles
+//!                         |                 are !Send)
 //!                         +--> index search (shared Arc<dyn VectorIndex>)
 //!                         +--> per-request reply channel + latency stats
 //! ```
 //!
-//! The runner thread owns the `Engine`, the compiled KeyNet executable
-//! and the trained parameters; requests only carry `Vec<f32>` queries.
+//! Clients send a `Vec<f32>` query plus a [`SearchRequest`]; the batcher
+//! groups requests, runs the mapping stage once per batch (for requests
+//! in [`QueryMode::Mapped`]) and scans the shared index at each
+//! request's own effort level. Responses carry [`Hits`] plus a
+//! [`CostBreakdown`].
 
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -19,41 +24,114 @@ use std::sync::mpsc::{channel, sync_channel, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::api::{CostBreakdown, Hits, QueryMap, QueryMode, SearchRequest};
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::index::traits::VectorIndex;
-use crate::model::{AmortizedModel, ParamSet};
-use crate::runtime::{ArtifactMeta, Engine};
 use crate::tensor::Tensor;
 use crate::util::timer::LatencyHistogram;
+use crate::util::Timer;
 
-/// One search request.
+/// One queued search request.
 struct Request {
     query: Vec<f32>,
-    k: usize,
-    nprobe: usize,
+    request: SearchRequest,
     enqueued: Instant,
-    reply: SyncSender<Response>,
+    reply: SyncSender<Result<Response>>,
 }
 
 /// One search response.
 #[derive(Clone, Debug)]
 pub struct Response {
-    pub ids: Vec<u32>,
-    pub scores: Vec<f32>,
+    pub hits: Hits,
+    pub cost: CostBreakdown,
     /// end-to-end latency as measured by the server
     pub latency: Duration,
 }
 
+/// Builds the optional query map *on the runner thread* — the PJRT-backed
+/// [`QueryMap`] (`model::AmortizedModel`) is `!Send`, so construction
+/// must happen where it runs. Pure-Rust maps can be built anywhere but
+/// follow the same path for uniformity.
+pub type MapperFactory = Box<dyn FnOnce() -> Result<Option<Box<dyn QueryMap>>> + Send>;
+
 /// Server configuration.
 pub struct ServerConfig {
-    pub artifacts_dir: std::path::PathBuf,
-    pub meta: ArtifactMeta,
-    pub params: ParamSet,
     pub policy: BatchPolicy,
-    /// map queries through KeyNet before searching (Sec. 4.4) —
-    /// disable for an "original queries" baseline server.
-    pub map_queries: bool,
-    pub nprobe_default: usize,
+    /// Request template used by [`ServerHandle::search`].
+    pub default_request: SearchRequest,
+    pub mapper: MapperFactory,
+}
+
+impl ServerConfig {
+    /// A server with no query map: every request runs in
+    /// [`QueryMode::Original`] semantics (Mapped requests error).
+    pub fn unmapped(policy: BatchPolicy, default_request: SearchRequest) -> ServerConfig {
+        ServerConfig {
+            policy,
+            default_request,
+            mapper: Box::new(|| Ok(None)),
+        }
+    }
+
+    /// A server with an explicit mapper factory.
+    pub fn with_mapper(
+        policy: BatchPolicy,
+        default_request: SearchRequest,
+        mapper: MapperFactory,
+    ) -> ServerConfig {
+        ServerConfig {
+            policy,
+            default_request,
+            mapper,
+        }
+    }
+
+    /// A server that maps queries through a trained c=1 KeyNet loaded
+    /// from the AOT artifacts (Sec. 4.4). The engine and model are
+    /// constructed on the runner thread.
+    #[cfg(feature = "xla")]
+    pub fn with_model(
+        artifacts_dir: std::path::PathBuf,
+        meta: crate::runtime::ArtifactMeta,
+        params: crate::model::ParamSet,
+        policy: BatchPolicy,
+        default_request: SearchRequest,
+    ) -> ServerConfig {
+        ServerConfig {
+            policy,
+            default_request,
+            mapper: Box::new(move || {
+                let engine = crate::runtime::Engine::new(artifacts_dir)?;
+                let model = crate::model::AmortizedModel::load(&engine, meta, &params)?;
+                Ok(Some(Box::new(EnginePinnedMap {
+                    _engine: engine,
+                    model,
+                }) as Box<dyn QueryMap>))
+            }),
+        }
+    }
+}
+
+/// Keeps the engine alive next to the model it compiled for.
+#[cfg(feature = "xla")]
+struct EnginePinnedMap {
+    _engine: crate::runtime::Engine,
+    model: crate::model::AmortizedModel,
+}
+
+#[cfg(feature = "xla")]
+impl QueryMap for EnginePinnedMap {
+    fn label(&self) -> &str {
+        &self.model.meta.name
+    }
+
+    fn map_flops_per_query(&self) -> u64 {
+        self.model.key_flops()
+    }
+
+    fn map(&self, queries: &Tensor) -> Result<Tensor> {
+        self.model.map_queries(queries)
+    }
 }
 
 /// Running server with its worker thread.
@@ -68,83 +146,189 @@ pub struct Server {
 #[derive(Clone)]
 pub struct ServerHandle {
     tx: Sender<Request>,
-    nprobe_default: usize,
+    default_request: SearchRequest,
 }
 
 impl ServerHandle {
-    /// Blocking query.
-    pub fn query(&self, query: Vec<f32>, k: usize) -> Result<Response> {
-        self.query_nprobe(query, k, self.nprobe_default)
+    /// Blocking search with the server's default request template.
+    pub fn search(&self, query: Vec<f32>) -> Result<Response> {
+        self.search_with(query, self.default_request)
     }
 
-    pub fn query_nprobe(&self, query: Vec<f32>, k: usize, nprobe: usize) -> Result<Response> {
+    /// Blocking search with an explicit per-request [`SearchRequest`].
+    pub fn search_with(&self, query: Vec<f32>, request: SearchRequest) -> Result<Response> {
         let (rtx, rrx) = sync_channel(1);
         self.tx
             .send(Request {
                 query,
-                k,
-                nprobe,
+                request,
                 enqueued: Instant::now(),
                 reply: rtx,
             })
             .map_err(|_| anyhow!("server stopped"))?;
-        rrx.recv().map_err(|_| anyhow!("server dropped request"))
+        rrx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+
+    /// The server's request template (what [`ServerHandle::search`] uses).
+    pub fn default_request(&self) -> SearchRequest {
+        self.default_request
+    }
+}
+
+/// Serve one drained batch: map once, scan per request, reply per request.
+fn serve_batch(
+    batch: Vec<Request>,
+    index: &dyn VectorIndex,
+    mapper: &Option<Box<dyn QueryMap>>,
+    stats: &Mutex<LatencyHistogram>,
+) {
+    let d = index.dim();
+    // split off malformed requests first so tensor rows align with `valid`
+    let mut valid: Vec<Request> = Vec::with_capacity(batch.len());
+    for req in batch {
+        if req.query.len() == d {
+            valid.push(req);
+        } else {
+            let msg = format!("query dim {} != index dim {d}", req.query.len());
+            let _ = req.reply.send(Err(anyhow!("{msg}")));
+        }
+    }
+    if valid.is_empty() {
+        return;
+    }
+    let mut q = Tensor::zeros(&[valid.len(), d]);
+    for (i, r) in valid.iter().enumerate() {
+        q.row_mut(i).copy_from_slice(&r.query);
+    }
+    // One fused mapping pass per batch (the amortized win) — but only
+    // over the rows that actually request mapping, so Original traffic
+    // never pays for the model forward.
+    let mapped_rows: Vec<usize> = valid
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.request.mode == QueryMode::Mapped)
+        .map(|(i, _)| i)
+        .collect();
+    let mut map_err: Option<String> = None;
+    let mut map_seconds = 0.0;
+    let mapped: Option<Tensor> = if mapped_rows.is_empty() {
+        None
+    } else {
+        match mapper {
+            Some(m) => {
+                let sub = q.gather_rows(&mapped_rows);
+                let t = Timer::start();
+                match m.map(&sub) {
+                    Ok(t_mapped) => {
+                        map_seconds = t.elapsed_s();
+                        if t_mapped.row_width() == d {
+                            Some(t_mapped)
+                        } else {
+                            map_err = Some(format!(
+                                "query map produced dim {} but index expects {d}",
+                                t_mapped.row_width()
+                            ));
+                            None
+                        }
+                    }
+                    Err(e) => {
+                        map_err = Some(format!("query mapping failed: {e:#}"));
+                        None
+                    }
+                }
+            }
+            None => None,
+        }
+    };
+    let n_mapped = mapped_rows.len().max(1);
+    // position of each Mapped request inside the gathered sub-batch
+    let mut mapped_cursor = 0usize;
+    for (i, req) in valid.into_iter().enumerate() {
+        let outcome: Result<Response> = (|| {
+            let (row, map_flops): (&[f32], u64) = match req.request.mode {
+                QueryMode::Original => (q.row(i), 0),
+                QueryMode::Mapped => match (mapper, &mapped) {
+                    (Some(m), Some(t)) => {
+                        let pos = mapped_cursor;
+                        mapped_cursor += 1;
+                        (t.row(pos), m.map_flops_per_query())
+                    }
+                    (None, _) => {
+                        return Err(anyhow!(
+                            "server has no query map; send QueryMode::Original"
+                        ))
+                    }
+                    (Some(_), None) => {
+                        return Err(anyhow!(
+                            "{}",
+                            map_err.as_deref().unwrap_or("query mapping failed")
+                        ))
+                    }
+                },
+                QueryMode::Routed => {
+                    return Err(anyhow!(
+                        "server index has no router; QueryMode::Routed is unsupported"
+                    ))
+                }
+            };
+            let t = Timer::start();
+            let res = index.search_effort(row, req.request.k, req.request.effort);
+            let mut cost = CostBreakdown {
+                map_flops,
+                // amortize the batch mapping wall-clock over its users
+                map_seconds: if map_flops > 0 {
+                    map_seconds / n_mapped as f64
+                } else {
+                    0.0
+                },
+                search_seconds: t.elapsed_s(),
+                ..CostBreakdown::default()
+            };
+            cost.absorb_scan(&res.cost);
+            Ok(Response {
+                hits: Hits {
+                    ids: res.ids,
+                    scores: res.scores,
+                },
+                cost,
+                latency: req.enqueued.elapsed(),
+            })
+        })();
+        if let Ok(resp) = &outcome {
+            stats.lock().unwrap().record(resp.latency.as_secs_f64());
+        }
+        // client may have given up; ignore send errors
+        let _ = req.reply.send(outcome);
     }
 }
 
 impl Server {
-    /// Spawn the model-runner/batcher thread over a shared index.
+    /// Spawn the batcher/model-runner thread over a shared index.
     pub fn start(cfg: ServerConfig, index: Arc<dyn VectorIndex>) -> Result<(Server, ServerHandle)> {
         let (tx, rx) = channel::<Request>();
         let stats = Arc::new(Mutex::new(LatencyHistogram::new()));
         let stop = Arc::new(AtomicBool::new(false));
         let stats2 = stats.clone();
         let stop2 = stop.clone();
-        let nprobe_default = cfg.nprobe_default;
+        let default_request = cfg.default_request;
         let join = std::thread::Builder::new()
             .name("amips-runner".into())
             .spawn(move || -> Result<()> {
-                // Engine must be constructed on this thread (!Send).
-                let engine = Engine::new(cfg.artifacts_dir.clone())?;
-                let model = if cfg.map_queries {
-                    Some(AmortizedModel::load(&engine, cfg.meta.clone(), &cfg.params)?)
-                } else {
-                    None
-                };
-                let d = cfg.meta.d;
+                // The query map must be constructed on this thread
+                // (PJRT handles are !Send).
+                let mapper: Option<Box<dyn QueryMap>> = (cfg.mapper)()?;
                 let batcher = Batcher::new(rx, cfg.policy);
                 while let Some((batch, _reason)) = batcher.next_batch() {
                     if stop2.load(Ordering::Relaxed) {
                         break;
                     }
-                    // assemble the query matrix
-                    let mut q = Tensor::zeros(&[batch.len(), d]);
-                    for (i, r) in batch.iter().enumerate() {
-                        anyhow::ensure!(r.query.len() == d, "query dim {}", r.query.len());
-                        q.row_mut(i).copy_from_slice(&r.query);
-                    }
-                    let effective = match &model {
-                        Some(m) => m.map_queries(&q)?,
-                        None => q,
-                    };
-                    // search + reply per request
-                    for (i, req) in batch.into_iter().enumerate() {
-                        let res = index.search(effective.row(i), req.k, req.nprobe);
-                        let latency = req.enqueued.elapsed();
-                        stats2.lock().unwrap().record(latency.as_secs_f64());
-                        // client may have given up; ignore send errors
-                        let _ = req.reply.send(Response {
-                            ids: res.ids,
-                            scores: res.scores,
-                            latency,
-                        });
-                    }
+                    serve_batch(batch, index.as_ref(), &mapper, &stats2);
                 }
                 Ok(())
             })?;
         let handle = ServerHandle {
             tx: tx.clone(),
-            nprobe_default,
+            default_request,
         };
         Ok((
             Server {
@@ -185,5 +369,121 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Effort, LinearQueryMap};
+    use crate::index::ivf::IvfIndex;
+    use crate::tensor::normalize_rows;
+    use crate::util::Rng;
+
+    fn unit(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        normalize_rows(&mut t);
+        t
+    }
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+        }
+    }
+
+    #[test]
+    fn unmapped_server_round_trip() {
+        let keys = unit(&[200, 8], 1);
+        let index = Arc::new(IvfIndex::build(&keys, 8, 10, 2));
+        let req = SearchRequest::top_k(5).effort(Effort::Probes(8));
+        let (server, handle) = Server::start(ServerConfig::unmapped(policy(), req), index).unwrap();
+        let q = unit(&[4, 8], 3);
+        for i in 0..4 {
+            let resp = handle.search(q.row(i).to_vec()).unwrap();
+            assert_eq!(resp.hits.len(), 5);
+            assert!(resp.cost.keys_scanned > 0);
+            assert_eq!(resp.cost.map_flops, 0);
+        }
+        assert_eq!(server.latency_stats().count(), 4);
+        drop(handle);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn mapped_server_uses_query_map() {
+        let keys = unit(&[150, 8], 4);
+        let index = Arc::new(IvfIndex::build(&keys, 4, 10, 5));
+        let req = SearchRequest::top_k(3)
+            .effort(Effort::Exhaustive)
+            .mode(QueryMode::Mapped);
+        let cfg = ServerConfig::with_mapper(
+            policy(),
+            req,
+            Box::new(|| Ok(Some(Box::new(LinearQueryMap::identity(8)) as Box<dyn QueryMap>))),
+        );
+        let (server, handle) = Server::start(cfg, index).unwrap();
+        let q = unit(&[3, 8], 6);
+        for i in 0..3 {
+            let mapped = handle.search(q.row(i).to_vec()).unwrap();
+            assert!(mapped.cost.map_flops > 0);
+            // identity map: same hits as an Original-mode request
+            let orig = handle
+                .search_with(q.row(i).to_vec(), req.mode(QueryMode::Original))
+                .unwrap();
+            assert_eq!(mapped.hits.ids, orig.hits.ids);
+            assert_eq!(orig.cost.map_flops, 0);
+        }
+        drop(handle);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn bad_requests_get_error_replies_not_crashes() {
+        let keys = unit(&[100, 8], 7);
+        let index = Arc::new(IvfIndex::build(&keys, 4, 8, 8));
+        let req = SearchRequest::top_k(2).effort(Effort::Probes(2));
+        let (server, handle) = Server::start(ServerConfig::unmapped(policy(), req), index).unwrap();
+        // wrong dimension
+        assert!(handle.search(vec![0.0; 5]).is_err());
+        // mapped mode without a mapper
+        assert!(handle
+            .search_with(vec![0.0; 8], req.mode(QueryMode::Mapped))
+            .is_err());
+        // routed mode unsupported on the server
+        assert!(handle
+            .search_with(vec![0.0; 8], req.mode(QueryMode::Routed))
+            .is_err());
+        // the server is still alive afterwards
+        let ok = handle.search(unit(&[1, 8], 9).row(0).to_vec());
+        assert!(ok.is_ok());
+        drop(handle);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn concurrent_clients_all_served() {
+        let keys = unit(&[300, 8], 10);
+        let index = Arc::new(IvfIndex::build(&keys, 8, 8, 11));
+        let req = SearchRequest::top_k(4).effort(Effort::Probes(4));
+        let (server, handle) = Server::start(ServerConfig::unmapped(policy(), req), index).unwrap();
+        let q = unit(&[32, 8], 12);
+        std::thread::scope(|s| {
+            for c in 0..4usize {
+                let handle = handle.clone();
+                let q = &q;
+                s.spawn(move || {
+                    for i in (c..32).step_by(4) {
+                        let resp = handle.search(q.row(i).to_vec()).unwrap();
+                        assert_eq!(resp.hits.len(), 4);
+                    }
+                });
+            }
+        });
+        assert_eq!(server.latency_stats().count(), 32);
+        drop(handle);
+        server.shutdown().unwrap();
     }
 }

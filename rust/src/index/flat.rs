@@ -2,6 +2,7 @@
 //! backbone is measured against, and the "exact search within selected
 //! clusters" stage of the routing experiments (Sec. 4.3).
 
+use crate::api::Effort;
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
 use crate::tensor::{dot, Tensor};
 
@@ -41,18 +42,9 @@ impl FlatIndex {
             },
         }
     }
-}
 
-impl VectorIndex for FlatIndex {
-    fn name(&self) -> &str {
-        "flat"
-    }
-
-    fn len(&self) -> usize {
-        self.keys.rows()
-    }
-
-    fn search(&self, query: &[f32], k: usize, _nprobe: usize) -> SearchResult {
+    /// The exhaustive scan itself; effort has nothing to modulate here.
+    fn scan_all(&self, query: &[f32], k: usize) -> SearchResult {
         let n = self.len();
         let d = self.d();
         let mut top = TopK::new(k);
@@ -72,6 +64,24 @@ impl VectorIndex for FlatIndex {
     }
 }
 
+impl VectorIndex for FlatIndex {
+    fn name(&self) -> &str {
+        "flat"
+    }
+
+    fn len(&self) -> usize {
+        self.keys.rows()
+    }
+
+    fn dim(&self) -> usize {
+        self.d()
+    }
+
+    fn search_effort(&self, query: &[f32], k: usize, _effort: Effort) -> SearchResult {
+        self.scan_all(query, k)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,7 +98,7 @@ mod tests {
         let keys = randt(&[200, 16], 1);
         let idx = FlatIndex::new(keys.clone());
         let q = randt(&[1, 16], 2);
-        let res = idx.search(q.row(0), 1, 0);
+        let res = idx.search_effort(q.row(0), 1, Effort::Exhaustive);
         let mut best = (0usize, f32::NEG_INFINITY);
         for i in 0..200 {
             let s = dot(q.row(0), keys.row(i));
@@ -106,7 +116,7 @@ mod tests {
         let keys = randt(&[100, 8], 3);
         let idx = FlatIndex::new(keys);
         let q = randt(&[1, 8], 4);
-        let res = idx.search(q.row(0), 10, 0);
+        let res = idx.search_effort(q.row(0), 10, Effort::Auto);
         assert_eq!(res.ids.len(), 10);
         for w in res.scores.windows(2) {
             assert!(w[0] >= w[1]);
@@ -122,5 +132,16 @@ mod tests {
         let res = idx.search_subset(q.row(0), &subset, 2);
         assert!(res.ids.iter().all(|id| subset.contains(id)));
         assert_eq!(res.cost.keys_scanned, 3);
+    }
+
+    #[test]
+    fn effort_levels_agree_on_exhaustive_backbone() {
+        let keys = randt(&[80, 8], 7);
+        let idx = FlatIndex::new(keys);
+        let q = randt(&[1, 8], 8);
+        let a = idx.search_effort(q.row(0), 5, Effort::Exhaustive);
+        let b = idx.search_effort(q.row(0), 5, Effort::Probes(1));
+        assert_eq!(a.ids, b.ids);
+        assert_eq!(idx.n_cells(), 1);
     }
 }

@@ -3,10 +3,13 @@
 //!
 //! Build: spherical k-means over the keys -> `nlist` Voronoi cells with
 //! contiguous per-cell key storage (cache-friendly scans). Query: score
-//! the query against all centroids, take the `nprobe` best cells, scan
-//! their members exhaustively. Swapping the query vector for KeyNet's
-//! ŷ(x) — and nothing else — is the paper's drop-in integration.
+//! the query against all centroids, take the `Effort`-resolved number of
+//! best cells, scan their members exhaustively. Swapping the query vector
+//! for KeyNet's ŷ(x) — and nothing else — is the paper's drop-in
+//! integration; swapping centroid ranking for a learned router is
+//! [`crate::api::RoutedSearcher`] over [`IvfIndex::search_cells`].
 
+use crate::api::Effort;
 use crate::index::kmeans::KMeans;
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
 use crate::tensor::{dot, Tensor};
@@ -86,6 +89,24 @@ impl IvfIndex {
         top.into_sorted().0
     }
 
+    /// Exact top-k over an explicit list of cells (the routed-search
+    /// entry point: the caller — centroid ranking or a learned router —
+    /// owns cell selection and its cost; this accounts only the scan).
+    pub fn search_cells(&self, query: &[f32], cells: &[u32], k: usize) -> SearchResult {
+        let mut top = TopK::new(k);
+        let scanned = self.scan_cells(query, cells, &mut top);
+        let (ids, scores) = top.into_sorted();
+        SearchResult {
+            ids,
+            scores,
+            cost: SearchCost {
+                flops: scanned * self.d as u64 * 2,
+                keys_scanned: scanned,
+                cells_probed: cells.len() as u64,
+            },
+        }
+    }
+
     /// Scan an explicit list of cells, maintaining a shared TopK.
     fn scan_cells(&self, query: &[f32], cells: &[u32], top: &mut TopK) -> u64 {
         let mut scanned = 0u64;
@@ -98,18 +119,9 @@ impl IvfIndex {
         }
         scanned
     }
-}
 
-impl VectorIndex for IvfIndex {
-    fn name(&self) -> &str {
-        "ivf"
-    }
-
-    fn len(&self) -> usize {
-        self.ids.len()
-    }
-
-    fn search(&self, query: &[f32], k: usize, nprobe: usize) -> SearchResult {
+    /// Centroid-ranked probe search (the classic IVF query path).
+    fn search_probes(&self, query: &[f32], k: usize, nprobe: usize) -> SearchResult {
         let nprobe = nprobe.clamp(1, self.nlist);
         let cells = self.rank_cells(query, nprobe);
         let mut top = TopK::new(k);
@@ -124,6 +136,28 @@ impl VectorIndex for IvfIndex {
                 cells_probed: nprobe as u64,
             },
         }
+    }
+}
+
+impl VectorIndex for IvfIndex {
+    fn name(&self) -> &str {
+        "ivf"
+    }
+
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn n_cells(&self) -> usize {
+        self.nlist
+    }
+
+    fn search_effort(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult {
+        self.search_probes(query, k, effort.resolve(self.nlist))
     }
 }
 
@@ -148,8 +182,8 @@ mod tests {
         let flat = FlatIndex::new(keys.clone());
         let q = unit_keys(10, 16, 3);
         for i in 0..10 {
-            let a = ivf.search(q.row(i), 5, 8); // probe all cells
-            let b = flat.search(q.row(i), 5, 0);
+            let a = ivf.search_effort(q.row(i), 5, Effort::Exhaustive);
+            let b = flat.search_effort(q.row(i), 5, Effort::Exhaustive);
             assert_eq!(a.ids, b.ids, "query {i}");
         }
     }
@@ -177,9 +211,10 @@ mod tests {
         let q = unit_keys(50, 16, 8);
         let mut hits = vec![0usize; 3];
         for i in 0..50 {
-            let truth = flat.search(q.row(i), 1, 0).ids[0];
+            let truth = flat.search_effort(q.row(i), 1, Effort::Exhaustive).ids[0];
             for (pi, np) in [1usize, 4, 16].iter().enumerate() {
-                if ivf.search(q.row(i), 1, *np).ids.first() == Some(&truth) {
+                let res = ivf.search_effort(q.row(i), 1, Effort::Probes(*np));
+                if res.ids.first() == Some(&truth) {
                     hits[pi] += 1;
                 }
             }
@@ -193,11 +228,38 @@ mod tests {
         let keys = unit_keys(300, 8, 9);
         let ivf = IvfIndex::build(&keys, 10, 8, 10);
         let q = unit_keys(1, 8, 11);
-        let c1 = ivf.search(q.row(0), 1, 1).cost;
-        let c5 = ivf.search(q.row(0), 1, 5).cost;
+        let c1 = ivf.search_effort(q.row(0), 1, Effort::Probes(1)).cost;
+        let c5 = ivf.search_effort(q.row(0), 1, Effort::Probes(5)).cost;
         assert!(c5.keys_scanned > c1.keys_scanned);
         assert_eq!(c1.cells_probed, 1);
         assert_eq!(c5.cells_probed, 5);
         assert!(c5.flops > c1.flops);
+    }
+
+    #[test]
+    fn search_cells_matches_probe_path() {
+        // explicit-cell search with the centroid ranking must equal the
+        // classic probe path (modulo the selection cost, excluded here)
+        let keys = unit_keys(250, 8, 12);
+        let ivf = IvfIndex::build(&keys, 6, 8, 13);
+        let q = unit_keys(1, 8, 14);
+        let cells = ivf.rank_cells(q.row(0), 3);
+        let a = ivf.search_cells(q.row(0), &cells, 4);
+        let b = ivf.search_effort(q.row(0), 4, Effort::Probes(3));
+        assert_eq!(a.ids, b.ids);
+        assert_eq!(a.scores, b.scores);
+        assert_eq!(a.cost.keys_scanned, b.cost.keys_scanned);
+        // selection flops only on the probe path
+        assert!(a.cost.flops < b.cost.flops);
+    }
+
+    #[test]
+    fn frac_and_auto_effort_resolve_against_nlist() {
+        let keys = unit_keys(200, 8, 15);
+        let ivf = IvfIndex::build(&keys, 16, 8, 16);
+        let half = ivf.search_effort(keys.row(0), 1, Effort::Frac(0.5));
+        assert_eq!(half.cost.cells_probed, 8);
+        let auto = ivf.search_effort(keys.row(0), 1, Effort::Auto);
+        assert_eq!(auto.cost.cells_probed, 4);
     }
 }

@@ -7,6 +7,7 @@
 //! query-aware refinement is approximated by optionally fitting PCA on
 //! the union of keys and sample queries.
 
+use crate::api::Effort;
 use crate::index::ivf::IvfIndex;
 use crate::index::traits::{SearchResult, TopK, VectorIndex};
 use crate::tensor::{dot, pca_project, power_iteration_pca, Tensor};
@@ -76,11 +77,26 @@ impl VectorIndex for LeanVecIndex {
         self.keys.rows()
     }
 
-    fn search(&self, query: &[f32], k: usize, nprobe: usize) -> SearchResult {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn n_cells(&self) -> usize {
+        self.inner.nlist
+    }
+
+    fn search_effort(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult {
+        // Exhaustive effort widens the exact re-rank to the whole
+        // database, so the answer is exact despite the lossy projection.
+        let rerank = if effort.is_exhaustive() {
+            self.len()
+        } else {
+            self.rerank
+        };
         // 1. project the query (d * d_low multiply-adds)
         let q_low = self.project(query);
         // 2. search in the reduced space for rerank candidates
-        let cand = self.inner.search(&q_low, self.rerank.max(k), nprobe);
+        let cand = self.inner.search_effort(&q_low, rerank.max(k), effort);
         // 3. exact full-dim re-rank
         let mut top = TopK::new(k);
         for &id in &cand.ids {
@@ -116,8 +132,9 @@ mod tests {
         let q = unit_keys(40, 32, 3);
         let mut hits = 0;
         for i in 0..40 {
-            let truth = flat.search(q.row(i), 1, 0).ids[0];
-            if lv.search(q.row(i), 5, 10).ids.contains(&truth) {
+            let truth = flat.search_effort(q.row(i), 1, Effort::Exhaustive).ids[0];
+            let res = lv.search_effort(q.row(i), 5, Effort::Probes(10));
+            if res.ids.contains(&truth) {
                 hits += 1;
             }
         }
@@ -129,7 +146,7 @@ mod tests {
         let keys = unit_keys(600, 64, 4);
         let lv = LeanVecIndex::build(&keys, 16, 12, None, 5);
         let q = unit_keys(1, 64, 6);
-        let res = lv.search(q.row(0), 1, 3);
+        let res = lv.search_effort(q.row(0), 1, Effort::Probes(3));
         let flat_flops = (600 * 64 * 2) as u64;
         assert!(res.cost.flops < flat_flops);
     }
@@ -139,7 +156,20 @@ mod tests {
         let keys = unit_keys(300, 32, 7);
         let queries = unit_keys(50, 32, 8);
         let lv = LeanVecIndex::build(&keys, 8, 6, Some(&queries), 9);
-        let res = lv.search(queries.row(0), 3, 2);
+        let res = lv.search_effort(queries.row(0), 3, Effort::Probes(2));
         assert_eq!(res.ids.len(), 3);
+    }
+
+    #[test]
+    fn exhaustive_effort_is_exact() {
+        let keys = unit_keys(300, 32, 10);
+        let lv = LeanVecIndex::build(&keys, 8, 6, None, 11);
+        let flat = FlatIndex::new(keys.clone());
+        let q = unit_keys(10, 32, 12);
+        for i in 0..10 {
+            let a = lv.search_effort(q.row(i), 3, Effort::Exhaustive);
+            let b = flat.search_effort(q.row(i), 3, Effort::Exhaustive);
+            assert_eq!(a.ids, b.ids, "query {i}");
+        }
     }
 }

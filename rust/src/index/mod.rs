@@ -1,10 +1,13 @@
 //! Index substrates: every approximate-search backbone the paper
 //! evaluates KeyNet against (Sec. 4.4, App. A.8), built from scratch.
+//! All of them serve the typed [`crate::api::Searcher`] surface through
+//! the [`VectorIndex`] trait.
 //!
 //! * [`flat`] — exhaustive MIPS (ground truth + within-cluster scans)
 //! * [`kmeans`] — spherical k-means (coarse quantizer + dataset partitioner)
-//! * [`ivf`] — FAISS-IVF-Flat analog: coarse cells + `nprobe` scan
-//! * [`pq`] — product quantization (shared by scann)
+//! * [`ivf`] — FAISS-IVF-Flat analog: coarse cells + probed scan
+//! * [`pq`] — product quantization codec + the flat `IndexPQ` analog
+//! * [`sq`] — SQ8 scalar-quantized flat scan + exact re-rank
 //! * [`scann`] — ScaNN analog: IVF + *anisotropic* PQ scoring
 //! * [`soar`] — SOAR analog: IVF with redundant spilled assignments
 //! * [`leanvec`] — LeanVec analog: learned linear projection + IVF,
@@ -17,6 +20,82 @@ pub mod leanvec;
 pub mod pq;
 pub mod scann;
 pub mod soar;
+pub mod sq;
 pub mod traits;
 
 pub use traits::{SearchCost, SearchResult, VectorIndex};
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// The seven index backbones served by the unified API.
+pub const BACKBONES: [&str; 7] = ["flat", "ivf", "pq", "sq8", "scann", "soar", "leanvec"];
+
+/// Largest PQ subspace count `<= 8` that divides `d`.
+fn pq_m(d: usize) -> usize {
+    for m in [8usize, 4, 2] {
+        if d % m == 0 {
+            return m;
+        }
+    }
+    1
+}
+
+/// Build any backbone by name with shared defaults — the one construction
+/// path the CLI, benches and conformance tests agree on.
+/// `sample_queries` makes LeanVec's projection query-aware when given.
+pub fn build_backend(
+    name: &str,
+    keys: &Tensor,
+    sample_queries: Option<&Tensor>,
+    nlist: usize,
+    seed: u64,
+) -> Result<Box<dyn VectorIndex>> {
+    let d = keys.row_width();
+    Ok(match name {
+        "flat" => Box::new(flat::FlatIndex::new(keys.clone())),
+        "ivf" => Box::new(ivf::IvfIndex::build(keys, nlist, 15, seed)),
+        "pq" => Box::new(pq::PqIndex::build(keys, pq_m(d), 10, 1.0, seed)),
+        "sq8" => Box::new(sq::SqIndex::build(keys)),
+        "scann" => Box::new(scann::ScannIndex::build(keys, nlist, pq_m(d), 4.0, seed)),
+        "soar" => Box::new(soar::SoarIndex::build(keys, nlist, 6, seed)),
+        "leanvec" => Box::new(leanvec::LeanVecIndex::build(
+            keys,
+            (d / 2).clamp(1, d).max(4.min(d)),
+            nlist,
+            sample_queries,
+            seed,
+        )),
+        other => bail!("unknown backend '{other}'; expected one of {BACKBONES:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::normalize_rows;
+    use crate::util::Rng;
+
+    #[test]
+    fn builds_every_backbone() {
+        let mut keys = Tensor::zeros(&[200, 16]);
+        Rng::new(1).fill_normal(keys.data_mut(), 1.0);
+        normalize_rows(&mut keys);
+        for name in BACKBONES {
+            let idx = build_backend(name, &keys, None, 4, 7).unwrap();
+            assert_eq!(idx.len(), 200, "{name}");
+            assert_eq!(idx.dim(), 16, "{name}");
+            assert!(idx.n_cells() >= 1, "{name}");
+        }
+        assert!(build_backend("hnsw", &keys, None, 4, 7).is_err());
+    }
+
+    #[test]
+    fn pq_m_divides() {
+        assert_eq!(pq_m(16), 8);
+        assert_eq!(pq_m(12), 4);
+        assert_eq!(pq_m(6), 2);
+        assert_eq!(pq_m(7), 1);
+    }
+}

@@ -5,7 +5,12 @@
 //! This is the "strongest learned-quantization baseline" of App. A.8: it
 //! is already distribution-aware at index build time, so the margin that
 //! KeyNet adds on top of it is the paper's most conservative claim.
+//!
+//! Effort translation: the probe count follows `Effort::resolve(nlist)`;
+//! `Effort::Exhaustive` additionally widens the exact re-rank to every
+//! scanned candidate, making the answer exact.
 
+use crate::api::Effort;
 use crate::index::kmeans::KMeans;
 use crate::index::pq::Pq;
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
@@ -65,18 +70,8 @@ impl ScannIndex {
             rerank: 32,
         }
     }
-}
 
-impl VectorIndex for ScannIndex {
-    fn name(&self) -> &str {
-        "scann"
-    }
-
-    fn len(&self) -> usize {
-        self.ids.len()
-    }
-
-    fn search(&self, query: &[f32], k: usize, nprobe: usize) -> SearchResult {
+    fn search_probes(&self, query: &[f32], k: usize, nprobe: usize, rerank: usize) -> SearchResult {
         let nprobe = nprobe.clamp(1, self.nlist);
         // 1. coarse: rank cells by centroid score
         let mut cell_top = TopK::new(nprobe);
@@ -88,7 +83,7 @@ impl VectorIndex for ScannIndex {
         // 2. ADC scan of probed cells
         let table = self.pq.adc_table(query);
         let m = self.pq.m;
-        let mut cand = TopK::new(self.rerank.max(k));
+        let mut cand = TopK::new(rerank.max(k));
         let mut scanned = 0u64;
         for &cell in &cells {
             let (s, e) = (self.offsets[cell as usize], self.offsets[cell as usize + 1]);
@@ -123,6 +118,33 @@ impl VectorIndex for ScannIndex {
     }
 }
 
+impl VectorIndex for ScannIndex {
+    fn name(&self) -> &str {
+        "scann"
+    }
+
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn n_cells(&self) -> usize {
+        self.nlist
+    }
+
+    fn search_effort(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult {
+        let rerank = if effort.is_exhaustive() {
+            self.len()
+        } else {
+            self.rerank
+        };
+        self.search_probes(query, k, effort.resolve(self.nlist), rerank)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,13 +167,26 @@ mod tests {
         let q = unit_keys(40, 32, 3);
         let mut hits = 0;
         for i in 0..40 {
-            let truth = flat.search(q.row(i), 1, 0).ids[0];
-            let got = scann.search(q.row(i), 10, 12);
+            let truth = flat.search_effort(q.row(i), 1, Effort::Exhaustive).ids[0];
+            let got = scann.search_effort(q.row(i), 10, Effort::Probes(12));
             if got.ids.contains(&truth) {
                 hits += 1;
             }
         }
         assert!(hits >= 34, "recall@10 full-probe = {hits}/40");
+    }
+
+    #[test]
+    fn exhaustive_effort_is_exact() {
+        let keys = unit_keys(400, 32, 10);
+        let scann = ScannIndex::build(&keys, 8, 8, 4.0, 11);
+        let flat = FlatIndex::new(keys.clone());
+        let q = unit_keys(15, 32, 12);
+        for i in 0..15 {
+            let a = scann.search_effort(q.row(i), 3, Effort::Exhaustive);
+            let b = flat.search_effort(q.row(i), 3, Effort::Exhaustive);
+            assert_eq!(a.ids, b.ids, "query {i}");
+        }
     }
 
     #[test]
@@ -161,7 +196,7 @@ mod tests {
         let keys = unit_keys(800, 32, 4);
         let scann = ScannIndex::build(&keys, 8, 8, 4.0, 5);
         let q = unit_keys(1, 32, 6);
-        let res = scann.search(q.row(0), 1, 8); // all cells
+        let res = scann.search_effort(q.row(0), 1, Effort::Probes(8)); // all cells
         let flat_flops = (800 * 32 * 2) as u64;
         assert!(
             res.cost.flops < flat_flops,
@@ -176,7 +211,7 @@ mod tests {
         let keys = unit_keys(300, 16, 7);
         let scann = ScannIndex::build(&keys, 6, 4, 4.0, 8);
         let q = unit_keys(1, 16, 9);
-        let res = scann.search(q.row(0), 8, 3);
+        let res = scann.search_effort(q.row(0), 8, Effort::Probes(3));
         for w in res.scores.windows(2) {
             assert!(w[0] >= w[1]);
         }

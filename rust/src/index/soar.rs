@@ -8,6 +8,7 @@
 //! cell would make the key invisible to a query, the secondary assignment
 //! catches it — fewer probes reach the same recall.
 
+use crate::api::Effort;
 use crate::index::kmeans::KMeans;
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
 use crate::tensor::{dot, Tensor};
@@ -105,16 +106,8 @@ impl SoarIndex {
     }
 }
 
-impl VectorIndex for SoarIndex {
-    fn name(&self) -> &str {
-        "soar"
-    }
-
-    fn len(&self) -> usize {
-        self.n_keys
-    }
-
-    fn search(&self, query: &[f32], k: usize, nprobe: usize) -> SearchResult {
+impl SoarIndex {
+    fn search_probes(&self, query: &[f32], k: usize, nprobe: usize) -> SearchResult {
         let nprobe = nprobe.clamp(1, self.nlist);
         let mut cell_top = TopK::new(nprobe);
         for j in 0..self.nlist {
@@ -151,6 +144,28 @@ impl VectorIndex for SoarIndex {
     }
 }
 
+impl VectorIndex for SoarIndex {
+    fn name(&self) -> &str {
+        "soar"
+    }
+
+    fn len(&self) -> usize {
+        self.n_keys
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn n_cells(&self) -> usize {
+        self.nlist
+    }
+
+    fn search_effort(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult {
+        self.search_probes(query, k, effort.resolve(self.nlist))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,8 +196,8 @@ mod tests {
         let flat = FlatIndex::new(keys.clone());
         let q = unit_keys(10, 16, 5);
         for i in 0..10 {
-            let a = soar.search(q.row(i), 3, 8);
-            let b = flat.search(q.row(i), 3, 0);
+            let a = soar.search_effort(q.row(i), 3, Effort::Exhaustive);
+            let b = flat.search_effort(q.row(i), 3, Effort::Exhaustive);
             assert_eq!(a.ids, b.ids, "query {i}");
         }
     }
@@ -192,7 +207,7 @@ mod tests {
         let keys = unit_keys(200, 8, 6);
         let soar = SoarIndex::build(&keys, 6, 3, 7);
         let q = unit_keys(1, 8, 8);
-        let res = soar.search(q.row(0), 20, 4);
+        let res = soar.search_effort(q.row(0), 20, Effort::Probes(4));
         let mut ids = res.ids.clone();
         ids.sort_unstable();
         ids.dedup();
@@ -211,11 +226,13 @@ mod tests {
         let q = unit_keys(80, 16, 11);
         let (mut hs, mut hi) = (0, 0);
         for i in 0..80 {
-            let truth = flat.search(q.row(i), 1, 0).ids[0];
-            if soar.search(q.row(i), 1, 2).ids.first() == Some(&truth) {
+            let truth = flat.search_effort(q.row(i), 1, Effort::Exhaustive).ids[0];
+            let sp = soar.search_effort(q.row(i), 1, Effort::Probes(2));
+            if sp.ids.first() == Some(&truth) {
                 hs += 1;
             }
-            if ivf.search(q.row(i), 1, 2).ids.first() == Some(&truth) {
+            let ip = ivf.search_effort(q.row(i), 1, Effort::Probes(2));
+            if ip.ids.first() == Some(&truth) {
                 hi += 1;
             }
         }

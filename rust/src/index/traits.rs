@@ -2,11 +2,18 @@
 //! (Figs. 5, 16–28) swap backbones behind this trait and swap the *query*
 //! between the original `x` and KeyNet's mapped `ŷ(x)` — the index itself
 //! is never modified, which is the paper's drop-in claim.
+//!
+//! Backbones expose one typed entry point, [`VectorIndex::search_effort`]:
+//! each backbone translates the [`Effort`] level into its native knob
+//! (probe count, re-rank depth). The old positional
+//! `search(query, k, nprobe)` is gone from the public surface; batching,
+//! query mapping and routing live in [`crate::api`].
 
-use crate::tensor::Tensor;
+use crate::api::Effort;
 
-/// Cost accounting for one search call, used for the FLOPs axes of every
-/// Pareto plot. Distances are multiply-add pairs (2 flops each).
+/// Cost accounting for one backbone scan, used for the FLOPs axes of
+/// every Pareto plot. Distances are multiply-add pairs (2 flops each).
+/// Aggregated into [`crate::api::CostBreakdown`] by the API layer.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct SearchCost {
     /// f32 multiply-adds spent scoring (coarse + fine).
@@ -34,6 +41,9 @@ pub struct SearchResult {
 }
 
 /// A maximum-inner-product index over a fixed key set.
+///
+/// Implementations get a batched [`crate::api::Searcher`] for free via
+/// the blanket impl in `api::searcher` (parallel over the thread pool).
 pub trait VectorIndex: Send + Sync {
     /// Human-readable backbone name ("ivf", "scann", …).
     fn name(&self) -> &str;
@@ -41,24 +51,46 @@ pub trait VectorIndex: Send + Sync {
     /// Number of indexed keys.
     fn len(&self) -> usize;
 
+    /// Key dimensionality.
+    fn dim(&self) -> usize;
+
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Top-`k` search with an effort knob (`nprobe` cells for IVF-family
-    /// backbones; ignored by exhaustive search).
-    fn search(&self, query: &[f32], k: usize, nprobe: usize) -> SearchResult;
-
-    /// Batch search (default: loop).
-    fn search_batch(&self, queries: &Tensor, k: usize, nprobe: usize) -> Vec<SearchResult> {
-        (0..queries.rows())
-            .map(|i| self.search(queries.row(i), k, nprobe))
-            .collect()
+    /// Number of coarse partitions an [`Effort`] can probe. Exhaustive
+    /// backbones (flat, pq, sq8) report 1.
+    fn n_cells(&self) -> usize {
+        1
     }
+
+    /// Top-`k` search at a typed effort level. [`Effort::Exhaustive`]
+    /// must return the exact MIPS answer on every backbone.
+    fn search_effort(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult;
+}
+
+/// Translate an [`Effort`] into an exact re-rank depth for exhaustive
+/// (cell-less) backbones like `PqIndex`/`SqIndex`: `Exhaustive` re-ranks
+/// the whole database (exact answer), `Frac(f)` re-ranks `⌈f·n⌉`,
+/// `Probes(p)` scales the backbone's base depth by `p` (so probe sweeps
+/// trace a real effort axis), and `Auto` uses the base depth.
+pub(crate) fn rerank_depth(n: usize, k: usize, base: usize, effort: Effort) -> usize {
+    let depth = match effort {
+        Effort::Exhaustive => n,
+        Effort::Frac(f) => {
+            let f = if f.is_finite() { f.clamp(0.0, 1.0) } else { 1.0 };
+            (f as f64 * n as f64).ceil() as usize
+        }
+        Effort::Probes(p) => base.saturating_mul(p.max(1)),
+        Effort::Auto => base,
+    };
+    depth.max(k).min(n.max(1))
 }
 
 /// Keep the `k` largest (score, id) pairs; tiny binary heap on arrays.
-/// Deterministic: ties broken toward lower id.
+/// Deterministic: ties broken toward lower id. NaN scores are treated as
+/// worst-ranked (they enter as `-inf` and can never displace a real
+/// score), so [`TopK::into_sorted`] never panics.
 #[derive(Clone, Debug)]
 pub struct TopK {
     k: usize,
@@ -91,6 +123,13 @@ impl TopK {
 
     #[inline]
     pub fn push(&mut self, score: f32, id: u32) {
+        // NaN would poison the heap invariant (all comparisons false):
+        // rank it below every real score instead of panicking later.
+        let score = if score.is_nan() {
+            f32::NEG_INFINITY
+        } else {
+            score
+        };
         if self.heap.len() < self.k {
             self.heap.push((score, id));
             let mut i = self.heap.len() - 1;
@@ -127,8 +166,13 @@ impl TopK {
 
     /// Drain into descending-score order.
     pub fn into_sorted(mut self) -> (Vec<u32>, Vec<f32>) {
-        self.heap
-            .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        // `push` maps NaN to -inf, so partial_cmp cannot fail here; the
+        // fallback keeps this total anyway.
+        self.heap.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
         let ids = self.heap.iter().map(|e| e.1).collect();
         let scores = self.heap.iter().map(|e| e.0).collect();
         (ids, scores)
@@ -180,5 +224,30 @@ mod tests {
         assert_eq!(t.floor(), 0.3);
         t.push(0.5, 2);
         assert_eq!(t.floor(), 0.5);
+    }
+
+    #[test]
+    fn topk_nan_ranked_worst_and_never_panics() {
+        // regression: a NaN score used to poison the heap comparisons and
+        // panic in into_sorted's partial_cmp().unwrap()
+        let mut t = TopK::new(3);
+        t.push(f32::NAN, 0);
+        t.push(0.5, 1);
+        t.push(f32::NAN, 2);
+        t.push(0.9, 3);
+        let (ids, scores) = t.into_sorted();
+        assert_eq!(ids[0], 3);
+        assert_eq!(ids[1], 1);
+        assert_eq!(scores[0], 0.9);
+        // the NaN survivor ranks last, as -inf
+        assert_eq!(scores[2], f32::NEG_INFINITY);
+
+        // a full heap of real scores never admits NaN
+        let mut t = TopK::new(2);
+        t.push(0.1, 0);
+        t.push(0.2, 1);
+        t.push(f32::NAN, 2);
+        let (ids, _) = t.into_sorted();
+        assert_eq!(ids, vec![1, 0]);
     }
 }

@@ -3,19 +3,56 @@
 //! Rust + JAX + Pallas reproduction of *"Amortizing Maximum Inner Product
 //! Search with Learned Support Functions"* (Olausson et al., 2026).
 //!
-//! Three layers (DESIGN.md):
+//! ## The unified search API
+//!
+//! Every query path goes through [`api`]: build a typed
+//! [`api::SearchRequest`] (`k`, an [`api::Effort`] knob, an
+//! [`api::QueryMode`]), hand it to anything implementing
+//! [`api::Searcher`], and get an [`api::SearchResponse`] with per-query
+//! hits plus one [`api::CostBreakdown`] across the route/map/scan stages:
+//!
+//! * all seven [`index`] backbones (flat, ivf, pq, sq8, scann, soar,
+//!   leanvec) are `Searcher`s via a blanket impl — the batch runs in
+//!   parallel on the [`util::threads`] pool;
+//! * [`api::MappedSearcher`] composes a KeyNet query map (Sec. 4.4
+//!   drop-in integration) in front of any backbone;
+//! * [`api::RoutedSearcher`] composes a learned or centroid
+//!   [`coordinator::Router`] with IVF cells (Sec. 4.3);
+//! * the serving [`coordinator`] accepts the same request type over its
+//!   client handle and returns the same cost breakdown.
+//!
+//! ```no_run
+//! use amips::api::{Effort, SearchRequest, Searcher};
+//! use amips::index::ivf::IvfIndex;
+//! # let keys = amips::tensor::Tensor::zeros(&[1000, 32]);
+//! # let queries = amips::tensor::Tensor::zeros(&[8, 32]);
+//! let index = IvfIndex::build(&keys, 32, 15, 42);
+//! let resp = index
+//!     .search(&queries, &SearchRequest::top_k(10).effort(Effort::Probes(4)))
+//!     .unwrap();
+//! ```
+//!
+//! ## Layers
+//!
 //! * **L1** Pallas kernels and **L2** JAX models live under `python/` and
 //!   are AOT-lowered to HLO-text artifacts by `make artifacts`.
-//! * **L3** (this crate) is the runtime system: it loads the artifacts via
-//!   PJRT ([`runtime`]), owns the data pipeline ([`data`]), every index
-//!   substrate the paper evaluates against ([`index`]), the Rust-driven
-//!   training loop ([`trainer`]), the serving coordinator
-//!   ([`coordinator`]), and the metrics/benchmark machinery
+//! * **L3** (this crate) is the runtime system: the data pipeline
+//!   ([`data`]), every index substrate the paper evaluates against
+//!   ([`index`]), the unified search surface ([`api`]), the serving
+//!   coordinator ([`coordinator`]), and the metrics/benchmark machinery
 //!   ([`metrics`], [`bench_support`]).
+//! * Everything that touches PJRT — the [`runtime`] engine, the
+//!   Rust-driven training loop ([`trainer`]), and
+//!   `model::AmortizedModel` inference — sits behind the **`xla` cargo
+//!   feature**. The default build is pure Rust and fully testable on
+//!   machines without XLA; enable `--features xla` (and patch the
+//!   vendored `xla` stub to a real xla-rs) to train and serve the
+//!   learned models.
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! `amips` binary is self-contained.
 
+pub mod api;
 pub mod bench_support;
 pub mod cli;
 pub mod coordinator;
@@ -25,6 +62,7 @@ pub mod metrics;
 pub mod model;
 pub mod runtime;
 pub mod tensor;
+#[cfg(feature = "xla")]
 pub mod trainer;
 pub mod util;
 

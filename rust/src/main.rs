@@ -1,27 +1,22 @@
 //! `amips` — leader binary: dataset prep, training, evaluation, routing
-//! and a serving demo over the AOT artifacts.
+//! and a serving demo over the AOT artifacts. Every query path speaks
+//! `amips::api::{SearchRequest, SearchResponse, Searcher}`.
 //!
 //! ```text
 //! amips list                                  # configs + datasets
 //! amips gen-data  --dataset nq-s [--c 10]     # prepare + report a dataset
-//! amips train     --config <name> [--steps N] [--lr F] [--verbose]
-//! amips eval      --config <name> [--steps N] # retrieval metrics on val
-//! amips route     --dataset nq-s --config <name> [--topk 1..5]
-//! amips serve     --config <name> [--requests N] [--nprobe K]
+//! amips search    [--backend ivf] [--n 20000] [--d 32] [--k 10]
+//!                                             # pure-Rust API demo/sweep
+//! amips train     --config <name> [--steps N] [--lr F] [--verbose]   (xla)
+//! amips eval      --config <name> [--steps N]                        (xla)
+//! amips route     --dataset nq-s --config <name> [--topk 1..5]       (xla)
+//! amips serve     --config <name> [--requests N] [--nprobe K]        (xla)
 //! ```
 
-use amips::cli::Args;
-use amips::coordinator::router::{routing_accuracy, AmortizedRouter, CentroidRouter, Router};
-use amips::coordinator::{BatchPolicy, Server, ServerConfig};
 use amips::bench_support::fixtures;
 use amips::bench_support::report::{f, pct, Report};
-use amips::index::ivf::IvfIndex;
-use amips::metrics::{flops, retrieval, transport};
-use amips::runtime::Engine;
-use amips::tensor::Tensor;
-use amips::trainer::{self, TrainOpts};
+use amips::cli::Args;
 use anyhow::{bail, Result};
-use std::sync::Arc;
 
 fn main() {
     if let Err(e) = run() {
@@ -35,14 +30,15 @@ fn run() -> Result<()> {
     match args.command.as_deref() {
         Some("list") => cmd_list(),
         Some("gen-data") => cmd_gen_data(&args),
-        Some("train") => cmd_train(&args),
-        Some("eval") => cmd_eval(&args),
-        Some("route") => cmd_route(&args),
-        Some("serve") => cmd_serve(&args),
+        Some("search") => cmd_search(&args),
+        Some("train") => xla_cmds::cmd_train(&args),
+        Some("eval") => xla_cmds::cmd_eval(&args),
+        Some("route") => xla_cmds::cmd_route(&args),
+        Some("serve") => xla_cmds::cmd_serve(&args),
         Some(other) => bail!("unknown command {other}; try `amips list`"),
         None => {
             println!("amips {} — amortized MIPS coordinator", amips::version());
-            println!("commands: list | gen-data | train | eval | route | serve");
+            println!("commands: list | gen-data | search | train | eval | route | serve");
             Ok(())
         }
     }
@@ -61,6 +57,7 @@ fn cmd_list() -> Result<()> {
     for c in &m.configs {
         println!("  {c}");
     }
+    println!("backends: {}", amips::index::BACKBONES.join(" | "));
     Ok(())
 }
 
@@ -97,213 +94,350 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn train_opts_from(args: &Args) -> Result<TrainOpts> {
-    let mut o = TrainOpts {
-        verbose: args.has("verbose"),
-        ..TrainOpts::default()
-    };
-    o.steps = args.get_usize("steps", o.steps)?;
-    o.peak_lr = args.get_f32("lr", o.peak_lr)?;
-    o.lam_a = args.get_f32("lam-a", o.lam_a)?;
-    o.lam_b = args.get_f32("lam-b", o.lam_b)?;
-    o.seed = args.get_u64("seed", o.seed)?;
-    Ok(o)
-}
+/// Pure-Rust demonstration of the unified search API: generate a
+/// synthetic corpus, put the chosen backbone behind `Searcher`, and sweep
+/// the `Effort` knob — no artifacts or XLA required.
+fn cmd_search(args: &Args) -> Result<()> {
+    use amips::api::{recall_against_truth, Effort, SearchRequest, Searcher};
+    use amips::data::dataset::PrepareOpts;
+    use amips::data::{CorpusSpec, Dataset};
+    use amips::index::VectorIndex;
 
-fn cmd_train(args: &Args) -> Result<()> {
-    let m = fixtures::load_manifest()?;
-    let config = args.require("config")?.to_string();
-    let opts = train_opts_from(args)?;
+    let backend = args.get_or("backend", "ivf").to_string();
+    let n = args.get_usize("n", 20_000)?;
+    let d = args.get_usize("d", 32)?;
+    let nq = args.get_usize("queries", 1_000)?;
+    let k = args.get_usize("k", 10)?;
+    let seed = args.get_u64("seed", 42)?;
     args.reject_unknown()?;
-    let meta = m.meta(&config)?;
-    let engine = Engine::new(artifacts_dir_of(&m))?;
-    let ds = fixtures::prepare_dataset(&m, &meta.dataset, meta.c)?;
-    let out = trainer::train(&engine, &meta, &ds, &opts)?;
-    let path = trainer::trainer::checkpoint_path(engine.dir(), &meta, &opts);
-    if let Some(p) = path.parent() {
-        std::fs::create_dir_all(p)?;
+
+    let spec = CorpusSpec {
+        name: format!("synth-{n}x{d}"),
+        n_keys: n,
+        d,
+        n_queries: nq * 4,
+        shift: 0.5,
+        spread: 2.0,
+        modes: 12,
+        seed,
+    };
+    let ds = Dataset::prepare(
+        &spec,
+        &PrepareOpts {
+            c: 1,
+            augment: 1,
+            val_queries: nq,
+            kmeans_restarts: 1,
+            ..Default::default()
+        },
+    );
+    let nlist = fixtures::default_nlist(ds.n_keys());
+    let index = amips::index::build_backend(&backend, &ds.keys, Some(&ds.train.x), nlist, seed)?;
+    let truth: Vec<usize> = (0..ds.val.gt.n_queries())
+        .map(|q| ds.val.gt.global_top1(q).0)
+        .collect();
+
+    let mut rep = Report::new(&format!(
+        "search sweep: {} over {} keys (d={d}, cells={})",
+        index.label(),
+        index.num_keys(),
+        index.n_cells(),
+    ));
+    rep.header(&["effort", "R@k", "kFLOP/q", "keys/q", "cells/q", "us/q"]);
+    let efforts = [
+        Effort::Probes(1),
+        Effort::Probes(2),
+        Effort::Probes(4),
+        Effort::Auto,
+        Effort::Frac(0.5),
+        Effort::Exhaustive,
+    ];
+    for effort in efforts {
+        let req = SearchRequest::top_k(k).effort(effort);
+        let resp = index.search(&ds.val.x, &req)?;
+        let nqf = resp.n_queries() as f64;
+        rep.row(&[
+            format!("{effort:?}"),
+            pct(recall_against_truth(&resp.hits, &truth, k)),
+            format!("{:.1}", resp.flops_per_query() / 1e3),
+            format!("{:.0}", resp.cost.keys_scanned as f64 / nqf),
+            format!("{:.1}", resp.cost.cells_probed as f64 / nqf),
+            format!("{:.1}", resp.seconds_per_query() * 1e6),
+        ]);
     }
-    out.params.save(&meta, &path)?;
-    let mut rep = Report::new(&format!("train {config}"));
-    rep.header(&["steps", "final loss", "final E_rel", "E_rel curve"]);
-    rep.row(&[
-        out.steps.to_string(),
-        out.curve.final_loss().map(|v| f(v as f64)).unwrap_or_default(),
-        out.curve.final_e_rel().map(|v| f(v as f64)).unwrap_or_default(),
-        out.curve.e_rel_sparkline(),
-    ]);
-    rep.note(format!("checkpoint: {}", path.display()));
-    rep.emit("train");
+    rep.note("Effort::Exhaustive is exact on every backbone; R@k measures the exact top-1 within the returned k");
+    rep.emit("search");
     Ok(())
 }
 
-fn cmd_eval(args: &Args) -> Result<()> {
-    let m = fixtures::load_manifest()?;
-    let config = args.require("config")?.to_string();
-    let steps = args.get_usize("steps", 0)?;
-    args.reject_unknown()?;
-    let meta = m.meta(&config)?;
-    let engine = Engine::new(m.dir.clone())?;
-    let ds = fixtures::prepare_dataset(&m, &meta.dataset, meta.c)?;
-    let opts = if steps > 0 {
-        Some(TrainOpts {
+// ---------------------------------------------------------------------------
+// PJRT-backed commands (training, evaluation, routing, serving)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "xla")]
+mod xla_cmds {
+    use super::*;
+    use amips::api::{Effort, QueryMode, SearchRequest};
+    use amips::coordinator::router::{routing_accuracy, AmortizedRouter, CentroidRouter, Router};
+    use amips::coordinator::{BatchPolicy, Server, ServerConfig};
+    use amips::index::ivf::IvfIndex;
+    use amips::metrics::{flops, retrieval, transport};
+    use amips::runtime::Engine;
+    use amips::tensor::Tensor;
+    use amips::trainer::{self, TrainOpts};
+    use std::sync::Arc;
+
+    fn train_opts_from(args: &Args) -> Result<TrainOpts> {
+        let mut o = TrainOpts {
+            verbose: args.has("verbose"),
+            ..TrainOpts::default()
+        };
+        o.steps = args.get_usize("steps", o.steps)?;
+        o.peak_lr = args.get_f32("lr", o.peak_lr)?;
+        o.lam_a = args.get_f32("lam-a", o.lam_a)?;
+        o.lam_b = args.get_f32("lam-b", o.lam_b)?;
+        o.seed = args.get_u64("seed", o.seed)?;
+        Ok(o)
+    }
+
+    pub fn cmd_train(args: &Args) -> Result<()> {
+        let m = fixtures::load_manifest()?;
+        let config = args.require("config")?.to_string();
+        let opts = train_opts_from(args)?;
+        args.reject_unknown()?;
+        let meta = m.meta(&config)?;
+        let engine = Engine::new(m.dir.clone())?;
+        let ds = fixtures::prepare_dataset(&m, &meta.dataset, meta.c)?;
+        let out = trainer::train(&engine, &meta, &ds, &opts)?;
+        let path = trainer::trainer::checkpoint_path(engine.dir(), &meta, &opts);
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        out.params.save(&meta, &path)?;
+        let mut rep = Report::new(&format!("train {config}"));
+        rep.header(&["steps", "final loss", "final E_rel", "E_rel curve"]);
+        rep.row(&[
+            out.steps.to_string(),
+            out.curve.final_loss().map(|v| f(v as f64)).unwrap_or_default(),
+            out.curve.final_e_rel().map(|v| f(v as f64)).unwrap_or_default(),
+            out.curve.e_rel_sparkline(),
+        ]);
+        rep.note(format!("checkpoint: {}", path.display()));
+        rep.emit("train");
+        Ok(())
+    }
+
+    pub fn cmd_eval(args: &Args) -> Result<()> {
+        let m = fixtures::load_manifest()?;
+        let config = args.require("config")?.to_string();
+        let steps = args.get_usize("steps", 0)?;
+        args.reject_unknown()?;
+        let meta = m.meta(&config)?;
+        let engine = Engine::new(m.dir.clone())?;
+        let ds = fixtures::prepare_dataset(&m, &meta.dataset, meta.c)?;
+        let opts = (steps > 0).then(|| TrainOpts {
             steps,
             ..TrainOpts::default()
-        })
-    } else {
-        None
-    };
-    let model = fixtures::trained_model(&engine, &m, &config, &ds, opts)?;
-    // predicted keys on the validation queries
-    let (_scores, keys) = model.scores_and_keys(&ds.val.x)?;
-    let n = ds.val.x.rows();
-    let d = ds.d();
-    // global top-key predictions: for c>1 take the best-scoring cluster's key
-    let mut pred = Tensor::zeros(&[n, d]);
-    let mut targets = Vec::with_capacity(n);
-    for q in 0..n {
-        let j = ds.val.gt.top_cluster(q); // evaluate the true-cluster head
-        let off = (q * meta.c + j) * d;
-        pred.row_mut(q).copy_from_slice(&keys.data()[off..off + d]);
-        targets.push(ds.val.gt.global_top1(q).0);
-    }
-    let rm = retrieval::evaluate(&pred, &ds.keys, &targets);
-    let tgt = ds.keys.gather_rows(&targets);
-    let e_rel = transport::relative_transport_error(&pred, &ds.val.x, &tgt);
-    let mut rep = Report::new(&format!("eval {config}"));
-    rep.header(&["match", "R@10", "R@100", "MRR", "E_rel"]);
-    rep.row(&[
-        pct(rm.match_rate),
-        pct(rm.recall_at_10),
-        pct(rm.recall_at_100),
-        f(rm.mrr),
-        f(e_rel),
-    ]);
-    rep.emit("eval");
-    Ok(())
-}
-
-fn cmd_route(args: &Args) -> Result<()> {
-    let m = fixtures::load_manifest()?;
-    let config = args.require("config")?.to_string();
-    let topk_max = args.get_usize("topk", 5)?;
-    args.reject_unknown()?;
-    let meta = m.meta(&config)?;
-    if meta.c < 2 {
-        bail!("routing needs a clustered config (c>1), got c={}", meta.c);
-    }
-    let engine = Engine::new(m.dir.clone())?;
-    let ds = fixtures::prepare_dataset(&m, &meta.dataset, meta.c)?;
-    let model = fixtures::trained_model(&engine, &m, &config, &ds, None)?;
-    let learned = AmortizedRouter::new(model);
-    let baseline = CentroidRouter::new(ds.centroids.clone());
-    let true_clusters: Vec<usize> = (0..ds.val.gt.n_queries())
-        .map(|q| ds.val.gt.top_cluster(q))
-        .collect();
-    let mut sizes = vec![0usize; ds.c];
-    for &a in &ds.assign {
-        sizes[a as usize] += 1;
-    }
-    let mut rep = Report::new(&format!("routing {config} vs centroid"));
-    rep.header(&["router", "k", "accuracy", "flops/query"]);
-    for k in 1..=topk_max.min(ds.c) {
-        for router in [&learned as &dyn Router, &baseline as &dyn Router] {
-            let dec = router.route_batch(&ds.val.x, k)?;
-            let acc = routing_accuracy(&dec, &true_clusters);
-            // average scan cost of the selected clusters
-            let avg_scan: f64 = dec
-                .iter()
-                .map(|dd| {
-                    let picked: Vec<usize> =
-                        dd.clusters.iter().map(|&c| sizes[c as usize]).collect();
-                    flops::routing_total_flops(dd.selection_flops, &picked, ds.d()) as f64
-                })
-                .sum::<f64>()
-                / dec.len() as f64;
-            rep.row(&[
-                router.name().to_string(),
-                k.to_string(),
-                pct(acc),
-                format!("{avg_scan:.0}"),
-            ]);
+        });
+        let model = fixtures::trained_model(&engine, &m, &config, &ds, opts)?;
+        // predicted keys on the validation queries
+        let (_scores, keys) = model.scores_and_keys(&ds.val.x)?;
+        let n = ds.val.x.rows();
+        let d = ds.d();
+        // global top-key predictions: for c>1 take the best-scoring cluster's key
+        let mut pred = Tensor::zeros(&[n, d]);
+        let mut targets = Vec::with_capacity(n);
+        for q in 0..n {
+            let j = ds.val.gt.top_cluster(q); // evaluate the true-cluster head
+            let off = (q * meta.c + j) * d;
+            pred.row_mut(q).copy_from_slice(&keys.data()[off..off + d]);
+            targets.push(ds.val.gt.global_top1(q).0);
         }
+        let rm = retrieval::evaluate(&pred, &ds.keys, &targets);
+        let tgt = ds.keys.gather_rows(&targets);
+        let e_rel = transport::relative_transport_error(&pred, &ds.val.x, &tgt);
+        let mut rep = Report::new(&format!("eval {config}"));
+        rep.header(&["match", "R@10", "R@100", "MRR", "E_rel"]);
+        rep.row(&[
+            pct(rm.match_rate),
+            pct(rm.recall_at_10),
+            pct(rm.recall_at_100),
+            f(rm.mrr),
+            f(e_rel),
+        ]);
+        rep.emit("eval");
+        Ok(())
     }
-    rep.emit("route");
-    Ok(())
-}
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let m = fixtures::load_manifest()?;
-    let config = args.require("config")?.to_string();
-    let requests = args.get_usize("requests", 512)?;
-    let nprobe = args.get_usize("nprobe", 4)?;
-    let nlist = args.get_usize("nlist", 32)?;
-    args.reject_unknown()?;
-    let meta = m.meta(&config)?;
-    if meta.c != 1 {
-        bail!("serve uses a c=1 KeyNet mapper");
+    pub fn cmd_route(args: &Args) -> Result<()> {
+        use amips::api::{RoutedSearcher, Searcher};
+
+        let m = fixtures::load_manifest()?;
+        let config = args.require("config")?.to_string();
+        let topk_max = args.get_usize("topk", 5)?;
+        args.reject_unknown()?;
+        let meta = m.meta(&config)?;
+        if meta.c < 2 {
+            bail!("routing needs a clustered config (c>1), got c={}", meta.c);
+        }
+        let engine = Engine::new(m.dir.clone())?;
+        let ds = fixtures::prepare_dataset(&m, &meta.dataset, meta.c)?;
+        let model = fixtures::trained_model(&engine, &m, &config, &ds, None)?;
+        let learned = AmortizedRouter::new(model);
+        let baseline = CentroidRouter::new(ds.centroids.clone());
+        let true_clusters: Vec<usize> = (0..ds.val.gt.n_queries())
+            .map(|q| ds.val.gt.top_cluster(q))
+            .collect();
+        let truth: Vec<usize> = (0..ds.val.gt.n_queries())
+            .map(|q| ds.val.gt.global_top1(q).0)
+            .collect();
+        let mut sizes = vec![0usize; ds.c];
+        for &a in &ds.assign {
+            sizes[a as usize] += 1;
+        }
+        // routed end-to-end search shares the dataset clustering
+        let ivf = IvfIndex::from_clustering(&ds.keys, ds.centroids.clone(), &ds.assign);
+        let mut rep = Report::new(&format!("routing {config} vs centroid"));
+        rep.header(&["router", "k", "accuracy", "R@10 routed", "flops/query"]);
+        for k in 1..=topk_max.min(ds.c) {
+            for router in [&learned as &dyn Router, &baseline as &dyn Router] {
+                let dec = router.route_batch(&ds.val.x, k)?;
+                let acc = routing_accuracy(&dec, &true_clusters);
+                // average scan cost of the selected clusters
+                let avg_scan: f64 = dec
+                    .iter()
+                    .map(|dd| {
+                        let picked: Vec<usize> =
+                            dd.clusters.iter().map(|&c| sizes[c as usize]).collect();
+                        flops::routing_total_flops(dd.selection_flops, &picked, ds.d()) as f64
+                    })
+                    .sum::<f64>()
+                    / dec.len() as f64;
+                // the same router as an end-to-end Searcher
+                let routed = RoutedSearcher::new(router, &ivf)?;
+                let resp = routed.search(
+                    &ds.val.x,
+                    &SearchRequest::top_k(10)
+                        .effort(Effort::Probes(k))
+                        .mode(QueryMode::Routed),
+                )?;
+                let recall = amips::api::recall_against_truth(&resp.hits, &truth, 10);
+                rep.row(&[
+                    router.name().to_string(),
+                    k.to_string(),
+                    pct(acc),
+                    pct(recall),
+                    format!("{avg_scan:.0}"),
+                ]);
+            }
+        }
+        rep.emit("route");
+        Ok(())
     }
-    let engine = Engine::new(m.dir.clone())?;
-    let ds = fixtures::prepare_dataset(&m, &meta.dataset, 1)?;
-    // train (or load) the mapper, then hand everything to the server
-    let opts = TrainOpts {
-        steps: fixtures::default_steps(&meta.size),
-        ..TrainOpts::default()
-    };
-    let out = trainer::train_or_load(&engine, &meta, &ds, &opts)?;
-    let index = Arc::new(IvfIndex::build(&ds.keys, nlist, 15, 99));
-    let cfg = ServerConfig {
-        artifacts_dir: m.dir.clone(),
-        meta: meta.clone(),
-        params: out.params,
-        policy: BatchPolicy::default(),
-        map_queries: true,
-        nprobe_default: nprobe,
-    };
-    let (server, handle) = Server::start(cfg, index)?;
-    // fire traffic from a couple of client threads
-    let nq = ds.val.x.rows();
-    let t0 = std::time::Instant::now();
-    let mut hits = 0usize;
-    std::thread::scope(|s| {
-        let mut joins = Vec::new();
-        for t in 0..2usize {
-            let handle = handle.clone();
-            let ds = &ds;
-            joins.push(s.spawn(move || -> Result<usize> {
-                let mut local_hits = 0;
-                for i in (t..requests).step_by(2) {
-                    let q = ds.val.x.row(i % nq).to_vec();
-                    let resp = handle.query(q, 10)?;
-                    let truth = ds.val.gt.global_top1(i % nq).0 as u32;
-                    if resp.ids.contains(&truth) {
-                        local_hits += 1;
+
+    pub fn cmd_serve(args: &Args) -> Result<()> {
+        let m = fixtures::load_manifest()?;
+        let config = args.require("config")?.to_string();
+        let requests = args.get_usize("requests", 512)?;
+        let nprobe = args.get_usize("nprobe", 4)?;
+        let nlist = args.get_usize("nlist", 32)?;
+        args.reject_unknown()?;
+        let meta = m.meta(&config)?;
+        if meta.c != 1 {
+            bail!("serve uses a c=1 KeyNet mapper");
+        }
+        let engine = Engine::new(m.dir.clone())?;
+        let ds = fixtures::prepare_dataset(&m, &meta.dataset, 1)?;
+        // train (or load) the mapper, then hand everything to the server
+        let opts = TrainOpts {
+            steps: fixtures::default_steps(&meta.size),
+            ..TrainOpts::default()
+        };
+        let out = trainer::train_or_load(&engine, &meta, &ds, &opts)?;
+        drop(engine); // the server builds its own engine on the runner thread
+        let index = Arc::new(IvfIndex::build(&ds.keys, nlist, 15, 99));
+        let default_request = SearchRequest::top_k(10)
+            .effort(Effort::Probes(nprobe))
+            .mode(QueryMode::Mapped);
+        let cfg = ServerConfig::with_model(
+            m.dir.clone(),
+            meta,
+            out.params,
+            BatchPolicy::default(),
+            default_request,
+        );
+        let (server, handle) = Server::start(cfg, index)?;
+        // fire traffic from a couple of client threads
+        let nq = ds.val.x.rows();
+        let t0 = std::time::Instant::now();
+        let mut hits = 0usize;
+        std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for t in 0..2usize {
+                let handle = handle.clone();
+                let ds = &ds;
+                joins.push(s.spawn(move || -> Result<usize> {
+                    let mut local_hits = 0;
+                    for i in (t..requests).step_by(2) {
+                        let q = ds.val.x.row(i % nq).to_vec();
+                        let resp = handle.search(q)?;
+                        let truth = ds.val.gt.global_top1(i % nq).0 as u32;
+                        if resp.hits.ids.contains(&truth) {
+                            local_hits += 1;
+                        }
                     }
-                }
-                Ok(local_hits)
-            }));
-        }
-        for j in joins {
-            hits += j.join().unwrap().unwrap_or(0);
-        }
-    });
-    let wall = t0.elapsed().as_secs_f64();
-    let stats = server.latency_stats();
-    server.shutdown()?;
-    let mut rep = Report::new(&format!("serve {config} (IVF nlist={nlist}, nprobe={nprobe})"));
-    rep.header(&["requests", "recall@10", "qps", "p50 ms", "p95 ms"]);
-    rep.row(&[
-        requests.to_string(),
-        pct(hits as f64 / requests as f64),
-        format!("{:.0}", requests as f64 / wall),
-        format!("{:.2}", stats.quantile_s(0.5) * 1e3),
-        format!("{:.2}", stats.quantile_s(0.95) * 1e3),
-    ]);
-    rep.emit("serve");
-    Ok(())
+                    Ok(local_hits)
+                }));
+            }
+            for j in joins {
+                hits += j.join().unwrap().unwrap_or(0);
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = server.latency_stats();
+        drop(handle);
+        server.shutdown()?;
+        let mut rep = Report::new(&format!(
+            "serve {config} (IVF nlist={nlist}, nprobe={nprobe})"
+        ));
+        rep.header(&["requests", "recall@10", "qps", "p50 ms", "p95 ms"]);
+        rep.row(&[
+            requests.to_string(),
+            pct(hits as f64 / requests as f64),
+            format!("{:.0}", requests as f64 / wall),
+            format!("{:.2}", stats.quantile_s(0.5) * 1e3),
+            format!("{:.2}", stats.quantile_s(0.95) * 1e3),
+        ]);
+        rep.emit("serve");
+        Ok(())
+    }
 }
 
-/// artifacts dir helper shared with Engine::new call sites.
-fn artifacts_dir_of(m: &amips::runtime::Manifest) -> std::path::PathBuf {
-    m.dir.clone()
+#[cfg(not(feature = "xla"))]
+mod xla_cmds {
+    use super::*;
+
+    fn needs_xla(what: &str) -> Result<()> {
+        bail!(
+            "`amips {what}` drives the AOT artifacts through PJRT and needs the \
+             `xla` feature: rebuild with `cargo build --release --features xla` \
+             (see README.md). The pure-Rust commands are list | gen-data | search."
+        )
+    }
+
+    pub fn cmd_train(_args: &Args) -> Result<()> {
+        needs_xla("train")
+    }
+
+    pub fn cmd_eval(_args: &Args) -> Result<()> {
+        needs_xla("eval")
+    }
+
+    pub fn cmd_route(_args: &Args) -> Result<()> {
+        needs_xla("route")
+    }
+
+    pub fn cmd_serve(_args: &Args) -> Result<()> {
+        needs_xla("serve")
+    }
 }

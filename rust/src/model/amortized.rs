@@ -153,3 +153,19 @@ impl AmortizedModel {
         Ok(keys.reshape(&[n, d]))
     }
 }
+
+/// A trained c=1 KeyNet is the canonical [`crate::api::QueryMap`]: it
+/// plugs into [`crate::api::MappedSearcher`] in front of any backbone.
+impl crate::api::QueryMap for AmortizedModel {
+    fn label(&self) -> &str {
+        &self.meta.name
+    }
+
+    fn map_flops_per_query(&self) -> u64 {
+        self.key_flops()
+    }
+
+    fn map(&self, queries: &Tensor) -> Result<Tensor> {
+        self.map_queries(queries)
+    }
+}

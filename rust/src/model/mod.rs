@@ -1,8 +1,11 @@
-//! Model-side runtime objects: parameter sets (checkpoint IO) and the
-//! user-facing amortized-model handles (SupportNet / KeyNet inference).
+//! Model-side runtime objects: parameter sets (checkpoint IO, pure Rust)
+//! and the user-facing amortized-model handles (SupportNet / KeyNet
+//! inference through PJRT, behind the `xla` feature).
 
+#[cfg(feature = "xla")]
 pub mod amortized;
 pub mod params;
 
+#[cfg(feature = "xla")]
 pub use amortized::AmortizedModel;
 pub use params::ParamSet;

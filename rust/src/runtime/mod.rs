@@ -1,9 +1,13 @@
-//! PJRT runtime: loads the HLO-text artifacts produced by `make
-//! artifacts` and executes them on the CPU PJRT client. This is the only
-//! boundary between L3 (Rust) and the AOT-compiled L1/L2 stack.
+//! Artifact metadata (always available) and the PJRT runtime (behind the
+//! `xla` feature): the only boundary between L3 (Rust) and the
+//! AOT-compiled L1/L2 stack. `make artifacts` writes HLO-text artifacts
+//! plus line-oriented metadata sidecars; the metadata parser is pure Rust
+//! so manifests, dataset specs and checkpoints work without XLA.
 
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod engine;
 
 pub use artifact::{ArtifactMeta, Manifest};
+#[cfg(feature = "xla")]
 pub use engine::{lit_f32, lit_scalar_u32, literal_to_vec, Engine, Executable};

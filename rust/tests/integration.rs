@@ -1,15 +1,17 @@
 //! Integration tests over the full AOT pipeline: artifact loading, PJRT
 //! execution, the training loop, inference handles, routing and the
-//! serving coordinator. Requires `make artifacts` (skips itself
-//! gracefully otherwise).
+//! serving coordinator. Requires the `xla` feature (pointing at a real
+//! xla-rs) and `make artifacts` (skips itself gracefully otherwise).
+#![cfg(feature = "xla")]
 
+use amips::api::{Effort, MappedSearcher, QueryMode, SearchRequest, Searcher};
 use amips::bench_support::fixtures;
-use amips::coordinator::pipeline::MappedSearchPipeline;
 use amips::coordinator::router::{routing_accuracy, AmortizedRouter, CentroidRouter, Router};
 use amips::coordinator::{BatchPolicy, Server, ServerConfig};
 use amips::data::dataset::PrepareOpts;
 use amips::data::Dataset;
 use amips::index::ivf::IvfIndex;
+use amips::index::VectorIndex;
 use amips::model::AmortizedModel;
 use amips::runtime::{Engine, Manifest};
 use amips::tensor::dot;
@@ -193,12 +195,15 @@ fn mapped_pipeline_runs_on_every_backend() {
         Box::new(amips::index::soar::SoarIndex::build(&ds.keys, nlist, 4, 1)),
         Box::new(amips::index::leanvec::LeanVecIndex::build(&ds.keys, 16, nlist, None, 1)),
     ];
+    let req = SearchRequest::top_k(5)
+        .effort(Effort::Probes(2))
+        .mode(QueryMode::Mapped);
     for idx in &backends {
-        let pipe = MappedSearchPipeline::mapped(idx.as_ref(), &model);
-        let out = pipe.run(&ds.val.x, 5, 2).unwrap();
-        assert_eq!(out.results.len(), ds.val.x.rows(), "{}", idx.name());
-        assert!(out.results.iter().all(|r| !r.ids.is_empty()));
-        assert!(out.map_flops_per_query > 0);
+        let searcher = MappedSearcher::mapped(idx.as_ref(), &model);
+        let out = searcher.search(&ds.val.x, &req).unwrap();
+        assert_eq!(out.n_queries(), ds.val.x.rows(), "{}", idx.name());
+        assert!(out.hits.iter().all(|h| !h.is_empty()));
+        assert!(out.cost.map_flops > 0);
     }
 }
 
@@ -215,18 +220,20 @@ fn server_end_to_end_under_concurrent_load() {
             .params
     };
     let index = Arc::new(IvfIndex::build(&ds.keys, 8, 8, 1));
+    let default_request = SearchRequest::top_k(5)
+        .effort(Effort::Probes(2))
+        .mode(QueryMode::Mapped);
     let (server, handle) = Server::start(
-        ServerConfig {
-            artifacts_dir: m.dir.clone(),
+        ServerConfig::with_model(
+            m.dir.clone(),
             meta,
             params,
-            policy: BatchPolicy {
+            BatchPolicy {
                 max_batch: 64,
                 max_wait: std::time::Duration::from_millis(1),
             },
-            map_queries: true,
-            nprobe_default: 2,
-        },
+            default_request,
+        ),
         index,
     )
     .unwrap();
@@ -238,9 +245,10 @@ fn server_end_to_end_under_concurrent_load() {
             s.spawn(move || {
                 for i in (c..total).step_by(4) {
                     let resp = handle
-                        .query(ds.val.x.row(i % ds.val.x.rows()).to_vec(), 5)
+                        .search(ds.val.x.row(i % ds.val.x.rows()).to_vec())
                         .unwrap();
-                    assert_eq!(resp.ids.len(), 5);
+                    assert_eq!(resp.hits.len(), 5);
+                    assert!(resp.cost.map_flops > 0);
                 }
             });
         }

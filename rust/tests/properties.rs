@@ -2,6 +2,7 @@
 //! (proptest is not available offline; these use the repo's deterministic
 //! PRNG to sweep hundreds of generated cases per property).
 
+use amips::api::{Effort, SearchRequest, Searcher};
 use amips::coordinator::batcher::{BatchPolicy, Batcher};
 use amips::coordinator::router::{routing_accuracy, CentroidRouter, Router, RoutingDecision};
 use amips::data::ground_truth;
@@ -66,7 +67,7 @@ fn prop_ivf_results_subset_of_keys_and_sorted() {
         let ivf = IvfIndex::build(&keys, nlist, 8, case);
         let q = unit(&[1, d], 2000 + case);
         let nprobe = 1 + rng.below(nlist);
-        let res = ivf.search(q.row(0), 10, nprobe);
+        let res = ivf.search_effort(q.row(0), 10, Effort::Probes(nprobe));
         assert!(res.ids.iter().all(|&id| (id as usize) < n));
         for w in res.scores.windows(2) {
             assert!(w[0] >= w[1]);
@@ -91,7 +92,7 @@ fn prop_ivf_recall_monotone_in_nprobe() {
         let q = unit(&[1, 16], 4000 + case);
         let mut prev = f32::NEG_INFINITY;
         for nprobe in 1..=nlist {
-            let res = ivf.search(q.row(0), 1, nprobe);
+            let res = ivf.search_effort(q.row(0), 1, Effort::Probes(nprobe));
             let s = res.scores[0];
             assert!(
                 s >= prev - 1e-5,
@@ -112,13 +113,39 @@ fn prop_soar_full_probe_equals_flat_and_never_duplicates() {
         let soar = SoarIndex::build(&keys, nlist, 3, case);
         let flat = FlatIndex::new(keys.clone());
         let q = unit(&[1, 12], 6000 + case);
-        let a = soar.search(q.row(0), 5, nlist);
-        let b = flat.search(q.row(0), 5, 0);
+        let a = soar.search_effort(q.row(0), 5, Effort::Exhaustive);
+        let b = flat.search_effort(q.row(0), 5, Effort::Exhaustive);
         assert_eq!(a.ids, b.ids, "case {case}");
         let mut ids = a.ids.clone();
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), a.ids.len());
+    }
+}
+
+#[test]
+fn prop_parallel_batch_search_matches_sequential() {
+    // the blanket Searcher impl fans the batch out over the thread pool;
+    // results must be identical to one-query-at-a-time scans, in order
+    let mut rng = Rng::new(450);
+    for case in 0..10 {
+        let n = 100 + rng.below(300);
+        let nq = 1 + rng.below(60);
+        let keys = unit(&[n, 16], 12_000 + case);
+        let ivf = IvfIndex::build(&keys, 8, 8, case);
+        let q = unit(&[nq, 16], 13_000 + case);
+        let nprobe = 1 + rng.below(8);
+        let req = SearchRequest::top_k(5).effort(Effort::Probes(nprobe));
+        let resp = ivf.search(&q, &req).unwrap();
+        assert_eq!(resp.n_queries(), nq, "case {case}");
+        let mut total_scanned = 0u64;
+        for i in 0..nq {
+            let single = ivf.search_effort(q.row(i), 5, Effort::Probes(nprobe));
+            assert_eq!(resp.hits[i].ids, single.ids, "case {case} q {i}");
+            assert_eq!(resp.hits[i].scores, single.scores);
+            total_scanned += single.cost.keys_scanned;
+        }
+        assert_eq!(resp.cost.keys_scanned, total_scanned);
     }
 }
 

@@ -1,0 +1,210 @@
+//! Cross-backend conformance suite for the unified `amips::api` surface
+//! (pure Rust — runs on default features).
+//!
+//! * every backbone behind `Searcher` matches `FlatIndex` top-1 exactly
+//!   at `Effort::Exhaustive` on synthetic data;
+//! * `CostBreakdown` components are monotone in `Effort::Probes`;
+//! * `MappedSearcher` and `RoutedSearcher` reproduce the seed
+//!   pipeline/router behavior (same ids/scores) on a fixed-seed dataset.
+
+use amips::api::{
+    Effort, LinearQueryMap, MappedSearcher, QueryMode, RoutedSearcher, SearchRequest, Searcher,
+};
+use amips::coordinator::router::CentroidRouter;
+use amips::index::ivf::IvfIndex;
+use amips::index::{build_backend, flat::FlatIndex, VectorIndex, BACKBONES};
+use amips::tensor::{normalize_rows, Tensor};
+use amips::util::Rng;
+
+fn unit(shape: &[usize], seed: u64) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+    normalize_rows(&mut t);
+    t
+}
+
+const N: usize = 500;
+const D: usize = 16;
+const NQ: usize = 25;
+const NLIST: usize = 8;
+
+#[test]
+fn every_backbone_matches_flat_top1_at_max_effort() {
+    let keys = unit(&[N, D], 1);
+    let queries = unit(&[NQ, D], 2);
+    let flat = FlatIndex::new(keys.clone());
+    let req = SearchRequest::top_k(3).effort(Effort::Exhaustive);
+    let truth = flat.search(&queries, &req).unwrap();
+    for name in BACKBONES {
+        let index = build_backend(name, &keys, Some(&queries), NLIST, 42).unwrap();
+        assert_eq!(index.num_keys(), N, "{name}");
+        let resp = index.search(&queries, &req).unwrap();
+        assert_eq!(resp.n_queries(), NQ, "{name}");
+        for q in 0..NQ {
+            assert_eq!(
+                resp.hits[q].ids[0], truth.hits[q].ids[0],
+                "{name}: top-1 mismatch on query {q}"
+            );
+            let (got, want) = (resp.hits[q].scores[0], truth.hits[q].scores[0]);
+            assert!(
+                (got - want).abs() < 1e-5,
+                "{name}: top-1 score {got} vs flat {want} on query {q}"
+            );
+            // hit lists are sorted descending and duplicate-free
+            for w in resp.hits[q].scores.windows(2) {
+                assert!(w[0] >= w[1], "{name}");
+            }
+            let mut ids = resp.hits[q].ids.clone();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), resp.hits[q].ids.len(), "{name}");
+        }
+    }
+}
+
+#[test]
+fn cost_breakdown_monotone_in_probes() {
+    let keys = unit(&[N, D], 3);
+    let queries = unit(&[NQ, D], 4);
+    for name in ["ivf", "scann", "soar", "leanvec"] {
+        let index = build_backend(name, &keys, None, NLIST, 43).unwrap();
+        assert!(index.n_cells() > 1, "{name}");
+        let mut prev: Option<amips::api::CostBreakdown> = None;
+        for probes in 1..=NLIST {
+            let req = SearchRequest::top_k(5).effort(Effort::Probes(probes));
+            let resp = index.search(&queries, &req).unwrap();
+            let cost = resp.cost;
+            if let Some(p) = prev {
+                assert!(
+                    cost.keys_scanned >= p.keys_scanned,
+                    "{name}: keys_scanned dropped at probes={probes}"
+                );
+                assert!(
+                    cost.cells_probed >= p.cells_probed,
+                    "{name}: cells_probed dropped at probes={probes}"
+                );
+                assert!(
+                    cost.scan_flops >= p.scan_flops,
+                    "{name}: scan_flops dropped at probes={probes}"
+                );
+            }
+            prev = Some(cost);
+        }
+    }
+}
+
+#[test]
+fn effort_frac_and_auto_resolve_sensibly() {
+    let keys = unit(&[N, D], 5);
+    let queries = unit(&[4, D], 6);
+    let index = build_backend("ivf", &keys, None, NLIST, 44).unwrap();
+    let full = index
+        .search(&queries, &SearchRequest::top_k(2).effort(Effort::Frac(1.0)))
+        .unwrap();
+    assert_eq!(full.cost.cells_probed, (4 * NLIST) as u64);
+    let half = index
+        .search(&queries, &SearchRequest::top_k(2).effort(Effort::Frac(0.5)))
+        .unwrap();
+    assert_eq!(half.cost.cells_probed, (4 * NLIST / 2) as u64);
+    let auto = index
+        .search(&queries, &SearchRequest::top_k(2).effort(Effort::Auto))
+        .unwrap();
+    assert!(auto.cost.cells_probed >= 4);
+}
+
+#[test]
+fn mapped_searcher_reproduces_seed_pipeline_semantics() {
+    // Seed parity: MappedSearchPipeline::original was a passthrough, and
+    // the mapped variant equaled map(queries) -> index scan. Both are
+    // reproduced by MappedSearcher on a fixed-seed dataset.
+    let keys = unit(&[N, D], 7);
+    let queries = unit(&[NQ, D], 8);
+    let ivf = IvfIndex::build(&keys, NLIST, 10, 9);
+    let req = SearchRequest::top_k(5).effort(Effort::Probes(3));
+
+    // passthrough == direct index search
+    let map = LinearQueryMap::identity(D);
+    let searcher = MappedSearcher::mapped(&ivf, &map);
+    let direct = ivf.search(&queries, &req).unwrap();
+    let passthrough = searcher.search(&queries, &req).unwrap();
+    for q in 0..NQ {
+        assert_eq!(passthrough.hits[q].ids, direct.hits[q].ids);
+        assert_eq!(passthrough.hits[q].scores, direct.hits[q].scores);
+    }
+
+    // mapped == manually mapping the batch, then searching
+    let mut w = Tensor::zeros(&[D, D]);
+    let mut rng = Rng::new(10);
+    rng.fill_normal(w.data_mut(), 0.3);
+    let map = LinearQueryMap::new("rand", w);
+    let searcher = MappedSearcher::mapped(&ivf, &map);
+    use amips::api::QueryMap;
+    let manual_q = map.map(&queries).unwrap();
+    let manual = ivf.search(&manual_q, &req).unwrap();
+    let mapped = searcher.search(&queries, &req.mode(QueryMode::Mapped)).unwrap();
+    for q in 0..NQ {
+        assert_eq!(mapped.hits[q].ids, manual.hits[q].ids, "query {q}");
+        assert_eq!(mapped.hits[q].scores, manual.hits[q].scores);
+    }
+    // the map stage is billed
+    assert_eq!(
+        mapped.cost.map_flops,
+        map.map_flops_per_query() * NQ as u64
+    );
+    assert_eq!(manual.cost.map_flops, 0);
+}
+
+#[test]
+fn routed_searcher_reproduces_centroid_routing() {
+    // Seed parity: the centroid router over the index's own centroids is
+    // exactly IVF's coarse ranking, so routed search == plain IVF search
+    // (same ids and scores) at every probe level.
+    let keys = unit(&[N, D], 11);
+    let queries = unit(&[NQ, D], 12);
+    let ivf = IvfIndex::build(&keys, NLIST, 10, 13);
+    let router = CentroidRouter::new(ivf.centroids().clone());
+    let routed = RoutedSearcher::new(&router, &ivf).unwrap();
+    for probes in 1..=NLIST {
+        let req = SearchRequest::top_k(4).effort(Effort::Probes(probes));
+        let via_router = routed.search(&queries, &req.mode(QueryMode::Routed)).unwrap();
+        let plain = ivf.search(&queries, &req).unwrap();
+        for q in 0..NQ {
+            assert_eq!(
+                via_router.hits[q].ids, plain.hits[q].ids,
+                "probes {probes} query {q}"
+            );
+            assert_eq!(via_router.hits[q].scores, plain.hits[q].scores);
+        }
+        assert_eq!(via_router.cost.keys_scanned, plain.cost.keys_scanned);
+        // selection cost is split into the route stage
+        assert_eq!(
+            via_router.cost.route_flops,
+            (NQ * NLIST * D * 2) as u64,
+            "probes {probes}"
+        );
+    }
+}
+
+#[test]
+fn searcher_trait_objects_compose() {
+    // Box<dyn VectorIndex> and wrapper searchers share one call site.
+    let keys = unit(&[N, D], 14);
+    let queries = unit(&[6, D], 15);
+    let req = SearchRequest::top_k(3).effort(Effort::Exhaustive);
+    let index = build_backend("ivf", &keys, None, NLIST, 45).unwrap();
+    let map = LinearQueryMap::identity(D);
+    let wrapper = MappedSearcher::mapped(index.as_ref(), &map);
+    let searchers: Vec<&dyn Searcher> = vec![&wrapper];
+    for s in searchers {
+        let resp = s.search(&queries, &req).unwrap();
+        assert_eq!(resp.n_queries(), 6);
+        assert!(s.label().contains("ivf"));
+        assert_eq!(s.num_keys(), N);
+    }
+    // search_one mirrors the batch path
+    let one = index
+        .search_one(queries.row(0), &req)
+        .unwrap();
+    let batch = index.search(&queries, &req).unwrap();
+    assert_eq!(one.hits[0].ids, batch.hits[0].ids);
+}

@@ -1,0 +1,164 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate, vendored so
+//! the workspace builds with zero network access (this environment has no
+//! crates.io mirror). It implements the subset the repo uses:
+//!
+//! * [`Error`] / [`Result`] with `?`-conversion from any
+//!   `std::error::Error + Send + Sync + 'static`
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros
+//! * the [`Context`] extension trait (`.context(..)` / `.with_context(..)`)
+//!   on both `Result` and `Option`
+//!
+//! Errors are stored as a message plus a context chain; `{:#}` prints the
+//! chain joined by `: ` like real anyhow's alternate Display.
+
+use std::fmt;
+
+/// An error message with a chain of added context, newest first.
+pub struct Error {
+    /// context[0] is the outermost (most recently attached) message.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Attach an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.root_message())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with [`Error`] as default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse()?; // From<ParseIntError>
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e = parse("x").context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(format!("{e:#}").starts_with("reading config: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.with_context(|| format!("missing {}", "field")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing field");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(flag: bool) -> Result<u8> {
+            ensure!(flag, "flag was {}", flag);
+            bail!("unreachable {}", 1);
+        }
+        assert!(f(false).is_err());
+        assert!(f(true).is_err());
+        let e: Error = anyhow!("code {}", 7);
+        assert_eq!(format!("{e}"), "code 7");
+    }
+}
