@@ -58,8 +58,15 @@ fn main() -> Result<()> {
             .collect();
 
         for backend in &backends {
-            let index =
-                amips::index::build_backend(backend, &ds.keys, Some(&ds.train.x), nlist, 42)?;
+            let index = amips::index::IndexSpec::default_for(backend)?
+                .with_nlist(nlist)
+                .build(
+                    &ds.keys,
+                    &amips::index::BuildCtx {
+                        sample_queries: Some(&ds.train.x),
+                        seed: 42,
+                    },
+                )?;
             let mut rep = Report::new(&format!(
                 "Fig 16-27 grid: {backend} on {dataset} (nlist={nlist})"
             ));

@@ -1,0 +1,104 @@
+//! Build once, serve many: the index-lifecycle tour — pure Rust, no
+//! artifacts or XLA required.
+//!
+//! 1. Parse typed `IndexSpec`s and build three backbones into a
+//!    `Catalog` of versioned artifacts (the expensive k-means/PQ
+//!    training happens exactly once, here).
+//! 2. Drop everything and reopen the catalog from disk — pure
+//!    deserialization, the path every serving replica takes.
+//! 3. Query the reloaded collections through the same `Searcher` API,
+//!    then put one behind the threaded coordinator `Server`.
+//!
+//! ```bash
+//! cargo run --release --example build_serve
+//! ```
+
+use amips::api::{Effort, SearchRequest, Searcher};
+use amips::coordinator::{BatchPolicy, Server, ServerConfig};
+use amips::index::{BuildCtx, Catalog, IndexSpec, VectorIndex};
+use amips::tensor::{normalize_rows, Tensor};
+use amips::util::{Rng, Timer};
+use anyhow::Result;
+
+fn unit(shape: &[usize], seed: u64) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+    normalize_rows(&mut t);
+    t
+}
+
+fn main() -> Result<()> {
+    let root = std::env::temp_dir().join(format!("amips-build-serve-{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok(); // a crashed earlier run may have left a catalog here
+    let keys = unit(&[10_000, 32], 1);
+    let sample = unit(&[256, 32], 2);
+    let queries = unit(&[16, 32], 3);
+
+    // 1. build once: typed specs -> persisted artifacts
+    {
+        let mut catalog = Catalog::create(&root)?;
+        for spec_str in [
+            "ivf(nlist=64)",
+            "scann(nlist=64,eta=4)",
+            "leanvec(d_low=8,nlist=64)",
+        ] {
+            let spec: IndexSpec = spec_str.parse()?;
+            let timer = Timer::start();
+            let entry = catalog.build_collection(
+                &format!("docs-{}", spec.name()),
+                &spec,
+                &keys,
+                &BuildCtx {
+                    sample_queries: Some(&sample),
+                    seed: 42,
+                },
+            )?;
+            println!(
+                "built  {:13} {:.2}s -> {}",
+                entry.name,
+                timer.elapsed_s(),
+                entry.path.display()
+            );
+        }
+    } // everything dropped: nothing survives in memory
+
+    // 2. serve many: reopen from disk — no k-means/PQ training runs here
+    let timer = Timer::start();
+    let catalog = Catalog::open(&root)?;
+    println!(
+        "\nreopened {} collections in {:.3}s: {:?}",
+        catalog.len(),
+        timer.elapsed_s(),
+        catalog.names()
+    );
+    let req = SearchRequest::top_k(5).effort(Effort::Probes(4));
+    for entry in catalog.entries() {
+        let resp = entry.index.search(&queries, &req)?;
+        let (id, score) = resp.hits[0].top1().unwrap();
+        println!(
+            "{:13} [{}] top1(q0) = id {id} score {score:.3}",
+            entry.name,
+            entry.index.spec()
+        );
+    }
+
+    // 3. the same artifact behind the threaded server
+    let (server, handle) = Server::start_from_catalog(
+        &catalog,
+        "docs-ivf",
+        ServerConfig::unmapped(BatchPolicy::default(), req),
+    )?;
+    for i in 0..4 {
+        let resp = handle.search(queries.row(i).to_vec())?;
+        println!(
+            "server q{i}: top1 id {:?} ({} keys scanned)",
+            resp.hits.ids.first(),
+            resp.cost.keys_scanned
+        );
+    }
+    drop(handle);
+    server.shutdown()?;
+    std::fs::remove_dir_all(&root).ok();
+    println!("\nbuild_serve OK");
+    Ok(())
+}

@@ -22,6 +22,11 @@
 //!   IVF cells. The serving coordinator speaks the same types
 //!   ([`crate::coordinator::ServerHandle::search`]).
 //!
+//! Backbones are built from typed [`crate::index::IndexSpec`]s and can
+//! be persisted/reloaded as versioned artifacts — a reloaded index (or
+//! a whole [`crate::index::Catalog`] of them) serves this API
+//! identically to a freshly built one.
+//!
 //! ```no_run
 //! use amips::api::{Effort, SearchRequest, Searcher};
 //! use amips::index::ivf::IvfIndex;

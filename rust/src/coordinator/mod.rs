@@ -6,6 +6,11 @@
 //! [`crate::api::RoutedSearcher`]. Python never appears here; the models
 //! are AOT artifacts loaded through `crate::runtime` (behind the `xla`
 //! feature).
+//!
+//! Deployment: [`Server::start_from_catalog`] serves a prebuilt
+//! collection from an [`crate::index::Catalog`] of persisted index
+//! artifacts — the build-once / serve-many path (`amips build` +
+//! `amips serve --catalog`).
 
 pub mod batcher;
 pub mod router;

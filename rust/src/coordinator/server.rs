@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 
 use crate::api::{CostBreakdown, Hits, QueryMap, QueryMode, SearchRequest};
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::index::catalog::Catalog;
 use crate::index::traits::VectorIndex;
 use crate::tensor::Tensor;
 use crate::util::timer::LatencyHistogram;
@@ -341,6 +342,23 @@ impl Server {
         ))
     }
 
+    /// Start a server over a prebuilt collection from a [`Catalog`] —
+    /// the build-once / serve-many path: the index was deserialized from
+    /// its artifact, so no k-means/PQ training runs here.
+    pub fn start_from_catalog(
+        catalog: &Catalog,
+        collection: &str,
+        cfg: ServerConfig,
+    ) -> Result<(Server, ServerHandle)> {
+        let entry = catalog.get(collection).ok_or_else(|| {
+            anyhow!(
+                "catalog has no collection '{collection}' (available: {})",
+                catalog.names().join(", ")
+            )
+        })?;
+        Server::start(cfg, entry.index.clone())
+    }
+
     /// Snapshot latency statistics.
     pub fn latency_stats(&self) -> LatencyHistogram {
         self.stats.lock().unwrap().clone()
@@ -461,6 +479,49 @@ mod tests {
         assert!(ok.is_ok());
         drop(handle);
         server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn server_starts_from_a_prebuilt_catalog() {
+        use crate::index::{BuildCtx, Catalog, IndexSpec};
+        let root = std::env::temp_dir().join(format!("amips-server-catalog-{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        let keys = unit(&[200, 8], 20);
+        let spec = IndexSpec::default_for("ivf").unwrap().with_nlist(4);
+        {
+            let mut catalog = Catalog::create(&root).unwrap();
+            catalog
+                .build_collection("docs", &spec, &keys, &BuildCtx::seeded(21))
+                .unwrap();
+        }
+        // reopen: pure deserialization, then serve
+        let catalog = Catalog::open(&root).unwrap();
+        let req = SearchRequest::top_k(3).effort(Effort::Exhaustive);
+        let (server, handle) =
+            Server::start_from_catalog(&catalog, "docs", ServerConfig::unmapped(policy(), req))
+                .unwrap();
+        let q = unit(&[2, 8], 22);
+        for i in 0..2 {
+            let resp = handle.search(q.row(i).to_vec()).unwrap();
+            // exhaustive effort on the reloaded index is still exact
+            let direct = catalog.get("docs").unwrap().index.search_effort(
+                q.row(i),
+                3,
+                Effort::Exhaustive,
+            );
+            assert_eq!(resp.hits.ids, direct.ids);
+            assert_eq!(resp.hits.scores, direct.scores);
+        }
+        drop(handle);
+        server.shutdown().unwrap();
+        // unknown collection is a typed error, not a panic
+        assert!(Server::start_from_catalog(
+            &catalog,
+            "nope",
+            ServerConfig::unmapped(policy(), req)
+        )
+        .is_err());
+        std::fs::remove_dir_all(&root).ok();
     }
 
     #[test]

@@ -1,0 +1,389 @@
+//! Versioned binary index artifacts (`.ami`): build an index once, ship
+//! its trained state (centroids, codebooks, projections, packed
+//! storage) to every serving replica, and reload it without re-running
+//! k-means/PQ training.
+//!
+//! Layout (little-endian throughout, reusing the [`Tensor`] codec for
+//! every dense block):
+//!
+//! ```text
+//! magic    b"AMIX"
+//! version  u32 (currently 1)
+//! backbone len-prefixed utf8 tag ("ivf", "scann", ...)
+//! dim      u64
+//! len      u64 (number of indexed keys)
+//! spec     len-prefixed utf8 IndexSpec echo ("ivf(nlist=64,iters=15)")
+//! payload  u64 length + backbone-specific bytes
+//! checksum u64 FNV-1a over the payload
+//! ```
+//!
+//! Every [`VectorIndex`] knows how to write its payload
+//! ([`VectorIndex::write_payload`]) and the framed artifact
+//! ([`VectorIndex::save`]); [`load`]/[`load_from`] read the header,
+//! verify the checksum and dispatch on the backbone tag. Corrupt
+//! headers, short reads and checksum mismatches are errors, never
+//! panics.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::index::{flat, ivf, leanvec, pq, scann, soar, sq, VectorIndex};
+use crate::tensor::Tensor;
+
+/// Artifact magic bytes.
+pub const MAGIC: &[u8; 4] = b"AMIX";
+/// Current artifact format version.
+pub const VERSION: u32 = 1;
+/// Conventional file extension for index artifacts.
+pub const EXTENSION: &str = "ami";
+/// Upper bound on any element count read from disk — corrupt length
+/// fields must fail fast instead of attempting a huge allocation.
+const MAX_ELEMS: u64 = 1 << 31;
+
+/// Parsed artifact header (everything before the payload).
+pub struct ArtifactHeader {
+    pub backbone: String,
+    pub dim: usize,
+    pub len: usize,
+    pub spec: String,
+}
+
+/// FNV-1a 64-bit over `bytes`.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Primitive write/read helpers shared by the backbone payload codecs.
+// ---------------------------------------------------------------------------
+
+pub(crate) fn w_u32(w: &mut dyn Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub(crate) fn w_u64(w: &mut dyn Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub(crate) fn w_f32(w: &mut dyn Write, v: f32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub(crate) fn w_bool(w: &mut dyn Write, v: bool) -> Result<()> {
+    w_u32(w, v as u32)
+}
+
+pub(crate) fn w_str(w: &mut dyn Write, s: &str) -> Result<()> {
+    w_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+pub(crate) fn w_u8s(w: &mut dyn Write, v: &[u8]) -> Result<()> {
+    w_u64(w, v.len() as u64)?;
+    w.write_all(v)?;
+    Ok(())
+}
+
+pub(crate) fn w_u32s(w: &mut dyn Write, v: &[u32]) -> Result<()> {
+    w_u64(w, v.len() as u64)?;
+    let mut buf = Vec::with_capacity(v.len() * 4);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+pub(crate) fn w_f32s(w: &mut dyn Write, v: &[f32]) -> Result<()> {
+    w_u64(w, v.len() as u64)?;
+    let mut buf = Vec::with_capacity(v.len() * 4);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+pub(crate) fn w_usizes(w: &mut dyn Write, v: &[usize]) -> Result<()> {
+    w_u64(w, v.len() as u64)?;
+    for &x in v {
+        w_u64(w, x as u64)?;
+    }
+    Ok(())
+}
+
+pub(crate) fn w_tensor(w: &mut dyn Write, t: &Tensor) -> Result<()> {
+    let mut w = w;
+    t.write_to(&mut w)
+}
+
+pub(crate) fn r_u32(r: &mut dyn Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("artifact truncated")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub(crate) fn r_u64(r: &mut dyn Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).context("artifact truncated")?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub(crate) fn r_f32(r: &mut dyn Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("artifact truncated")?;
+    Ok(f32::from_le_bytes(b))
+}
+
+pub(crate) fn r_bool(r: &mut dyn Read) -> Result<bool> {
+    match r_u32(r)? {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => bail!("invalid bool encoding {other} in artifact"),
+    }
+}
+
+fn checked_len(v: u64, what: &str) -> Result<usize> {
+    ensure!(v <= MAX_ELEMS, "implausible {what} length {v} in artifact");
+    Ok(v as usize)
+}
+
+pub(crate) fn r_str(r: &mut dyn Read) -> Result<String> {
+    let n = r_u32(r)? as usize;
+    ensure!(n <= 65_536, "implausible string length {n} in artifact");
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf).context("artifact truncated")?;
+    Ok(String::from_utf8(buf)?)
+}
+
+pub(crate) fn r_u8s(r: &mut dyn Read) -> Result<Vec<u8>> {
+    let n = checked_len(r_u64(r)?, "byte array")?;
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf).context("artifact truncated")?;
+    Ok(buf)
+}
+
+pub(crate) fn r_u32s(r: &mut dyn Read) -> Result<Vec<u32>> {
+    let n = checked_len(r_u64(r)?, "u32 array")?;
+    let mut raw = vec![0u8; n * 4];
+    r.read_exact(&mut raw).context("artifact truncated")?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub(crate) fn r_f32s(r: &mut dyn Read) -> Result<Vec<f32>> {
+    let n = checked_len(r_u64(r)?, "f32 array")?;
+    let mut raw = vec![0u8; n * 4];
+    r.read_exact(&mut raw).context("artifact truncated")?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub(crate) fn r_usizes(r: &mut dyn Read) -> Result<Vec<usize>> {
+    let n = checked_len(r_u64(r)?, "usize array")?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(checked_len(r_u64(r)?, "usize element")?);
+    }
+    Ok(out)
+}
+
+pub(crate) fn r_tensor(r: &mut dyn Read) -> Result<Tensor> {
+    let mut r = r;
+    Tensor::read_from(&mut r)
+}
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Write a complete framed artifact: header, payload, checksum.
+pub(crate) fn write_framed(
+    w: &mut dyn Write,
+    backbone: &str,
+    dim: usize,
+    len: usize,
+    spec: &str,
+    payload: &[u8],
+) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w_u32(w, VERSION)?;
+    w_str(w, backbone)?;
+    w_u64(w, dim as u64)?;
+    w_u64(w, len as u64)?;
+    w_str(w, spec)?;
+    w_u64(w, payload.len() as u64)?;
+    w.write_all(payload)?;
+    w_u64(w, fnv1a64(payload))?;
+    Ok(())
+}
+
+/// Read and validate the artifact header (magic, version, tag, shape,
+/// spec echo), leaving the reader positioned at the payload length.
+pub fn read_header(r: &mut dyn Read) -> Result<ArtifactHeader> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)
+        .context("reading index artifact magic")?;
+    ensure!(
+        &magic == MAGIC,
+        "bad index artifact magic {magic:?} (expected {MAGIC:?})"
+    );
+    let version = r_u32(r)?;
+    ensure!(
+        version == VERSION,
+        "unsupported index artifact version {version} (this build reads version {VERSION})"
+    );
+    let backbone = r_str(r)?;
+    let dim = checked_len(r_u64(r)?, "dim")?;
+    let len = checked_len(r_u64(r)?, "len")?;
+    let spec = r_str(r)?;
+    Ok(ArtifactHeader {
+        backbone,
+        dim,
+        len,
+        spec,
+    })
+}
+
+/// Load a boxed index from any reader, verifying the checksum before a
+/// single payload byte is interpreted.
+pub fn load_from(r: &mut dyn Read) -> Result<Box<dyn VectorIndex>> {
+    let header = read_header(r)?;
+    let plen = checked_len(r_u64(r)?, "payload")?;
+    let mut payload = vec![0u8; plen];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("index artifact truncated: expected a {plen}-byte payload"))?;
+    let want = r_u64(r).context("index artifact truncated: missing checksum")?;
+    let got = fnv1a64(&payload);
+    ensure!(
+        got == want,
+        "index artifact checksum mismatch (stored {want:#018x}, computed {got:#018x}): corrupt file"
+    );
+    let mut cur: &[u8] = &payload;
+    let index: Box<dyn VectorIndex> = match header.backbone.as_str() {
+        "flat" => Box::new(flat::FlatIndex::read_payload(&mut cur)?),
+        "ivf" => Box::new(ivf::IvfIndex::read_payload(&mut cur)?),
+        "pq" => Box::new(pq::PqIndex::read_payload(&mut cur)?),
+        "sq8" => Box::new(sq::SqIndex::read_payload(&mut cur)?),
+        "scann" => Box::new(scann::ScannIndex::read_payload(&mut cur)?),
+        "soar" => Box::new(soar::SoarIndex::read_payload(&mut cur)?),
+        "leanvec" => Box::new(leanvec::LeanVecIndex::read_payload(&mut cur)?),
+        other => bail!("unknown backbone tag '{other}' in index artifact"),
+    };
+    ensure!(
+        index.dim() == header.dim && index.len() == header.len,
+        "artifact header advertises {}x{} but the payload decodes to {}x{}",
+        header.len,
+        header.dim,
+        index.len(),
+        index.dim()
+    );
+    Ok(index)
+}
+
+/// Load an index artifact from disk.
+pub fn load(path: &Path) -> Result<Box<dyn VectorIndex>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening index artifact {}", path.display()))?;
+    let mut r = std::io::BufReader::new(f);
+    load_from(&mut r).with_context(|| format!("loading index artifact {}", path.display()))
+}
+
+/// Save an index artifact to disk.
+pub fn save(path: &Path, index: &dyn VectorIndex) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating index artifact {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    index.save(&mut w)?;
+    w.flush()
+        .with_context(|| format!("flushing index artifact {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_stable_and_input_sensitive() {
+        // reference value for the empty input (FNV-1a offset basis)
+        assert_eq!(fnv1a64(&[]), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"abd"));
+    }
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut buf = Vec::new();
+        w_u32(&mut buf, 7).unwrap();
+        w_u64(&mut buf, 1 << 40).unwrap();
+        w_f32(&mut buf, 2.5).unwrap();
+        w_bool(&mut buf, true).unwrap();
+        w_str(&mut buf, "scann").unwrap();
+        w_u8s(&mut buf, &[1, 2, 3]).unwrap();
+        w_u32s(&mut buf, &[9, 8]).unwrap();
+        w_f32s(&mut buf, &[0.5, -1.0]).unwrap();
+        w_usizes(&mut buf, &[4, 0, 11]).unwrap();
+        let mut r: &[u8] = &buf;
+        assert_eq!(r_u32(&mut r).unwrap(), 7);
+        assert_eq!(r_u64(&mut r).unwrap(), 1 << 40);
+        assert_eq!(r_f32(&mut r).unwrap(), 2.5);
+        assert!(r_bool(&mut r).unwrap());
+        assert_eq!(r_str(&mut r).unwrap(), "scann");
+        assert_eq!(r_u8s(&mut r).unwrap(), vec![1, 2, 3]);
+        assert_eq!(r_u32s(&mut r).unwrap(), vec![9, 8]);
+        assert_eq!(r_f32s(&mut r).unwrap(), vec![0.5, -1.0]);
+        assert_eq!(r_usizes(&mut r).unwrap(), vec![4, 0, 11]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn truncated_primitives_error() {
+        let mut buf = Vec::new();
+        w_u64(&mut buf, 100).unwrap(); // promises 100 elements, delivers none
+        let mut r: &[u8] = &buf;
+        assert!(r_u8s(&mut r).is_err());
+        let mut r: &[u8] = &[1, 2];
+        assert!(r_u64(&mut r).is_err());
+    }
+
+    #[test]
+    fn header_round_trip_and_rejections() {
+        let mut buf = Vec::new();
+        write_framed(&mut buf, "ivf", 16, 400, "ivf(nlist=8,iters=15)", b"payload").unwrap();
+        let mut r: &[u8] = &buf;
+        let h = read_header(&mut r).unwrap();
+        assert_eq!(h.backbone, "ivf");
+        assert_eq!((h.dim, h.len), (16, 400));
+        assert_eq!(h.spec, "ivf(nlist=8,iters=15)");
+
+        // corrupt magic
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(read_header(&mut bad.as_slice()).is_err());
+        // unsupported version
+        let mut bad = buf.clone();
+        bad[4] = 0xEE;
+        assert!(read_header(&mut bad.as_slice()).is_err());
+        // checksum mismatch (flip one payload byte)
+        let mut bad = buf.clone();
+        let p = bad.len() - 9;
+        bad[p] ^= 0x01;
+        let err = load_from(&mut bad.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+    }
+}

@@ -1,0 +1,338 @@
+//! A catalog of named, persisted index collections — the build-once /
+//! serve-many deployment story. `amips build` trains an index from a
+//! typed [`IndexSpec`] and writes a versioned artifact plus a manifest
+//! line; `amips serve --catalog` (and
+//! [`crate::coordinator::Server::start_from_catalog`]) reopen the
+//! catalog and serve from the prebuilt artifacts without re-running
+//! k-means/PQ training.
+//!
+//! On-disk layout of a catalog directory:
+//!
+//! ```text
+//! <root>/catalog.tsv     # name<TAB>spec<TAB>artifact, one per line
+//! <root>/<name>.ami      # versioned index artifact (index::artifact)
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::index::spec::{BuildCtx, IndexSpec};
+use crate::index::{artifact, VectorIndex};
+use crate::tensor::Tensor;
+
+/// Manifest file name inside a catalog directory.
+pub const MANIFEST_FILE: &str = "catalog.tsv";
+
+/// One served collection: the spec it was built from, where its
+/// artifact lives, and the loaded index (a batched
+/// [`crate::api::Searcher`] via the blanket impl).
+pub struct CatalogEntry {
+    pub name: String,
+    /// The spec as registered at build time (`auto` knobs unresolved);
+    /// `index.spec()` reports the resolved echo.
+    pub spec: IndexSpec,
+    pub path: PathBuf,
+    pub index: Arc<dyn VectorIndex>,
+}
+
+/// A directory of named collections backed by index artifacts.
+pub struct Catalog {
+    root: PathBuf,
+    entries: BTreeMap<String, CatalogEntry>,
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+}
+
+/// Parse the manifest text into `(name, spec, artifact file)` rows
+/// without touching any artifact.
+fn manifest_rows(text: &str, manifest: &Path) -> Result<Vec<(String, IndexSpec, String)>> {
+    let mut rows = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split('\t');
+        let (Some(name), Some(spec_str), Some(file), None) =
+            (parts.next(), parts.next(), parts.next(), parts.next())
+        else {
+            bail!(
+                "malformed line {} in {}: expected name<TAB>spec<TAB>artifact, got '{line}'",
+                lineno + 1,
+                manifest.display()
+            );
+        };
+        let spec: IndexSpec = spec_str
+            .parse()
+            .with_context(|| format!("catalog collection '{name}'"))?;
+        rows.push((name.to_string(), spec, file.to_string()));
+    }
+    Ok(rows)
+}
+
+/// Write the manifest for a set of rows (sorted by collection name).
+fn write_manifest_rows(root: &Path, rows: &[(String, IndexSpec, String)]) -> Result<()> {
+    let mut text =
+        String::from("# amips catalog: name<TAB>spec<TAB>artifact (one collection per line)\n");
+    for (name, spec, file) in rows {
+        text.push_str(&format!("{name}\t{spec}\t{file}\n"));
+    }
+    // write-then-rename so a crash mid-write can't leave a truncated
+    // manifest that orphans every intact artifact in the catalog
+    let path = root.join(MANIFEST_FILE);
+    let tmp = root.join(format!("{MANIFEST_FILE}.tmp"));
+    std::fs::write(&tmp, text)
+        .with_context(|| format!("writing catalog manifest {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("replacing catalog manifest {}", path.display()))?;
+    Ok(())
+}
+
+/// Load one manifest row's artifact and verify it matches its spec.
+fn load_entry(root: &Path, name: &str, spec: IndexSpec, file: &str) -> Result<CatalogEntry> {
+    let path = root.join(file);
+    let index = artifact::load(&path)?;
+    ensure!(
+        index.name() == spec.name(),
+        "collection '{name}': artifact {} holds a '{}' backbone but the manifest spec says '{}'",
+        path.display(),
+        index.name(),
+        spec.name()
+    );
+    Ok(CatalogEntry {
+        name: name.to_string(),
+        spec,
+        path,
+        index: Arc::from(index),
+    })
+}
+
+impl Catalog {
+    /// Create an empty catalog directory (with manifest). Refuses to
+    /// clobber an existing manifest — reopening (or appending to) a
+    /// populated catalog goes through [`Catalog::open`] /
+    /// [`Catalog::open_or_create`].
+    pub fn create(root: impl Into<PathBuf>) -> Result<Catalog> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating catalog dir {}", root.display()))?;
+        let manifest = root.join(MANIFEST_FILE);
+        ensure!(
+            !manifest.exists(),
+            "catalog manifest {} already exists; use Catalog::open (or open_or_create) instead of overwriting it",
+            manifest.display()
+        );
+        let cat = Catalog {
+            root,
+            entries: BTreeMap::new(),
+        };
+        cat.write_manifest()?;
+        Ok(cat)
+    }
+
+    /// Open an existing catalog, loading every artifact it lists. For
+    /// serving a single known collection out of a large catalog,
+    /// [`Catalog::open_collection`] avoids deserializing the rest.
+    pub fn open(root: impl Into<PathBuf>) -> Result<Catalog> {
+        let root = root.into();
+        let manifest = root.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading catalog manifest {}", manifest.display()))?;
+        let mut entries = BTreeMap::new();
+        for (name, spec, file) in manifest_rows(&text, &manifest)? {
+            let entry = load_entry(&root, &name, spec, &file)?;
+            let prev = entries.insert(name.clone(), entry);
+            ensure!(prev.is_none(), "duplicate collection '{name}' in manifest");
+        }
+        Ok(Catalog { root, entries })
+    }
+
+    /// Load exactly one collection from a catalog directory, without
+    /// deserializing any other artifact — serve-startup cost scales
+    /// with the requested index, not the whole catalog.
+    pub fn open_collection(root: impl Into<PathBuf>, name: &str) -> Result<CatalogEntry> {
+        let root = root.into();
+        let manifest = root.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading catalog manifest {}", manifest.display()))?;
+        let rows = manifest_rows(&text, &manifest)?;
+        match rows.iter().find(|(n, _, _)| n == name) {
+            Some((n, spec, file)) => load_entry(&root, n, *spec, file),
+            None => bail!(
+                "catalog {} has no collection '{name}' (available: {})",
+                root.display(),
+                rows.iter()
+                    .map(|(n, _, _)| n.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        }
+    }
+
+    /// List the collection names in a catalog directory by parsing only
+    /// the manifest — no artifact is loaded.
+    pub fn names_on_disk(root: impl Into<PathBuf>) -> Result<Vec<String>> {
+        let root = root.into();
+        let manifest = root.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading catalog manifest {}", manifest.display()))?;
+        Ok(manifest_rows(&text, &manifest)?
+            .into_iter()
+            .map(|(n, _, _)| n)
+            .collect())
+    }
+
+    /// Open the catalog at `root`, or create it if no manifest exists.
+    pub fn open_or_create(root: impl Into<PathBuf>) -> Result<Catalog> {
+        let root = root.into();
+        if root.join(MANIFEST_FILE).exists() {
+            Self::open(root)
+        } else {
+            Self::create(root)
+        }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Collection names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&CatalogEntry> {
+        self.entries.get(name)
+    }
+
+    /// Iterate collections in name order.
+    pub fn entries(&self) -> impl Iterator<Item = &CatalogEntry> {
+        self.entries.values()
+    }
+
+    /// Build `spec` over `keys`, persist the artifact under the catalog
+    /// root and register it as `name`.
+    pub fn build_collection(
+        &mut self,
+        name: &str,
+        spec: &IndexSpec,
+        keys: &Tensor,
+        ctx: &BuildCtx,
+    ) -> Result<&CatalogEntry> {
+        ensure!(
+            valid_name(name),
+            "collection name '{name}' must be non-empty and use only [A-Za-z0-9._-]"
+        );
+        ensure!(
+            !self.entries.contains_key(name),
+            "collection '{name}' already exists in {}",
+            self.root.display()
+        );
+        let index = spec.build(keys, ctx)?;
+        let path = self.root.join(format!("{name}.{}", artifact::EXTENSION));
+        artifact::save(&path, index.as_ref())?;
+        self.entries.insert(
+            name.to_string(),
+            CatalogEntry {
+                name: name.to_string(),
+                spec: *spec,
+                path,
+                index: Arc::from(index),
+            },
+        );
+        self.write_manifest()?;
+        Ok(self.entries.get(name).expect("just inserted"))
+    }
+
+    /// Build `spec` over `keys` and register it in the catalog at
+    /// `root` without deserializing any existing artifact (manifest
+    /// rows are parsed, not loaded) — appending to a large catalog
+    /// costs only the new index. Creates the catalog if absent.
+    pub fn append_collection(
+        root: impl Into<PathBuf>,
+        name: &str,
+        spec: &IndexSpec,
+        keys: &Tensor,
+        ctx: &BuildCtx,
+    ) -> Result<CatalogEntry> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating catalog dir {}", root.display()))?;
+        ensure!(
+            valid_name(name),
+            "collection name '{name}' must be non-empty and use only [A-Za-z0-9._-]"
+        );
+        let manifest = root.join(MANIFEST_FILE);
+        let mut rows = if manifest.exists() {
+            let text = std::fs::read_to_string(&manifest)
+                .with_context(|| format!("reading catalog manifest {}", manifest.display()))?;
+            manifest_rows(&text, &manifest)?
+        } else {
+            Vec::new()
+        };
+        ensure!(
+            !rows.iter().any(|(n, _, _)| n == name),
+            "collection '{name}' already exists in {}",
+            root.display()
+        );
+        let index = spec.build(keys, ctx)?;
+        let file = format!("{name}.{}", artifact::EXTENSION);
+        let path = root.join(&file);
+        artifact::save(&path, index.as_ref())?;
+        rows.push((name.to_string(), *spec, file));
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        write_manifest_rows(&root, &rows)?;
+        Ok(CatalogEntry {
+            name: name.to_string(),
+            spec: *spec,
+            path,
+            index: Arc::from(index),
+        })
+    }
+
+    fn write_manifest(&self) -> Result<()> {
+        let rows: Vec<(String, IndexSpec, String)> = self
+            .entries
+            .values()
+            .map(|e| {
+                let file = e
+                    .path
+                    .file_name()
+                    .and_then(|f| f.to_str())
+                    .context("artifact path has no utf8 file name")?;
+                Ok((e.name.clone(), e.spec, file.to_string()))
+            })
+            .collect::<Result<_>>()?;
+        write_manifest_rows(&self.root, &rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_validation() {
+        assert!(valid_name("docs-v2.ivf_main"));
+        assert!(!valid_name(""));
+        assert!(!valid_name("has space"));
+        assert!(!valid_name("sub/dir"));
+        assert!(!valid_name("tab\tname"));
+    }
+}

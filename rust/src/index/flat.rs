@@ -2,7 +2,13 @@
 //! backbone is measured against, and the "exact search within selected
 //! clusters" stage of the routing experiments (Sec. 4.3).
 
+use std::io::{Read, Write};
+
+use anyhow::Result;
+
 use crate::api::Effort;
+use crate::index::artifact;
+use crate::index::spec::{FlatSpec, IndexSpec};
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
 use crate::tensor::{dot, Tensor};
 
@@ -22,6 +28,13 @@ impl FlatIndex {
 
     pub fn d(&self) -> usize {
         self.keys.row_width()
+    }
+
+    /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
+    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<FlatIndex> {
+        Ok(FlatIndex {
+            keys: artifact::r_tensor(r)?,
+        })
     }
 
     /// Exact top-k over an explicit subset of key ids (cluster scan).
@@ -79,6 +92,14 @@ impl VectorIndex for FlatIndex {
 
     fn search_effort(&self, query: &[f32], k: usize, _effort: Effort) -> SearchResult {
         self.scan_all(query, k)
+    }
+
+    fn spec(&self) -> IndexSpec {
+        IndexSpec::Flat(FlatSpec)
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        artifact::w_tensor(w, &self.keys)
     }
 }
 

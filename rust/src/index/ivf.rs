@@ -9,8 +9,14 @@
 //! integration; swapping centroid ranking for a learned router is
 //! [`crate::api::RoutedSearcher`] over [`IvfIndex::search_cells`].
 
+use std::io::{Read, Write};
+
+use anyhow::{ensure, Result};
+
 use crate::api::Effort;
+use crate::index::artifact;
 use crate::index::kmeans::KMeans;
+use crate::index::spec::{IndexSpec, IvfSpec};
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
 use crate::tensor::{dot, Tensor};
 
@@ -24,13 +30,18 @@ pub struct IvfIndex {
     ids: Vec<u32>,
     /// Cell start offsets into `packed`/`ids` (len = nlist + 1).
     offsets: Vec<usize>,
+    /// Lloyd iterations used at build time (spec echo only; indexes
+    /// built via [`IvfIndex::from_clustering`] report the default).
+    iters: usize,
 }
 
 impl IvfIndex {
     /// Build from raw keys. `nlist` cells, `iters` Lloyd iterations.
     pub fn build(keys: &Tensor, nlist: usize, iters: usize, seed: u64) -> IvfIndex {
         let km = KMeans::fit(keys, nlist, iters, seed);
-        Self::from_clustering(keys, km.centroids, &km.assign)
+        let mut idx = Self::from_clustering(keys, km.centroids, &km.assign);
+        idx.iters = iters;
+        idx
     }
 
     /// Build from an existing clustering (shared with routing experiments).
@@ -64,7 +75,46 @@ impl IvfIndex {
             packed,
             ids,
             offsets,
+            iters: IvfSpec::default().iters,
         }
+    }
+
+    /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
+    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<IvfIndex> {
+        let centroids = artifact::r_tensor(r)?;
+        let packed = artifact::r_tensor(r)?;
+        let ids = artifact::r_u32s(r)?;
+        let offsets = artifact::r_usizes(r)?;
+        let iters = artifact::r_u64(r)? as usize;
+        let nlist = centroids.rows();
+        let d = packed.row_width();
+        ensure!(
+            nlist >= 1
+                && centroids.row_width() == d
+                && packed.rows() == ids.len()
+                && offsets.len() == nlist + 1
+                && offsets.last().copied() == Some(ids.len())
+                && offsets.windows(2).all(|w| w[0] <= w[1])
+                // ids must stay in-range: LeanVec re-ranks by indexing
+                // its full-dim keys with them, so an out-of-range id in
+                // a checksum-valid artifact must fail here, not panic
+                // on the first query
+                && ids.iter().all(|&id| (id as usize) < ids.len()),
+            "inconsistent IVF payload: {} cells, {} packed rows, {} ids, {} offsets",
+            nlist,
+            packed.rows(),
+            ids.len(),
+            offsets.len()
+        );
+        Ok(IvfIndex {
+            nlist,
+            d,
+            centroids,
+            packed,
+            ids,
+            offsets,
+            iters,
+        })
     }
 
     pub fn d(&self) -> usize {
@@ -158,6 +208,21 @@ impl VectorIndex for IvfIndex {
 
     fn search_effort(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult {
         self.search_probes(query, k, effort.resolve(self.nlist))
+    }
+
+    fn spec(&self) -> IndexSpec {
+        IndexSpec::Ivf(IvfSpec {
+            nlist: self.nlist,
+            iters: self.iters,
+        })
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        artifact::w_tensor(w, &self.centroids)?;
+        artifact::w_tensor(w, &self.packed)?;
+        artifact::w_u32s(w, &self.ids)?;
+        artifact::w_usizes(w, &self.offsets)?;
+        artifact::w_u64(w, self.iters as u64)
     }
 }
 

@@ -7,8 +7,14 @@
 //! query-aware refinement is approximated by optionally fitting PCA on
 //! the union of keys and sample queries.
 
+use std::io::{Read, Write};
+
+use anyhow::{ensure, Result};
+
 use crate::api::Effort;
+use crate::index::artifact;
 use crate::index::ivf::IvfIndex;
+use crate::index::spec::{IndexSpec, LeanVecSpec};
 use crate::index::traits::{SearchResult, TopK, VectorIndex};
 use crate::tensor::{dot, pca_project, power_iteration_pca, Tensor};
 
@@ -20,6 +26,8 @@ pub struct LeanVecIndex {
     inner: IvfIndex,
     keys: Tensor, // full-dim keys for re-ranking
     pub rerank: usize,
+    /// Whether the projection was fitted on keys ∪ queries (spec echo).
+    query_aware: bool,
 }
 
 impl LeanVecIndex {
@@ -55,7 +63,44 @@ impl LeanVecIndex {
             inner,
             keys: keys.clone(),
             rerank: 32,
+            query_aware: queries.is_some(),
         }
+    }
+
+    /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
+    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<LeanVecIndex> {
+        let comps = artifact::r_tensor(r)?;
+        let mean = artifact::r_f32s(r)?;
+        let keys = artifact::r_tensor(r)?;
+        let inner = IvfIndex::read_payload(r)?;
+        // clamp as in ScannIndex::read_payload: rerank > len is
+        // behaviorally identical to len, and a crafted huge value must
+        // not reach TopK's preallocation
+        let rerank = (artifact::r_u64(r)? as usize).min(keys.rows().max(1));
+        let query_aware = artifact::r_bool(r)?;
+        let d_low = comps.rows();
+        let d = keys.row_width();
+        ensure!(
+            comps.row_width() == d
+                && mean.len() == d
+                && inner.dim() == d_low
+                && inner.len() == keys.rows(),
+            "inconsistent LeanVec payload: d={d}, d_low={d_low}, {} mean, inner {}x{}, {} keys",
+            mean.len(),
+            inner.len(),
+            inner.dim(),
+            keys.rows()
+        );
+        Ok(LeanVecIndex {
+            d,
+            d_low,
+            comps,
+            mean,
+            inner,
+            keys,
+            rerank,
+            query_aware,
+        })
     }
 
     fn project(&self, query: &[f32]) -> Vec<f32> {
@@ -107,6 +152,23 @@ impl VectorIndex for LeanVecIndex {
         cost.flops += (self.d * self.d_low * 2) as u64; // projection
         cost.flops += (cand.ids.len() * self.d * 2) as u64; // re-rank
         SearchResult { ids, scores, cost }
+    }
+
+    fn spec(&self) -> IndexSpec {
+        IndexSpec::LeanVec(LeanVecSpec {
+            d_low: Some(self.d_low),
+            nlist: self.inner.nlist,
+            query_aware: self.query_aware,
+        })
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        artifact::w_tensor(w, &self.comps)?;
+        artifact::w_f32s(w, &self.mean)?;
+        artifact::w_tensor(w, &self.keys)?;
+        self.inner.write_payload(w)?;
+        artifact::w_u64(w, self.rerank as u64)?;
+        artifact::w_bool(w, self.query_aware)
     }
 }
 

@@ -12,7 +12,16 @@
 //! * [`soar`] — SOAR analog: IVF with redundant spilled assignments
 //! * [`leanvec`] — LeanVec analog: learned linear projection + IVF,
 //!   full-dim rescoring
+//!
+//! Construction goes through the typed [`spec::IndexSpec`] family
+//! (`IndexSpec::build` is the one entry point; `--spec
+//! "ivf(nlist=64)"` parses to it). Built indexes persist as versioned
+//! binary artifacts ([`artifact`]: magic, version, backbone tag, spec
+//! echo, checksum) and groups of them are served from a named
+//! [`catalog::Catalog`] — build once, serve many.
 
+pub mod artifact;
+pub mod catalog;
 pub mod flat;
 pub mod ivf;
 pub mod kmeans;
@@ -20,31 +29,29 @@ pub mod leanvec;
 pub mod pq;
 pub mod scann;
 pub mod soar;
+pub mod spec;
 pub mod sq;
 pub mod traits;
 
+pub use artifact::{load, load_from, save};
+pub use catalog::{Catalog, CatalogEntry};
+pub use spec::{
+    auto_pq_m, leanvec_target_dim, BuildCtx, FlatSpec, IndexSpec, IvfSpec, LeanVecSpec, PqSpec,
+    ScannSpec, SoarSpec, SqSpec,
+};
 pub use traits::{SearchCost, SearchResult, VectorIndex};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::tensor::Tensor;
 
 /// The seven index backbones served by the unified API.
 pub const BACKBONES: [&str; 7] = ["flat", "ivf", "pq", "sq8", "scann", "soar", "leanvec"];
 
-/// Largest PQ subspace count `<= 8` that divides `d`.
-fn pq_m(d: usize) -> usize {
-    for m in [8usize, 4, 2] {
-        if d % m == 0 {
-            return m;
-        }
-    }
-    1
-}
-
-/// Build any backbone by name with shared defaults — the one construction
-/// path the CLI, benches and conformance tests agree on.
-/// `sample_queries` makes LeanVec's projection query-aware when given.
+/// Build any backbone by *name* with that backbone's default knobs — the
+/// stringly construction path kept through the deprecation window. New
+/// code should construct (or parse) a typed [`IndexSpec`] and call
+/// [`IndexSpec::build`], which exposes every knob this shim freezes.
 pub fn build_backend(
     name: &str,
     keys: &Tensor,
@@ -52,23 +59,12 @@ pub fn build_backend(
     nlist: usize,
     seed: u64,
 ) -> Result<Box<dyn VectorIndex>> {
-    let d = keys.row_width();
-    Ok(match name {
-        "flat" => Box::new(flat::FlatIndex::new(keys.clone())),
-        "ivf" => Box::new(ivf::IvfIndex::build(keys, nlist, 15, seed)),
-        "pq" => Box::new(pq::PqIndex::build(keys, pq_m(d), 10, 1.0, seed)),
-        "sq8" => Box::new(sq::SqIndex::build(keys)),
-        "scann" => Box::new(scann::ScannIndex::build(keys, nlist, pq_m(d), 4.0, seed)),
-        "soar" => Box::new(soar::SoarIndex::build(keys, nlist, 6, seed)),
-        "leanvec" => Box::new(leanvec::LeanVecIndex::build(
-            keys,
-            (d / 2).clamp(1, d).max(4.min(d)),
-            nlist,
+    IndexSpec::default_for(name)?
+        .with_nlist(nlist)
+        .build(keys, &BuildCtx {
             sample_queries,
             seed,
-        )),
-        other => bail!("unknown backend '{other}'; expected one of {BACKBONES:?}"),
-    })
+        })
 }
 
 #[cfg(test)]
@@ -87,15 +83,8 @@ mod tests {
             assert_eq!(idx.len(), 200, "{name}");
             assert_eq!(idx.dim(), 16, "{name}");
             assert!(idx.n_cells() >= 1, "{name}");
+            assert_eq!(idx.spec().name(), name);
         }
         assert!(build_backend("hnsw", &keys, None, 4, 7).is_err());
-    }
-
-    #[test]
-    fn pq_m_divides() {
-        assert_eq!(pq_m(16), 8);
-        assert_eq!(pq_m(12), 4);
-        assert_eq!(pq_m(6), 2);
-        assert_eq!(pq_m(7), 1);
     }
 }

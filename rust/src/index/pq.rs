@@ -14,7 +14,13 @@
 //! the ScaNN insight, implemented here as anisotropically re-weighted
 //! Lloyd updates in each subspace.
 
+use std::io::{Read, Write};
+
+use anyhow::{ensure, Result};
+
 use crate::api::Effort;
+use crate::index::artifact;
+use crate::index::spec::{IndexSpec, PqSpec};
 use crate::index::traits::{rerank_depth, SearchCost, SearchResult, TopK, VectorIndex};
 use crate::tensor::{dot, Tensor};
 use crate::util::Rng;
@@ -192,6 +198,31 @@ impl Pq {
         }
         out
     }
+
+    /// Serialize the trained quantizer (shared by PqIndex and ScannIndex
+    /// artifacts).
+    pub(crate) fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        artifact::w_u64(w, self.m as u64)?;
+        artifact::w_u64(w, self.dsub as u64)?;
+        artifact::w_f32s(w, &self.codebooks)
+    }
+
+    /// Deserialize a trained quantizer from an artifact payload.
+    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<Pq> {
+        let m = artifact::r_u64(r)? as usize;
+        let dsub = artifact::r_u64(r)? as usize;
+        ensure!(
+            (1..=65_536).contains(&m) && (1..=65_536).contains(&dsub),
+            "implausible PQ dims m={m} dsub={dsub}"
+        );
+        let codebooks = artifact::r_f32s(r)?;
+        ensure!(
+            codebooks.len() == m * CODE_K * dsub,
+            "PQ codebook size {} != m*{CODE_K}*dsub ({m}*{CODE_K}*{dsub})",
+            codebooks.len()
+        );
+        Ok(Pq { m, dsub, codebooks })
+    }
 }
 
 /// Flat product-quantized index (the FAISS `IndexPQ` analog): one ADC
@@ -208,6 +239,10 @@ pub struct PqIndex {
     keys: Tensor,
     /// Default re-rank depth under `Effort::Auto` / `Effort::Probes`.
     pub rerank: usize,
+    /// Codebook training iterations (spec echo).
+    iters: usize,
+    /// Anisotropic parallel-error weight (spec echo).
+    eta: f32,
 }
 
 impl PqIndex {
@@ -220,9 +255,40 @@ impl PqIndex {
             codes,
             keys: keys.clone(),
             rerank: 32,
+            iters,
+            eta,
         }
     }
 
+    /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
+    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<PqIndex> {
+        let d = artifact::r_u64(r)? as usize;
+        let pq = Pq::read_payload(r)?;
+        let codes = artifact::r_u8s(r)?;
+        let keys = artifact::r_tensor(r)?;
+        let rerank = artifact::r_u64(r)? as usize;
+        let iters = artifact::r_u64(r)? as usize;
+        let eta = artifact::r_f32(r)?;
+        ensure!(
+            d == pq.m * pq.dsub
+                && keys.row_width() == d
+                && codes.len() == keys.rows() * pq.m,
+            "inconsistent PQ payload: d={d}, m={}, dsub={}, {} codes, {} keys",
+            pq.m,
+            pq.dsub,
+            codes.len(),
+            keys.rows()
+        );
+        Ok(PqIndex {
+            d,
+            pq,
+            codes,
+            keys,
+            rerank,
+            iters,
+            eta,
+        })
+    }
 }
 
 impl VectorIndex for PqIndex {
@@ -272,6 +338,24 @@ impl VectorIndex for PqIndex {
                 cells_probed: 0,
             },
         }
+    }
+
+    fn spec(&self) -> IndexSpec {
+        IndexSpec::Pq(PqSpec {
+            m: Some(self.pq.m),
+            iters: self.iters,
+            eta: self.eta,
+        })
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        artifact::w_u64(w, self.d as u64)?;
+        self.pq.write_payload(w)?;
+        artifact::w_u8s(w, &self.codes)?;
+        artifact::w_tensor(w, &self.keys)?;
+        artifact::w_u64(w, self.rerank as u64)?;
+        artifact::w_u64(w, self.iters as u64)?;
+        artifact::w_f32(w, self.eta)
     }
 }
 

@@ -10,9 +10,15 @@
 //! `Effort::Exhaustive` additionally widens the exact re-rank to every
 //! scanned candidate, making the answer exact.
 
+use std::io::{Read, Write};
+
+use anyhow::{ensure, Result};
+
 use crate::api::Effort;
+use crate::index::artifact;
 use crate::index::kmeans::KMeans;
 use crate::index::pq::Pq;
+use crate::index::spec::{IndexSpec, ScannSpec};
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
 use crate::tensor::{dot, Tensor};
 
@@ -28,16 +34,29 @@ pub struct ScannIndex {
     pq: Pq,
     /// Exact re-rank depth (candidates kept from the ADC pass).
     pub rerank: usize,
+    /// PQ codebook training iterations (spec echo).
+    iters: usize,
+    /// Anisotropic parallel-error weight (spec echo).
+    eta: f32,
 }
 
 impl ScannIndex {
-    pub fn build(keys: &Tensor, nlist: usize, m: usize, eta: f32, seed: u64) -> ScannIndex {
+    /// Build: `nlist` coarse cells (IVF-default Lloyd schedule), `m` PQ
+    /// subspaces trained for `iters` iterations at anisotropy `eta`.
+    pub fn build(
+        keys: &Tensor,
+        nlist: usize,
+        m: usize,
+        iters: usize,
+        eta: f32,
+        seed: u64,
+    ) -> ScannIndex {
         let n = keys.rows();
         let d = keys.row_width();
         let km = KMeans::fit(keys, nlist, 15, seed);
         // PQ trained on residual-free vectors (unit-norm data): simpler
         // and adequate at this scale; anisotropy is the differentiator.
-        let pq = Pq::train(keys, m, 10, eta, seed ^ 0x5CA);
+        let pq = Pq::train(keys, m, iters, eta, seed ^ 0x5CA);
 
         let mut counts = vec![0usize; nlist];
         for &a in &km.assign {
@@ -68,7 +87,56 @@ impl ScannIndex {
             offsets,
             pq,
             rerank: 32,
+            iters,
+            eta,
         }
+    }
+
+    /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
+    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<ScannIndex> {
+        let centroids = artifact::r_tensor(r)?;
+        let packed = artifact::r_tensor(r)?;
+        let codes = artifact::r_u8s(r)?;
+        let ids = artifact::r_u32s(r)?;
+        let offsets = artifact::r_usizes(r)?;
+        let pq = Pq::read_payload(r)?;
+        // rerank > len behaves identically to len (at most len candidates
+        // exist), so clamping keeps search semantics while preventing a
+        // crafted huge value from blowing up TopK's preallocation
+        let rerank = (artifact::r_u64(r)? as usize).min(ids.len().max(1));
+        let iters = artifact::r_u64(r)? as usize;
+        let eta = artifact::r_f32(r)?;
+        let nlist = centroids.rows();
+        let d = packed.row_width();
+        ensure!(
+            nlist >= 1
+                && centroids.row_width() == d
+                && d == pq.m * pq.dsub
+                && packed.rows() == ids.len()
+                && codes.len() == ids.len() * pq.m
+                && offsets.len() == nlist + 1
+                && offsets.last().copied() == Some(ids.len())
+                && offsets.windows(2).all(|w| w[0] <= w[1]),
+            "inconsistent ScaNN payload: {} cells, {} packed rows, {} ids, {} codes, {} offsets",
+            nlist,
+            packed.rows(),
+            ids.len(),
+            codes.len(),
+            offsets.len()
+        );
+        Ok(ScannIndex {
+            nlist,
+            d,
+            centroids,
+            packed,
+            codes,
+            ids,
+            offsets,
+            pq,
+            rerank,
+            iters,
+            eta,
+        })
     }
 
     fn search_probes(&self, query: &[f32], k: usize, nprobe: usize, rerank: usize) -> SearchResult {
@@ -143,6 +211,27 @@ impl VectorIndex for ScannIndex {
         };
         self.search_probes(query, k, effort.resolve(self.nlist), rerank)
     }
+
+    fn spec(&self) -> IndexSpec {
+        IndexSpec::Scann(ScannSpec {
+            nlist: self.nlist,
+            m: Some(self.pq.m),
+            iters: self.iters,
+            eta: self.eta,
+        })
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        artifact::w_tensor(w, &self.centroids)?;
+        artifact::w_tensor(w, &self.packed)?;
+        artifact::w_u8s(w, &self.codes)?;
+        artifact::w_u32s(w, &self.ids)?;
+        artifact::w_usizes(w, &self.offsets)?;
+        self.pq.write_payload(w)?;
+        artifact::w_u64(w, self.rerank as u64)?;
+        artifact::w_u64(w, self.iters as u64)?;
+        artifact::w_f32(w, self.eta)
+    }
 }
 
 #[cfg(test)]
@@ -162,7 +251,7 @@ mod tests {
     #[test]
     fn high_probe_recall_reasonable() {
         let keys = unit_keys(600, 32, 1);
-        let scann = ScannIndex::build(&keys, 12, 8, 4.0, 2);
+        let scann = ScannIndex::build(&keys, 12, 8, 10, 4.0, 2);
         let flat = FlatIndex::new(keys.clone());
         let q = unit_keys(40, 32, 3);
         let mut hits = 0;
@@ -179,7 +268,7 @@ mod tests {
     #[test]
     fn exhaustive_effort_is_exact() {
         let keys = unit_keys(400, 32, 10);
-        let scann = ScannIndex::build(&keys, 8, 8, 4.0, 11);
+        let scann = ScannIndex::build(&keys, 8, 8, 10, 4.0, 11);
         let flat = FlatIndex::new(keys.clone());
         let q = unit_keys(15, 32, 12);
         for i in 0..15 {
@@ -194,7 +283,7 @@ mod tests {
         // ADC scoring must cost far fewer flops than exact scan at the
         // same number of keys visited.
         let keys = unit_keys(800, 32, 4);
-        let scann = ScannIndex::build(&keys, 8, 8, 4.0, 5);
+        let scann = ScannIndex::build(&keys, 8, 8, 10, 4.0, 5);
         let q = unit_keys(1, 32, 6);
         let res = scann.search_effort(q.row(0), 1, Effort::Probes(8)); // all cells
         let flat_flops = (800 * 32 * 2) as u64;
@@ -209,7 +298,7 @@ mod tests {
     #[test]
     fn results_sorted_and_unique() {
         let keys = unit_keys(300, 16, 7);
-        let scann = ScannIndex::build(&keys, 6, 4, 4.0, 8);
+        let scann = ScannIndex::build(&keys, 6, 4, 10, 4.0, 8);
         let q = unit_keys(1, 16, 9);
         let res = scann.search_effort(q.row(0), 8, Effort::Probes(3));
         for w in res.scores.windows(2) {

@@ -8,8 +8,14 @@
 //! cell would make the key invisible to a query, the secondary assignment
 //! catches it — fewer probes reach the same recall.
 
+use std::io::{Read, Write};
+
+use anyhow::{ensure, Result};
+
 use crate::api::Effort;
+use crate::index::artifact;
 use crate::index::kmeans::KMeans;
+use crate::index::spec::{IndexSpec, SoarSpec};
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
 use crate::tensor::{dot, Tensor};
 
@@ -21,6 +27,8 @@ pub struct SoarIndex {
     ids: Vec<u32>,
     offsets: Vec<usize>,
     n_keys: usize,
+    /// Runner-up centroids considered per spill (spec echo).
+    spill: usize,
 }
 
 impl SoarIndex {
@@ -97,12 +105,50 @@ impl SoarIndex {
             ids,
             offsets,
             n_keys: n,
+            spill: spill_candidates,
         }
     }
 
     /// Total stored slots (n + spills); storage overhead diagnostic.
     pub fn slots(&self) -> usize {
         self.ids.len()
+    }
+
+    /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
+    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<SoarIndex> {
+        let centroids = artifact::r_tensor(r)?;
+        let packed = artifact::r_tensor(r)?;
+        let ids = artifact::r_u32s(r)?;
+        let offsets = artifact::r_usizes(r)?;
+        let n_keys = artifact::r_u64(r)? as usize;
+        let spill = artifact::r_u64(r)? as usize;
+        let nlist = centroids.rows();
+        let d = packed.row_width();
+        ensure!(
+            nlist >= 1
+                && centroids.row_width() == d
+                && packed.rows() == ids.len()
+                && offsets.len() == nlist + 1
+                && offsets.last().copied() == Some(ids.len())
+                && offsets.windows(2).all(|w| w[0] <= w[1])
+                && n_keys <= ids.len()
+                && ids.iter().all(|&id| (id as usize) < n_keys),
+            "inconsistent SOAR payload: {} cells, {} slots, {} keys, {} offsets",
+            nlist,
+            ids.len(),
+            n_keys,
+            offsets.len()
+        );
+        Ok(SoarIndex {
+            nlist,
+            d,
+            centroids,
+            packed,
+            ids,
+            offsets,
+            n_keys,
+            spill,
+        })
     }
 }
 
@@ -163,6 +209,22 @@ impl VectorIndex for SoarIndex {
 
     fn search_effort(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult {
         self.search_probes(query, k, effort.resolve(self.nlist))
+    }
+
+    fn spec(&self) -> IndexSpec {
+        IndexSpec::Soar(SoarSpec {
+            nlist: self.nlist,
+            spill: self.spill,
+        })
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        artifact::w_tensor(w, &self.centroids)?;
+        artifact::w_tensor(w, &self.packed)?;
+        artifact::w_u32s(w, &self.ids)?;
+        artifact::w_usizes(w, &self.offsets)?;
+        artifact::w_u64(w, self.n_keys as u64)?;
+        artifact::w_u64(w, self.spill as u64)
     }
 }
 

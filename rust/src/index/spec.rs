@@ -1,0 +1,636 @@
+//! Typed index build specs: one validated, parseable description per
+//! backbone, replacing the stringly `build_backend(name, ..)` dispatch
+//! whose knobs (PQ subspaces, Lloyd iterations, anisotropy, spill
+//! candidates, projection dim) were frozen inside `index::mod`.
+//!
+//! An [`IndexSpec`] round-trips through `Display`/`FromStr` — the CLI
+//! accepts `--spec "ivf(nlist=64,iters=15)"` — and builds through one
+//! entry point, [`IndexSpec::build`]. The spec is echoed into every
+//! persisted index artifact (see [`crate::index::artifact`]) and into
+//! the serving [`crate::index::Catalog`] manifest, so a deployment can
+//! always answer "what exactly is this index?".
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::index::{flat, ivf, leanvec, pq, scann, soar, sq, VectorIndex, BACKBONES};
+use crate::tensor::Tensor;
+
+/// Default coarse-cell count for the IVF-family specs (override with
+/// [`IndexSpec::with_nlist`] or the `nlist=` knob).
+pub const DEFAULT_NLIST: usize = 64;
+
+/// Build-time context shared by every backbone: the RNG seed for
+/// k-means/PQ training and an optional query sample that makes
+/// LeanVec's projection query-aware.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BuildCtx<'a> {
+    pub sample_queries: Option<&'a Tensor>,
+    pub seed: u64,
+}
+
+impl BuildCtx<'_> {
+    /// A context with just a seed (no query sample).
+    pub fn seeded(seed: u64) -> BuildCtx<'static> {
+        BuildCtx {
+            sample_queries: None,
+            seed,
+        }
+    }
+}
+
+/// Exhaustive scan; nothing to configure.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FlatSpec;
+
+/// IVF-Flat: `nlist` coarse cells, `iters` Lloyd iterations.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IvfSpec {
+    pub nlist: usize,
+    pub iters: usize,
+}
+
+impl Default for IvfSpec {
+    fn default() -> IvfSpec {
+        IvfSpec {
+            nlist: DEFAULT_NLIST,
+            iters: 15,
+        }
+    }
+}
+
+/// Flat product quantization: `m` subspaces (`None` = largest of
+/// 8/4/2/1 dividing the key dim), `iters` codebook Lloyd iterations,
+/// `eta` anisotropic parallel-error weight (`1` = classic PQ).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PqSpec {
+    pub m: Option<usize>,
+    pub iters: usize,
+    pub eta: f32,
+}
+
+impl Default for PqSpec {
+    fn default() -> PqSpec {
+        PqSpec {
+            m: None,
+            iters: 10,
+            eta: 1.0,
+        }
+    }
+}
+
+/// SQ8 scalar quantization; ranges are derived from the data.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SqSpec;
+
+/// ScaNN analog: IVF cells + anisotropic PQ scoring. `iters` are the PQ
+/// codebook iterations (the coarse quantizer uses the IVF default).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScannSpec {
+    pub nlist: usize,
+    pub m: Option<usize>,
+    pub iters: usize,
+    pub eta: f32,
+}
+
+impl Default for ScannSpec {
+    fn default() -> ScannSpec {
+        ScannSpec {
+            nlist: DEFAULT_NLIST,
+            m: None,
+            iters: 10,
+            eta: 4.0,
+        }
+    }
+}
+
+/// SOAR analog: IVF with spilled secondary assignments chosen among
+/// `spill` runner-up centroids.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SoarSpec {
+    pub nlist: usize,
+    pub spill: usize,
+}
+
+impl Default for SoarSpec {
+    fn default() -> SoarSpec {
+        SoarSpec {
+            nlist: DEFAULT_NLIST,
+            spill: 6,
+        }
+    }
+}
+
+/// LeanVec analog: PCA projection to `d_low` dims (`None` =
+/// [`leanvec_target_dim`]), IVF in the reduced space, full-dim re-rank.
+/// `query_aware` fits the projection on keys ∪ sample queries when the
+/// build context provides a sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LeanVecSpec {
+    pub d_low: Option<usize>,
+    pub nlist: usize,
+    pub query_aware: bool,
+}
+
+impl Default for LeanVecSpec {
+    fn default() -> LeanVecSpec {
+        LeanVecSpec {
+            d_low: None,
+            nlist: DEFAULT_NLIST,
+            query_aware: true,
+        }
+    }
+}
+
+/// Default LeanVec projection dimension for `d`-dim keys: half the
+/// input width, floored at 4 (or at `d` itself when `d < 4`), never
+/// above `d`.
+pub fn leanvec_target_dim(d: usize) -> usize {
+    if d == 0 {
+        return 0;
+    }
+    (d / 2).clamp(1, d).max(4.min(d))
+}
+
+/// Largest PQ subspace count `<= 8` that divides `d` (the `m=auto`
+/// resolution for [`PqSpec`]/[`ScannSpec`]).
+pub fn auto_pq_m(d: usize) -> usize {
+    for m in [8usize, 4, 2] {
+        if d % m == 0 {
+            return m;
+        }
+    }
+    1
+}
+
+fn resolve_pq_m(m: Option<usize>, d: usize) -> Result<usize> {
+    match m {
+        Some(m) => {
+            ensure!(
+                m >= 1 && d % m == 0,
+                "pq m={m} must divide the key dim {d} (try m=auto)"
+            );
+            Ok(m)
+        }
+        None => Ok(auto_pq_m(d)),
+    }
+}
+
+/// A typed, validated build description for one of the seven backbones.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum IndexSpec {
+    Flat(FlatSpec),
+    Ivf(IvfSpec),
+    Pq(PqSpec),
+    Sq(SqSpec),
+    Scann(ScannSpec),
+    Soar(SoarSpec),
+    LeanVec(LeanVecSpec),
+}
+
+impl IndexSpec {
+    /// The backbone tag this spec builds (matches
+    /// [`VectorIndex::name`] and [`crate::index::BACKBONES`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            IndexSpec::Flat(_) => "flat",
+            IndexSpec::Ivf(_) => "ivf",
+            IndexSpec::Pq(_) => "pq",
+            IndexSpec::Sq(_) => "sq8",
+            IndexSpec::Scann(_) => "scann",
+            IndexSpec::Soar(_) => "soar",
+            IndexSpec::LeanVec(_) => "leanvec",
+        }
+    }
+
+    /// The default spec for a backbone name.
+    pub fn default_for(name: &str) -> Result<IndexSpec> {
+        Ok(match name {
+            "flat" => IndexSpec::Flat(FlatSpec),
+            "ivf" => IndexSpec::Ivf(IvfSpec::default()),
+            "pq" => IndexSpec::Pq(PqSpec::default()),
+            "sq8" => IndexSpec::Sq(SqSpec),
+            "scann" => IndexSpec::Scann(ScannSpec::default()),
+            "soar" => IndexSpec::Soar(SoarSpec::default()),
+            "leanvec" => IndexSpec::LeanVec(LeanVecSpec::default()),
+            other => bail!("unknown backbone '{other}'; expected one of {BACKBONES:?}"),
+        })
+    }
+
+    /// Coarse-cell count, for the IVF-family variants.
+    pub fn nlist(&self) -> Option<usize> {
+        match self {
+            IndexSpec::Ivf(s) => Some(s.nlist),
+            IndexSpec::Scann(s) => Some(s.nlist),
+            IndexSpec::Soar(s) => Some(s.nlist),
+            IndexSpec::LeanVec(s) => Some(s.nlist),
+            _ => None,
+        }
+    }
+
+    /// Override `nlist` on the IVF-family variants (no-op on the
+    /// cell-less backbones).
+    pub fn with_nlist(mut self, nlist: usize) -> IndexSpec {
+        match &mut self {
+            IndexSpec::Ivf(s) => s.nlist = nlist,
+            IndexSpec::Scann(s) => s.nlist = nlist,
+            IndexSpec::Soar(s) => s.nlist = nlist,
+            IndexSpec::LeanVec(s) => s.nlist = nlist,
+            _ => {}
+        }
+        self
+    }
+
+    /// Check every knob for internal consistency (data-dependent checks
+    /// like `m | d` happen in [`IndexSpec::build`]).
+    pub fn validate(&self) -> Result<()> {
+        fn pos(v: usize, what: &str, spec: &IndexSpec) -> Result<()> {
+            ensure!(v >= 1, "{what} must be >= 1 in '{spec}'");
+            Ok(())
+        }
+        fn eta_ok(eta: f32, spec: &IndexSpec) -> Result<()> {
+            ensure!(
+                eta.is_finite() && eta > 0.0,
+                "eta must be finite and > 0 in '{spec}', got {eta}"
+            );
+            Ok(())
+        }
+        match self {
+            IndexSpec::Flat(_) | IndexSpec::Sq(_) => Ok(()),
+            IndexSpec::Ivf(s) => {
+                pos(s.nlist, "nlist", self)?;
+                pos(s.iters, "iters", self)
+            }
+            IndexSpec::Pq(s) => {
+                if let Some(m) = s.m {
+                    pos(m, "m", self)?;
+                }
+                pos(s.iters, "iters", self)?;
+                eta_ok(s.eta, self)
+            }
+            IndexSpec::Scann(s) => {
+                pos(s.nlist, "nlist", self)?;
+                if let Some(m) = s.m {
+                    pos(m, "m", self)?;
+                }
+                pos(s.iters, "iters", self)?;
+                eta_ok(s.eta, self)
+            }
+            IndexSpec::Soar(s) => {
+                pos(s.nlist, "nlist", self)?;
+                pos(s.spill, "spill", self)
+            }
+            IndexSpec::LeanVec(s) => {
+                if let Some(v) = s.d_low {
+                    pos(v, "d_low", self)?;
+                }
+                pos(s.nlist, "nlist", self)
+            }
+        }
+    }
+
+    /// Build the backbone this spec describes over `keys` — the one
+    /// construction entry point behind the CLI, benches, catalog and
+    /// conformance tests. `auto` knobs are resolved against the key
+    /// dimensionality here.
+    pub fn build(&self, keys: &Tensor, ctx: &BuildCtx) -> Result<Box<dyn VectorIndex>> {
+        self.validate()?;
+        let n = keys.rows();
+        let d = keys.row_width();
+        ensure!(n > 0, "cannot build '{}' over an empty key set", self.name());
+        if let Some(nlist) = self.nlist() {
+            ensure!(
+                nlist <= n,
+                "nlist={nlist} exceeds the {n} keys available for '{self}'"
+            );
+        }
+        Ok(match self {
+            IndexSpec::Flat(_) => Box::new(flat::FlatIndex::new(keys.clone())),
+            IndexSpec::Ivf(s) => Box::new(ivf::IvfIndex::build(keys, s.nlist, s.iters, ctx.seed)),
+            IndexSpec::Pq(s) => {
+                let m = resolve_pq_m(s.m, d)?;
+                Box::new(pq::PqIndex::build(keys, m, s.iters, s.eta, ctx.seed))
+            }
+            IndexSpec::Sq(_) => Box::new(sq::SqIndex::build(keys)),
+            IndexSpec::Scann(s) => {
+                let m = resolve_pq_m(s.m, d)?;
+                Box::new(scann::ScannIndex::build(
+                    keys, s.nlist, m, s.iters, s.eta, ctx.seed,
+                ))
+            }
+            IndexSpec::Soar(s) => {
+                Box::new(soar::SoarIndex::build(keys, s.nlist, s.spill, ctx.seed))
+            }
+            IndexSpec::LeanVec(s) => {
+                let d_low = match s.d_low {
+                    Some(v) => {
+                        ensure!(v <= d, "d_low={v} exceeds the key dim {d} in '{self}'");
+                        v
+                    }
+                    None => leanvec_target_dim(d),
+                };
+                let queries = if s.query_aware {
+                    ctx.sample_queries
+                } else {
+                    None
+                };
+                Box::new(leanvec::LeanVecIndex::build(
+                    keys, d_low, s.nlist, queries, ctx.seed,
+                ))
+            }
+        })
+    }
+}
+
+fn fmt_auto(v: Option<usize>) -> String {
+    match v {
+        Some(v) => v.to_string(),
+        None => "auto".to_string(),
+    }
+}
+
+impl fmt::Display for IndexSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IndexSpec::Flat(_) => write!(f, "flat"),
+            IndexSpec::Ivf(s) => write!(f, "ivf(nlist={},iters={})", s.nlist, s.iters),
+            IndexSpec::Pq(s) => {
+                write!(f, "pq(m={},iters={},eta={})", fmt_auto(s.m), s.iters, s.eta)
+            }
+            IndexSpec::Sq(_) => write!(f, "sq8"),
+            IndexSpec::Scann(s) => write!(
+                f,
+                "scann(nlist={},m={},iters={},eta={})",
+                s.nlist,
+                fmt_auto(s.m),
+                s.iters,
+                s.eta
+            ),
+            IndexSpec::Soar(s) => write!(f, "soar(nlist={},spill={})", s.nlist, s.spill),
+            IndexSpec::LeanVec(s) => write!(
+                f,
+                "leanvec(d_low={},nlist={},query_aware={})",
+                fmt_auto(s.d_low),
+                s.nlist,
+                s.query_aware
+            ),
+        }
+    }
+}
+
+/// `key=value` knob list parsed out of `name(k=v,...)`; tracks leftover
+/// keys so typos are rejected instead of silently ignored.
+struct Knobs(Vec<(String, String)>);
+
+impl Knobs {
+    fn parse(body: &str) -> Result<Knobs> {
+        let mut pairs: Vec<(String, String)> = Vec::new();
+        for part in body.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("knob '{part}' is not key=value"))?;
+            let (k, v) = (k.trim().to_string(), v.trim().to_string());
+            ensure!(
+                !pairs.iter().any(|(seen, _)| *seen == k),
+                "duplicate knob '{k}'"
+            );
+            pairs.push((k, v));
+        }
+        Ok(Knobs(pairs))
+    }
+
+    fn take(&mut self, key: &str) -> Option<String> {
+        self.0
+            .iter()
+            .position(|(k, _)| k == key)
+            .map(|i| self.0.remove(i).1)
+    }
+
+    fn usize_or(&mut self, key: &str, default: usize) -> Result<usize> {
+        match self.take(key) {
+            Some(v) => v.parse().map_err(|e| anyhow!("knob {key}={v}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    fn f32_or(&mut self, key: &str, default: f32) -> Result<f32> {
+        match self.take(key) {
+            Some(v) => v.parse().map_err(|e| anyhow!("knob {key}={v}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    fn bool_or(&mut self, key: &str, default: bool) -> Result<bool> {
+        match self.take(key) {
+            Some(v) => v.parse().map_err(|e| anyhow!("knob {key}={v}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    fn auto_or(&mut self, key: &str, default: Option<usize>) -> Result<Option<usize>> {
+        match self.take(key) {
+            Some(v) if v == "auto" => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow!("knob {key}={v}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    fn finish(self, name: &str) -> Result<()> {
+        if !self.0.is_empty() {
+            let keys: Vec<&str> = self.0.iter().map(|(k, _)| k.as_str()).collect();
+            bail!("unknown knob(s) {keys:?} for backbone '{name}'");
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for IndexSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<IndexSpec> {
+        let s = s.trim();
+        let (name, body) = match s.split_once('(') {
+            Some((n, rest)) => {
+                let rest = rest.trim_end();
+                ensure!(rest.ends_with(')'), "unclosed '(' in index spec '{s}'");
+                (n.trim(), &rest[..rest.len() - 1])
+            }
+            None => (s, ""),
+        };
+        let mut knobs = Knobs::parse(body)?;
+        let spec = match name {
+            "flat" => IndexSpec::Flat(FlatSpec),
+            "sq8" => IndexSpec::Sq(SqSpec),
+            "ivf" => {
+                let dflt = IvfSpec::default();
+                IndexSpec::Ivf(IvfSpec {
+                    nlist: knobs.usize_or("nlist", dflt.nlist)?,
+                    iters: knobs.usize_or("iters", dflt.iters)?,
+                })
+            }
+            "pq" => {
+                let dflt = PqSpec::default();
+                IndexSpec::Pq(PqSpec {
+                    m: knobs.auto_or("m", dflt.m)?,
+                    iters: knobs.usize_or("iters", dflt.iters)?,
+                    eta: knobs.f32_or("eta", dflt.eta)?,
+                })
+            }
+            "scann" => {
+                let dflt = ScannSpec::default();
+                IndexSpec::Scann(ScannSpec {
+                    nlist: knobs.usize_or("nlist", dflt.nlist)?,
+                    m: knobs.auto_or("m", dflt.m)?,
+                    iters: knobs.usize_or("iters", dflt.iters)?,
+                    eta: knobs.f32_or("eta", dflt.eta)?,
+                })
+            }
+            "soar" => {
+                let dflt = SoarSpec::default();
+                IndexSpec::Soar(SoarSpec {
+                    nlist: knobs.usize_or("nlist", dflt.nlist)?,
+                    spill: knobs.usize_or("spill", dflt.spill)?,
+                })
+            }
+            "leanvec" => {
+                let dflt = LeanVecSpec::default();
+                IndexSpec::LeanVec(LeanVecSpec {
+                    d_low: knobs.auto_or("d_low", dflt.d_low)?,
+                    nlist: knobs.usize_or("nlist", dflt.nlist)?,
+                    query_aware: knobs.bool_or("query_aware", dflt.query_aware)?,
+                })
+            }
+            other => bail!("unknown backbone '{other}'; expected one of {BACKBONES:?}"),
+        };
+        knobs.finish(name)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leanvec_target_dim_halves_with_floor() {
+        assert_eq!(leanvec_target_dim(0), 0);
+        assert_eq!(leanvec_target_dim(1), 1);
+        assert_eq!(leanvec_target_dim(2), 2);
+        assert_eq!(leanvec_target_dim(3), 3);
+        assert_eq!(leanvec_target_dim(4), 4);
+        assert_eq!(leanvec_target_dim(6), 4);
+        assert_eq!(leanvec_target_dim(8), 4);
+        assert_eq!(leanvec_target_dim(16), 8);
+        assert_eq!(leanvec_target_dim(64), 32);
+        for d in 1..=128 {
+            let t = leanvec_target_dim(d);
+            assert!((1..=d).contains(&t), "d={d} -> {t}");
+        }
+    }
+
+    #[test]
+    fn auto_pq_m_divides() {
+        assert_eq!(auto_pq_m(16), 8);
+        assert_eq!(auto_pq_m(12), 4);
+        assert_eq!(auto_pq_m(6), 2);
+        assert_eq!(auto_pq_m(7), 1);
+    }
+
+    #[test]
+    fn defaults_cover_every_backbone() {
+        for name in BACKBONES {
+            let spec = IndexSpec::default_for(name).unwrap();
+            assert_eq!(spec.name(), name);
+            spec.validate().unwrap();
+        }
+        assert!(IndexSpec::default_for("hnsw").is_err());
+    }
+
+    #[test]
+    fn with_nlist_touches_only_cell_backbones() {
+        for name in BACKBONES {
+            let spec = IndexSpec::default_for(name).unwrap().with_nlist(5);
+            match name {
+                "flat" | "pq" | "sq8" => assert_eq!(spec.nlist(), None, "{name}"),
+                _ => assert_eq!(spec.nlist(), Some(5), "{name}"),
+            }
+        }
+    }
+
+    #[test]
+    fn parse_tolerates_whitespace_and_empty_parens() {
+        let a: IndexSpec = " ivf( nlist = 8 , iters = 2 ) ".parse().unwrap();
+        assert_eq!(
+            a,
+            IndexSpec::Ivf(IvfSpec { nlist: 8, iters: 2 })
+        );
+        let b: IndexSpec = "ivf()".parse().unwrap();
+        assert_eq!(b, IndexSpec::Ivf(IvfSpec::default()));
+        let c: IndexSpec = "flat".parse().unwrap();
+        assert_eq!(c, IndexSpec::Flat(FlatSpec));
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in [
+            "hnsw",
+            "ivf(nlist=0)",
+            "ivf(iters=0)",
+            "ivf(bogus=1)",
+            "ivf(nlist=x)",
+            "ivf(nlist=4",
+            "ivf(nlist=4,nlist=5)",
+            "ivf(nlist)",
+            "pq(m=0)",
+            "pq(eta=0)",
+            "pq(eta=nan)",
+            "soar(spill=0)",
+            "leanvec(d_low=0)",
+            "leanvec(query_aware=maybe)",
+        ] {
+            assert!(bad.parse::<IndexSpec>().is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn build_resolves_auto_knobs_and_checks_data() {
+        use crate::tensor::normalize_rows;
+        use crate::util::Rng;
+        let mut keys = Tensor::zeros(&[60, 12]);
+        Rng::new(3).fill_normal(keys.data_mut(), 1.0);
+        normalize_rows(&mut keys);
+        let ctx = BuildCtx::seeded(7);
+        // auto m resolves to 4 for d=12
+        let idx = IndexSpec::default_for("pq").unwrap().build(&keys, &ctx).unwrap();
+        assert_eq!(
+            idx.spec(),
+            IndexSpec::Pq(PqSpec {
+                m: Some(4),
+                ..PqSpec::default()
+            })
+        );
+        // explicit m must divide d
+        assert!("pq(m=5)".parse::<IndexSpec>().unwrap().build(&keys, &ctx).is_err());
+        // nlist larger than the key count is rejected, not a panic
+        assert!("ivf(nlist=100)"
+            .parse::<IndexSpec>()
+            .unwrap()
+            .build(&keys, &ctx)
+            .is_err());
+        // d_low larger than d is rejected
+        assert!("leanvec(d_low=20,nlist=4)"
+            .parse::<IndexSpec>()
+            .unwrap()
+            .build(&keys, &ctx)
+            .is_err());
+    }
+}

@@ -10,7 +10,13 @@
 //! `Effort::Frac(f)` re-ranks `⌈f·n⌉` candidates exactly and
 //! `Effort::Exhaustive` re-ranks everything (exact).
 
+use std::io::{Read, Write};
+
+use anyhow::{ensure, Result};
+
 use crate::api::Effort;
+use crate::index::artifact;
+use crate::index::spec::{IndexSpec, SqSpec};
 use crate::index::traits::{rerank_depth, SearchCost, SearchResult, TopK, VectorIndex};
 use crate::tensor::{dot, Tensor};
 
@@ -75,6 +81,34 @@ impl SqIndex {
         s + q_dot_lo
     }
 
+    /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
+    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<SqIndex> {
+        let d = artifact::r_u64(r)? as usize;
+        let codes = artifact::r_u8s(r)?;
+        let lo = artifact::r_f32s(r)?;
+        let scale = artifact::r_f32s(r)?;
+        let keys = artifact::r_tensor(r)?;
+        let rerank = artifact::r_u64(r)? as usize;
+        ensure!(
+            lo.len() == d
+                && scale.len() == d
+                && keys.row_width() == d
+                && codes.len() == keys.rows() * d,
+            "inconsistent SQ8 payload: d={d}, {} lo, {} scale, {} codes, {} keys",
+            lo.len(),
+            scale.len(),
+            codes.len(),
+            keys.rows()
+        );
+        Ok(SqIndex {
+            d,
+            codes,
+            lo,
+            scale,
+            keys,
+            rerank,
+        })
+    }
 }
 
 impl VectorIndex for SqIndex {
@@ -122,6 +156,19 @@ impl VectorIndex for SqIndex {
                 cells_probed: 0,
             },
         }
+    }
+
+    fn spec(&self) -> IndexSpec {
+        IndexSpec::Sq(SqSpec)
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        artifact::w_u64(w, self.d as u64)?;
+        artifact::w_u8s(w, &self.codes)?;
+        artifact::w_f32s(w, &self.lo)?;
+        artifact::w_f32s(w, &self.scale)?;
+        artifact::w_tensor(w, &self.keys)?;
+        artifact::w_u64(w, self.rerank as u64)
     }
 }
 

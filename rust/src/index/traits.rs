@@ -9,7 +9,12 @@
 //! `search(query, k, nprobe)` is gone from the public surface; batching,
 //! query mapping and routing live in [`crate::api`].
 
+use std::io::Write;
+
+use anyhow::Result;
+
 use crate::api::Effort;
+use crate::index::spec::IndexSpec;
 
 /// Cost accounting for one backbone scan, used for the FLOPs axes of
 /// every Pareto plot. Distances are multiply-add pairs (2 flops each).
@@ -67,6 +72,33 @@ pub trait VectorIndex: Send + Sync {
     /// Top-`k` search at a typed effort level. [`Effort::Exhaustive`]
     /// must return the exact MIPS answer on every backbone.
     fn search_effort(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult;
+
+    /// The typed [`IndexSpec`] this index was built from, reconstructed
+    /// from its stored knobs (auto knobs appear resolved). Echoed into
+    /// the artifact header and the catalog manifest.
+    fn spec(&self) -> IndexSpec;
+
+    /// Serialize the backbone-specific payload (trained state + packed
+    /// storage, no framing). Each backbone pairs this with an inherent
+    /// `read_payload` constructor; the framed artifact around it lives
+    /// in [`crate::index::artifact`].
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()>;
+
+    /// Serialize the full versioned artifact: header (magic, version,
+    /// backbone tag, dim, len, spec echo), payload, checksum. Reload
+    /// with [`crate::index::load`] / [`crate::index::load_from`].
+    fn save(&self, w: &mut dyn Write) -> Result<()> {
+        let mut payload = Vec::new();
+        self.write_payload(&mut payload)?;
+        crate::index::artifact::write_framed(
+            w,
+            self.name(),
+            self.dim(),
+            self.len(),
+            &self.spec().to_string(),
+            &payload,
+        )
+    }
 }
 
 /// Translate an [`Effort`] into an exact re-rank depth for exhaustive

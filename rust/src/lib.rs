@@ -21,6 +21,16 @@
 //! * the serving [`coordinator`] accepts the same request type over its
 //!   client handle and returns the same cost breakdown.
 //!
+//! ## The typed build/persist lifecycle
+//!
+//! Construction mirrors the query surface: a parseable
+//! [`index::IndexSpec`] (`"scann(nlist=64,eta=4)"`) carries every
+//! backbone knob and builds through one entry point
+//! ([`index::IndexSpec::build`]). Built indexes serialize to versioned,
+//! checksummed artifacts ([`index::artifact`]) and are served by name
+//! from an [`index::Catalog`] — `amips build` once, `amips serve
+//! --catalog` on every replica, no k-means/PQ retraining at startup.
+//!
 //! ```no_run
 //! use amips::api::{Effort, SearchRequest, Searcher};
 //! use amips::index::ivf::IvfIndex;

@@ -5,8 +5,13 @@
 //! ```text
 //! amips list                                  # configs + datasets
 //! amips gen-data  --dataset nq-s [--c 10]     # prepare + report a dataset
-//! amips search    [--backend ivf] [--n 20000] [--d 32] [--k 10]
-//!                                             # pure-Rust API demo/sweep
+//! amips search    [--backend ivf | --spec "ivf(nlist=64)"] [--n 20000]
+//!                 [--d 32] [--k 10]           # pure-Rust API demo/sweep
+//! amips build     --catalog DIR --name NAME [--spec "scann(nlist=64)"]
+//!                 [--keys f.amt | --n 20000 --d 32]
+//!                                             # train once, persist artifact
+//! amips serve     --catalog DIR [--collection NAME] [--requests N]
+//!                                             # serve prebuilt artifacts
 //! amips train     --config <name> [--steps N] [--lr F] [--verbose]   (xla)
 //! amips eval      --config <name> [--steps N]                        (xla)
 //! amips route     --dataset nq-s --config <name> [--topk 1..5]       (xla)
@@ -31,6 +36,10 @@ fn run() -> Result<()> {
         Some("list") => cmd_list(),
         Some("gen-data") => cmd_gen_data(&args),
         Some("search") => cmd_search(&args),
+        Some("build") => cmd_build(&args),
+        // `serve --catalog` is pure Rust (prebuilt artifacts); plain
+        // `serve` drives a trained KeyNet mapper and needs `xla`.
+        Some("serve") if args.has("catalog") => cmd_serve_catalog(&args),
         Some("train") => xla_cmds::cmd_train(&args),
         Some("eval") => xla_cmds::cmd_eval(&args),
         Some("route") => xla_cmds::cmd_route(&args),
@@ -38,7 +47,9 @@ fn run() -> Result<()> {
         Some(other) => bail!("unknown command {other}; try `amips list`"),
         None => {
             println!("amips {} — amortized MIPS coordinator", amips::version());
-            println!("commands: list | gen-data | search | train | eval | route | serve");
+            println!(
+                "commands: list | gen-data | search | build | serve --catalog | train | eval | route | serve"
+            );
             Ok(())
         }
     }
@@ -101,9 +112,10 @@ fn cmd_search(args: &Args) -> Result<()> {
     use amips::api::{recall_against_truth, Effort, SearchRequest, Searcher};
     use amips::data::dataset::PrepareOpts;
     use amips::data::{CorpusSpec, Dataset};
-    use amips::index::VectorIndex;
+    use amips::index::{BuildCtx, IndexSpec, VectorIndex};
 
     let backend = args.get_or("backend", "ivf").to_string();
+    let spec_arg = args.get("spec").map(str::to_string);
     let n = args.get_usize("n", 20_000)?;
     let d = args.get_usize("d", 32)?;
     let nq = args.get_usize("queries", 1_000)?;
@@ -132,7 +144,19 @@ fn cmd_search(args: &Args) -> Result<()> {
         },
     );
     let nlist = fixtures::default_nlist(ds.n_keys());
-    let index = amips::index::build_backend(&backend, &ds.keys, Some(&ds.train.x), nlist, seed)?;
+    // an explicit --spec carries its own knobs; --backend gets defaults
+    // with the dataset-scaled nlist
+    let spec = match &spec_arg {
+        Some(s) => s.parse::<IndexSpec>()?,
+        None => IndexSpec::default_for(&backend)?.with_nlist(nlist),
+    };
+    let index = spec.build(
+        &ds.keys,
+        &BuildCtx {
+            sample_queries: Some(&ds.train.x),
+            seed,
+        },
+    )?;
     let truth: Vec<usize> = (0..ds.val.gt.n_queries())
         .map(|q| ds.val.gt.global_top1(q).0)
         .collect();
@@ -166,7 +190,176 @@ fn cmd_search(args: &Args) -> Result<()> {
         ]);
     }
     rep.note("Effort::Exhaustive is exact on every backbone; R@k measures the exact top-1 within the returned k");
+    rep.note(format!("spec: {}", index.spec()));
     rep.emit("search");
+    Ok(())
+}
+
+/// Build an index from a typed `IndexSpec` and persist it into a catalog
+/// of artifacts — the "build once" half of build-once/serve-many. Pure
+/// Rust: keys come from an `.amt` tensor file or a synthetic corpus.
+fn cmd_build(args: &Args) -> Result<()> {
+    use amips::index::{BuildCtx, Catalog, IndexSpec, VectorIndex};
+    use amips::tensor::{normalize_rows, Tensor};
+    use amips::util::{Rng, Timer};
+
+    let catalog_dir = args.require("catalog")?.to_string();
+    let name = args.require("name")?.to_string();
+    let mut spec = match args.get("spec") {
+        Some(s) => s.parse::<IndexSpec>()?,
+        None => IndexSpec::default_for(args.get_or("backend", "ivf"))?,
+    };
+    if args.has("nlist") {
+        spec = spec.with_nlist(args.get_usize("nlist", 0)?);
+    }
+    let keys_path = args.get("keys").map(str::to_string);
+    let queries_path = args.get("queries").map(str::to_string);
+    let n = args.get_usize("n", 20_000)?;
+    let d = args.get_usize("d", 32)?;
+    let seed = args.get_u64("seed", 42)?;
+    args.reject_unknown()?;
+
+    let keys = match &keys_path {
+        Some(p) => Tensor::load(std::path::Path::new(p))?,
+        None => {
+            let mut t = Tensor::zeros(&[n, d]);
+            Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+            normalize_rows(&mut t);
+            t
+        }
+    };
+    let sample_queries = match &queries_path {
+        Some(p) => Some(Tensor::load(std::path::Path::new(p))?),
+        None => None,
+    };
+    // manifest-only append: existing artifacts in the catalog are not
+    // deserialized just to add one more collection
+    let timer = Timer::start();
+    let entry = Catalog::append_collection(
+        &catalog_dir,
+        &name,
+        &spec,
+        &keys,
+        &BuildCtx {
+            sample_queries: sample_queries.as_ref(),
+            seed,
+        },
+    )?;
+    let build_s = timer.elapsed_s();
+    let bytes = std::fs::metadata(&entry.path)?.len();
+
+    let mut rep = Report::new(&format!("build {name} -> {}", entry.path.display()));
+    rep.header(&["collection", "spec", "keys", "d", "artifact KiB", "build s"]);
+    rep.row(&[
+        name.clone(),
+        entry.index.spec().to_string(),
+        entry.index.len().to_string(),
+        entry.index.dim().to_string(),
+        format!("{:.1}", bytes as f64 / 1024.0),
+        format!("{build_s:.2}"),
+    ]);
+    rep.note(format!(
+        "serve it with: amips serve --catalog {catalog_dir} --collection {name}"
+    ));
+    rep.emit("build");
+    Ok(())
+}
+
+/// Serve prebuilt collections straight from a catalog of artifacts —
+/// the "serve many" half: no k-means/PQ training runs on startup.
+fn cmd_serve_catalog(args: &Args) -> Result<()> {
+    use amips::api::{Effort, SearchRequest};
+    use amips::coordinator::{BatchPolicy, Server, ServerConfig};
+    use amips::index::{Catalog, VectorIndex};
+    use amips::tensor::{normalize_rows, Tensor};
+    use amips::util::{Rng, Timer};
+    use anyhow::ensure;
+
+    let dir = args.require("catalog")?.to_string();
+    let collection = args.get("collection").map(str::to_string);
+    let requests = args.get_usize("requests", 256)?;
+    let k = args.get_usize("k", 10)?;
+    let nprobe = args.get_usize("nprobe", 4)?;
+    let clients = args.get_usize("clients", 2)?.max(1);
+    let seed = args.get_u64("seed", 7)?;
+    args.reject_unknown()?;
+
+    // resolve the collection name from the manifest alone, then load
+    // exactly that artifact — startup cost scales with the served
+    // index, not the whole catalog
+    let collection = match collection {
+        Some(c) => c,
+        None => {
+            let names = Catalog::names_on_disk(&dir)?;
+            ensure!(
+                !names.is_empty(),
+                "catalog {dir} has no collections; create one with `amips build`"
+            );
+            ensure!(
+                names.len() == 1,
+                "catalog has {} collections ({}); pick one with --collection",
+                names.len(),
+                names.join(", ")
+            );
+            names.into_iter().next().unwrap()
+        }
+    };
+    let timer = Timer::start();
+    let entry = Catalog::open_collection(&dir, &collection)?;
+    let load_s = timer.elapsed_s();
+    let d = entry.index.dim();
+    let default_request = SearchRequest::top_k(k).effort(Effort::Probes(nprobe));
+    let (server, handle) = Server::start(
+        ServerConfig::unmapped(BatchPolicy::default(), default_request),
+        entry.index.clone(),
+    )?;
+
+    // closed-loop demo traffic: unit-norm gaussian queries
+    let mut q = Tensor::zeros(&[requests.max(1), d]);
+    Rng::new(seed).fill_normal(q.data_mut(), 1.0);
+    normalize_rows(&mut q);
+    let t0 = std::time::Instant::now();
+    let mut served = 0usize;
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for t in 0..clients {
+            let handle = handle.clone();
+            let q = &q;
+            joins.push(s.spawn(move || -> usize {
+                let mut ok = 0;
+                for i in (t..requests).step_by(clients) {
+                    if handle.search(q.row(i).to_vec()).is_ok() {
+                        ok += 1;
+                    }
+                }
+                ok
+            }));
+        }
+        for j in joins {
+            served += j.join().unwrap();
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.latency_stats();
+    drop(handle);
+    server.shutdown()?;
+
+    let mut rep = Report::new(&format!(
+        "serve --catalog {dir} :: {collection} [{}]",
+        entry.index.spec()
+    ));
+    rep.header(&["keys", "d", "requests", "qps", "p50 ms", "p95 ms", "load s"]);
+    rep.row(&[
+        entry.index.len().to_string(),
+        d.to_string(),
+        format!("{served}/{requests}"),
+        format!("{:.0}", requests as f64 / wall.max(1e-9)),
+        format!("{:.2}", stats.quantile_s(0.5) * 1e3),
+        format!("{:.2}", stats.quantile_s(0.95) * 1e3),
+        format!("{load_s:.2}"),
+    ]);
+    rep.note("no k-means/PQ training ran on startup: the index was deserialized from its artifact");
+    rep.emit("serve_catalog");
     Ok(())
 }
 

@@ -16,6 +16,10 @@ pub struct Tensor {
 const MAGIC: &[u8; 4] = b"AMT1";
 /// Magic for a named-tensor container (`.amts`): checkpoints, datasets.
 const MAGIC_SET: &[u8; 4] = b"AMTS";
+/// Upper bound on deserialized element counts: corrupt or hostile size
+/// fields must fail fast instead of attempting a huge allocation (2^31
+/// f32s = 8 GiB, far above anything this repo writes).
+const MAX_ELEMS: usize = 1 << 31;
 
 impl Tensor {
     pub fn zeros(shape: &[usize]) -> Tensor {
@@ -143,9 +147,18 @@ impl Tensor {
         let mut b8 = [0u8; 8];
         for _ in 0..rank {
             r.read_exact(&mut b8)?;
-            shape.push(u64::from_le_bytes(b8) as usize);
+            let dim = u64::from_le_bytes(b8);
+            // zero dims would break the rows()*row_width()==len invariant
+            // that row() relies on (no writer in this repo produces them)
+            if dim == 0 || dim > MAX_ELEMS as u64 {
+                bail!("implausible tensor dim {dim}");
+            }
+            shape.push(dim as usize);
         }
-        let n: usize = shape.iter().product();
+        let n = match shape.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d)) {
+            Some(n) if n <= MAX_ELEMS => n,
+            _ => bail!("implausible tensor element count for shape {shape:?}"),
+        };
         let mut raw = vec![0u8; n * 4];
         r.read_exact(&mut raw)?;
         let data = raw
@@ -231,6 +244,26 @@ mod tests {
     fn bad_magic_rejected() {
         let buf = b"NOPE0000".to_vec();
         assert!(Tensor::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn implausible_sizes_rejected_without_allocating() {
+        // crafted header with absurd dims must error, not abort on an
+        // enormous (or overflow-wrapped) allocation
+        for dims in [
+            vec![1u64 << 33, 1u64 << 33],
+            vec![1u64 << 40],
+            vec![1 << 20, 1 << 20],
+            vec![5, 0], // zero dims break the rows/row_width invariant
+        ] {
+            let mut buf = Vec::new();
+            buf.extend_from_slice(MAGIC);
+            buf.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+            for d in &dims {
+                buf.extend_from_slice(&d.to_le_bytes());
+            }
+            assert!(Tensor::read_from(&mut buf.as_slice()).is_err(), "{dims:?}");
+        }
     }
 
     #[test]

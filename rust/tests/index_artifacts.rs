@@ -1,0 +1,286 @@
+//! Versioned index artifacts (pure Rust — runs on default features):
+//! save → load → search round-trips with bit-identical hits for all
+//! seven backbones, corrupt-header / truncated-file / checksum error
+//! paths, and the catalog's build-once / serve-many flow.
+
+use amips::api::{Effort, SearchRequest, Searcher};
+use amips::coordinator::{BatchPolicy, Server, ServerConfig};
+use amips::index::{load_from, BuildCtx, Catalog, IndexSpec, VectorIndex, BACKBONES};
+use amips::tensor::{normalize_rows, Tensor};
+use amips::util::Rng;
+use std::time::Duration;
+
+const N: usize = 400;
+const D: usize = 16;
+const NLIST: usize = 8;
+
+fn unit(shape: &[usize], seed: u64) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+    normalize_rows(&mut t);
+    t
+}
+
+fn build(name: &str, keys: &Tensor, queries: &Tensor) -> Box<dyn VectorIndex> {
+    IndexSpec::default_for(name)
+        .unwrap()
+        .with_nlist(NLIST)
+        .build(
+            keys,
+            &BuildCtx {
+                sample_queries: Some(queries),
+                seed: 42,
+            },
+        )
+        .unwrap()
+}
+
+fn save_bytes(idx: &dyn VectorIndex) -> Vec<u8> {
+    let mut buf = Vec::new();
+    idx.save(&mut buf).unwrap();
+    buf
+}
+
+#[test]
+fn every_backbone_round_trips_with_bit_identical_hits() {
+    let keys = unit(&[N, D], 1);
+    let queries = unit(&[12, D], 2);
+    for name in BACKBONES {
+        let orig = build(name, &keys, &queries);
+        let bytes = save_bytes(orig.as_ref());
+        let loaded = load_from(&mut bytes.as_slice()).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(loaded.name(), name);
+        assert_eq!(loaded.len(), orig.len(), "{name}");
+        assert_eq!(loaded.dim(), orig.dim(), "{name}");
+        assert_eq!(loaded.n_cells(), orig.n_cells(), "{name}");
+        assert_eq!(loaded.spec(), orig.spec(), "{name}");
+        for effort in [
+            Effort::Probes(1),
+            Effort::Probes(3),
+            Effort::Auto,
+            Effort::Frac(0.5),
+            Effort::Exhaustive,
+        ] {
+            let req = SearchRequest::top_k(5).effort(effort);
+            let a = orig.search(&queries, &req).unwrap();
+            let b = loaded.search(&queries, &req).unwrap();
+            for q in 0..12 {
+                assert_eq!(a.hits[q].ids, b.hits[q].ids, "{name} {effort:?} q{q}");
+                assert_eq!(a.hits[q].scores, b.hits[q].scores, "{name} {effort:?} q{q}");
+            }
+            assert_eq!(a.cost.keys_scanned, b.cost.keys_scanned, "{name} {effort:?}");
+            assert_eq!(a.cost.cells_probed, b.cost.cells_probed, "{name} {effort:?}");
+        }
+    }
+}
+
+#[test]
+fn saving_twice_is_deterministic() {
+    let keys = unit(&[150, D], 3);
+    let idx = build("scann", &keys, &keys);
+    assert_eq!(save_bytes(idx.as_ref()), save_bytes(idx.as_ref()));
+}
+
+#[test]
+fn file_round_trip_via_path_helpers() {
+    let keys = unit(&[200, D], 4);
+    let queries = unit(&[5, D], 5);
+    let idx = build("leanvec", &keys, &queries);
+    let path = std::env::temp_dir().join(format!("amips-artifact-{}.ami", std::process::id()));
+    amips::index::save(&path, idx.as_ref()).unwrap();
+    let loaded = amips::index::load(&path).unwrap();
+    let req = SearchRequest::top_k(3).effort(Effort::Exhaustive);
+    let a = idx.search(&queries, &req).unwrap();
+    let b = loaded.search(&queries, &req).unwrap();
+    for q in 0..5 {
+        assert_eq!(a.hits[q].ids, b.hits[q].ids, "q{q}");
+        assert_eq!(a.hits[q].scores, b.hits[q].scores, "q{q}");
+    }
+    std::fs::remove_file(&path).ok();
+    // missing file is an error with the path in it
+    let err = amips::index::load(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("amips-artifact"), "{err:#}");
+}
+
+#[test]
+fn corrupt_and_truncated_artifacts_are_rejected() {
+    let keys = unit(&[120, D], 6);
+    let idx = build("ivf", &keys, &keys);
+    let bytes = save_bytes(idx.as_ref());
+
+    // pristine copy loads
+    assert!(load_from(&mut bytes.as_slice()).is_ok());
+
+    // bad magic
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xFF;
+    assert!(load_from(&mut bad.as_slice()).is_err());
+
+    // unsupported format version
+    let mut bad = bytes.clone();
+    bad[4] = 0xEE;
+    let err = load_from(&mut bad.as_slice()).unwrap_err();
+    assert!(format!("{err:#}").contains("version"), "{err:#}");
+
+    // unknown backbone tag (corrupt the tag byte; checksum covers only
+    // the payload, so this reaches the dispatch)
+    let mut bad = bytes.clone();
+    bad[12] = b'z';
+    let err = load_from(&mut bad.as_slice()).unwrap_err();
+    assert!(format!("{err:#}").contains("backbone"), "{err:#}");
+
+    // flipped payload byte -> checksum mismatch
+    let mut bad = bytes.clone();
+    let p = bad.len() - 9; // last payload byte (checksum is the final 8)
+    bad[p] ^= 0x01;
+    let err = load_from(&mut bad.as_slice()).unwrap_err();
+    assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+
+    // truncation at assorted prefixes, including mid-header,
+    // mid-payload and a missing checksum tail
+    for cut in [0usize, 3, 7, 16, bytes.len() / 2, bytes.len() - 12, bytes.len() - 1] {
+        assert!(
+            load_from(&mut &bytes[..cut]).is_err(),
+            "cut at {cut} of {} should fail",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn catalog_build_once_serve_many() {
+    let root = std::env::temp_dir().join(format!("amips-catalog-it-{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    let keys = unit(&[300, D], 7);
+    let queries = unit(&[6, D], 8);
+    let req = SearchRequest::top_k(4).effort(Effort::Probes(3));
+
+    // --- build once -----------------------------------------------------
+    {
+        let mut catalog = Catalog::create(&root).unwrap();
+        for name in ["ivf", "scann"] {
+            let spec = IndexSpec::default_for(name).unwrap().with_nlist(NLIST);
+            let entry = catalog
+                .build_collection(&format!("col-{name}"), &spec, &keys, &BuildCtx::seeded(11))
+                .unwrap();
+            assert!(entry.path.exists(), "{name}");
+        }
+        // duplicate and malformed names are typed errors
+        let flat = IndexSpec::default_for("flat").unwrap();
+        assert!(catalog
+            .build_collection("col-ivf", &flat, &keys, &BuildCtx::default())
+            .is_err());
+        assert!(catalog
+            .build_collection("bad/name", &flat, &keys, &BuildCtx::default())
+            .is_err());
+    }
+
+    // create() must refuse to clobber the populated catalog
+    assert!(Catalog::create(&root).is_err());
+
+    // --- serve many (fresh process stand-in: reopen from disk) ----------
+    let catalog = Catalog::open(&root).unwrap();
+    assert_eq!(catalog.names(), vec!["col-ivf", "col-scann"]);
+    assert_eq!(
+        Catalog::names_on_disk(&root).unwrap(),
+        vec!["col-ivf".to_string(), "col-scann".to_string()]
+    );
+
+    // single-collection load path: only the requested artifact is read
+    let solo = Catalog::open_collection(&root, "col-ivf").unwrap();
+    assert_eq!(solo.name, "col-ivf");
+    assert_eq!(solo.index.name(), "ivf");
+    let missing = Catalog::open_collection(&root, "nope").unwrap_err();
+    assert!(format!("{missing:#}").contains("col-ivf"), "{missing:#}");
+    for name in ["ivf", "scann"] {
+        let entry = catalog.get(&format!("col-{name}")).unwrap();
+        // manifest keeps the registered spec; the index echoes resolved knobs
+        assert_eq!(
+            entry.spec,
+            IndexSpec::default_for(name).unwrap().with_nlist(NLIST)
+        );
+        let fresh = IndexSpec::default_for(name)
+            .unwrap()
+            .with_nlist(NLIST)
+            .build(&keys, &BuildCtx::seeded(11))
+            .unwrap();
+        assert_eq!(entry.index.spec(), fresh.spec(), "{name}");
+        let a = entry.index.search(&queries, &req).unwrap();
+        let b = fresh.search(&queries, &req).unwrap();
+        for q in 0..6 {
+            assert_eq!(a.hits[q].ids, b.hits[q].ids, "{name} q{q}");
+            assert_eq!(a.hits[q].scores, b.hits[q].scores, "{name} q{q}");
+        }
+    }
+
+    // the threaded server starts straight from the catalog
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+    };
+    let (server, handle) =
+        Server::start_from_catalog(&catalog, "col-ivf", ServerConfig::unmapped(policy, req))
+            .unwrap();
+    let resp = handle.search(queries.row(0).to_vec()).unwrap();
+    assert_eq!(resp.hits.len(), 4);
+    drop(handle);
+    server.shutdown().unwrap();
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn append_collection_is_manifest_only_and_creates_catalogs() {
+    let root = std::env::temp_dir().join(format!("amips-catalog-append-{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    let keys = unit(&[150, D], 10);
+    let ivf = IndexSpec::default_for("ivf").unwrap().with_nlist(4);
+    // creates the catalog on first append
+    Catalog::append_collection(&root, "a", &ivf, &keys, &BuildCtx::seeded(1)).unwrap();
+    // appending must work even when an existing artifact is unreadable:
+    // it parses the manifest but never deserializes sibling artifacts
+    let a_path = root.join("a.ami");
+    std::fs::write(&a_path, b"garbage").unwrap();
+    let flat = IndexSpec::default_for("flat").unwrap();
+    Catalog::append_collection(&root, "b", &flat, &keys, &BuildCtx::seeded(2)).unwrap();
+    assert_eq!(
+        Catalog::names_on_disk(&root).unwrap(),
+        vec!["a".to_string(), "b".to_string()]
+    );
+    // duplicate names still rejected from the manifest alone
+    assert!(Catalog::append_collection(&root, "b", &flat, &keys, &BuildCtx::seeded(3)).is_err());
+    // collection b is individually loadable despite a's corruption
+    let b = Catalog::open_collection(&root, "b").unwrap();
+    assert_eq!(b.index.len(), 150);
+    assert!(Catalog::open_collection(&root, "a").is_err());
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn catalog_open_rejects_manifest_artifact_mismatch() {
+    let root = std::env::temp_dir().join(format!("amips-catalog-bad-{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    let keys = unit(&[100, D], 9);
+    {
+        let mut catalog = Catalog::create(&root).unwrap();
+        let spec = IndexSpec::default_for("ivf").unwrap().with_nlist(4);
+        catalog
+            .build_collection("docs", &spec, &keys, &BuildCtx::seeded(12))
+            .unwrap();
+    }
+    // lie about the backbone in the manifest (a *valid* spec of another
+    // backbone): open() must refuse the tag mismatch
+    let manifest = root.join("catalog.tsv");
+    let text = std::fs::read_to_string(&manifest).unwrap();
+    assert!(text.contains("ivf(nlist=4,iters=15)"), "{text}");
+    std::fs::write(
+        &manifest,
+        text.replace("ivf(nlist=4,iters=15)", "soar(nlist=4,spill=6)"),
+    )
+    .unwrap();
+    assert!(Catalog::open(&root).is_err());
+    // a malformed line is rejected too
+    std::fs::write(&manifest, "only-one-field\n").unwrap();
+    assert!(Catalog::open(&root).is_err());
+    std::fs::remove_dir_all(&root).ok();
+}

@@ -12,7 +12,7 @@ use amips::api::{
 };
 use amips::coordinator::router::CentroidRouter;
 use amips::index::ivf::IvfIndex;
-use amips::index::{build_backend, flat::FlatIndex, VectorIndex, BACKBONES};
+use amips::index::{flat::FlatIndex, BuildCtx, IndexSpec, VectorIndex, BACKBONES};
 use amips::tensor::{normalize_rows, Tensor};
 use amips::util::Rng;
 
@@ -28,6 +28,21 @@ const D: usize = 16;
 const NQ: usize = 25;
 const NLIST: usize = 8;
 
+/// The canonical typed build path (what `build_backend` now shims to).
+fn build(name: &str, keys: &Tensor, queries: Option<&Tensor>, seed: u64) -> Box<dyn VectorIndex> {
+    IndexSpec::default_for(name)
+        .unwrap()
+        .with_nlist(NLIST)
+        .build(
+            keys,
+            &BuildCtx {
+                sample_queries: queries,
+                seed,
+            },
+        )
+        .unwrap()
+}
+
 #[test]
 fn every_backbone_matches_flat_top1_at_max_effort() {
     let keys = unit(&[N, D], 1);
@@ -36,7 +51,7 @@ fn every_backbone_matches_flat_top1_at_max_effort() {
     let req = SearchRequest::top_k(3).effort(Effort::Exhaustive);
     let truth = flat.search(&queries, &req).unwrap();
     for name in BACKBONES {
-        let index = build_backend(name, &keys, Some(&queries), NLIST, 42).unwrap();
+        let index = build(name, &keys, Some(&queries), 42);
         assert_eq!(index.num_keys(), N, "{name}");
         let resp = index.search(&queries, &req).unwrap();
         assert_eq!(resp.n_queries(), NQ, "{name}");
@@ -67,7 +82,7 @@ fn cost_breakdown_monotone_in_probes() {
     let keys = unit(&[N, D], 3);
     let queries = unit(&[NQ, D], 4);
     for name in ["ivf", "scann", "soar", "leanvec"] {
-        let index = build_backend(name, &keys, None, NLIST, 43).unwrap();
+        let index = build(name, &keys, None, 43);
         assert!(index.n_cells() > 1, "{name}");
         let mut prev: Option<amips::api::CostBreakdown> = None;
         for probes in 1..=NLIST {
@@ -97,7 +112,7 @@ fn cost_breakdown_monotone_in_probes() {
 fn effort_frac_and_auto_resolve_sensibly() {
     let keys = unit(&[N, D], 5);
     let queries = unit(&[4, D], 6);
-    let index = build_backend("ivf", &keys, None, NLIST, 44).unwrap();
+    let index = build("ivf", &keys, None, 44);
     let full = index
         .search(&queries, &SearchRequest::top_k(2).effort(Effort::Frac(1.0)))
         .unwrap();
@@ -191,7 +206,7 @@ fn searcher_trait_objects_compose() {
     let keys = unit(&[N, D], 14);
     let queries = unit(&[6, D], 15);
     let req = SearchRequest::top_k(3).effort(Effort::Exhaustive);
-    let index = build_backend("ivf", &keys, None, NLIST, 45).unwrap();
+    let index = build("ivf", &keys, None, 45);
     let map = LinearQueryMap::identity(D);
     let wrapper = MappedSearcher::mapped(index.as_ref(), &map);
     let searchers: Vec<&dyn Searcher> = vec![&wrapper];

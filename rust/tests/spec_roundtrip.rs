@@ -1,0 +1,153 @@
+//! The typed `IndexSpec` surface (pure Rust — runs on default
+//! features): Display/parse round-trips for every backbone, knob
+//! validation, the named LeanVec target-dim helper, and
+//! `build_backend` ↔ `IndexSpec::build` equivalence during the
+//! deprecation window.
+
+use amips::api::{Effort, SearchRequest, Searcher};
+use amips::index::{
+    auto_pq_m, build_backend, leanvec_target_dim, BuildCtx, IndexSpec, VectorIndex, BACKBONES,
+};
+use amips::tensor::{normalize_rows, Tensor};
+use amips::util::Rng;
+
+fn unit(shape: &[usize], seed: u64) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+    normalize_rows(&mut t);
+    t
+}
+
+#[test]
+fn display_parse_round_trip_for_every_backbone() {
+    for name in BACKBONES {
+        let spec = IndexSpec::default_for(name).unwrap();
+        let text = spec.to_string();
+        let back: IndexSpec = text.parse().unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(back, spec, "{name}: '{text}'");
+        assert_eq!(back.name(), name);
+        // Display is a fixpoint under parse
+        assert_eq!(back.to_string(), text, "{name}");
+    }
+}
+
+#[test]
+fn explicit_knobs_round_trip_verbatim() {
+    for text in [
+        "flat",
+        "sq8",
+        "ivf(nlist=32,iters=7)",
+        "pq(m=4,iters=3,eta=2.5)",
+        "pq(m=auto,iters=10,eta=1)",
+        "scann(nlist=16,m=8,iters=5,eta=4)",
+        "soar(nlist=24,spill=3)",
+        "leanvec(d_low=12,nlist=16,query_aware=false)",
+        "leanvec(d_low=auto,nlist=64,query_aware=true)",
+    ] {
+        let spec: IndexSpec = text.parse().unwrap_or_else(|e| panic!("{text}: {e:#}"));
+        assert_eq!(spec.to_string(), text, "'{text}' did not round-trip");
+    }
+}
+
+#[test]
+fn parse_fills_missing_knobs_with_defaults() {
+    let a: IndexSpec = "ivf(nlist=12)".parse().unwrap();
+    let b = IndexSpec::default_for("ivf").unwrap().with_nlist(12);
+    assert_eq!(a, b);
+    // effort knobs untouched by nlist-only overrides
+    let c: IndexSpec = "scann()".parse().unwrap();
+    assert_eq!(c, IndexSpec::default_for("scann").unwrap());
+}
+
+#[test]
+fn parse_rejects_invalid_specs() {
+    for bad in [
+        "",
+        "hnsw",
+        "ivf(nlist=0)",
+        "ivf(iters=0)",
+        "ivf(bogus=1)",
+        "ivf(nlist=x)",
+        "ivf(nlist=4",
+        "ivf(nlist=4,nlist=5)",
+        "ivf(nlist)",
+        "pq(m=0)",
+        "pq(eta=0)",
+        "pq(eta=nan)",
+        "scann(eta=-1)",
+        "soar(spill=0)",
+        "leanvec(d_low=0)",
+        "leanvec(query_aware=maybe)",
+    ] {
+        assert!(bad.parse::<IndexSpec>().is_err(), "'{bad}' should not parse");
+    }
+}
+
+#[test]
+fn leanvec_target_dim_matches_previous_inline_expression() {
+    // the helper replaces `(d / 2).clamp(1, d).max(4.min(d))`
+    for d in 1..=256 {
+        assert_eq!(leanvec_target_dim(d), (d / 2).clamp(1, d).max(4.min(d)), "d={d}");
+    }
+    assert_eq!(leanvec_target_dim(32), 16);
+    assert_eq!(leanvec_target_dim(6), 4);
+    assert_eq!(leanvec_target_dim(3), 3);
+}
+
+#[test]
+fn auto_pq_m_prefers_largest_divisor() {
+    assert_eq!(auto_pq_m(32), 8);
+    assert_eq!(auto_pq_m(20), 4);
+    assert_eq!(auto_pq_m(10), 2);
+    assert_eq!(auto_pq_m(9), 1);
+}
+
+#[test]
+fn build_backend_matches_index_spec_build() {
+    // deprecation-window contract: the stringly shim and the typed path
+    // produce identical indexes (same defaults, same seeds, same hits)
+    let keys = unit(&[300, 16], 1);
+    let queries = unit(&[10, 16], 2);
+    for name in BACKBONES {
+        let legacy = build_backend(name, &keys, Some(&queries), 6, 9).unwrap();
+        let typed = IndexSpec::default_for(name)
+            .unwrap()
+            .with_nlist(6)
+            .build(
+                &keys,
+                &BuildCtx {
+                    sample_queries: Some(&queries),
+                    seed: 9,
+                },
+            )
+            .unwrap();
+        assert_eq!(typed.spec(), legacy.spec(), "{name}");
+        for effort in [Effort::Probes(2), Effort::Exhaustive] {
+            let req = SearchRequest::top_k(5).effort(effort);
+            let a = legacy.search(&queries, &req).unwrap();
+            let b = typed.search(&queries, &req).unwrap();
+            for q in 0..10 {
+                assert_eq!(a.hits[q].ids, b.hits[q].ids, "{name} {effort:?} q{q}");
+                assert_eq!(a.hits[q].scores, b.hits[q].scores, "{name} {effort:?} q{q}");
+            }
+        }
+    }
+}
+
+#[test]
+fn spec_echo_resolves_auto_knobs() {
+    let keys = unit(&[200, 16], 3);
+    let ctx = BuildCtx::seeded(4);
+    let pq = IndexSpec::default_for("pq").unwrap().build(&keys, &ctx).unwrap();
+    assert_eq!(pq.spec().to_string(), "pq(m=8,iters=10,eta=1)");
+    let lv = "leanvec(nlist=4)"
+        .parse::<IndexSpec>()
+        .unwrap()
+        .build(&keys, &ctx)
+        .unwrap();
+    // d=16 -> d_low=8; no query sample was provided, so the echo says so
+    assert_eq!(
+        lv.spec().to_string(),
+        "leanvec(d_low=8,nlist=4,query_aware=false)"
+    );
+}
