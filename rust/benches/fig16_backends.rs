@@ -27,10 +27,20 @@ fn main() -> Result<()> {
     let manifest = fixtures::load_manifest()?;
     let engine = Engine::new(manifest.dir.clone())?;
 
-    let backends: Vec<&str> = match &backend_filter {
-        Some(b) => vec![b.as_str()],
-        None if quick => vec!["ivf", "scann"],
-        None => vec!["ivf", "pq", "sq8", "scann", "soar", "leanvec"],
+    // entries are backbone names or full spec strings (anything with a
+    // '(' is parsed as a spec; bare names get the dataset-scaled nlist)
+    let backends: Vec<String> = match &backend_filter {
+        Some(b) => vec![b.clone()],
+        None if quick => vec!["ivf".into(), "scann".into()],
+        None => vec![
+            "ivf".into(),
+            "pq".into(),
+            "sq8".into(),
+            "scann".into(),
+            "soar".into(),
+            "leanvec".into(),
+            "sharded".into(),
+        ],
     };
     let datasets: Vec<&str> = match &dataset_filter {
         Some(d) => vec![d.as_str()],
@@ -58,15 +68,22 @@ fn main() -> Result<()> {
             .collect();
 
         for backend in &backends {
-            let index = amips::index::IndexSpec::default_for(backend)?
-                .with_nlist(nlist)
-                .build(
-                    &ds.keys,
-                    &amips::index::BuildCtx {
-                        sample_queries: Some(&ds.train.x),
-                        seed: 42,
-                    },
-                )?;
+            // "sharded" expands to 4 shards of IVF with the coarse-cell
+            // budget split across them (same total cells as plain ivf)
+            let spec: amips::index::IndexSpec = if backend == "sharded" {
+                format!("sharded(shards=4,inner=ivf(nlist={}))", (nlist / 4).max(1)).parse()?
+            } else if backend.contains('(') {
+                backend.parse()?
+            } else {
+                amips::index::IndexSpec::default_for(backend)?.with_nlist(nlist)
+            };
+            let index = spec.build(
+                &ds.keys,
+                &amips::index::BuildCtx {
+                    sample_queries: Some(&ds.train.x),
+                    seed: 42,
+                },
+            )?;
             let mut rep = Report::new(&format!(
                 "Fig 16-27 grid: {backend} on {dataset} (nlist={nlist})"
             ));

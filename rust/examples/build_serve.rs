@@ -17,7 +17,7 @@ use amips::api::{Effort, SearchRequest, Searcher};
 use amips::coordinator::{BatchPolicy, Server, ServerConfig};
 use amips::index::{BuildCtx, Catalog, IndexSpec, VectorIndex};
 use amips::tensor::{normalize_rows, Tensor};
-use amips::util::{Rng, Timer};
+use amips::util::{Rng, TempDir, Timer};
 use anyhow::Result;
 
 fn unit(shape: &[usize], seed: u64) -> Tensor {
@@ -28,19 +28,21 @@ fn unit(shape: &[usize], seed: u64) -> Tensor {
 }
 
 fn main() -> Result<()> {
-    let root = std::env::temp_dir().join(format!("amips-build-serve-{}", std::process::id()));
-    std::fs::remove_dir_all(&root).ok(); // a crashed earlier run may have left a catalog here
+    let tmp = TempDir::new("amips-build-serve"); // removed on drop, even after a crash mid-run
+    let root = tmp.join("catalog");
     let keys = unit(&[10_000, 32], 1);
     let sample = unit(&[256, 32], 2);
     let queries = unit(&[16, 32], 3);
 
-    // 1. build once: typed specs -> persisted artifacts
+    // 1. build once: typed specs -> persisted artifacts (the sharded
+    //    spec partitions the keys and builds one IVF per shard)
     {
         let mut catalog = Catalog::create(&root)?;
         for spec_str in [
             "ivf(nlist=64)",
             "scann(nlist=64,eta=4)",
             "leanvec(d_low=8,nlist=64)",
+            "sharded(shards=4,inner=ivf(nlist=16))",
         ] {
             let spec: IndexSpec = spec_str.parse()?;
             let timer = Timer::start();
@@ -82,23 +84,25 @@ fn main() -> Result<()> {
         );
     }
 
-    // 3. the same artifact behind the threaded server
-    let (server, handle) = Server::start_from_catalog(
-        &catalog,
-        "docs-ivf",
-        ServerConfig::unmapped(BatchPolicy::default(), req),
-    )?;
-    for i in 0..4 {
-        let resp = handle.search(queries.row(i).to_vec())?;
-        println!(
-            "server q{i}: top1 id {:?} ({} keys scanned)",
-            resp.hits.ids.first(),
-            resp.cost.keys_scanned
-        );
+    // 3. the same artifacts behind the threaded server — the sharded
+    //    collection serves through the identical path
+    for collection in ["docs-ivf", "docs-sharded"] {
+        let (server, handle) = Server::start_from_catalog(
+            &catalog,
+            collection,
+            ServerConfig::unmapped(BatchPolicy::default(), req),
+        )?;
+        for i in 0..4 {
+            let resp = handle.search(queries.row(i).to_vec())?;
+            println!(
+                "{collection} q{i}: top1 id {:?} ({} keys scanned)",
+                resp.hits.ids.first(),
+                resp.cost.keys_scanned
+            );
+        }
+        drop(handle);
+        server.shutdown()?;
     }
-    drop(handle);
-    server.shutdown()?;
-    std::fs::remove_dir_all(&root).ok();
     println!("\nbuild_serve OK");
     Ok(())
 }

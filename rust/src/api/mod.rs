@@ -25,7 +25,10 @@
 //! Backbones are built from typed [`crate::index::IndexSpec`]s and can
 //! be persisted/reloaded as versioned artifacts — a reloaded index (or
 //! a whole [`crate::index::Catalog`] of them) serves this API
-//! identically to a freshly built one.
+//! identically to a freshly built one. That includes the composite
+//! sharded backbone (`"sharded(shards=8,inner=ivf(nlist=64))"`), which
+//! fans each query out across per-partition indexes and merges their
+//! top-k — callers see one [`Searcher`] with summed costs either way.
 //!
 //! ```no_run
 //! use amips::api::{Effort, SearchRequest, Searcher};
@@ -49,3 +52,7 @@ pub use request::{Effort, QueryMode, SearchRequest};
 pub use response::{recall_against_truth, CostBreakdown, Hits, SearchResponse};
 pub use routed::RoutedSearcher;
 pub use searcher::Searcher;
+
+// the ordered-parallel-map helper behind the blanket Searcher impl,
+// shared with other fan-out sites (e.g. index::shard)
+pub(crate) use searcher::batch_map;

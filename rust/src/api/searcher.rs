@@ -1,8 +1,10 @@
 //! The batch-first [`Searcher`] trait and its blanket implementation over
-//! every index backbone. Wrappers ([`crate::api::MappedSearcher`],
-//! [`crate::api::RoutedSearcher`], future sharded/cached searchers)
-//! implement the same trait, so every bench, example and the server
-//! compose against one polymorphic surface.
+//! every index backbone — including the composite
+//! [`crate::index::ShardedIndex`], whose per-query shard fan-out nests
+//! inside the batch parallelism here. Wrappers
+//! ([`crate::api::MappedSearcher`], [`crate::api::RoutedSearcher`],
+//! future cached searchers) implement the same trait, so every bench,
+//! example and the server compose against one polymorphic surface.
 
 use anyhow::{bail, Result};
 use std::sync::Mutex;

@@ -484,8 +484,9 @@ mod tests {
     #[test]
     fn server_starts_from_a_prebuilt_catalog() {
         use crate::index::{BuildCtx, Catalog, IndexSpec};
-        let root = std::env::temp_dir().join(format!("amips-server-catalog-{}", std::process::id()));
-        std::fs::remove_dir_all(&root).ok();
+        use crate::util::TempDir;
+        let tmp = TempDir::new("amips-server-catalog");
+        let root = tmp.join("catalog");
         let keys = unit(&[200, 8], 20);
         let spec = IndexSpec::default_for("ivf").unwrap().with_nlist(4);
         {
@@ -521,7 +522,41 @@ mod tests {
             ServerConfig::unmapped(policy(), req)
         )
         .is_err());
-        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn server_serves_a_sharded_collection() {
+        use crate::index::{BuildCtx, Catalog, IndexSpec};
+        use crate::util::TempDir;
+        let tmp = TempDir::new("amips-server-sharded");
+        let root = tmp.join("catalog");
+        let keys = unit(&[240, 8], 30);
+        let spec: IndexSpec = "sharded(shards=4,inner=ivf(nlist=4))".parse().unwrap();
+        {
+            let mut catalog = Catalog::create(&root).unwrap();
+            catalog
+                .build_collection("docs", &spec, &keys, &BuildCtx::seeded(31))
+                .unwrap();
+        }
+        let catalog = Catalog::open(&root).unwrap();
+        let entry = catalog.get("docs").unwrap();
+        assert_eq!(entry.index.name(), "sharded");
+        let req = SearchRequest::top_k(5).effort(Effort::Exhaustive);
+        let (server, handle) =
+            Server::start_from_catalog(&catalog, "docs", ServerConfig::unmapped(policy(), req))
+                .unwrap();
+        let q = unit(&[3, 8], 32);
+        for i in 0..3 {
+            let resp = handle.search(q.row(i).to_vec()).unwrap();
+            // the server answer equals a direct fan-out over the same index
+            let direct = entry.index.search_effort(q.row(i), 5, Effort::Exhaustive);
+            assert_eq!(resp.hits.ids, direct.ids);
+            assert_eq!(resp.hits.scores, direct.scores);
+            // merged cost sums every shard's exhaustive scan
+            assert_eq!(resp.cost.keys_scanned, 240);
+        }
+        drop(handle);
+        server.shutdown().unwrap();
     }
 
     #[test]

@@ -29,7 +29,7 @@ use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::index::{flat, ivf, leanvec, pq, scann, soar, sq, VectorIndex};
+use crate::index::{flat, ivf, leanvec, pq, scann, shard, soar, sq, VectorIndex};
 use crate::tensor::Tensor;
 
 /// Artifact magic bytes.
@@ -283,6 +283,7 @@ pub fn load_from(r: &mut dyn Read) -> Result<Box<dyn VectorIndex>> {
         "scann" => Box::new(scann::ScannIndex::read_payload(&mut cur)?),
         "soar" => Box::new(soar::SoarIndex::read_payload(&mut cur)?),
         "leanvec" => Box::new(leanvec::LeanVecIndex::read_payload(&mut cur)?),
+        "sharded" => Box::new(shard::ShardedIndex::read_payload(&mut cur)?),
         other => bail!("unknown backbone tag '{other}' in index artifact"),
     };
     ensure!(

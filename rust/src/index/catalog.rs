@@ -165,7 +165,7 @@ impl Catalog {
             .with_context(|| format!("reading catalog manifest {}", manifest.display()))?;
         let rows = manifest_rows(&text, &manifest)?;
         match rows.iter().find(|(n, _, _)| n == name) {
-            Some((n, spec, file)) => load_entry(&root, n, *spec, file),
+            Some((n, spec, file)) => load_entry(&root, n, spec.clone(), file),
             None => bail!(
                 "catalog {} has no collection '{name}' (available: {})",
                 root.display(),
@@ -251,7 +251,7 @@ impl Catalog {
             name.to_string(),
             CatalogEntry {
                 name: name.to_string(),
-                spec: *spec,
+                spec: spec.clone(),
                 path,
                 index: Arc::from(index),
             },
@@ -295,12 +295,12 @@ impl Catalog {
         let file = format!("{name}.{}", artifact::EXTENSION);
         let path = root.join(&file);
         artifact::save(&path, index.as_ref())?;
-        rows.push((name.to_string(), *spec, file));
+        rows.push((name.to_string(), spec.clone(), file));
         rows.sort_by(|a, b| a.0.cmp(&b.0));
         write_manifest_rows(&root, &rows)?;
         Ok(CatalogEntry {
             name: name.to_string(),
-            spec: *spec,
+            spec: spec.clone(),
             path,
             index: Arc::from(index),
         })
@@ -316,7 +316,7 @@ impl Catalog {
                     .file_name()
                     .and_then(|f| f.to_str())
                     .context("artifact path has no utf8 file name")?;
-                Ok((e.name.clone(), e.spec, file.to_string()))
+                Ok((e.name.clone(), e.spec.clone(), file.to_string()))
             })
             .collect::<Result<_>>()?;
         write_manifest_rows(&self.root, &rows)

@@ -12,6 +12,8 @@
 //! * [`soar`] — SOAR analog: IVF with redundant spilled assignments
 //! * [`leanvec`] — LeanVec analog: learned linear projection + IVF,
 //!   full-dim rescoring
+//! * [`shard`] — sharded serving: any leaf backbone per key partition,
+//!   fan-out search + global top-k merge (`sharded(shards=8,inner=...)`)
 //!
 //! Construction goes through the typed [`spec::IndexSpec`] family
 //! (`IndexSpec::build` is the one entry point; `--spec
@@ -28,6 +30,7 @@ pub mod kmeans;
 pub mod leanvec;
 pub mod pq;
 pub mod scann;
+pub mod shard;
 pub mod soar;
 pub mod spec;
 pub mod sq;
@@ -35,9 +38,10 @@ pub mod traits;
 
 pub use artifact::{load, load_from, save};
 pub use catalog::{Catalog, CatalogEntry};
+pub use shard::ShardedIndex;
 pub use spec::{
     auto_pq_m, leanvec_target_dim, BuildCtx, FlatSpec, IndexSpec, IvfSpec, LeanVecSpec, PqSpec,
-    ScannSpec, SoarSpec, SqSpec,
+    ScannSpec, ShardAssign, ShardedSpec, SoarSpec, SqSpec,
 };
 pub use traits::{SearchCost, SearchResult, VectorIndex};
 
@@ -45,7 +49,9 @@ use anyhow::Result;
 
 use crate::tensor::Tensor;
 
-/// The seven index backbones served by the unified API.
+/// The seven *leaf* index backbones served by the unified API. The
+/// composite `"sharded"` backbone wraps any of these per key partition
+/// (see [`shard`]) and is addressed through the spec grammar.
 pub const BACKBONES: [&str; 7] = ["flat", "ivf", "pq", "sq8", "scann", "soar", "leanvec"];
 
 /// Build any backbone by *name* with that backbone's default knobs — the
@@ -85,6 +91,10 @@ mod tests {
             assert!(idx.n_cells() >= 1, "{name}");
             assert_eq!(idx.spec().name(), name);
         }
+        // the composite backbone builds through the same shim
+        let idx = build_backend("sharded", &keys, None, 4, 7).unwrap();
+        assert_eq!((idx.len(), idx.dim()), (200, 16));
+        assert_eq!(idx.spec().name(), "sharded");
         assert!(build_backend("hnsw", &keys, None, 4, 7).is_err());
     }
 }

@@ -1,0 +1,401 @@
+//! Sharded serving: partition the key set across N shards, build any
+//! leaf backbone per shard from one inner [`IndexSpec`], fan search out
+//! across the shards on the shared thread pool, and merge per-shard
+//! top-k into a global top-k with shard-local ids remapped back to
+//! global key ids.
+//!
+//! This is the partition-then-score backbone of large-scale MIPS
+//! serving (ScaNN-style): one index per process caps database size and
+//! leaves cores idle on large scans, while shards scale both. The merge
+//! relies on the [`TopK`] invariant that merging per-shard top-k lists
+//! equals top-k over the concatenated stream (ties broken toward lower
+//! global id, NaN ranked worst) — property-tested in
+//! `tests/properties.rs` — so a sharded flat index is *bit-identical*
+//! to an unsharded [`crate::index::flat::FlatIndex`] at
+//! [`Effort::Exhaustive`].
+//!
+//! Shard assignment is deterministic and arithmetic
+//! ([`ShardAssign::RoundRobin`] interleaves ids, `Contiguous` cuts
+//! ranges), so the local→global remap costs no memory and artifacts
+//! stay small: the persisted payload is the assignment mode plus each
+//! shard's own framed artifact (header + checksum), giving per-shard
+//! integrity checking for free on reload.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::api::{batch_map, Effort};
+use crate::index::artifact;
+use crate::index::spec::{BuildCtx, IndexSpec, ShardAssign, ShardedSpec};
+use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
+use crate::tensor::Tensor;
+use crate::util::threads::in_parallel_region;
+
+/// Upper bound on the shard count — enforced symmetrically by
+/// [`IndexSpec::validate`] at build/parse time and by
+/// [`ShardedIndex::read_payload`] at load time (a corrupt count in an
+/// artifact must fail fast instead of looping over garbage, and every
+/// index that builds must reload).
+pub const MAX_SHARDS: usize = 65_536;
+
+/// Per-shard sizes for `n` keys over `shards` partitions: both
+/// assignment modes balance to within one key (`n/shards` each, the
+/// first `n % shards` shards taking one extra).
+pub fn shard_sizes(n: usize, shards: usize) -> Vec<usize> {
+    let base = n / shards;
+    let rem = n % shards;
+    (0..shards).map(|s| base + usize::from(s < rem)).collect()
+}
+
+/// Global key ids owned by shard `s` (ascending).
+fn shard_member_ids(n: usize, shards: usize, assign: ShardAssign, s: usize) -> Vec<usize> {
+    match assign {
+        ShardAssign::RoundRobin => (s..n).step_by(shards).collect(),
+        ShardAssign::Contiguous => {
+            let sizes = shard_sizes(n, shards);
+            let start: usize = sizes[..s].iter().sum();
+            (start..start + sizes[s]).collect()
+        }
+    }
+}
+
+/// N shards of one inner backbone behind a single [`VectorIndex`].
+pub struct ShardedIndex {
+    shards: Vec<Box<dyn VectorIndex>>,
+    assign: ShardAssign,
+    /// Start of each shard's global-id range (contiguous mode only;
+    /// empty for round-robin, where the remap is `local * S + s`).
+    starts: Vec<usize>,
+    len: usize,
+    dim: usize,
+}
+
+impl ShardedIndex {
+    /// Partition `keys` per `spec` and build the inner backbone over
+    /// each shard (seed offset by shard index so per-shard k-means/PQ
+    /// training draws independent streams).
+    pub fn build(keys: &Tensor, spec: &ShardedSpec, ctx: &BuildCtx) -> Result<ShardedIndex> {
+        let n = keys.rows();
+        let s_count = spec.shards;
+        ensure!(s_count >= 1, "sharded needs shards >= 1");
+        ensure!(
+            s_count <= MAX_SHARDS,
+            "sharded(shards={s_count}) exceeds the supported maximum {MAX_SHARDS}"
+        );
+        ensure!(
+            s_count <= n,
+            "sharded(shards={s_count}) needs at least one key per shard, got {n} keys"
+        );
+        ensure!(
+            !matches!(*spec.inner, IndexSpec::Sharded(_)),
+            "nested sharding is not supported"
+        );
+        let mut shards: Vec<Box<dyn VectorIndex>> = Vec::with_capacity(s_count);
+        for s in 0..s_count {
+            let ids = shard_member_ids(n, s_count, spec.assign, s);
+            let shard_keys = keys.gather_rows(&ids);
+            let inner_ctx = BuildCtx {
+                sample_queries: ctx.sample_queries,
+                seed: ctx.seed.wrapping_add(s as u64),
+            };
+            let idx = spec
+                .inner
+                .build(&shard_keys, &inner_ctx)
+                .with_context(|| format!("building shard {s}/{s_count} ({} keys)", ids.len()))?;
+            shards.push(idx);
+        }
+        Self::from_parts(shards, spec.assign)
+    }
+
+    /// Assemble from already-built shards, verifying the invariants the
+    /// id remap relies on: uniform dim and shard lengths matching the
+    /// deterministic partition of the total key count. Artifacts that
+    /// pass their per-shard checksums but violate these must error
+    /// here, never panic on the first query.
+    fn from_parts(shards: Vec<Box<dyn VectorIndex>>, assign: ShardAssign) -> Result<ShardedIndex> {
+        ensure!(!shards.is_empty(), "sharded index has no shards");
+        let dim = shards[0].dim();
+        ensure!(
+            shards.iter().all(|s| s.dim() == dim),
+            "sharded index mixes key dims: {:?}",
+            shards.iter().map(|s| s.dim()).collect::<Vec<_>>()
+        );
+        let len: usize = shards.iter().map(|s| s.len()).sum();
+        let expect = shard_sizes(len, shards.len());
+        let got: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        ensure!(
+            got == expect,
+            "shard lengths {got:?} do not partition {len} keys over {} shards (want {expect:?})",
+            shards.len()
+        );
+        let starts = match assign {
+            ShardAssign::RoundRobin => Vec::new(),
+            ShardAssign::Contiguous => {
+                let mut starts = Vec::with_capacity(shards.len());
+                let mut acc = 0usize;
+                for size in &expect {
+                    starts.push(acc);
+                    acc += size;
+                }
+                starts
+            }
+        };
+        Ok(ShardedIndex {
+            shards,
+            assign,
+            starts,
+            len,
+            dim,
+        })
+    }
+
+    /// Deserialize from an artifact payload: assignment mode + each
+    /// shard's own framed artifact (see [`crate::index::artifact`]).
+    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<ShardedIndex> {
+        let assign = match artifact::r_u32(r)? {
+            0 => ShardAssign::RoundRobin,
+            1 => ShardAssign::Contiguous,
+            other => bail!("invalid shard assignment tag {other} in artifact"),
+        };
+        let s_count = artifact::r_u64(r)? as usize;
+        ensure!(
+            (1..=MAX_SHARDS).contains(&s_count),
+            "implausible shard count {s_count} in artifact"
+        );
+        let mut shards: Vec<Box<dyn VectorIndex>> = Vec::with_capacity(s_count);
+        for s in 0..s_count {
+            let bytes = artifact::r_u8s(r)?;
+            // the spec grammar forbids nesting, so a nested tag is
+            // corruption (or crafted recursion) — reject it from the
+            // header alone, before load_from can recurse back here
+            let header = artifact::read_header(&mut bytes.as_slice())
+                .with_context(|| format!("reading shard {s}/{s_count} header"))?;
+            ensure!(
+                header.backbone != "sharded",
+                "sharded artifact nests another sharded index at shard {s}"
+            );
+            let idx = artifact::load_from(&mut bytes.as_slice())
+                .with_context(|| format!("loading shard {s}/{s_count}"))?;
+            shards.push(idx);
+        }
+        Self::from_parts(shards, assign)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn assign(&self) -> ShardAssign {
+        self.assign
+    }
+
+    pub fn shard(&self, s: usize) -> &dyn VectorIndex {
+        self.shards[s].as_ref()
+    }
+
+    /// Map a shard-local id back to the global key id.
+    #[inline]
+    fn global_id(&self, shard: usize, local: u32) -> u32 {
+        match self.assign {
+            ShardAssign::RoundRobin => local * self.shards.len() as u32 + shard as u32,
+            ShardAssign::Contiguous => self.starts[shard] as u32 + local,
+        }
+    }
+}
+
+impl VectorIndex for ShardedIndex {
+    fn name(&self) -> &str {
+        "sharded"
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Total coarse partitions across all shards; each shard resolves
+    /// an [`Effort`] against its own cell count during fan-out.
+    fn n_cells(&self) -> usize {
+        self.shards.iter().map(|s| s.n_cells()).sum()
+    }
+
+    fn search_effort(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult {
+        let s_count = self.shards.len();
+        // Fan out one task per shard on the shared pool — but only when
+        // this query is not itself running on a pool worker (the blanket
+        // batched Searcher already fans the batch out; nesting would
+        // spawn workers-of-workers and oversubscribe the cores). Known
+        // trade-off: a batch smaller than the worker count scans its
+        // shards sequentially even though cores sit idle; lifting that
+        // needs one shared work queue across batch and shard tasks
+        // rather than this boolean guard.
+        let per_shard: Vec<SearchResult> = if s_count == 1 || in_parallel_region() {
+            self.shards
+                .iter()
+                .map(|shard| shard.search_effort(query, k, effort))
+                .collect()
+        } else {
+            batch_map(s_count, |s| self.shards[s].search_effort(query, k, effort))
+        };
+        let mut top = TopK::new(k);
+        let mut cost = SearchCost::default();
+        for (s, res) in per_shard.into_iter().enumerate() {
+            for (&local, &score) in res.ids.iter().zip(&res.scores) {
+                top.push(score, self.global_id(s, local));
+            }
+            cost.add(res.cost);
+        }
+        let (ids, scores) = top.into_sorted();
+        SearchResult { ids, scores, cost }
+    }
+
+    fn spec(&self) -> IndexSpec {
+        IndexSpec::Sharded(ShardedSpec {
+            shards: self.shards.len(),
+            assign: self.assign,
+            inner: Box::new(self.shards[0].spec()),
+        })
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        artifact::w_u32(w, match self.assign {
+            ShardAssign::RoundRobin => 0,
+            ShardAssign::Contiguous => 1,
+        })?;
+        artifact::w_u64(w, self.shards.len() as u64)?;
+        for shard in &self.shards {
+            let mut buf = Vec::new();
+            shard.save(&mut buf)?;
+            artifact::w_u8s(w, &buf)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::flat::FlatIndex;
+    use crate::tensor::normalize_rows;
+    use crate::util::Rng;
+
+    fn unit(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        normalize_rows(&mut t);
+        t
+    }
+
+    fn sharded(spec_str: &str, keys: &Tensor, seed: u64) -> ShardedIndex {
+        let IndexSpec::Sharded(spec) = spec_str.parse::<IndexSpec>().unwrap() else {
+            panic!("not a sharded spec: {spec_str}");
+        };
+        ShardedIndex::build(keys, &spec, &BuildCtx::seeded(seed)).unwrap()
+    }
+
+    #[test]
+    fn shard_sizes_partition_exactly() {
+        for n in [1usize, 2, 7, 8, 100, 101] {
+            for s in 1..=n.min(9) {
+                let sizes = shard_sizes(n, s);
+                assert_eq!(sizes.len(), s);
+                assert_eq!(sizes.iter().sum::<usize>(), n, "n={n} s={s}");
+                assert!(sizes.iter().all(|&v| v >= n / s && v <= n / s + 1));
+            }
+        }
+    }
+
+    #[test]
+    fn member_ids_cover_every_key_once() {
+        for assign in [ShardAssign::RoundRobin, ShardAssign::Contiguous] {
+            let mut seen = vec![0usize; 23];
+            for s in 0..5 {
+                for id in shard_member_ids(23, 5, assign, s) {
+                    seen[id] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "{assign:?}");
+        }
+    }
+
+    #[test]
+    fn remap_inverts_partition() {
+        let keys = unit(&[37, 4], 1);
+        for spec in [
+            "sharded(shards=5,inner=flat)",
+            "sharded(shards=5,assign=contiguous,inner=flat)",
+        ] {
+            let idx = sharded(spec, &keys, 2);
+            for s in 0..idx.n_shards() {
+                let members = shard_member_ids(37, 5, idx.assign(), s);
+                for (local, &global) in members.iter().enumerate() {
+                    assert_eq!(idx.global_id(s, local as u32) as usize, global, "{spec}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_flat_exhaustive_is_bit_identical_to_flat() {
+        let keys = unit(&[211, 12], 3);
+        let flat = FlatIndex::new(keys.clone());
+        for spec in [
+            "sharded(shards=4,inner=flat)",
+            "sharded(shards=4,assign=contiguous,inner=flat)",
+        ] {
+            let idx = sharded(spec, &keys, 4);
+            assert_eq!((idx.len(), idx.dim()), (211, 12));
+            let q = unit(&[8, 12], 5);
+            for i in 0..8 {
+                let a = idx.search_effort(q.row(i), 7, Effort::Exhaustive);
+                let b = flat.search_effort(q.row(i), 7, Effort::Exhaustive);
+                assert_eq!(a.ids, b.ids, "{spec} q{i}");
+                assert_eq!(a.scores, b.scores, "{spec} q{i}");
+                assert_eq!(a.cost.keys_scanned, 211);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_artifact_round_trips() {
+        let keys = unit(&[120, 8], 6);
+        let idx = sharded("sharded(shards=3,inner=ivf(nlist=4))", &keys, 7);
+        assert_eq!(idx.n_cells(), 12);
+        let mut bytes = Vec::new();
+        idx.save(&mut bytes).unwrap();
+        let loaded = artifact::load_from(&mut bytes.as_slice()).unwrap();
+        assert_eq!(loaded.name(), "sharded");
+        assert_eq!(loaded.spec(), idx.spec());
+        let q = unit(&[3, 8], 8);
+        for i in 0..3 {
+            let a = idx.search_effort(q.row(i), 5, Effort::Probes(2));
+            let b = loaded.search_effort(q.row(i), 5, Effort::Probes(2));
+            assert_eq!(a.ids, b.ids, "q{i}");
+            assert_eq!(a.scores, b.scores, "q{i}");
+        }
+    }
+
+    #[test]
+    fn build_rejects_more_shards_than_keys() {
+        let keys = unit(&[3, 4], 9);
+        let IndexSpec::Sharded(spec) = "sharded(shards=5,inner=flat)".parse().unwrap() else {
+            unreachable!()
+        };
+        assert!(ShardedIndex::build(&keys, &spec, &BuildCtx::seeded(1)).is_err());
+    }
+
+    #[test]
+    fn spec_echo_reports_resolved_inner_knobs() {
+        // pq m=auto resolves against the key dim inside every shard
+        let keys = unit(&[40, 12], 10);
+        let idx = sharded("sharded(shards=2,inner=pq)", &keys, 11);
+        assert_eq!(
+            idx.spec().to_string(),
+            "sharded(shards=2,assign=round_robin,inner=pq(m=4,iters=10,eta=1))"
+        );
+    }
+}

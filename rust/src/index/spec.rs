@@ -12,9 +12,9 @@
 
 use std::fmt;
 
-use anyhow::{anyhow, bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::index::{flat, ivf, leanvec, pq, scann, soar, sq, VectorIndex, BACKBONES};
+use crate::index::{flat, ivf, leanvec, pq, scann, shard, soar, sq, VectorIndex, BACKBONES};
 use crate::tensor::Tensor;
 
 /// Default coarse-cell count for the IVF-family specs (override with
@@ -143,6 +143,61 @@ impl Default for LeanVecSpec {
     }
 }
 
+/// How a [`ShardedSpec`] partitions global key ids across shards.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardAssign {
+    /// Key `i` lands on shard `i % shards` (interleaved; balanced to
+    /// within one key for any key count).
+    #[default]
+    RoundRobin,
+    /// Keys are cut into `shards` contiguous ranges (the first
+    /// `n % shards` ranges get one extra key).
+    Contiguous,
+}
+
+impl fmt::Display for ShardAssign {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShardAssign::RoundRobin => write!(f, "round_robin"),
+            ShardAssign::Contiguous => write!(f, "contiguous"),
+        }
+    }
+}
+
+impl std::str::FromStr for ShardAssign {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ShardAssign> {
+        match s {
+            "round_robin" => Ok(ShardAssign::RoundRobin),
+            "contiguous" => Ok(ShardAssign::Contiguous),
+            other => bail!("unknown shard assignment '{other}' (round_robin | contiguous)"),
+        }
+    }
+}
+
+/// Sharded serving: keys are partitioned across `shards` partitions
+/// ([`ShardAssign`]), each shard is an independent `inner` backbone, and
+/// search fans out across shards and merges per-shard top-k (the
+/// partition-then-score backbone of large-scale MIPS serving). The inner
+/// spec may be any non-sharded backbone.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardedSpec {
+    pub shards: usize,
+    pub assign: ShardAssign,
+    pub inner: Box<IndexSpec>,
+}
+
+impl Default for ShardedSpec {
+    fn default() -> ShardedSpec {
+        ShardedSpec {
+            shards: 8,
+            assign: ShardAssign::RoundRobin,
+            inner: Box::new(IndexSpec::Flat(FlatSpec)),
+        }
+    }
+}
+
 /// Default LeanVec projection dimension for `d`-dim keys: half the
 /// input width, floored at 4 (or at `d` itself when `d < 4`), never
 /// above `d`.
@@ -177,8 +232,11 @@ fn resolve_pq_m(m: Option<usize>, d: usize) -> Result<usize> {
     }
 }
 
-/// A typed, validated build description for one of the seven backbones.
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// A typed, validated build description for one of the seven leaf
+/// backbones, or a [`ShardedSpec`] composing one of them per shard
+/// (recursive through a `Box`, which is why the enum is `Clone` but not
+/// `Copy`).
+#[derive(Clone, Debug, PartialEq)]
 pub enum IndexSpec {
     Flat(FlatSpec),
     Ivf(IvfSpec),
@@ -187,6 +245,7 @@ pub enum IndexSpec {
     Scann(ScannSpec),
     Soar(SoarSpec),
     LeanVec(LeanVecSpec),
+    Sharded(ShardedSpec),
 }
 
 impl IndexSpec {
@@ -201,6 +260,7 @@ impl IndexSpec {
             IndexSpec::Scann(_) => "scann",
             IndexSpec::Soar(_) => "soar",
             IndexSpec::LeanVec(_) => "leanvec",
+            IndexSpec::Sharded(_) => "sharded",
         }
     }
 
@@ -214,29 +274,38 @@ impl IndexSpec {
             "scann" => IndexSpec::Scann(ScannSpec::default()),
             "soar" => IndexSpec::Soar(SoarSpec::default()),
             "leanvec" => IndexSpec::LeanVec(LeanVecSpec::default()),
-            other => bail!("unknown backbone '{other}'; expected one of {BACKBONES:?}"),
+            "sharded" => IndexSpec::Sharded(ShardedSpec::default()),
+            other => {
+                bail!("unknown backbone '{other}'; expected one of {BACKBONES:?} or 'sharded'")
+            }
         })
     }
 
-    /// Coarse-cell count, for the IVF-family variants.
+    /// Coarse-cell count, for the IVF-family variants. A sharded spec
+    /// reports its inner backbone's per-shard `nlist`.
     pub fn nlist(&self) -> Option<usize> {
         match self {
             IndexSpec::Ivf(s) => Some(s.nlist),
             IndexSpec::Scann(s) => Some(s.nlist),
             IndexSpec::Soar(s) => Some(s.nlist),
             IndexSpec::LeanVec(s) => Some(s.nlist),
+            IndexSpec::Sharded(s) => s.inner.nlist(),
             _ => None,
         }
     }
 
     /// Override `nlist` on the IVF-family variants (no-op on the
-    /// cell-less backbones).
+    /// cell-less backbones; a sharded spec forwards to its inner spec).
     pub fn with_nlist(mut self, nlist: usize) -> IndexSpec {
         match &mut self {
             IndexSpec::Ivf(s) => s.nlist = nlist,
             IndexSpec::Scann(s) => s.nlist = nlist,
             IndexSpec::Soar(s) => s.nlist = nlist,
             IndexSpec::LeanVec(s) => s.nlist = nlist,
+            IndexSpec::Sharded(s) => {
+                let inner = std::mem::replace(&mut *s.inner, IndexSpec::Flat(FlatSpec));
+                *s.inner = inner.with_nlist(nlist);
+            }
             _ => {}
         }
         self
@@ -286,6 +355,22 @@ impl IndexSpec {
                     pos(v, "d_low", self)?;
                 }
                 pos(s.nlist, "nlist", self)
+            }
+            IndexSpec::Sharded(s) => {
+                pos(s.shards, "shards", self)?;
+                // same cap the artifact loader enforces — an index that
+                // builds must also reload
+                ensure!(
+                    s.shards <= shard::MAX_SHARDS,
+                    "shards={} exceeds the supported maximum {} in '{self}'",
+                    s.shards,
+                    shard::MAX_SHARDS
+                );
+                ensure!(
+                    !matches!(*s.inner, IndexSpec::Sharded(_)),
+                    "nested sharding is not supported in '{self}'"
+                );
+                s.inner.validate()
             }
         }
     }
@@ -339,6 +424,7 @@ impl IndexSpec {
                     keys, d_low, s.nlist, queries, ctx.seed,
                 ))
             }
+            IndexSpec::Sharded(s) => Box::new(shard::ShardedIndex::build(keys, s, ctx)?),
         })
     }
 }
@@ -375,6 +461,11 @@ impl fmt::Display for IndexSpec {
                 s.nlist,
                 s.query_aware
             ),
+            IndexSpec::Sharded(s) => write!(
+                f,
+                "sharded(shards={},assign={},inner={})",
+                s.shards, s.assign, s.inner
+            ),
         }
     }
 }
@@ -383,10 +474,31 @@ impl fmt::Display for IndexSpec {
 /// keys so typos are rejected instead of silently ignored.
 struct Knobs(Vec<(String, String)>);
 
+/// Split a knob body on commas at parenthesis depth 0 only, so nested
+/// specs like `inner=ivf(nlist=64,iters=15)` stay one knob.
+fn split_top_level(body: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0;
+    for (i, c) in body.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                parts.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&body[start..]);
+    parts
+}
+
 impl Knobs {
     fn parse(body: &str) -> Result<Knobs> {
         let mut pairs: Vec<(String, String)> = Vec::new();
-        for part in body.split(',') {
+        for part in split_top_level(body) {
             let part = part.trim();
             if part.is_empty() {
                 continue;
@@ -452,11 +564,30 @@ impl Knobs {
     }
 }
 
+/// Deepest parenthesis nesting a spec string may use. Legitimate specs
+/// need 2 (`sharded(inner=ivf(...))`); the bound keeps a crafted
+/// `sharded(inner=sharded(inner=…` string — e.g. planted in a catalog
+/// manifest — from recursing the parser into a stack-overflow abort
+/// instead of a typed error.
+const MAX_SPEC_DEPTH: usize = 4;
+
 impl std::str::FromStr for IndexSpec {
     type Err = anyhow::Error;
 
     fn from_str(s: &str) -> Result<IndexSpec> {
         let s = s.trim();
+        let mut depth = 0usize;
+        for c in s.chars() {
+            if c == '(' {
+                depth += 1;
+                ensure!(
+                    depth <= MAX_SPEC_DEPTH,
+                    "index spec nests deeper than {MAX_SPEC_DEPTH} levels"
+                );
+            } else if c == ')' {
+                depth = depth.saturating_sub(1);
+            }
+        }
         let (name, body) = match s.split_once('(') {
             Some((n, rest)) => {
                 let rest = rest.trim_end();
@@ -508,7 +639,25 @@ impl std::str::FromStr for IndexSpec {
                     query_aware: knobs.bool_or("query_aware", dflt.query_aware)?,
                 })
             }
-            other => bail!("unknown backbone '{other}'; expected one of {BACKBONES:?}"),
+            "sharded" => {
+                let dflt = ShardedSpec::default();
+                let inner = match knobs.take("inner") {
+                    Some(v) => Box::new(v.parse::<IndexSpec>().context("knob inner")?),
+                    None => dflt.inner,
+                };
+                let assign = match knobs.take("assign") {
+                    Some(v) => v.parse::<ShardAssign>()?,
+                    None => dflt.assign,
+                };
+                IndexSpec::Sharded(ShardedSpec {
+                    shards: knobs.usize_or("shards", dflt.shards)?,
+                    assign,
+                    inner,
+                })
+            }
+            other => {
+                bail!("unknown backbone '{other}'; expected one of {BACKBONES:?} or 'sharded'")
+            }
         };
         knobs.finish(name)?;
         spec.validate()?;
@@ -552,6 +701,9 @@ mod tests {
             assert_eq!(spec.name(), name);
             spec.validate().unwrap();
         }
+        let sharded = IndexSpec::default_for("sharded").unwrap();
+        assert_eq!(sharded.name(), "sharded");
+        sharded.validate().unwrap();
         assert!(IndexSpec::default_for("hnsw").is_err());
     }
 
@@ -596,9 +748,71 @@ mod tests {
             "soar(spill=0)",
             "leanvec(d_low=0)",
             "leanvec(query_aware=maybe)",
+            "sharded(shards=0)",
+            "sharded(shards=2,inner=hnsw)",
+            "sharded(inner=ivf(nlist=0))",
+            "sharded(inner=sharded(inner=flat))",
+            "sharded(assign=diagonal)",
+            "sharded(shards=2,inner=ivf(nlist=4)",
+            "sharded(shards=70000)",
         ] {
             assert!(bad.parse::<IndexSpec>().is_err(), "{bad}");
         }
+        // a crafted deeply-nested spec is a typed error, not a
+        // parse-recursion stack overflow
+        let deep = format!("{}flat{}", "sharded(inner=".repeat(50_000), ")".repeat(50_000));
+        assert!(deep.parse::<IndexSpec>().is_err());
+    }
+
+    #[test]
+    fn sharded_spec_parses_nests_and_round_trips() {
+        let s: IndexSpec = "sharded(shards=8,inner=ivf(nlist=64))".parse().unwrap();
+        assert_eq!(
+            s,
+            IndexSpec::Sharded(ShardedSpec {
+                shards: 8,
+                assign: ShardAssign::RoundRobin,
+                inner: Box::new(IndexSpec::Ivf(IvfSpec {
+                    nlist: 64,
+                    iters: 15
+                })),
+            })
+        );
+        // Display round-trips, including the nested inner knob list
+        let text = s.to_string();
+        assert_eq!(
+            text,
+            "sharded(shards=8,assign=round_robin,inner=ivf(nlist=64,iters=15))"
+        );
+        assert_eq!(text.parse::<IndexSpec>().unwrap(), s);
+        // contiguous assignment and defaults
+        let c: IndexSpec = "sharded(assign=contiguous)".parse().unwrap();
+        assert_eq!(
+            c,
+            IndexSpec::Sharded(ShardedSpec {
+                assign: ShardAssign::Contiguous,
+                ..ShardedSpec::default()
+            })
+        );
+        assert_eq!(c.name(), "sharded");
+        // nlist views pass through to the inner spec
+        assert_eq!(s.nlist(), Some(64));
+        let resized = s.with_nlist(16);
+        assert_eq!(resized.nlist(), Some(16));
+        assert_eq!(
+            resized.to_string(),
+            "sharded(shards=8,assign=round_robin,inner=ivf(nlist=16,iters=15))"
+        );
+    }
+
+    #[test]
+    fn split_top_level_respects_nesting() {
+        assert_eq!(
+            split_top_level("shards=8,inner=ivf(nlist=64,iters=15),assign=contiguous"),
+            vec!["shards=8", "inner=ivf(nlist=64,iters=15)", "assign=contiguous"]
+        );
+        assert_eq!(split_top_level(""), vec![""]);
+        assert_eq!(split_top_level("a=1"), vec!["a=1"]);
     }
 
     #[test]

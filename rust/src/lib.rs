@@ -13,7 +13,10 @@
 //!
 //! * all seven [`index`] backbones (flat, ivf, pq, sq8, scann, soar,
 //!   leanvec) are `Searcher`s via a blanket impl — the batch runs in
-//!   parallel on the [`util::threads`] pool;
+//!   parallel on the [`util::threads`] pool — and the composite
+//!   [`index::ShardedIndex`] (`"sharded(shards=8,inner=ivf(nlist=64))"`)
+//!   partitions the keys, fans each query out per shard and merges the
+//!   per-shard top-k behind the same trait;
 //! * [`api::MappedSearcher`] composes a KeyNet query map (Sec. 4.4
 //!   drop-in integration) in front of any backbone;
 //! * [`api::RoutedSearcher`] composes a learned or centroid

@@ -9,6 +9,8 @@
 //!                 [--d 32] [--k 10]           # pure-Rust API demo/sweep
 //! amips build     --catalog DIR --name NAME [--spec "scann(nlist=64)"]
 //!                 [--keys f.amt | --n 20000 --d 32]
+//!                 # specs compose: --spec "sharded(shards=8,inner=ivf(nlist=64))"
+//!                 #                partitions keys and fans search out per shard
 //!                                             # train once, persist artifact
 //! amips serve     --catalog DIR [--collection NAME] [--requests N]
 //!                                             # serve prebuilt artifacts
@@ -69,6 +71,7 @@ fn cmd_list() -> Result<()> {
         println!("  {c}");
     }
     println!("backends: {}", amips::index::BACKBONES.join(" | "));
+    println!("composite: sharded(shards=N,assign=round_robin|contiguous,inner=<backend spec>)");
     Ok(())
 }
 

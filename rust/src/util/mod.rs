@@ -2,8 +2,23 @@
 //! `rand`, `rayon` or logging crates — these modules replace them).
 
 pub mod rng;
+pub mod tempdir;
 pub mod threads;
 pub mod timer;
 
 pub use rng::Rng;
+pub use tempdir::TempDir;
 pub use timer::Timer;
+
+/// Case count for a seeded property sweep: the suite's fast `default`,
+/// or the absolute count in `AMIPS_PROP_CASES` when set (the scheduled
+/// CI deep sweep runs with `AMIPS_PROP_CASES=2000`). Lives in the
+/// library (next to [`TempDir`]) so every test binary shares one
+/// contract — sweeps are deterministic in the case index, so the same
+/// env value reproduces the same cases everywhere.
+pub fn prop_cases(default: usize) -> usize {
+    std::env::var("AMIPS_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}

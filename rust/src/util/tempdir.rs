@@ -1,0 +1,87 @@
+//! Unique temporary directories with cleanup-on-drop, for tests and
+//! examples that persist artifacts/catalogs. The old pattern —
+//! `std::env::temp_dir().join(format!("...-{pid}"))` — collides when
+//! two tests in one binary share a prefix; `TempDir` paths are keyed by
+//! (prefix, pid, per-process counter), so every handle in a process is
+//! distinct and concurrent test binaries cannot clash. The directory is
+//! deleted on drop (including during unwinding, so a failed assertion
+//! doesn't leak state into the next run); a leftover at the same path —
+//! possible only when a hard-killed run's pid is recycled — is wiped on
+//! creation.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(0);
+
+/// A freshly-created directory under the system temp dir, removed
+/// (recursively) when the handle drops.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create `<tmp>/<prefix>-<pid>-<counter>`, wiping any stale
+    /// leftover directory at that path first.
+    pub fn new(prefix: &str) -> TempDir {
+        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        Self::create_at(std::env::temp_dir().join(format!("{prefix}-{}-{id}", std::process::id())))
+    }
+
+    /// Wipe-then-create at an explicit path (the uniqueness of the path
+    /// is the caller's problem; [`TempDir::new`] derives a unique one).
+    fn create_at(path: PathBuf) -> TempDir {
+        std::fs::remove_dir_all(&path).ok();
+        std::fs::create_dir_all(&path)
+            .unwrap_or_else(|e| panic!("creating temp dir {}: {e}", path.display()));
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// A path inside the directory.
+    pub fn join(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.path).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unique_created_and_removed_on_drop() {
+        let a = TempDir::new("amips-tempdir-test");
+        let b = TempDir::new("amips-tempdir-test");
+        assert_ne!(a.path(), b.path());
+        assert!(a.path().is_dir() && b.path().is_dir());
+        std::fs::write(a.join("f.txt"), b"x").unwrap();
+        let (pa, pb) = (a.path().to_path_buf(), b.path().to_path_buf());
+        drop(a);
+        drop(b);
+        assert!(!pa.exists(), "{}", pa.display());
+        assert!(!pb.exists(), "{}", pb.display());
+    }
+
+    #[test]
+    fn stale_leftover_at_same_path_is_wiped() {
+        // simulate a hard-killed earlier run whose pid got recycled:
+        // stale content already sits at the path create_at will claim
+        let path = std::env::temp_dir().join(format!(
+            "amips-tempdir-stale-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(path.join("stale-sub")).unwrap();
+        let fresh = TempDir::create_at(path.clone());
+        assert_eq!(fresh.path(), path);
+        assert!(!fresh.join("stale-sub").exists());
+    }
+}

@@ -3,7 +3,22 @@
 //! plain loop; the code is still structured for multi-core so the repo
 //! runs at full width elsewhere.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+thread_local! {
+    /// Set on `parallel_chunks` worker threads for their whole lifetime
+    /// (workers are spawned fresh per call, so it is never reset).
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread is a `parallel_chunks` worker. Nested
+/// data-parallel code (e.g. the sharded fan-out inside a batched
+/// search) checks this to degrade to a sequential loop instead of
+/// spawning workers-of-workers and oversubscribing the cores.
+pub fn in_parallel_region() -> bool {
+    IN_POOL.with(Cell::get)
+}
 
 /// Number of worker threads to use (respects `AMIPS_THREADS`).
 pub fn num_threads() -> usize {
@@ -41,14 +56,17 @@ where
     let nchunks = n.div_ceil(chunk);
     std::thread::scope(|s| {
         for _ in 0..workers.min(nchunks) {
-            s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= nchunks {
-                    break;
+            s.spawn(|| {
+                IN_POOL.with(|flag| flag.set(true));
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= nchunks {
+                        break;
+                    }
+                    let start = i * chunk;
+                    let end = (start + chunk).min(n);
+                    f(i, start, end);
                 }
-                let start = i * chunk;
-                let end = (start + chunk).min(n);
-                f(i, start, end);
             });
         }
     });
@@ -102,6 +120,25 @@ mod tests {
             }
         });
         assert!(seen.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn in_parallel_region_flags_pool_workers_only() {
+        assert!(!in_parallel_region());
+        let flagged = AtomicUsize::new(0);
+        parallel_chunks(64, 1, |_, _, _| {
+            if in_parallel_region() {
+                flagged.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        // pool workers see the flag; the sequential fallback (single
+        // worker) runs on the caller thread and must not
+        if num_threads() > 1 {
+            assert_eq!(flagged.load(Ordering::Relaxed), 64);
+        } else {
+            assert_eq!(flagged.load(Ordering::Relaxed), 0);
+        }
+        assert!(!in_parallel_region());
     }
 
     #[test]

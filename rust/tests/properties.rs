@@ -1,6 +1,12 @@
 //! Randomized property tests over the coordinator and index invariants
 //! (proptest is not available offline; these use the repo's deterministic
 //! PRNG to sweep hundreds of generated cases per property).
+//!
+//! Case counts scale with `AMIPS_PROP_CASES` (see
+//! `amips::util::prop_cases`): PR runs use the fast defaults, the
+//! scheduled CI deep sweep sets 2000.
+//! Sweeps are deterministic in the case index, so a failure reproduces
+//! with the same env value and prints its case number.
 
 use amips::api::{Effort, SearchRequest, Searcher};
 use amips::coordinator::batcher::{BatchPolicy, Batcher};
@@ -8,8 +14,9 @@ use amips::coordinator::router::{routing_accuracy, CentroidRouter, Router, Routi
 use amips::data::ground_truth;
 use amips::index::traits::{TopK, VectorIndex};
 use amips::index::{flat::FlatIndex, ivf::IvfIndex, kmeans::KMeans, soar::SoarIndex};
+use amips::index::{BuildCtx, IndexSpec};
 use amips::tensor::{dot, normalize_rows, Tensor};
-use amips::util::Rng;
+use amips::util::{prop_cases, Rng};
 use std::time::Duration;
 
 fn unit(shape: &[usize], seed: u64) -> Tensor {
@@ -26,7 +33,7 @@ fn unit(shape: &[usize], seed: u64) -> Tensor {
 #[test]
 fn prop_topk_matches_sort() {
     let mut rng = Rng::new(100);
-    for case in 0..300 {
+    for case in 0..prop_cases(300) {
         let n = 1 + rng.below(200);
         let k = 1 + rng.below(20);
         let scores: Vec<f32> = (0..n).map(|_| (rng.normal() as f32 * 10.0).round() / 4.0).collect();
@@ -59,7 +66,7 @@ fn prop_topk_matches_sort() {
 #[test]
 fn prop_ivf_results_subset_of_keys_and_sorted() {
     let mut rng = Rng::new(200);
-    for case in 0..30 {
+    for case in 0..prop_cases(30) as u64 {
         let n = 50 + rng.below(400);
         let d = 8 + 8 * rng.below(4);
         let nlist = 2 + rng.below(12);
@@ -84,7 +91,7 @@ fn prop_ivf_results_subset_of_keys_and_sorted() {
 fn prop_ivf_recall_monotone_in_nprobe() {
     // Top-1 score found can only improve as more cells are probed.
     let mut rng = Rng::new(300);
-    for case in 0..20 {
+    for case in 0..prop_cases(20) as u64 {
         let n = 100 + rng.below(300);
         let keys = unit(&[n, 16], 3000 + case);
         let nlist = 8;
@@ -106,7 +113,7 @@ fn prop_ivf_recall_monotone_in_nprobe() {
 #[test]
 fn prop_soar_full_probe_equals_flat_and_never_duplicates() {
     let mut rng = Rng::new(400);
-    for case in 0..15 {
+    for case in 0..prop_cases(15) as u64 {
         let n = 80 + rng.below(200);
         let keys = unit(&[n, 12], 5000 + case);
         let nlist = 6;
@@ -128,7 +135,7 @@ fn prop_parallel_batch_search_matches_sequential() {
     // the blanket Searcher impl fans the batch out over the thread pool;
     // results must be identical to one-query-at-a-time scans, in order
     let mut rng = Rng::new(450);
-    for case in 0..10 {
+    for case in 0..prop_cases(10) as u64 {
         let n = 100 + rng.below(300);
         let nq = 1 + rng.below(60);
         let keys = unit(&[n, 16], 12_000 + case);
@@ -156,7 +163,7 @@ fn prop_parallel_batch_search_matches_sequential() {
 #[test]
 fn prop_kmeans_partition_is_total_and_consistent() {
     let mut rng = Rng::new(500);
-    for case in 0..10 {
+    for case in 0..prop_cases(10) as u64 {
         let n = 60 + rng.below(300);
         let c = 2 + rng.below(8);
         let x = unit(&[n, 16], 7000 + case);
@@ -189,7 +196,7 @@ fn prop_kmeans_partition_is_total_and_consistent() {
 #[test]
 fn prop_ground_truth_is_argmax_within_cluster() {
     let mut rng = Rng::new(600);
-    for case in 0..10 {
+    for case in 0..prop_cases(10) as u64 {
         let n = 50 + rng.below(150);
         let c = 1 + rng.below(5);
         let keys = unit(&[n, 8], 8000 + case);
@@ -222,7 +229,7 @@ fn prop_ground_truth_is_argmax_within_cluster() {
 #[test]
 fn prop_centroid_router_accuracy_monotone_in_k() {
     let mut rng = Rng::new(700);
-    for case in 0..10 {
+    for case in 0..prop_cases(10) as u64 {
         let c = 4 + rng.below(8);
         let centroids = unit(&[c, 16], 10_000 + case);
         let router = CentroidRouter::new(centroids.clone());
@@ -269,7 +276,7 @@ fn prop_routing_accuracy_bounds() {
 #[test]
 fn prop_batcher_conserves_items() {
     let mut rng = Rng::new(800);
-    for case in 0..20 {
+    for case in 0..prop_cases(20) {
         let total = 1 + rng.below(500);
         let max_batch = 1 + rng.below(64);
         let (tx, rx) = std::sync::mpsc::channel();
@@ -294,13 +301,151 @@ fn prop_batcher_conserves_items() {
 }
 
 // ---------------------------------------------------------------------------
+// TopK merge invariant: merging per-shard top-k lists equals top-k over
+// the concatenated stream — exactly what ShardedIndex's merger relies on
+// ---------------------------------------------------------------------------
+
+/// Drain a [`TopK`] and re-push its survivors into `into` — the shard
+/// merger's merge step.
+fn merge_into(from: TopK, into: &mut TopK) {
+    let (ids, scores) = from.into_sorted();
+    for (id, score) in ids.into_iter().zip(scores) {
+        into.push(score, id);
+    }
+}
+
+#[test]
+fn prop_topk_shard_merge_equals_concatenated_stream() {
+    let mut rng = Rng::new(150);
+    for case in 0..prop_cases(300) {
+        let n = 1 + rng.below(300);
+        let k = 1 + rng.below(25);
+        let shards = 1 + rng.below(8);
+        // coarse-quantized scores force frequent ties; ~5% NaN exercises
+        // the worst-ranked mapping through the merge
+        let items: Vec<(f32, u32)> = (0..n)
+            .map(|i| {
+                let s = if rng.below(20) == 0 {
+                    f32::NAN
+                } else {
+                    (rng.normal() as f32 * 8.0).round() / 4.0
+                };
+                (s, i as u32)
+            })
+            .collect();
+        let mut global = TopK::new(k);
+        for &(s, id) in &items {
+            global.push(s, id);
+        }
+        let want = global.into_sorted();
+        // round-robin partition -> per-shard TopK -> merge the survivors
+        let mut merged = TopK::new(k);
+        for s in 0..shards {
+            let mut local = TopK::new(k);
+            for &(score, id) in items.iter().skip(s).step_by(shards) {
+                local.push(score, id);
+            }
+            merge_into(local, &mut merged);
+        }
+        let got = merged.into_sorted();
+        assert_eq!(got, want, "case {case}: n={n} k={k} shards={shards}");
+    }
+}
+
+#[test]
+fn topk_merge_edge_cases() {
+    // k > len: the merge returns every element exactly once
+    let mut a = TopK::new(10);
+    a.push(0.5, 0);
+    a.push(0.25, 2);
+    let mut b = TopK::new(10);
+    b.push(0.75, 1);
+    let mut m = TopK::new(10);
+    merge_into(a, &mut m);
+    merge_into(b, &mut m);
+    let (ids, scores) = m.into_sorted();
+    assert_eq!(ids, vec![1, 0, 2]);
+    assert_eq!(scores, vec![0.75, 0.5, 0.25]);
+
+    // all-tied scores: the merged tiebreak is still ascending id, no
+    // matter which shard each id came from
+    let mut m = TopK::new(3);
+    for shard in 0..3u32 {
+        let mut t = TopK::new(3);
+        for j in 0..3u32 {
+            t.push(1.0, shard + 3 * j);
+        }
+        merge_into(t, &mut m);
+    }
+    let (ids, scores) = m.into_sorted();
+    assert_eq!(ids, vec![0, 1, 2]);
+    assert_eq!(scores, vec![1.0; 3]);
+
+    // NaN-laced shards: NaNs rank worst (as -inf) but still fill slots
+    // below the real results, lowest id first
+    let mut a = TopK::new(2);
+    a.push(f32::NAN, 4);
+    a.push(0.9, 5);
+    let mut b = TopK::new(2);
+    b.push(f32::NAN, 1);
+    b.push(f32::NAN, 3);
+    let mut m = TopK::new(2);
+    merge_into(a, &mut m);
+    merge_into(b, &mut m);
+    let (ids, scores) = m.into_sorted();
+    assert_eq!(ids, vec![5, 1]);
+    assert_eq!(scores[0], 0.9);
+    assert_eq!(scores[1], f32::NEG_INFINITY);
+}
+
+// ---------------------------------------------------------------------------
+// ShardedIndex: sharded flat at Exhaustive is bit-identical to unsharded
+// flat (ISSUE 3 acceptance sweep: dim, n, k and shard count all vary)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sharded_flat_exhaustive_bit_identical_to_flat() {
+    let mut rng = Rng::new(160);
+    for case in 0..prop_cases(120) as u64 {
+        let n = 1 + rng.below(250);
+        let d = 1 + rng.below(24);
+        let k = 1 + rng.below(16);
+        let shards = 1 + rng.below(n.min(8));
+        let assign = if rng.below(2) == 0 {
+            "round_robin"
+        } else {
+            "contiguous"
+        };
+        let keys = unit(&[n, d], 20_000 + case);
+        let spec: IndexSpec = format!("sharded(shards={shards},assign={assign},inner=flat)")
+            .parse()
+            .unwrap();
+        let sharded = spec.build(&keys, &BuildCtx::seeded(case)).unwrap();
+        let flat = FlatIndex::new(keys.clone());
+        let q = unit(&[2, d], 21_000 + case);
+        for i in 0..2 {
+            let a = sharded.search_effort(q.row(i), k, Effort::Exhaustive);
+            let b = flat.search_effort(q.row(i), k, Effort::Exhaustive);
+            assert_eq!(
+                a.ids, b.ids,
+                "case {case}: n={n} d={d} k={k} shards={shards} assign={assign} q{i}"
+            );
+            assert_eq!(a.scores, b.scores, "case {case} q{i}");
+            // every shard scanned everything: summed cost equals flat's
+            assert_eq!(a.cost.keys_scanned, b.cost.keys_scanned, "case {case}");
+            assert_eq!(a.cost.flops, b.cost.flops, "case {case}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Tensor IO: roundtrip for arbitrary shapes
 // ---------------------------------------------------------------------------
 
 #[test]
 fn prop_tensor_io_roundtrip() {
     let mut rng = Rng::new(900);
-    for case in 0..50 {
+    for case in 0..prop_cases(50) {
         let rank = rng.below(3) + 1;
         let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(20)).collect();
         let mut t = Tensor::zeros(&shape);

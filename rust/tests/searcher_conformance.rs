@@ -43,6 +43,64 @@ fn build(name: &str, keys: &Tensor, queries: Option<&Tensor>, seed: u64) -> Box<
         .unwrap()
 }
 
+/// A 3-shard wrapper over `name` with the same per-shard knobs — the
+/// Searcher-API guarantees must hold for `ShardedIndex` over every leaf
+/// backbone, not just for the leaves themselves.
+fn build_sharded(
+    name: &str,
+    keys: &Tensor,
+    queries: Option<&Tensor>,
+    seed: u64,
+) -> Box<dyn VectorIndex> {
+    let inner = IndexSpec::default_for(name).unwrap().with_nlist(NLIST);
+    let spec: IndexSpec = format!("sharded(shards=3,inner={inner})").parse().unwrap();
+    spec.build(
+        keys,
+        &BuildCtx {
+            sample_queries: queries,
+            seed,
+        },
+    )
+    .unwrap_or_else(|e| panic!("sharded({name}): {e:#}"))
+}
+
+/// Shared conformance assertions: exact top-1 at `Effort::Exhaustive`,
+/// hit lists sorted descending, duplicate-free and in-bounds.
+fn assert_matches_flat_at_max_effort(
+    index: &dyn VectorIndex,
+    label: &str,
+    queries: &Tensor,
+    truth: &amips::api::SearchResponse,
+    req: &SearchRequest,
+) {
+    assert_eq!(index.num_keys(), N, "{label}");
+    let resp = index.search(queries, req).unwrap();
+    assert_eq!(resp.n_queries(), NQ, "{label}");
+    for q in 0..NQ {
+        assert_eq!(
+            resp.hits[q].ids[0], truth.hits[q].ids[0],
+            "{label}: top-1 mismatch on query {q}"
+        );
+        let (got, want) = (resp.hits[q].scores[0], truth.hits[q].scores[0]);
+        assert!(
+            (got - want).abs() < 1e-5,
+            "{label}: top-1 score {got} vs flat {want} on query {q}"
+        );
+        // hit lists are sorted descending, duplicate-free and in-bounds
+        for w in resp.hits[q].scores.windows(2) {
+            assert!(w[0] >= w[1], "{label}");
+        }
+        assert!(
+            resp.hits[q].ids.iter().all(|&id| (id as usize) < N),
+            "{label}: out-of-bounds id on query {q}"
+        );
+        let mut ids = resp.hits[q].ids.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), resp.hits[q].ids.len(), "{label}");
+    }
+}
+
 #[test]
 fn every_backbone_matches_flat_top1_at_max_effort() {
     let keys = unit(&[N, D], 1);
@@ -52,28 +110,42 @@ fn every_backbone_matches_flat_top1_at_max_effort() {
     let truth = flat.search(&queries, &req).unwrap();
     for name in BACKBONES {
         let index = build(name, &keys, Some(&queries), 42);
-        assert_eq!(index.num_keys(), N, "{name}");
+        assert_matches_flat_at_max_effort(index.as_ref(), name, &queries, &truth, &req);
+    }
+}
+
+#[test]
+fn every_sharded_backbone_matches_flat_top1_at_max_effort() {
+    let keys = unit(&[N, D], 1);
+    let queries = unit(&[NQ, D], 2);
+    let flat = FlatIndex::new(keys.clone());
+    let req = SearchRequest::top_k(3).effort(Effort::Exhaustive);
+    let truth = flat.search(&queries, &req).unwrap();
+    for name in BACKBONES {
+        let index = build_sharded(name, &keys, Some(&queries), 42);
+        let label = format!("sharded({name})");
+        assert_matches_flat_at_max_effort(index.as_ref(), &label, &queries, &truth, &req);
+    }
+}
+
+#[test]
+fn sharded_batch_search_matches_sequential() {
+    // the blanket Searcher impl must agree with one-at-a-time fan-out
+    // on the composite backbone too (ids, scores and summed cost)
+    let keys = unit(&[N, D], 21);
+    let queries = unit(&[NQ, D], 22);
+    let index = build_sharded("ivf", &keys, None, 23);
+    for effort in [Effort::Probes(2), Effort::Auto, Effort::Exhaustive] {
+        let req = SearchRequest::top_k(5).effort(effort);
         let resp = index.search(&queries, &req).unwrap();
-        assert_eq!(resp.n_queries(), NQ, "{name}");
+        let mut total_scanned = 0u64;
         for q in 0..NQ {
-            assert_eq!(
-                resp.hits[q].ids[0], truth.hits[q].ids[0],
-                "{name}: top-1 mismatch on query {q}"
-            );
-            let (got, want) = (resp.hits[q].scores[0], truth.hits[q].scores[0]);
-            assert!(
-                (got - want).abs() < 1e-5,
-                "{name}: top-1 score {got} vs flat {want} on query {q}"
-            );
-            // hit lists are sorted descending and duplicate-free
-            for w in resp.hits[q].scores.windows(2) {
-                assert!(w[0] >= w[1], "{name}");
-            }
-            let mut ids = resp.hits[q].ids.clone();
-            ids.sort_unstable();
-            ids.dedup();
-            assert_eq!(ids.len(), resp.hits[q].ids.len(), "{name}");
+            let single = index.search_effort(queries.row(q), 5, effort);
+            assert_eq!(resp.hits[q].ids, single.ids, "{effort:?} q{q}");
+            assert_eq!(resp.hits[q].scores, single.scores, "{effort:?} q{q}");
+            total_scanned += single.cost.keys_scanned;
         }
+        assert_eq!(resp.cost.keys_scanned, total_scanned, "{effort:?}");
     }
 }
 
@@ -82,28 +154,35 @@ fn cost_breakdown_monotone_in_probes() {
     let keys = unit(&[N, D], 3);
     let queries = unit(&[NQ, D], 4);
     for name in ["ivf", "scann", "soar", "leanvec"] {
-        let index = build(name, &keys, None, 43);
-        assert!(index.n_cells() > 1, "{name}");
-        let mut prev: Option<amips::api::CostBreakdown> = None;
-        for probes in 1..=NLIST {
-            let req = SearchRequest::top_k(5).effort(Effort::Probes(probes));
-            let resp = index.search(&queries, &req).unwrap();
-            let cost = resp.cost;
-            if let Some(p) = prev {
-                assert!(
-                    cost.keys_scanned >= p.keys_scanned,
-                    "{name}: keys_scanned dropped at probes={probes}"
-                );
-                assert!(
-                    cost.cells_probed >= p.cells_probed,
-                    "{name}: cells_probed dropped at probes={probes}"
-                );
-                assert!(
-                    cost.scan_flops >= p.scan_flops,
-                    "{name}: scan_flops dropped at probes={probes}"
-                );
+        for (label, index) in [
+            (name.to_string(), build(name, &keys, None, 43)),
+            (
+                format!("sharded({name})"),
+                build_sharded(name, &keys, None, 43),
+            ),
+        ] {
+            assert!(index.n_cells() > 1, "{label}");
+            let mut prev: Option<amips::api::CostBreakdown> = None;
+            for probes in 1..=NLIST {
+                let req = SearchRequest::top_k(5).effort(Effort::Probes(probes));
+                let resp = index.search(&queries, &req).unwrap();
+                let cost = resp.cost;
+                if let Some(p) = prev {
+                    assert!(
+                        cost.keys_scanned >= p.keys_scanned,
+                        "{label}: keys_scanned dropped at probes={probes}"
+                    );
+                    assert!(
+                        cost.cells_probed >= p.cells_probed,
+                        "{label}: cells_probed dropped at probes={probes}"
+                    );
+                    assert!(
+                        cost.scan_flops >= p.scan_flops,
+                        "{label}: scan_flops dropped at probes={probes}"
+                    );
+                }
+                prev = Some(cost);
             }
-            prev = Some(cost);
         }
     }
 }

@@ -43,6 +43,9 @@ fn explicit_knobs_round_trip_verbatim() {
         "soar(nlist=24,spill=3)",
         "leanvec(d_low=12,nlist=16,query_aware=false)",
         "leanvec(d_low=auto,nlist=64,query_aware=true)",
+        "sharded(shards=8,assign=round_robin,inner=ivf(nlist=64,iters=15))",
+        "sharded(shards=2,assign=contiguous,inner=scann(nlist=16,m=8,iters=5,eta=4))",
+        "sharded(shards=4,assign=round_robin,inner=flat)",
     ] {
         let spec: IndexSpec = text.parse().unwrap_or_else(|e| panic!("{text}: {e:#}"));
         assert_eq!(spec.to_string(), text, "'{text}' did not round-trip");
@@ -78,9 +81,32 @@ fn parse_rejects_invalid_specs() {
         "soar(spill=0)",
         "leanvec(d_low=0)",
         "leanvec(query_aware=maybe)",
+        "sharded(shards=0)",
+        "sharded(inner=hnsw)",
+        "sharded(inner=sharded(inner=flat))",
+        "sharded(assign=hash)",
+        "sharded(shards=2,inner=ivf(nlist=4)",
     ] {
         assert!(bad.parse::<IndexSpec>().is_err(), "'{bad}' should not parse");
     }
+}
+
+#[test]
+fn sharded_parse_defaults_and_shorthand() {
+    // the ISSUE-3 headline spec parses, fills defaults, and round-trips
+    // through its canonical Display form
+    let s: IndexSpec = "sharded(shards=8,inner=ivf(nlist=64))".parse().unwrap();
+    assert_eq!(s.name(), "sharded");
+    assert_eq!(s.nlist(), Some(64));
+    let text = s.to_string();
+    assert_eq!(
+        text,
+        "sharded(shards=8,assign=round_robin,inner=ivf(nlist=64,iters=15))"
+    );
+    assert_eq!(text.parse::<IndexSpec>().unwrap(), s);
+    // bare name gets the composite defaults
+    let bare: IndexSpec = "sharded".parse().unwrap();
+    assert_eq!(bare, IndexSpec::default_for("sharded").unwrap());
 }
 
 #[test]
