@@ -6,7 +6,7 @@
 use amips::bench_support::fixtures;
 use amips::bench_support::report::{f, Report};
 use amips::metrics::retrieval;
-use amips::model::AmortizedModel;
+use amips::model::XlaModel;
 use amips::runtime::Engine;
 use amips::trainer::{self, TrainOpts};
 use anyhow::Result;
@@ -36,7 +36,7 @@ fn main() -> Result<()> {
             ..Default::default()
         };
         let out = trainer::train(&engine, &meta, &ds, &opts)?;
-        let model = AmortizedModel::load(&engine, meta.clone(), &out.params)?;
+        let model = XlaModel::load(&engine, meta.clone(), &out.params)?;
         let pred = model.map_queries(&ds.val.x)?;
         let rm = retrieval::evaluate(&pred, &ds.keys, &truth);
         let e_rel = out.curve.eval.last().map(|e| e.e_rel).unwrap_or(f32::NAN);

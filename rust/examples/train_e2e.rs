@@ -70,7 +70,7 @@ fn main() -> Result<()> {
     );
 
     // ---- stage 3: inference metrics -----------------------------------
-    let model = amips::model::AmortizedModel::load(&engine, meta.clone(), &out.params)?;
+    let model = amips::model::XlaModel::load(&engine, meta.clone(), &out.params)?;
     let pred = model.map_queries(&ds.val.x)?;
     let truth: Vec<usize> = (0..ds.val.gt.n_queries())
         .map(|q| ds.val.gt.global_top1(q).0)

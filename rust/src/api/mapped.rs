@@ -7,16 +7,17 @@ use anyhow::{bail, ensure, Result};
 
 use crate::api::{QueryMode, SearchRequest, SearchResponse, Searcher};
 use crate::index::traits::VectorIndex;
+use crate::model::AmortizedModel;
 use crate::tensor::{gemm_nt, Tensor};
 use crate::util::Timer;
 
 /// A batched query transform `x -> ŷ(x)`.
 ///
-/// Implemented by `model::AmortizedModel` (a trained c=1 KeyNet, behind
-/// the `xla` feature) and by the pure-Rust [`LinearQueryMap`] used for
-/// tests and offline demos. Deliberately *not* `Send`: the PJRT-backed
-/// implementation pins to one thread; the server builds it on its runner
-/// thread via a factory.
+/// Implemented by [`KeyNetQueryMap`] (any trained c=1
+/// [`AmortizedModel`], pure Rust or XLA-backed) and by the pure-Rust
+/// [`LinearQueryMap`] used for tests and offline demos. Deliberately
+/// *not* `Send`: the PJRT-backed model pins to one thread; the server
+/// builds its map on the runner thread via a factory.
 pub trait QueryMap {
     /// Human-readable label for reports.
     fn label(&self) -> &str;
@@ -73,6 +74,52 @@ impl QueryMap for LinearQueryMap {
         let mut out = Tensor::zeros(&[queries.rows(), self.w.rows()]);
         gemm_nt(queries, &self.w, &mut out);
         Ok(out)
+    }
+}
+
+/// The canonical learned [`QueryMap`] (paper Sec. 4.4): a trained c=1
+/// amortized model predicts the optimal key `ŷ(x)` and the *unmodified*
+/// backbone is searched at that point. Works with any
+/// [`AmortizedModel`] backend — the pure-Rust
+/// [`crate::model::RustModel`] in the default build (cheap forward for
+/// KeyNet, input-gradient recovery for a c=1 SupportNet) or the
+/// PJRT-backed model behind the `xla` feature.
+pub struct KeyNetQueryMap {
+    model: Box<dyn AmortizedModel>,
+}
+
+impl KeyNetQueryMap {
+    pub fn new(model: impl AmortizedModel + 'static) -> Result<KeyNetQueryMap> {
+        Self::from_boxed(Box::new(model))
+    }
+
+    pub fn from_boxed(model: Box<dyn AmortizedModel>) -> Result<KeyNetQueryMap> {
+        ensure!(
+            model.n_heads() == 1,
+            "a query map needs a c=1 model, '{}' has c={}",
+            model.label(),
+            model.n_heads()
+        );
+        Ok(KeyNetQueryMap { model })
+    }
+
+    /// The wrapped model.
+    pub fn model(&self) -> &dyn AmortizedModel {
+        self.model.as_ref()
+    }
+}
+
+impl QueryMap for KeyNetQueryMap {
+    fn label(&self) -> &str {
+        self.model.label()
+    }
+
+    fn map_flops_per_query(&self) -> u64 {
+        self.model.key_flops()
+    }
+
+    fn map(&self, queries: &Tensor) -> Result<Tensor> {
+        self.model.map_queries(queries)
     }
 }
 
@@ -216,6 +263,25 @@ mod tests {
         let q = unit(&[1, 4], 6);
         let req = SearchRequest::top_k(1).mode(QueryMode::Mapped);
         assert!(searcher.search(&q, &req).is_err());
+    }
+
+    #[test]
+    fn keynet_query_map_matches_model_inference() {
+        use crate::model::RustModel;
+        use crate::nn::{ModelKind, NetSpec};
+
+        let model = RustModel::init("map.keynet", NetSpec::new(ModelKind::KeyNet, 8, 1, 8, 2), 7)
+            .unwrap();
+        let expect = model.map_queries(&unit(&[4, 8], 8)).unwrap();
+        let map = KeyNetQueryMap::new(model).unwrap();
+        let got = map.map(&unit(&[4, 8], 8)).unwrap();
+        assert_eq!(got.data(), expect.data());
+        assert!(map.map_flops_per_query() > 0);
+        assert_eq!(map.label(), "map.keynet");
+        // multi-head models are rejected up front
+        let router =
+            RustModel::init("router", NetSpec::new(ModelKind::SupportNet, 8, 4, 8, 2), 9).unwrap();
+        assert!(KeyNetQueryMap::new(router).is_err());
     }
 
     #[test]

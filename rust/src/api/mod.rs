@@ -47,7 +47,7 @@ mod response;
 mod routed;
 mod searcher;
 
-pub use mapped::{LinearQueryMap, MappedSearcher, QueryMap};
+pub use mapped::{KeyNetQueryMap, LinearQueryMap, MappedSearcher, QueryMap};
 pub use request::{Effort, QueryMode, SearchRequest};
 pub use response::{recall_against_truth, CostBreakdown, Hits, SearchResponse};
 pub use routed::RoutedSearcher;

@@ -5,12 +5,102 @@
 
 use anyhow::Result;
 
-use crate::data::{dataset::PrepareOpts, Dataset};
+use crate::data::{dataset::PrepareOpts, CorpusSpec, Dataset};
 use crate::runtime::Manifest;
 
 /// Load the artifacts manifest (run `make artifacts` first).
 pub fn load_manifest() -> Result<Manifest> {
     Manifest::load(&crate::artifacts_dir())
+}
+
+/// The synthetic corpus used by the pure-Rust CLI verbs (`amips search |
+/// train | eval`) — one shared definition so an index built by `amips
+/// build` and a mapper trained by `amips train` with the same
+/// `(n, d, seed)` see the same keys and query distribution.
+pub fn synth_corpus_spec(n_keys: usize, d: usize, n_queries: usize, seed: u64) -> CorpusSpec {
+    CorpusSpec {
+        name: format!("synth-{n_keys}x{d}"),
+        n_keys,
+        d,
+        n_queries,
+        shift: 0.5,
+        spread: 2.0,
+        modes: 12,
+        seed,
+    }
+}
+
+/// Just the shared synthetic key set for `(n, d, seed)` — what `amips
+/// build` indexes. The generator draws keys before queries from one
+/// seeded stream, so these are byte-identical to the keys inside
+/// [`synth_dataset`] regardless of the query count.
+pub fn synth_keys(n_keys: usize, d: usize, seed: u64) -> crate::tensor::Tensor {
+    crate::data::SynthCorpus::generate(&synth_corpus_spec(n_keys, d, 0, seed)).keys
+}
+
+/// Prepare the shared synthetic dataset: `val_queries` held out, the
+/// rest augmented toward ~10k train queries.
+pub fn synth_dataset(n_keys: usize, d: usize, val_queries: usize, c: usize, seed: u64) -> Dataset {
+    let spec = synth_corpus_spec(n_keys, d, val_queries * 4, seed);
+    Dataset::prepare(
+        &spec,
+        &PrepareOpts {
+            c,
+            augment: augment_factor(val_queries * 3),
+            val_queries,
+            kmeans_restarts: 1,
+            ..Default::default()
+        },
+    )
+}
+
+/// The paper-analog dataset table (mirrors `python/compile/manifest.py`)
+/// so benches run in the default build even when `make artifacts` never
+/// ran. Returns `None` for unknown names.
+pub fn builtin_dataset_spec(name: &str) -> Option<crate::runtime::artifact::DatasetSpec> {
+    let (n, d, n_queries, shift, spread, modes, seed) = match name {
+        "fiqa-s" => (2048, 64, 4096, 0.30, 6.0, 12, 101),
+        "quora-s" => (6144, 64, 8192, 0.08, 1.6, 16, 102),
+        "nq-s" => (16384, 64, 16384, 0.45, 7.0, 24, 103),
+        "hotpot-s" => (32768, 64, 16384, 0.42, 7.0, 32, 104),
+        "bioasq-s" => (65536, 64, 12288, 0.42, 7.0, 40, 105),
+        "nq-s-d128" => (16384, 128, 8192, 0.45, 7.0, 24, 106),
+        _ => return None,
+    };
+    Some(crate::runtime::artifact::DatasetSpec {
+        name: name.to_string(),
+        n,
+        d,
+        n_queries,
+        shift,
+        spread,
+        modes,
+        seed,
+    })
+}
+
+/// Prepare a dataset by name: from the artifacts manifest when present,
+/// else from the built-in paper-analog table — the pure-Rust benches'
+/// entry point.
+pub fn prepare_dataset_or_builtin(name: &str, c: usize) -> Result<Dataset> {
+    if let Ok(manifest) = load_manifest() {
+        if manifest.dataset(name).is_ok() {
+            return prepare_dataset(&manifest, name, c);
+        }
+    }
+    let spec = builtin_dataset_spec(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' (no manifest, no builtin)"))?
+        .to_corpus_spec();
+    let base = spec.n_queries.saturating_sub(1000).max(1);
+    let opts = PrepareOpts {
+        c,
+        augment: augment_factor(base),
+        aug_sigma: 0.02,
+        val_queries: 1000,
+        kmeans_restarts: 3,
+        seed: spec.seed ^ 0xDA7A,
+    };
+    Ok(Dataset::prepare(&spec, &opts))
 }
 
 /// Augmentation factor targeting ~10k train queries (paper: 5–100x,
@@ -60,7 +150,7 @@ pub fn trained_model(
     config: &str,
     ds: &Dataset,
     opts: Option<crate::trainer::TrainOpts>,
-) -> Result<crate::model::AmortizedModel> {
+) -> Result<crate::model::XlaModel> {
     use crate::trainer::{self, TrainOpts};
     let meta = manifest.meta(config)?;
     let opts = opts.unwrap_or_else(|| TrainOpts {
@@ -68,7 +158,7 @@ pub fn trained_model(
         ..TrainOpts::default()
     });
     let out = trainer::train_or_load(engine, &meta, ds, &opts)?;
-    crate::model::AmortizedModel::load(engine, meta, &out.params)
+    crate::model::XlaModel::load(engine, meta, &out.params)
 }
 
 #[cfg(test)]
@@ -85,5 +175,27 @@ mod tests {
     #[test]
     fn default_steps_by_size() {
         assert!(default_steps("xs") >= default_steps("l"));
+    }
+
+    #[test]
+    fn synth_keys_match_dataset_keys_regardless_of_query_count() {
+        // the `amips build` / `amips train` key-consistency contract:
+        // same (n, d, seed) => byte-identical keys, whatever the query
+        // count of either side
+        let ks = synth_keys(300, 8, 5);
+        let ds = synth_dataset(300, 8, 40, 1, 5);
+        assert_eq!(ks.data(), ds.keys.data());
+        let ds2 = synth_dataset(300, 8, 80, 1, 5);
+        assert_eq!(ks.data(), ds2.keys.data());
+    }
+
+    #[test]
+    fn builtin_specs_cover_the_bench_datasets() {
+        for name in ["quora-s", "nq-s", "hotpot-s"] {
+            let spec = builtin_dataset_spec(name).unwrap();
+            assert_eq!(spec.name, name);
+            assert!(spec.n > 0 && spec.d > 0);
+        }
+        assert!(builtin_dataset_spec("nope").is_none());
     }
 }

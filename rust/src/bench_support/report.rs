@@ -100,6 +100,104 @@ impl Report {
     }
 }
 
+/// One typed JSON value for [`JsonRows`] (no serde offline; the tiny
+/// subset the bench trajectory needs, with escaping and non-finite
+/// floats mapped to `null`).
+pub enum JsonVal {
+    S(String),
+    F(f64),
+    I(u64),
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl JsonVal {
+    fn render(&self) -> String {
+        match self {
+            JsonVal::S(s) => format!("\"{}\"", json_escape(s)),
+            JsonVal::F(v) if v.is_finite() => format!("{v}"),
+            JsonVal::F(_) => "null".to_string(),
+            JsonVal::I(v) => format!("{v}"),
+        }
+    }
+}
+
+/// Machine-readable bench output: a flat array of uniform row objects,
+/// written as `BENCH_<name>.json` in the working directory so the bench
+/// trajectory can be tracked across commits (the aligned-text
+/// [`Report`]s stay the human-readable channel).
+pub struct JsonRows {
+    bench: String,
+    rows: Vec<String>,
+}
+
+impl JsonRows {
+    pub fn new(bench: &str) -> JsonRows {
+        JsonRows {
+            bench: bench.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append one row object from (key, value) pairs (order preserved).
+    pub fn push(&mut self, fields: &[(&str, JsonVal)]) {
+        let body: Vec<String> = fields
+            .iter()
+            .map(|(k, v)| format!("\"{}\": {}", json_escape(k), v.render()))
+            .collect();
+        self.rows.push(format!("{{{}}}", body.join(", ")));
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{{");
+        let _ = writeln!(out, "  \"bench\": \"{}\",", json_escape(&self.bench));
+        let _ = writeln!(out, "  \"rows\": [");
+        for (i, row) in self.rows.iter().enumerate() {
+            let comma = if i + 1 == self.rows.len() { "" } else { "," };
+            let _ = writeln!(out, "    {row}{comma}");
+        }
+        let _ = writeln!(out, "  ]");
+        out.push('}');
+        out.push('\n');
+        out
+    }
+
+    /// Write (overwrite, not append: the file reflects one run) to
+    /// `BENCH_<bench>.json` in the current directory.
+    pub fn emit(&self) {
+        let path = format!("BENCH_{}.json", self.bench);
+        match std::fs::write(&path, self.render()) {
+            Ok(()) => println!("wrote {} rows to {path}", self.rows.len()),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}
+
 /// Format helpers shared by benches.
 pub fn f(v: f64) -> String {
     format!("{v:.4}")
@@ -136,5 +234,28 @@ mod tests {
         assert_eq!(f(0.12345), "0.1235"); // round-half-up
         assert_eq!(pct(0.5), "50.0%");
         assert!(e(12345.0).contains('e'));
+    }
+
+    #[test]
+    fn json_rows_render_valid_structure() {
+        let mut j = JsonRows::new("unit");
+        j.push(&[
+            ("backend", JsonVal::S("ivf".into())),
+            ("recall", JsonVal::F(0.93)),
+            ("nprobe", JsonVal::I(4)),
+            ("nan", JsonVal::F(f64::NAN)),
+        ]);
+        j.push(&[("backend", JsonVal::S("weird \"name\"\n".into()))]);
+        assert_eq!(j.len(), 2);
+        let text = j.render();
+        assert!(text.contains("\"bench\": \"unit\""));
+        assert!(text.contains("\"recall\": 0.93"));
+        assert!(text.contains("\"nan\": null"));
+        assert!(text.contains("weird \\\"name\\\"\\n"));
+        // rows are comma-separated, last one bare
+        assert_eq!(text.matches("},").count(), 1);
+        // balanced braces: one object wrapper + two rows
+        assert_eq!(text.matches('{').count(), 3);
+        assert_eq!(text.matches('}').count(), 3);
     }
 }

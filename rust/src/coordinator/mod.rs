@@ -3,21 +3,20 @@
 //! loop speaking the [`crate::api`] request/response types. Query
 //! mapping (the old `MappedSearchPipeline`) lives in
 //! [`crate::api::MappedSearcher`]; routed search over IVF cells in
-//! [`crate::api::RoutedSearcher`]. Python never appears here; the models
-//! are AOT artifacts loaded through `crate::runtime` (behind the `xla`
-//! feature).
+//! [`crate::api::RoutedSearcher`]. The learned router and the server's
+//! KeyNet mapper run on any [`crate::model::AmortizedModel`] backend —
+//! pure Rust by default, PJRT-backed under the `xla` feature.
 //!
 //! Deployment: [`Server::start_from_catalog`] serves a prebuilt
 //! collection from an [`crate::index::Catalog`] of persisted index
 //! artifacts — the build-once / serve-many path (`amips build` +
-//! `amips serve --catalog`).
+//! `amips serve --catalog`), including a persisted model artifact as
+//! the collection's query mapper.
 
 pub mod batcher;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-#[cfg(feature = "xla")]
-pub use router::AmortizedRouter;
-pub use router::{CentroidRouter, Router, RoutingDecision};
+pub use router::{AmortizedRouter, CentroidRouter, Router, RoutingDecision};
 pub use server::{MapperFactory, Response, Server, ServerConfig, ServerHandle};

@@ -12,7 +12,6 @@ use anyhow::Result;
 
 use crate::index::traits::TopK;
 use crate::metrics::flops;
-#[cfg(feature = "xla")]
 use crate::model::AmortizedModel;
 use crate::tensor::{dot, Tensor};
 
@@ -75,37 +74,40 @@ impl Router for CentroidRouter {
     }
 }
 
-/// Learned router: rank clusters by predicted support value.
-#[cfg(feature = "xla")]
+/// Learned router: rank clusters by predicted support value. Takes any
+/// [`AmortizedModel`] backend — a pure-Rust multi-head SupportNet or
+/// KeyNet in the default build, the PJRT-backed model under `xla`.
 pub struct AmortizedRouter {
-    model: AmortizedModel,
+    model: Box<dyn AmortizedModel>,
     label: String,
 }
 
-#[cfg(feature = "xla")]
 impl AmortizedRouter {
-    pub fn new(model: AmortizedModel) -> Self {
-        let label = format!("amortized-{}", model.meta.model);
+    pub fn new(model: impl AmortizedModel + 'static) -> Self {
+        Self::from_boxed(Box::new(model))
+    }
+
+    pub fn from_boxed(model: Box<dyn AmortizedModel>) -> Self {
+        let label = format!("amortized-{}", model.kind());
         AmortizedRouter { model, label }
     }
 
-    pub fn model(&self) -> &AmortizedModel {
-        &self.model
+    pub fn model(&self) -> &dyn AmortizedModel {
+        self.model.as_ref()
     }
 }
 
-#[cfg(feature = "xla")]
 impl Router for AmortizedRouter {
     fn name(&self) -> &str {
         &self.label
     }
 
     fn n_clusters(&self) -> usize {
-        self.model.meta.c
+        self.model.n_heads()
     }
 
     fn route_batch(&self, queries: &Tensor, k: usize) -> Result<Vec<RoutingDecision>> {
-        let c = self.model.meta.c;
+        let c = self.model.n_heads();
         let k = k.clamp(1, c);
         // One fused forward for the whole batch (the amortized win):
         // per-query cost is the model's forward flops.
@@ -187,5 +189,29 @@ mod tests {
         let q = unit(&[2, 4], 3);
         let dec = router.route_batch(&q, 10).unwrap();
         assert_eq!(dec[0].clusters.len(), 3);
+    }
+
+    #[test]
+    fn amortized_router_ranks_by_model_scores() {
+        use crate::model::{AmortizedModel, RustModel};
+        use crate::nn::{ModelKind, NetSpec};
+
+        let model =
+            RustModel::init("router", NetSpec::new(ModelKind::SupportNet, 6, 5, 8, 2), 4).unwrap();
+        let q = unit(&[3, 6], 5);
+        let expected = model.scores(&q).unwrap();
+        let flops = model.score_flops();
+        let router = AmortizedRouter::new(model);
+        assert_eq!(router.name(), "amortized-supportnet");
+        assert_eq!(router.n_clusters(), 5);
+        let dec = router.route_batch(&q, 2).unwrap();
+        for (i, d) in dec.iter().enumerate() {
+            assert_eq!(d.clusters.len(), 2);
+            assert_eq!(d.selection_flops, flops);
+            // the top-ranked cluster is the argmax of the model scores
+            let row = expected.row(i);
+            let best = (0..5).max_by(|&a, &b| row[a].total_cmp(&row[b])).unwrap();
+            assert_eq!(d.clusters[0] as usize, best);
+        }
     }
 }

@@ -50,8 +50,8 @@ pub struct Response {
 }
 
 /// Builds the optional query map *on the runner thread* — the PJRT-backed
-/// [`QueryMap`] (`model::AmortizedModel`) is `!Send`, so construction
-/// must happen where it runs. Pure-Rust maps can be built anywhere but
+/// [`QueryMap`] (`model::XlaModel`) is `!Send`, so construction must
+/// happen where it runs. Pure-Rust maps can be built anywhere but
 /// follow the same path for uniformity.
 pub type MapperFactory = Box<dyn FnOnce() -> Result<Option<Box<dyn QueryMap>>> + Send>;
 
@@ -87,6 +87,24 @@ impl ServerConfig {
         }
     }
 
+    /// A server that maps queries through a trained c=1 pure-Rust model
+    /// (Sec. 4.4 drop-in integration) — the default-build learned
+    /// serving path: the model is `Send`, so it is simply moved onto
+    /// the runner thread and wrapped as a [`crate::api::KeyNetQueryMap`].
+    pub fn with_keynet(
+        model: crate::model::RustModel,
+        policy: BatchPolicy,
+        default_request: SearchRequest,
+    ) -> ServerConfig {
+        ServerConfig {
+            policy,
+            default_request,
+            mapper: Box::new(move || {
+                Ok(Some(Box::new(crate::api::KeyNetQueryMap::new(model)?) as Box<dyn QueryMap>))
+            }),
+        }
+    }
+
     /// A server that maps queries through a trained c=1 KeyNet loaded
     /// from the AOT artifacts (Sec. 4.4). The engine and model are
     /// constructed on the runner thread.
@@ -103,7 +121,7 @@ impl ServerConfig {
             default_request,
             mapper: Box::new(move || {
                 let engine = crate::runtime::Engine::new(artifacts_dir)?;
-                let model = crate::model::AmortizedModel::load(&engine, meta, &params)?;
+                let model = crate::model::XlaModel::load(&engine, meta, &params)?;
                 Ok(Some(Box::new(EnginePinnedMap {
                     _engine: engine,
                     model,
@@ -117,7 +135,7 @@ impl ServerConfig {
 #[cfg(feature = "xla")]
 struct EnginePinnedMap {
     _engine: crate::runtime::Engine,
-    model: crate::model::AmortizedModel,
+    model: crate::model::XlaModel,
 }
 
 #[cfg(feature = "xla")]
@@ -453,6 +471,36 @@ mod tests {
                 .unwrap();
             assert_eq!(mapped.hits.ids, orig.hits.ids);
             assert_eq!(orig.cost.map_flops, 0);
+        }
+        drop(handle);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn keynet_mapped_server_serves_from_rust_model() {
+        use crate::model::{AmortizedModel, RustModel};
+        use crate::nn::{ModelKind, NetSpec};
+
+        let keys = unit(&[150, 8], 40);
+        let index = Arc::new(IvfIndex::build(&keys, 4, 10, 41));
+        let model =
+            RustModel::init("srv.keynet", NetSpec::new(ModelKind::KeyNet, 8, 1, 8, 2), 42).unwrap();
+        let q = unit(&[3, 8], 43);
+        let mapped_expect = model.map_queries(&q).unwrap();
+        let map_flops = model.key_flops();
+        let req = SearchRequest::top_k(3)
+            .effort(Effort::Exhaustive)
+            .mode(QueryMode::Mapped);
+        let cfg = ServerConfig::with_keynet(model, policy(), req);
+        let (server, handle) = Server::start(cfg, index.clone()).unwrap();
+        for i in 0..3 {
+            let resp = handle.search(q.row(i).to_vec()).unwrap();
+            // the served answer equals searching the index at the
+            // model-mapped point directly
+            let direct = index.search_effort(mapped_expect.row(i), 3, Effort::Exhaustive);
+            assert_eq!(resp.hits.ids, direct.ids);
+            assert_eq!(resp.hits.scores, direct.scores);
+            assert_eq!(resp.cost.map_flops, map_flops);
         }
         drop(handle);
         server.shutdown().unwrap();

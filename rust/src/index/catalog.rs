@@ -9,9 +9,15 @@
 //! On-disk layout of a catalog directory:
 //!
 //! ```text
-//! <root>/catalog.tsv     # name<TAB>spec<TAB>artifact, one per line
+//! <root>/catalog.tsv     # name<TAB>spec<TAB>artifact[<TAB>mapper], one per line
 //! <root>/<name>.ami      # versioned index artifact (index::artifact)
+//! <root>/<name>.map.amm  # optional trained query-map model artifact
 //! ```
+//!
+//! The optional fourth manifest column names a persisted c=1 model
+//! artifact ([`crate::model::artifact`]); collections carrying one serve
+//! mapped queries (paper Sec. 4.4) straight from the catalog — see
+//! [`Catalog::attach_mapper`] and `amips train --catalog`.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -21,6 +27,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::index::spec::{BuildCtx, IndexSpec};
 use crate::index::{artifact, VectorIndex};
+use crate::model::{self, AmortizedModel, RustModel};
 use crate::tensor::Tensor;
 
 /// Manifest file name inside a catalog directory.
@@ -36,6 +43,10 @@ pub struct CatalogEntry {
     pub spec: IndexSpec,
     pub path: PathBuf,
     pub index: Arc<dyn VectorIndex>,
+    /// Optional trained query mapper persisted next to the index
+    /// artifact ([`Catalog::attach_mapper`]).
+    pub mapper_path: Option<PathBuf>,
+    pub mapper: Option<Arc<RustModel>>,
 }
 
 /// A directory of named collections backed by index artifacts.
@@ -51,9 +62,12 @@ fn valid_name(name: &str) -> bool {
             .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
 }
 
-/// Parse the manifest text into `(name, spec, artifact file)` rows
-/// without touching any artifact.
-fn manifest_rows(text: &str, manifest: &Path) -> Result<Vec<(String, IndexSpec, String)>> {
+/// One parsed manifest row; the mapper column is optional.
+type ManifestRow = (String, IndexSpec, String, Option<String>);
+
+/// Parse the manifest text into `(name, spec, artifact file, mapper
+/// file)` rows without touching any artifact.
+fn manifest_rows(text: &str, manifest: &Path) -> Result<Vec<ManifestRow>> {
     let mut rows = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
@@ -61,11 +75,15 @@ fn manifest_rows(text: &str, manifest: &Path) -> Result<Vec<(String, IndexSpec, 
             continue;
         }
         let mut parts = line.split('\t');
-        let (Some(name), Some(spec_str), Some(file), None) =
-            (parts.next(), parts.next(), parts.next(), parts.next())
-        else {
+        let (Some(name), Some(spec_str), Some(file), mapper, None) = (
+            parts.next(),
+            parts.next(),
+            parts.next(),
+            parts.next(),
+            parts.next(),
+        ) else {
             bail!(
-                "malformed line {} in {}: expected name<TAB>spec<TAB>artifact, got '{line}'",
+                "malformed line {} in {}: expected name<TAB>spec<TAB>artifact[<TAB>mapper], got '{line}'",
                 lineno + 1,
                 manifest.display()
             );
@@ -73,17 +91,26 @@ fn manifest_rows(text: &str, manifest: &Path) -> Result<Vec<(String, IndexSpec, 
         let spec: IndexSpec = spec_str
             .parse()
             .with_context(|| format!("catalog collection '{name}'"))?;
-        rows.push((name.to_string(), spec, file.to_string()));
+        rows.push((
+            name.to_string(),
+            spec,
+            file.to_string(),
+            mapper.map(str::to_string),
+        ));
     }
     Ok(rows)
 }
 
 /// Write the manifest for a set of rows (sorted by collection name).
-fn write_manifest_rows(root: &Path, rows: &[(String, IndexSpec, String)]) -> Result<()> {
-    let mut text =
-        String::from("# amips catalog: name<TAB>spec<TAB>artifact (one collection per line)\n");
-    for (name, spec, file) in rows {
-        text.push_str(&format!("{name}\t{spec}\t{file}\n"));
+fn write_manifest_rows(root: &Path, rows: &[ManifestRow]) -> Result<()> {
+    let mut text = String::from(
+        "# amips catalog: name<TAB>spec<TAB>artifact[<TAB>mapper] (one collection per line)\n",
+    );
+    for (name, spec, file, mapper) in rows {
+        match mapper {
+            Some(m) => text.push_str(&format!("{name}\t{spec}\t{file}\t{m}\n")),
+            None => text.push_str(&format!("{name}\t{spec}\t{file}\n")),
+        }
     }
     // write-then-rename so a crash mid-write can't leave a truncated
     // manifest that orphans every intact artifact in the catalog
@@ -96,8 +123,15 @@ fn write_manifest_rows(root: &Path, rows: &[(String, IndexSpec, String)]) -> Res
     Ok(())
 }
 
-/// Load one manifest row's artifact and verify it matches its spec.
-fn load_entry(root: &Path, name: &str, spec: IndexSpec, file: &str) -> Result<CatalogEntry> {
+/// Load one manifest row's artifact (and optional mapper) and verify
+/// they match the spec and each other.
+fn load_entry(
+    root: &Path,
+    name: &str,
+    spec: IndexSpec,
+    file: &str,
+    mapper_file: Option<&str>,
+) -> Result<CatalogEntry> {
     let path = root.join(file);
     let index = artifact::load(&path)?;
     ensure!(
@@ -107,11 +141,33 @@ fn load_entry(root: &Path, name: &str, spec: IndexSpec, file: &str) -> Result<Ca
         index.name(),
         spec.name()
     );
+    let (mapper_path, mapper) = match mapper_file {
+        Some(mf) => {
+            let mpath = root.join(mf);
+            let model = model::artifact::load(&mpath)?;
+            ensure!(
+                model.n_heads() == 1,
+                "collection '{name}': mapper '{}' has c={}, a query map needs c=1",
+                model.label(),
+                model.n_heads()
+            );
+            ensure!(
+                model.dim() == index.dim(),
+                "collection '{name}': mapper dim {} != index dim {}",
+                model.dim(),
+                index.dim()
+            );
+            (Some(mpath), Some(Arc::new(model)))
+        }
+        None => (None, None),
+    };
     Ok(CatalogEntry {
         name: name.to_string(),
         spec,
         path,
         index: Arc::from(index),
+        mapper_path,
+        mapper,
     })
 }
 
@@ -147,8 +203,8 @@ impl Catalog {
         let text = std::fs::read_to_string(&manifest)
             .with_context(|| format!("reading catalog manifest {}", manifest.display()))?;
         let mut entries = BTreeMap::new();
-        for (name, spec, file) in manifest_rows(&text, &manifest)? {
-            let entry = load_entry(&root, &name, spec, &file)?;
+        for (name, spec, file, mapper) in manifest_rows(&text, &manifest)? {
+            let entry = load_entry(&root, &name, spec, &file, mapper.as_deref())?;
             let prev = entries.insert(name.clone(), entry);
             ensure!(prev.is_none(), "duplicate collection '{name}' in manifest");
         }
@@ -164,13 +220,15 @@ impl Catalog {
         let text = std::fs::read_to_string(&manifest)
             .with_context(|| format!("reading catalog manifest {}", manifest.display()))?;
         let rows = manifest_rows(&text, &manifest)?;
-        match rows.iter().find(|(n, _, _)| n == name) {
-            Some((n, spec, file)) => load_entry(&root, n, spec.clone(), file),
+        match rows.iter().find(|(n, _, _, _)| n == name) {
+            Some((n, spec, file, mapper)) => {
+                load_entry(&root, n, spec.clone(), file, mapper.as_deref())
+            }
             None => bail!(
                 "catalog {} has no collection '{name}' (available: {})",
                 root.display(),
                 rows.iter()
-                    .map(|(n, _, _)| n.as_str())
+                    .map(|(n, _, _, _)| n.as_str())
                     .collect::<Vec<_>>()
                     .join(", ")
             ),
@@ -186,7 +244,7 @@ impl Catalog {
             .with_context(|| format!("reading catalog manifest {}", manifest.display()))?;
         Ok(manifest_rows(&text, &manifest)?
             .into_iter()
-            .map(|(n, _, _)| n)
+            .map(|(n, _, _, _)| n)
             .collect())
     }
 
@@ -254,6 +312,8 @@ impl Catalog {
                 spec: spec.clone(),
                 path,
                 index: Arc::from(index),
+                mapper_path: None,
+                mapper: None,
             },
         );
         self.write_manifest()?;
@@ -287,7 +347,7 @@ impl Catalog {
             Vec::new()
         };
         ensure!(
-            !rows.iter().any(|(n, _, _)| n == name),
+            !rows.iter().any(|(n, _, _, _)| n == name),
             "collection '{name}' already exists in {}",
             root.display()
         );
@@ -295,7 +355,7 @@ impl Catalog {
         let file = format!("{name}.{}", artifact::EXTENSION);
         let path = root.join(&file);
         artifact::save(&path, index.as_ref())?;
-        rows.push((name.to_string(), spec.clone(), file));
+        rows.push((name.to_string(), spec.clone(), file, None));
         rows.sort_by(|a, b| a.0.cmp(&b.0));
         write_manifest_rows(&root, &rows)?;
         Ok(CatalogEntry {
@@ -303,11 +363,62 @@ impl Catalog {
             spec: spec.clone(),
             path,
             index: Arc::from(index),
+            mapper_path: None,
+            mapper: None,
         })
     }
 
+    /// Persist `model` as the query mapper of an existing collection:
+    /// the model artifact is written next to the index artifact and the
+    /// manifest row gains the mapper column. Manifest-only (no index
+    /// artifact is deserialized); the mapper must be a c=1 model whose
+    /// dimension matches the collection header. Returns the artifact
+    /// path.
+    pub fn attach_mapper(
+        root: impl Into<PathBuf>,
+        name: &str,
+        model: &RustModel,
+    ) -> Result<PathBuf> {
+        let root = root.into();
+        let manifest = root.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading catalog manifest {}", manifest.display()))?;
+        let mut rows = manifest_rows(&text, &manifest)?;
+        let row = rows
+            .iter_mut()
+            .find(|(n, _, _, _)| n == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!("catalog {} has no collection '{name}'", root.display())
+            })?;
+        ensure!(
+            model.n_heads() == 1,
+            "query mapper '{}' must have c=1, got c={}",
+            model.label(),
+            model.n_heads()
+        );
+        // validate the dimension against the index artifact header only
+        // (cheap: no payload is decoded)
+        let index_path = root.join(&row.2);
+        let f = std::fs::File::open(&index_path)
+            .with_context(|| format!("opening index artifact {}", index_path.display()))?;
+        let header = artifact::read_header(&mut std::io::BufReader::new(f))
+            .with_context(|| format!("reading index artifact {}", index_path.display()))?;
+        ensure!(
+            model.dim() == header.dim,
+            "mapper dim {} != collection '{name}' dim {}",
+            model.dim(),
+            header.dim
+        );
+        let file = format!("{name}.map.{}", model::artifact::EXTENSION);
+        let path = root.join(&file);
+        model::artifact::save(&path, model)?;
+        row.3 = Some(file);
+        write_manifest_rows(&root, &rows)?;
+        Ok(path)
+    }
+
     fn write_manifest(&self) -> Result<()> {
-        let rows: Vec<(String, IndexSpec, String)> = self
+        let rows: Vec<ManifestRow> = self
             .entries
             .values()
             .map(|e| {
@@ -316,7 +427,16 @@ impl Catalog {
                     .file_name()
                     .and_then(|f| f.to_str())
                     .context("artifact path has no utf8 file name")?;
-                Ok((e.name.clone(), e.spec.clone(), file.to_string()))
+                let mapper = match &e.mapper_path {
+                    Some(p) => Some(
+                        p.file_name()
+                            .and_then(|f| f.to_str())
+                            .context("mapper path has no utf8 file name")?
+                            .to_string(),
+                    ),
+                    None => None,
+                };
+                Ok((e.name.clone(), e.spec.clone(), file.to_string(), mapper))
             })
             .collect::<Result<_>>()?;
         write_manifest_rows(&self.root, &rows)

@@ -45,25 +45,45 @@
 //!     .unwrap();
 //! ```
 //!
+//! ## The learned-model stack (pure Rust by default)
+//!
+//! The paper's actual method — amortized MIPS via a learned SupportNet
+//! (homogenized ICNN whose input gradient is the optimal key) or KeyNet
+//! (direct key regression with the Euler score-consistency loss) — is a
+//! first-class scenario of the default build:
+//!
+//! * [`nn`] — dense layers with manual backprop (finite-difference
+//!   checked), the smooth leaky activation, the positive-1-homogeneity
+//!   wrapper `f(x) = ‖x‖·g(x/‖x‖)`, and both model heads;
+//! * [`trainer`] — Adam + warmup/cosine + EMA driving score-regression
+//!   + gradient-matching (SupportNet) or key + consistency (KeyNet)
+//!   losses; `amips train | eval | serve` need no XLA;
+//! * [`model`] — the backend-agnostic [`model::AmortizedModel`] trait:
+//!   [`model::RustModel`] in the default build, the PJRT-backed
+//!   `model::XlaModel` behind the `xla` feature;
+//! * trained models persist as versioned checksummed artifacts
+//!   ([`model::artifact`]) and a [`index::Catalog`] collection can carry
+//!   one as its query mapper.
+//!
 //! ## Layers
 //!
 //! * **L1** Pallas kernels and **L2** JAX models live under `python/` and
 //!   are AOT-lowered to HLO-text artifacts by `make artifacts`.
 //! * **L3** (this crate) is the runtime system: the data pipeline
 //!   ([`data`]), every index substrate the paper evaluates against
-//!   ([`index`]), the unified search surface ([`api`]), the serving
-//!   coordinator ([`coordinator`]), and the metrics/benchmark machinery
+//!   ([`index`]), the unified search surface ([`api`]), the learned
+//!   models ([`nn`], [`model`], [`trainer`]), the serving coordinator
+//!   ([`coordinator`]), and the metrics/benchmark machinery
 //!   ([`metrics`], [`bench_support`]).
-//! * Everything that touches PJRT — the [`runtime`] engine, the
-//!   Rust-driven training loop ([`trainer`]), and
-//!   `model::AmortizedModel` inference — sits behind the **`xla` cargo
-//!   feature**. The default build is pure Rust and fully testable on
-//!   machines without XLA; enable `--features xla` (and patch the
-//!   vendored `xla` stub to a real xla-rs) to train and serve the
-//!   learned models.
+//! * The **`xla` cargo feature** is an optional accelerator backend: it
+//!   enables the PJRT [`runtime`] engine, the AOT training loop and
+//!   `model::XlaModel` inference over the same trait surface. The
+//!   default build is pure Rust and fully testable on machines without
+//!   XLA.
 //!
-//! Python never runs on the request path: after `make artifacts` the
-//! `amips` binary is self-contained.
+//! Python never runs on the request path: the pure-Rust `amips` binary
+//! is self-contained, and even the XLA path only needs Python offline
+//! (`make artifacts`).
 
 pub mod api;
 pub mod bench_support;
@@ -73,9 +93,9 @@ pub mod data;
 pub mod index;
 pub mod metrics;
 pub mod model;
+pub mod nn;
 pub mod runtime;
 pub mod tensor;
-#[cfg(feature = "xla")]
 pub mod trainer;
 pub mod util;
 

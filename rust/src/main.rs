@@ -12,8 +12,15 @@
 //!                 # specs compose: --spec "sharded(shards=8,inner=ivf(nlist=64))"
 //!                 #                partitions keys and fans search out per shard
 //!                                             # train once, persist artifact
+//! amips train     [--model keynet|supportnet] [--n 20000 --d 32 --c 1]
+//!                 [--steps N --lr F --h H --layers L] [--out model.amm]
+//!                 [--catalog DIR --name NAME [--spec "ivf(nlist=64)"]]
+//!                 # pure-Rust training; --catalog builds the index over
+//!                 # the same keys and attaches the model as its mapper
+//! amips eval      --model model.amm [--n 20000 --d 32]  # match rate/E_rel
 //! amips serve     --catalog DIR [--collection NAME] [--requests N]
-//!                                             # serve prebuilt artifacts
+//!                 # serve prebuilt artifacts; collections with a mapper
+//!                 # serve mapped queries (Sec. 4.4) by default
 //! amips train     --config <name> [--steps N] [--lr F] [--verbose]   (xla)
 //! amips eval      --config <name> [--steps N]                        (xla)
 //! amips route     --dataset nq-s --config <name> [--topk 1..5]       (xla)
@@ -39,18 +46,22 @@ fn run() -> Result<()> {
         Some("gen-data") => cmd_gen_data(&args),
         Some("search") => cmd_search(&args),
         Some("build") => cmd_build(&args),
-        // `serve --catalog` is pure Rust (prebuilt artifacts); plain
-        // `serve` drives a trained KeyNet mapper and needs `xla`.
+        // `serve --catalog` is pure Rust (prebuilt artifacts, optional
+        // trained mapper); plain `serve` drives the AOT KeyNet mapper
+        // and needs `xla`. `train`/`eval` run the pure-Rust backend by
+        // default; a `--config` selects the AOT/PJRT path.
         Some("serve") if args.has("catalog") => cmd_serve_catalog(&args),
-        Some("train") => xla_cmds::cmd_train(&args),
-        Some("eval") => xla_cmds::cmd_eval(&args),
+        Some("train") if args.has("config") => xla_cmds::cmd_train(&args),
+        Some("train") => cmd_train_rust(&args),
+        Some("eval") if args.has("config") => xla_cmds::cmd_eval(&args),
+        Some("eval") => cmd_eval_rust(&args),
         Some("route") => xla_cmds::cmd_route(&args),
         Some("serve") => xla_cmds::cmd_serve(&args),
         Some(other) => bail!("unknown command {other}; try `amips list`"),
         None => {
             println!("amips {} — amortized MIPS coordinator", amips::version());
             println!(
-                "commands: list | gen-data | search | build | serve --catalog | train | eval | route | serve"
+                "commands: list | gen-data | search | build | train | eval | serve --catalog | route | serve"
             );
             Ok(())
         }
@@ -114,7 +125,7 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
 fn cmd_search(args: &Args) -> Result<()> {
     use amips::api::{recall_against_truth, Effort, SearchRequest, Searcher};
     use amips::data::dataset::PrepareOpts;
-    use amips::data::{CorpusSpec, Dataset};
+    use amips::data::Dataset;
     use amips::index::{BuildCtx, IndexSpec, VectorIndex};
 
     let backend = args.get_or("backend", "ivf").to_string();
@@ -126,16 +137,9 @@ fn cmd_search(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 42)?;
     args.reject_unknown()?;
 
-    let spec = CorpusSpec {
-        name: format!("synth-{n}x{d}"),
-        n_keys: n,
-        d,
-        n_queries: nq * 4,
-        shift: 0.5,
-        spread: 2.0,
-        modes: 12,
-        seed,
-    };
+    // the shared synthetic corpus: same (n, d, seed) => same keys as
+    // `amips build`-less train/eval runs
+    let spec = fixtures::synth_corpus_spec(n, d, nq * 4, seed);
     let ds = Dataset::prepare(
         &spec,
         &PrepareOpts {
@@ -203,8 +207,8 @@ fn cmd_search(args: &Args) -> Result<()> {
 /// Rust: keys come from an `.amt` tensor file or a synthetic corpus.
 fn cmd_build(args: &Args) -> Result<()> {
     use amips::index::{BuildCtx, Catalog, IndexSpec, VectorIndex};
-    use amips::tensor::{normalize_rows, Tensor};
-    use amips::util::{Rng, Timer};
+    use amips::tensor::Tensor;
+    use amips::util::Timer;
 
     let catalog_dir = args.require("catalog")?.to_string();
     let name = args.require("name")?.to_string();
@@ -222,14 +226,12 @@ fn cmd_build(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 42)?;
     args.reject_unknown()?;
 
+    // synthetic keys come from the shared corpus generator, so an index
+    // built here and a mapper from `amips train` with the same
+    // (n, d, seed) really do see the same key set
     let keys = match &keys_path {
         Some(p) => Tensor::load(std::path::Path::new(p))?,
-        None => {
-            let mut t = Tensor::zeros(&[n, d]);
-            Rng::new(seed).fill_normal(t.data_mut(), 1.0);
-            normalize_rows(&mut t);
-            t
-        }
+        None => fixtures::synth_keys(n, d, seed),
     };
     let sample_queries = match &queries_path {
         Some(p) => Some(Tensor::load(std::path::Path::new(p))?),
@@ -268,8 +270,163 @@ fn cmd_build(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Train a SupportNet/KeyNet with the pure-Rust backend on the shared
+/// synthetic corpus; optionally persist the model artifact (`--out`)
+/// and/or build an index over the *same keys* into a catalog and attach
+/// the model as that collection's query mapper (`--catalog --name`).
+fn cmd_train_rust(args: &Args) -> Result<()> {
+    use amips::index::{BuildCtx, Catalog, IndexSpec};
+    use amips::model::artifact as model_artifact;
+    use amips::nn::{ModelKind, NetSpec};
+    use amips::trainer::{self, TrainOpts};
+
+    let kind = ModelKind::parse(args.get_or("model", "keynet"))?;
+    let n = args.get_usize("n", 20_000)?;
+    let d = args.get_usize("d", 32)?;
+    let nq = args.get_usize("queries", 1_000)?;
+    let c = args.get_usize("c", 1)?;
+    let layers = args.get_usize("layers", 3)?;
+    let rho = args.get_f32("rho", 0.01)? as f64;
+    let seed = args.get_u64("seed", 42)?;
+
+    let mut opts = TrainOpts {
+        verbose: args.has("verbose"),
+        seed: args.get_u64("train-seed", 7)?,
+        ..TrainOpts::default()
+    };
+    opts.steps = args.get_usize("steps", opts.steps)?;
+    opts.batch = args.get_usize("batch", opts.batch)?;
+    opts.peak_lr = args.get_f32("lr", opts.peak_lr)?;
+    opts.lam_a = args.get_f32("lam-a", opts.lam_a)?;
+    opts.lam_b = args.get_f32("lam-b", opts.lam_b)?;
+    opts.lam_icnn = args.get_f32("lam-icnn", opts.lam_icnn)?;
+
+    let out_path = args.get("out").map(str::to_string);
+    let catalog_dir = args.get("catalog").map(str::to_string);
+    let coll_name = args.get("name").map(str::to_string);
+    let index_spec = args.get("spec").map(str::to_string);
+    let match_floor = args.get_f32("assert-match-floor", -1.0)?;
+    let mut spec = NetSpec::sized(kind, d, c, n, rho, layers);
+    spec.h = args.get_usize("h", spec.h)?;
+    spec.nx = args.get_usize("nx", spec.nx)?;
+    spec.residual = args.has("residual");
+    args.reject_unknown()?;
+    spec.validate()?;
+
+    let label = format!("synth-{n}x{d}.{kind}.c{c}");
+    let ds = fixtures::synth_dataset(n, d, nq, c, seed);
+    let out = trainer::rust::train(&spec, &label, &ds, &opts)?;
+    let (rm, e_rel) = trainer::validation_retrieval(&out.model, &ds)?;
+
+    let mut rep = Report::new(&format!(
+        "train {label} (h={}, layers={}, {} params)",
+        spec.h,
+        spec.layers,
+        out.model.spec().n_params()
+    ));
+    rep.header(&["steps", "final loss", "match", "R@10", "E_rel", "E_rel curve"]);
+    rep.row(&[
+        out.steps.to_string(),
+        out.curve
+            .final_loss()
+            .map(|v| f(v as f64))
+            .unwrap_or_default(),
+        pct(rm.match_rate),
+        pct(rm.recall_at_10),
+        f(e_rel),
+        out.curve.e_rel_sparkline(),
+    ]);
+
+    if let Some(path) = &out_path {
+        model_artifact::save(std::path::Path::new(path), &out.model)?;
+        rep.note(format!("model artifact: {path}"));
+    }
+    match (&catalog_dir, &coll_name) {
+        (Some(dir), Some(name)) => {
+            anyhow::ensure!(
+                c == 1,
+                "only c=1 models can be attached as a collection mapper"
+            );
+            let ispec = match &index_spec {
+                Some(s) => s.parse::<IndexSpec>()?,
+                None => IndexSpec::default_for("ivf")?
+                    .with_nlist(fixtures::default_nlist(ds.n_keys())),
+            };
+            let entry = Catalog::append_collection(
+                dir,
+                name,
+                &ispec,
+                &ds.keys,
+                &BuildCtx {
+                    sample_queries: Some(&ds.train.x),
+                    seed,
+                },
+            )?;
+            let mpath = Catalog::attach_mapper(dir, name, &out.model)?;
+            rep.note(format!(
+                "collection '{name}' [{}] built over the training keys; mapper: {}",
+                entry.index.spec(),
+                mpath.display()
+            ));
+            rep.note(format!(
+                "serve mapped queries with: amips serve --catalog {dir} --collection {name}"
+            ));
+        }
+        (None, None) => {}
+        _ => bail!("--catalog and --name must be given together"),
+    }
+    rep.emit("train_rust");
+
+    if match_floor >= 0.0 && rm.match_rate < match_floor as f64 {
+        bail!(
+            "top-1 match rate {:.4} below the asserted floor {match_floor}",
+            rm.match_rate
+        );
+    }
+    Ok(())
+}
+
+/// Evaluate a persisted pure-Rust model artifact against the (re)
+/// generated synthetic corpus it was trained on.
+fn cmd_eval_rust(args: &Args) -> Result<()> {
+    use amips::model::{artifact as model_artifact, AmortizedModel};
+    use amips::trainer;
+
+    let path = args.require("model")?.to_string();
+    let n = args.get_usize("n", 20_000)?;
+    let d = args.get_usize("d", 32)?;
+    let nq = args.get_usize("queries", 1_000)?;
+    let c = args.get_usize("c", 1)?;
+    let seed = args.get_u64("seed", 42)?;
+    args.reject_unknown()?;
+
+    let model = model_artifact::load(std::path::Path::new(&path))?;
+    anyhow::ensure!(
+        model.dim() == d && model.n_heads() == c,
+        "model '{}' is d={} c={}, dataset flags say d={d} c={c}",
+        model.label(),
+        model.dim(),
+        model.n_heads()
+    );
+    let ds = fixtures::synth_dataset(n, d, nq, c, seed);
+    let (rm, e_rel) = trainer::validation_retrieval(&model, &ds)?;
+    let mut rep = Report::new(&format!("eval {} ({})", model.label(), path));
+    rep.header(&["match", "R@10", "R@100", "MRR", "E_rel"]);
+    rep.row(&[
+        pct(rm.match_rate),
+        pct(rm.recall_at_10),
+        pct(rm.recall_at_100),
+        f(rm.mrr),
+        f(e_rel),
+    ]);
+    rep.emit("eval_rust");
+    Ok(())
+}
+
 /// Serve prebuilt collections straight from a catalog of artifacts —
 /// the "serve many" half: no k-means/PQ training runs on startup.
+/// Collections carrying a trained mapper serve mapped queries
+/// (Sec. 4.4) as their default request mode.
 fn cmd_serve_catalog(args: &Args) -> Result<()> {
     use amips::api::{Effort, SearchRequest};
     use amips::coordinator::{BatchPolicy, Server, ServerConfig};
@@ -311,11 +468,21 @@ fn cmd_serve_catalog(args: &Args) -> Result<()> {
     let entry = Catalog::open_collection(&dir, &collection)?;
     let load_s = timer.elapsed_s();
     let d = entry.index.dim();
-    let default_request = SearchRequest::top_k(k).effort(Effort::Probes(nprobe));
-    let (server, handle) = Server::start(
-        ServerConfig::unmapped(BatchPolicy::default(), default_request),
-        entry.index.clone(),
-    )?;
+    // a collection carrying a trained mapper serves mapped queries
+    // (Sec. 4.4) as its default mode; bare collections stay Original
+    let mut default_request = SearchRequest::top_k(k).effort(Effort::Probes(nprobe));
+    let mapper_label = entry.mapper.as_ref().map(|m| {
+        use amips::model::AmortizedModel;
+        m.label().to_string()
+    });
+    let cfg = match &entry.mapper {
+        Some(m) => {
+            default_request = default_request.mode(amips::api::QueryMode::Mapped);
+            ServerConfig::with_keynet((**m).clone(), BatchPolicy::default(), default_request)
+        }
+        None => ServerConfig::unmapped(BatchPolicy::default(), default_request),
+    };
+    let (server, handle) = Server::start(cfg, entry.index.clone())?;
 
     // closed-loop demo traffic: unit-norm gaussian queries
     let mut q = Tensor::zeros(&[requests.max(1), d]);
@@ -362,6 +529,11 @@ fn cmd_serve_catalog(args: &Args) -> Result<()> {
         format!("{load_s:.2}"),
     ]);
     rep.note("no k-means/PQ training ran on startup: the index was deserialized from its artifact");
+    if let Some(label) = mapper_label {
+        rep.note(format!(
+            "queries were mapped through the trained model '{label}' (QueryMode::Mapped)"
+        ));
+    }
     rep.emit("serve_catalog");
     Ok(())
 }
@@ -615,9 +787,10 @@ mod xla_cmds {
 
     fn needs_xla(what: &str) -> Result<()> {
         bail!(
-            "`amips {what}` drives the AOT artifacts through PJRT and needs the \
-             `xla` feature: rebuild with `cargo build --release --features xla` \
-             (see README.md). The pure-Rust commands are list | gen-data | search."
+            "`amips {what}` with --config drives the AOT artifacts through PJRT \
+             and needs the `xla` feature: rebuild with `cargo build --release \
+             --features xla` (see README.md). The pure-Rust backend covers \
+             train | eval | serve --catalog without any feature flags."
         )
     }
 

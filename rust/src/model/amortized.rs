@@ -1,5 +1,6 @@
-//! The user-facing amortized-model handle: load a trained SupportNet or
-//! KeyNet and run batched inference on the request path.
+//! The XLA/PJRT-backed [`crate::model::AmortizedModel`] implementation:
+//! load a trained SupportNet or KeyNet from the AOT artifacts and run
+//! batched inference on the request path.
 //!
 //! Inference uses the AOT artifacts: `fwd` (scores, + keys for KeyNet;
 //! the Pallas L1 kernel lowered inside) and `grad` (SupportNet key
@@ -14,8 +15,10 @@ use crate::runtime::engine::{lit_f32, literal_to_vec, Engine, Executable};
 use crate::runtime::ArtifactMeta;
 use crate::tensor::Tensor;
 
-/// A loaded amortized model (SupportNet or KeyNet) with trained params.
-pub struct AmortizedModel {
+/// A loaded amortized model (SupportNet or KeyNet) with trained params,
+/// executing through PJRT. Pinned to the thread that built its engine
+/// (`!Send`); the pure-Rust counterpart is [`crate::model::RustModel`].
+pub struct XlaModel {
     pub meta: ArtifactMeta,
     fwd: Rc<Executable>,
     /// SupportNet only: scores+keys via input-gradient.
@@ -32,9 +35,9 @@ pub struct Inference {
     pub keys: Option<Tensor>,
 }
 
-impl AmortizedModel {
+impl XlaModel {
     /// Load from engine + metadata + trained parameters.
-    pub fn load(engine: &Engine, meta: ArtifactMeta, params: &crate::model::ParamSet) -> Result<AmortizedModel> {
+    pub fn load(engine: &Engine, meta: ArtifactMeta, params: &crate::model::ParamSet) -> Result<XlaModel> {
         params.validate(&meta)?;
         let fwd = engine.load(&format!("{}.fwd", meta.name))?;
         let grad = if meta.model == "supportnet" {
@@ -47,7 +50,7 @@ impl AmortizedModel {
             .iter()
             .map(|t| lit_f32(t.shape(), t.data()))
             .collect::<Result<Vec<_>>>()?;
-        Ok(AmortizedModel {
+        Ok(XlaModel {
             meta,
             fwd,
             grad,
@@ -154,9 +157,51 @@ impl AmortizedModel {
     }
 }
 
+impl crate::model::AmortizedModel for XlaModel {
+    fn label(&self) -> &str {
+        &self.meta.name
+    }
+
+    fn kind(&self) -> crate::nn::ModelKind {
+        if self.is_supportnet() {
+            crate::nn::ModelKind::SupportNet
+        } else {
+            crate::nn::ModelKind::KeyNet
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.meta.d
+    }
+
+    fn n_heads(&self) -> usize {
+        self.meta.c
+    }
+
+    fn score_flops(&self) -> u64 {
+        XlaModel::score_flops(self)
+    }
+
+    fn key_flops(&self) -> u64 {
+        XlaModel::key_flops(self)
+    }
+
+    fn scores(&self, queries: &Tensor) -> Result<Tensor> {
+        XlaModel::scores(self, queries)
+    }
+
+    fn scores_and_keys(&self, queries: &Tensor) -> Result<(Tensor, Tensor)> {
+        XlaModel::scores_and_keys(self, queries)
+    }
+
+    fn map_queries(&self, queries: &Tensor) -> Result<Tensor> {
+        XlaModel::map_queries(self, queries)
+    }
+}
+
 /// A trained c=1 KeyNet is the canonical [`crate::api::QueryMap`]: it
 /// plugs into [`crate::api::MappedSearcher`] in front of any backbone.
-impl crate::api::QueryMap for AmortizedModel {
+impl crate::api::QueryMap for XlaModel {
     fn label(&self) -> &str {
         &self.meta.name
     }

@@ -1,0 +1,258 @@
+//! Versioned binary model artifacts (`.amm`): persist a trained
+//! SupportNet/KeyNet next to the index artifacts so `Catalog`
+//! collections can carry a query mapper and serving replicas reload
+//! trained models without retraining.
+//!
+//! Layout mirrors the index artifact framing (`crate::index::artifact`),
+//! little-endian throughout:
+//!
+//! ```text
+//! magic    b"AMNN"
+//! version  u32 (currently 1)
+//! kind     len-prefixed utf8 tag ("supportnet" | "keynet")
+//! label    len-prefixed utf8 model label
+//! payload  u64 length + spec block + named parameter tensors
+//! checksum u64 FNV-1a over the payload
+//! ```
+//!
+//! The payload holds the [`NetSpec`] knobs (d, c, h, layers, nx,
+//! residual, homogenize, alpha, beta) followed by the parameter tensors
+//! in ABI order, each name-prefixed so drift between spec and checkpoint
+//! is a typed error. Corrupt headers, short reads, checksum mismatches
+//! and spec/tensor mismatches all fail loading — never panic — and a
+//! reloaded model is bit-identical to the saved one.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::index::artifact::{
+    fnv1a64, r_bool, r_f32, r_str, r_tensor, r_u32, r_u64, w_bool, w_f32, w_str, w_tensor, w_u32,
+    w_u64,
+};
+use crate::model::RustModel;
+use crate::nn::{ModelKind, NetSpec, Network};
+
+/// Model-artifact magic bytes.
+pub const MAGIC: &[u8; 4] = b"AMNN";
+/// Current model artifact format version.
+pub const VERSION: u32 = 1;
+/// Conventional file extension for model artifacts.
+pub const EXTENSION: &str = "amm";
+
+fn write_payload(w: &mut dyn Write, model: &RustModel) -> Result<()> {
+    let spec = model.spec();
+    w_u32(w, spec.d as u32)?;
+    w_u32(w, spec.c as u32)?;
+    w_u32(w, spec.h as u32)?;
+    w_u32(w, spec.layers as u32)?;
+    w_u32(w, spec.nx as u32)?;
+    w_bool(w, spec.residual)?;
+    w_bool(w, spec.homogenize)?;
+    w_f32(w, spec.alpha)?;
+    w_f32(w, spec.beta)?;
+    let specs = spec.param_specs();
+    w_u32(w, specs.len() as u32)?;
+    for ((name, _), tensor) in specs.iter().zip(model.params()) {
+        w_str(w, name)?;
+        w_tensor(w, tensor)?;
+    }
+    Ok(())
+}
+
+fn read_payload(r: &mut dyn Read, kind: ModelKind, label: &str) -> Result<RustModel> {
+    let d = r_u32(r)? as usize;
+    let c = r_u32(r)? as usize;
+    let h = r_u32(r)? as usize;
+    let layers = r_u32(r)? as usize;
+    let nx = r_u32(r)? as usize;
+    let residual = r_bool(r)?;
+    let homogenize = r_bool(r)?;
+    let alpha = r_f32(r)?;
+    let beta = r_f32(r)?;
+    let spec = NetSpec {
+        model: kind,
+        d,
+        c,
+        h,
+        layers,
+        nx,
+        residual,
+        homogenize,
+        alpha,
+        beta,
+    };
+    spec.validate()
+        .with_context(|| format!("model artifact '{label}' carries an invalid spec"))?;
+    let want = spec.param_specs();
+    let n = r_u32(r)? as usize;
+    ensure!(
+        n == want.len(),
+        "model artifact '{label}' holds {n} tensors, spec wants {}",
+        want.len()
+    );
+    let mut params = Vec::with_capacity(n);
+    for (want_name, _) in &want {
+        let got_name = r_str(r)?;
+        ensure!(
+            &got_name == want_name,
+            "model artifact '{label}': tensor '{got_name}' where '{want_name}' expected"
+        );
+        params.push(r_tensor(r)?);
+    }
+    // Network::new re-validates every tensor shape against the spec.
+    let net = Network::new(spec, params)
+        .with_context(|| format!("model artifact '{label}' payload inconsistent"))?;
+    Ok(RustModel::new(label, net))
+}
+
+/// Write the complete framed artifact to any writer.
+pub fn write_to(w: &mut dyn Write, model: &RustModel) -> Result<()> {
+    let mut payload = Vec::new();
+    write_payload(&mut payload, model)?;
+    w.write_all(MAGIC)?;
+    w_u32(w, VERSION)?;
+    w_str(w, crate::model::AmortizedModel::kind(model).as_str())?;
+    w_str(w, crate::model::AmortizedModel::label(model))?;
+    w_u64(w, payload.len() as u64)?;
+    w.write_all(&payload)?;
+    w_u64(w, fnv1a64(&payload))?;
+    Ok(())
+}
+
+/// Load a model from any reader, verifying the checksum before a single
+/// payload byte is interpreted.
+pub fn load_from(r: &mut dyn Read) -> Result<RustModel> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)
+        .context("reading model artifact magic")?;
+    ensure!(
+        &magic == MAGIC,
+        "bad model artifact magic {magic:?} (expected {MAGIC:?})"
+    );
+    let version = r_u32(r)?;
+    ensure!(
+        version == VERSION,
+        "unsupported model artifact version {version} (this build reads version {VERSION})"
+    );
+    let kind = ModelKind::parse(&r_str(r)?)?;
+    let label = r_str(r)?;
+    let plen = r_u64(r)?;
+    ensure!(
+        plen <= 1 << 31,
+        "implausible model artifact payload length {plen}"
+    );
+    let mut payload = vec![0u8; plen as usize];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("model artifact truncated: expected a {plen}-byte payload"))?;
+    let want = r_u64(r).context("model artifact truncated: missing checksum")?;
+    let got = fnv1a64(&payload);
+    ensure!(
+        got == want,
+        "model artifact checksum mismatch (stored {want:#018x}, computed {got:#018x}): corrupt file"
+    );
+    let mut cur: &[u8] = &payload;
+    let model = read_payload(&mut cur, kind, &label)?;
+    ensure!(
+        cur.is_empty(),
+        "model artifact '{label}' has {} trailing payload bytes",
+        cur.len()
+    );
+    Ok(model)
+}
+
+/// Save a model artifact to disk.
+pub fn save(path: &Path, model: &RustModel) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating model artifact {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    write_to(&mut w, model)?;
+    w.flush()
+        .with_context(|| format!("flushing model artifact {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a model artifact from disk.
+pub fn load(path: &Path) -> Result<RustModel> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening model artifact {}", path.display()))?;
+    let mut r = std::io::BufReader::new(f);
+    load_from(&mut r).with_context(|| format!("loading model artifact {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::AmortizedModel;
+
+    fn sample(kind: ModelKind) -> RustModel {
+        let spec = NetSpec::new(kind, 6, 2, 8, 3);
+        RustModel::init(format!("unit.{kind}"), spec, 42).unwrap()
+    }
+
+    fn bytes_of(model: &RustModel) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_to(&mut buf, model).unwrap();
+        buf
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        for kind in [ModelKind::SupportNet, ModelKind::KeyNet] {
+            let model = sample(kind);
+            let buf = bytes_of(&model);
+            let back = load_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(back.label(), model.label());
+            assert_eq!(back.spec(), model.spec());
+            for (a, b) in back.params().iter().zip(model.params()) {
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn checksum_valid_but_inconsistent_payload_is_an_error() {
+        // hand-frame a payload whose first tensor carries the wrong name:
+        // the checksum passes, the semantic validation must not
+        let model = sample(ModelKind::KeyNet);
+        let mut payload = Vec::new();
+        write_payload(&mut payload, &model).unwrap();
+        // payload layout: 5 u32 + 2 bool(u32) + 2 f32 + n_tensors u32,
+        // then the first name "wx0" as len-prefixed utf8 at offset 40+4
+        let name_off = 9 * 4 + 4 + 4; // spec block + n_tensors + name len
+        assert_eq!(&payload[name_off..name_off + 3], b"wx0");
+        payload[name_off] = b'q';
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        w_u32(&mut buf, VERSION).unwrap();
+        w_str(&mut buf, "keynet").unwrap();
+        w_str(&mut buf, "tampered").unwrap();
+        w_u64(&mut buf, payload.len() as u64).unwrap();
+        buf.extend_from_slice(&payload);
+        w_u64(&mut buf, fnv1a64(&payload)).unwrap();
+        let err = load_from(&mut buf.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("expected"), "{err:#}");
+    }
+
+    #[test]
+    fn homogenized_keynet_tag_is_rejected() {
+        // a keynet artifact whose payload claims homogenize=true must be
+        // a typed spec error (NetSpec::validate), not a served model
+        let model = sample(ModelKind::KeyNet);
+        let mut payload = Vec::new();
+        write_payload(&mut payload, &model).unwrap();
+        let homog_off = 6 * 4; // after d,c,h,layers,nx,residual
+        assert_eq!(payload[homog_off], 0);
+        payload[homog_off] = 1;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        w_u32(&mut buf, VERSION).unwrap();
+        w_str(&mut buf, "keynet").unwrap();
+        w_str(&mut buf, "tampered").unwrap();
+        w_u64(&mut buf, payload.len() as u64).unwrap();
+        buf.extend_from_slice(&payload);
+        w_u64(&mut buf, fnv1a64(&payload)).unwrap();
+        assert!(load_from(&mut buf.as_slice()).is_err());
+    }
+}

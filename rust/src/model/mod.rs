@@ -1,11 +1,72 @@
-//! Model-side runtime objects: parameter sets (checkpoint IO, pure Rust)
-//! and the user-facing amortized-model handles (SupportNet / KeyNet
-//! inference through PJRT, behind the `xla` feature).
+//! Model-side runtime objects, backend-agnostic: the [`AmortizedModel`]
+//! inference trait with a pure-Rust implementation ([`RustModel`], the
+//! default build) and an XLA/PJRT implementation ([`XlaModel`], behind
+//! the `xla` feature, unchanged semantics); parameter checkpoints
+//! ([`ParamSet`]); and versioned, checksummed model artifacts
+//! ([`artifact`]) that persist trained models next to index artifacts.
 
 #[cfg(feature = "xla")]
 pub mod amortized;
+pub mod artifact;
 pub mod params;
+pub mod rust_model;
 
+use anyhow::{ensure, Result};
+
+use crate::tensor::Tensor;
+
+pub use crate::nn::ModelKind;
 #[cfg(feature = "xla")]
-pub use amortized::AmortizedModel;
+pub use amortized::XlaModel;
 pub use params::ParamSet;
+pub use rust_model::RustModel;
+
+/// A trained amortized model (SupportNet or KeyNet) ready for batched
+/// inference on the request path — the paper's two approaches behind one
+/// backend-agnostic surface. Implemented by the pure-Rust [`RustModel`]
+/// and, behind the `xla` feature, by the PJRT-backed [`XlaModel`].
+///
+/// Deliberately *not* `Send`-bounded: the PJRT implementation pins to
+/// one thread. [`RustModel`] itself is `Send + Sync`, so pure-Rust
+/// callers (the server's mapper factory, the catalog) can move it across
+/// threads as the concrete type.
+pub trait AmortizedModel {
+    /// Human-readable label (config/artifact name) for reports.
+    fn label(&self) -> &str;
+
+    /// SupportNet or KeyNet.
+    fn kind(&self) -> ModelKind;
+
+    /// Embedding dimension `d`.
+    fn dim(&self) -> usize;
+
+    /// Number of output heads `c` (clusters routed over; 1 for the
+    /// mapped query path).
+    fn n_heads(&self) -> usize;
+
+    /// FLOPs for scoring one query (paper's cost axes).
+    fn score_flops(&self) -> u64;
+
+    /// FLOPs for recovering keys for one query (SupportNet pays the
+    /// per-head backward pass, Sec. 4.4).
+    fn key_flops(&self) -> u64;
+
+    /// Per-cluster support scores for a batch of queries: `[n, c]`.
+    fn scores(&self, queries: &Tensor) -> Result<Tensor>;
+
+    /// Scores **and** predicted keys: `([n, c], [n, c, d])`.
+    fn scores_and_keys(&self, queries: &Tensor) -> Result<(Tensor, Tensor)>;
+
+    /// Predicted top key per query, flattened to `[n, d]` (`c` must
+    /// be 1): the drop-in replacement vector `ŷ(x)` of Sec. 4.4.
+    fn map_queries(&self, queries: &Tensor) -> Result<Tensor> {
+        ensure!(
+            self.n_heads() == 1,
+            "map_queries requires a c=1 model, got c={}",
+            self.n_heads()
+        );
+        let (_, keys) = self.scores_and_keys(queries)?;
+        let n = queries.rows();
+        Ok(keys.reshape(&[n, self.dim()]))
+    }
+}

@@ -1,0 +1,121 @@
+//! The pure-Rust [`AmortizedModel`]: a labelled [`nn::Network`] — the
+//! default-build implementation that [`crate::trainer::rust`] produces
+//! and [`crate::model::artifact`] persists. `Send + Sync`, so the
+//! serving coordinator can build it anywhere (unlike the PJRT handle).
+
+use anyhow::Result;
+
+use crate::model::AmortizedModel;
+use crate::nn::{ModelKind, NetSpec, Network};
+use crate::tensor::Tensor;
+
+/// A trained pure-Rust SupportNet or KeyNet.
+#[derive(Clone, Debug)]
+pub struct RustModel {
+    label: String,
+    net: Network,
+}
+
+impl RustModel {
+    pub fn new(label: impl Into<String>, net: Network) -> RustModel {
+        RustModel {
+            label: label.into(),
+            net,
+        }
+    }
+
+    /// Freshly initialized (untrained) model — tests and demos.
+    pub fn init(label: impl Into<String>, spec: NetSpec, seed: u64) -> Result<RustModel> {
+        Ok(RustModel::new(label, Network::init(spec, seed)?))
+    }
+
+    pub fn spec(&self) -> &NetSpec {
+        self.net.spec()
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    pub fn params(&self) -> &[Tensor] {
+        self.net.params()
+    }
+}
+
+impl AmortizedModel for RustModel {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn kind(&self) -> ModelKind {
+        self.net.spec().model
+    }
+
+    fn dim(&self) -> usize {
+        self.net.spec().d
+    }
+
+    fn n_heads(&self) -> usize {
+        self.net.spec().c
+    }
+
+    fn score_flops(&self) -> u64 {
+        self.net.spec().forward_flops()
+    }
+
+    fn key_flops(&self) -> u64 {
+        self.net.spec().key_flops()
+    }
+
+    fn scores(&self, queries: &Tensor) -> Result<Tensor> {
+        self.net.scores(queries)
+    }
+
+    fn scores_and_keys(&self, queries: &Tensor) -> Result<(Tensor, Tensor)> {
+        self.net.scores_and_keys(queries)
+    }
+}
+
+/// Static guarantee the serving coordinator relies on: the pure-Rust
+/// model crosses threads (its factory closure must be `Send`).
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<RustModel>();
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::normalize_rows;
+    use crate::util::Rng;
+
+    fn unit(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        normalize_rows(&mut t);
+        t
+    }
+
+    #[test]
+    fn trait_surface_delegates_to_network() {
+        let spec = NetSpec::new(ModelKind::KeyNet, 6, 1, 8, 2);
+        let m = RustModel::init("t.keynet", spec, 1).unwrap();
+        assert_eq!(m.label(), "t.keynet");
+        assert_eq!((m.dim(), m.n_heads()), (6, 1));
+        assert_eq!(m.kind(), ModelKind::KeyNet);
+        assert_eq!(m.score_flops(), m.key_flops()); // keynet: keys from fwd
+        let q = unit(&[3, 6], 2);
+        let mapped = m.map_queries(&q).unwrap();
+        assert_eq!(mapped.shape(), &[3, 6]);
+        let (_, keys) = m.scores_and_keys(&q).unwrap();
+        assert_eq!(mapped.data(), keys.data());
+    }
+
+    #[test]
+    fn map_queries_requires_single_head() {
+        let spec = NetSpec::new(ModelKind::SupportNet, 4, 3, 6, 2);
+        let m = RustModel::init("router", spec, 3).unwrap();
+        assert!(m.key_flops() > m.score_flops()); // supportnet pays bwd
+        assert!(m.map_queries(&unit(&[2, 4], 4)).is_err());
+    }
+}

@@ -1,0 +1,92 @@
+//! The paper's activation (Sec. 3.3) and its first two derivatives:
+//!
+//! ```text
+//! sigma_{alpha,beta}(x) = alpha*x + (1-alpha)/beta * softplus(beta*x)
+//! ```
+//!
+//! As `beta -> inf` this approaches leaky-ReLU with negative slope
+//! `alpha`; it is smooth everywhere, which the SupportNet training loss
+//! needs: the gradient-matching term differentiates *through* the
+//! input-gradient, so the second derivative must exist (and is exported
+//! here for the tape's `ActPrime` VJP).
+
+/// Numerically stable softplus: `log1p(exp(t)) = max(t,0) + log1p(exp(-|t|))`.
+#[inline]
+fn softplus(t: f32) -> f32 {
+    t.max(0.0) + (-t.abs()).exp().ln_1p()
+}
+
+/// Numerically stable logistic sigmoid.
+#[inline]
+fn sigmoid(t: f32) -> f32 {
+    if t >= 0.0 {
+        1.0 / (1.0 + (-t).exp())
+    } else {
+        let e = t.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// `sigma(x)`.
+#[inline]
+pub fn act(x: f32, alpha: f32, beta: f32) -> f32 {
+    alpha * x + (1.0 - alpha) / beta * softplus(beta * x)
+}
+
+/// `sigma'(x) = alpha + (1-alpha) * sigmoid(beta*x)`.
+#[inline]
+pub fn act_prime(x: f32, alpha: f32, beta: f32) -> f32 {
+    alpha + (1.0 - alpha) * sigmoid(beta * x)
+}
+
+/// `sigma''(x) = (1-alpha) * beta * s(1-s)` with `s = sigmoid(beta*x)`.
+#[inline]
+pub fn act_second(x: f32, alpha: f32, beta: f32) -> f32 {
+    let s = sigmoid(beta * x);
+    (1.0 - alpha) * beta * s * (1.0 - s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A: f32 = 0.1;
+    const B: f32 = 20.0;
+
+    #[test]
+    fn limits_match_leaky_relu() {
+        // far from zero the smooth unit coincides with leaky-ReLU
+        assert!((act(3.0, A, B) - 3.0).abs() < 1e-4);
+        assert!((act(-3.0, A, B) - (-0.3)).abs() < 1e-4);
+        assert!((act_prime(3.0, A, B) - 1.0).abs() < 1e-4);
+        assert!((act_prime(-3.0, A, B) - A).abs() < 1e-4);
+    }
+
+    #[test]
+    fn derivatives_match_finite_differences() {
+        let eps = 1e-3f32;
+        for &x in &[-2.0f32, -0.3, -0.01, 0.0, 0.02, 0.5, 1.7] {
+            let fd1 = (act(x + eps, A, B) - act(x - eps, A, B)) / (2.0 * eps);
+            assert!(
+                (fd1 - act_prime(x, A, B)).abs() < 1e-3,
+                "sigma' at {x}: fd {fd1} vs {}",
+                act_prime(x, A, B)
+            );
+            let fd2 = (act_prime(x + eps, A, B) - act_prime(x - eps, A, B)) / (2.0 * eps);
+            assert!(
+                (fd2 - act_second(x, A, B)).abs() < 2e-2 * (1.0 + fd2.abs()),
+                "sigma'' at {x}: fd {fd2} vs {}",
+                act_second(x, A, B)
+            );
+        }
+    }
+
+    #[test]
+    fn no_overflow_at_extremes() {
+        for &x in &[-1e4f32, 1e4] {
+            assert!(act(x, A, B).is_finite());
+            assert!(act_prime(x, A, B).is_finite());
+            assert!(act_second(x, A, B).is_finite());
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Small dense matmul helpers for the nn layer's forward passes and tape
+//! VJPs. The nets here are tiny (h up to ~128), so these are plain
+//! single-threaded loops ordered for row-contiguous access — the batched
+//! MIPS hot path keeps using [`crate::tensor::gemm_nt`].
+
+use crate::tensor::Tensor;
+
+/// `A @ B` for `a [m,k]`, `b [k,n]` -> `[m,n]`.
+pub fn matmul_nn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.row_width());
+    let (kb, n) = (b.rows(), b.row_width());
+    assert_eq!(k, kb, "matmul_nn inner dim {k} vs {kb}");
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let ai = a.row(i);
+        let oi = out.row_mut(i);
+        for (p, &av) in ai.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let bp = b.row(p);
+            for (o, &bv) in oi.iter_mut().zip(bp) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `A @ B^T` for `a [m,k]`, `b [n,k]` -> `[m,n]`.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.row_width());
+    let (n, kb) = (b.rows(), b.row_width());
+    assert_eq!(k, kb, "matmul_nt inner dim {k} vs {kb}");
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let ai = a.row(i);
+        let oi = out.row_mut(i);
+        for (j, o) in oi.iter_mut().enumerate() {
+            *o = crate::tensor::dot(ai, b.row(j));
+        }
+    }
+    out
+}
+
+/// `A^T @ B` for `a [m,k]`, `b [m,n]` -> `[k,n]`.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.row_width());
+    let (mb, n) = (b.rows(), b.row_width());
+    assert_eq!(m, mb, "matmul_tn outer dim {m} vs {mb}");
+    let mut out = Tensor::zeros(&[k, n]);
+    for r in 0..m {
+        let ar = a.row(r);
+        let br = b.row(r);
+        for (p, &av) in ar.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let op = out.row_mut(p);
+            for (o, &bv) in op.iter_mut().zip(br) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Column sums of `a [m,n]` -> `[n]` (bias gradients).
+pub fn colsum(a: &Tensor) -> Tensor {
+    let n = a.row_width();
+    let mut out = Tensor::zeros(&[n]);
+    for i in 0..a.rows() {
+        for (o, &v) in out.data_mut().iter_mut().zip(a.row(i)) {
+            *o += v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    fn naive(a: &Tensor, b: &Tensor, ta: bool, tb: bool) -> Vec<f32> {
+        let (m, k) = if ta {
+            (a.row_width(), a.rows())
+        } else {
+            (a.rows(), a.row_width())
+        };
+        let n = if tb { b.rows() } else { b.row_width() };
+        let at = |i: usize, p: usize| {
+            if ta {
+                a.row(p)[i]
+            } else {
+                a.row(i)[p]
+            }
+        };
+        let bt = |p: usize, j: usize| {
+            if tb {
+                b.row(j)[p]
+            } else {
+                b.row(p)[j]
+            }
+        };
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    out[i * n + j] += at(i, p) * bt(p, j);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn variants_match_naive() {
+        let a = randt(&[5, 7], 1);
+        let b = randt(&[7, 4], 2);
+        let c = randt(&[4, 7], 3);
+        let d = randt(&[5, 3], 4);
+        for (got, want) in [
+            (matmul_nn(&a, &b), naive(&a, &b, false, false)),
+            (matmul_nt(&a, &c), naive(&a, &c, false, true)),
+            (matmul_tn(&a, &d), naive(&a, &d, true, false)),
+        ] {
+            assert_eq!(got.data().len(), want.len());
+            for (g, w) in got.data().iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn colsum_matches_naive() {
+        let a = randt(&[6, 3], 5);
+        let s = colsum(&a);
+        for j in 0..3 {
+            let want: f32 = (0..6).map(|i| a.row(i)[j]).sum();
+            assert!((s.data()[j] - want).abs() < 1e-5);
+        }
+    }
+}

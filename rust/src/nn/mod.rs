@@ -1,0 +1,29 @@
+//! Pure-Rust neural-network layer for the paper's learned models — the
+//! backend that makes SupportNet/KeyNet training and serving work in the
+//! default build, with no XLA, Python or network access.
+//!
+//! * [`spec`] — [`NetSpec`]: the rectangular trunk architecture
+//!   (Sec. 3.1), the paper's width-for-budget sizing rule (Eq. 3.3) and
+//!   the ordered parameter ABI shared with checkpoints/artifacts.
+//! * [`activation`] — the smooth leaky unit `σ_{α,β}` and its first two
+//!   derivatives (the second is what lets the gradient-matching loss
+//!   backpropagate through the input gradient).
+//! * [`tape`] — a minimal reverse-mode tape with hand-written VJPs;
+//!   append-only, so one reverse sweep differentiates any graph built on
+//!   it, including the hand-derived input-gradient recurrence.
+//! * [`net`] — [`Network`]: SupportNet (homogenized loosely-constrained
+//!   ICNN, keys via the input gradient) and KeyNet (direct key
+//!   regression with the Euler score-consistency loss) on one trunk.
+//!
+//! The training loop that drives this lives in [`crate::trainer::rust`];
+//! the serving-side handle is [`crate::model::RustModel`].
+
+pub mod activation;
+pub mod math;
+pub mod net;
+pub mod spec;
+pub mod tape;
+
+pub use net::{Lambdas, LossParts, Network};
+pub use spec::{inject_layers, width_for_budget, ModelKind, NetSpec};
+pub use tape::{NodeId, Tape};

@@ -1,0 +1,594 @@
+//! The SupportNet/KeyNet network: forward inference, hand-derived input
+//! gradients (SupportNet key recovery), and the paper's training losses
+//! with gradients for every parameter.
+//!
+//! One set of graph builders serves both inference and training — the
+//! forward trunk and the input-gradient recurrence are built on the
+//! [`Tape`] either way, so the quantity the trainer matches against
+//! `y*` is bit-identical to the quantity served at inference time.
+//!
+//! The input gradient is *not* produced by differentiating code: it is
+//! the closed-form reverse recurrence of the trunk,
+//!
+//! ```text
+//! a_L = Wout[:, j],   s_i = a_i ⊙ σ'(pre_i),
+//! a_{i-1} = Wz_i^T s_i (+ a_i if residual),
+//! ∇_x g_j = Wx0 s_1 + Σ_{i ∈ inject} Wx_i s_i,
+//! ```
+//!
+//! expressed in tape ops so the gradient-matching loss (Sec. 3.2) can
+//! differentiate through it. With the homogenization wrapper
+//! `f(x) = ‖x‖ g(x/‖x‖)` the served key becomes
+//! `∇f(x) = g(u)·u + (I − u u^T)∇g(u)` with `u = x/‖x‖`, which satisfies
+//! Euler's identity `⟨∇f(x), x⟩ = f(x)` exactly (asserted by the
+//! property tests).
+
+use anyhow::{ensure, Result};
+
+use crate::nn::spec::{ModelKind, NetSpec};
+use crate::nn::tape::{NodeId, Tape};
+use crate::tensor::Tensor;
+
+/// Loss weights, named after the uniform (lam_a, lam_b) convention the
+/// train step uses (see [`crate::trainer::TrainOpts`]):
+/// SupportNet: `lam_a`=score, `lam_b`=gradient-matching;
+/// KeyNet: `lam_a`=consistency, `lam_b`=key regression.
+/// `lam_icnn` weights the SupportNet convexity penalty.
+#[derive(Clone, Copy, Debug)]
+pub struct Lambdas {
+    pub lam_a: f32,
+    pub lam_b: f32,
+    pub lam_icnn: f32,
+}
+
+/// Scalar loss terms of one batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LossParts {
+    pub total: f32,
+    /// SupportNet: score loss; KeyNet: key-regression loss.
+    pub loss_a: f32,
+    /// SupportNet: gradient-matching loss; KeyNet: consistency loss.
+    pub loss_b: f32,
+    /// ICNN non-negativity penalty (0 for KeyNet).
+    pub penalty: f32,
+}
+
+/// A network instance: spec + parameters in [`NetSpec::param_specs`]
+/// order.
+#[derive(Clone, Debug)]
+pub struct Network {
+    spec: NetSpec,
+    params: Vec<Tensor>,
+    /// Parameter names in spec order, resolved once — name lookups
+    /// during graph building must not re-derive (and re-allocate) the
+    /// spec's param list per call.
+    names: Vec<String>,
+}
+
+/// Per-batch graph handles shared by inference and training builders.
+struct Trunk {
+    /// Pre-activation of every hidden layer, in order.
+    pres: Vec<NodeId>,
+    /// Head output `[B, d_out]` (raw, before homogenization).
+    out: NodeId,
+}
+
+impl Network {
+    /// Wrap explicit parameters, validating shapes against the spec.
+    pub fn new(spec: NetSpec, params: Vec<Tensor>) -> Result<Network> {
+        spec.validate()?;
+        let specs = spec.param_specs();
+        ensure!(
+            params.len() == specs.len(),
+            "{} params supplied, spec wants {}",
+            params.len(),
+            specs.len()
+        );
+        for (p, (name, shape)) in params.iter().zip(&specs) {
+            ensure!(
+                p.shape() == &shape[..],
+                "param {name} has shape {:?}, spec wants {:?}",
+                p.shape(),
+                shape
+            );
+        }
+        let names = specs.into_iter().map(|(n, _)| n).collect();
+        Ok(Network {
+            spec,
+            params,
+            names,
+        })
+    }
+
+    /// Fresh network with the paper's initialization.
+    pub fn init(spec: NetSpec, seed: u64) -> Result<Network> {
+        let params = spec.init_params(seed);
+        Network::new(spec, params)
+    }
+
+    pub fn spec(&self) -> &NetSpec {
+        &self.spec
+    }
+
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    /// In-place access for the optimizer's parameter updates (element
+    /// values only — shapes were validated at construction and tensors
+    /// must not be replaced wholesale).
+    pub fn params_mut(&mut self) -> &mut [Tensor] {
+        &mut self.params
+    }
+
+    /// Replace the parameter tensors (trainer EMA snapshots).
+    pub fn set_params(&mut self, params: Vec<Tensor>) -> Result<()> {
+        *self = Network::new(self.spec.clone(), params)?;
+        Ok(())
+    }
+
+    fn param_index(&self, name: &str) -> usize {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .unwrap_or_else(|| panic!("no param named {name}"))
+    }
+
+    /// Push every parameter onto the tape, returning ids in spec order.
+    fn param_leaves(&self, tape: &mut Tape) -> Vec<NodeId> {
+        self.params.iter().map(|p| tape.leaf(p.clone())).collect()
+    }
+
+    /// Build the shared trunk + head at `input` (`[B, d]` node).
+    fn build_trunk(&self, tape: &mut Tape, pids: &[NodeId], input: NodeId) -> Trunk {
+        let spec = &self.spec;
+        let (alpha, beta) = (spec.alpha, spec.beta);
+        let inject = spec.inject();
+        let pid = |name: &str| pids[self.param_index(name)];
+
+        let mut pres = Vec::with_capacity(spec.layers);
+        let xw = tape.matmul(input, pid("wx0"));
+        let pre0 = tape.add_bias(xw, pid("b0"));
+        pres.push(pre0);
+        let mut z = tape.act(pre0, alpha, beta);
+        for li in 1..spec.layers {
+            let mut pre = tape.matmul(z, pid(&format!("wz{li}")));
+            if inject.contains(&li) {
+                let xi = tape.matmul(input, pid(&format!("wx{li}")));
+                pre = tape.add(pre, xi);
+            }
+            let pre = tape.add_bias(pre, pid(&format!("b{li}")));
+            pres.push(pre);
+            let a = tape.act(pre, alpha, beta);
+            z = if spec.residual { tape.add(z, a) } else { a };
+        }
+        let zo = tape.matmul(z, pid("wout"));
+        let out = tape.add_bias(zo, pid("bout"));
+        Trunk { pres, out }
+    }
+
+    /// Hand-derived input gradient `∇_input g_head` of the raw trunk,
+    /// built from tape ops (so it is itself differentiable): `[B, d]`.
+    fn build_input_grad(
+        &self,
+        tape: &mut Tape,
+        pids: &[NodeId],
+        trunk: &Trunk,
+        head: usize,
+        batch: usize,
+    ) -> NodeId {
+        let spec = &self.spec;
+        let (alpha, beta) = (spec.alpha, spec.beta);
+        let inject = spec.inject();
+        let pid = |name: &str| pids[self.param_index(name)];
+
+        let wcol = tape.slice_cols(pid("wout"), head, 1); // [h, 1]
+        let mut a = tape.bcast_rows(wcol, batch); // [B, h]
+        let mut gx: Option<NodeId> = None;
+        let add_gx = |tape: &mut Tape, gx: &mut Option<NodeId>, c: NodeId| {
+            *gx = Some(match *gx {
+                Some(acc) => tape.add(acc, c),
+                None => c,
+            });
+        };
+        for li in (1..spec.layers).rev() {
+            let sp = tape.act_prime(trunk.pres[li], alpha, beta);
+            let s = tape.mul(a, sp);
+            if inject.contains(&li) {
+                let c = tape.matmul_t(s, pid(&format!("wx{li}")));
+                add_gx(tape, &mut gx, c);
+            }
+            let back = tape.matmul_t(s, pid(&format!("wz{li}")));
+            a = if spec.residual { tape.add(back, a) } else { back };
+        }
+        let sp0 = tape.act_prime(trunk.pres[0], alpha, beta);
+        let s0 = tape.mul(a, sp0);
+        let c0 = tape.matmul_t(s0, pid("wx0"));
+        add_gx(tape, &mut gx, c0);
+        gx.expect("at least the wx0 path contributes")
+    }
+
+    /// Row norms (clamped away from zero) and unit-normalized copy.
+    fn normalize(x: &Tensor) -> (Tensor, Tensor) {
+        let (n, d) = (x.rows(), x.row_width());
+        let mut r = Tensor::zeros(&[n]);
+        let mut u = x.clone();
+        for i in 0..n {
+            let nrm = crate::tensor::dot(x.row(i), x.row(i)).sqrt().max(1e-12);
+            r.data_mut()[i] = nrm;
+            for v in u.row_mut(i) {
+                *v /= nrm;
+            }
+        }
+        debug_assert_eq!(u.row_width(), d);
+        (r, u)
+    }
+
+    fn check_queries(&self, x: &Tensor) -> Result<()> {
+        ensure!(
+            x.row_width() == self.spec.d,
+            "query dim {} != model dim {}",
+            x.row_width(),
+            self.spec.d
+        );
+        ensure!(x.rows() > 0, "empty query batch");
+        Ok(())
+    }
+
+    /// SupportNet graph: (scores node `[B,c]`, per-head key nodes
+    /// `[B,d]`). `with_keys=false` skips the input-gradient graphs.
+    fn build_supportnet(
+        &self,
+        tape: &mut Tape,
+        pids: &[NodeId],
+        x: &Tensor,
+        with_keys: bool,
+    ) -> (NodeId, Vec<NodeId>) {
+        let spec = &self.spec;
+        let batch = x.rows();
+        let (scores, keys) = if spec.homogenize {
+            let (r, u) = Self::normalize(x);
+            let u_leaf = tape.leaf(u);
+            let r_leaf = tape.leaf(r);
+            let trunk = self.build_trunk(tape, pids, u_leaf);
+            let scores = tape.scale_rows(trunk.out, r_leaf);
+            let mut keys = Vec::new();
+            if with_keys {
+                for j in 0..spec.c {
+                    let gx = self.build_input_grad(tape, pids, &trunk, j, batch);
+                    // ∇f = g(u)·u + (I − u uᵀ)∇g(u)
+                    let gj = tape.slice_cols(trunk.out, j, 1); // [B,1]
+                    let term1 = tape.scale_rows(u_leaf, gj);
+                    let radial = tape.row_dot(gx, u_leaf); // [B]
+                    let term3 = tape.scale_rows(u_leaf, radial);
+                    let sum = tape.add(term1, gx);
+                    keys.push(tape.sub(sum, term3));
+                }
+            }
+            (scores, keys)
+        } else {
+            let x_leaf = tape.leaf(x.clone());
+            let trunk = self.build_trunk(tape, pids, x_leaf);
+            let mut keys = Vec::new();
+            if with_keys {
+                for j in 0..spec.c {
+                    keys.push(self.build_input_grad(tape, pids, &trunk, j, batch));
+                }
+            }
+            (trunk.out, keys)
+        };
+        (scores, keys)
+    }
+
+    /// Per-cluster support scores `[n, c]`.
+    ///
+    /// SupportNet reads them from the (homogenized) forward pass; KeyNet
+    /// derives them as `⟨F_j(x), x⟩` (Euler consistency).
+    pub fn scores(&self, x: &Tensor) -> Result<Tensor> {
+        self.check_queries(x)?;
+        match self.spec.model {
+            ModelKind::SupportNet => {
+                let mut tape = Tape::new();
+                let pids = self.param_leaves(&mut tape);
+                let (scores, _) = self.build_supportnet(&mut tape, &pids, x, false);
+                Ok(tape.value(scores).clone())
+            }
+            ModelKind::KeyNet => Ok(self.scores_and_keys(x)?.0),
+        }
+    }
+
+    /// Scores **and** predicted keys: `([n,c], [n,c,d])`.
+    ///
+    /// SupportNet pays the per-head backward recurrence here (the
+    /// paper's Table-1 asymmetry); KeyNet gets keys from the same
+    /// forward pass.
+    pub fn scores_and_keys(&self, x: &Tensor) -> Result<(Tensor, Tensor)> {
+        self.check_queries(x)?;
+        let (n, d, c) = (x.rows(), self.spec.d, self.spec.c);
+        match self.spec.model {
+            ModelKind::SupportNet => {
+                let mut tape = Tape::new();
+                let pids = self.param_leaves(&mut tape);
+                let (scores, key_nodes) = self.build_supportnet(&mut tape, &pids, x, true);
+                let mut keys = Tensor::zeros(&[n, c, d]);
+                for (j, kn) in key_nodes.iter().enumerate() {
+                    let kv = tape.value(*kn);
+                    for b in 0..n {
+                        let off = (b * c + j) * d;
+                        keys.data_mut()[off..off + d].copy_from_slice(kv.row(b));
+                    }
+                }
+                Ok((tape.value(scores).clone(), keys))
+            }
+            ModelKind::KeyNet => {
+                let mut tape = Tape::new();
+                let pids = self.param_leaves(&mut tape);
+                let x_leaf = tape.leaf(x.clone());
+                let trunk = self.build_trunk(&mut tape, &pids, x_leaf);
+                let out = tape.value(trunk.out).clone(); // [n, c*d]
+                let mut scores = Tensor::zeros(&[n, c]);
+                for b in 0..n {
+                    let row = out.row(b);
+                    for j in 0..c {
+                        scores.row_mut(b)[j] =
+                            crate::tensor::dot(&row[j * d..(j + 1) * d], x.row(b));
+                    }
+                }
+                Ok((scores, out.reshape(&[n, c, d])))
+            }
+        }
+    }
+
+    /// Training losses and parameter gradients for one batch:
+    /// `x [B,d]`, `y_star [B,c,d]`, `sigma [B,c]`.
+    pub fn loss_and_grads(
+        &self,
+        x: &Tensor,
+        y_star: &Tensor,
+        sigma: &Tensor,
+        lam: &Lambdas,
+    ) -> Result<(LossParts, Vec<Tensor>)> {
+        self.check_queries(x)?;
+        let (b, c, d) = (x.rows(), self.spec.c, self.spec.d);
+        ensure!(
+            y_star.shape() == &[b, c, d][..] && sigma.shape() == &[b, c][..],
+            "target shapes {:?}/{:?} don't match batch [{b},{c},{d}]",
+            y_star.shape(),
+            sigma.shape()
+        );
+        let head_targets = |j: usize| -> Tensor {
+            let mut t = Tensor::zeros(&[b, d]);
+            for bi in 0..b {
+                let off = (bi * c + j) * d;
+                t.row_mut(bi).copy_from_slice(&y_star.data()[off..off + d]);
+            }
+            t
+        };
+        let sigma_col = |j: usize| -> Tensor {
+            let mut t = Tensor::zeros(&[b]);
+            for bi in 0..b {
+                t.data_mut()[bi] = sigma.row(bi)[j];
+            }
+            t
+        };
+        // per-head weight turning mean-over-elements into the paper's
+        // mean over (B, c) of the per-head d-dim squared sum
+        let head_weight = d as f32 / c as f32;
+
+        let mut tape = Tape::new();
+        let pids = self.param_leaves(&mut tape);
+        let acc = |tape: &mut Tape, acc: Option<NodeId>, n: NodeId| -> Option<NodeId> {
+            Some(match acc {
+                Some(a) => tape.add(a, n),
+                None => n,
+            })
+        };
+
+        let (total, parts) = match self.spec.model {
+            ModelKind::SupportNet => {
+                let (scores, key_nodes) = self.build_supportnet(&mut tape, &pids, x, true);
+                let sig_leaf = tape.leaf(sigma.clone());
+                let ds = tape.sub(scores, sig_leaf);
+                let sq = tape.square(ds);
+                let l_score = tape.mean_all(sq);
+                let mut l_grad: Option<NodeId> = None;
+                for (j, kn) in key_nodes.iter().enumerate() {
+                    let yj = tape.leaf(head_targets(j));
+                    let dj = tape.sub(*kn, yj);
+                    let sqj = tape.square(dj);
+                    let mj = tape.mean_all(sqj);
+                    let wj = tape.scale(mj, head_weight);
+                    l_grad = acc(&mut tape, l_grad, wj);
+                }
+                let l_grad = l_grad.expect("c >= 1");
+                let mut pen: Option<NodeId> = None;
+                for idx in self.spec.icnn_penalty_indices() {
+                    let p = tape.neg_part_sq(pids[idx]);
+                    pen = acc(&mut tape, pen, p);
+                }
+                let pen = pen.expect("supportnet has wz/wout penalty targets");
+                let ta = tape.scale(l_score, lam.lam_a);
+                let tb = tape.scale(l_grad, lam.lam_b);
+                let tp = tape.scale(pen, lam.lam_icnn);
+                let tab = tape.add(ta, tb);
+                let total = tape.add(tab, tp);
+                let parts = LossParts {
+                    total: tape.scalar(total),
+                    loss_a: tape.scalar(l_score),
+                    loss_b: tape.scalar(l_grad),
+                    penalty: tape.scalar(pen),
+                };
+                (total, parts)
+            }
+            ModelKind::KeyNet => {
+                let x_leaf = tape.leaf(x.clone());
+                let trunk = self.build_trunk(&mut tape, &pids, x_leaf);
+                let mut l_key: Option<NodeId> = None;
+                let mut l_consist: Option<NodeId> = None;
+                for j in 0..c {
+                    let kj = tape.slice_cols(trunk.out, j * d, d);
+                    let yj = tape.leaf(head_targets(j));
+                    let dj = tape.sub(kj, yj);
+                    let sqj = tape.square(dj);
+                    let mj = tape.mean_all(sqj);
+                    let wj = tape.scale(mj, head_weight);
+                    l_key = acc(&mut tape, l_key, wj);
+
+                    let sj = tape.row_dot(kj, x_leaf); // Euler score ⟨F_j, x⟩
+                    let sig_leaf = tape.leaf(sigma_col(j));
+                    let dsj = tape.sub(sj, sig_leaf);
+                    let sqs = tape.square(dsj);
+                    let ms = tape.mean_all(sqs);
+                    let ws = tape.scale(ms, 1.0 / c as f32);
+                    l_consist = acc(&mut tape, l_consist, ws);
+                }
+                let (l_key, l_consist) = (l_key.expect("c >= 1"), l_consist.expect("c >= 1"));
+                let tb = tape.scale(l_key, lam.lam_b);
+                let ta = tape.scale(l_consist, lam.lam_a);
+                let total = tape.add(tb, ta);
+                let parts = LossParts {
+                    total: tape.scalar(total),
+                    loss_a: tape.scalar(l_key),
+                    loss_b: tape.scalar(l_consist),
+                    penalty: 0.0,
+                };
+                (total, parts)
+            }
+        };
+        let grads = tape.grad(total, &pids);
+        Ok((parts, grads))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::normalize_rows;
+    use crate::util::Rng;
+
+    fn unit(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        normalize_rows(&mut t);
+        t
+    }
+
+    fn targets(n: usize, c: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let x = unit(&[n, d], seed);
+        let y = unit(&[n * c, d], seed ^ 1).reshape(&[n, c, d]);
+        let mut s = Tensor::zeros(&[n, c]);
+        Rng::new(seed ^ 2).fill_normal(s.data_mut(), 0.3);
+        (x, y, s)
+    }
+
+    #[test]
+    fn keynet_scores_are_euler_consistent() {
+        let spec = NetSpec::new(ModelKind::KeyNet, 6, 2, 8, 3);
+        let net = Network::init(spec, 3).unwrap();
+        let x = unit(&[5, 6], 4);
+        let (scores, keys) = net.scores_and_keys(&x).unwrap();
+        assert_eq!(scores.shape(), &[5, 2]);
+        assert_eq!(keys.shape(), &[5, 2, 6]);
+        for b in 0..5 {
+            for j in 0..2 {
+                let off = (b * 2 + j) * 6;
+                let dotv: f32 = keys.data()[off..off + 6]
+                    .iter()
+                    .zip(x.row(b))
+                    .map(|(a, q)| a * q)
+                    .sum();
+                assert!((dotv - scores.row(b)[j]).abs() < 1e-5);
+            }
+        }
+        // scores() agrees with scores_and_keys()
+        let alone = net.scores(&x).unwrap();
+        assert_eq!(alone.data(), scores.data());
+    }
+
+    #[test]
+    fn supportnet_homogenized_satisfies_euler() {
+        let spec = NetSpec::new(ModelKind::SupportNet, 5, 2, 8, 3);
+        let net = Network::init(spec, 7).unwrap();
+        let x = unit(&[4, 5], 8);
+        let (scores, keys) = net.scores_and_keys(&x).unwrap();
+        for b in 0..4 {
+            for j in 0..2 {
+                let off = (b * 2 + j) * 5;
+                let dotv: f32 = keys.data()[off..off + 5]
+                    .iter()
+                    .zip(x.row(b))
+                    .map(|(a, q)| a * q)
+                    .sum();
+                let s = scores.row(b)[j];
+                assert!(
+                    (dotv - s).abs() < 1e-4 * (1.0 + s.abs()),
+                    "Euler violated: <grad,x>={dotv} vs f={s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn supportnet_scores_positively_homogeneous() {
+        let spec = NetSpec::new(ModelKind::SupportNet, 6, 1, 8, 2);
+        let net = Network::init(spec, 9).unwrap();
+        let x = unit(&[3, 6], 10);
+        let mut x2 = x.clone();
+        for v in x2.data_mut() {
+            *v *= 2.5;
+        }
+        let s1 = net.scores(&x).unwrap();
+        let s2 = net.scores(&x2).unwrap();
+        for (a, b) in s1.data().iter().zip(s2.data()) {
+            assert!((b - 2.5 * a).abs() < 1e-4 * (1.0 + a.abs()), "{b} vs 2.5*{a}");
+        }
+    }
+
+    #[test]
+    fn loss_and_grads_shapes_and_finiteness() {
+        for kind in [ModelKind::SupportNet, ModelKind::KeyNet] {
+            let spec = NetSpec::new(kind, 4, 2, 6, 3);
+            let net = Network::init(spec.clone(), 11).unwrap();
+            let (x, y, s) = targets(3, 2, 4, 12);
+            let lam = Lambdas {
+                lam_a: 0.01,
+                lam_b: 1.0,
+                lam_icnn: 1e-4,
+            };
+            let (parts, grads) = net.loss_and_grads(&x, &y, &s, &lam).unwrap();
+            assert!(parts.total.is_finite() && parts.total > 0.0, "{kind:?}");
+            assert_eq!(grads.len(), spec.param_specs().len());
+            for (g, (name, shape)) in grads.iter().zip(spec.param_specs()) {
+                assert_eq!(g.shape(), &shape[..], "{kind:?} {name}");
+                assert!(g.data().iter().all(|v| v.is_finite()), "{kind:?} {name}");
+            }
+            // the loss must touch every parameter except (possibly) the
+            // zero-initialized head bias of the supportnet score path
+            let touched = grads
+                .iter()
+                .filter(|g| g.data().iter().any(|&v| v != 0.0))
+                .count();
+            assert!(touched >= grads.len() - 1, "{kind:?}: {touched} touched");
+        }
+    }
+
+    #[test]
+    fn bad_shapes_are_typed_errors() {
+        let spec = NetSpec::new(ModelKind::KeyNet, 4, 1, 6, 2);
+        let net = Network::init(spec, 1).unwrap();
+        assert!(net.scores(&unit(&[2, 5], 2)).is_err());
+        let (x, y, s) = targets(3, 1, 4, 3);
+        let bad_y = unit(&[3, 5], 4).reshape(&[3, 1, 5]);
+        assert!(net
+            .loss_and_grads(&bad_y, &y, &s, &Lambdas { lam_a: 0.0, lam_b: 1.0, lam_icnn: 0.0 })
+            .is_err());
+        assert!(net
+            .loss_and_grads(&x, &bad_y, &s, &Lambdas { lam_a: 0.0, lam_b: 1.0, lam_icnn: 0.0 })
+            .is_err());
+        // mismatched param shapes rejected at construction
+        let spec2 = NetSpec::new(ModelKind::KeyNet, 4, 1, 6, 2);
+        let mut params = spec2.init_params(5);
+        params[0] = Tensor::zeros(&[4, 7]);
+        assert!(Network::new(spec2, params).is_err());
+    }
+}

@@ -1,0 +1,354 @@
+//! Static architecture description for the pure-Rust SupportNet/KeyNet
+//! stack, mirroring `python/compile/model.py::Arch` and the sizing rule
+//! in `python/compile/sizing.py` (paper Eq. 3.2/3.3): both models share
+//! one rectangular trunk
+//!
+//! ```text
+//! z_1     = σ(Wx0 x + b0)
+//! z_{i+1} = σ(Wz_i z_i [+ Wx_i x] + b_i)      (+ z_i if residual)
+//! out     = W_L z_L + b_L
+//! ```
+//!
+//! SupportNet heads are scalar support values (convexity encouraged by a
+//! non-negativity *penalty* on the `Wz_i`, "loosely constrained" ICNN)
+//! and are wrapped by the homogenization `H[g](x) = ‖x‖·g(x/‖x‖)`
+//! (Eq. 3.4); KeyNet heads regress the `c·d` key coordinates directly.
+
+use anyhow::{ensure, Result};
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Which of the paper's two amortized models a network implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Scalar support-function model; keys recovered via the input
+    /// gradient (paper Sec. 3.1 approach 1).
+    SupportNet,
+    /// Direct key regression (approach 2).
+    KeyNet,
+}
+
+impl ModelKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelKind::SupportNet => "supportnet",
+            ModelKind::KeyNet => "keynet",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ModelKind> {
+        match s {
+            "supportnet" => Ok(ModelKind::SupportNet),
+            "keynet" => Ok(ModelKind::KeyNet),
+            other => anyhow::bail!("unknown model kind '{other}' (supportnet|keynet)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Hidden-layer indices (1..layers-1) that receive the x re-injection;
+/// `nx` counts injections after the first layer, evenly spaced (mirrors
+/// `sizing.inject_layers`).
+pub fn inject_layers(layers: usize, nx: usize) -> Vec<usize> {
+    if layers <= 1 || nx == 0 {
+        return Vec::new();
+    }
+    let nx = nx.min(layers - 1);
+    let step = (layers - 1) as f64 / nx as f64;
+    let mut out: Vec<usize> = (0..nx)
+        .map(|i| (((i + 1) as f64 * step).round() as usize).clamp(1, layers - 1))
+        .collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Hidden width for a parameter budget `p ≈ rho·n·d` (paper Eq. 3.3),
+/// rounded to a multiple of 8 (>= 8).
+pub fn width_for_budget(p: f64, layers: usize, d: usize, nx: usize) -> usize {
+    let dd = ((1 + nx.min(layers.saturating_sub(1))) * d) as f64;
+    let h = if layers <= 1 {
+        p / dd.max(1.0)
+    } else {
+        let l1 = (layers - 1) as f64;
+        ((dd * dd + 4.0 * l1 * p).sqrt() - dd) / (2.0 * l1)
+    };
+    (((h / 8.0).round() as usize) * 8).max(8)
+}
+
+/// Architecture of one SupportNet/KeyNet instance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetSpec {
+    pub model: ModelKind,
+    /// Embedding dimension.
+    pub d: usize,
+    /// Output heads (clusters routed over; 1 for the mapped query path).
+    pub c: usize,
+    /// Hidden width.
+    pub h: usize,
+    /// Hidden layers, including the input layer.
+    pub layers: usize,
+    /// Input re-injections after the first layer.
+    pub nx: usize,
+    pub residual: bool,
+    /// Positive-1-homogeneity wrapper (SupportNet only; forced off for
+    /// KeyNet by [`NetSpec::new`]).
+    pub homogenize: bool,
+    /// Activation knobs (soft leaky ReLU).
+    pub alpha: f32,
+    pub beta: f32,
+}
+
+impl NetSpec {
+    /// Paper-default spec: homogenization on for SupportNet, off for
+    /// KeyNet; `nx = layers` (inject everywhere), `alpha/beta` defaults.
+    pub fn new(model: ModelKind, d: usize, c: usize, h: usize, layers: usize) -> NetSpec {
+        NetSpec {
+            model,
+            d,
+            c,
+            h,
+            layers,
+            nx: layers,
+            residual: false,
+            homogenize: model == ModelKind::SupportNet,
+            alpha: 0.1,
+            beta: 20.0,
+        }
+    }
+
+    /// Spec sized from the paper's budget rule: `h` solves
+    /// `(L-1)h² + (1+nx)dh ≈ rho·n·d` for a database of `n` keys.
+    pub fn sized(model: ModelKind, d: usize, c: usize, n_keys: usize, rho: f64, layers: usize) -> NetSpec {
+        let h = width_for_budget(rho * n_keys as f64 * d as f64, layers, d, layers);
+        NetSpec::new(model, d, c, h, layers)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.d >= 1 && self.d <= 1 << 16, "d={} out of range", self.d);
+        ensure!(self.c >= 1 && self.c <= 1 << 12, "c={} out of range", self.c);
+        ensure!(self.h >= 1 && self.h <= 1 << 14, "h={} out of range", self.h);
+        ensure!(
+            self.layers >= 1 && self.layers <= 64,
+            "layers={} out of range",
+            self.layers
+        );
+        ensure!(self.nx <= 64, "nx={} out of range", self.nx);
+        ensure!(
+            self.alpha.is_finite() && self.beta.is_finite() && self.beta > 0.0,
+            "bad activation knobs alpha={} beta={}",
+            self.alpha,
+            self.beta
+        );
+        ensure!(
+            !(self.homogenize && self.model == ModelKind::KeyNet),
+            "homogenization applies to SupportNet only"
+        );
+        Ok(())
+    }
+
+    /// Head width: `c` support values or `c·d` key coordinates.
+    pub fn d_out(&self) -> usize {
+        match self.model {
+            ModelKind::SupportNet => self.c,
+            ModelKind::KeyNet => self.c * self.d,
+        }
+    }
+
+    pub fn inject(&self) -> Vec<usize> {
+        inject_layers(self.layers, self.nx)
+    }
+
+    /// Ordered `(name, shape)` parameter list — the checkpoint/artifact
+    /// ABI, same naming scheme as the Python export.
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let (d, h) = (self.d, self.h);
+        let mut specs = vec![("wx0".to_string(), vec![d, h]), ("b0".to_string(), vec![h])];
+        let inj = self.inject();
+        for i in 1..self.layers {
+            specs.push((format!("wz{i}"), vec![h, h]));
+            if inj.contains(&i) {
+                specs.push((format!("wx{i}"), vec![d, h]));
+            }
+            specs.push((format!("b{i}"), vec![h]));
+        }
+        specs.push(("wout".to_string(), vec![h, self.d_out()]));
+        specs.push(("bout".to_string(), vec![self.d_out()]));
+        specs
+    }
+
+    /// Indices (into [`NetSpec::param_specs`]) of the matrices under the
+    /// ICNN non-negativity penalty: every `Wz_i`, plus the output head
+    /// for SupportNet (convexity of `W_L z_L + b_L` needs `W_L >= 0`).
+    pub fn icnn_penalty_indices(&self) -> Vec<usize> {
+        let specs = self.param_specs();
+        let mut idx: Vec<usize> = specs
+            .iter()
+            .enumerate()
+            .filter(|(_, (n, _))| n.starts_with("wz"))
+            .map(|(i, _)| i)
+            .collect();
+        if self.model == ModelKind::SupportNet {
+            if let Some(i) = specs.iter().position(|(n, _)| n == "wout") {
+                idx.push(i);
+            }
+        }
+        idx
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.param_specs()
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// FLOPs for one query forward pass (multiply+add = 2, mirrors
+    /// `sizing.forward_flops` so pure-Rust and XLA cost axes agree).
+    pub fn forward_flops(&self) -> u64 {
+        let (d, h, l) = (self.d as u64, self.h as u64, self.layers as u64);
+        let d_out = self.d_out() as u64;
+        let n_inj = self.inject().len() as u64;
+        let mut f = 2 * d * h;
+        f += (l - 1) * 2 * h * h;
+        f += n_inj * 2 * d * h;
+        f += 2 * h * d_out;
+        f += 8 * (h * l + d_out);
+        if self.homogenize {
+            f += 6 * d;
+        }
+        f
+    }
+
+    /// FLOPs for recovering keys for one query: KeyNet reads them from
+    /// the forward pass; SupportNet pays the forward plus `c` backward
+    /// passes (~2x forward each, paper Sec. 4.4).
+    pub fn key_flops(&self) -> u64 {
+        match self.model {
+            ModelKind::KeyNet => self.forward_flops(),
+            ModelKind::SupportNet => self.forward_flops() * (1 + 2 * self.c as u64),
+        }
+    }
+
+    /// Initial parameters (mirrors `model.init_params`): zero biases,
+    /// LeCun-normal passthroughs/head, and for SupportNet a scaled
+    /// half-normal on the penalty targets so `Wz >= 0` at init.
+    pub fn init_params(&self, seed: u64) -> Vec<Tensor> {
+        let specs = self.param_specs();
+        let wz: std::collections::BTreeSet<usize> =
+            self.icnn_penalty_indices().into_iter().collect();
+        let mut rng = Rng::new(seed ^ 0x11CC);
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, (_, shape))| {
+                let mut t = Tensor::zeros(shape);
+                if shape.len() >= 2 {
+                    let fan_in = shape[0] as f32;
+                    if wz.contains(&i) && self.model == ModelKind::SupportNet {
+                        let std = (2.0 / fan_in).sqrt() * 0.5;
+                        for v in t.data_mut() {
+                            *v = (rng.normal().abs() as f32) * std;
+                        }
+                    } else {
+                        let std = (1.0 / fan_in).sqrt();
+                        rng.fill_normal(t.data_mut(), std);
+                    }
+                }
+                t
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inject_layers_mirror_python_rule() {
+        assert!(inject_layers(1, 4).is_empty());
+        assert!(inject_layers(4, 0).is_empty());
+        // nx >= L-1 injects every hidden layer
+        assert_eq!(inject_layers(4, 4), vec![1, 2, 3]);
+        assert_eq!(inject_layers(4, 3), vec![1, 2, 3]);
+        // one injection lands on the last hidden layer
+        assert_eq!(inject_layers(4, 1), vec![3]);
+    }
+
+    #[test]
+    fn width_solves_budget() {
+        // h must approximately satisfy (L-1)h^2 + (1+nx)dh = P
+        let (l, d, nx) = (4usize, 64usize, 4usize);
+        let p = 0.05 * 16384.0 * 64.0;
+        let h = width_for_budget(p, l, d, nx) as f64;
+        let achieved = (l - 1) as f64 * h * h + (1 + nx.min(l - 1)) as f64 * d as f64 * h;
+        assert!((achieved - p).abs() / p < 0.25, "h={h} achieved={achieved}");
+        assert_eq!(width_for_budget(10.0, 2, 8, 1) % 8, 0);
+        assert!(width_for_budget(0.0, 2, 8, 1) >= 8);
+    }
+
+    #[test]
+    fn param_specs_count_and_order() {
+        let spec = NetSpec::new(ModelKind::KeyNet, 8, 2, 16, 3);
+        let specs = spec.param_specs();
+        assert_eq!(specs[0].0, "wx0");
+        assert_eq!(specs[0].1, vec![8, 16]);
+        assert_eq!(specs.last().unwrap().0, "bout");
+        assert_eq!(specs.last().unwrap().1, vec![16]); // c*d = 16
+        let n: usize = specs.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        assert_eq!(n, spec.n_params());
+        // wz penalty excludes the head for keynet, includes it for supportnet
+        assert!(spec
+            .icnn_penalty_indices()
+            .iter()
+            .all(|&i| specs[i].0.starts_with("wz")));
+        let sn = NetSpec::new(ModelKind::SupportNet, 8, 2, 16, 3);
+        let sn_specs = sn.param_specs();
+        assert!(sn
+            .icnn_penalty_indices()
+            .iter()
+            .any(|&i| sn_specs[i].0 == "wout"));
+    }
+
+    #[test]
+    fn init_shapes_match_and_supportnet_wz_nonnegative() {
+        let spec = NetSpec::new(ModelKind::SupportNet, 6, 1, 8, 3);
+        let params = spec.init_params(7);
+        let specs = spec.param_specs();
+        assert_eq!(params.len(), specs.len());
+        for (p, (_, s)) in params.iter().zip(&specs) {
+            assert_eq!(p.shape(), &s[..]);
+        }
+        for &i in &spec.icnn_penalty_indices() {
+            assert!(params[i].data().iter().all(|&v| v >= 0.0), "{}", specs[i].0);
+        }
+        // biases start at zero
+        assert!(params[1].data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn keynet_never_homogenizes() {
+        let spec = NetSpec::new(ModelKind::KeyNet, 4, 1, 8, 2);
+        assert!(!spec.homogenize);
+        let mut bad = spec;
+        bad.homogenize = true;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn flops_scale_with_width() {
+        let small = NetSpec::new(ModelKind::KeyNet, 16, 1, 16, 3);
+        let big = NetSpec::new(ModelKind::KeyNet, 16, 1, 64, 3);
+        assert!(big.forward_flops() > small.forward_flops());
+        let sn = NetSpec::new(ModelKind::SupportNet, 16, 4, 16, 3);
+        assert!(sn.key_flops() > sn.forward_flops());
+    }
+}

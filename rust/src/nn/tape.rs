@@ -1,0 +1,601 @@
+//! A minimal reverse-mode tape over dense tensors.
+//!
+//! Every VJP is written by hand (no operator-overloading magic): the tape
+//! is just the bookkeeping that runs those hand-derived rules in reverse
+//! creation order. Its one structural trick is that the *hand-derived
+//! input-gradient* of a network (paper Sec. 3.1: the SupportNet key is
+//! `∇_x f`) is itself built out of tape ops — `ActPrime` is a first-class
+//! primitive whose own derivative is `σ''` — so the gradient-matching
+//! loss `‖∇_x f − y*‖²` (Sec. 3.2) backpropagates to the weights through
+//! one ordinary reverse pass over the extended graph. No second-order
+//! machinery exists anywhere else.
+//!
+//! Nodes are append-only, so creation order is a topological order and
+//! the backward pass is a single reverse sweep. Constants (queries,
+//! targets) enter as leaves exactly like parameters; [`Tape::grad`]
+//! prunes the sweep to the subgraph that can reach a requested leaf.
+
+use crate::nn::activation::{act, act_prime, act_second};
+use crate::nn::math::{colsum, matmul_nn, matmul_nt, matmul_tn};
+use crate::tensor::Tensor;
+
+/// Handle to one tape node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeId(usize);
+
+#[derive(Clone, Copy)]
+enum Op {
+    /// Constant or parameter input.
+    Leaf,
+    /// `a @ b` — `a [m,k]`, `b [k,n]`.
+    MatMul(NodeId, NodeId),
+    /// `a @ b^T` — `a [m,k]`, `b [n,k]`.
+    MatMulT(NodeId, NodeId),
+    /// `a + b` with `b [n]` broadcast over the rows of `a [m,n]`.
+    AddBias(NodeId, NodeId),
+    Add(NodeId, NodeId),
+    Sub(NodeId, NodeId),
+    /// Elementwise product, same shape.
+    Mul(NodeId, NodeId),
+    /// Elementwise `σ(x)` with (alpha, beta).
+    Act(NodeId, f32, f32),
+    /// Elementwise `σ'(x)` — differentiable (its VJP uses `σ''`).
+    ActPrime(NodeId, f32, f32),
+    /// `out[i,:] = a[i,:] * v[i]` — `a [m,n]`, `v [m]`.
+    ScaleRows(NodeId, NodeId),
+    /// `out[i] = Σ_j a[i,j]·b[i,j]` — both `[m,n]`, out `[m]`.
+    RowDot(NodeId, NodeId),
+    /// `v [n]` repeated as every one of `m` rows.
+    BcastRows(NodeId, usize),
+    /// Columns `[start, start+len)` of `a [m,n]`.
+    SliceCols(NodeId, usize, usize),
+    Square(NodeId),
+    /// Mean over every element -> scalar.
+    MeanAll(NodeId),
+    /// `Σ max(−x, 0)²` -> scalar (the loose ICNN convexity penalty).
+    NegPartSq(NodeId),
+    /// `c · a`.
+    Scale(NodeId, f32),
+}
+
+struct Node {
+    op: Op,
+    value: Tensor,
+}
+
+/// Append-only computation tape.
+#[derive(Default)]
+pub struct Tape {
+    nodes: Vec<Node>,
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape::default()
+    }
+
+    fn push(&mut self, op: Op, value: Tensor) -> NodeId {
+        self.nodes.push(Node { op, value });
+        NodeId(self.nodes.len() - 1)
+    }
+
+    /// The computed value of a node.
+    pub fn value(&self, id: NodeId) -> &Tensor {
+        &self.nodes[id.0].value
+    }
+
+    /// Scalar value of a `[ ]`/len-1 node.
+    pub fn scalar(&self, id: NodeId) -> f32 {
+        debug_assert_eq!(self.nodes[id.0].value.len(), 1);
+        self.nodes[id.0].value.data()[0]
+    }
+
+    // -- node constructors --------------------------------------------------
+
+    pub fn leaf(&mut self, t: Tensor) -> NodeId {
+        self.push(Op::Leaf, t)
+    }
+
+    pub fn matmul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let v = matmul_nn(self.value(a), self.value(b));
+        self.push(Op::MatMul(a, b), v)
+    }
+
+    pub fn matmul_t(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let v = matmul_nt(self.value(a), self.value(b));
+        self.push(Op::MatMulT(a, b), v)
+    }
+
+    pub fn add_bias(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let (av, bv) = (self.value(a), self.value(b));
+        assert_eq!(av.row_width(), bv.len(), "add_bias width mismatch");
+        let mut v = av.clone();
+        let w = v.row_width();
+        for row in v.data_mut().chunks_mut(w) {
+            for (r, &b) in row.iter_mut().zip(bv.data()) {
+                *r += b;
+            }
+        }
+        self.push(Op::AddBias(a, b), v)
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let v = self.zip(a, b, |x, y| x + y);
+        self.push(Op::Add(a, b), v)
+    }
+
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let v = self.zip(a, b, |x, y| x - y);
+        self.push(Op::Sub(a, b), v)
+    }
+
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let v = self.zip(a, b, |x, y| x * y);
+        self.push(Op::Mul(a, b), v)
+    }
+
+    fn zip(&self, a: NodeId, b: NodeId, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        let (av, bv) = (self.value(a), self.value(b));
+        assert_eq!(av.len(), bv.len(), "elementwise shape mismatch");
+        let mut v = av.clone();
+        for (x, &y) in v.data_mut().iter_mut().zip(bv.data()) {
+            *x = f(*x, y);
+        }
+        v
+    }
+
+    pub fn act(&mut self, a: NodeId, alpha: f32, beta: f32) -> NodeId {
+        let mut v = self.value(a).clone();
+        for x in v.data_mut() {
+            *x = act(*x, alpha, beta);
+        }
+        self.push(Op::Act(a, alpha, beta), v)
+    }
+
+    pub fn act_prime(&mut self, a: NodeId, alpha: f32, beta: f32) -> NodeId {
+        let mut v = self.value(a).clone();
+        for x in v.data_mut() {
+            *x = act_prime(*x, alpha, beta);
+        }
+        self.push(Op::ActPrime(a, alpha, beta), v)
+    }
+
+    pub fn scale_rows(&mut self, a: NodeId, v: NodeId) -> NodeId {
+        let (av, vv) = (self.value(a), self.value(v));
+        assert_eq!(av.rows(), vv.len(), "scale_rows length mismatch");
+        let mut out = av.clone();
+        let w = out.row_width();
+        for (i, row) in out.data_mut().chunks_mut(w).enumerate() {
+            let s = vv.data()[i];
+            for r in row {
+                *r *= s;
+            }
+        }
+        self.push(Op::ScaleRows(a, v), out)
+    }
+
+    pub fn row_dot(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let (av, bv) = (self.value(a), self.value(b));
+        assert_eq!(av.shape(), bv.shape(), "row_dot shape mismatch");
+        let m = av.rows();
+        let mut out = Tensor::zeros(&[m]);
+        for i in 0..m {
+            out.data_mut()[i] = crate::tensor::dot(av.row(i), bv.row(i));
+        }
+        self.push(Op::RowDot(a, b), out)
+    }
+
+    pub fn bcast_rows(&mut self, v: NodeId, rows: usize) -> NodeId {
+        let vv = self.value(v);
+        let n = vv.len();
+        let mut out = Tensor::zeros(&[rows, n]);
+        for i in 0..rows {
+            out.row_mut(i).copy_from_slice(vv.data());
+        }
+        self.push(Op::BcastRows(v, rows), out)
+    }
+
+    pub fn slice_cols(&mut self, a: NodeId, start: usize, len: usize) -> NodeId {
+        let av = self.value(a);
+        let (m, n) = (av.rows(), av.row_width());
+        assert!(start + len <= n, "slice_cols out of range");
+        let mut out = Tensor::zeros(&[m, len]);
+        for i in 0..m {
+            out.row_mut(i).copy_from_slice(&av.row(i)[start..start + len]);
+        }
+        self.push(Op::SliceCols(a, start, len), out)
+    }
+
+    pub fn square(&mut self, a: NodeId) -> NodeId {
+        let mut v = self.value(a).clone();
+        for x in v.data_mut() {
+            *x *= *x;
+        }
+        self.push(Op::Square(a), v)
+    }
+
+    pub fn mean_all(&mut self, a: NodeId) -> NodeId {
+        let av = self.value(a);
+        let m = av.data().iter().sum::<f32>() / av.len().max(1) as f32;
+        self.push(Op::MeanAll(a), Tensor::scalar(m))
+    }
+
+    pub fn neg_part_sq(&mut self, a: NodeId) -> NodeId {
+        let s: f32 = self
+            .value(a)
+            .data()
+            .iter()
+            .map(|&x| if x < 0.0 { x * x } else { 0.0 })
+            .sum();
+        self.push(Op::NegPartSq(a), Tensor::scalar(s))
+    }
+
+    pub fn scale(&mut self, a: NodeId, c: f32) -> NodeId {
+        let mut v = self.value(a).clone();
+        for x in v.data_mut() {
+            *x *= c;
+        }
+        self.push(Op::Scale(a, c), v)
+    }
+
+    // -- backward -----------------------------------------------------------
+
+    /// Gradients of the scalar node `loss` with respect to each leaf in
+    /// `wrt` (returned in the same order, zero tensors when a leaf does
+    /// not influence the loss).
+    pub fn grad(&self, loss: NodeId, wrt: &[NodeId]) -> Vec<Tensor> {
+        assert_eq!(self.value(loss).len(), 1, "grad needs a scalar loss");
+        // Forward reachability from the wanted leaves: node inputs always
+        // have lower ids, so one forward sweep suffices.
+        let mut reach = vec![false; self.nodes.len()];
+        for id in wrt {
+            reach[id.0] = true;
+        }
+        for i in 0..self.nodes.len() {
+            if reach[i] {
+                continue;
+            }
+            reach[i] = match self.nodes[i].op {
+                Op::Leaf => false,
+                Op::MatMul(a, b)
+                | Op::MatMulT(a, b)
+                | Op::AddBias(a, b)
+                | Op::Add(a, b)
+                | Op::Sub(a, b)
+                | Op::Mul(a, b)
+                | Op::ScaleRows(a, b)
+                | Op::RowDot(a, b) => reach[a.0] || reach[b.0],
+                Op::Act(a, _, _)
+                | Op::ActPrime(a, _, _)
+                | Op::BcastRows(a, _)
+                | Op::SliceCols(a, _, _)
+                | Op::Square(a)
+                | Op::MeanAll(a)
+                | Op::NegPartSq(a)
+                | Op::Scale(a, _) => reach[a.0],
+            };
+        }
+
+        let mut grads: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
+        grads[loss.0] = Some(Tensor::scalar(1.0));
+
+        for i in (0..=loss.0).rev() {
+            let Some(g) = grads[i].take() else { continue };
+            if !reach[i] {
+                continue;
+            }
+            match self.nodes[i].op {
+                Op::Leaf => {
+                    grads[i] = Some(g); // keep for collection below
+                    continue;
+                }
+                Op::MatMul(a, b) => {
+                    if reach[a.0] {
+                        self.acc(&mut grads, a, matmul_nt(&g, self.value(b)));
+                    }
+                    if reach[b.0] {
+                        self.acc(&mut grads, b, matmul_tn(self.value(a), &g));
+                    }
+                }
+                Op::MatMulT(a, b) => {
+                    if reach[a.0] {
+                        self.acc(&mut grads, a, matmul_nn(&g, self.value(b)));
+                    }
+                    if reach[b.0] {
+                        self.acc(&mut grads, b, matmul_tn(&g, self.value(a)));
+                    }
+                }
+                Op::AddBias(a, b) => {
+                    if reach[b.0] {
+                        self.acc(&mut grads, b, colsum(&g));
+                    }
+                    if reach[a.0] {
+                        self.acc(&mut grads, a, g);
+                    }
+                }
+                Op::Add(a, b) => {
+                    if reach[a.0] {
+                        self.acc(&mut grads, a, g.clone());
+                    }
+                    if reach[b.0] {
+                        self.acc(&mut grads, b, g);
+                    }
+                }
+                Op::Sub(a, b) => {
+                    if reach[b.0] {
+                        let mut neg = g.clone();
+                        for x in neg.data_mut() {
+                            *x = -*x;
+                        }
+                        self.acc(&mut grads, b, neg);
+                    }
+                    if reach[a.0] {
+                        self.acc(&mut grads, a, g);
+                    }
+                }
+                Op::Mul(a, b) => {
+                    if reach[a.0] {
+                        self.acc(&mut grads, a, hadamard(&g, self.value(b)));
+                    }
+                    if reach[b.0] {
+                        self.acc(&mut grads, b, hadamard(&g, self.value(a)));
+                    }
+                }
+                Op::Act(a, alpha, beta) => {
+                    if reach[a.0] {
+                        let mut da = g;
+                        for (x, &p) in da.data_mut().iter_mut().zip(self.value(a).data()) {
+                            *x *= act_prime(p, alpha, beta);
+                        }
+                        self.acc(&mut grads, a, da);
+                    }
+                }
+                Op::ActPrime(a, alpha, beta) => {
+                    if reach[a.0] {
+                        let mut da = g;
+                        for (x, &p) in da.data_mut().iter_mut().zip(self.value(a).data()) {
+                            *x *= act_second(p, alpha, beta);
+                        }
+                        self.acc(&mut grads, a, da);
+                    }
+                }
+                Op::ScaleRows(a, v) => {
+                    let (av, vv) = (self.value(a), self.value(v));
+                    if reach[a.0] {
+                        let mut da = g.clone();
+                        let w = da.row_width();
+                        for (r, row) in da.data_mut().chunks_mut(w).enumerate() {
+                            let s = vv.data()[r];
+                            for x in row {
+                                *x *= s;
+                            }
+                        }
+                        self.acc(&mut grads, a, da);
+                    }
+                    if reach[v.0] {
+                        let mut dv = Tensor::zeros(&[vv.len()]);
+                        for r in 0..av.rows() {
+                            dv.data_mut()[r] = crate::tensor::dot(g.row(r), av.row(r));
+                        }
+                        self.acc(&mut grads, v, dv);
+                    }
+                }
+                Op::RowDot(a, b) => {
+                    let (av, bv) = (self.value(a), self.value(b));
+                    if reach[a.0] {
+                        self.acc(&mut grads, a, outer_rows(&g, bv));
+                    }
+                    if reach[b.0] {
+                        self.acc(&mut grads, b, outer_rows(&g, av));
+                    }
+                }
+                Op::BcastRows(v, _) => {
+                    if reach[v.0] {
+                        self.acc(&mut grads, v, colsum(&g));
+                    }
+                }
+                Op::SliceCols(a, start, len) => {
+                    if reach[a.0] {
+                        let av = self.value(a);
+                        let mut da = Tensor::zeros(&[av.rows(), av.row_width()]);
+                        for r in 0..av.rows() {
+                            da.row_mut(r)[start..start + len].copy_from_slice(g.row(r));
+                        }
+                        self.acc(&mut grads, a, da);
+                    }
+                }
+                Op::Square(a) => {
+                    if reach[a.0] {
+                        let mut da = g;
+                        for (x, &p) in da.data_mut().iter_mut().zip(self.value(a).data()) {
+                            *x *= 2.0 * p;
+                        }
+                        self.acc(&mut grads, a, da);
+                    }
+                }
+                Op::MeanAll(a) => {
+                    if reach[a.0] {
+                        let av = self.value(a);
+                        let gs = g.data()[0] / av.len().max(1) as f32;
+                        let mut da = Tensor::zeros(av.shape());
+                        for x in da.data_mut() {
+                            *x = gs;
+                        }
+                        self.acc(&mut grads, a, da);
+                    }
+                }
+                Op::NegPartSq(a) => {
+                    if reach[a.0] {
+                        let gs = g.data()[0];
+                        let mut da = self.value(a).clone();
+                        for x in da.data_mut() {
+                            *x = if *x < 0.0 { gs * 2.0 * *x } else { 0.0 };
+                        }
+                        self.acc(&mut grads, a, da);
+                    }
+                }
+                Op::Scale(a, c) => {
+                    if reach[a.0] {
+                        let mut da = g;
+                        for x in da.data_mut() {
+                            *x *= c;
+                        }
+                        self.acc(&mut grads, a, da);
+                    }
+                }
+            }
+        }
+
+        wrt.iter()
+            .map(|id| {
+                grads[id.0]
+                    .take()
+                    .unwrap_or_else(|| Tensor::zeros(self.value(*id).shape()))
+            })
+            .collect()
+    }
+
+    fn acc(&self, grads: &mut [Option<Tensor>], id: NodeId, delta: Tensor) {
+        match &mut grads[id.0] {
+            Some(g) => {
+                debug_assert_eq!(g.len(), delta.len(), "gradient shape drift");
+                for (x, &d) in g.data_mut().iter_mut().zip(delta.data()) {
+                    *x += d;
+                }
+            }
+            slot => *slot = Some(delta),
+        }
+    }
+}
+
+/// Elementwise product of equally-shaped tensors.
+fn hadamard(a: &Tensor, b: &Tensor) -> Tensor {
+    debug_assert_eq!(a.len(), b.len());
+    let mut out = a.clone();
+    for (x, &y) in out.data_mut().iter_mut().zip(b.data()) {
+        *x *= y;
+    }
+    out
+}
+
+/// `out[i,j] = g[i] * m[i,j]` for `g [m]`, `m [m,n]`.
+fn outer_rows(g: &Tensor, m: &Tensor) -> Tensor {
+    let mut out = m.clone();
+    let w = out.row_width();
+    for (i, row) in out.data_mut().chunks_mut(w).enumerate() {
+        let s = g.data()[i];
+        for x in row {
+            *x *= s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    /// Scalar loss built from most ops; returns (loss, tape, leaf ids).
+    fn build(w: &Tensor, b: &Tensor, x: &Tensor) -> (Tape, NodeId, NodeId, NodeId) {
+        let mut t = Tape::new();
+        let wi = t.leaf(w.clone());
+        let bi = t.leaf(b.clone());
+        let xi = t.leaf(x.clone());
+        let pre0 = t.matmul(xi, wi);
+        let pre = t.add_bias(pre0, bi);
+        let z = t.act(pre, 0.1, 20.0);
+        let zp = t.act_prime(pre, 0.1, 20.0);
+        let m = t.mul(z, zp);
+        let rd = t.row_dot(m, xi); // needs widths to match: h == d in tests
+        let mt = t.matmul_t(m, wi); // [B,h] @ w^T(as [d,h]) -> [B,d]
+        let sr = t.scale_rows(mt, rd);
+        let sc = t.slice_cols(sr, 0, x.row_width());
+        let sq = t.square(sc);
+        let mean = t.mean_all(sq);
+        let pen = t.neg_part_sq(wi);
+        let pen_s = t.scale(pen, 0.05);
+        let loss = t.add(mean, pen_s);
+        (t, loss, wi, bi)
+    }
+
+    fn loss_value(w: &Tensor, b: &Tensor, x: &Tensor) -> f32 {
+        let (t, loss, _, _) = build(w, b, x);
+        t.scalar(loss)
+    }
+
+    #[test]
+    fn composite_graph_matches_finite_differences() {
+        // d == h so row_dot/matmul_t shapes line up
+        let w = randt(&[4, 4], 1);
+        let b = randt(&[4], 2);
+        let x = randt(&[3, 4], 3);
+        let (t, loss, wi, bi) = build(&w, &b, &x);
+        let grads = t.grad(loss, &[wi, bi]);
+        let eps = 1e-2f32;
+        for (leaf, base) in [(0usize, &w), (1usize, &b)] {
+            let g = &grads[leaf];
+            for e in 0..base.len() {
+                let mut hi = base.clone();
+                hi.data_mut()[e] += eps;
+                let mut lo = base.clone();
+                lo.data_mut()[e] -= eps;
+                let (fh, fl) = if leaf == 0 {
+                    (loss_value(&hi, &b, &x), loss_value(&lo, &b, &x))
+                } else {
+                    (loss_value(&w, &hi, &x), loss_value(&w, &lo, &x))
+                };
+                let fd = (fh - fl) / (2.0 * eps);
+                let an = g.data()[e];
+                assert!(
+                    (fd - an).abs() < 2e-3 + 0.03 * fd.abs().max(an.abs()),
+                    "leaf {leaf} elem {e}: fd {fd} vs backprop {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unreached_leaf_gets_zero_gradient() {
+        let mut t = Tape::new();
+        let a = t.leaf(randt(&[2, 2], 4));
+        let unused = t.leaf(randt(&[2, 2], 5));
+        let sq = t.square(a);
+        let loss = t.mean_all(sq);
+        let g = t.grad(loss, &[unused]);
+        assert!(g[0].data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn fan_out_accumulates() {
+        // loss = mean(a ⊙ a) uses `a` twice through Mul
+        let av = randt(&[2, 3], 6);
+        let mut t = Tape::new();
+        let a = t.leaf(av.clone());
+        let m = t.mul(a, a);
+        let loss = t.mean_all(m);
+        let g = t.grad(loss, &[a]);
+        for (ge, &ae) in g[0].data().iter().zip(av.data()) {
+            let want = 2.0 * ae / 6.0;
+            assert!((ge - want).abs() < 1e-5, "{ge} vs {want}");
+        }
+    }
+
+    #[test]
+    fn bcast_rows_sums_back() {
+        let mut t = Tape::new();
+        let v = t.leaf(randt(&[3], 7));
+        let b = t.bcast_rows(v, 5);
+        let loss = t.mean_all(b);
+        let g = t.grad(loss, &[v]);
+        for ge in g[0].data() {
+            assert!((ge - 5.0 / 15.0).abs() < 1e-6);
+        }
+    }
+}

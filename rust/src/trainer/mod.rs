@@ -1,11 +1,20 @@
-//! Rust-driven training: the Adam step itself is the AOT-compiled
-//! `<config>.train` artifact (L2), this module owns everything around it
-//! — batch sampling, the step loop, EMA parameter extraction, validation
-//! curves, and checkpoint caching shared by the benches.
+//! Training drivers for the learned models. The default build trains
+//! entirely in Rust ([`rust`]): batch sampling, the manual-backprop
+//! losses from [`crate::nn`], Adam + warmup/cosine + EMA, validation
+//! curves. With the `xla` feature the same [`TrainOpts`] drive the
+//! AOT-compiled train step instead ([`trainer`], unchanged from the
+//! original PJRT path) — XLA is an optional accelerator backend, not a
+//! prerequisite.
 
 pub mod curves;
+mod opts;
+pub mod rust;
+#[cfg(feature = "xla")]
 #[allow(clippy::module_inception)]
 pub mod trainer;
 
 pub use curves::{CurvePoint, EvalPoint, TrainingCurve};
-pub use trainer::{train, train_or_load, TrainOpts, TrainOutcome};
+pub use opts::TrainOpts;
+pub use rust::{validation_retrieval, RustTrainOutcome};
+#[cfg(feature = "xla")]
+pub use trainer::{train, train_or_load, TrainOutcome};

@@ -1,0 +1,51 @@
+//! Training hyperparameters shared by both backends (the pure-Rust loop
+//! in [`crate::trainer::rust`] and the AOT/PJRT loop behind the `xla`
+//! feature).
+
+/// Training hyperparameters (paper Sec. 3.2/4.1). The loss lambdas
+/// follow the uniform (a, b) convention of the train step:
+/// SupportNet `lam_a`=score / `lam_b`=gradient-matching;
+/// KeyNet `lam_a`=consistency / `lam_b`=key regression.
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub steps: usize,
+    pub peak_lr: f32,
+    /// SupportNet: lam_score; KeyNet: lam_consist (paper default 0.01).
+    pub lam_a: f32,
+    /// SupportNet: lam_grad; KeyNet: lam_key (paper default 1.0).
+    pub lam_b: f32,
+    /// ICNN non-negativity penalty weight (SupportNet).
+    pub lam_icnn: f32,
+    pub ema_decay: f32,
+    pub warmup_frac: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    /// Batch size for the pure-Rust loop (the AOT loop's batch is baked
+    /// into its exported artifacts as `meta.train_batch`).
+    pub batch: usize,
+    /// Evaluate every `eval_every` steps (0 = only at the end).
+    pub eval_every: usize,
+    /// Log a train point every `log_every` steps.
+    pub log_every: usize,
+    pub verbose: bool,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            steps: 1200,
+            peak_lr: 1e-2,
+            lam_a: 0.01,
+            lam_b: 1.0,
+            lam_icnn: 1e-4,
+            ema_decay: 0.995,
+            warmup_frac: 0.025,
+            weight_decay: 0.0,
+            seed: 7,
+            batch: 256,
+            eval_every: 200,
+            log_every: 50,
+            verbose: false,
+        }
+    }
+}

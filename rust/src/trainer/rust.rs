@@ -1,0 +1,307 @@
+//! The pure-Rust training loop: Adam with linear warmup + cosine decay
+//! and an EMA parameter trail (paper Sec. 4.1), driving the
+//! [`crate::nn`] losses — score regression + gradient matching for
+//! SupportNet, key regression + Euler score-consistency for KeyNet —
+//! over batches sampled exactly like the AOT loop. This is what makes
+//! `amips train` work in the default build; the `xla` feature swaps in
+//! the AOT-compiled step with the same [`TrainOpts`].
+
+use anyhow::{bail, Result};
+
+use crate::data::Dataset;
+use crate::metrics::retrieval::{self, RetrievalMetrics};
+use crate::metrics::transport;
+use crate::model::{AmortizedModel, RustModel};
+use crate::nn::{Lambdas, NetSpec, Network};
+use crate::tensor::Tensor;
+use crate::trainer::curves::{CurvePoint, EvalPoint, TrainingCurve};
+use crate::trainer::TrainOpts;
+use crate::util::Rng;
+
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Result of a pure-Rust training run.
+pub struct RustTrainOutcome {
+    /// Model carrying the EMA parameters (what the paper evaluates).
+    pub model: RustModel,
+    pub curve: TrainingCurve,
+    pub steps: usize,
+}
+
+/// Cosine decay with linear warmup (mirrors `python/compile/train.py`).
+fn lr_schedule(step: usize, total: usize, warmup_frac: f32, peak: f32) -> f32 {
+    let total = total as f32;
+    let warm = (total * warmup_frac).max(1.0);
+    let step = step as f32;
+    if step < warm {
+        peak * (step + 1.0) / warm
+    } else {
+        let prog = ((step - warm) / (total - warm).max(1.0)).clamp(0.0, 1.0);
+        0.5 * peak * (1.0 + (std::f32::consts::PI * prog).cos())
+    }
+}
+
+/// Validation metrics on `(x, y*, σ)` with the given parameters.
+fn eval_metrics(net: &Network, x: &Tensor, y_star: &Tensor, sigma: &Tensor) -> Result<EvalMats> {
+    let (scores, keys) = net.scores_and_keys(x)?;
+    let (n, c) = (sigma.rows(), sigma.row_width());
+    let d = x.row_width();
+    let e_rel = transport::relative_transport_error_clustered(&keys, x, y_star) as f32;
+    let mut mse_key = 0.0f64;
+    for bi in 0..n {
+        for j in 0..c {
+            let off = (bi * c + j) * d;
+            let mut s = 0.0f64;
+            for e in 0..d {
+                s += ((keys.data()[off + e] - y_star.data()[off + e]) as f64).powi(2);
+            }
+            mse_key += s;
+        }
+    }
+    let mse_key = (mse_key / (n * c) as f64) as f32;
+    let mut mse_score = 0.0f64;
+    for (s, t) in scores.data().iter().zip(sigma.data()) {
+        mse_score += ((s - t) as f64).powi(2);
+    }
+    let mse_score = (mse_score / (n * c) as f64) as f32;
+    Ok(EvalMats {
+        e_rel,
+        mse_key,
+        mse_score,
+    })
+}
+
+struct EvalMats {
+    e_rel: f32,
+    mse_key: f32,
+    mse_score: f32,
+}
+
+/// Train `spec` on `ds` with the pure-Rust backend.
+pub fn train(spec: &NetSpec, label: &str, ds: &Dataset, opts: &TrainOpts) -> Result<RustTrainOutcome> {
+    spec.validate()?;
+    if ds.c != spec.c {
+        bail!(
+            "dataset prepared with c={} but model {label} wants c={}",
+            ds.c,
+            spec.c
+        );
+    }
+    if ds.d() != spec.d {
+        bail!("dataset d={} vs model d={}", ds.d(), spec.d);
+    }
+    let n_train = ds.train.x.rows();
+    anyhow::ensure!(n_train > 0, "empty train set");
+    anyhow::ensure!(ds.val.x.rows() > 0, "empty validation set");
+    anyhow::ensure!(opts.batch > 0, "batch size must be >= 1");
+
+    let (b, c, d) = (opts.batch, spec.c, spec.d);
+    let lam = Lambdas {
+        lam_a: opts.lam_a,
+        lam_b: opts.lam_b,
+        lam_icnn: opts.lam_icnn,
+    };
+    let mut net = Network::init(spec.clone(), opts.seed)?;
+    let n_tensors = net.params().len();
+    let mut m: Vec<Tensor> = net.params().iter().map(|p| Tensor::zeros(p.shape())).collect();
+    let mut v: Vec<Tensor> = m.clone();
+    let mut ema: Vec<Tensor> = net.params().to_vec();
+
+    // fixed validation batch (the whole held-out set), mirrored from the
+    // AOT loop's padded eval batch
+    let nval = ds.val.x.rows();
+    let val_idx: Vec<usize> = (0..nval).collect();
+    let (mut xv, mut yv, mut sv) = (Vec::new(), Vec::new(), Vec::new());
+    ds.batch(&ds.val, &val_idx, &mut xv, &mut yv, &mut sv);
+    let val_x = Tensor::from_vec(&[nval, d], xv);
+    let val_y = Tensor::from_vec(&[nval, c, d], yv);
+    let val_s = Tensor::from_vec(&[nval, c], sv);
+
+    let mut rng = Rng::new(opts.seed ^ 0xBA7C4);
+    let mut curve = TrainingCurve::default();
+    let (mut xb, mut yb, mut sb) = (Vec::new(), Vec::new(), Vec::new());
+    let mut indices = vec![0usize; b];
+
+    for step in 0..opts.steps {
+        for i in indices.iter_mut() {
+            *i = rng.below(n_train);
+        }
+        ds.batch(&ds.train, &indices, &mut xb, &mut yb, &mut sb);
+        let x = Tensor::from_vec(&[b, d], xb.clone());
+        let y = Tensor::from_vec(&[b, c, d], yb.clone());
+        let s = Tensor::from_vec(&[b, c], sb.clone());
+
+        let (parts, grads) = net.loss_and_grads(&x, &y, &s, &lam)?;
+
+        let lr = lr_schedule(step, opts.steps, opts.warmup_frac, opts.peak_lr);
+        let t = (step + 1) as f32;
+        let bc1 = 1.0 - ADAM_B1.powf(t);
+        let bc2 = 1.0 - ADAM_B2.powf(t);
+        let params = net.params_mut();
+        for i in 0..n_tensors {
+            let g = grads[i].data();
+            let pm = params[i].data_mut();
+            let mi = m[i].data_mut();
+            let vi = v[i].data_mut();
+            let ei = ema[i].data_mut();
+            for e in 0..g.len() {
+                let ge = g[e];
+                mi[e] = ADAM_B1 * mi[e] + (1.0 - ADAM_B1) * ge;
+                vi[e] = ADAM_B2 * vi[e] + (1.0 - ADAM_B2) * ge * ge;
+                let update = (mi[e] / bc1) / ((vi[e] / bc2).sqrt() + ADAM_EPS);
+                pm[e] -= lr * (update + opts.weight_decay * pm[e]);
+                ei[e] = opts.ema_decay * ei[e] + (1.0 - opts.ema_decay) * pm[e];
+            }
+        }
+
+        let log_now = opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == opts.steps);
+        if log_now {
+            curve.train.push(CurvePoint {
+                step,
+                loss: parts.total,
+                loss_a: parts.loss_a,
+                loss_b: parts.loss_b,
+            });
+            if opts.verbose {
+                eprintln!(
+                    "[{label}] step {step}/{} loss {:.5} a {:.5} b {:.5}",
+                    opts.steps, parts.total, parts.loss_a, parts.loss_b
+                );
+            }
+        }
+
+        let eval_now = (opts.eval_every > 0 && step > 0 && step % opts.eval_every == 0)
+            || step + 1 == opts.steps;
+        if eval_now {
+            let eval_net = Network::new(spec.clone(), ema.clone())?;
+            let ev = eval_metrics(&eval_net, &val_x, &val_y, &val_s)?;
+            curve.eval.push(EvalPoint {
+                step,
+                e_rel: ev.e_rel,
+                mse_key: ev.mse_key,
+                mse_score: ev.mse_score,
+            });
+            if opts.verbose {
+                eprintln!(
+                    "[{label}] eval @ {step}: E_rel {:.4} mse_key {:.5} mse_score {:.5}",
+                    ev.e_rel, ev.mse_key, ev.mse_score
+                );
+            }
+        }
+    }
+
+    let model = RustModel::new(label, Network::new(spec.clone(), ema)?);
+    Ok(RustTrainOutcome {
+        model,
+        curve,
+        steps: opts.steps,
+    })
+}
+
+/// End-to-end retrieval quality of a trained model on the validation
+/// queries (paper Sec. 4.2): rank the predicted key against the whole
+/// database. Returns the retrieval metrics plus the relative transport
+/// error of the evaluated heads. For `c > 1` the true-cluster head is
+/// evaluated (same protocol as `amips eval`).
+pub fn validation_retrieval(
+    model: &dyn AmortizedModel,
+    ds: &Dataset,
+) -> Result<(RetrievalMetrics, f64)> {
+    anyhow::ensure!(
+        model.n_heads() == ds.c,
+        "model '{}' has c={} but the dataset was prepared with c={}",
+        model.label(),
+        model.n_heads(),
+        ds.c
+    );
+    let (_scores, keys) = model.scores_and_keys(&ds.val.x)?;
+    let n = ds.val.x.rows();
+    let (c, d) = (model.n_heads(), model.dim());
+    let mut pred = Tensor::zeros(&[n, d]);
+    let mut targets = Vec::with_capacity(n);
+    for q in 0..n {
+        let j = if c > 1 { ds.val.gt.top_cluster(q) } else { 0 };
+        let off = (q * c + j) * d;
+        pred.row_mut(q).copy_from_slice(&keys.data()[off..off + d]);
+        targets.push(ds.val.gt.global_top1(q).0);
+    }
+    let rm = retrieval::evaluate(&pred, &ds.keys, &targets);
+    let tgt = ds.keys.gather_rows(&targets);
+    let e_rel = transport::relative_transport_error(&pred, &ds.val.x, &tgt);
+    Ok((rm, e_rel))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::PrepareOpts;
+    use crate::data::CorpusSpec;
+    use crate::nn::ModelKind;
+
+    fn tiny_dataset(c: usize) -> Dataset {
+        Dataset::prepare(
+            &CorpusSpec {
+                name: "trainer-unit".into(),
+                n_keys: 120,
+                d: 6,
+                n_queries: 60,
+                shift: 0.4,
+                spread: 2.0,
+                modes: 4,
+                seed: 5,
+            },
+            &PrepareOpts {
+                c,
+                augment: 2,
+                val_queries: 12,
+                kmeans_restarts: 1,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn warmup_then_cosine_decay() {
+        let peak = 1e-2;
+        let lr0 = lr_schedule(0, 1000, 0.1, peak);
+        let lr_peak = lr_schedule(100, 1000, 0.1, peak);
+        let lr_end = lr_schedule(999, 1000, 0.1, peak);
+        assert!(lr0 < lr_peak, "{lr0} vs {lr_peak}");
+        assert!((lr_peak - peak).abs() / peak < 0.02);
+        assert!(lr_end < 0.01 * peak, "{lr_end}");
+    }
+
+    #[test]
+    fn short_run_reduces_loss_and_returns_curves() {
+        let ds = tiny_dataset(1);
+        let spec = NetSpec::new(ModelKind::KeyNet, 6, 1, 8, 2);
+        let opts = TrainOpts {
+            steps: 60,
+            batch: 16,
+            eval_every: 0,
+            log_every: 10,
+            ..TrainOpts::default()
+        };
+        let out = train(&spec, "unit.keynet", &ds, &opts).unwrap();
+        assert_eq!(out.steps, 60);
+        let first = out.curve.train.first().unwrap().loss;
+        let last = out.curve.final_loss().unwrap();
+        assert!(last.is_finite() && first.is_finite());
+        assert!(last < first, "loss did not drop: {first} -> {last}");
+        // final eval point exists even with eval_every = 0
+        assert_eq!(out.curve.eval.len(), 1);
+        let (rm, _) = validation_retrieval(&out.model, &ds).unwrap();
+        assert_eq!(rm.n, 12);
+    }
+
+    #[test]
+    fn mismatched_dataset_is_rejected() {
+        let ds = tiny_dataset(1);
+        let wrong_c = NetSpec::new(ModelKind::SupportNet, 6, 3, 8, 2);
+        assert!(train(&wrong_c, "x", &ds, &TrainOpts::default()).is_err());
+        let wrong_d = NetSpec::new(ModelKind::KeyNet, 7, 1, 8, 2);
+        assert!(train(&wrong_d, "x", &ds, &TrainOpts::default()).is_err());
+    }
+}

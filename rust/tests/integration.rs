@@ -12,7 +12,7 @@ use amips::data::dataset::PrepareOpts;
 use amips::data::Dataset;
 use amips::index::ivf::IvfIndex;
 use amips::index::VectorIndex;
-use amips::model::AmortizedModel;
+use amips::model::XlaModel;
 use amips::runtime::{Engine, Manifest};
 use amips::tensor::dot;
 use amips::trainer::{self, TrainOpts};
@@ -125,7 +125,7 @@ fn supportnet_grad_satisfies_euler_identity() {
     let meta = m.meta(config).unwrap();
     let ds = tiny_dataset(&m, "fiqa-s", 1);
     let out = trainer::train(&engine, &meta, &ds, &quick_opts(30)).unwrap();
-    let model = AmortizedModel::load(&engine, meta.clone(), &out.params).unwrap();
+    let model = XlaModel::load(&engine, meta.clone(), &out.params).unwrap();
     let (scores, keys) = model.scores_and_keys(&ds.val.x).unwrap();
     let d = meta.d;
     for q in 0..16 {
@@ -147,7 +147,7 @@ fn keynet_scores_consistent_with_keys() {
     let meta = m.meta(config).unwrap();
     let ds = tiny_dataset(&m, "fiqa-s", 1);
     let out = trainer::train(&engine, &meta, &ds, &quick_opts(30)).unwrap();
-    let model = AmortizedModel::load(&engine, meta.clone(), &out.params).unwrap();
+    let model = XlaModel::load(&engine, meta.clone(), &out.params).unwrap();
     let (scores, keys) = model.scores_and_keys(&ds.val.x).unwrap();
     let d = meta.d;
     for q in 0..16 {
@@ -166,7 +166,7 @@ fn clustered_training_and_routing_beats_nothing() {
     let meta = m.meta(config).unwrap();
     let ds = tiny_dataset(&m, "quora-s", 10);
     let out = trainer::train(&engine, &meta, &ds, &quick_opts(250)).unwrap();
-    let model = AmortizedModel::load(&engine, meta, &out.params).unwrap();
+    let model = XlaModel::load(&engine, meta, &out.params).unwrap();
     let router = AmortizedRouter::new(model);
     let baseline = CentroidRouter::new(ds.centroids.clone());
     let tc: Vec<usize> = (0..ds.val.gt.n_queries())
@@ -187,7 +187,7 @@ fn mapped_pipeline_runs_on_every_backend() {
     let meta = m.meta(config).unwrap();
     let ds = tiny_dataset(&m, "fiqa-s", 1);
     let out = trainer::train(&engine, &meta, &ds, &quick_opts(30)).unwrap();
-    let model = AmortizedModel::load(&engine, meta, &out.params).unwrap();
+    let model = XlaModel::load(&engine, meta, &out.params).unwrap();
     let nlist = 8;
     let backends: Vec<Box<dyn amips::index::VectorIndex>> = vec![
         Box::new(IvfIndex::build(&ds.keys, nlist, 8, 1)),
@@ -275,7 +275,7 @@ fn failure_injection_bad_inputs_are_rejected() {
     let meta_c10 = m.meta("quora-s.keynet.xs.l4.c10").unwrap();
     assert!(trainer::train(&engine, &meta_c10, &ds, &quick_opts(5)).is_err());
     // wrong query dimensionality through the model handle
-    let model = AmortizedModel::load(&engine, meta_a, &out.params).unwrap();
+    let model = XlaModel::load(&engine, meta_a, &out.params).unwrap();
     let bad = amips::tensor::Tensor::zeros(&[4, 3]);
     assert!(model.scores(&bad).is_err());
 }

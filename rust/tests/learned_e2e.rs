@@ -1,0 +1,162 @@
+//! End-to-end learned-model acceptance (pure Rust — runs on default
+//! features): short trainings on the synthetic testbed must give both
+//! of the paper's models a nonzero top-1 match rate — SupportNet
+//! recovering keys via its input gradient, KeyNet via direct
+//! regression — and the trained KeyNet must serve mapped queries
+//! through the catalog + server deployment path.
+
+use amips::api::{Effort, KeyNetQueryMap, MappedSearcher, QueryMode, SearchRequest, Searcher};
+use amips::bench_support::fixtures;
+use amips::coordinator::{BatchPolicy, Server, ServerConfig};
+use amips::data::Dataset;
+use amips::model::AmortizedModel;
+use amips::nn::{ModelKind, NetSpec};
+use amips::trainer::{self, rust::train, TrainOpts};
+use amips::util::TempDir;
+
+const N_KEYS: usize = 240;
+const D: usize = 8;
+const VAL_Q: usize = 80;
+
+fn testbed(c: usize) -> Dataset {
+    fixtures::synth_dataset(N_KEYS, D, VAL_Q, c, 1234)
+}
+
+fn quick_opts(steps: usize) -> TrainOpts {
+    TrainOpts {
+        steps,
+        batch: 48,
+        eval_every: 0,
+        log_every: steps / 4,
+        ..TrainOpts::default()
+    }
+}
+
+#[test]
+fn keynet_regression_reaches_nonzero_match_rate() {
+    let ds = testbed(1);
+    let spec = NetSpec::new(ModelKind::KeyNet, D, 1, 24, 2);
+    let out = train(&spec, "e2e.keynet", &ds, &quick_opts(350)).unwrap();
+    let (rm, e_rel) = trainer::validation_retrieval(&out.model, &ds).unwrap();
+    assert!(
+        rm.match_rate > 0.0,
+        "KeyNet top-1 match rate is zero after training (E_rel {e_rel})"
+    );
+    // the trained predictor must beat the identity transport (E_rel < 0)
+    assert!(e_rel < -0.1, "KeyNet E_rel {e_rel} not better than identity");
+    // and the training loss must actually have decreased
+    let c = &out.curve;
+    assert!(c.final_loss().unwrap() < c.train.first().unwrap().loss);
+}
+
+#[test]
+fn supportnet_input_gradient_reaches_nonzero_match_rate() {
+    let ds = testbed(1);
+    let spec = NetSpec::new(ModelKind::SupportNet, D, 1, 24, 2);
+    assert!(spec.homogenize, "supportnet defaults to the wrapper");
+    let out = train(&spec, "e2e.supportnet", &ds, &quick_opts(450)).unwrap();
+    let (rm, e_rel) = trainer::validation_retrieval(&out.model, &ds).unwrap();
+    assert!(
+        rm.match_rate > 0.0,
+        "SupportNet key recovery match rate is zero after training (E_rel {e_rel})"
+    );
+    assert!(e_rel < 0.0, "SupportNet E_rel {e_rel} not better than identity");
+}
+
+#[test]
+fn trained_keynet_serves_mapped_queries_from_a_catalog() {
+    use amips::index::{BuildCtx, Catalog, IndexSpec, VectorIndex};
+    use std::time::Duration;
+
+    let ds = testbed(1);
+    let spec = NetSpec::new(ModelKind::KeyNet, D, 1, 16, 2);
+    let out = train(&spec, "e2e.serve.keynet", &ds, &quick_opts(150)).unwrap();
+
+    // build the index over the SAME keys, attach the trained mapper
+    let tmp = TempDir::new("amips-learned-e2e");
+    let root = tmp.join("catalog");
+    let ispec = IndexSpec::default_for("ivf").unwrap().with_nlist(4);
+    {
+        let mut catalog = Catalog::create(&root).unwrap();
+        catalog
+            .build_collection("docs", &ispec, &ds.keys, &BuildCtx::seeded(9))
+            .unwrap();
+    }
+    Catalog::attach_mapper(&root, "docs", &out.model).unwrap();
+
+    let entry = Catalog::open_collection(&root, "docs").unwrap();
+    let mapper = entry.mapper.as_ref().expect("mapper round-trips").clone();
+    let model = (*mapper).clone();
+    let expect_mapped = model.map_queries(&ds.val.x).unwrap();
+
+    // serve mapped queries through the server, as `amips serve --catalog`
+    let req = SearchRequest::top_k(5)
+        .effort(Effort::Exhaustive)
+        .mode(QueryMode::Mapped);
+    let cfg = ServerConfig::with_keynet(
+        model,
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        },
+        req,
+    );
+    let (server, handle) = Server::start(cfg, entry.index.clone()).unwrap();
+    for i in 0..4 {
+        let resp = handle.search(ds.val.x.row(i).to_vec()).unwrap();
+        let direct = entry
+            .index
+            .search_effort(expect_mapped.row(i), 5, Effort::Exhaustive);
+        assert_eq!(resp.hits.ids, direct.ids, "query {i}");
+        assert!(resp.cost.map_flops > 0);
+    }
+    drop(handle);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn keynet_query_map_conforms_to_mapped_searcher_contract() {
+    use amips::index::{flat::FlatIndex, ivf::IvfIndex};
+
+    let ds = testbed(1);
+    let spec = NetSpec::new(ModelKind::KeyNet, D, 1, 16, 2);
+    let out = train(&spec, "e2e.map.keynet", &ds, &quick_opts(120)).unwrap();
+    let key_flops = out.model.key_flops();
+    let pre_mapped = out.model.map_queries(&ds.val.x).unwrap();
+    let map = KeyNetQueryMap::new(out.model).unwrap();
+
+    let flat = FlatIndex::new(ds.keys.clone());
+    let ivf = IvfIndex::build(&ds.keys, 4, 10, 3);
+    let nq = ds.val.x.rows();
+    for (label, index) in [
+        ("flat", &flat as &dyn amips::index::VectorIndex),
+        ("ivf", &ivf as &dyn amips::index::VectorIndex),
+    ] {
+        let searcher = MappedSearcher::mapped(index, &map);
+        let req = SearchRequest::top_k(5).effort(Effort::Exhaustive);
+
+        // Original mode is a pure passthrough with zero map cost
+        let orig = searcher.search(&ds.val.x, &req).unwrap();
+        let direct = index.search(&ds.val.x, &req).unwrap();
+        for q in 0..nq {
+            assert_eq!(orig.hits[q], direct.hits[q], "{label} q{q}");
+        }
+        assert_eq!(orig.cost.map_flops, 0, "{label}");
+
+        // Mapped mode equals searching the pre-mapped batch directly,
+        // and charges the model's per-query key flops
+        let mapped = searcher
+            .search(&ds.val.x, &req.mode(QueryMode::Mapped))
+            .unwrap();
+        let via_premap = index.search(&pre_mapped, &req).unwrap();
+        for q in 0..nq {
+            assert_eq!(mapped.hits[q].ids, via_premap.hits[q].ids, "{label} q{q}");
+            assert_eq!(
+                mapped.hits[q].scores, via_premap.hits[q].scores,
+                "{label} q{q}"
+            );
+        }
+        assert_eq!(mapped.cost.map_flops, key_flops * nq as u64, "{label}");
+        assert!(mapped.cost.map_seconds >= 0.0);
+    }
+}

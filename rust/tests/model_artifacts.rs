@@ -1,0 +1,177 @@
+//! Versioned model artifacts (pure Rust — runs on default features):
+//! save → load → bit-identical inference for both model kinds, typed
+//! error paths for corrupt headers / byte flips / truncations (seeded
+//! fuzz sweep scaled by `AMIPS_PROP_CASES`, mirroring
+//! `index_artifacts.rs`), and the catalog mapper round trip.
+
+use amips::model::{artifact, AmortizedModel, RustModel};
+use amips::nn::{ModelKind, NetSpec};
+use amips::tensor::{normalize_rows, Tensor};
+use amips::util::{prop_cases, Rng, TempDir};
+
+fn unit(shape: &[usize], seed: u64) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+    normalize_rows(&mut t);
+    t
+}
+
+fn sample_models() -> Vec<RustModel> {
+    let mut out = Vec::new();
+    for (i, kind) in [ModelKind::SupportNet, ModelKind::KeyNet].into_iter().enumerate() {
+        let mut spec = NetSpec::new(kind, 8, 1, 12, 3);
+        spec.residual = i == 0;
+        out.push(RustModel::init(format!("fuzz.{kind}"), spec, 31 + i as u64).unwrap());
+        let multi = NetSpec::new(kind, 6, 4, 8, 2);
+        out.push(RustModel::init(format!("fuzz.{kind}.c4"), multi, 47 + i as u64).unwrap());
+    }
+    out
+}
+
+fn bytes_of(model: &RustModel) -> Vec<u8> {
+    let mut buf = Vec::new();
+    artifact::write_to(&mut buf, model).unwrap();
+    buf
+}
+
+#[test]
+fn save_load_round_trip_is_bit_identical() {
+    for model in sample_models() {
+        let buf = bytes_of(&model);
+        let back = artifact::load_from(&mut buf.as_slice())
+            .unwrap_or_else(|e| panic!("{}: {e:#}", model.label()));
+        assert_eq!(back.label(), model.label());
+        assert_eq!(back.spec(), model.spec());
+        let q = unit(&[5, model.dim()], 7);
+        let (s1, k1) = model.scores_and_keys(&q).unwrap();
+        let (s2, k2) = back.scores_and_keys(&q).unwrap();
+        // bit-identical inference, not approximately-equal
+        assert_eq!(s1.data(), s2.data(), "{}", model.label());
+        assert_eq!(k1.data(), k2.data(), "{}", model.label());
+    }
+}
+
+#[test]
+fn disk_round_trip_and_typed_open_errors() {
+    let tmp = TempDir::new("amips-model-artifacts");
+    let models = sample_models();
+    let model = &models[0];
+    let path = tmp.join("m.amm");
+    artifact::save(&path, model).unwrap();
+    let back = artifact::load(&path).unwrap();
+    assert_eq!(back.label(), model.label());
+    // missing file is an error with the path in the message
+    let missing = artifact::load(&tmp.join("nope.amm")).unwrap_err();
+    assert!(format!("{missing:#}").contains("nope.amm"));
+}
+
+#[test]
+fn header_corruptions_are_typed_errors() {
+    let models = sample_models();
+    let buf = bytes_of(&models[0]);
+    // bad magic
+    let mut bad = buf.clone();
+    bad[0] ^= 0xFF;
+    assert!(artifact::load_from(&mut bad.as_slice()).is_err());
+    // unsupported version
+    let mut bad = buf.clone();
+    bad[4] = 0xEE;
+    assert!(artifact::load_from(&mut bad.as_slice()).is_err());
+    // unknown kind tag: corrupt the first byte of the kind string
+    let mut bad = buf.clone();
+    bad[12] = b'z';
+    assert!(artifact::load_from(&mut bad.as_slice()).is_err());
+}
+
+#[test]
+fn byte_flip_fuzz_never_panics_and_never_lies() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let models = sample_models();
+    let mut rng = Rng::new(0xF1A9);
+    for case in 0..prop_cases(80) {
+        let model = &models[case % models.len()];
+        let clean = bytes_of(model);
+        let mut bad = clean.clone();
+        let pos = rng.below(bad.len());
+        let bit = 1u8 << rng.below(8);
+        bad[pos] ^= bit;
+        let outcome = catch_unwind(AssertUnwindSafe(|| artifact::load_from(&mut bad.as_slice())));
+        let loaded = outcome.unwrap_or_else(|_| panic!("case {case}: panic at byte {pos}"));
+        if let Ok(back) = loaded {
+            // the payload is checksummed and the header fully parsed, so
+            // a load that survives a flip (e.g. in the label bytes) must
+            // still describe the original architecture and serve
+            // inference without panicking
+            assert_eq!(back.spec(), model.spec(), "case {case}: flip at {pos}");
+            let q = unit(&[2, back.dim()], 70);
+            let res = catch_unwind(AssertUnwindSafe(|| back.scores_and_keys(&q)));
+            assert!(
+                res.unwrap_or_else(|_| panic!("case {case}: inference panicked")).is_ok(),
+                "case {case}: inference failed after flip at {pos}"
+            );
+        }
+    }
+}
+
+#[test]
+fn truncation_fuzz_never_panics() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let models = sample_models();
+    let mut rng = Rng::new(0x7C07);
+    for case in 0..prop_cases(60) {
+        let model = &models[case % models.len()];
+        let clean = bytes_of(model);
+        let cut = rng.below(clean.len());
+        let outcome =
+            catch_unwind(AssertUnwindSafe(|| artifact::load_from(&mut &clean[..cut])));
+        let loaded = outcome.unwrap_or_else(|_| panic!("case {case}: panic at cut {cut}"));
+        assert!(
+            loaded.is_err(),
+            "case {case}: a truncated artifact (cut {cut}/{}) must not load",
+            clean.len()
+        );
+    }
+}
+
+#[test]
+fn catalog_collections_carry_a_mapper() {
+    use amips::index::{BuildCtx, Catalog, IndexSpec};
+
+    let tmp = TempDir::new("amips-catalog-mapper");
+    let root = tmp.join("catalog");
+    let keys = unit(&[200, 8], 61);
+    let spec = IndexSpec::default_for("ivf").unwrap().with_nlist(4);
+    {
+        let mut catalog = Catalog::create(&root).unwrap();
+        catalog
+            .build_collection("docs", &spec, &keys, &BuildCtx::seeded(62))
+            .unwrap();
+    }
+    let model =
+        RustModel::init("docs.keynet", NetSpec::new(ModelKind::KeyNet, 8, 1, 10, 2), 63).unwrap();
+    let mpath = Catalog::attach_mapper(&root, "docs", &model).unwrap();
+    assert!(mpath.exists());
+
+    // reopen: the mapper rides along and maps queries bit-identically
+    let entry = Catalog::open_collection(&root, "docs").unwrap();
+    let mapper = entry.mapper.as_ref().expect("mapper attached");
+    let q = unit(&[3, 8], 64);
+    assert_eq!(
+        mapper.map_queries(&q).unwrap().data(),
+        model.map_queries(&q).unwrap().data()
+    );
+    // full-open sees it too, and plain collections stay mapper-less
+    let catalog = Catalog::open(&root).unwrap();
+    assert!(catalog.get("docs").unwrap().mapper.is_some());
+
+    // attaching a wrong-dimension mapper is a typed error
+    let wrong =
+        RustModel::init("wrong", NetSpec::new(ModelKind::KeyNet, 9, 1, 10, 2), 65).unwrap();
+    assert!(Catalog::attach_mapper(&root, "docs", &wrong).is_err());
+    // as is attaching to a missing collection
+    assert!(Catalog::attach_mapper(&root, "nope", &model).is_err());
+    // and a multi-head model
+    let multi =
+        RustModel::init("multi", NetSpec::new(ModelKind::SupportNet, 8, 3, 10, 2), 66).unwrap();
+    assert!(Catalog::attach_mapper(&root, "docs", &multi).is_err());
+}

@@ -1,0 +1,251 @@
+//! Gradient checks for the pure-Rust nn layer (runs on default
+//! features): manual backprop vs central finite differences — including
+//! the double-backprop path through the SupportNet gradient-matching
+//! loss — plus the homogenization wrapper's analytic invariants
+//! (`f(αx) = α·f(x)` for α>0 and Euler's identity `⟨∇f(x), x⟩ = f(x)`).
+//!
+//! Sweeps are seeded and scaled by `AMIPS_PROP_CASES` (same contract as
+//! `properties.rs`): cases are drawn from one deterministic stream, so
+//! a failing case number reproduces exactly.
+
+use amips::nn::{Lambdas, ModelKind, NetSpec, Network};
+use amips::tensor::{normalize_rows, Tensor};
+use amips::util::{prop_cases, Rng};
+
+fn unit(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(t.data_mut(), 1.0);
+    normalize_rows(&mut t);
+    t
+}
+
+/// Random tiny architecture for one sweep case.
+fn random_spec(kind: ModelKind, rng: &mut Rng) -> NetSpec {
+    let d = 2 + rng.below(3); // 2..=4
+    let c = 1 + rng.below(2); // 1..=2
+    let h = 3 + rng.below(4); // 3..=6
+    let layers = 1 + rng.below(3); // 1..=3
+    let mut spec = NetSpec::new(kind, d, c, h, layers);
+    spec.nx = rng.below(layers + 1);
+    spec.residual = rng.below(2) == 1;
+    if kind == ModelKind::SupportNet {
+        // exercise both the homogenized and the raw trunk
+        spec.homogenize = rng.below(2) == 1;
+    }
+    spec
+}
+
+fn random_batch(spec: &NetSpec, rng: &mut Rng) -> (Tensor, Tensor, Tensor) {
+    let b = 2 + rng.below(3); // 2..=4
+    let (c, d) = (spec.c, spec.d);
+    let x = unit(&[b, d], rng);
+    let y = unit(&[b * c, d], rng).reshape(&[b, c, d]);
+    let mut s = Tensor::zeros(&[b, c]);
+    rng.fill_normal(s.data_mut(), 0.5);
+    (x, y, s)
+}
+
+const LAM: Lambdas = Lambdas {
+    lam_a: 0.3,
+    lam_b: 1.0,
+    lam_icnn: 0.05,
+};
+
+fn loss_of(net: &Network, x: &Tensor, y: &Tensor, s: &Tensor) -> f64 {
+    net.loss_and_grads(x, y, s, &LAM).unwrap().0.total as f64
+}
+
+/// Directional derivative check: FD along a random unit direction over
+/// *all* parameters vs `⟨grad, dir⟩`. Far more robust in f32 than
+/// per-element FD, and it covers every parameter at once.
+fn directional_check(kind: ModelKind, case: usize, rng: &mut Rng) {
+    let spec = random_spec(kind, rng);
+    let net = Network::init(spec.clone(), rng.next_u64()).unwrap();
+    let (x, y, s) = random_batch(&spec, rng);
+    let (_, grads) = net.loss_and_grads(&x, &y, &s, &LAM).unwrap();
+
+    // random direction, normalized over the whole parameter vector
+    let mut dir: Vec<Tensor> = grads
+        .iter()
+        .map(|g| {
+            let mut t = Tensor::zeros(g.shape());
+            rng.fill_normal(t.data_mut(), 1.0);
+            t
+        })
+        .collect();
+    let norm: f32 = dir
+        .iter()
+        .flat_map(|t| t.data())
+        .map(|v| v * v)
+        .sum::<f32>()
+        .sqrt()
+        .max(1e-12);
+    for t in &mut dir {
+        for v in t.data_mut() {
+            *v /= norm;
+        }
+    }
+    let analytic: f64 = grads
+        .iter()
+        .zip(&dir)
+        .map(|(g, v)| {
+            g.data()
+                .iter()
+                .zip(v.data())
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum::<f64>()
+        })
+        .sum();
+
+    let eps = 1e-2f32;
+    let shift = |sign: f32| -> Network {
+        let params: Vec<Tensor> = net
+            .params()
+            .iter()
+            .zip(&dir)
+            .map(|(p, v)| {
+                let mut t = p.clone();
+                for (pe, &ve) in t.data_mut().iter_mut().zip(v.data()) {
+                    *pe += sign * eps * ve;
+                }
+                t
+            })
+            .collect();
+        Network::new(spec.clone(), params).unwrap()
+    };
+    let fd = (loss_of(&shift(1.0), &x, &y, &s) - loss_of(&shift(-1.0), &x, &y, &s))
+        / (2.0 * eps as f64);
+    let tol = 1e-3 + 3e-2 * fd.abs().max(analytic.abs());
+    assert!(
+        (fd - analytic).abs() < tol,
+        "case {case} {kind:?} {spec:?}: directional fd {fd} vs backprop {analytic}"
+    );
+}
+
+#[test]
+fn keynet_backprop_matches_finite_differences() {
+    let mut rng = Rng::new(0xC0FE);
+    for case in 0..prop_cases(30) {
+        directional_check(ModelKind::KeyNet, case, &mut rng);
+    }
+}
+
+#[test]
+fn supportnet_backprop_matches_finite_differences() {
+    // this is the double-backprop path: the loss contains the
+    // hand-derived input gradient, so dLoss/dθ uses σ''
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..prop_cases(30) {
+        directional_check(ModelKind::SupportNet, case, &mut rng);
+    }
+}
+
+#[test]
+fn per_element_gradients_match_on_a_fixed_tiny_net() {
+    for kind in [ModelKind::SupportNet, ModelKind::KeyNet] {
+        let spec = NetSpec::new(kind, 3, 1, 4, 2);
+        let net = Network::init(spec.clone(), 11).unwrap();
+        let mut rng = Rng::new(12);
+        let (x, y, s) = random_batch(&spec, &mut rng);
+        let (_, grads) = net.loss_and_grads(&x, &y, &s, &LAM).unwrap();
+        let eps = 1e-2f32;
+        for (ti, g) in grads.iter().enumerate() {
+            for e in 0..g.len() {
+                let probe = |sign: f32| -> f64 {
+                    let mut params = net.params().to_vec();
+                    params[ti].data_mut()[e] += sign * eps;
+                    loss_of(&Network::new(spec.clone(), params).unwrap(), &x, &y, &s)
+                };
+                let fd = (probe(1.0) - probe(-1.0)) / (2.0 * eps as f64);
+                let an = g.data()[e] as f64;
+                assert!(
+                    (fd - an).abs() < 2e-3 + 5e-2 * fd.abs().max(an.abs()),
+                    "{kind:?} tensor {ti} elem {e}: fd {fd} vs {an}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn homogenized_scores_scale_linearly() {
+    let mut rng = Rng::new(21);
+    for case in 0..prop_cases(40) {
+        let mut spec = random_spec(ModelKind::SupportNet, &mut rng);
+        spec.homogenize = true;
+        let net = Network::init(spec.clone(), rng.next_u64()).unwrap();
+        let x = unit(&[3, spec.d], &mut rng);
+        let alpha = 0.25 + rng.uniform() as f32 * 4.0;
+        let mut ax = x.clone();
+        for v in ax.data_mut() {
+            *v *= alpha;
+        }
+        let s1 = net.scores(&x).unwrap();
+        let s2 = net.scores(&ax).unwrap();
+        for (a, b) in s1.data().iter().zip(s2.data()) {
+            assert!(
+                (b - alpha * a).abs() < 1e-4 * (1.0 + a.abs() * alpha),
+                "case {case}: f(αx)={b} vs α·f(x)={}",
+                alpha * a
+            );
+        }
+    }
+}
+
+#[test]
+fn euler_identity_links_values_and_gradients() {
+    let mut rng = Rng::new(22);
+    for case in 0..prop_cases(40) {
+        let mut spec = random_spec(ModelKind::SupportNet, &mut rng);
+        spec.homogenize = true;
+        let net = Network::init(spec.clone(), rng.next_u64()).unwrap();
+        let x = unit(&[3, spec.d], &mut rng);
+        let (scores, keys) = net.scores_and_keys(&x).unwrap();
+        for b in 0..3 {
+            for j in 0..spec.c {
+                let off = (b * spec.c + j) * spec.d;
+                let dotv: f32 = keys.data()[off..off + spec.d]
+                    .iter()
+                    .zip(x.row(b))
+                    .map(|(k, q)| k * q)
+                    .sum();
+                let f = scores.row(b)[j];
+                assert!(
+                    (dotv - f).abs() < 1e-4 * (1.0 + f.abs()),
+                    "case {case}: Euler ⟨∇f,x⟩={dotv} vs f={f}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn supportnet_keys_are_the_input_gradient() {
+    // the served key must equal the finite-difference gradient of the
+    // served score w.r.t. the query — the paper's Sec. 3.1 claim
+    let mut rng = Rng::new(23);
+    for case in 0..prop_cases(15) {
+        let spec = random_spec(ModelKind::SupportNet, &mut rng);
+        let net = Network::init(spec.clone(), rng.next_u64()).unwrap();
+        let x = unit(&[2, spec.d], &mut rng);
+        let (_, keys) = net.scores_and_keys(&x).unwrap();
+        let eps = 1e-2f32;
+        for b in 0..2 {
+            for j in 0..spec.c {
+                for e in 0..spec.d {
+                    let probe = |sign: f32| -> f32 {
+                        let mut xp = x.clone();
+                        xp.row_mut(b)[e] += sign * eps;
+                        net.scores(&xp).unwrap().row(b)[j]
+                    };
+                    let fd = (probe(1.0) - probe(-1.0)) / (2.0 * eps);
+                    let an = keys.data()[(b * spec.c + j) * spec.d + e];
+                    assert!(
+                        (fd - an).abs() < 2e-3 + 5e-2 * fd.abs().max(an.abs()),
+                        "case {case} q{b} head {j} dim {e}: fd {fd} vs key {an} ({spec:?})"
+                    );
+                }
+            }
+        }
+    }
+}

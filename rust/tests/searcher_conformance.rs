@@ -249,6 +249,48 @@ fn mapped_searcher_reproduces_seed_pipeline_semantics() {
 }
 
 #[test]
+fn keynet_query_map_conforms_on_every_backbone() {
+    // The learned map must honor the same MappedSearcher contract as
+    // LinearQueryMap on every leaf backbone: passthrough in Original
+    // mode, mapped == map(queries) -> index scan, model flops billed.
+    // (Training quality is covered by learned_e2e.rs; an initialized
+    // model exercises the contract at zero training cost.)
+    use amips::api::{KeyNetQueryMap, QueryMap};
+    use amips::model::RustModel;
+    use amips::nn::{ModelKind, NetSpec};
+
+    let keys = unit(&[N, D], 30);
+    let queries = unit(&[NQ, D], 31);
+    let model =
+        RustModel::init("conf.keynet", NetSpec::new(ModelKind::KeyNet, D, 1, 12, 2), 32).unwrap();
+    let map = KeyNetQueryMap::new(model).unwrap();
+    let manual_q = map.map(&queries).unwrap();
+    let req = SearchRequest::top_k(5).effort(Effort::Exhaustive);
+    for name in BACKBONES {
+        let index = build(name, &keys, Some(&queries), 33);
+        let searcher = MappedSearcher::mapped(index.as_ref(), &map);
+        let direct = index.search(&queries, &req).unwrap();
+        let passthrough = searcher.search(&queries, &req).unwrap();
+        let mapped = searcher
+            .search(&queries, &req.mode(QueryMode::Mapped))
+            .unwrap();
+        let manual = index.search(&manual_q, &req).unwrap();
+        for q in 0..NQ {
+            assert_eq!(passthrough.hits[q].ids, direct.hits[q].ids, "{name} q{q}");
+            assert_eq!(mapped.hits[q].ids, manual.hits[q].ids, "{name} q{q}");
+            assert_eq!(mapped.hits[q].scores, manual.hits[q].scores, "{name} q{q}");
+        }
+        assert_eq!(
+            mapped.cost.map_flops,
+            map.map_flops_per_query() * NQ as u64,
+            "{name}"
+        );
+        assert_eq!(passthrough.cost.map_flops, 0, "{name}");
+        assert!(searcher.label().contains("conf.keynet"), "{name}");
+    }
+}
+
+#[test]
 fn routed_searcher_reproduces_centroid_routing() {
     // Seed parity: the centroid router over the index's own centroids is
     // exactly IVF's coarse ranking, so routed search == plain IVF search
