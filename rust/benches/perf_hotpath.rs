@@ -1,151 +1,173 @@
-//! §Perf: microbenchmarks of the request-path hot spots — exhaustive
-//! scan throughput (flat index), IVF probe, the parallel batched
-//! `Searcher` path, model forward, and end-to-end serving throughput.
-//! Before/after numbers live in EXPERIMENTS.md §Perf.
+//! §Perf: microbenchmarks of the request-path hot spots, pure Rust
+//! (default features). The headline rows compare the *per-query* scan
+//! path against the *fused batched* path (`search_batch_effort`) for
+//! flat / PQ / IVF at batch sizes B ∈ {1, 8, 64} — the kernels are
+//! bit-identical in results, so any ratio is pure memory/cache
+//! behavior. A machine-readable `BENCH_hotpath.json` is emitted next to
+//! the aligned-text table so the bench trajectory can be tracked across
+//! commits.
+//!
+//! Corpus size scales with `AMIPS_BENCH_N` / `AMIPS_BENCH_D` (CI's
+//! perf-smoke job runs a tiny synthetic corpus; local runs default to a
+//! cache-straining 32768 x 64).
 
-use amips::api::{Effort, QueryMode, SearchRequest, Searcher};
+use amips::api::{Effort, SearchRequest, Searcher};
 use amips::bench_support::fixtures;
-use amips::bench_support::report::Report;
-use amips::coordinator::{BatchPolicy, Server, ServerConfig};
-use amips::index::{flat::FlatIndex, ivf::IvfIndex, traits::VectorIndex};
-use amips::runtime::Engine;
-use amips::tensor::{gemm_nt, Tensor};
-use amips::trainer::{self, TrainOpts};
+use amips::bench_support::report::{JsonRows, JsonVal, Report};
+use amips::index::{flat::FlatIndex, ivf::IvfIndex, pq::PqIndex, traits::VectorIndex};
+use amips::tensor::{gemm_nt, normalize_rows, Tensor};
 use amips::util::timer::{time_reps, Stats};
+use amips::util::Rng;
 use anyhow::Result;
-use std::sync::Arc;
+use std::hint::black_box;
 
-fn main() -> Result<()> {
-    let manifest = fixtures::load_manifest()?;
-    let engine = Engine::new(manifest.dir.clone())?;
-    let ds = fixtures::prepare_dataset(&manifest, "nq-s", 1)?;
-    let (n, d) = (ds.n_keys(), ds.d());
-    let mut rep = Report::new("§Perf: hot-path microbenchmarks");
-    rep.header(&["path", "unit", "mean", "p95", "throughput"]);
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
 
-    // ---- 1. dot-product scan (the flat/ivf inner loop) -----------------
-    let flat = FlatIndex::new(ds.keys.clone());
-    let q = ds.val.x.row(0).to_vec();
-    let t = Stats::from(&time_reps(3, 30, || {
-        std::hint::black_box(flat.search_effort(&q, 10, Effort::Exhaustive));
+/// Time per-query and fused-batched scans of `index` over the first `b`
+/// queries, emitting one text row + one JSON row per mode. Flops come
+/// from the index's own SearchCost (identical on both paths).
+fn bench_pair(
+    rep: &mut Report,
+    json: &mut JsonRows,
+    backend: &str,
+    index: &dyn VectorIndex,
+    queries: &Tensor,
+    b: usize,
+    effort: Effort,
+) {
+    let reps = match b {
+        1 => 20,
+        8 => 8,
+        _ => 4,
+    };
+    let qb = queries.gather_rows(&(0..b).collect::<Vec<_>>());
+    let flops: u64 = (0..b)
+        .map(|i| index.search_effort(qb.row(i), 10, effort).cost.flops)
+        .sum();
+    let per_query = Stats::from(&time_reps(1, reps, || {
+        for i in 0..b {
+            black_box(index.search_effort(qb.row(i), 10, effort));
+        }
     }));
-    rep.row(&[
-        "flat scan".into(),
-        format!("{n} keys"),
-        format!("{:.3} ms", t.mean * 1e3),
-        format!("{:.3} ms", t.p95 * 1e3),
-        format!("{:.2} GFLOP/s", (n * d * 2) as f64 / t.mean / 1e9),
-    ]);
-
-    // ---- 2. gemm_nt batch scoring --------------------------------------
-    let qb = ds.val.x.gather_rows(&(0..64).collect::<Vec<_>>());
-    let mut out = Tensor::zeros(&[64, n]);
-    let t = Stats::from(&time_reps(2, 10, || {
-        gemm_nt(&qb, &ds.keys, &mut out);
+    let batched = Stats::from(&time_reps(1, reps, || {
+        black_box(index.search_batch_effort(&qb, 10, effort));
     }));
-    rep.row(&[
-        "gemm_nt".into(),
-        format!("64x{n}"),
-        format!("{:.2} ms", t.mean * 1e3),
-        format!("{:.2} ms", t.p95 * 1e3),
-        format!("{:.2} GFLOP/s", (64 * n * d * 2) as f64 / t.mean / 1e9),
-    ]);
-
-    // ---- 3. IVF probe ----------------------------------------------------
-    let ivf = IvfIndex::build(&ds.keys, fixtures::default_nlist(n), 15, 42);
-    for nprobe in [1usize, 8] {
-        let t = Stats::from(&time_reps(3, 50, || {
-            std::hint::black_box(ivf.search_effort(&q, 10, Effort::Probes(nprobe)));
-        }));
+    for (mode, t) in [("per_query", per_query), ("batched", batched)] {
+        let gflops = flops as f64 / t.mean / 1e9;
+        let qps = b as f64 / t.mean;
         rep.row(&[
-            format!("ivf probe={nprobe}"),
-            "1 query".into(),
-            format!("{:.1} us", t.mean * 1e6),
-            format!("{:.1} us", t.p95 * 1e6),
-            format!("{:.0} q/s", 1.0 / t.mean),
+            format!("{backend} {mode}"),
+            format!("B={b}"),
+            format!("{:.3} ms", t.mean * 1e3),
+            format!("{:.3} ms", t.p95 * 1e3),
+            format!("{gflops:.2} GFLOP/s"),
+            format!("{qps:.0} q/s"),
+        ]);
+        json.push(&[
+            ("backend", JsonVal::S(backend.to_string())),
+            ("mode", JsonVal::S(mode.to_string())),
+            ("batch", JsonVal::I(b as u64)),
+            ("n", JsonVal::I(index.len() as u64)),
+            ("d", JsonVal::I(index.dim() as u64)),
+            ("mean_s", JsonVal::F(t.mean)),
+            ("p95_s", JsonVal::F(t.p95)),
+            ("gflops", JsonVal::F(gflops)),
+            ("qps", JsonVal::F(qps)),
         ]);
     }
+}
 
-    // ---- 4. parallel batched Searcher over the thread pool --------------
-    let req = SearchRequest::top_k(10).effort(Effort::Probes(8));
-    let t = Stats::from(&time_reps(2, 10, || {
-        std::hint::black_box(ivf.search(&ds.val.x, &req).unwrap());
+fn main() -> Result<()> {
+    let n = env_usize("AMIPS_BENCH_N", 32_768);
+    let d = env_usize("AMIPS_BENCH_D", 64);
+    let nq = 64usize;
+    let keys = fixtures::synth_keys(n, d, 42);
+    let mut queries = Tensor::zeros(&[nq, d]);
+    Rng::new(7).fill_normal(queries.data_mut(), 1.0);
+    normalize_rows(&mut queries);
+
+    let mut rep = Report::new("§Perf: hot-path microbenchmarks (batched vs per-query)");
+    rep.header(&["path", "unit", "mean", "p95", "throughput", "rate"]);
+    let mut json = JsonRows::new("hotpath");
+
+    // ---- 1. batched vs per-query scans: flat / PQ / IVF ----------------
+    let flat = FlatIndex::new(keys.clone());
+    let pq_m = [8usize, 4, 2, 1].into_iter().find(|m| d % m == 0).unwrap_or(1);
+    let pq = PqIndex::build(&keys, pq_m, 3, 1.0, 42);
+    let ivf = IvfIndex::build(&keys, fixtures::default_nlist(n), 10, 42);
+    let backends: [(&str, &dyn VectorIndex, Effort); 3] = [
+        ("flat", &flat, Effort::Exhaustive),
+        ("pq", &pq, Effort::Auto),
+        ("ivf", &ivf, Effort::Probes(8)),
+    ];
+    for (backend, index, effort) in backends {
+        for b in [1usize, 8, 64] {
+            bench_pair(&mut rep, &mut json, backend, index, &queries, b, effort);
+        }
+    }
+
+    // ---- 2. raw gemm_nt batch scoring (kernel ceiling) -----------------
+    let mut out = Tensor::zeros(&[nq, n]);
+    let t = Stats::from(&time_reps(1, 4, || {
+        gemm_nt(&queries, &keys, &mut out);
     }));
-    let nq = ds.val.x.rows();
+    let gflops = (nq * n * d * 2) as f64 / t.mean / 1e9;
+    rep.row(&[
+        "gemm_nt".into(),
+        format!("{nq}x{n}"),
+        format!("{:.2} ms", t.mean * 1e3),
+        format!("{:.2} ms", t.p95 * 1e3),
+        format!("{gflops:.2} GFLOP/s"),
+        String::new(),
+    ]);
+    json.push(&[
+        ("backend", JsonVal::S("gemm_nt".into())),
+        ("mode", JsonVal::S("kernel".into())),
+        ("batch", JsonVal::I(nq as u64)),
+        ("n", JsonVal::I(n as u64)),
+        ("d", JsonVal::I(d as u64)),
+        ("mean_s", JsonVal::F(t.mean)),
+        ("p95_s", JsonVal::F(t.p95)),
+        ("gflops", JsonVal::F(gflops)),
+        ("qps", JsonVal::F(nq as f64 / t.mean)),
+    ]);
+
+    // ---- 3. threaded batched Searcher over the pool --------------------
+    let req = SearchRequest::top_k(10).effort(Effort::Probes(8));
+    let t = Stats::from(&time_reps(1, 4, || {
+        black_box(ivf.search(&queries, &req).unwrap());
+    }));
     rep.row(&[
         "ivf batch (Searcher)".into(),
         format!("{nq} queries"),
         format!("{:.2} ms", t.mean * 1e3),
         format!("{:.2} ms", t.p95 * 1e3),
+        String::new(),
         format!("{:.0} q/s", nq as f64 / t.mean),
     ]);
-
-    // ---- 5. model forward (batched inference) ---------------------------
-    let config = "nq-s.keynet.xs.l4.c1";
-    let model = fixtures::trained_model(&engine, &manifest, config, &ds, None)?;
-    let batch = ds.val.x.gather_rows(&(0..256).collect::<Vec<_>>());
-    let t = Stats::from(&time_reps(2, 20, || {
-        std::hint::black_box(model.map_queries(&batch).unwrap());
-    }));
-    rep.row(&[
-        "keynet fwd".into(),
-        "256 queries".into(),
-        format!("{:.2} ms", t.mean * 1e3),
-        format!("{:.2} ms", t.p95 * 1e3),
-        format!("{:.0} q/s", 256.0 / t.mean),
+    json.push(&[
+        ("backend", JsonVal::S("ivf".into())),
+        ("mode", JsonVal::S("searcher_threaded".into())),
+        ("batch", JsonVal::I(nq as u64)),
+        ("n", JsonVal::I(n as u64)),
+        ("d", JsonVal::I(d as u64)),
+        ("mean_s", JsonVal::F(t.mean)),
+        ("p95_s", JsonVal::F(t.p95)),
+        ("gflops", JsonVal::F(f64::NAN)),
+        ("qps", JsonVal::F(nq as f64 / t.mean)),
     ]);
 
-    // ---- 6. end-to-end serving ------------------------------------------
-    let meta = manifest.meta(config)?;
-    let params = trainer::train_or_load(
-        &engine,
-        &meta,
-        &ds,
-        &TrainOpts {
-            steps: fixtures::default_steps(&meta.size),
-            ..Default::default()
-        },
-    )?
-    .params;
-    drop(engine); // server builds its own engine on the runner thread
-    let default_request = SearchRequest::top_k(10)
-        .effort(Effort::Probes(4))
-        .mode(QueryMode::Mapped);
-    let (server, handle) = Server::start(
-        ServerConfig::with_model(
-            manifest.dir.clone(),
-            meta,
-            params,
-            BatchPolicy::default(),
-            default_request,
-        ),
-        Arc::new(ivf),
-    )?;
-    let reqs = 512usize;
-    let t0 = std::time::Instant::now();
-    std::thread::scope(|s| {
-        for c in 0..4usize {
-            let handle = handle.clone();
-            let ds = &ds;
-            s.spawn(move || {
-                for i in (c..reqs).step_by(4) {
-                    let _ = handle.search(ds.val.x.row(i % ds.val.x.rows()).to_vec());
-                }
-            });
-        }
-    });
-    let wall = t0.elapsed().as_secs_f64();
-    let stats = server.latency_stats();
-    drop(handle);
-    server.shutdown()?;
-    rep.row(&[
-        "serve e2e".into(),
-        format!("{reqs} reqs"),
-        format!("{:.2} ms p50", stats.quantile_s(0.5) * 1e3),
-        format!("{:.2} ms p95", stats.quantile_s(0.95) * 1e3),
-        format!("{:.0} q/s", reqs as f64 / wall),
-    ]);
-
+    rep.note(format!(
+        "corpus {n}x{d} (AMIPS_BENCH_N/AMIPS_BENCH_D to rescale); batched and \
+         per-query paths are bit-identical in results, so ratios are pure \
+         kernel/cache effects"
+    ));
     rep.emit("perf_hotpath");
+    json.emit();
     Ok(())
 }

@@ -53,6 +53,8 @@ pub use response::{recall_against_truth, CostBreakdown, Hits, SearchResponse};
 pub use routed::RoutedSearcher;
 pub use searcher::Searcher;
 
-// the ordered-parallel-map helper behind the blanket Searcher impl,
-// shared with other fan-out sites (e.g. index::shard)
-pub(crate) use searcher::batch_map;
+// the ordered fan-out helpers behind the blanket Searcher impl, shared
+// with other batched call sites: `batch_map` (per-item fan-out, e.g.
+// the sharded single-query path) and `search_batch_parallel` (fused
+// sub-batch execution, e.g. the serving coordinator)
+pub(crate) use searcher::{batch_map, search_batch_parallel};

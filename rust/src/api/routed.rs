@@ -6,7 +6,7 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::api::searcher::batch_map;
+use crate::api::searcher::sub_batches;
 use crate::api::{CostBreakdown, QueryMode, SearchRequest, SearchResponse, Searcher};
 use crate::coordinator::router::Router;
 use crate::index::ivf::IvfIndex;
@@ -63,10 +63,17 @@ impl Searcher for RoutedSearcher<'_> {
                     decisions.len(),
                     queries.rows()
                 );
+                // Fused scan: per-worker sub-batches, each grouping its
+                // queries by routed cell so a cell's keys stream once for
+                // every query routed to it (bit-identical to per-query
+                // `search_cells` — see `IvfIndex::search_cells_batch`).
                 let timer = Timer::start();
-                let results = batch_map(queries.rows(), |i| {
-                    self.index
-                        .search_cells(queries.row(i), &decisions[i].clusters, request.k)
+                let results = sub_batches(queries, |sub, start, end| {
+                    let cells: Vec<&[u32]> = decisions[start..end]
+                        .iter()
+                        .map(|d| d.clusters.as_slice())
+                        .collect();
+                    self.index.search_cells_batch(sub, &cells, request.k)
                 });
                 let mut cost = CostBreakdown {
                     route_seconds,

@@ -9,10 +9,10 @@
 use anyhow::{bail, Result};
 use std::sync::Mutex;
 
-use crate::api::{CostBreakdown, QueryMode, SearchRequest, SearchResponse};
+use crate::api::{CostBreakdown, Effort, QueryMode, SearchRequest, SearchResponse};
 use crate::index::traits::{SearchResult, VectorIndex};
 use crate::tensor::Tensor;
-use crate::util::threads::{num_threads, parallel_chunks};
+use crate::util::threads::{in_parallel_region, num_threads, parallel_chunks};
 use crate::util::Timer;
 
 /// A polymorphic batched MIPS searcher.
@@ -37,23 +37,9 @@ pub trait Searcher {
     }
 }
 
-/// Run `f(query_index)` for every query in `0..n` on the shared thread
-/// pool, preserving input order in the output.
-pub(crate) fn batch_map<F>(n: usize, f: F) -> Vec<SearchResult>
-where
-    F: Fn(usize) -> SearchResult + Sync,
-{
-    if n == 0 {
-        return Vec::new();
-    }
-    // ~4 chunks per worker: enough slack for uneven per-query cost
-    // without drowning in coordination.
-    let chunk = n.div_ceil(num_threads().max(1) * 4).max(1);
-    let parts: Mutex<Vec<(usize, Vec<SearchResult>)>> = Mutex::new(Vec::new());
-    parallel_chunks(n, chunk, |_, start, end| {
-        let block: Vec<SearchResult> = (start..end).map(&f).collect();
-        parts.lock().unwrap().push((start, block));
-    });
+/// Reassemble the `(start, block)` parts produced by parallel chunk
+/// workers into input order. Shared by every ordered fan-out here.
+fn merge_ordered_parts<T>(parts: Mutex<Vec<(usize, Vec<T>)>>, n: usize) -> Vec<T> {
     let mut parts = parts.into_inner().unwrap();
     parts.sort_by_key(|(start, _)| *start);
     let mut out = Vec::with_capacity(n);
@@ -61,6 +47,73 @@ where
         out.extend(block);
     }
     out
+}
+
+/// Run `f(item_index)` for every item in `0..n` on the shared thread
+/// pool, preserving input order in the output. Used for per-query and
+/// per-shard fan-out where each item produces one independent result.
+pub(crate) fn batch_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    // ~4 chunks per worker: enough slack for uneven per-item cost
+    // without drowning in coordination.
+    let chunk = n.div_ceil(num_threads().max(1) * 4).max(1);
+    let parts: Mutex<Vec<(usize, Vec<T>)>> = Mutex::new(Vec::new());
+    parallel_chunks(n, chunk, |_, start, end| {
+        let block: Vec<T> = (start..end).map(&f).collect();
+        parts.lock().unwrap().push((start, block));
+    });
+    merge_ordered_parts(parts, n)
+}
+
+/// Split `queries` into contiguous per-worker sub-batches on the shared
+/// thread pool and run `f(sub_batch, start, end)` on each, preserving
+/// query order in the output. Sub-batches are sized at two per worker —
+/// large enough that fused kernels amortize key/table loads across the
+/// rows, small enough to absorb uneven per-query cost. A single worker
+/// (or a nested call from inside the pool) takes the whole batch in one
+/// fused pass, with no copy.
+pub(crate) fn sub_batches<F>(queries: &Tensor, f: F) -> Vec<SearchResult>
+where
+    F: Fn(&Tensor, usize, usize) -> Vec<SearchResult> + Sync,
+{
+    let n = queries.rows();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = num_threads().max(1);
+    let chunk = n.div_ceil(workers * 2).max(1);
+    if workers <= 1 || chunk >= n || in_parallel_region() {
+        return f(queries, 0, n);
+    }
+    let d = queries.row_width();
+    let parts: Mutex<Vec<(usize, Vec<SearchResult>)>> = Mutex::new(Vec::new());
+    parallel_chunks(n, chunk, |_, start, end| {
+        let sub = Tensor::from_vec(&[end - start, d], queries.data()[start * d..end * d].to_vec());
+        let block = f(&sub, start, end);
+        debug_assert_eq!(block.len(), end - start);
+        parts.lock().unwrap().push((start, block));
+    });
+    merge_ordered_parts(parts, n)
+}
+
+/// The batched execution path behind the blanket [`Searcher`] impl and
+/// the serving coordinator: split the batch into per-worker sub-batches
+/// and run the backbone's fused
+/// [`VectorIndex::search_batch_effort`] on each. Per-query results are
+/// bit-identical to one-at-a-time `search_effort` calls.
+pub(crate) fn search_batch_parallel<T: VectorIndex + ?Sized>(
+    index: &T,
+    queries: &Tensor,
+    k: usize,
+    effort: Effort,
+) -> Vec<SearchResult> {
+    sub_batches(queries, |sub, _, _| index.search_batch_effort(sub, k, effort))
 }
 
 /// Every index backbone is a [`Searcher`] serving [`QueryMode::Original`]
@@ -86,9 +139,7 @@ impl<T: VectorIndex + ?Sized> Searcher for T {
             );
         }
         let timer = Timer::start();
-        let results = batch_map(queries.rows(), |i| {
-            self.search_effort(queries.row(i), request.k, request.effort)
-        });
+        let results = search_batch_parallel(self, queries, request.k, request.effort);
         let cost = CostBreakdown {
             search_seconds: timer.elapsed_s(),
             ..CostBreakdown::default()
@@ -153,6 +204,35 @@ mod tests {
     }
 
     #[test]
+    fn sub_batches_preserve_order_and_row_ranges() {
+        // 257 rows force multi-chunk execution on multi-core hosts; each
+        // callback must see a contiguous copy of its own row range
+        let n = 257;
+        let mut q = Tensor::zeros(&[n, 2]);
+        for i in 0..n {
+            q.row_mut(i)[0] = i as f32;
+        }
+        let out = sub_batches(&q, |sub, start, end| {
+            assert_eq!(sub.rows(), end - start);
+            (0..sub.rows())
+                .map(|r| {
+                    assert_eq!(sub.row(r)[0], (start + r) as f32);
+                    SearchResult {
+                        ids: vec![(start + r) as u32],
+                        scores: vec![sub.row(r)[0]],
+                        cost: Default::default(),
+                    }
+                })
+                .collect()
+        });
+        assert_eq!(out.len(), n);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.ids[0] as usize, i);
+        }
+        assert!(sub_batches(&Tensor::zeros(&[0, 2]), |_, _, _| unreachable!()).is_empty());
+    }
+
+    #[test]
     fn batch_map_preserves_order_under_threads() {
         // force multi-chunk execution regardless of core count
         let n = 257;
@@ -165,6 +245,7 @@ mod tests {
         for (i, r) in out.iter().enumerate() {
             assert_eq!(r.ids[0] as usize, i);
         }
-        assert!(batch_map(0, |_| unreachable!()).is_empty());
+        let empty: Vec<SearchResult> = batch_map(0, |_| unreachable!());
+        assert!(empty.is_empty());
     }
 }

@@ -10,7 +10,7 @@ use crate::api::Effort;
 use crate::index::artifact;
 use crate::index::spec::{FlatSpec, IndexSpec};
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
-use crate::tensor::{dot, Tensor};
+use crate::tensor::{dot, gemm_nt_tile, Tensor};
 
 /// Brute-force scan over all keys.
 pub struct FlatIndex {
@@ -42,7 +42,7 @@ impl FlatIndex {
         let d = self.d();
         let mut top = TopK::new(k);
         for &id in ids {
-            top.push(dot(query, self.keys.row(id as usize)), id);
+            top.offer(dot(query, self.keys.row(id as usize)), id);
         }
         let (ids_out, scores) = top.into_sorted();
         SearchResult {
@@ -62,7 +62,7 @@ impl FlatIndex {
         let d = self.d();
         let mut top = TopK::new(k);
         for id in 0..n {
-            top.push(dot(query, self.keys.row(id)), id as u32);
+            top.offer(dot(query, self.keys.row(id)), id as u32);
         }
         let (ids, scores) = top.into_sorted();
         SearchResult {
@@ -92,6 +92,59 @@ impl VectorIndex for FlatIndex {
 
     fn search_effort(&self, query: &[f32], k: usize, _effort: Effort) -> SearchResult {
         self.scan_all(query, k)
+    }
+
+    /// Fused batched scan: score query-tiles × key-tiles through the
+    /// [`gemm_nt_tile`] kernel, so each key tile is streamed from memory
+    /// once per *batch* instead of once per query, then feed per-query
+    /// [`TopK`]s. Same `dot` per (query, key) pair as
+    /// [`FlatIndex::search_effort`], so results and costs are
+    /// bit-identical.
+    fn search_batch_effort(
+        &self,
+        queries: &Tensor,
+        k: usize,
+        _effort: Effort,
+    ) -> Vec<SearchResult> {
+        let b = queries.rows();
+        if b == 0 {
+            return Vec::new();
+        }
+        let (n, d) = (self.len(), self.d());
+        assert_eq!(queries.row_width(), d, "query dim != index dim {d}");
+        let mut tops: Vec<TopK> = (0..b).map(|_| TopK::new(k)).collect();
+        // 128 keys * 64 dims * 4 B = 32 KB per key tile: L1/L2 resident
+        // while every query in the sub-batch scores against it.
+        const KEY_TILE: usize = 128;
+        let mut scores = vec![0.0f32; b * KEY_TILE];
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + KEY_TILE).min(n);
+            let w = j1 - j0;
+            gemm_nt_tile(
+                queries.data(),
+                &self.keys.data()[j0 * d..j1 * d],
+                d,
+                &mut scores[..b * w],
+            );
+            for (q, top) in tops.iter_mut().enumerate() {
+                for (jj, &s) in scores[q * w..(q + 1) * w].iter().enumerate() {
+                    top.offer(s, (j0 + jj) as u32);
+                }
+            }
+            j0 = j1;
+        }
+        let cost = SearchCost {
+            flops: (n * d * 2) as u64,
+            keys_scanned: n as u64,
+            cells_probed: 0,
+        };
+        tops.into_iter()
+            .map(|t| {
+                let (ids, scores) = t.into_sorted();
+                SearchResult { ids, scores, cost }
+            })
+            .collect()
     }
 
     fn spec(&self) -> IndexSpec {
@@ -153,6 +206,23 @@ mod tests {
         let res = idx.search_subset(q.row(0), &subset, 2);
         assert!(res.ids.iter().all(|id| subset.contains(id)));
         assert_eq!(res.cost.keys_scanned, 3);
+    }
+
+    #[test]
+    fn batched_scan_is_bit_identical_to_per_query() {
+        // odd sizes so the key tiling hits a partial last tile
+        let keys = randt(&[301, 24], 9);
+        let idx = FlatIndex::new(keys);
+        let q = randt(&[7, 24], 10);
+        let batched = idx.search_batch_effort(&q, 5, Effort::Auto);
+        assert_eq!(batched.len(), 7);
+        for i in 0..7 {
+            let single = idx.search_effort(q.row(i), 5, Effort::Auto);
+            assert_eq!(batched[i].ids, single.ids, "query {i}");
+            assert_eq!(batched[i].scores, single.scores, "query {i}");
+            assert_eq!(batched[i].cost, single.cost, "query {i}");
+        }
+        assert!(idx.search_batch_effort(&Tensor::zeros(&[0, 24]), 5, Effort::Auto).is_empty());
     }
 
     #[test]

@@ -18,7 +18,45 @@ use crate::index::artifact;
 use crate::index::kmeans::KMeans;
 use crate::index::spec::{IndexSpec, IvfSpec};
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
-use crate::tensor::{dot, Tensor};
+use crate::tensor::{dot, gemm_nt_tile, Tensor};
+
+/// Batch × centroids coarse ranking shared by the IVF-family backbones
+/// (IVF, ScaNN, SOAR): one [`gemm_nt_tile`] over the centroid matrix,
+/// then one [`TopK`] per query row. Scores go through the same `dot` as
+/// scoring each centroid alone, so every query's cell list is identical
+/// to its per-query ranking.
+pub(crate) fn rank_cells_tensor(
+    queries: &Tensor,
+    centroids: &Tensor,
+    nprobe: usize,
+) -> Vec<Vec<u32>> {
+    let (b, nlist, d) = (queries.rows(), centroids.rows(), centroids.row_width());
+    let keep = nprobe.max(1).min(nlist);
+    let mut cscores = vec![0.0f32; b * nlist];
+    gemm_nt_tile(queries.data(), centroids.data(), d, &mut cscores);
+    cscores
+        .chunks(nlist)
+        .map(|row| {
+            let mut top = TopK::new(keep);
+            for (j, &s) in row.iter().enumerate() {
+                top.offer(s, j as u32);
+            }
+            top.into_sorted().0
+        })
+        .collect()
+}
+
+/// Invert per-query cell lists into per-cell prober lists (which
+/// queries probe each cell), preserving multiplicity.
+pub(crate) fn invert_to_probers<C: AsRef<[u32]>>(cells: &[C], nlist: usize) -> Vec<Vec<u32>> {
+    let mut probers: Vec<Vec<u32>> = vec![Vec::new(); nlist];
+    for (q, list) in cells.iter().enumerate() {
+        for &cell in list.as_ref() {
+            probers[cell as usize].push(q as u32);
+        }
+    }
+    probers
+}
 
 pub struct IvfIndex {
     pub nlist: usize,
@@ -134,9 +172,15 @@ impl IvfIndex {
     pub fn rank_cells(&self, query: &[f32], nprobe: usize) -> Vec<u32> {
         let mut top = TopK::new(nprobe.max(1).min(self.nlist));
         for j in 0..self.nlist {
-            top.push(dot(query, self.centroids.row(j)), j as u32);
+            top.offer(dot(query, self.centroids.row(j)), j as u32);
         }
         top.into_sorted().0
+    }
+
+    /// [`IvfIndex::rank_cells`] for a whole batch (see
+    /// [`rank_cells_tensor`]).
+    fn rank_cells_batch(&self, queries: &Tensor, nprobe: usize) -> Vec<Vec<u32>> {
+        rank_cells_tensor(queries, &self.centroids, nprobe)
     }
 
     /// Exact top-k over an explicit list of cells (the routed-search
@@ -163,11 +207,72 @@ impl IvfIndex {
         for &cell in cells {
             let (s, e) = (self.offsets[cell as usize], self.offsets[cell as usize + 1]);
             for pos in s..e {
-                top.push(dot(query, self.packed.row(pos)), self.ids[pos]);
+                top.offer(dot(query, self.packed.row(pos)), self.ids[pos]);
             }
             scanned += (e - s) as u64;
         }
         scanned
+    }
+
+    /// Grouped multi-query cell scan: invert the per-query cell lists
+    /// into per-cell prober lists, then stream each probed cell's keys
+    /// *once*, scoring every query that probes it while the key row is
+    /// hot. Per-query results and scan counts are identical to calling
+    /// [`IvfIndex::scan_cells`] per query — [`TopK`] output does not
+    /// depend on push order, and duplicate cells in a query's list
+    /// score (and count) with the same multiplicity either way.
+    fn scan_cells_grouped(&self, queries: &Tensor, cells: &[&[u32]], k: usize) -> Vec<(TopK, u64)> {
+        let b = queries.rows();
+        debug_assert_eq!(cells.len(), b);
+        let probers = invert_to_probers(cells, self.nlist);
+        let mut tops: Vec<TopK> = (0..b).map(|_| TopK::new(k)).collect();
+        let mut scanned = vec![0u64; b];
+        for (cell, qs) in probers.iter().enumerate() {
+            if qs.is_empty() {
+                continue;
+            }
+            let (s, e) = (self.offsets[cell], self.offsets[cell + 1]);
+            for pos in s..e {
+                let key = self.packed.row(pos);
+                let id = self.ids[pos];
+                for &q in qs {
+                    tops[q as usize].offer(dot(queries.row(q as usize), key), id);
+                }
+            }
+            for &q in qs {
+                scanned[q as usize] += (e - s) as u64;
+            }
+        }
+        tops.into_iter().zip(scanned).collect()
+    }
+
+    /// Fused multi-query [`IvfIndex::search_cells`]: one cell list per
+    /// query (the batched routed-search entry point — the caller owns
+    /// cell selection and its cost). Results are bit-identical to
+    /// calling `search_cells` per query.
+    pub fn search_cells_batch(
+        &self,
+        queries: &Tensor,
+        cells: &[&[u32]],
+        k: usize,
+    ) -> Vec<SearchResult> {
+        assert_eq!(queries.rows(), cells.len());
+        self.scan_cells_grouped(queries, cells, k)
+            .into_iter()
+            .zip(cells)
+            .map(|((top, scanned), list)| {
+                let (ids, scores) = top.into_sorted();
+                SearchResult {
+                    ids,
+                    scores,
+                    cost: SearchCost {
+                        flops: scanned * self.d as u64 * 2,
+                        keys_scanned: scanned,
+                        cells_probed: list.len() as u64,
+                    },
+                }
+            })
+            .collect()
     }
 
     /// Centroid-ranked probe search (the classic IVF query path).
@@ -208,6 +313,35 @@ impl VectorIndex for IvfIndex {
 
     fn search_effort(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult {
         self.search_probes(query, k, effort.resolve(self.nlist))
+    }
+
+    /// Fused batched probe: batch × centroids as one gemm tile, then
+    /// the grouped cell scan ([`IvfIndex::scan_cells_grouped`]) so each
+    /// probed cell's keys stream once for every query probing it.
+    /// Bit-identical to per-query [`IvfIndex::search_effort`].
+    fn search_batch_effort(&self, queries: &Tensor, k: usize, effort: Effort) -> Vec<SearchResult> {
+        let b = queries.rows();
+        if b == 0 {
+            return Vec::new();
+        }
+        let nprobe = effort.resolve(self.nlist);
+        let cells = self.rank_cells_batch(queries, nprobe);
+        let cell_refs: Vec<&[u32]> = cells.iter().map(|c| c.as_slice()).collect();
+        self.scan_cells_grouped(queries, &cell_refs, k)
+            .into_iter()
+            .map(|(top, scanned)| {
+                let (ids, scores) = top.into_sorted();
+                SearchResult {
+                    ids,
+                    scores,
+                    cost: SearchCost {
+                        flops: (self.nlist as u64 + scanned) * self.d as u64 * 2,
+                        keys_scanned: scanned,
+                        cells_probed: nprobe as u64,
+                    },
+                }
+            })
+            .collect()
     }
 
     fn spec(&self) -> IndexSpec {
@@ -316,6 +450,45 @@ mod tests {
         assert_eq!(a.cost.keys_scanned, b.cost.keys_scanned);
         // selection flops only on the probe path
         assert!(a.cost.flops < b.cost.flops);
+    }
+
+    #[test]
+    fn batched_search_is_bit_identical_to_per_query() {
+        let keys = unit_keys(350, 12, 17);
+        let ivf = IvfIndex::build(&keys, 7, 10, 18);
+        let q = unit_keys(9, 12, 19);
+        for effort in [Effort::Probes(1), Effort::Probes(3), Effort::Auto, Effort::Exhaustive] {
+            let batched = ivf.search_batch_effort(&q, 4, effort);
+            for i in 0..9 {
+                let single = ivf.search_effort(q.row(i), 4, effort);
+                assert_eq!(batched[i].ids, single.ids, "{effort:?} query {i}");
+                assert_eq!(batched[i].scores, single.scores, "{effort:?} query {i}");
+                assert_eq!(batched[i].cost, single.cost, "{effort:?} query {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn search_cells_batch_matches_per_query_search_cells() {
+        let keys = unit_keys(280, 8, 20);
+        let ivf = IvfIndex::build(&keys, 6, 8, 21);
+        let q = unit_keys(5, 8, 22);
+        // heterogeneous per-query cell lists, including an empty one
+        let lists: Vec<Vec<u32>> = vec![
+            ivf.rank_cells(q.row(0), 2),
+            ivf.rank_cells(q.row(1), 6),
+            vec![],
+            vec![3],
+            ivf.rank_cells(q.row(4), 4),
+        ];
+        let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+        let batched = ivf.search_cells_batch(&q, &refs, 3);
+        for i in 0..5 {
+            let single = ivf.search_cells(q.row(i), &lists[i], 3);
+            assert_eq!(batched[i].ids, single.ids, "query {i}");
+            assert_eq!(batched[i].scores, single.scores, "query {i}");
+            assert_eq!(batched[i].cost, single.cost, "query {i}");
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::index::artifact;
 use crate::index::ivf::IvfIndex;
 use crate::index::spec::{IndexSpec, LeanVecSpec};
 use crate::index::traits::{SearchResult, TopK, VectorIndex};
-use crate::tensor::{dot, pca_project, power_iteration_pca, Tensor};
+use crate::tensor::{dot, gemm_nt_tile, pca_project, power_iteration_pca, Tensor};
 
 pub struct LeanVecIndex {
     d: usize,
@@ -111,6 +111,38 @@ impl LeanVecIndex {
         }
         out
     }
+
+    /// Batched [`LeanVecIndex::project`]: batch × components in one gemm
+    /// tile with the `<mean, comp_c>` terms hoisted — the same `dot`
+    /// calls and the same subtraction per element, so each projected row
+    /// is bit-identical to the per-query transform.
+    fn project_batch(&self, queries: &Tensor) -> Tensor {
+        let b = queries.rows();
+        let mut low = Tensor::zeros(&[b, self.d_low]);
+        gemm_nt_tile(queries.data(), self.comps.data(), self.d, low.data_mut());
+        let mean_dots: Vec<f32> =
+            (0..self.d_low).map(|c| dot(&self.mean, self.comps.row(c))).collect();
+        for q in 0..b {
+            for (o, md) in low.row_mut(q).iter_mut().zip(&mean_dots) {
+                *o -= md;
+            }
+        }
+        low
+    }
+
+    /// Stage 3 shared by the per-query and batched paths: exact
+    /// full-dimension re-rank of the reduced-space candidates.
+    fn rerank_exact(&self, query: &[f32], cand: SearchResult, k: usize) -> SearchResult {
+        let mut top = TopK::new(k);
+        for &id in &cand.ids {
+            top.offer(dot(query, self.keys.row(id as usize)), id);
+        }
+        let (ids, scores) = top.into_sorted();
+        let mut cost = cand.cost;
+        cost.flops += (self.d * self.d_low * 2) as u64; // projection
+        cost.flops += (cand.ids.len() * self.d * 2) as u64; // re-rank
+        SearchResult { ids, scores, cost }
+    }
 }
 
 impl VectorIndex for LeanVecIndex {
@@ -143,15 +175,38 @@ impl VectorIndex for LeanVecIndex {
         // 2. search in the reduced space for rerank candidates
         let cand = self.inner.search_effort(&q_low, rerank.max(k), effort);
         // 3. exact full-dim re-rank
-        let mut top = TopK::new(k);
-        for &id in &cand.ids {
-            top.push(dot(query, self.keys.row(id as usize)), id);
+        self.rerank_exact(query, cand, k)
+    }
+
+    /// Fused batched search: one gemm-tile projection for the whole
+    /// batch, the inner IVF's own fused batched scan in the reduced
+    /// space, then per-query exact full-dim re-rank. Bit-identical to
+    /// per-query [`LeanVecIndex::search_effort`].
+    fn search_batch_effort(&self, queries: &Tensor, k: usize, effort: Effort) -> Vec<SearchResult> {
+        if queries.rows() == 0 {
+            return Vec::new();
         }
-        let (ids, scores) = top.into_sorted();
-        let mut cost = cand.cost;
-        cost.flops += (self.d * self.d_low * 2) as u64; // projection
-        cost.flops += (cand.ids.len() * self.d * 2) as u64; // re-rank
-        SearchResult { ids, scores, cost }
+        let rerank = if effort.is_exhaustive() {
+            self.len()
+        } else {
+            self.rerank
+        };
+        // Exhaustive-depth rerank would make the inner IVF hold `b`
+        // candidate heaps of capacity n at once; the per-row scan is
+        // bit-identical and peaks at one heap (the exact full-dim
+        // re-rank dominates there anyway).
+        if rerank.max(k) >= self.len().max(1) {
+            return (0..queries.rows())
+                .map(|q| self.search_effort(queries.row(q), k, effort))
+                .collect();
+        }
+        let q_low = self.project_batch(queries);
+        let cands = self.inner.search_batch_effort(&q_low, rerank.max(k), effort);
+        cands
+            .into_iter()
+            .enumerate()
+            .map(|(q, cand)| self.rerank_exact(queries.row(q), cand, k))
+            .collect()
     }
 
     fn spec(&self) -> IndexSpec {
@@ -220,6 +275,22 @@ mod tests {
         let lv = LeanVecIndex::build(&keys, 8, 6, Some(&queries), 9);
         let res = lv.search_effort(queries.row(0), 3, Effort::Probes(2));
         assert_eq!(res.ids.len(), 3);
+    }
+
+    #[test]
+    fn batched_search_is_bit_identical_to_per_query() {
+        let keys = unit_keys(300, 24, 13);
+        let lv = LeanVecIndex::build(&keys, 8, 6, None, 14);
+        let q = unit_keys(7, 24, 15);
+        for effort in [Effort::Probes(2), Effort::Auto, Effort::Exhaustive] {
+            let batched = lv.search_batch_effort(&q, 4, effort);
+            for i in 0..7 {
+                let single = lv.search_effort(q.row(i), 4, effort);
+                assert_eq!(batched[i].ids, single.ids, "{effort:?} query {i}");
+                assert_eq!(batched[i].scores, single.scores, "{effort:?} query {i}");
+                assert_eq!(batched[i].cost, single.cost, "{effort:?} query {i}");
+            }
+        }
     }
 
     #[test]

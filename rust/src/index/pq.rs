@@ -22,7 +22,7 @@ use crate::api::Effort;
 use crate::index::artifact;
 use crate::index::spec::{IndexSpec, PqSpec};
 use crate::index::traits::{rerank_depth, SearchCost, SearchResult, TopK, VectorIndex};
-use crate::tensor::{dot, Tensor};
+use crate::tensor::{dot, gemm_nt_tile, Tensor};
 use crate::util::Rng;
 
 /// Trained product quantizer.
@@ -173,6 +173,34 @@ impl Pq {
         table
     }
 
+    /// Build the ADC tables for a whole query batch — `[b, m*256]`
+    /// rows, each laid out exactly like one [`Pq::adc_table`] — with
+    /// one [`gemm_nt_tile`] per subspace over the 256 codewords, so a
+    /// subspace codebook is streamed once per *batch* instead of once
+    /// per query. Scores go through the same `dot` as `adc_table`, so
+    /// each row is bit-identical to the per-query table.
+    pub fn adc_tables_batch(&self, queries: &Tensor) -> Vec<f32> {
+        let b = queries.rows();
+        let (m, dsub) = (self.m, self.dsub);
+        assert_eq!(queries.row_width(), m * dsub);
+        let mut tables = vec![0.0f32; b * m * CODE_K];
+        let mut qsub = vec![0.0f32; b * dsub];
+        let mut block = vec![0.0f32; b * CODE_K];
+        for sub in 0..m {
+            for q in 0..b {
+                qsub[q * dsub..(q + 1) * dsub]
+                    .copy_from_slice(&queries.row(q)[sub * dsub..(sub + 1) * dsub]);
+            }
+            let cb = &self.codebooks[sub * CODE_K * dsub..(sub + 1) * CODE_K * dsub];
+            gemm_nt_tile(&qsub, cb, dsub, &mut block);
+            for q in 0..b {
+                tables[q * m * CODE_K + sub * CODE_K..][..CODE_K]
+                    .copy_from_slice(&block[q * CODE_K..(q + 1) * CODE_K]);
+            }
+        }
+        tables
+    }
+
     /// Approximate inner product of the query (via its ADC table) with a
     /// stored code.
     #[inline]
@@ -289,6 +317,29 @@ impl PqIndex {
             eta,
         })
     }
+
+    /// Stage 2 shared by the per-query and batched paths: exact re-rank
+    /// of the ADC candidates plus the cost assembly.
+    fn rerank_exact(&self, query: &[f32], cand: TopK, k: usize, n: usize) -> SearchResult {
+        let (cand_ids, _) = cand.into_sorted();
+        let mut top = TopK::new(k);
+        for &id in &cand_ids {
+            top.offer(dot(query, self.keys.row(id as usize)), id);
+        }
+        let (ids, scores) = top.into_sorted();
+        let flops = self.pq.table_flops()
+            + (n * self.pq.m) as u64              // lookups+adds
+            + (cand_ids.len() * self.d * 2) as u64; // re-rank
+        SearchResult {
+            ids,
+            scores,
+            cost: SearchCost {
+                flops,
+                keys_scanned: n as u64,
+                cells_probed: 0,
+            },
+        }
+    }
 }
 
 impl VectorIndex for PqIndex {
@@ -317,27 +368,47 @@ impl VectorIndex for PqIndex {
         let mut cand = TopK::new(rerank);
         for i in 0..n {
             let score = self.pq.adc_score(&table, &self.codes[i * m..(i + 1) * m]);
-            cand.push(score, i as u32);
+            cand.offer(score, i as u32);
         }
         // 2. exact re-rank
-        let (cand_ids, _) = cand.into_sorted();
-        let mut top = TopK::new(k);
-        for &id in &cand_ids {
-            top.push(dot(query, self.keys.row(id as usize)), id);
+        self.rerank_exact(query, cand, k, n)
+    }
+
+    /// Fused batched ADC: build all tables in one pass
+    /// ([`Pq::adc_tables_batch`] — one codeword gemm per subspace), then
+    /// scan the code matrix once, scoring every query against each code
+    /// row while it is hot. Bit-identical to per-query
+    /// [`PqIndex::search_effort`].
+    fn search_batch_effort(&self, queries: &Tensor, k: usize, effort: Effort) -> Vec<SearchResult> {
+        let b = queries.rows();
+        if b == 0 {
+            return Vec::new();
         }
-        let (ids, scores) = top.into_sorted();
-        let flops = self.pq.table_flops()
-            + (n * m) as u64                      // lookups+adds
-            + (cand_ids.len() * self.d * 2) as u64; // re-rank
-        SearchResult {
-            ids,
-            scores,
-            cost: SearchCost {
-                flops,
-                keys_scanned: n as u64,
-                cells_probed: 0,
-            },
+        let n = self.len();
+        let m = self.pq.m;
+        let rerank = rerank_depth(n, k, self.rerank, effort);
+        // Exhaustive-depth rerank would hold `b` candidate heaps of
+        // capacity n at once; the per-row scan is bit-identical and
+        // peaks at one heap (the exact re-rank dominates there anyway).
+        if rerank >= n.max(1) {
+            return (0..b)
+                .map(|q| self.search_effort(queries.row(q), k, effort))
+                .collect();
         }
+        let tables = self.pq.adc_tables_batch(queries);
+        let tw = m * CODE_K;
+        let mut cands: Vec<TopK> = (0..b).map(|_| TopK::new(rerank)).collect();
+        for i in 0..n {
+            let code = &self.codes[i * m..(i + 1) * m];
+            for (q, cand) in cands.iter_mut().enumerate() {
+                cand.offer(self.pq.adc_score(&tables[q * tw..(q + 1) * tw], code), i as u32);
+            }
+        }
+        cands
+            .into_iter()
+            .enumerate()
+            .map(|(q, cand)| self.rerank_exact(queries.row(q), cand, k, n))
+            .collect()
     }
 
     fn spec(&self) -> IndexSpec {
@@ -458,6 +529,38 @@ mod tests {
             }
             assert_eq!(res.ids[0], best.0, "query {i}");
             assert!((res.scores[0] - best.1).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn batch_adc_tables_match_per_query_tables() {
+        let keys = unit_keys(300, 32, 20);
+        let pq = Pq::train(&keys, 8, 6, 1.0, 21);
+        let q = unit_keys(9, 32, 22);
+        let tables = pq.adc_tables_batch(&q);
+        let tw = 8 * CODE_K;
+        for i in 0..9 {
+            assert_eq!(
+                &tables[i * tw..(i + 1) * tw],
+                &pq.adc_table(q.row(i))[..],
+                "query {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_search_is_bit_identical_to_per_query() {
+        let keys = unit_keys(250, 16, 23);
+        let idx = PqIndex::build(&keys, 4, 6, 1.0, 24);
+        let q = unit_keys(6, 16, 25);
+        for effort in [Effort::Auto, Effort::Probes(3), Effort::Exhaustive] {
+            let batched = idx.search_batch_effort(&q, 4, effort);
+            for i in 0..6 {
+                let single = idx.search_effort(q.row(i), 4, effort);
+                assert_eq!(batched[i].ids, single.ids, "{effort:?} query {i}");
+                assert_eq!(batched[i].scores, single.scores, "{effort:?} query {i}");
+                assert_eq!(batched[i].cost, single.cost, "{effort:?} query {i}");
+            }
         }
     }
 

@@ -16,8 +16,9 @@ use anyhow::{ensure, Result};
 
 use crate::api::Effort;
 use crate::index::artifact;
+use crate::index::ivf::{invert_to_probers, rank_cells_tensor};
 use crate::index::kmeans::KMeans;
-use crate::index::pq::Pq;
+use crate::index::pq::{Pq, CODE_K};
 use crate::index::spec::{IndexSpec, ScannSpec};
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
 use crate::tensor::{dot, Tensor};
@@ -144,7 +145,7 @@ impl ScannIndex {
         // 1. coarse: rank cells by centroid score
         let mut cell_top = TopK::new(nprobe);
         for j in 0..self.nlist {
-            cell_top.push(dot(query, self.centroids.row(j)), j as u32);
+            cell_top.offer(dot(query, self.centroids.row(j)), j as u32);
         }
         let (cells, _) = cell_top.into_sorted();
 
@@ -157,22 +158,36 @@ impl ScannIndex {
             let (s, e) = (self.offsets[cell as usize], self.offsets[cell as usize + 1]);
             for pos in s..e {
                 let score = self.pq.adc_score(&table, &self.codes[pos * m..(pos + 1) * m]);
-                cand.push(score, pos as u32);
+                cand.offer(score, pos as u32);
             }
             scanned += (e - s) as u64;
         }
 
         // 3. exact re-rank of the candidates
+        self.rerank_exact(query, cand, k, scanned, nprobe)
+    }
+
+    /// Stage 3 shared by the per-query and batched paths: exact re-rank
+    /// of the ADC candidates (addressed by packed position) plus the
+    /// cost assembly.
+    fn rerank_exact(
+        &self,
+        query: &[f32],
+        cand: TopK,
+        k: usize,
+        scanned: u64,
+        nprobe: usize,
+    ) -> SearchResult {
         let (cand_pos, _) = cand.into_sorted();
         let mut top = TopK::new(k);
         for &pos in &cand_pos {
             let exact = dot(query, self.packed.row(pos as usize));
-            top.push(exact, self.ids[pos as usize]);
+            top.offer(exact, self.ids[pos as usize]);
         }
         let (ids, scores) = top.into_sorted();
         let flops = (self.nlist * self.d * 2) as u64        // coarse
             + self.pq.table_flops()                          // ADC table
-            + scanned * m as u64                             // lookups+adds
+            + scanned * self.pq.m as u64                     // lookups+adds
             + (cand_pos.len() * self.d * 2) as u64; // re-rank
         SearchResult {
             ids,
@@ -210,6 +225,66 @@ impl VectorIndex for ScannIndex {
             self.rerank
         };
         self.search_probes(query, k, effort.resolve(self.nlist), rerank)
+    }
+
+    /// Fused batched probe: batch × centroids as one gemm tile, all ADC
+    /// tables in one pass ([`Pq::adc_tables_batch`]), then a grouped
+    /// cell scan streaming each probed cell's codes once for every
+    /// query probing it, and per-query exact re-rank. Bit-identical to
+    /// per-query [`ScannIndex::search_effort`].
+    fn search_batch_effort(&self, queries: &Tensor, k: usize, effort: Effort) -> Vec<SearchResult> {
+        let b = queries.rows();
+        if b == 0 {
+            return Vec::new();
+        }
+        let nprobe = effort.resolve(self.nlist).clamp(1, self.nlist);
+        let rerank = if effort.is_exhaustive() {
+            self.len()
+        } else {
+            self.rerank
+        };
+        // Exhaustive-depth rerank would hold `b` candidate heaps of
+        // capacity n at once; the per-row scan is bit-identical and
+        // peaks at one heap (the exact re-rank dominates there anyway).
+        if rerank.max(k) >= self.len().max(1) {
+            return (0..b)
+                .map(|q| self.search_effort(queries.row(q), k, effort))
+                .collect();
+        }
+        // 1. coarse: batch × centroids in one tile kernel
+        let cells = rank_cells_tensor(queries, &self.centroids, nprobe);
+        let probers = invert_to_probers(&cells, self.nlist);
+        // 2. grouped ADC scan with per-batch tables
+        let tables = self.pq.adc_tables_batch(queries);
+        let m = self.pq.m;
+        let tw = m * CODE_K;
+        let mut cands: Vec<TopK> = (0..b).map(|_| TopK::new(rerank.max(k))).collect();
+        let mut scanned = vec![0u64; b];
+        for (cell, qs) in probers.iter().enumerate() {
+            if qs.is_empty() {
+                continue;
+            }
+            let (s, e) = (self.offsets[cell], self.offsets[cell + 1]);
+            for pos in s..e {
+                let code = &self.codes[pos * m..(pos + 1) * m];
+                for &q in qs {
+                    let q = q as usize;
+                    cands[q].offer(
+                        self.pq.adc_score(&tables[q * tw..(q + 1) * tw], code),
+                        pos as u32,
+                    );
+                }
+            }
+            for &q in qs {
+                scanned[q as usize] += (e - s) as u64;
+            }
+        }
+        // 3. per-query exact re-rank
+        cands
+            .into_iter()
+            .enumerate()
+            .map(|(q, cand)| self.rerank_exact(queries.row(q), cand, k, scanned[q], nprobe))
+            .collect()
     }
 
     fn spec(&self) -> IndexSpec {
@@ -293,6 +368,22 @@ mod tests {
             res.cost.flops,
             flat_flops
         );
+    }
+
+    #[test]
+    fn batched_search_is_bit_identical_to_per_query() {
+        let keys = unit_keys(300, 16, 13);
+        let scann = ScannIndex::build(&keys, 6, 4, 8, 4.0, 14);
+        let q = unit_keys(7, 16, 15);
+        for effort in [Effort::Probes(2), Effort::Auto, Effort::Exhaustive] {
+            let batched = scann.search_batch_effort(&q, 4, effort);
+            for i in 0..7 {
+                let single = scann.search_effort(q.row(i), 4, effort);
+                assert_eq!(batched[i].ids, single.ids, "{effort:?} query {i}");
+                assert_eq!(batched[i].scores, single.scores, "{effort:?} query {i}");
+                assert_eq!(batched[i].cost, single.cost, "{effort:?} query {i}");
+            }
+        }
     }
 
     #[test]

@@ -228,11 +228,7 @@ impl VectorIndex for ShardedIndex {
         // Fan out one task per shard on the shared pool — but only when
         // this query is not itself running on a pool worker (the blanket
         // batched Searcher already fans the batch out; nesting would
-        // spawn workers-of-workers and oversubscribe the cores). Known
-        // trade-off: a batch smaller than the worker count scans its
-        // shards sequentially even though cores sit idle; lifting that
-        // needs one shared work queue across batch and shard tasks
-        // rather than this boolean guard.
+        // spawn workers-of-workers and oversubscribe the cores).
         let per_shard: Vec<SearchResult> = if s_count == 1 || in_parallel_region() {
             self.shards
                 .iter()
@@ -245,12 +241,51 @@ impl VectorIndex for ShardedIndex {
         let mut cost = SearchCost::default();
         for (s, res) in per_shard.into_iter().enumerate() {
             for (&local, &score) in res.ids.iter().zip(&res.scores) {
-                top.push(score, self.global_id(s, local));
+                top.offer(score, self.global_id(s, local));
             }
             cost.add(res.cost);
         }
         let (ids, scores) = top.into_sorted();
         SearchResult { ids, scores, cost }
+    }
+
+    /// Fused batched fan-out: each shard receives the *whole sub-batch*
+    /// (running its own fused scan over it) instead of one query at a
+    /// time, and per-query merges remap shard-local ids exactly like the
+    /// single-query path — so results and summed per-query costs are
+    /// bit-identical to [`ShardedIndex::search_effort`] per row. Inside
+    /// a pool worker the shard loop runs sequentially (the batch-level
+    /// split above it owns the cores); on a free thread shards run
+    /// concurrently, each still fused over the full batch.
+    fn search_batch_effort(&self, queries: &Tensor, k: usize, effort: Effort) -> Vec<SearchResult> {
+        let b = queries.rows();
+        if b == 0 {
+            return Vec::new();
+        }
+        let s_count = self.shards.len();
+        let per_shard: Vec<Vec<SearchResult>> = if s_count == 1 || in_parallel_region() {
+            self.shards
+                .iter()
+                .map(|shard| shard.search_batch_effort(queries, k, effort))
+                .collect()
+        } else {
+            batch_map(s_count, |s| self.shards[s].search_batch_effort(queries, k, effort))
+        };
+        (0..b)
+            .map(|q| {
+                let mut top = TopK::new(k);
+                let mut cost = SearchCost::default();
+                for (s, results) in per_shard.iter().enumerate() {
+                    let res = &results[q];
+                    for (&local, &score) in res.ids.iter().zip(&res.scores) {
+                        top.offer(score, self.global_id(s, local));
+                    }
+                    cost.add(res.cost);
+                }
+                let (ids, scores) = top.into_sorted();
+                SearchResult { ids, scores, cost }
+            })
+            .collect()
     }
 
     fn spec(&self) -> IndexSpec {
@@ -356,6 +391,27 @@ mod tests {
                 assert_eq!(a.ids, b.ids, "{spec} q{i}");
                 assert_eq!(a.scores, b.scores, "{spec} q{i}");
                 assert_eq!(a.cost.keys_scanned, 211);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_search_is_bit_identical_to_per_query() {
+        let keys = unit(&[180, 8], 40);
+        for spec in [
+            "sharded(shards=3,inner=flat)",
+            "sharded(shards=4,assign=contiguous,inner=ivf(nlist=3))",
+        ] {
+            let idx = sharded(spec, &keys, 41);
+            let q = unit(&[6, 8], 42);
+            for effort in [Effort::Probes(2), Effort::Auto, Effort::Exhaustive] {
+                let batched = idx.search_batch_effort(&q, 5, effort);
+                for i in 0..6 {
+                    let single = idx.search_effort(q.row(i), 5, effort);
+                    assert_eq!(batched[i].ids, single.ids, "{spec} {effort:?} q{i}");
+                    assert_eq!(batched[i].scores, single.scores, "{spec} {effort:?} q{i}");
+                    assert_eq!(batched[i].cost, single.cost, "{spec} {effort:?} q{i}");
+                }
             }
         }
     }

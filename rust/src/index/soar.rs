@@ -14,6 +14,7 @@ use anyhow::{ensure, Result};
 
 use crate::api::Effort;
 use crate::index::artifact;
+use crate::index::ivf::{invert_to_probers, rank_cells_tensor};
 use crate::index::kmeans::KMeans;
 use crate::index::spec::{IndexSpec, SoarSpec};
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
@@ -157,7 +158,7 @@ impl SoarIndex {
         let nprobe = nprobe.clamp(1, self.nlist);
         let mut cell_top = TopK::new(nprobe);
         for j in 0..self.nlist {
-            cell_top.push(dot(query, self.centroids.row(j)), j as u32);
+            cell_top.offer(dot(query, self.centroids.row(j)), j as u32);
         }
         let (cells, _) = cell_top.into_sorted();
         // dedup across spilled copies: TopK tie-break keeps one entry per
@@ -173,7 +174,7 @@ impl SoarIndex {
                     continue;
                 }
                 seen[id as usize] = true;
-                top.push(dot(query, self.packed.row(pos)), id);
+                top.offer(dot(query, self.packed.row(pos)), id);
                 scanned += 1;
             }
         }
@@ -209,6 +210,67 @@ impl VectorIndex for SoarIndex {
 
     fn search_effort(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult {
         self.search_probes(query, k, effort.resolve(self.nlist))
+    }
+
+    /// Fused batched probe: batch × centroids as one gemm tile, then a
+    /// grouped cell scan streaming each probed cell once for every query
+    /// probing it, with a per-query bitmap deduplicating spilled copies.
+    /// Both copies of a key hold identical vector data, so which copy a
+    /// query scores first cannot change its result — per-query results
+    /// and scan counts are bit-identical to
+    /// [`SoarIndex::search_effort`].
+    fn search_batch_effort(&self, queries: &Tensor, k: usize, effort: Effort) -> Vec<SearchResult> {
+        let b = queries.rows();
+        if b == 0 {
+            return Vec::new();
+        }
+        let nprobe = effort.resolve(self.nlist).clamp(1, self.nlist);
+        let cells = rank_cells_tensor(queries, &self.centroids, nprobe);
+        let probers = invert_to_probers(&cells, self.nlist);
+        let mut tops: Vec<TopK> = (0..b).map(|_| TopK::new(k)).collect();
+        let mut scanned = vec![0u64; b];
+        // per-query seen bitmap over key ids: 1 bit per (query, key) —
+        // 64x smaller than the per-query path's bool vec would be if
+        // replicated, and reset-free because each query's stripe is
+        // touched only within this call
+        let words = self.n_keys.div_ceil(64);
+        let mut seen = vec![0u64; b * words];
+        for (cell, qs) in probers.iter().enumerate() {
+            if qs.is_empty() {
+                continue;
+            }
+            let (s, e) = (self.offsets[cell], self.offsets[cell + 1]);
+            for pos in s..e {
+                let id = self.ids[pos] as usize;
+                let key = self.packed.row(pos);
+                let (word, bit) = (id >> 6, 1u64 << (id & 63));
+                for &q in qs {
+                    let q = q as usize;
+                    let w = &mut seen[q * words + word];
+                    if *w & bit != 0 {
+                        continue;
+                    }
+                    *w |= bit;
+                    tops[q].offer(dot(queries.row(q), key), self.ids[pos]);
+                    scanned[q] += 1;
+                }
+            }
+        }
+        tops.into_iter()
+            .zip(scanned)
+            .map(|(top, scanned)| {
+                let (ids, scores) = top.into_sorted();
+                SearchResult {
+                    ids,
+                    scores,
+                    cost: SearchCost {
+                        flops: (self.nlist as u64 + scanned) * self.d as u64 * 2,
+                        keys_scanned: scanned,
+                        cells_probed: nprobe as u64,
+                    },
+                }
+            })
+            .collect()
     }
 
     fn spec(&self) -> IndexSpec {
@@ -274,6 +336,22 @@ mod tests {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), res.ids.len());
+    }
+
+    #[test]
+    fn batched_search_is_bit_identical_to_per_query() {
+        let keys = unit_keys(260, 12, 12);
+        let soar = SoarIndex::build(&keys, 7, 3, 13);
+        let q = unit_keys(8, 12, 14);
+        for effort in [Effort::Probes(1), Effort::Probes(3), Effort::Exhaustive] {
+            let batched = soar.search_batch_effort(&q, 5, effort);
+            for i in 0..8 {
+                let single = soar.search_effort(q.row(i), 5, effort);
+                assert_eq!(batched[i].ids, single.ids, "{effort:?} query {i}");
+                assert_eq!(batched[i].scores, single.scores, "{effort:?} query {i}");
+                assert_eq!(batched[i].cost, single.cost, "{effort:?} query {i}");
+            }
+        }
     }
 
     #[test]

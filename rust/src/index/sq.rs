@@ -71,14 +71,47 @@ impl SqIndex {
         }
     }
 
-    /// Approximate inner product against a stored code.
+    /// The per-query dequantization transform, computed once per query
+    /// and reused across every code row: `qs[j] = query[j] * scale[j]`
+    /// and the constant `<query, lo>`. [`SqIndex::scaled_score`] then
+    /// needs one multiply-add per dimension. `(query[j] * scale[j]) *
+    /// code[j]` associates exactly like the old fused expression, so
+    /// scores are bit-identical to the pre-transform path.
+    fn query_transform(&self, query: &[f32]) -> (Vec<f32>, f32) {
+        let qs: Vec<f32> = query.iter().zip(&self.scale).map(|(&q, &s)| q * s).collect();
+        (qs, dot(query, &self.lo))
+    }
+
+    /// Approximate inner product of a transformed query against a code.
     #[inline]
-    fn approx_score(&self, query: &[f32], code: &[u8], q_dot_lo: f32) -> f32 {
+    fn scaled_score(qs: &[f32], code: &[u8], q_dot_lo: f32) -> f32 {
         let mut s = 0.0f32;
-        for j in 0..self.d {
-            s += query[j] * self.scale[j] * code[j] as f32;
+        for (&x, &c) in qs.iter().zip(code) {
+            s += x * c as f32;
         }
         s + q_dot_lo
+    }
+
+    /// Stage 2 shared by the per-query and batched paths: exact re-rank
+    /// of the quantized-scan candidates plus the cost assembly.
+    fn rerank_exact(&self, query: &[f32], cand: TopK, k: usize, n: usize) -> SearchResult {
+        let (cand_ids, _) = cand.into_sorted();
+        let mut top = TopK::new(k);
+        for &id in &cand_ids {
+            top.offer(dot(query, self.keys.row(id as usize)), id);
+        }
+        let (ids, scores) = top.into_sorted();
+        // quantized scan is 2 ops/dim (mul+add) like a dot, plus re-rank
+        let flops = (n * self.d * 2) as u64 + (cand_ids.len() * self.d * 2) as u64;
+        SearchResult {
+            ids,
+            scores,
+            cost: SearchCost {
+                flops,
+                keys_scanned: n as u64,
+                cells_probed: 0,
+            },
+        }
     }
 
     /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
@@ -132,30 +165,49 @@ impl VectorIndex for SqIndex {
         let n = self.len();
         let d = self.d;
         let rerank = rerank_depth(n, k, self.rerank, effort);
-        // constant part of every dequantized score: <q, lo>
-        let q_dot_lo = dot(query, &self.lo);
+        let (qs, q_dot_lo) = self.query_transform(query);
         let mut cand = TopK::new(rerank);
         for i in 0..n {
-            let s = self.approx_score(query, &self.codes[i * d..(i + 1) * d], q_dot_lo);
-            cand.push(s, i as u32);
+            let s = Self::scaled_score(&qs, &self.codes[i * d..(i + 1) * d], q_dot_lo);
+            cand.offer(s, i as u32);
         }
-        let (cand_ids, _) = cand.into_sorted();
-        let mut top = TopK::new(k);
-        for &id in &cand_ids {
-            top.push(dot(query, self.keys.row(id as usize)), id);
+        self.rerank_exact(query, cand, k, n)
+    }
+
+    /// Fused batched scan: run the dequantization transform for every
+    /// query up front, then stream the code matrix once, scoring all
+    /// queries against each code row while it is hot. Bit-identical to
+    /// per-query [`SqIndex::search_effort`].
+    fn search_batch_effort(&self, queries: &Tensor, k: usize, effort: Effort) -> Vec<SearchResult> {
+        let b = queries.rows();
+        if b == 0 {
+            return Vec::new();
         }
-        let (ids, scores) = top.into_sorted();
-        // quantized scan is 2 ops/dim (mul+add) like a dot, plus re-rank
-        let flops = (n * d * 2) as u64 + (cand_ids.len() * d * 2) as u64;
-        SearchResult {
-            ids,
-            scores,
-            cost: SearchCost {
-                flops,
-                keys_scanned: n as u64,
-                cells_probed: 0,
-            },
+        let n = self.len();
+        let d = self.d;
+        let rerank = rerank_depth(n, k, self.rerank, effort);
+        // Exhaustive-depth rerank would hold `b` candidate heaps of
+        // capacity n at once; the per-row scan is bit-identical and
+        // peaks at one heap (the exact re-rank dominates there anyway).
+        if rerank >= n.max(1) {
+            return (0..b)
+                .map(|q| self.search_effort(queries.row(q), k, effort))
+                .collect();
         }
+        let transforms: Vec<(Vec<f32>, f32)> =
+            (0..b).map(|q| self.query_transform(queries.row(q))).collect();
+        let mut cands: Vec<TopK> = (0..b).map(|_| TopK::new(rerank)).collect();
+        for i in 0..n {
+            let code = &self.codes[i * d..(i + 1) * d];
+            for (cand, (qs, q_dot_lo)) in cands.iter_mut().zip(&transforms) {
+                cand.offer(Self::scaled_score(qs, code, *q_dot_lo), i as u32);
+            }
+        }
+        cands
+            .into_iter()
+            .enumerate()
+            .map(|(q, cand)| self.rerank_exact(queries.row(q), cand, k, n))
+            .collect()
     }
 
     fn spec(&self) -> IndexSpec {
@@ -192,10 +244,10 @@ mod tests {
         let q = unit_keys(10, 16, 2);
         let mut err = 0.0f64;
         for i in 0..10 {
-            let q_dot_lo = dot(q.row(i), &idx.lo);
+            let (qs, q_dot_lo) = idx.query_transform(q.row(i));
             for kidx in 0..300 {
                 let approx =
-                    idx.approx_score(q.row(i), &idx.codes[kidx * 16..(kidx + 1) * 16], q_dot_lo);
+                    SqIndex::scaled_score(&qs, &idx.codes[kidx * 16..(kidx + 1) * 16], q_dot_lo);
                 let exact = dot(q.row(i), keys.row(kidx));
                 err += ((approx - exact) as f64).abs();
             }
@@ -219,6 +271,22 @@ mod tests {
                 }
             }
             assert_eq!(res.ids[0], best.0, "query {i}");
+        }
+    }
+
+    #[test]
+    fn batched_search_is_bit_identical_to_per_query() {
+        let keys = unit_keys(220, 12, 7);
+        let idx = SqIndex::build(&keys);
+        let q = unit_keys(5, 12, 8);
+        for effort in [Effort::Auto, Effort::Frac(0.3), Effort::Exhaustive] {
+            let batched = idx.search_batch_effort(&q, 3, effort);
+            for i in 0..5 {
+                let single = idx.search_effort(q.row(i), 3, effort);
+                assert_eq!(batched[i].ids, single.ids, "{effort:?} query {i}");
+                assert_eq!(batched[i].scores, single.scores, "{effort:?} query {i}");
+                assert_eq!(batched[i].cost, single.cost, "{effort:?} query {i}");
+            }
         }
     }
 

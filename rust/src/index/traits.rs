@@ -15,6 +15,7 @@ use anyhow::Result;
 
 use crate::api::Effort;
 use crate::index::spec::IndexSpec;
+use crate::tensor::Tensor;
 
 /// Cost accounting for one backbone scan, used for the FLOPs axes of
 /// every Pareto plot. Distances are multiply-add pairs (2 flops each).
@@ -72,6 +73,24 @@ pub trait VectorIndex: Send + Sync {
     /// Top-`k` search at a typed effort level. [`Effort::Exhaustive`]
     /// must return the exact MIPS answer on every backbone.
     fn search_effort(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult;
+
+    /// Batched top-`k` search over `queries` [b, d]: one
+    /// [`SearchResult`] per query row.
+    ///
+    /// Contract: every per-query result — ids, scores *and*
+    /// [`SearchCost`] — is bit-identical to calling
+    /// [`VectorIndex::search_effort`] on that row alone (enforced by
+    /// the `searcher_conformance` sweep). The default maps per query;
+    /// backbones override it with fused kernels that stream keys,
+    /// centroids and ADC tables once per *tile* instead of once per
+    /// query. Implementations are sequential — callers own parallelism
+    /// (the blanket [`crate::api::Searcher`] impl splits batches into
+    /// per-worker sub-batches before calling this).
+    fn search_batch_effort(&self, queries: &Tensor, k: usize, effort: Effort) -> Vec<SearchResult> {
+        (0..queries.rows())
+            .map(|i| self.search_effort(queries.row(i), k, effort))
+            .collect()
+    }
 
     /// The typed [`IndexSpec`] this index was built from, reconstructed
     /// from its stored knobs (auto knobs appear resolved). Echoed into
@@ -196,6 +215,23 @@ impl TopK {
         }
     }
 
+    /// [`TopK::push`] with an early-reject fast path for scan loops:
+    /// a candidate strictly below the floor can never enter the heap
+    /// (a full heap only admits scores that beat — or tie at lower id
+    /// with — its minimum, and a non-full heap has floor `-inf`, which
+    /// no score is strictly below). NaN fails the `<` comparison and
+    /// falls through to `push`, which ranks it as `-inf` — so `offer`
+    /// is result-identical to `push` on every input stream
+    /// (property-tested in `tests/properties.rs`), while skipping the
+    /// sift machinery for the common below-floor candidate.
+    #[inline]
+    pub fn offer(&mut self, score: f32, id: u32) {
+        if score < self.floor() {
+            return;
+        }
+        self.push(score, id);
+    }
+
     /// Drain into descending-score order.
     pub fn into_sorted(mut self) -> (Vec<u32>, Vec<f32>) {
         // `push` maps NaN to -inf, so partial_cmp cannot fail here; the
@@ -256,6 +292,27 @@ mod tests {
         assert_eq!(t.floor(), 0.3);
         t.push(0.5, 2);
         assert_eq!(t.floor(), 0.5);
+    }
+
+    #[test]
+    fn topk_offer_equals_push_on_edge_streams() {
+        // ties at the floor, NaN into a non-full heap, and exact-floor
+        // candidates must all behave identically through the fast path
+        let streams: &[&[f32]] = &[
+            &[0.5, 0.5, 0.5, 0.5],
+            &[f32::NAN, 0.1, f32::NAN],
+            &[1.0, 0.2, 0.2, 0.9, 0.2],
+            &[f32::NEG_INFINITY, f32::INFINITY, 0.0],
+        ];
+        for scores in streams {
+            let mut a = TopK::new(2);
+            let mut b = TopK::new(2);
+            for (i, &s) in scores.iter().enumerate() {
+                a.push(s, i as u32);
+                b.offer(s, i as u32);
+            }
+            assert_eq!(a.into_sorted(), b.into_sorted(), "{scores:?}");
+        }
     }
 
     #[test]

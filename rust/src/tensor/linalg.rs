@@ -78,6 +78,29 @@ pub fn gemm_nt(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     });
 }
 
+/// Sequential `A·Bᵀ` tile kernel over raw row-major storage:
+/// `out[i*bn + j] = dot(&a[i*d..], &b[j*d..])` for `a` [m,d], `b`
+/// [bn,d]. This is the building block of the fused batched scans in
+/// `crate::index` (query-tile × key-tile, batch × centroids, batch ×
+/// codewords): callers own tiling and parallelism, so the kernel never
+/// spawns threads and can run inside pool workers. It scores through
+/// the same [`dot`] as every per-query scan loop, so fused results are
+/// bit-identical to per-query ones.
+pub fn gemm_nt_tile(a: &[f32], b: &[f32], d: usize, out: &mut [f32]) {
+    assert!(d > 0, "gemm_nt_tile needs d > 0");
+    assert_eq!(a.len() % d, 0, "a len {} not a multiple of d={d}", a.len());
+    assert_eq!(b.len() % d, 0, "b len {} not a multiple of d={d}", b.len());
+    let m = a.len() / d;
+    let bn = b.len() / d;
+    assert_eq!(out.len(), m * bn, "out len {} != {m}x{bn}", out.len());
+    for (i, row_out) in out.chunks_mut(bn.max(1)).enumerate().take(m) {
+        let ai = &a[i * d..(i + 1) * d];
+        for (j, o) in row_out.iter_mut().enumerate() {
+            *o = dot(ai, &b[j * d..(j + 1) * d]);
+        }
+    }
+}
+
 /// y = M x for M [m,d] (rows), x [d].
 pub fn matvec(m_rows: usize, d: usize, m: &[f32], x: &[f32], y: &mut [f32]) {
     assert_eq!(m.len(), m_rows * d);
@@ -119,10 +142,16 @@ pub fn power_iteration_pca(x: &Tensor, k: usize, iters: usize, seed: u64) -> (Te
     for _ in 0..iters {
         for c in 0..k {
             // proj = (X - mean) v_c ; v_c <- (X - mean)^T proj
+            // One matvec for X·v_c (the kernel's unrolled dot beats the
+            // old per-row loop) and <mean, v_c> hoisted out: dot(x_i, v)
+            // - dot(mean, v) computes the exact same subtraction either
+            // way, so results are unchanged.
             {
                 let v = comps.row(c);
-                for i in 0..n {
-                    proj[i] = dot(x.row(i), v) - dot(&mean, v);
+                let mv = dot(&mean, v);
+                matvec(n, d, x.data(), v, &mut proj);
+                for p in proj.iter_mut() {
+                    *p -= mv;
                 }
             }
             let mut newv = vec![0.0f32; d];
@@ -148,17 +177,24 @@ pub fn power_iteration_pca(x: &Tensor, k: usize, iters: usize, seed: u64) -> (Te
 }
 
 /// Project rows of `x` onto PCA components: out[i,c] = <x_i - mean, comp_c>.
+/// One blocked [`gemm_nt`] for X·Cᵀ plus a hoisted <mean, comp_c> row —
+/// same `dot` calls and the same subtraction as the old per-row loops,
+/// so projections are bit-identical, just tiled (and parallel at build
+/// time).
 pub fn pca_project(x: &Tensor, comps: &Tensor, mean: &[f32]) -> Tensor {
     let (n, d) = (x.rows(), x.row_width());
     let k = comps.rows();
     assert_eq!(comps.row_width(), d);
+    assert_eq!(mean.len(), d);
     let mut out = Tensor::zeros(&[n, k]);
+    if n == 0 || k == 0 {
+        return out;
+    }
+    gemm_nt(x, comps, &mut out);
+    let mean_dots: Vec<f32> = (0..k).map(|c| dot(mean, comps.row(c))).collect();
     for i in 0..n {
-        let xi = x.row(i);
-        let o = out.row_mut(i);
-        for c in 0..k {
-            let v = comps.row(c);
-            o[c] = dot(xi, v) - dot(mean, v);
+        for (o, md) in out.row_mut(i).iter_mut().zip(&mean_dots) {
+            *o -= md;
         }
     }
     out
@@ -198,6 +234,37 @@ mod tests {
             for j in 0..9 {
                 let naive: f32 = a.row(i).iter().zip(b.row(j)).map(|(x, y)| x * y).sum();
                 assert!((out.row(i)[j] - naive).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nt_tile_matches_gemm_nt_bitwise() {
+        // the sequential tile kernel must agree with the blocked parallel
+        // gemm exactly — both route every score through `dot`
+        let a = randt(&[5, 24], 8);
+        let b = randt(&[11, 24], 9);
+        let mut full = Tensor::zeros(&[5, 11]);
+        gemm_nt(&a, &b, &mut full);
+        let mut tile = vec![0.0f32; 5 * 11];
+        gemm_nt_tile(a.data(), b.data(), 24, &mut tile);
+        assert_eq!(full.data(), &tile[..]);
+        // degenerate: empty b tile
+        gemm_nt_tile(a.data(), &[], 24, &mut []);
+    }
+
+    #[test]
+    fn pca_project_matches_per_row_dots_bitwise() {
+        // the gemm-based projection must equal the old per-row loop
+        // exactly: same dot calls, same subtraction
+        let x = randt(&[40, 12], 10);
+        let (comps, mean) = power_iteration_pca(&x, 3, 10, 3);
+        let p = pca_project(&x, &comps, &mean);
+        for i in 0..40 {
+            for c in 0..3 {
+                let v = comps.row(c);
+                let want = dot(x.row(i), v) - dot(&mean, v);
+                assert_eq!(p.row(i)[c], want, "({i},{c})");
             }
         }
     }

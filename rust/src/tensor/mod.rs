@@ -4,5 +4,8 @@ mod linalg;
 #[allow(clippy::module_inception)]
 mod tensor;
 
-pub use linalg::{dot, gemm_nt, matvec, normalize_rows, pca_project, power_iteration_pca, scaled_add};
+pub use linalg::{
+    dot, gemm_nt, gemm_nt_tile, matvec, normalize_rows, pca_project, power_iteration_pca,
+    scaled_add,
+};
 pub use tensor::{load_tensor_set, save_tensor_set, Tensor};

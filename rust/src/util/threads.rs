@@ -41,7 +41,10 @@ where
 {
     let workers = num_threads();
     let chunk = chunk.max(1);
-    if workers <= 1 || n <= chunk {
+    // Never spawn workers-of-workers: a nested call from inside a pool
+    // worker (e.g. a fused kernel running on a sub-batch) degrades to
+    // the sequential loop instead of oversubscribing the cores.
+    if workers <= 1 || n <= chunk || in_parallel_region() {
         let mut start = 0;
         let mut i = 0;
         while start < n {
@@ -82,7 +85,9 @@ where
     assert_eq!(out.len() % row_w.max(1), 0);
     let n_rows = if row_w == 0 { 0 } else { out.len() / row_w };
     let workers = num_threads();
-    if workers <= 1 || n_rows <= rows_per_task {
+    // same nesting guard as `parallel_chunks`: gemm_nt inside a pool
+    // worker must not spawn a second tier of threads
+    if workers <= 1 || n_rows <= rows_per_task || in_parallel_region() {
         for (i, chunk_rows) in out.chunks_mut(rows_per_task.max(1) * row_w).enumerate() {
             let start = i * rows_per_task;
             let end = start + chunk_rows.len() / row_w;
@@ -139,6 +144,27 @@ mod tests {
             assert_eq!(flagged.load(Ordering::Relaxed), 0);
         }
         assert!(!in_parallel_region());
+    }
+
+    #[test]
+    fn nested_parallel_calls_degrade_to_sequential() {
+        // a parallel_chunks call from inside a pool worker must run on
+        // that worker thread (no second tier of spawns) — the inner
+        // callback still sees the pool flag
+        let inner_on_pool = AtomicUsize::new(0);
+        let inner_total = AtomicUsize::new(0);
+        parallel_chunks(8, 1, |_, _, _| {
+            parallel_chunks(4, 1, |_, _, _| {
+                inner_total.fetch_add(1, Ordering::Relaxed);
+                if in_parallel_region() {
+                    inner_on_pool.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        });
+        assert_eq!(inner_total.load(Ordering::Relaxed), 8 * 4);
+        if num_threads() > 1 {
+            assert_eq!(inner_on_pool.load(Ordering::Relaxed), 8 * 4);
+        }
     }
 
     #[test]

@@ -31,6 +31,38 @@ fn unit(shape: &[usize], seed: u64) -> Tensor {
 // ---------------------------------------------------------------------------
 
 #[test]
+fn prop_topk_offer_matches_push() {
+    // the scan-loop fast path (early-reject against floor()) must be
+    // result-identical to naive push on any stream — including NaN
+    // (fails every comparison), ±inf, and heavy ties at the floor
+    let mut rng = Rng::new(512);
+    for case in 0..prop_cases(300) {
+        let n = 1 + rng.below(300);
+        let k = 1 + rng.below(24);
+        let scores: Vec<f32> = (0..n)
+            .map(|_| match rng.below(12) {
+                0 => f32::NAN,
+                1 => f32::NEG_INFINITY,
+                2 => f32::INFINITY,
+                // coarse grid => frequent exact ties
+                _ => (rng.normal() as f32 * 4.0).round() / 2.0,
+            })
+            .collect();
+        let mut naive = TopK::new(k);
+        let mut fast = TopK::new(k);
+        for (i, &s) in scores.iter().enumerate() {
+            naive.push(s, i as u32);
+            fast.offer(s, i as u32);
+        }
+        assert_eq!(
+            naive.into_sorted(),
+            fast.into_sorted(),
+            "case {case}: n={n} k={k}"
+        );
+    }
+}
+
+#[test]
 fn prop_topk_matches_sort() {
     let mut rng = Rng::new(100);
     for case in 0..prop_cases(300) {

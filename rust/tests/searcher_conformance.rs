@@ -14,7 +14,7 @@ use amips::coordinator::router::CentroidRouter;
 use amips::index::ivf::IvfIndex;
 use amips::index::{flat::FlatIndex, BuildCtx, IndexSpec, VectorIndex, BACKBONES};
 use amips::tensor::{normalize_rows, Tensor};
-use amips::util::Rng;
+use amips::util::{prop_cases, Rng};
 
 fn unit(shape: &[usize], seed: u64) -> Tensor {
     let mut t = Tensor::zeros(shape);
@@ -125,6 +125,59 @@ fn every_sharded_backbone_matches_flat_top1_at_max_effort() {
         let index = build_sharded(name, &keys, Some(&queries), 42);
         let label = format!("sharded({name})");
         assert_matches_flat_at_max_effort(index.as_ref(), &label, &queries, &truth, &req);
+    }
+}
+
+#[test]
+fn batched_is_bit_identical_to_per_query_everywhere() {
+    // The fused-kernel acceptance sweep: for every backbone — all eight,
+    // i.e. the seven leaves plus sharded wrappers — across effort levels
+    // and batch sizes, `search_batch_effort` must return bit-identical
+    // ids, scores AND per-query SearchCost (flops, keys_scanned,
+    // cells_probed) to one-at-a-time `search_effort`, and the threaded
+    // `Searcher::search` path must agree with both. Case count scales
+    // with AMIPS_PROP_CASES (each case re-seeds keys/queries and
+    // rebuilds every backbone).
+    let cases = prop_cases(1);
+    let efforts = [
+        Effort::Probes(1),
+        Effort::Probes(2),
+        Effort::Frac(0.4),
+        Effort::Auto,
+        Effort::Exhaustive,
+    ];
+    for case in 0..cases {
+        let seed = 200 + case as u64 * 13;
+        let keys = unit(&[N, D], seed);
+        let queries = unit(&[NQ, D], seed + 1);
+        let mut indexes: Vec<(String, Box<dyn VectorIndex>)> = Vec::new();
+        for name in BACKBONES {
+            indexes.push((name.to_string(), build(name, &keys, Some(&queries), seed + 2)));
+            indexes.push((
+                format!("sharded({name})"),
+                build_sharded(name, &keys, Some(&queries), seed + 2),
+            ));
+        }
+        for (label, index) in &indexes {
+            for effort in efforts {
+                for b in [1usize, 5, NQ] {
+                    let qb = queries.gather_rows(&(0..b).collect::<Vec<_>>());
+                    let batched = index.search_batch_effort(&qb, 4, effort);
+                    assert_eq!(batched.len(), b, "case {case} {label}");
+                    let req = SearchRequest::top_k(4).effort(effort);
+                    let resp = index.search(&qb, &req).unwrap();
+                    for q in 0..b {
+                        let single = index.search_effort(qb.row(q), 4, effort);
+                        let ctx = format!("case {case} {label} {effort:?} b={b} q{q}");
+                        assert_eq!(batched[q].ids, single.ids, "{ctx}");
+                        assert_eq!(batched[q].scores, single.scores, "{ctx}");
+                        assert_eq!(batched[q].cost, single.cost, "{ctx}");
+                        assert_eq!(resp.hits[q].ids, single.ids, "searcher {ctx}");
+                        assert_eq!(resp.hits[q].scores, single.scores, "searcher {ctx}");
+                    }
+                }
+            }
+        }
     }
 }
 
