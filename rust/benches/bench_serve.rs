@@ -1,0 +1,273 @@
+//! §Serve: open-loop load generator for the TCP front-end. Poisson
+//! arrivals at a target QPS are fanned over several blocking
+//! [`NetClient`] connections; per-request latency is measured from the
+//! *scheduled* arrival time (open-loop semantics: a server that falls
+//! behind accrues queueing delay instead of silently throttling the
+//! offered load). Reports client-side p50/p99/p999 + throughput and
+//! emits machine-readable `BENCH_serve.json`.
+//!
+//! Knobs (env):
+//!   AMIPS_SERVE_ADDR        target an already-running `amips serve
+//!                           --listen` server instead of the in-process
+//!                           one this bench spins up by default
+//!   AMIPS_SERVE_COLLECTION  collection name (default "docs")
+//!   AMIPS_SERVE_N/_D        in-process corpus size (default 8192 x 32)
+//!   AMIPS_SERVE_QPS         offered load (default 2000)
+//!   AMIPS_SERVE_SECONDS     run length (default 3)
+//!   AMIPS_SERVE_CLIENTS     connections (default 4)
+//!   AMIPS_SERVE_DEADLINE_MS per-request deadline (default none)
+//!
+//! Exits nonzero when no request succeeds — CI's serve-smoke job treats
+//! that as a failed deployment, not an empty report.
+
+use amips::api::Effort;
+use amips::bench_support::fixtures;
+use amips::bench_support::report::{JsonRows, JsonVal, Report};
+use amips::coordinator::net::{NetClient, NetError, NetServer, NetServerConfig, SearchOptions};
+use amips::index::ivf::IvfIndex;
+use amips::tensor::{normalize_rows, Tensor};
+use amips::util::Rng;
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Exact quantile over a sorted sample (nearest-rank).
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((q * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
+    sorted[i]
+}
+
+struct ClientOutcome {
+    latencies_s: Vec<f64>,
+    ok: usize,
+    overloaded: usize,
+    expired: usize,
+    other_errors: usize,
+}
+
+fn main() -> Result<()> {
+    let external_addr = std::env::var("AMIPS_SERVE_ADDR").ok();
+    let collection =
+        std::env::var("AMIPS_SERVE_COLLECTION").unwrap_or_else(|_| "docs".to_string());
+    let n = env_usize("AMIPS_SERVE_N", 8192);
+    let d = env_usize("AMIPS_SERVE_D", 32);
+    let qps = env_f64("AMIPS_SERVE_QPS", 2000.0).max(1.0);
+    let seconds = env_f64("AMIPS_SERVE_SECONDS", 3.0).max(0.1);
+    let clients = env_usize("AMIPS_SERVE_CLIENTS", 4).max(1);
+    let deadline_ms = env_usize("AMIPS_SERVE_DEADLINE_MS", 0);
+    let seed = 0x5E12u64;
+
+    // the in-process server (default): one IVF collection over the
+    // shared synthetic corpus, same NetServer the CLI listener uses
+    let (server, addr) = match &external_addr {
+        Some(a) => (None, a.clone()),
+        None => {
+            let keys = fixtures::synth_keys(n, d, seed);
+            let index = IvfIndex::build(&keys, fixtures::default_nlist(n), 10, seed);
+            let tenant = amips::coordinator::net::Tenant::start(
+                &collection,
+                std::sync::Arc::new(index),
+                None,
+                amips::coordinator::BatchPolicy::default(),
+                1024,
+            )?;
+            let mut tenants = std::collections::BTreeMap::new();
+            tenants.insert(collection.clone(), tenant);
+            let server = NetServer::serve(tenants, "127.0.0.1:0", NetServerConfig::default())?;
+            let addr = server.local_addr().to_string();
+            (Some(server), addr)
+        }
+    };
+
+    // unit-norm gaussian query pool
+    let n_queries = 256usize;
+    let mut pool = Tensor::zeros(&[n_queries, d]);
+    Rng::new(seed ^ 1).fill_normal(pool.data_mut(), 1.0);
+    normalize_rows(&mut pool);
+
+    // Poisson arrival schedule: exponential inter-arrivals at `qps`,
+    // deterministic in the seed. Client c serves arrivals c, c+C, ...
+    // (thinning a Poisson process keeps each sub-stream Poisson).
+    let total = ((qps * seconds).round() as usize).max(1);
+    let mut arrivals = Vec::with_capacity(total);
+    {
+        let mut rng = Rng::new(seed ^ 2);
+        let mut t = 0.0f64;
+        for _ in 0..total {
+            t += -(1.0 - rng.uniform()).ln() / qps;
+            arrivals.push(t);
+        }
+    }
+    let opts = {
+        let o = SearchOptions::top_k(10).effort(Effort::Probes(4));
+        if deadline_ms > 0 {
+            o.deadline(Duration::from_millis(deadline_ms as u64))
+        } else {
+            o
+        }
+    };
+
+    println!(
+        "bench_serve: {total} requests at {qps:.0} qps over {clients} connections -> {addr}"
+    );
+    let t0 = Instant::now();
+    let outcomes: Vec<ClientOutcome> = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let (addr, collection, arrivals, pool) = (&addr, &collection, &arrivals, &pool);
+            joins.push(s.spawn(move || -> Result<ClientOutcome> {
+                let mut client = NetClient::connect(addr.as_str())?;
+                client.set_timeout(Some(Duration::from_secs(30)))?;
+                let mut out = ClientOutcome {
+                    latencies_s: Vec::new(),
+                    ok: 0,
+                    overloaded: 0,
+                    expired: 0,
+                    other_errors: 0,
+                };
+                for i in (c..arrivals.len()).step_by(clients) {
+                    let scheduled = t0 + Duration::from_secs_f64(arrivals[i]);
+                    let now = Instant::now();
+                    if scheduled > now {
+                        std::thread::sleep(scheduled - now);
+                    }
+                    let q = pool.row(i % pool.rows());
+                    match client.search(collection, q, opts) {
+                        Ok(_hits) => {
+                            out.ok += 1;
+                            // open-loop latency: reply time minus the
+                            // *scheduled* arrival
+                            out.latencies_s
+                                .push(scheduled.elapsed().as_secs_f64());
+                        }
+                        Err(NetError::Server(e)) => {
+                            use amips::coordinator::net::ErrorCode;
+                            match e.code {
+                                ErrorCode::Overloaded => out.overloaded += 1,
+                                ErrorCode::DeadlineExpired => out.expired += 1,
+                                _ => out.other_errors += 1,
+                            }
+                        }
+                        Err(_) => out.other_errors += 1,
+                    }
+                }
+                Ok(out)
+            }));
+        }
+        joins
+            .into_iter()
+            .map(|j| j.join().expect("client thread panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut latencies: Vec<f64> = Vec::new();
+    let (mut ok, mut overloaded, mut expired, mut other) = (0usize, 0usize, 0usize, 0usize);
+    for o in outcomes {
+        latencies.extend(o.latencies_s);
+        ok += o.ok;
+        overloaded += o.overloaded;
+        expired += o.expired;
+        other += o.other_errors;
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p99, p999) = (
+        quantile(&latencies, 0.5),
+        quantile(&latencies, 0.99),
+        quantile(&latencies, 0.999),
+    );
+    let achieved = ok as f64 / wall;
+
+    // server-side view (typed Stats frame) for comparison
+    let server_stats = NetClient::connect(addr.as_str())
+        .and_then(|mut c| {
+            c.set_timeout(Some(Duration::from_secs(5)))?;
+            c.stats()
+        })
+        .ok();
+
+    let mut rep = Report::new(&format!(
+        "bench_serve: open-loop Poisson {qps:.0} qps x {seconds}s, {clients} conns ({collection})"
+    ));
+    rep.header(&[
+        "ok", "overload", "expired", "errors", "qps", "p50 ms", "p99 ms", "p999 ms",
+    ]);
+    rep.row(&[
+        format!("{ok}/{total}"),
+        overloaded.to_string(),
+        expired.to_string(),
+        other.to_string(),
+        format!("{achieved:.0}"),
+        format!("{:.2}", p50 * 1e3),
+        format!("{:.2}", p99 * 1e3),
+        format!("{:.2}", p999 * 1e3),
+    ]);
+    if let Some(s) = &server_stats {
+        rep.note(format!(
+            "server view: served={} p50={:.2}ms p99={:.2}ms p999={:.2}ms queue_depth={}",
+            s.served,
+            s.p50_s * 1e3,
+            s.p99_s * 1e3,
+            s.p999_s * 1e3,
+            s.queue_depth
+        ));
+    }
+    rep.note("latency measured from the scheduled Poisson arrival (open-loop: server lag shows up as queueing delay)");
+    rep.emit("bench_serve");
+
+    let mut json = JsonRows::new("serve");
+    json.push(&[
+        ("row", JsonVal::S("summary".into())),
+        ("qps_target", JsonVal::F(qps)),
+        ("qps_achieved", JsonVal::F(achieved)),
+        ("requests", JsonVal::I(total as u64)),
+        ("ok", JsonVal::I(ok as u64)),
+        ("overloaded", JsonVal::I(overloaded as u64)),
+        ("expired", JsonVal::I(expired as u64)),
+        ("errors", JsonVal::I(other as u64)),
+        ("clients", JsonVal::I(clients as u64)),
+    ]);
+    for (name, v) in [("p50", p50), ("p99", p99), ("p999", p999)] {
+        json.push(&[
+            ("row", JsonVal::S("quantile".into())),
+            ("quantile", JsonVal::S(name.into())),
+            ("latency_ms", JsonVal::F(v * 1e3)),
+            ("server_latency_ms", match &server_stats {
+                Some(s) => JsonVal::F(
+                    match name {
+                        "p50" => s.p50_s,
+                        "p99" => s.p99_s,
+                        _ => s.p999_s,
+                    } * 1e3,
+                ),
+                None => JsonVal::F(f64::NAN), // rendered as null
+            }),
+        ]);
+    }
+    json.emit();
+
+    if let Some(server) = server {
+        server.shutdown();
+    }
+    if ok == 0 {
+        eprintln!("bench_serve: no request succeeded");
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -11,12 +11,17 @@
 //! collection from an [`crate::index::Catalog`] of persisted index
 //! artifacts — the build-once / serve-many path (`amips build` +
 //! `amips serve --catalog`), including a persisted model artifact as
-//! the collection's query mapper.
+//! the collection's query mapper. The [`net`] module puts a TCP
+//! front-end on the same batching path (`amips serve --catalog
+//! --listen <addr>`): framed wire protocol, deadline-aware batching,
+//! bounded admission, multi-tenant routing over the whole catalog.
 
 pub mod batcher;
+pub mod net;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use net::{NetClient, NetServer, NetServerConfig};
 pub use router::{AmortizedRouter, CentroidRouter, Router, RoutingDecision};
 pub use server::{MapperFactory, Response, Server, ServerConfig, ServerHandle};

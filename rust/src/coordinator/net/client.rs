@@ -1,0 +1,183 @@
+//! Blocking client SDK for the AMTP wire protocol.
+//!
+//! A [`NetClient`] wraps one TCP connection. Calls are synchronous
+//! request/reply (the protocol is strictly alternating per connection);
+//! open several clients for concurrency — the server batches across
+//! connections, which is where the fused-scan amortization comes from.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::api::{Effort, QueryMode};
+use crate::coordinator::net::wire::{
+    read_frame, write_frame, ErrorFrame, Frame, HitsFrame, SearchFrame, StatsFrame, WireError,
+};
+
+/// Client-side failure: a transport/protocol error, a typed server
+/// error reply, or an unexpected frame type.
+#[derive(Debug)]
+pub enum NetError {
+    /// Transport or frame-decode failure.
+    Wire(WireError),
+    /// The server replied with a typed error frame.
+    Server(ErrorFrame),
+    /// The server replied with a frame that doesn't answer the request.
+    Unexpected(&'static str),
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Wire(e) => write!(f, "wire error: {e}"),
+            NetError::Server(e) => write!(f, "server error [{}]: {}", e.code, e.message),
+            NetError::Unexpected(what) => write!(f, "unexpected reply frame: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<WireError> for NetError {
+    fn from(e: WireError) -> NetError {
+        NetError::Wire(e)
+    }
+}
+
+impl From<std::io::Error> for NetError {
+    fn from(e: std::io::Error) -> NetError {
+        NetError::Wire(WireError::Io(e))
+    }
+}
+
+impl NetError {
+    /// The server's error frame, when that's what this is.
+    pub fn server_error(&self) -> Option<&ErrorFrame> {
+        match self {
+            NetError::Server(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// Per-request knobs for [`NetClient::search`].
+#[derive(Clone, Copy, Debug)]
+pub struct SearchOptions {
+    pub k: usize,
+    pub effort: Effort,
+    pub mode: QueryMode,
+    /// Client latency budget; the server fast-fails the request with a
+    /// typed `DeadlineExpired` once it lapses. `None` = no deadline.
+    pub deadline: Option<Duration>,
+}
+
+impl SearchOptions {
+    pub fn top_k(k: usize) -> SearchOptions {
+        SearchOptions {
+            k: k.max(1),
+            effort: Effort::Auto,
+            mode: QueryMode::Original,
+            deadline: None,
+        }
+    }
+
+    pub fn effort(mut self, effort: Effort) -> SearchOptions {
+        self.effort = effort;
+        self
+    }
+
+    pub fn mode(mut self, mode: QueryMode) -> SearchOptions {
+        self.mode = mode;
+        self
+    }
+
+    pub fn deadline(mut self, deadline: Duration) -> SearchOptions {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// One blocking connection to an `amips serve --listen` server.
+pub struct NetClient {
+    stream: TcpStream,
+    next_token: u64,
+}
+
+impl NetClient {
+    /// Connect to a serving address (e.g. `"127.0.0.1:7771"`).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient, NetError> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(NetClient {
+            stream,
+            next_token: 1,
+        })
+    }
+
+    /// Bound how long any single reply may take (`None` = wait forever).
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> Result<(), NetError> {
+        self.stream.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    fn round_trip(&mut self, frame: &Frame) -> Result<Frame, NetError> {
+        write_frame(&mut self.stream, frame).map_err(WireError::Io)?;
+        Ok(read_frame(&mut self.stream)?)
+    }
+
+    /// Top-`k` search of `query` against `collection`.
+    pub fn search(
+        &mut self,
+        collection: &str,
+        query: &[f32],
+        opts: SearchOptions,
+    ) -> Result<HitsFrame, NetError> {
+        let deadline_micros = opts
+            .deadline
+            .map(|d| (d.as_micros().min(u64::MAX as u128) as u64).max(1))
+            .unwrap_or(0);
+        let frame = Frame::Search(SearchFrame {
+            collection: collection.to_string(),
+            k: opts.k as u32,
+            effort: opts.effort,
+            mode: opts.mode,
+            deadline_micros,
+            query: query.to_vec(),
+        });
+        match self.round_trip(&frame)? {
+            Frame::Hits(h) => Ok(h),
+            Frame::Error(e) => Err(NetError::Server(e)),
+            _ => Err(NetError::Unexpected("search wants Hits or Error")),
+        }
+    }
+
+    /// Liveness check: round-trips a token through `Ping`/`Pong`.
+    pub fn ping(&mut self) -> Result<(), NetError> {
+        let token = self.next_token;
+        self.next_token += 1;
+        match self.round_trip(&Frame::Ping { token })? {
+            Frame::Pong { token: t } if t == token => Ok(()),
+            Frame::Pong { .. } => Err(NetError::Unexpected("pong token mismatch")),
+            Frame::Error(e) => Err(NetError::Server(e)),
+            _ => Err(NetError::Unexpected("ping wants Pong")),
+        }
+    }
+
+    /// Fetch server-wide stats (latency percentiles, queue depth,
+    /// per-collection counters).
+    pub fn stats(&mut self) -> Result<StatsFrame, NetError> {
+        match self.round_trip(&Frame::StatsRequest)? {
+            Frame::Stats(s) => Ok(s),
+            Frame::Error(e) => Err(NetError::Server(e)),
+            _ => Err(NetError::Unexpected("stats wants Stats")),
+        }
+    }
+
+    /// Escape hatch for probes and tests: send raw bytes, then try to
+    /// read one frame.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<Frame, NetError> {
+        use std::io::Write;
+        self.stream.write_all(bytes)?;
+        self.stream.flush()?;
+        Ok(read_frame(&mut self.stream)?)
+    }
+}

@@ -1,0 +1,576 @@
+//! Per-collection serving engine behind the TCP front-end: a bounded
+//! admission queue feeding the existing [`Batcher`] →
+//! fused-batched-scan path, with deadline fast-fail and per-tenant
+//! statistics.
+//!
+//! One [`Tenant`] per catalog collection. Connection threads
+//! [`Tenant::submit`] decoded requests; admission is a bounded
+//! `sync_channel`, so a saturated tenant answers with a typed
+//! [`ErrorCode::Overloaded`] instead of growing an unbounded queue
+//! (backpressure is part of the protocol, not an OOM). A dedicated
+//! worker thread drains the queue through the shared
+//! [`Batcher`] policy and runs each `(k, effort)` group through the
+//! same fused [`search_batch_parallel`] path the in-process
+//! coordinator uses — per-request hits stay bit-identical to solo
+//! [`VectorIndex::search_effort`] calls.
+//!
+//! Requests carry an optional absolute deadline (decoded from the
+//! frame's relative budget). Expired requests are failed *before* the
+//! scan — a client that has already given up never costs key traffic.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::api::{Effort, QueryMap, QueryMode};
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::net::wire::{CollectionStats, ErrorCode, ErrorFrame, HitsFrame};
+use crate::index::traits::VectorIndex;
+use crate::model::RustModel;
+use crate::tensor::Tensor;
+use crate::util::timer::LatencyHistogram;
+
+/// Reply to one admitted request: hits or a typed error.
+pub type NetReply = Result<HitsFrame, ErrorFrame>;
+
+/// One admitted search request queued for a tenant worker.
+pub struct NetRequest {
+    pub query: Vec<f32>,
+    pub k: usize,
+    pub effort: Effort,
+    pub mode: QueryMode,
+    /// Absolute expiry; checked when the batch is drained, before scan.
+    pub deadline: Option<Instant>,
+    pub enqueued: Instant,
+    pub reply: SyncSender<NetReply>,
+}
+
+/// Why [`Tenant::submit`] refused a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Bounded queue full: typed backpressure, retry later.
+    Overloaded,
+    /// The tenant worker is draining for shutdown.
+    ShuttingDown,
+}
+
+impl SubmitError {
+    pub fn code(self) -> ErrorCode {
+        match self {
+            SubmitError::Overloaded => ErrorCode::Overloaded,
+            SubmitError::ShuttingDown => ErrorCode::ShuttingDown,
+        }
+    }
+}
+
+/// Lock-free counters plus the latency histogram for one tenant.
+#[derive(Default)]
+pub struct TenantStats {
+    pub served: AtomicU64,
+    pub errors: AtomicU64,
+    pub overloaded: AtomicU64,
+    pub expired: AtomicU64,
+    pub queue_depth: AtomicUsize,
+    pub latency: Mutex<LatencyHistogram>,
+}
+
+impl TenantStats {
+    fn new() -> TenantStats {
+        TenantStats {
+            latency: Mutex::new(LatencyHistogram::new()),
+            ..Default::default()
+        }
+    }
+}
+
+/// One served collection: bounded admission into a worker thread that
+/// batches and scans a shared index (optionally through its attached
+/// query mapper).
+pub struct Tenant {
+    pub name: String,
+    dim: usize,
+    /// `None` once shutdown has begun: dropping the sender disconnects
+    /// the receiver, so the worker's [`Batcher`] drains what's queued
+    /// (every queued request still gets a real reply) and exits.
+    tx: Mutex<Option<SyncSender<NetRequest>>>,
+    stats: Arc<TenantStats>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Tenant {
+    /// Start a tenant worker over `index`. `mapper` is the collection's
+    /// attached c=1 model (serves [`QueryMode::Mapped`] traffic);
+    /// `queue_cap` bounds the admission queue.
+    pub fn start(
+        name: &str,
+        index: Arc<dyn VectorIndex>,
+        mapper: Option<Arc<RustModel>>,
+        policy: BatchPolicy,
+        queue_cap: usize,
+    ) -> std::io::Result<Arc<Tenant>> {
+        let (tx, rx) = sync_channel::<NetRequest>(queue_cap.max(1));
+        let stats = Arc::new(TenantStats::new());
+        let tenant = Arc::new(Tenant {
+            name: name.to_string(),
+            dim: index.dim(),
+            tx: Mutex::new(Some(tx)),
+            stats: stats.clone(),
+            worker: Mutex::new(None),
+        });
+        let worker_name = format!("amips-net-{name}");
+        let handle = std::thread::Builder::new().name(worker_name).spawn(move || {
+            // The query map is built on the worker thread (mirrors the
+            // in-process server's MapperFactory contract).
+            let map: Option<crate::api::KeyNetQueryMap> = mapper.and_then(|m| {
+                // catalog loading already validated c=1; a failure here
+                // degrades Mapped traffic to typed errors, not a panic
+                crate::api::KeyNetQueryMap::new((*m).clone()).ok()
+            });
+            let batcher = Batcher::new(rx, policy);
+            while let Some((batch, _reason)) = batcher.next_batch() {
+                let depth = stats.queue_depth.load(Ordering::Relaxed);
+                stats
+                    .queue_depth
+                    .fetch_sub(batch.len().min(depth), Ordering::Relaxed);
+                serve_net_batch(batch, index.as_ref(), &map, &stats);
+            }
+        })?;
+        *tenant.worker.lock().unwrap() = Some(handle);
+        Ok(tenant)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn stats(&self) -> &TenantStats {
+        &self.stats
+    }
+
+    /// Non-blocking admission. `Err` means the caller should reply with
+    /// the matching typed error frame; the request is never queued.
+    pub fn submit(&self, req: NetRequest) -> Result<(), SubmitError> {
+        let guard = self.tx.lock().unwrap();
+        let Some(tx) = guard.as_ref() else {
+            return Err(SubmitError::ShuttingDown);
+        };
+        match tx.try_send(req) {
+            Ok(()) => {
+                self.stats.queue_depth.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(TrySendError::Full(_)) => {
+                self.stats.overloaded.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Overloaded)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    /// Begin shutdown: drop the queue sender so the worker drains every
+    /// already-admitted request (real replies, not cancellations) and
+    /// exits. Subsequent [`Tenant::submit`] calls get `ShuttingDown`.
+    pub fn begin_shutdown(&self) {
+        self.tx.lock().unwrap().take();
+    }
+
+    /// Join the worker after [`Tenant::begin_shutdown`].
+    pub fn join(&self) {
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Snapshot this tenant's counters as a wire stats row.
+    pub fn collection_stats(&self) -> CollectionStats {
+        CollectionStats {
+            name: self.name.clone(),
+            served: self.stats.served.load(Ordering::Relaxed),
+            errors: self.stats.errors.load(Ordering::Relaxed),
+            overloaded: self.stats.overloaded.load(Ordering::Relaxed),
+            expired: self.stats.expired.load(Ordering::Relaxed),
+            queue_depth: self.stats.queue_depth.load(Ordering::Relaxed) as u64,
+        }
+    }
+}
+
+fn reply_err(req: &NetRequest, stats: &TenantStats, code: ErrorCode, message: String) {
+    if code == ErrorCode::DeadlineExpired {
+        stats.expired.fetch_add(1, Ordering::Relaxed);
+    } else {
+        stats.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = req.reply.send(Err(ErrorFrame { code, message }));
+}
+
+/// Serve one drained batch: deadline fast-fail and validation first,
+/// then one fused map pass over the mapped rows, then one fused scan
+/// per `(k, effort)` group, then per-request replies + stats.
+fn serve_net_batch(
+    batch: Vec<NetRequest>,
+    index: &dyn VectorIndex,
+    mapper: &Option<crate::api::KeyNetQueryMap>,
+    stats: &TenantStats,
+) {
+    let d = index.dim();
+    let now = Instant::now();
+    // triage before any scan work
+    let mut valid: Vec<NetRequest> = Vec::with_capacity(batch.len());
+    for req in batch {
+        if let Some(dl) = req.deadline {
+            if now >= dl {
+                let msg = format!(
+                    "deadline expired {}us before scan",
+                    now.duration_since(dl).as_micros()
+                );
+                reply_err(&req, stats, ErrorCode::DeadlineExpired, msg);
+                continue;
+            }
+        }
+        if req.query.len() != d {
+            let msg = format!("query dim {} != index dim {d}", req.query.len());
+            reply_err(&req, stats, ErrorCode::BadRequest, msg);
+            continue;
+        }
+        match req.mode {
+            QueryMode::Original => valid.push(req),
+            QueryMode::Mapped if mapper.is_some() => valid.push(req),
+            QueryMode::Mapped => {
+                reply_err(
+                    &req,
+                    stats,
+                    ErrorCode::Unsupported,
+                    "collection has no attached query mapper; send mode=original".into(),
+                );
+            }
+            QueryMode::Routed => {
+                reply_err(
+                    &req,
+                    stats,
+                    ErrorCode::Unsupported,
+                    "routed mode is not served over the wire".into(),
+                );
+            }
+        }
+    }
+    if valid.is_empty() {
+        return;
+    }
+    let mut q = Tensor::zeros(&[valid.len(), d]);
+    for (i, r) in valid.iter().enumerate() {
+        q.row_mut(i).copy_from_slice(&r.query);
+    }
+    // one fused mapping pass over the rows that request it
+    let mapped_rows: Vec<usize> = valid
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.mode == QueryMode::Mapped)
+        .map(|(i, _)| i)
+        .collect();
+    let mut map_err: Option<String> = None;
+    let mapped: Option<Tensor> = if mapped_rows.is_empty() {
+        None
+    } else {
+        let m = mapper.as_ref().expect("mapped rows imply a mapper");
+        match m.map(&q.gather_rows(&mapped_rows)) {
+            Ok(t) if t.row_width() == d => Some(t),
+            Ok(t) => {
+                map_err = Some(format!(
+                    "query map produced dim {} but index expects {d}",
+                    t.row_width()
+                ));
+                None
+            }
+            Err(e) => {
+                map_err = Some(format!("query mapping failed: {e:#}"));
+                None
+            }
+        }
+    };
+    // slot of each valid row in the mapped sub-batch
+    let mapped_slot: Vec<Option<usize>> = {
+        let mut slots = vec![None; valid.len()];
+        for (pos, &row) in mapped_rows.iter().enumerate() {
+            slots[row] = Some(pos);
+        }
+        slots
+    };
+    // group by (k, effort); one fused parallel scan per group
+    let mut groups: Vec<(usize, Effort, Vec<usize>)> = Vec::new();
+    for (i, r) in valid.iter().enumerate() {
+        if r.mode == QueryMode::Mapped && mapped.is_none() {
+            continue; // map failed; replied below
+        }
+        match groups
+            .iter_mut()
+            .find(|(gk, ge, _)| *gk == r.k && *ge == r.effort)
+        {
+            Some((_, _, members)) => members.push(i),
+            None => groups.push((r.k, r.effort, vec![i])),
+        }
+    }
+    let map_flops = mapper.as_ref().map_or(0, |m| m.map_flops_per_query());
+    let mut replies: Vec<Option<HitsFrame>> = (0..valid.len()).map(|_| None).collect();
+    for (k, effort, members) in &groups {
+        let mut gq = Tensor::zeros(&[members.len(), d]);
+        for (gi, &i) in members.iter().enumerate() {
+            let row = match mapped_slot[i] {
+                Some(pos) => mapped.as_ref().expect("group rows have mapped tensor").row(pos),
+                None => q.row(i),
+            };
+            gq.row_mut(gi).copy_from_slice(row);
+        }
+        let results = crate::api::search_batch_parallel(index, &gq, *k, *effort);
+        for (&i, res) in members.iter().zip(results) {
+            replies[i] = Some(HitsFrame {
+                ids: res.ids,
+                scores: res.scores,
+                keys_scanned: res.cost.keys_scanned,
+                cells_probed: res.cost.cells_probed,
+                map_flops: if mapped_slot[i].is_some() { map_flops } else { 0 },
+                scan_flops: res.cost.flops,
+                server_micros: 0, // stamped per request below
+            });
+        }
+    }
+    for (req, reply) in valid.into_iter().zip(replies) {
+        match reply {
+            Some(mut hits) => {
+                let latency = req.enqueued.elapsed();
+                hits.server_micros = latency.as_micros().min(u64::MAX as u128) as u64;
+                stats.served.fetch_add(1, Ordering::Relaxed);
+                stats.latency.lock().unwrap().record(latency.as_secs_f64());
+                let _ = req.reply.send(Ok(hits));
+            }
+            None => {
+                let msg = map_err.clone().unwrap_or_else(|| "internal error".into());
+                reply_err(&req, stats, ErrorCode::Internal, msg);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::flat::FlatIndex;
+    use crate::tensor::normalize_rows;
+    use crate::util::Rng;
+    use std::time::Duration;
+
+    fn unit(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        normalize_rows(&mut t);
+        t
+    }
+
+    fn request(query: Vec<f32>, k: usize) -> (NetRequest, Receiver<NetReply>) {
+        let (rtx, rrx) = sync_channel(1);
+        (
+            NetRequest {
+                query,
+                k,
+                effort: Effort::Exhaustive,
+                mode: QueryMode::Original,
+                deadline: None,
+                enqueued: Instant::now(),
+                reply: rtx,
+            },
+            rrx,
+        )
+    }
+
+    /// A tenant whose worker never starts: admission behavior becomes
+    /// deterministic (nothing drains the queue).
+    fn detached_tenant(queue_cap: usize) -> (Tenant, Receiver<NetRequest>) {
+        let (tx, rx) = sync_channel(queue_cap);
+        (
+            Tenant {
+                name: "t".into(),
+                dim: 4,
+                tx: Mutex::new(Some(tx)),
+                stats: Arc::new(TenantStats::new()),
+                worker: Mutex::new(None),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn bounded_queue_rejects_with_overloaded() {
+        let (tenant, _rx) = detached_tenant(2);
+        let mut receivers = Vec::new();
+        for _ in 0..2 {
+            let (req, rrx) = request(vec![0.0; 4], 1);
+            assert_eq!(tenant.submit(req), Ok(()));
+            receivers.push(rrx);
+        }
+        // queue full: typed rejection, counter bumped, depth unchanged
+        let (req, _rrx) = request(vec![0.0; 4], 1);
+        assert_eq!(tenant.submit(req), Err(SubmitError::Overloaded));
+        assert_eq!(tenant.stats().overloaded.load(Ordering::Relaxed), 1);
+        assert_eq!(tenant.stats().queue_depth.load(Ordering::Relaxed), 2);
+        assert_eq!(SubmitError::Overloaded.code(), ErrorCode::Overloaded);
+    }
+
+    #[test]
+    fn shutdown_disconnect_rejects_with_shutting_down() {
+        let (tenant, rx) = detached_tenant(2);
+        tenant.begin_shutdown();
+        let (req, _rrx) = request(vec![0.0; 4], 1);
+        assert_eq!(tenant.submit(req), Err(SubmitError::ShuttingDown));
+        // also when the receiver died without an orderly shutdown
+        let (tenant, rx2) = detached_tenant(2);
+        drop(rx);
+        drop(rx2);
+        let (req, _rrx) = request(vec![0.0; 4], 1);
+        assert_eq!(tenant.submit(req), Err(SubmitError::ShuttingDown));
+    }
+
+    #[test]
+    fn worker_serves_identical_to_direct_search() {
+        let keys = unit(&[80, 4], 1);
+        let index = Arc::new(FlatIndex::new(keys));
+        let tenant = Tenant::start(
+            "docs",
+            index.clone(),
+            None,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            16,
+        )
+        .unwrap();
+        let q = unit(&[6, 4], 2);
+        let mut receivers = Vec::new();
+        for i in 0..6 {
+            let (req, rrx) = request(q.row(i).to_vec(), 3);
+            tenant.submit(req).unwrap();
+            receivers.push(rrx);
+        }
+        for (i, rrx) in receivers.into_iter().enumerate() {
+            let hits = rrx.recv().unwrap().unwrap();
+            let direct = index.search_effort(q.row(i), 3, Effort::Exhaustive);
+            assert_eq!(hits.ids, direct.ids, "request {i}");
+            assert_eq!(hits.scores, direct.scores);
+            assert_eq!(hits.keys_scanned, direct.cost.keys_scanned);
+            assert_eq!(hits.scan_flops, direct.cost.flops);
+        }
+        assert_eq!(tenant.stats().served.load(Ordering::Relaxed), 6);
+        assert_eq!(tenant.collection_stats().served, 6);
+        tenant.begin_shutdown();
+        tenant.join();
+    }
+
+    #[test]
+    fn expired_deadline_fast_fails_before_scan() {
+        let keys = unit(&[50, 4], 3);
+        let index = Arc::new(FlatIndex::new(keys));
+        let tenant = Tenant::start(
+            "docs",
+            index,
+            None,
+            BatchPolicy {
+                max_batch: 4,
+                // wide window guarantees the 1us budget below expires
+                // before the batch drains
+                max_wait: Duration::from_millis(5),
+            },
+            8,
+        )
+        .unwrap();
+        let (rtx, rrx) = sync_channel(1);
+        tenant
+            .submit(NetRequest {
+                query: vec![0.5; 4],
+                k: 1,
+                effort: Effort::Exhaustive,
+                mode: QueryMode::Original,
+                deadline: Some(Instant::now() + Duration::from_micros(1)),
+                enqueued: Instant::now(),
+                reply: rtx,
+            })
+            .unwrap();
+        let err = rrx.recv().unwrap().unwrap_err();
+        assert_eq!(err.code, ErrorCode::DeadlineExpired);
+        assert_eq!(tenant.stats().expired.load(Ordering::Relaxed), 1);
+        assert_eq!(tenant.stats().served.load(Ordering::Relaxed), 0);
+        tenant.begin_shutdown();
+        tenant.join();
+    }
+
+    #[test]
+    fn queued_requests_get_replies_after_shutdown_begins() {
+        // requests admitted before shutdown drain with real answers
+        let keys = unit(&[60, 4], 5);
+        let index = Arc::new(FlatIndex::new(keys));
+        let tenant = Tenant::start(
+            "docs",
+            index.clone(),
+            None,
+            BatchPolicy {
+                max_batch: 32,
+                max_wait: Duration::from_millis(1),
+            },
+            32,
+        )
+        .unwrap();
+        let q = unit(&[5, 4], 6);
+        let mut receivers = Vec::new();
+        for i in 0..5 {
+            let (req, rrx) = request(q.row(i).to_vec(), 2);
+            tenant.submit(req).unwrap();
+            receivers.push(rrx);
+        }
+        tenant.begin_shutdown();
+        tenant.join();
+        for (i, rrx) in receivers.into_iter().enumerate() {
+            let hits = rrx.recv().unwrap().unwrap();
+            let direct = index.search_effort(q.row(i), 2, Effort::Exhaustive);
+            assert_eq!(hits.ids, direct.ids, "request {i}");
+        }
+    }
+
+    #[test]
+    fn invalid_requests_get_typed_errors() {
+        let keys = unit(&[40, 4], 7);
+        let tenant = Tenant::start(
+            "docs",
+            Arc::new(FlatIndex::new(keys)),
+            None,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            8,
+        )
+        .unwrap();
+        // wrong dimension
+        let (req, rrx) = request(vec![0.0; 3], 1);
+        tenant.submit(req).unwrap();
+        assert_eq!(rrx.recv().unwrap().unwrap_err().code, ErrorCode::BadRequest);
+        // mapped mode without a mapper
+        let (rtx, rrx) = sync_channel(1);
+        tenant
+            .submit(NetRequest {
+                query: vec![0.0; 4],
+                k: 1,
+                effort: Effort::Auto,
+                mode: QueryMode::Mapped,
+                deadline: None,
+                enqueued: Instant::now(),
+                reply: rtx,
+            })
+            .unwrap();
+        assert_eq!(
+            rrx.recv().unwrap().unwrap_err().code,
+            ErrorCode::Unsupported
+        );
+        assert_eq!(tenant.stats().errors.load(Ordering::Relaxed), 2);
+        tenant.begin_shutdown();
+        tenant.join();
+    }
+}

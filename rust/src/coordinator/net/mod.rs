@@ -1,0 +1,25 @@
+//! TCP serving subsystem: the process boundary around the batching
+//! coordinator. The in-process [`crate::coordinator::Server`] stays the
+//! embedded API; this module makes the same fused-batch serving path
+//! reachable from other processes over a versioned length-framed wire
+//! protocol ([`wire`]), with deadline-aware batching, bounded-queue
+//! admission control and per-collection multi-tenant routing off a
+//! [`crate::index::Catalog`] ([`engine`], [`server`]), plus a blocking
+//! client SDK ([`client`]).
+//!
+//! Entry points: `amips serve --catalog <dir> --listen <addr>` on the
+//! CLI, [`NetServer::serve_catalog`] in the library, [`NetClient`] on
+//! the client side, and the `bench_serve` load generator for open-loop
+//! latency/throughput measurement.
+
+pub mod client;
+pub mod engine;
+pub mod server;
+pub mod wire;
+
+pub use client::{NetClient, NetError, SearchOptions};
+pub use engine::{NetReply, NetRequest, SubmitError, Tenant, TenantStats};
+pub use server::{NetServer, NetServerConfig};
+pub use wire::{
+    CollectionStats, ErrorCode, ErrorFrame, Frame, HitsFrame, SearchFrame, StatsFrame, WireError,
+};

@@ -1,0 +1,380 @@
+//! The TCP front-end: accept loop, per-connection frame loop, tenant
+//! routing, stats aggregation and graceful shutdown.
+//!
+//! ```text
+//!  TcpListener (nonblocking poll, shutdown-aware)
+//!     └── connection thread per client (capped)
+//!           ├── read_frame_idle: idle-poll for the stop flag without
+//!           │   desyncing mid-frame; slow-loris frame timeout
+//!           ├── Ping -> Pong, StatsRequest -> Stats
+//!           └── Search -> Tenant::submit (bounded) -> block on reply
+//!  Tenant (one per catalog collection)
+//!     └── worker thread: Batcher -> deadline triage -> map pass ->
+//!         fused (k, effort) group scans -> per-request replies
+//! ```
+//!
+//! Every failure a client can cause — unknown collection, bad frame,
+//! full queue, expired deadline, draining server — is answered with a
+//! typed [`ErrorFrame`] before the connection is (at worst) closed;
+//! nothing hangs a socket and nothing allocates beyond the wire caps.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::net::engine::{NetRequest, Tenant};
+use crate::coordinator::net::wire::{
+    read_frame_idle, write_frame, ErrorCode, ErrorFrame, Frame, StatsFrame, WireError,
+};
+use crate::index::catalog::Catalog;
+use crate::util::timer::LatencyHistogram;
+
+/// Tuning knobs for the TCP front-end.
+#[derive(Clone, Copy, Debug)]
+pub struct NetServerConfig {
+    /// Batch policy shared by every tenant worker.
+    pub policy: BatchPolicy,
+    /// Bounded admission queue per tenant; a full queue answers
+    /// [`ErrorCode::Overloaded`].
+    pub queue_cap: usize,
+    /// Concurrent connection cap; excess connects get a typed
+    /// `Overloaded` reply and are closed.
+    pub max_connections: usize,
+    /// How long a quiet connection sleeps between stop-flag polls.
+    pub idle_timeout: Duration,
+    /// Once a frame has started arriving, how long the rest may take
+    /// (slow-loris guard).
+    pub frame_timeout: Duration,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            policy: BatchPolicy::default(),
+            queue_cap: 1024,
+            max_connections: 256,
+            idle_timeout: Duration::from_millis(50),
+            frame_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+struct Shared {
+    tenants: BTreeMap<String, Arc<Tenant>>,
+    shutting: AtomicBool,
+    live_connections: AtomicUsize,
+    cfg: NetServerConfig,
+}
+
+impl Shared {
+    /// Roll per-tenant counters and latency snapshots up into one
+    /// server-wide stats frame.
+    fn stats_frame(&self) -> StatsFrame {
+        let mut hist = LatencyHistogram::new();
+        let mut out = StatsFrame::default();
+        for tenant in self.tenants.values() {
+            let c = tenant.collection_stats();
+            out.served += c.served;
+            out.errors += c.errors;
+            out.overloaded += c.overloaded;
+            out.expired += c.expired;
+            out.queue_depth += c.queue_depth;
+            out.collections.push(c);
+            hist.merge(&tenant.stats().latency.lock().unwrap().snapshot());
+        }
+        out.mean_s = hist.mean_s();
+        out.p50_s = hist.p50_s();
+        out.p99_s = hist.p99_s();
+        out.p999_s = hist.p999_s();
+        out.max_s = hist.max_s();
+        out
+    }
+}
+
+/// A running TCP search server over a catalog of collections.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Serve every collection of an opened [`Catalog`] on `addr`
+    /// (`127.0.0.1:0` binds an ephemeral port — read it back from
+    /// [`NetServer::local_addr`]). Collections with an attached mapper
+    /// serve `mode=mapped` traffic.
+    pub fn serve_catalog(
+        catalog: &Catalog,
+        addr: impl ToSocketAddrs,
+        cfg: NetServerConfig,
+    ) -> Result<NetServer> {
+        let mut tenants = BTreeMap::new();
+        for entry in catalog.entries() {
+            let tenant = Tenant::start(
+                &entry.name,
+                entry.index.clone(),
+                entry.mapper.clone(),
+                cfg.policy,
+                cfg.queue_cap,
+            )
+            .with_context(|| format!("starting worker for collection '{}'", entry.name))?;
+            tenants.insert(entry.name.clone(), tenant);
+        }
+        anyhow::ensure!(!tenants.is_empty(), "catalog has no collections to serve");
+        NetServer::serve(tenants, addr, cfg)
+    }
+
+    /// Serve an explicit tenant map (the catalog-free entry point used
+    /// by tests and embedded setups).
+    pub fn serve(
+        tenants: BTreeMap<String, Arc<Tenant>>,
+        addr: impl ToSocketAddrs,
+        cfg: NetServerConfig,
+    ) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).context("binding listener")?;
+        let local_addr = listener.local_addr()?;
+        // nonblocking accept so the loop can poll the shutdown flag
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            tenants,
+            shutting: AtomicBool::new(false),
+            live_connections: AtomicUsize::new(0),
+            cfg,
+        });
+        let shared2 = shared.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("amips-net-accept".into())
+            .spawn(move || accept_loop(listener, shared2))?;
+        Ok(NetServer {
+            shared,
+            local_addr,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Snapshot server-wide stats (same data as the wire `Stats` frame).
+    pub fn stats(&self) -> StatsFrame {
+        self.shared.stats_frame()
+    }
+
+    /// Graceful shutdown: stop accepting, let connection threads answer
+    /// in-flight frames (new Search frames get `ShuttingDown`), drain
+    /// every admitted request through the tenant workers with real
+    /// replies, then join everything.
+    pub fn shutdown(mut self) {
+        self.shared.shutting.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        // accept loop joined => no new connections; connection threads
+        // exit on their next idle poll. Wait for them before closing
+        // tenant queues so a request admitted right now still drains.
+        while self.shared.live_connections.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        for tenant in self.shared.tenants.values() {
+            tenant.begin_shutdown();
+        }
+        for tenant in self.shared.tenants.values() {
+            tenant.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shared.shutting.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut conn_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        if shared.shutting.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                conn_threads.retain(|t| !t.is_finished());
+                if shared.live_connections.load(Ordering::SeqCst) >= shared.cfg.max_connections {
+                    let mut stream = stream;
+                    let _ = write_frame(
+                        &mut stream,
+                        &Frame::Error(ErrorFrame {
+                            code: ErrorCode::Overloaded,
+                            message: "connection limit reached".into(),
+                        }),
+                    );
+                    continue;
+                }
+                shared.live_connections.fetch_add(1, Ordering::SeqCst);
+                let shared2 = shared.clone();
+                match std::thread::Builder::new()
+                    .name("amips-net-conn".into())
+                    .spawn(move || {
+                        handle_connection(stream, &shared2);
+                        shared2.live_connections.fetch_sub(1, Ordering::SeqCst);
+                    }) {
+                    Ok(t) => conn_threads.push(t),
+                    Err(_) => {
+                        shared.live_connections.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            }
+            Err(e) if crate::coordinator::net::wire::is_timeout(&e) => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    for t in conn_threads {
+        let _ = t.join();
+    }
+}
+
+/// Best-effort typed error reply (the peer may already be gone).
+fn send_error(stream: &mut TcpStream, code: ErrorCode, message: String) {
+    let _ = write_frame(stream, &Frame::Error(ErrorFrame { code, message }));
+}
+
+fn handle_connection(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_nodelay(true);
+    loop {
+        let frame = match read_frame_idle(
+            &mut stream,
+            shared.cfg.idle_timeout,
+            shared.cfg.frame_timeout,
+        ) {
+            Ok(Some(f)) => f,
+            Ok(None) => {
+                // quiet socket: poll the shutdown flag and keep waiting
+                if shared.shutting.load(Ordering::SeqCst) {
+                    send_error(
+                        &mut stream,
+                        ErrorCode::ShuttingDown,
+                        "server is draining".into(),
+                    );
+                    return;
+                }
+                continue;
+            }
+            Err(WireError::Closed) => return,
+            Err(e) => {
+                // a decode error desyncs the stream: typed reply, close
+                send_error(&mut stream, e.reply_code(), e.to_string());
+                return;
+            }
+        };
+        match frame {
+            Frame::Ping { token } => {
+                if write_frame(&mut stream, &Frame::Pong { token }).is_err() {
+                    return;
+                }
+            }
+            Frame::StatsRequest => {
+                if write_frame(&mut stream, &Frame::Stats(shared.stats_frame())).is_err() {
+                    return;
+                }
+            }
+            Frame::Search(s) => {
+                if shared.shutting.load(Ordering::SeqCst) {
+                    send_error(
+                        &mut stream,
+                        ErrorCode::ShuttingDown,
+                        "server is draining".into(),
+                    );
+                    return;
+                }
+                let reply = serve_search(s, shared);
+                let frame = match reply {
+                    Ok(hits) => Frame::Hits(hits),
+                    Err(e) => Frame::Error(e),
+                };
+                if write_frame(&mut stream, &frame).is_err() {
+                    return;
+                }
+            }
+            // server-to-client frames arriving here are protocol abuse
+            Frame::Hits(_) | Frame::Error(_) | Frame::Pong { .. } | Frame::Stats(_) => {
+                send_error(
+                    &mut stream,
+                    ErrorCode::BadRequest,
+                    "client sent a server-side frame".into(),
+                );
+                return;
+            }
+        }
+    }
+}
+
+/// Route one search frame to its tenant and block for the reply.
+fn serve_search(
+    s: crate::coordinator::net::wire::SearchFrame,
+    shared: &Shared,
+) -> Result<crate::coordinator::net::wire::HitsFrame, ErrorFrame> {
+    let Some(tenant) = shared.tenants.get(&s.collection) else {
+        return Err(ErrorFrame {
+            code: ErrorCode::UnknownCollection,
+            message: format!(
+                "no collection '{}' (serving: {})",
+                s.collection,
+                shared
+                    .tenants
+                    .keys()
+                    .map(String::as_str)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        });
+    };
+    let enqueued = Instant::now();
+    let deadline = if s.deadline_micros > 0 {
+        Some(enqueued + Duration::from_micros(s.deadline_micros))
+    } else {
+        None
+    };
+    let (rtx, rrx) = sync_channel(1);
+    let req = NetRequest {
+        query: s.query,
+        k: s.k as usize,
+        effort: s.effort,
+        mode: s.mode,
+        deadline,
+        enqueued,
+        reply: rtx,
+    };
+    if let Err(e) = tenant.submit(req) {
+        return Err(ErrorFrame {
+            code: e.code(),
+            message: match e {
+                crate::coordinator::net::engine::SubmitError::Overloaded => {
+                    format!("collection '{}' queue is full", s.collection)
+                }
+                crate::coordinator::net::engine::SubmitError::ShuttingDown => {
+                    "server is draining".into()
+                }
+            },
+        });
+    }
+    match rrx.recv() {
+        Ok(reply) => reply,
+        Err(_) => Err(ErrorFrame {
+            code: ErrorCode::Internal,
+            message: "worker dropped the request".into(),
+        }),
+    }
+}

@@ -1,0 +1,918 @@
+//! The AMTP wire format: a versioned, length-framed binary protocol for
+//! serving MIPS over TCP.
+//!
+//! Every frame is self-delimiting:
+//!
+//! ```text
+//! [magic "AMTP" (4)] [version u8] [tag u8] [len u32 LE] [payload: len bytes]
+//! ```
+//!
+//! and every multi-byte integer/float in a payload is little-endian.
+//! Decoding is defensive in the style of [`crate::tensor::Tensor::read_from`]:
+//! declared lengths and element counts are capped *before* any
+//! allocation (`checked_mul`, remaining-byte checks), unknown tags and
+//! version mismatches are typed [`WireError`]s, and trailing payload
+//! bytes are rejected so a desynchronized stream fails fast instead of
+//! silently mis-parsing the next frame. A crafted or corrupted frame can
+//! therefore cost at most [`MAX_FRAME_LEN`] bytes of memory and never
+//! panics the decoder (fuzz-tested below).
+//!
+//! Frame types: `Search` (collection + query + k/effort/mode + optional
+//! deadline) answered by `Hits` or `Error`; `Ping` answered by `Pong`;
+//! `StatsRequest` answered by `Stats` (server-wide latency percentiles,
+//! queue depth and per-collection counters). Error replies carry a
+//! stable [`ErrorCode`] so clients can react to `Overloaded` /
+//! `DeadlineExpired` / `ShuttingDown` without string matching.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::api::{Effort, QueryMode};
+
+/// Per-frame magic bytes ("AMips Transport Protocol").
+pub const MAGIC: [u8; 4] = *b"AMTP";
+/// Protocol version spoken by this build.
+pub const VERSION: u8 = 1;
+/// Frame header size: magic + version + tag + payload length.
+pub const HEADER_LEN: usize = 10;
+/// Hard cap on one frame's payload (guards decoder allocations).
+pub const MAX_FRAME_LEN: u32 = 1 << 24; // 16 MiB
+/// Cap on collection-name bytes.
+pub const MAX_NAME_LEN: usize = 256;
+/// Cap on error-message bytes.
+pub const MAX_MSG_LEN: usize = 4096;
+/// Cap on query dimensionality over the wire.
+pub const MAX_DIM: usize = 1 << 20;
+/// Cap on hits per reply.
+pub const MAX_HITS: usize = 1 << 20;
+/// Cap on per-collection stats entries in one `Stats` frame.
+pub const MAX_COLLECTIONS: usize = 4096;
+
+/// Frame tags (the `tag` header byte).
+mod tag {
+    pub const SEARCH: u8 = 1;
+    pub const HITS: u8 = 2;
+    pub const ERROR: u8 = 3;
+    pub const PING: u8 = 4;
+    pub const PONG: u8 = 5;
+    pub const STATS_REQUEST: u8 = 6;
+    pub const STATS: u8 = 7;
+}
+
+/// Stable error codes carried by `Error` frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u16)]
+pub enum ErrorCode {
+    /// Malformed frame or invalid request parameters (wrong dim, …).
+    BadRequest = 1,
+    /// The named collection is not served here.
+    UnknownCollection = 2,
+    /// The request's deadline passed before its batch was scanned.
+    DeadlineExpired = 3,
+    /// Admission control rejected the request (bounded queue full).
+    Overloaded = 4,
+    /// The server is draining; retry against another replica.
+    ShuttingDown = 5,
+    /// Frame type or query mode not supported by this server.
+    Unsupported = 6,
+    /// Server-side failure while serving an admitted request.
+    Internal = 7,
+}
+
+impl ErrorCode {
+    pub fn from_u16(v: u16) -> Option<ErrorCode> {
+        Some(match v {
+            1 => ErrorCode::BadRequest,
+            2 => ErrorCode::UnknownCollection,
+            3 => ErrorCode::DeadlineExpired,
+            4 => ErrorCode::Overloaded,
+            5 => ErrorCode::ShuttingDown,
+            6 => ErrorCode::Unsupported,
+            7 => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ErrorCode::BadRequest => "bad-request",
+            ErrorCode::UnknownCollection => "unknown-collection",
+            ErrorCode::DeadlineExpired => "deadline-expired",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::ShuttingDown => "shutting-down",
+            ErrorCode::Unsupported => "unsupported",
+            ErrorCode::Internal => "internal",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Typed decode/transport failure. Decoding never panics: every
+/// malformed input maps to one of these.
+#[derive(Debug)]
+pub enum WireError {
+    Io(std::io::Error),
+    /// Peer closed the connection at a frame boundary.
+    Closed,
+    BadMagic([u8; 4]),
+    BadVersion(u8),
+    UnknownTag(u8),
+    /// A declared length exceeds its cap (rejected before allocating).
+    Oversized { what: &'static str, declared: u64, cap: u64 },
+    /// Payload ended before the declared content.
+    Truncated { what: &'static str },
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "io error: {e}"),
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:?} (expected {MAGIC:?})"),
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (this build speaks {VERSION})")
+            }
+            WireError::UnknownTag(t) => write!(f, "unknown frame tag {t}"),
+            WireError::Oversized { what, declared, cap } => {
+                write!(f, "declared {what} length {declared} exceeds cap {cap}")
+            }
+            WireError::Truncated { what } => write!(f, "frame truncated while reading {what}"),
+            WireError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+impl WireError {
+    /// The error code a server should reply with for this decode error.
+    pub fn reply_code(&self) -> ErrorCode {
+        match self {
+            WireError::UnknownTag(_) | WireError::BadVersion(_) => ErrorCode::Unsupported,
+            _ => ErrorCode::BadRequest,
+        }
+    }
+}
+
+/// A search request over the wire. `deadline_micros` is the client's
+/// latency budget relative to frame send (0 = none); the server
+/// fast-fails the request with [`ErrorCode::DeadlineExpired`] if its
+/// batch is drained after the budget has elapsed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SearchFrame {
+    pub collection: String,
+    pub k: u32,
+    pub effort: Effort,
+    pub mode: QueryMode,
+    pub deadline_micros: u64,
+    pub query: Vec<f32>,
+}
+
+/// A successful search reply: hits plus the per-request cost counters
+/// and the server-observed latency.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HitsFrame {
+    pub ids: Vec<u32>,
+    pub scores: Vec<f32>,
+    pub keys_scanned: u64,
+    pub cells_probed: u64,
+    pub map_flops: u64,
+    pub scan_flops: u64,
+    pub server_micros: u64,
+}
+
+/// A typed error reply.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ErrorFrame {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+/// Per-collection row inside a [`StatsFrame`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CollectionStats {
+    pub name: String,
+    pub served: u64,
+    pub errors: u64,
+    pub overloaded: u64,
+    pub expired: u64,
+    pub queue_depth: u64,
+}
+
+/// Server-wide health/statistics reply: request counters, queue depth
+/// and the rolled-up latency histogram percentiles (seconds).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsFrame {
+    pub served: u64,
+    pub errors: u64,
+    pub overloaded: u64,
+    pub expired: u64,
+    pub queue_depth: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub p999_s: f64,
+    pub max_s: f64,
+    pub collections: Vec<CollectionStats>,
+}
+
+/// One decoded frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Search(SearchFrame),
+    Hits(HitsFrame),
+    Error(ErrorFrame),
+    Ping { token: u64 },
+    Pong { token: u64 },
+    StatsRequest,
+    Stats(StatsFrame),
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u32(b, s.len() as u32);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn encode_effort(b: &mut Vec<u8>, e: Effort) {
+    match e {
+        Effort::Exhaustive => b.push(0),
+        Effort::Probes(p) => {
+            b.push(1);
+            put_u32(b, p.min(u32::MAX as usize) as u32);
+        }
+        Effort::Frac(f) => {
+            b.push(2);
+            put_f32(b, f);
+        }
+        Effort::Auto => b.push(3),
+    }
+}
+
+fn encode_mode(b: &mut Vec<u8>, m: QueryMode) {
+    b.push(match m {
+        QueryMode::Original => 0,
+        QueryMode::Mapped => 1,
+        QueryMode::Routed => 2,
+    });
+}
+
+/// Encode one frame's `(tag, payload)` pair.
+pub(crate) fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
+    let mut b = Vec::new();
+    let t = match frame {
+        Frame::Search(s) => {
+            put_str(&mut b, &s.collection);
+            put_u32(&mut b, s.k);
+            encode_effort(&mut b, s.effort);
+            encode_mode(&mut b, s.mode);
+            put_u64(&mut b, s.deadline_micros);
+            put_u32(&mut b, s.query.len() as u32);
+            for &v in &s.query {
+                put_f32(&mut b, v);
+            }
+            tag::SEARCH
+        }
+        Frame::Hits(h) => {
+            put_u32(&mut b, h.ids.len() as u32);
+            for &id in &h.ids {
+                put_u32(&mut b, id);
+            }
+            for &sc in &h.scores {
+                put_f32(&mut b, sc);
+            }
+            put_u64(&mut b, h.keys_scanned);
+            put_u64(&mut b, h.cells_probed);
+            put_u64(&mut b, h.map_flops);
+            put_u64(&mut b, h.scan_flops);
+            put_u64(&mut b, h.server_micros);
+            tag::HITS
+        }
+        Frame::Error(e) => {
+            put_u16(&mut b, e.code as u16);
+            let mut cut = e.message.len().min(MAX_MSG_LEN);
+            while cut > 0 && !e.message.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            put_str(&mut b, &e.message[..cut]);
+            tag::ERROR
+        }
+        Frame::Ping { token } => {
+            put_u64(&mut b, *token);
+            tag::PING
+        }
+        Frame::Pong { token } => {
+            put_u64(&mut b, *token);
+            tag::PONG
+        }
+        Frame::StatsRequest => tag::STATS_REQUEST,
+        Frame::Stats(s) => {
+            put_u64(&mut b, s.served);
+            put_u64(&mut b, s.errors);
+            put_u64(&mut b, s.overloaded);
+            put_u64(&mut b, s.expired);
+            put_u64(&mut b, s.queue_depth);
+            put_f64(&mut b, s.mean_s);
+            put_f64(&mut b, s.p50_s);
+            put_f64(&mut b, s.p99_s);
+            put_f64(&mut b, s.p999_s);
+            put_f64(&mut b, s.max_s);
+            put_u32(&mut b, s.collections.len() as u32);
+            for c in &s.collections {
+                put_str(&mut b, &c.name);
+                put_u64(&mut b, c.served);
+                put_u64(&mut b, c.errors);
+                put_u64(&mut b, c.overloaded);
+                put_u64(&mut b, c.expired);
+                put_u64(&mut b, c.queue_depth);
+            }
+            tag::STATS
+        }
+    };
+    (t, b)
+}
+
+/// Write one frame (header + payload) in a single buffered write.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    let (t, payload) = encode_payload(frame);
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
+    buf.extend_from_slice(&MAGIC);
+    buf.push(VERSION);
+    buf.push(t);
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&payload);
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked payload cursor: every read is validated against the
+/// remaining bytes before it happens, so decoders can't over-read or
+/// allocate past the (already capped) payload.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { what });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &'static str) -> Result<u16, WireError> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, WireError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, WireError> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self, what: &'static str) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+
+    fn f64(&mut self, what: &'static str) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// A `u32`-length-prefixed UTF-8 string, capped at `cap` bytes.
+    fn string(&mut self, cap: usize, what: &'static str) -> Result<String, WireError> {
+        let n = self.u32(what)? as usize;
+        if n > cap {
+            return Err(WireError::Oversized {
+                what,
+                declared: n as u64,
+                cap: cap as u64,
+            });
+        }
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed(format!("{what} is not valid utf-8")))
+    }
+
+    /// Validate an element count against a cap *and* the bytes actually
+    /// present (`count * elem_size`, checked) before any allocation.
+    fn count(
+        &self,
+        declared: usize,
+        cap: usize,
+        elem_size: usize,
+        what: &'static str,
+    ) -> Result<usize, WireError> {
+        if declared > cap {
+            return Err(WireError::Oversized {
+                what,
+                declared: declared as u64,
+                cap: cap as u64,
+            });
+        }
+        match declared.checked_mul(elem_size) {
+            Some(bytes) if bytes <= self.remaining() => Ok(declared),
+            _ => Err(WireError::Truncated { what }),
+        }
+    }
+
+    fn finish(self, what: &'static str) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::Malformed(format!(
+                "{} trailing bytes after {what} payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn decode_effort(c: &mut Cur) -> Result<Effort, WireError> {
+    Ok(match c.u8("effort tag")? {
+        0 => Effort::Exhaustive,
+        1 => Effort::Probes(c.u32("probes")? as usize),
+        2 => Effort::Frac(c.f32("frac")?),
+        3 => Effort::Auto,
+        t => return Err(WireError::Malformed(format!("unknown effort tag {t}"))),
+    })
+}
+
+fn decode_mode(c: &mut Cur) -> Result<QueryMode, WireError> {
+    Ok(match c.u8("mode")? {
+        0 => QueryMode::Original,
+        1 => QueryMode::Mapped,
+        2 => QueryMode::Routed,
+        t => return Err(WireError::Malformed(format!("unknown query mode {t}"))),
+    })
+}
+
+/// Decode one payload. Public within the crate so fuzz tests can hit the
+/// decoder without a socket.
+pub(crate) fn decode_payload(t: u8, payload: &[u8]) -> Result<Frame, WireError> {
+    let mut c = Cur::new(payload);
+    let frame = match t {
+        tag::SEARCH => {
+            let collection = c.string(MAX_NAME_LEN, "collection name")?;
+            let k = c.u32("k")?;
+            let effort = decode_effort(&mut c)?;
+            let mode = decode_mode(&mut c)?;
+            let deadline_micros = c.u64("deadline")?;
+            let dim = c.u32("query dim")? as usize;
+            let dim = c.count(dim, MAX_DIM, 4, "query dim")?;
+            let mut query = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                query.push(c.f32("query values")?);
+            }
+            Frame::Search(SearchFrame {
+                collection,
+                k,
+                effort,
+                mode,
+                deadline_micros,
+                query,
+            })
+        }
+        tag::HITS => {
+            let n = c.u32("hit count")? as usize;
+            let n = c.count(n, MAX_HITS, 8, "hit count")?;
+            let mut ids = Vec::with_capacity(n);
+            for _ in 0..n {
+                ids.push(c.u32("hit ids")?);
+            }
+            let mut scores = Vec::with_capacity(n);
+            for _ in 0..n {
+                scores.push(c.f32("hit scores")?);
+            }
+            Frame::Hits(HitsFrame {
+                ids,
+                scores,
+                keys_scanned: c.u64("keys_scanned")?,
+                cells_probed: c.u64("cells_probed")?,
+                map_flops: c.u64("map_flops")?,
+                scan_flops: c.u64("scan_flops")?,
+                server_micros: c.u64("server_micros")?,
+            })
+        }
+        tag::ERROR => {
+            let raw = c.u16("error code")?;
+            let code = ErrorCode::from_u16(raw)
+                .ok_or_else(|| WireError::Malformed(format!("unknown error code {raw}")))?;
+            let message = c.string(MAX_MSG_LEN, "error message")?;
+            Frame::Error(ErrorFrame { code, message })
+        }
+        tag::PING => Frame::Ping {
+            token: c.u64("ping token")?,
+        },
+        tag::PONG => Frame::Pong {
+            token: c.u64("pong token")?,
+        },
+        tag::STATS_REQUEST => Frame::StatsRequest,
+        tag::STATS => {
+            let served = c.u64("served")?;
+            let errors = c.u64("errors")?;
+            let overloaded = c.u64("overloaded")?;
+            let expired = c.u64("expired")?;
+            let queue_depth = c.u64("queue_depth")?;
+            let mean_s = c.f64("mean_s")?;
+            let p50_s = c.f64("p50_s")?;
+            let p99_s = c.f64("p99_s")?;
+            let p999_s = c.f64("p999_s")?;
+            let max_s = c.f64("max_s")?;
+            let n = c.u32("collection count")? as usize;
+            // each entry is at least 44 bytes (4-byte name length + five u64s)
+            let n = c.count(n, MAX_COLLECTIONS, 44, "collection count")?;
+            let mut collections = Vec::with_capacity(n);
+            for _ in 0..n {
+                collections.push(CollectionStats {
+                    name: c.string(MAX_NAME_LEN, "collection name")?,
+                    served: c.u64("coll served")?,
+                    errors: c.u64("coll errors")?,
+                    overloaded: c.u64("coll overloaded")?,
+                    expired: c.u64("coll expired")?,
+                    queue_depth: c.u64("coll queue_depth")?,
+                });
+            }
+            Frame::Stats(StatsFrame {
+                served,
+                errors,
+                overloaded,
+                expired,
+                queue_depth,
+                mean_s,
+                p50_s,
+                p99_s,
+                p999_s,
+                max_s,
+                collections,
+            })
+        }
+        t => return Err(WireError::UnknownTag(t)),
+    };
+    c.finish("frame")?;
+    Ok(frame)
+}
+
+/// Validate a frame header, returning `(tag, payload_len)`.
+fn decode_header(h: &[u8; HEADER_LEN]) -> Result<(u8, usize), WireError> {
+    let magic: [u8; 4] = h[0..4].try_into().expect("4 bytes");
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    if h[4] != VERSION {
+        return Err(WireError::BadVersion(h[4]));
+    }
+    let len = u32::from_le_bytes(h[6..10].try_into().expect("4 bytes"));
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::Oversized {
+            what: "frame payload",
+            declared: len as u64,
+            cap: MAX_FRAME_LEN as u64,
+        });
+    }
+    Ok((h[5], len as usize))
+}
+
+fn read_exact_or<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<(), WireError> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Closed
+        } else {
+            WireError::Io(e)
+        }
+    })
+}
+
+/// Blocking read of one frame (client side and tests).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_exact_or(r, &mut header)?;
+    let (t, len) = decode_header(&header)?;
+    let mut payload = vec![0u8; len];
+    read_exact_or(r, &mut payload)?;
+    decode_payload(t, &payload)
+}
+
+/// True when `e` is a read-timeout error (both kinds platforms use).
+pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Server-side frame read with two timescales: wait up to `idle` for the
+/// *first* byte (returning `Ok(None)` on a quiet socket so the caller
+/// can poll its shutdown flag), then require the rest of the frame
+/// within `frame_timeout` (a slow-loris guard — a peer that stalls
+/// mid-frame gets a typed timeout error instead of pinning the
+/// connection thread).
+pub fn read_frame_idle(
+    stream: &mut TcpStream,
+    idle: Duration,
+    frame_timeout: Duration,
+) -> Result<Option<Frame>, WireError> {
+    stream.set_read_timeout(Some(idle.max(Duration::from_millis(1))))?;
+    let mut header = [0u8; HEADER_LEN];
+    match stream.read(&mut header) {
+        Ok(0) => return Err(WireError::Closed),
+        Ok(n) => {
+            stream.set_read_timeout(Some(frame_timeout.max(Duration::from_millis(1))))?;
+            if n < HEADER_LEN {
+                read_exact_or(stream, &mut header[n..])?;
+            }
+        }
+        Err(e) if is_timeout(&e) => return Ok(None),
+        Err(e) => return Err(WireError::Io(e)),
+    }
+    let (t, len) = decode_header(&header)?;
+    stream.set_read_timeout(Some(frame_timeout.max(Duration::from_millis(1))))?;
+    let mut payload = vec![0u8; len];
+    read_exact_or(stream, &mut payload)?;
+    decode_payload(t, &payload).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop_cases;
+    use crate::util::Rng;
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Search(SearchFrame {
+                collection: "docs".into(),
+                k: 10,
+                effort: Effort::Probes(4),
+                mode: QueryMode::Mapped,
+                deadline_micros: 2_000,
+                query: vec![0.25, -1.5, 3.0],
+            }),
+            Frame::Search(SearchFrame {
+                collection: "x".into(),
+                k: 1,
+                effort: Effort::Frac(0.5),
+                mode: QueryMode::Original,
+                deadline_micros: 0,
+                query: vec![],
+            }),
+            Frame::Hits(HitsFrame {
+                ids: vec![7, 3, 9],
+                scores: vec![0.9, 0.5, -0.25],
+                keys_scanned: 123,
+                cells_probed: 4,
+                map_flops: 55,
+                scan_flops: 999,
+                server_micros: 1234,
+            }),
+            Frame::Error(ErrorFrame {
+                code: ErrorCode::Overloaded,
+                message: "queue full".into(),
+            }),
+            Frame::Ping { token: 42 },
+            Frame::Pong { token: 42 },
+            Frame::StatsRequest,
+            Frame::Stats(StatsFrame {
+                served: 10,
+                errors: 1,
+                overloaded: 2,
+                expired: 3,
+                queue_depth: 4,
+                mean_s: 1e-3,
+                p50_s: 0.5e-3,
+                p99_s: 2e-3,
+                p999_s: 3e-3,
+                max_s: 4e-3,
+                collections: vec![CollectionStats {
+                    name: "docs".into(),
+                    served: 10,
+                    errors: 1,
+                    overloaded: 2,
+                    expired: 3,
+                    queue_depth: 4,
+                }],
+            }),
+        ]
+    }
+
+    #[test]
+    fn round_trip_every_frame_type() {
+        for frame in sample_frames() {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &frame).unwrap();
+            let back = read_frame(&mut buf.as_slice()).unwrap();
+            assert_eq!(frame, back, "{frame:?}");
+        }
+    }
+
+    #[test]
+    fn effort_variants_round_trip() {
+        for effort in [
+            Effort::Exhaustive,
+            Effort::Probes(0),
+            Effort::Probes(1 << 20),
+            Effort::Frac(0.0),
+            Effort::Frac(1.0),
+            Effort::Auto,
+        ] {
+            let f = Frame::Search(SearchFrame {
+                collection: "c".into(),
+                k: 3,
+                effort,
+                mode: QueryMode::Original,
+                deadline_micros: 1,
+                query: vec![1.0],
+            });
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &f).unwrap();
+            assert_eq!(read_frame(&mut buf.as_slice()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_and_tag_are_typed() {
+        let frame = Frame::Ping { token: 1 };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        // magic
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(
+            read_frame(&mut bad.as_slice()),
+            Err(WireError::BadMagic(_))
+        ));
+        // version
+        let mut bad = buf.clone();
+        bad[4] = 99;
+        assert!(matches!(
+            read_frame(&mut bad.as_slice()),
+            Err(WireError::BadVersion(99))
+        ));
+        // tag
+        let mut bad = buf.clone();
+        bad[5] = 200;
+        assert!(matches!(
+            read_frame(&mut bad.as_slice()),
+            Err(WireError::UnknownTag(200))
+        ));
+    }
+
+    #[test]
+    fn oversized_declared_lengths_rejected_before_allocation() {
+        // frame payload length over the cap
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.push(VERSION);
+        buf.push(4); // ping
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut buf.as_slice()),
+            Err(WireError::Oversized { .. })
+        ));
+        // query dim larger than the bytes present: must not allocate it
+        let f = Frame::Search(SearchFrame {
+            collection: "c".into(),
+            k: 1,
+            effort: Effort::Auto,
+            mode: QueryMode::Original,
+            deadline_micros: 0,
+            query: vec![1.0, 2.0],
+        });
+        let (t, mut payload) = encode_payload(&f);
+        // the dim field sits 4 bytes before the two query floats
+        let dim_off = payload.len() - 8 - 4;
+        payload[dim_off..dim_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        match decode_payload(t, &payload) {
+            Err(WireError::Oversized { .. }) | Err(WireError::Truncated { .. }) => {}
+            other => panic!("expected typed cap error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let (t, mut payload) = encode_payload(&Frame::Ping { token: 7 });
+        payload.push(0);
+        assert!(matches!(
+            decode_payload(t, &payload),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn closed_and_truncated_streams_are_typed() {
+        assert!(matches!(
+            read_frame(&mut (&[] as &[u8])),
+            Err(WireError::Closed)
+        ));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Ping { token: 3 }).unwrap();
+        for cut in 1..buf.len() {
+            match read_frame(&mut buf[..cut].as_ref()) {
+                Err(_) => {}
+                Ok(f) => panic!("truncated stream decoded to {f:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn fuzz_decoder_never_panics() {
+        // random byte flips and truncations over every frame type, plus
+        // pure-noise payloads under every tag: the decoder must return
+        // a typed result (flips inside float payloads may still decode
+        // Ok) and never panic or over-allocate.
+        let cases = prop_cases(200);
+        let mut rng = Rng::new(0xA317);
+        let frames = sample_frames();
+        for case in 0..cases {
+            let base = &frames[case % frames.len()];
+            let mut buf = Vec::new();
+            write_frame(&mut buf, base).unwrap();
+            let mut mutated = buf.clone();
+            for _ in 0..1 + rng.below(4) {
+                let i = rng.below(mutated.len());
+                mutated[i] ^= 1 << rng.below(8);
+            }
+            if rng.below(3) == 0 {
+                mutated.truncate(rng.below(mutated.len() + 1));
+            }
+            let res = std::panic::catch_unwind(move || {
+                let _ = read_frame(&mut mutated.as_slice());
+            });
+            assert!(res.is_ok(), "decoder panicked on case {case}");
+            // pure noise straight into the payload decoder
+            let tag = (rng.below(10) + 1) as u8;
+            let noise: Vec<u8> = (0..rng.below(64)).map(|_| rng.below(256) as u8).collect();
+            let res = std::panic::catch_unwind(move || {
+                let _ = decode_payload(tag, &noise);
+            });
+            assert!(res.is_ok(), "payload decoder panicked on case {case}");
+        }
+    }
+
+    #[test]
+    fn error_code_round_trip() {
+        for code in [
+            ErrorCode::BadRequest,
+            ErrorCode::UnknownCollection,
+            ErrorCode::DeadlineExpired,
+            ErrorCode::Overloaded,
+            ErrorCode::ShuttingDown,
+            ErrorCode::Unsupported,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::from_u16(code as u16), Some(code));
+        }
+        assert_eq!(ErrorCode::from_u16(0), None);
+        assert_eq!(ErrorCode::from_u16(999), None);
+    }
+}

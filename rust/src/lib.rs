@@ -22,7 +22,11 @@
 //! * [`api::RoutedSearcher`] composes a learned or centroid
 //!   [`coordinator::Router`] with IVF cells (Sec. 4.3);
 //! * the serving [`coordinator`] accepts the same request type over its
-//!   client handle and returns the same cost breakdown.
+//!   client handle and returns the same cost breakdown; its
+//!   [`coordinator::net`] module exposes the same fused batching path
+//!   over TCP — a framed wire protocol with deadline-aware batching,
+//!   bounded admission and multi-tenant catalog routing (`amips serve
+//!   --listen`, [`coordinator::NetClient`]).
 //!
 //! ## The typed build/persist lifecycle
 //!

@@ -21,6 +21,12 @@
 //! amips serve     --catalog DIR [--collection NAME] [--requests N]
 //!                 # serve prebuilt artifacts; collections with a mapper
 //!                 # serve mapped queries (Sec. 4.4) by default
+//! amips serve     --catalog DIR --listen ADDR [--port-file F]
+//!                 [--serve-seconds S] [--queue-cap N] [--max-conns N]
+//!                 # TCP front-end over the whole catalog (AMTP framed
+//!                 # protocol); clients use NetClient or bench_serve
+//! amips probe     --addr HOST:PORT   # wire-protocol health probe:
+//!                 # ping/stats plus malformed-frame robustness checks
 //! amips train     --config <name> [--steps N] [--lr F] [--verbose]   (xla)
 //! amips eval      --config <name> [--steps N]                        (xla)
 //! amips route     --dataset nq-s --config <name> [--topk 1..5]       (xla)
@@ -50,7 +56,9 @@ fn run() -> Result<()> {
         // trained mapper); plain `serve` drives the AOT KeyNet mapper
         // and needs `xla`. `train`/`eval` run the pure-Rust backend by
         // default; a `--config` selects the AOT/PJRT path.
+        Some("serve") if args.has("catalog") && args.has("listen") => cmd_serve_listen(&args),
         Some("serve") if args.has("catalog") => cmd_serve_catalog(&args),
+        Some("probe") => cmd_probe(&args),
         Some("train") if args.has("config") => xla_cmds::cmd_train(&args),
         Some("train") => cmd_train_rust(&args),
         Some("eval") if args.has("config") => xla_cmds::cmd_eval(&args),
@@ -61,7 +69,7 @@ fn run() -> Result<()> {
         None => {
             println!("amips {} — amortized MIPS coordinator", amips::version());
             println!(
-                "commands: list | gen-data | search | build | train | eval | serve --catalog | route | serve"
+                "commands: list | gen-data | search | build | train | eval | serve --catalog [--listen] | probe | route | serve"
             );
             Ok(())
         }
@@ -535,6 +543,177 @@ fn cmd_serve_catalog(args: &Args) -> Result<()> {
         ));
     }
     rep.emit("serve_catalog");
+    Ok(())
+}
+
+/// Serve a whole catalog over TCP: every collection becomes a tenant of
+/// one `NetServer` speaking the AMTP framed protocol (deadline-aware
+/// batching, bounded-queue admission, typed errors). Collections with
+/// an attached mapper serve `mode=mapped` traffic.
+fn cmd_serve_listen(args: &Args) -> Result<()> {
+    use amips::coordinator::net::{NetServer, NetServerConfig};
+    use amips::coordinator::BatchPolicy;
+    use amips::index::Catalog;
+    use std::time::Duration;
+
+    let dir = args.require("catalog")?.to_string();
+    let listen = args.require("listen")?.to_string();
+    let port_file = args.get("port-file").map(str::to_string);
+    let serve_seconds = args.get_u64("serve-seconds", 0)?;
+    let queue_cap = args.get_usize("queue-cap", 1024)?;
+    let max_conns = args.get_usize("max-conns", 256)?;
+    let max_batch = args.get_usize("batch-max", 256)?;
+    let batch_wait_ms = args.get_u64("batch-wait-ms", 2)?;
+    args.reject_unknown()?;
+
+    let catalog = Catalog::open(&dir)?;
+    let cfg = NetServerConfig {
+        policy: BatchPolicy {
+            max_batch: max_batch.max(1),
+            max_wait: Duration::from_millis(batch_wait_ms),
+        },
+        queue_cap: queue_cap.max(1),
+        max_connections: max_conns.max(1),
+        ..NetServerConfig::default()
+    };
+    let server = NetServer::serve_catalog(&catalog, listen.as_str(), cfg)?;
+    let addr = server.local_addr();
+    // announce the resolved address first (":0" binds an ephemeral
+    // port); scripts either parse this line or read --port-file
+    println!("amips serve: listening on {addr}");
+    let names: Vec<&str> = catalog.names();
+    println!("amips serve: collections: {}", names.join(", "));
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    if let Some(pf) = &port_file {
+        std::fs::write(pf, format!("{addr}\n"))?;
+    }
+    if serve_seconds > 0 {
+        std::thread::sleep(Duration::from_secs(serve_seconds));
+    } else {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    let stats = server.stats();
+    server.shutdown();
+    let mut rep = Report::new(&format!("serve --listen {addr} ({} collections)", names.len()));
+    rep.header(&[
+        "served", "errors", "overload", "expired", "p50 ms", "p99 ms", "p999 ms",
+    ]);
+    rep.row(&[
+        stats.served.to_string(),
+        stats.errors.to_string(),
+        stats.overloaded.to_string(),
+        stats.expired.to_string(),
+        format!("{:.2}", stats.p50_s * 1e3),
+        format!("{:.2}", stats.p99_s * 1e3),
+        format!("{:.2}", stats.p999_s * 1e3),
+    ]);
+    for c in &stats.collections {
+        rep.note(format!(
+            "{}: served={} errors={} overloaded={} expired={}",
+            c.name, c.served, c.errors, c.overloaded, c.expired
+        ));
+    }
+    rep.note("graceful shutdown: queues drained, listeners closed");
+    rep.emit("serve_listen");
+    Ok(())
+}
+
+/// Probe a running `amips serve --listen` server: liveness (ping),
+/// stats, and three malformed-frame robustness checks — each must get
+/// a *typed* error reply (never a hang or a dropped byte stream), and
+/// the server must keep serving healthy clients afterwards.
+fn cmd_probe(args: &Args) -> Result<()> {
+    use amips::coordinator::net::wire::{self, ErrorCode};
+    use amips::coordinator::net::{NetClient, NetError};
+    use anyhow::ensure;
+    use std::time::Duration;
+
+    let addr = args.require("addr")?.to_string();
+    args.reject_unknown()?;
+    let timeout = Some(Duration::from_secs(5));
+
+    // 1. liveness
+    let mut client = NetClient::connect(addr.as_str())?;
+    client.set_timeout(timeout)?;
+    client.ping()?;
+    let stats = client.stats()?;
+
+    // 2. malformed-frame probes: each opens a fresh connection (a
+    // decode error rightly desyncs + closes the stream) and expects a
+    // typed Error frame back
+    let mut checks: Vec<(&str, ErrorCode)> = Vec::new();
+    {
+        // garbage magic
+        let mut c = NetClient::connect(addr.as_str())?;
+        c.set_timeout(timeout)?;
+        let reply = c.send_raw(b"NOPE\x01\x04\x00\x00\x00\x00")?;
+        match reply {
+            wire::Frame::Error(e) => checks.push(("bad magic", e.code)),
+            other => anyhow::bail!("bad-magic probe got non-error reply {other:?}"),
+        }
+    }
+    {
+        // oversized declared payload length
+        let mut c = NetClient::connect(addr.as_str())?;
+        c.set_timeout(timeout)?;
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&wire::MAGIC);
+        frame.push(wire::VERSION);
+        frame.push(1); // search tag
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        match c.send_raw(&frame)? {
+            wire::Frame::Error(e) => checks.push(("oversized length", e.code)),
+            other => anyhow::bail!("oversized-length probe got non-error reply {other:?}"),
+        }
+    }
+    {
+        // unknown frame tag
+        let mut c = NetClient::connect(addr.as_str())?;
+        c.set_timeout(timeout)?;
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&wire::MAGIC);
+        frame.push(wire::VERSION);
+        frame.push(200);
+        frame.extend_from_slice(&0u32.to_le_bytes());
+        match c.send_raw(&frame)? {
+            wire::Frame::Error(e) => {
+                ensure!(
+                    e.code == ErrorCode::Unsupported,
+                    "unknown tag should be Unsupported, got {}",
+                    e.code
+                );
+                checks.push(("unknown tag", e.code));
+            }
+            other => anyhow::bail!("unknown-tag probe got non-error reply {other:?}"),
+        }
+    }
+
+    // 3. the server survived every probe
+    client.ping().map_err(|e| match e {
+        NetError::Wire(w) => anyhow::anyhow!("server unhealthy after probes: {w}"),
+        other => anyhow::anyhow!("server unhealthy after probes: {other}"),
+    })?;
+
+    let mut rep = Report::new(&format!("probe {addr}"));
+    rep.header(&["check", "typed reply"]);
+    rep.row(&["ping".into(), "pong".into()]);
+    for (name, code) in &checks {
+        rep.row(&[name.to_string(), code.to_string()]);
+    }
+    rep.row(&["ping after probes".into(), "pong".into()]);
+    rep.note(format!(
+        "server stats: served={} errors={} overloaded={} expired={} queue_depth={} p99={:.2}ms",
+        stats.served,
+        stats.errors,
+        stats.overloaded,
+        stats.expired,
+        stats.queue_depth,
+        stats.p99_s * 1e3
+    ));
+    rep.emit("probe");
     Ok(())
 }
 

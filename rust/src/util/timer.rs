@@ -120,6 +120,37 @@ impl LatencyHistogram {
         }
     }
 
+    /// Largest recorded value in seconds (0 when empty).
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Median latency (bucket-midpoint approximation).
+    pub fn p50_s(&self) -> f64 {
+        self.quantile_s(0.5)
+    }
+
+    /// 99th-percentile latency.
+    pub fn p99_s(&self) -> f64 {
+        self.quantile_s(0.99)
+    }
+
+    /// 99.9th-percentile latency — the serving tail the net front-end
+    /// reports in its `Stats` frame.
+    pub fn p999_s(&self) -> f64 {
+        self.quantile_s(0.999)
+    }
+
+    /// Cheap point-in-time copy (64 counters + 3 scalars, no
+    /// allocation churn beyond one `Vec` clone). Per-connection
+    /// histograms snapshot under their own lock and [`merge`] into a
+    /// server-wide roll-up without holding every lock at once.
+    ///
+    /// [`merge`]: LatencyHistogram::merge
+    pub fn snapshot(&self) -> LatencyHistogram {
+        self.clone()
+    }
+
     /// Approximate quantile from bucket midpoints.
     pub fn quantile_s(&self, q: f64) -> f64 {
         if self.count == 0 {
@@ -177,6 +208,68 @@ mod tests {
         assert!(p50 < p95);
         assert!(p50 > 1e-3 && p50 < 1e-2, "{p50}");
         assert!((h.mean_s() - 5.0e-3).abs() < 1e-3);
+    }
+
+    #[test]
+    fn histogram_quantiles_track_sorted_reference() {
+        // the histogram is log-bucketed (64 buckets over 7 decades →
+        // ~1.29x bucket width), so each quantile must land within one
+        // bucket ratio of the exact sorted-sample quantile
+        let mut rng = crate::util::Rng::new(0xBEEF);
+        let mut h = LatencyHistogram::new();
+        let mut samples = Vec::new();
+        for _ in 0..5000 {
+            // log-uniform over 10us..100ms: exercises many buckets
+            let s = 10f64.powf(-5.0 + 4.0 * rng.uniform());
+            h.record(s);
+            samples.push(s);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let bucket_ratio = 10f64.powf(7.0 / 64.0); // ~1.286
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let exact = samples[((q * (samples.len() - 1) as f64).round() as usize)
+                .min(samples.len() - 1)];
+            let approx = h.quantile_s(q);
+            let ratio = approx / exact;
+            assert!(
+                ratio > 1.0 / (bucket_ratio * bucket_ratio)
+                    && ratio < bucket_ratio * bucket_ratio,
+                "q={q}: approx {approx} vs exact {exact} (ratio {ratio})"
+            );
+        }
+        // named accessors agree with quantile_s
+        assert_eq!(h.p50_s(), h.quantile_s(0.5));
+        assert_eq!(h.p99_s(), h.quantile_s(0.99));
+        assert_eq!(h.p999_s(), h.quantile_s(0.999));
+        // quantiles are monotone and bounded by the recorded max
+        assert!(h.p50_s() <= h.p99_s());
+        assert!(h.p99_s() <= h.p999_s());
+        assert!(h.p999_s() <= h.max_s() * bucket_ratio);
+        assert_eq!(h.max_s(), *samples.last().unwrap());
+    }
+
+    #[test]
+    fn snapshot_then_merge_rolls_up() {
+        // per-connection pattern: snapshot two live histograms, merge
+        // into a roll-up; counts and extremes add up, originals intact
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for i in 1..=100 {
+            a.record(i as f64 * 1e-5);
+            b.record(i as f64 * 1e-4);
+        }
+        let mut roll = LatencyHistogram::new();
+        roll.merge(&a.snapshot());
+        roll.merge(&b.snapshot());
+        assert_eq!(roll.count(), 200);
+        assert_eq!(roll.max_s(), b.max_s());
+        assert!((roll.mean_s() - (a.mean_s() + b.mean_s()) / 2.0).abs() < 1e-12);
+        // merging a snapshot leaves the source untouched
+        assert_eq!(a.count(), 100);
+        // empty histogram reports zeros, not NaN
+        let empty = LatencyHistogram::new();
+        assert_eq!(empty.p999_s(), 0.0);
+        assert_eq!(empty.max_s(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,297 @@
+//! End-to-end tests for the TCP serving subsystem: a real catalog on
+//! disk (one collection with an attached query mapper), a real
+//! `NetServer` on an ephemeral port, real `NetClient` connections.
+//!
+//! The load-bearing claim is bit-identity: a search answered over the
+//! wire must equal the same search run directly against the collection
+//! index — the network layer may batch and reorder, but never change
+//! results. On top of that: typed errors for every client-caused
+//! failure (unknown collection, expired deadline, full queue, garbage
+//! bytes) and a graceful shutdown that leaves no socket hanging.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use amips::api::{Effort, QueryMode};
+use amips::coordinator::net::{
+    ErrorCode, Frame, NetClient, NetError, NetServer, NetServerConfig, SearchOptions, Tenant,
+};
+use amips::coordinator::BatchPolicy;
+use amips::index::ivf::IvfIndex;
+use amips::index::{BuildCtx, Catalog, IndexSpec, VectorIndex};
+use amips::model::{AmortizedModel, RustModel};
+use amips::nn::{ModelKind, NetSpec};
+use amips::tensor::{normalize_rows, Tensor};
+use amips::util::{Rng, TempDir};
+
+const D: usize = 8;
+
+fn unit(shape: &[usize], seed: u64) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+    normalize_rows(&mut t);
+    t
+}
+
+/// Build a two-collection catalog ("docs" = ivf + keynet mapper,
+/// "code" = flat) and reopen it from disk.
+fn catalog_fixture(tmp: &TempDir) -> (Catalog, RustModel) {
+    let root = tmp.join("catalog");
+    let docs_keys = unit(&[240, D], 11);
+    let code_keys = unit(&[160, D], 12);
+    {
+        let mut catalog = Catalog::create(&root).unwrap();
+        let ivf = IndexSpec::default_for("ivf").unwrap().with_nlist(4);
+        catalog
+            .build_collection("docs", &ivf, &docs_keys, &BuildCtx::seeded(13))
+            .unwrap();
+        let flat = IndexSpec::default_for("flat").unwrap();
+        catalog
+            .build_collection("code", &flat, &code_keys, &BuildCtx::seeded(14))
+            .unwrap();
+    }
+    let mapper = RustModel::init(
+        "net.keynet",
+        NetSpec::new(ModelKind::KeyNet, D, 1, 8, 2),
+        15,
+    )
+    .unwrap();
+    Catalog::attach_mapper(&root, "docs", &mapper).unwrap();
+    (Catalog::open(&root).unwrap(), mapper)
+}
+
+#[test]
+fn concurrent_clients_match_direct_search_bit_for_bit() {
+    let tmp = TempDir::new("amips-net-e2e");
+    let (catalog, mapper) = catalog_fixture(&tmp);
+    let server =
+        NetServer::serve_catalog(&catalog, "127.0.0.1:0", NetServerConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let queries = unit(&[12, D], 16);
+    let mapped_expect = mapper.map_queries(&queries).unwrap();
+    let docs = catalog.get("docs").unwrap().index.clone();
+    let code = catalog.get("code").unwrap().index.clone();
+
+    std::thread::scope(|s| {
+        for c in 0..4usize {
+            let (addr, queries, mapped_expect, docs, code) =
+                (&addr, &queries, &mapped_expect, &docs, &code);
+            s.spawn(move || {
+                let mut client = NetClient::connect(addr.as_str()).unwrap();
+                client.set_timeout(Some(Duration::from_secs(20))).unwrap();
+                for i in (c..queries.rows()).step_by(4) {
+                    let q = queries.row(i);
+                    // original mode against both collections
+                    for (name, index) in [("docs", docs), ("code", code)] {
+                        let hits = client
+                            .search(name, q, SearchOptions::top_k(5).effort(Effort::Exhaustive))
+                            .unwrap();
+                        let direct = index.search_effort(q, 5, Effort::Exhaustive);
+                        assert_eq!(hits.ids, direct.ids, "{name} ids, query {i}");
+                        assert_eq!(hits.scores, direct.scores, "{name} scores, query {i}");
+                        assert!(hits.keys_scanned > 0);
+                    }
+                    // mapped mode on the mapper-carrying collection:
+                    // identical to searching the index at the
+                    // model-mapped point
+                    let hits = client
+                        .search(
+                            "docs",
+                            q,
+                            SearchOptions::top_k(5)
+                                .effort(Effort::Exhaustive)
+                                .mode(QueryMode::Mapped),
+                        )
+                        .unwrap();
+                    let direct = docs.search_effort(mapped_expect.row(i), 5, Effort::Exhaustive);
+                    assert_eq!(hits.ids, direct.ids, "mapped ids, query {i}");
+                    assert_eq!(hits.scores, direct.scores, "mapped scores, query {i}");
+                    assert!(hits.map_flops > 0, "mapped search must report map cost");
+                }
+            });
+        }
+    });
+
+    // server-side stats saw the traffic on both collections
+    let stats = server.stats();
+    assert!(stats.served >= 36, "served {} of >= 36", stats.served);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.collections.len(), 2);
+    assert!(stats.p50_s > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn typed_errors_unknown_collection_deadline_and_garbage() {
+    let tmp = TempDir::new("amips-net-errors");
+    let (catalog, _mapper) = catalog_fixture(&tmp);
+    // default policy: max_wait 2ms >> the 1us deadline below
+    let server =
+        NetServer::serve_catalog(&catalog, "127.0.0.1:0", NetServerConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let q = unit(&[1, D], 17);
+
+    let mut client = NetClient::connect(addr.as_str()).unwrap();
+    client.set_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // unknown collection: typed, names what is available
+    let err = client
+        .search("nope", q.row(0), SearchOptions::top_k(3))
+        .unwrap_err();
+    let e = err.server_error().expect("typed server error");
+    assert_eq!(e.code, ErrorCode::UnknownCollection);
+    assert!(e.message.contains("docs") && e.message.contains("code"));
+
+    // an already-expired deadline fast-fails with a typed error (the
+    // batcher's max_wait alone guarantees >1us of queueing)
+    let err = client
+        .search(
+            "docs",
+            q.row(0),
+            SearchOptions::top_k(3).deadline(Duration::from_micros(1)),
+        )
+        .unwrap_err();
+    let e = err.server_error().expect("typed server error");
+    assert_eq!(e.code, ErrorCode::DeadlineExpired);
+
+    // wrong query dimension: typed BadRequest
+    let err = client
+        .search("docs", &[0.0; 3], SearchOptions::top_k(3))
+        .unwrap_err();
+    assert_eq!(err.server_error().unwrap().code, ErrorCode::BadRequest);
+
+    // the connection survived all typed errors
+    client.ping().unwrap();
+
+    // garbage magic bytes: typed reply, then the server closes that
+    // connection — and keeps serving others
+    let mut garbage = NetClient::connect(addr.as_str()).unwrap();
+    garbage.set_timeout(Some(Duration::from_secs(10))).unwrap();
+    match garbage.send_raw(b"NOPE\x01\x04\x00\x00\x00\x00").unwrap() {
+        Frame::Error(e) => assert_eq!(e.code, ErrorCode::BadRequest),
+        other => panic!("wanted a typed error, got {other:?}"),
+    }
+
+    // oversized declared length: typed reply before any allocation
+    let mut oversized = NetClient::connect(addr.as_str()).unwrap();
+    oversized.set_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"AMTP\x01\x01");
+    bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+    match oversized.send_raw(&bytes).unwrap() {
+        Frame::Error(e) => assert_eq!(e.code, ErrorCode::BadRequest),
+        other => panic!("wanted a typed error, got {other:?}"),
+    }
+
+    client.ping().unwrap();
+    let stats = client.stats().unwrap();
+    assert!(stats.errors >= 1, "the dim error is counted per tenant");
+    assert!(stats.expired >= 1, "the deadline failure counts as expired");
+    server.shutdown();
+}
+
+#[test]
+fn full_queue_answers_overloaded_while_admitted_work_succeeds() {
+    // tiny admission queue + serial worker + a corpus big enough that
+    // each exhaustive scan takes real time: concurrent clients must see
+    // both outcomes — admitted requests served, excess typed Overloaded
+    let keys = unit(&[30_000, 16], 18);
+    let index = Arc::new(IvfIndex::build(&keys, 8, 4, 19));
+    let tenant = Tenant::start(
+        "docs",
+        index as Arc<dyn VectorIndex>,
+        None,
+        BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+        },
+        1,
+    )
+    .unwrap();
+    let mut tenants = BTreeMap::new();
+    tenants.insert("docs".to_string(), tenant);
+    let server = NetServer::serve(tenants, "127.0.0.1:0", NetServerConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let queries = unit(&[8, 16], 20);
+
+    let (ok, overloaded, other): (usize, usize, usize) = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for c in 0..8usize {
+            let (addr, queries) = (&addr, &queries);
+            joins.push(s.spawn(move || {
+                let mut client = NetClient::connect(addr.as_str()).unwrap();
+                client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+                let (mut ok, mut over, mut other) = (0usize, 0usize, 0usize);
+                for _ in 0..20 {
+                    match client.search(
+                        "docs",
+                        queries.row(c),
+                        SearchOptions::top_k(3).effort(Effort::Exhaustive),
+                    ) {
+                        Ok(_) => ok += 1,
+                        Err(NetError::Server(e)) if e.code == ErrorCode::Overloaded => over += 1,
+                        Err(_) => other += 1,
+                    }
+                }
+                (ok, over, other)
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).fold(
+            (0, 0, 0),
+            |(a, b, c), (x, y, z)| (a + x, b + y, c + z),
+        )
+    });
+
+    assert_eq!(other, 0, "only success or typed Overloaded are allowed");
+    assert!(ok >= 1, "admitted requests must still be served");
+    assert!(
+        overloaded >= 1,
+        "a cap-1 queue under 8 hammering clients must shed load ({ok} ok)"
+    );
+    let stats = server.stats();
+    assert_eq!(stats.served as usize, ok);
+    assert_eq!(stats.overloaded as usize, overloaded);
+    server.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_and_closes_cleanly() {
+    let tmp = TempDir::new("amips-net-shutdown");
+    let (catalog, _mapper) = catalog_fixture(&tmp);
+    let server =
+        NetServer::serve_catalog(&catalog, "127.0.0.1:0", NetServerConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // traffic before shutdown so there is state to drain
+    let q = unit(&[2, D], 21);
+    let mut client = NetClient::connect(addr.as_str()).unwrap();
+    client.set_timeout(Some(Duration::from_secs(10))).unwrap();
+    client
+        .search("docs", q.row(0), SearchOptions::top_k(3))
+        .unwrap();
+
+    // an idle connection gets a typed ShuttingDown notice (or a clean
+    // close) instead of hanging; shutdown() itself must not deadlock on
+    // the open socket
+    let mut idle = NetClient::connect(addr.as_str()).unwrap();
+    idle.set_timeout(Some(Duration::from_secs(10))).unwrap();
+    server.shutdown();
+
+    match idle.ping() {
+        Ok(()) => panic!("draining server must not answer new pings"),
+        Err(NetError::Server(e)) => assert_eq!(e.code, ErrorCode::ShuttingDown),
+        Err(_) => {} // closed before the ping: also clean
+    }
+
+    // the port is released: fresh connections fail, or at best get a
+    // typed refusal before close
+    match NetClient::connect(addr.as_str()) {
+        Err(_) => {}
+        Ok(mut late) => {
+            late.set_timeout(Some(Duration::from_secs(5))).unwrap();
+            assert!(late.ping().is_err(), "a shut-down server must not serve");
+        }
+    }
+}
