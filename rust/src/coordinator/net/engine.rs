@@ -25,7 +25,7 @@ use std::time::Instant;
 
 use crate::api::{Effort, QueryMap, QueryMode};
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
-use crate::coordinator::net::wire::{CollectionStats, ErrorCode, ErrorFrame, HitsFrame};
+use crate::coordinator::net::wire::{CollectionStats, ErrorCode, ErrorFrame, HitsFrame, MAX_HITS};
 use crate::index::traits::VectorIndex;
 use crate::model::RustModel;
 use crate::tensor::Tensor;
@@ -129,10 +129,9 @@ impl Tenant {
             });
             let batcher = Batcher::new(rx, policy);
             while let Some((batch, _reason)) = batcher.next_batch() {
-                let depth = stats.queue_depth.load(Ordering::Relaxed);
-                stats
-                    .queue_depth
-                    .fetch_sub(batch.len().min(depth), Ordering::Relaxed);
+                // every drained request was counted before its send (see
+                // submit), so an unclamped subtract can never underflow
+                stats.queue_depth.fetch_sub(batch.len(), Ordering::Relaxed);
                 serve_net_batch(batch, index.as_ref(), &map, &stats);
             }
         })?;
@@ -155,16 +154,21 @@ impl Tenant {
         let Some(tx) = guard.as_ref() else {
             return Err(SubmitError::ShuttingDown);
         };
+        // count *before* the send: once the request is in the channel
+        // the worker may drain it at any moment, and its unclamped
+        // decrement must always find this increment already applied
+        self.stats.queue_depth.fetch_add(1, Ordering::Relaxed);
         match tx.try_send(req) {
-            Ok(()) => {
-                self.stats.queue_depth.fetch_add(1, Ordering::Relaxed);
-                Ok(())
-            }
+            Ok(()) => Ok(()),
             Err(TrySendError::Full(_)) => {
+                self.stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
                 self.stats.overloaded.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::Overloaded)
             }
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::ShuttingDown),
+            Err(TrySendError::Disconnected(_)) => {
+                self.stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::ShuttingDown)
+            }
         }
     }
 
@@ -217,7 +221,7 @@ fn serve_net_batch(
     let now = Instant::now();
     // triage before any scan work
     let mut valid: Vec<NetRequest> = Vec::with_capacity(batch.len());
-    for req in batch {
+    for mut req in batch {
         if let Some(dl) = req.deadline {
             if now >= dl {
                 let msg = format!(
@@ -233,6 +237,16 @@ fn serve_net_batch(
             reply_err(&req, stats, ErrorCode::BadRequest, msg);
             continue;
         }
+        // wire-supplied k must be validated before it sizes anything: a
+        // hostile k would otherwise reach TopK::new(k) as an allocation
+        if req.k == 0 || req.k > MAX_HITS {
+            let msg = format!("k {} outside [1, {MAX_HITS}]", req.k);
+            reply_err(&req, stats, ErrorCode::BadRequest, msg);
+            continue;
+        }
+        // an index never returns more than its corpus, so clamping here
+        // changes no result but bounds per-request scratch by the index
+        req.k = req.k.min(index.len().max(1));
         match req.mode {
             QueryMode::Original => valid.push(req),
             QueryMode::Mapped if mapper.is_some() => valid.push(req),
@@ -552,6 +566,20 @@ mod tests {
         let (req, rrx) = request(vec![0.0; 3], 1);
         tenant.submit(req).unwrap();
         assert_eq!(rrx.recv().unwrap().unwrap_err().code, ErrorCode::BadRequest);
+        // hostile k: rejected before it can size any allocation
+        for k in [0usize, MAX_HITS + 1, u32::MAX as usize] {
+            let (req, rrx) = request(vec![0.0; 4], k);
+            tenant.submit(req).unwrap();
+            assert_eq!(
+                rrx.recv().unwrap().unwrap_err().code,
+                ErrorCode::BadRequest,
+                "k={k}"
+            );
+        }
+        // an in-range k larger than the corpus is clamped, not failed
+        let (req, rrx) = request(vec![0.5; 4], 1000);
+        tenant.submit(req).unwrap();
+        assert_eq!(rrx.recv().unwrap().unwrap().ids.len(), 40);
         // mapped mode without a mapper
         let (rtx, rrx) = sync_channel(1);
         tenant
@@ -569,7 +597,7 @@ mod tests {
             rrx.recv().unwrap().unwrap_err().code,
             ErrorCode::Unsupported
         );
-        assert_eq!(tenant.stats().errors.load(Ordering::Relaxed), 2);
+        assert_eq!(tenant.stats().errors.load(Ordering::Relaxed), 5);
         tenant.begin_shutdown();
         tenant.join();
     }

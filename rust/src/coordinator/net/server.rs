@@ -6,8 +6,10 @@
 //!     └── connection thread per client (capped)
 //!           ├── read_frame_idle: idle-poll for the stop flag without
 //!           │   desyncing mid-frame; slow-loris frame timeout
+//!           ├── draining? -> every frame answers ShuttingDown + close
 //!           ├── Ping -> Pong, StatsRequest -> Stats
-//!           └── Search -> Tenant::submit (bounded) -> block on reply
+//!           └── Search -> validate k -> Tenant::submit (bounded) ->
+//!               block on reply
 //!  Tenant (one per catalog collection)
 //!     └── worker thread: Batcher -> deadline triage -> map pass ->
 //!         fused (k, effort) group scans -> per-request replies
@@ -30,7 +32,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::net::engine::{NetRequest, Tenant};
 use crate::coordinator::net::wire::{
-    read_frame_idle, write_frame, ErrorCode, ErrorFrame, Frame, StatsFrame, WireError,
+    read_frame_idle, write_frame, ErrorCode, ErrorFrame, Frame, StatsFrame, WireError, MAX_HITS,
 };
 use crate::index::catalog::Catalog;
 use crate::util::timer::LatencyHistogram;
@@ -51,6 +53,10 @@ pub struct NetServerConfig {
     /// Once a frame has started arriving, how long the rest may take
     /// (slow-loris guard).
     pub frame_timeout: Duration,
+    /// How long [`NetServer::shutdown`] waits for connection threads to
+    /// notice the stop flag before proceeding without them (they exit
+    /// on their own; shutdown just stops blocking on stragglers).
+    pub drain_timeout: Duration,
 }
 
 impl Default for NetServerConfig {
@@ -61,6 +67,7 @@ impl Default for NetServerConfig {
             max_connections: 256,
             idle_timeout: Duration::from_millis(50),
             frame_timeout: Duration::from_secs(2),
+            drain_timeout: Duration::from_secs(10),
         }
     }
 }
@@ -178,9 +185,14 @@ impl NetServer {
             let _ = t.join();
         }
         // accept loop joined => no new connections; connection threads
-        // exit on their next idle poll. Wait for them before closing
-        // tenant queues so a request admitted right now still drains.
-        while self.shared.live_connections.load(Ordering::SeqCst) > 0 {
+        // answer every frame decoded after this point (any type) with
+        // `ShuttingDown` and exit, so waiting is bounded by one frame
+        // cycle — but bound it anyway so a pathological peer can only
+        // delay shutdown, never wedge it.
+        let drain_deadline = Instant::now() + self.shared.cfg.drain_timeout;
+        while self.shared.live_connections.load(Ordering::SeqCst) > 0
+            && Instant::now() < drain_deadline
+        {
             std::thread::sleep(Duration::from_millis(5));
         }
         for tenant in self.shared.tenants.values() {
@@ -202,14 +214,12 @@ impl Drop for NetServer {
 }
 
 fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
-    let mut conn_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
     loop {
         if shared.shutting.load(Ordering::SeqCst) {
             break;
         }
         match listener.accept() {
             Ok((stream, _peer)) => {
-                conn_threads.retain(|t| !t.is_finished());
                 if shared.live_connections.load(Ordering::SeqCst) >= shared.cfg.max_connections {
                     let mut stream = stream;
                     let _ = write_frame(
@@ -223,16 +233,17 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
                 }
                 shared.live_connections.fetch_add(1, Ordering::SeqCst);
                 let shared2 = shared.clone();
-                match std::thread::Builder::new()
+                // detached: shutdown() waits on live_connections with a
+                // bounded drain deadline rather than joining each thread,
+                // so one stuck peer can't wedge the accept-thread join
+                let spawned = std::thread::Builder::new()
                     .name("amips-net-conn".into())
                     .spawn(move || {
                         handle_connection(stream, &shared2);
                         shared2.live_connections.fetch_sub(1, Ordering::SeqCst);
-                    }) {
-                    Ok(t) => conn_threads.push(t),
-                    Err(_) => {
-                        shared.live_connections.fetch_sub(1, Ordering::SeqCst);
-                    }
+                    });
+                if spawned.is_err() {
+                    shared.live_connections.fetch_sub(1, Ordering::SeqCst);
                 }
             }
             Err(e) if crate::coordinator::net::wire::is_timeout(&e) => {
@@ -240,9 +251,6 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
             }
             Err(_) => std::thread::sleep(Duration::from_millis(5)),
         }
-    }
-    for t in conn_threads {
-        let _ = t.join();
     }
 }
 
@@ -279,6 +287,17 @@ fn handle_connection(mut stream: TcpStream, shared: &Shared) {
                 return;
             }
         };
+        // once draining, EVERY frame type gets ShuttingDown and a close
+        // — a client spamming Ping/Stats faster than the idle timeout
+        // must not keep its thread (and thus shutdown()) alive forever
+        if shared.shutting.load(Ordering::SeqCst) {
+            send_error(
+                &mut stream,
+                ErrorCode::ShuttingDown,
+                "server is draining".into(),
+            );
+            return;
+        }
         match frame {
             Frame::Ping { token } => {
                 if write_frame(&mut stream, &Frame::Pong { token }).is_err() {
@@ -291,14 +310,6 @@ fn handle_connection(mut stream: TcpStream, shared: &Shared) {
                 }
             }
             Frame::Search(s) => {
-                if shared.shutting.load(Ordering::SeqCst) {
-                    send_error(
-                        &mut stream,
-                        ErrorCode::ShuttingDown,
-                        "server is draining".into(),
-                    );
-                    return;
-                }
                 let reply = serve_search(s, shared);
                 let frame = match reply {
                     Ok(hits) => Frame::Hits(hits),
@@ -341,6 +352,15 @@ fn serve_search(
             ),
         });
     };
+    // reject a hostile k at admission, before anything downstream can
+    // use it as an allocation size (the tenant triage re-checks for
+    // callers that bypass the wire)
+    if s.k == 0 || s.k as usize > MAX_HITS {
+        return Err(ErrorFrame {
+            code: ErrorCode::BadRequest,
+            message: format!("k {} outside [1, {MAX_HITS}]", s.k),
+        });
+    }
     let enqueued = Instant::now();
     let deadline = if s.deadline_micros > 0 {
         Some(enqueued + Duration::from_micros(s.deadline_micros))

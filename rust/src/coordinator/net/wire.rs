@@ -44,7 +44,9 @@ pub const MAX_NAME_LEN: usize = 256;
 pub const MAX_MSG_LEN: usize = 4096;
 /// Cap on query dimensionality over the wire.
 pub const MAX_DIM: usize = 1 << 20;
-/// Cap on hits per reply.
+/// Cap on hits per reply, and therefore on an admissible request `k`
+/// (the server rejects larger `k` with `BadRequest` before allocating
+/// anything, so every legitimately-admitted reply is encodable).
 pub const MAX_HITS: usize = 1 << 20;
 /// Cap on per-collection stats entries in one `Stats` frame.
 pub const MAX_COLLECTIONS: usize = 4096;
@@ -302,11 +304,16 @@ pub(crate) fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
             tag::SEARCH
         }
         Frame::Hits(h) => {
-            put_u32(&mut b, h.ids.len() as u32);
-            for &id in &h.ids {
+            // enforce the decoder's own caps at encode time: a frame we
+            // emit must be one our decoder accepts (ids/scores lengths
+            // can only disagree through a server bug; emit the prefix
+            // both agree on rather than a self-desyncing frame)
+            let n = h.ids.len().min(h.scores.len()).min(MAX_HITS);
+            put_u32(&mut b, n as u32);
+            for &id in &h.ids[..n] {
                 put_u32(&mut b, id);
             }
-            for &sc in &h.scores {
+            for &sc in &h.scores[..n] {
                 put_f32(&mut b, sc);
             }
             put_u64(&mut b, h.keys_scanned);
@@ -345,8 +352,9 @@ pub(crate) fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
             put_f64(&mut b, s.p99_s);
             put_f64(&mut b, s.p999_s);
             put_f64(&mut b, s.max_s);
-            put_u32(&mut b, s.collections.len() as u32);
-            for c in &s.collections {
+            let nc = s.collections.len().min(MAX_COLLECTIONS);
+            put_u32(&mut b, nc as u32);
+            for c in &s.collections[..nc] {
                 put_str(&mut b, &c.name);
                 put_u64(&mut b, c.served);
                 put_u64(&mut b, c.errors);
@@ -896,6 +904,42 @@ mod tests {
                 let _ = decode_payload(tag, &noise);
             });
             assert!(res.is_ok(), "payload decoder panicked on case {case}");
+        }
+    }
+
+    #[test]
+    fn encoded_hits_always_satisfy_decode_caps() {
+        // over-long hit vectors are truncated at encode time so the
+        // reply stays decodable instead of desyncing the client
+        let big = MAX_HITS + 3;
+        let frame = Frame::Hits(HitsFrame {
+            ids: (0..big as u32).collect(),
+            scores: vec![0.5; big],
+            ..HitsFrame::default()
+        });
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        match read_frame(&mut buf.as_slice()).unwrap() {
+            Frame::Hits(h) => {
+                assert_eq!(h.ids.len(), MAX_HITS);
+                assert_eq!(h.scores.len(), MAX_HITS);
+            }
+            other => panic!("expected hits, got {other:?}"),
+        }
+        // mismatched ids/scores lengths encode the common prefix
+        let frame = Frame::Hits(HitsFrame {
+            ids: vec![1, 2, 3],
+            scores: vec![0.9, 0.8],
+            ..HitsFrame::default()
+        });
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        match read_frame(&mut buf.as_slice()).unwrap() {
+            Frame::Hits(h) => {
+                assert_eq!(h.ids, vec![1, 2]);
+                assert_eq!(h.scores, vec![0.9, 0.8]);
+            }
+            other => panic!("expected hits, got {other:?}"),
         }
     }
 

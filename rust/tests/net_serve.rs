@@ -162,6 +162,15 @@ fn typed_errors_unknown_collection_deadline_and_garbage() {
         .unwrap_err();
     assert_eq!(err.server_error().unwrap().code, ErrorCode::BadRequest);
 
+    // hostile k (would be a ~34 GB TopK allocation if admitted): typed
+    // BadRequest at admission, nothing allocated, connection survives
+    for k in [0usize, (1 << 20) + 1, u32::MAX as usize] {
+        let err = client
+            .search("docs", q.row(0), SearchOptions { k, ..SearchOptions::top_k(1) })
+            .unwrap_err();
+        assert_eq!(err.server_error().unwrap().code, ErrorCode::BadRequest, "k={k}");
+    }
+
     // the connection survived all typed errors
     client.ping().unwrap();
 
@@ -254,6 +263,48 @@ fn full_queue_answers_overloaded_while_admitted_work_succeeds() {
     assert_eq!(stats.served as usize, ok);
     assert_eq!(stats.overloaded as usize, overloaded);
     server.shutdown();
+}
+
+#[test]
+fn shutdown_completes_under_ping_spam() {
+    // a client pinging faster than the idle timeout must not pin its
+    // connection thread: every frame type checks the drain flag, so
+    // shutdown() returns promptly instead of spinning on
+    // live_connections forever
+    let tmp = TempDir::new("amips-net-ping-spam");
+    let (catalog, _mapper) = catalog_fixture(&tmp);
+    let server =
+        NetServer::serve_catalog(&catalog, "127.0.0.1:0", NetServerConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut client = NetClient::connect(addr.as_str()).unwrap();
+            client.set_timeout(Some(Duration::from_secs(10))).unwrap();
+            client.ping().unwrap();
+            ready_tx.send(()).unwrap();
+            // hammer pings until the server starts draining
+            loop {
+                match client.ping() {
+                    Ok(()) => {}
+                    Err(NetError::Server(e)) => {
+                        assert_eq!(e.code, ErrorCode::ShuttingDown);
+                        break;
+                    }
+                    Err(_) => break, // closed under us: also clean
+                }
+            }
+        });
+        ready_rx.recv().unwrap();
+        let start = std::time::Instant::now();
+        server.shutdown();
+        assert!(
+            start.elapsed() < Duration::from_secs(8),
+            "shutdown stalled {}s against a ping-spamming client",
+            start.elapsed().as_secs()
+        );
+    });
 }
 
 #[test]
