@@ -1,0 +1,344 @@
+//! §Churn: open-loop load generator for *mutable* collections over the
+//! TCP front-end. Poisson arrivals mix searches, inserts and deletes
+//! across several blocking [`NetClient`] connections while a background
+//! thread issues periodic `Compact` frames, so generation swaps happen
+//! under live traffic. Two correctness gates ride along with the
+//! latency numbers:
+//!
+//!   * zero tombstone violations — a search must never return an id the
+//!     same client has already seen acknowledged as deleted (ids are
+//!     never reused, so any reappearance is a masking bug);
+//!   * at least one search must succeed (an all-error run is a failed
+//!     deployment, not an empty report).
+//!
+//! Reports per-op counts + search latency quantiles and emits
+//! machine-readable `BENCH_churn.json`.
+//!
+//! Knobs (env):
+//!   AMIPS_CHURN_ADDR        target a running `amips serve --listen`
+//!                           server instead of the in-process default
+//!   AMIPS_CHURN_COLLECTION  collection name (default "docs")
+//!   AMIPS_CHURN_N/_D        initial corpus size (default 4096 x 32)
+//!   AMIPS_CHURN_OPS         offered load, ops/s (default 1500)
+//!   AMIPS_CHURN_SECONDS     run length (default 3)
+//!   AMIPS_CHURN_CLIENTS     connections (default 4)
+//!   AMIPS_CHURN_COMPACT_MS  explicit compact period (default 500)
+
+use amips::api::Effort;
+use amips::bench_support::fixtures;
+use amips::bench_support::report::{JsonRows, JsonVal, Report};
+use amips::coordinator::net::{NetClient, NetServer, NetServerConfig, SearchOptions};
+use amips::index::{IndexSpec, MutableCollection};
+use amips::tensor::{normalize_rows, Tensor};
+use amips::util::{Rng, TempDir};
+use anyhow::Result;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Exact quantile over a sorted sample (nearest-rank).
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((q * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
+    sorted[i]
+}
+
+#[derive(Default)]
+struct ClientOutcome {
+    search_latencies_s: Vec<f64>,
+    searches_ok: usize,
+    inserts_ok: usize,
+    deletes_ok: usize,
+    rows_inserted: usize,
+    retryable: usize,
+    other_errors: usize,
+    violations: usize,
+}
+
+fn main() -> Result<()> {
+    let external_addr = std::env::var("AMIPS_CHURN_ADDR").ok();
+    let collection =
+        std::env::var("AMIPS_CHURN_COLLECTION").unwrap_or_else(|_| "docs".to_string());
+    let n = env_usize("AMIPS_CHURN_N", 4096);
+    let d = env_usize("AMIPS_CHURN_D", 32);
+    let ops = env_f64("AMIPS_CHURN_OPS", 1500.0).max(1.0);
+    let seconds = env_f64("AMIPS_CHURN_SECONDS", 3.0).max(0.1);
+    let clients = env_usize("AMIPS_CHURN_CLIENTS", 4).max(1);
+    let compact_ms = env_usize("AMIPS_CHURN_COMPACT_MS", 500).max(1);
+    let seed = 0xC4u64;
+
+    // in-process default: one mutable collection seeded with the shared
+    // synthetic corpus, served by the same NetServer the CLI uses (its
+    // tenant worker handles searches, the mutable map handles writes)
+    let _tmp; // keeps the collection directory alive for the run
+    let (server, addr) = match &external_addr {
+        Some(a) => {
+            _tmp = None::<TempDir>;
+            (None, a.clone())
+        }
+        None => {
+            let tmp = TempDir::new("amips-churn");
+            let dir = tmp.join("c.seg");
+            let spec = IndexSpec::default_for("ivf")?.with_nlist(fixtures::default_nlist(n));
+            let coll = Arc::new(MutableCollection::create(&dir, spec, d, seed)?);
+            coll.insert(&fixtures::synth_keys(n, d, seed))?;
+            coll.commit()?;
+            let tenant = amips::coordinator::net::Tenant::start(
+                &collection,
+                coll.clone() as Arc<dyn amips::index::VectorIndex>,
+                None,
+                amips::coordinator::BatchPolicy::default(),
+                1024,
+            )?;
+            let mut tenants = std::collections::BTreeMap::new();
+            tenants.insert(collection.clone(), tenant);
+            let mut mutables = std::collections::BTreeMap::new();
+            mutables.insert(collection.clone(), coll);
+            let server = NetServer::serve_mutable(
+                tenants,
+                mutables,
+                "127.0.0.1:0",
+                NetServerConfig::default(),
+            )?;
+            let addr = server.local_addr().to_string();
+            _tmp = Some(tmp);
+            (Some(server), addr)
+        }
+    };
+
+    // unit-norm gaussian query pool + per-client insert material
+    let n_queries = 256usize;
+    let mut pool = Tensor::zeros(&[n_queries, d]);
+    Rng::new(seed ^ 1).fill_normal(pool.data_mut(), 1.0);
+    normalize_rows(&mut pool);
+
+    // Poisson arrival schedule shared by all op kinds; client c takes
+    // arrivals c, c+C, ... (thinned Poisson stays Poisson)
+    let total = ((ops * seconds).round() as usize).max(1);
+    let mut arrivals = Vec::with_capacity(total);
+    {
+        let mut rng = Rng::new(seed ^ 2);
+        let mut t = 0.0f64;
+        for _ in 0..total {
+            t += -(1.0 - rng.uniform()).ln() / ops;
+            arrivals.push(t);
+        }
+    }
+    let opts = SearchOptions::top_k(10).effort(Effort::Exhaustive);
+
+    println!(
+        "bench_churn: {total} mixed ops at {ops:.0} ops/s over {clients} connections -> {addr} (compact every {compact_ms}ms)"
+    );
+    let t0 = Instant::now();
+    let stop_compactor = Arc::new(AtomicBool::new(false));
+    let compactor = {
+        let (addr, collection, stop) = (addr.clone(), collection.clone(), stop_compactor.clone());
+        std::thread::spawn(move || -> (usize, usize) {
+            let Ok(mut client) = NetClient::connect(addr.as_str()) else {
+                return (0, 1);
+            };
+            client.set_timeout(Some(Duration::from_secs(60))).ok();
+            let (mut passes, mut failures) = (0usize, 0usize);
+            while !stop.load(Ordering::Acquire) {
+                std::thread::sleep(Duration::from_millis(compact_ms as u64));
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+                match client.compact(&collection) {
+                    Ok(_) => passes += 1,
+                    Err(_) => failures += 1,
+                }
+            }
+            (passes, failures)
+        })
+    };
+
+    let outcomes: Vec<ClientOutcome> = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let (addr, collection, arrivals, pool) = (&addr, &collection, &arrivals, &pool);
+            joins.push(s.spawn(move || -> Result<ClientOutcome> {
+                let mut client = NetClient::connect(addr.as_str())?;
+                client.set_timeout(Some(Duration::from_secs(30)))?;
+                let mut rng = Rng::new(seed ^ (0x10 + c as u64));
+                let mut out = ClientOutcome::default();
+                // ids this client inserted and still believes live /
+                // has seen acknowledged as deleted
+                let mut own_live: Vec<u32> = Vec::new();
+                let mut own_deleted: HashSet<u32> = HashSet::new();
+                for i in (c..arrivals.len()).step_by(clients) {
+                    let scheduled = t0 + Duration::from_secs_f64(arrivals[i]);
+                    let now = Instant::now();
+                    if scheduled > now {
+                        std::thread::sleep(scheduled - now);
+                    }
+                    // 60% search / 25% insert / 15% delete
+                    let dice = rng.below(20);
+                    if dice < 12 {
+                        let q = pool.row(i % pool.rows());
+                        match client.search(collection, q, opts) {
+                            Ok(hits) => {
+                                out.searches_ok += 1;
+                                out.search_latencies_s
+                                    .push(scheduled.elapsed().as_secs_f64());
+                                // the correctness gate: a deleted id in
+                                // the results is a tombstone-masking bug
+                                for id in &hits.ids {
+                                    if own_deleted.contains(id) {
+                                        out.violations += 1;
+                                    }
+                                }
+                            }
+                            Err(e) if e.is_retryable() => out.retryable += 1,
+                            Err(_) => out.other_errors += 1,
+                        }
+                    } else if dice < 17 || own_live.is_empty() {
+                        let rows = 1 + rng.below(4);
+                        let mut vecs = Tensor::zeros(&[rows, d]);
+                        rng.fill_normal(vecs.data_mut(), 1.0);
+                        normalize_rows(&mut vecs);
+                        match client.insert(collection, &vecs) {
+                            Ok(m) => {
+                                out.inserts_ok += 1;
+                                out.rows_inserted += m.ids.len();
+                                own_live.extend(m.ids);
+                            }
+                            Err(e) if e.is_retryable() => out.retryable += 1,
+                            Err(_) => out.other_errors += 1,
+                        }
+                    } else {
+                        let take = (1 + rng.below(3)).min(own_live.len());
+                        let ids: Vec<u32> =
+                            (0..take).map(|_| own_live.swap_remove(rng.below(own_live.len()))).collect();
+                        match client.delete(collection, &ids) {
+                            Ok(_) => {
+                                out.deletes_ok += 1;
+                                own_deleted.extend(ids);
+                            }
+                            Err(e) if e.is_retryable() => out.retryable += 1,
+                            // on failure the delete may or may not have
+                            // landed server-side, so the ids go to
+                            // neither set: not live (already removed),
+                            // not deleted (can't claim a violation)
+                            Err(_) => out.other_errors += 1,
+                        }
+                    }
+                }
+                Ok(out)
+            }));
+        }
+        joins
+            .into_iter()
+            .map(|j| j.join().expect("client thread panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    stop_compactor.store(true, Ordering::Release);
+    let (compact_passes, compact_failures) = compactor.join().expect("compactor thread panicked");
+
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut sum = ClientOutcome::default();
+    for o in outcomes {
+        latencies.extend(o.search_latencies_s);
+        sum.searches_ok += o.searches_ok;
+        sum.inserts_ok += o.inserts_ok;
+        sum.deletes_ok += o.deletes_ok;
+        sum.rows_inserted += o.rows_inserted;
+        sum.retryable += o.retryable;
+        sum.other_errors += o.other_errors;
+        sum.violations += o.violations;
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p99, p999) = (
+        quantile(&latencies, 0.5),
+        quantile(&latencies, 0.99),
+        quantile(&latencies, 0.999),
+    );
+    let achieved = (sum.searches_ok + sum.inserts_ok + sum.deletes_ok) as f64 / wall;
+
+    let mut rep = Report::new(&format!(
+        "bench_churn: open-loop Poisson {ops:.0} ops/s x {seconds}s, {clients} conns ({collection})"
+    ));
+    rep.header(&[
+        "searches",
+        "inserts",
+        "deletes",
+        "compacts",
+        "violations",
+        "retry",
+        "errors",
+        "p50 ms",
+        "p99 ms",
+    ]);
+    rep.row(&[
+        sum.searches_ok.to_string(),
+        format!("{} ({} rows)", sum.inserts_ok, sum.rows_inserted),
+        sum.deletes_ok.to_string(),
+        compact_passes.to_string(),
+        sum.violations.to_string(),
+        sum.retryable.to_string(),
+        (sum.other_errors + compact_failures).to_string(),
+        format!("{:.2}", p50 * 1e3),
+        format!("{:.2}", p99 * 1e3),
+    ]);
+    rep.note("violations = acknowledged-deleted ids that reappeared in search results (must be 0)");
+    rep.note("search latency measured from the scheduled Poisson arrival (open-loop)");
+    rep.emit("bench_churn");
+
+    let mut json = JsonRows::new("churn");
+    json.push(&[
+        ("row", JsonVal::S("summary".into())),
+        ("ops_target", JsonVal::F(ops)),
+        ("ops_achieved", JsonVal::F(achieved)),
+        ("searches_ok", JsonVal::I(sum.searches_ok as u64)),
+        ("inserts_ok", JsonVal::I(sum.inserts_ok as u64)),
+        ("rows_inserted", JsonVal::I(sum.rows_inserted as u64)),
+        ("deletes_ok", JsonVal::I(sum.deletes_ok as u64)),
+        ("compact_passes", JsonVal::I(compact_passes as u64)),
+        ("violations", JsonVal::I(sum.violations as u64)),
+        ("retryable", JsonVal::I(sum.retryable as u64)),
+        ("errors", JsonVal::I((sum.other_errors + compact_failures) as u64)),
+        ("clients", JsonVal::I(clients as u64)),
+    ]);
+    for (name, v) in [("p50", p50), ("p99", p99), ("p999", p999)] {
+        json.push(&[
+            ("row", JsonVal::S("quantile".into())),
+            ("quantile", JsonVal::S(name.into())),
+            ("search_latency_ms", JsonVal::F(v * 1e3)),
+        ]);
+    }
+    json.emit();
+
+    if let Some(server) = server {
+        server.shutdown();
+    }
+    if sum.searches_ok == 0 {
+        eprintln!("bench_churn: no search succeeded");
+        std::process::exit(1);
+    }
+    if sum.violations > 0 {
+        eprintln!(
+            "bench_churn: {} tombstoned ids reappeared in search results",
+            sum.violations
+        );
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -4,14 +4,21 @@
 //! request/reply (the protocol is strictly alternating per connection);
 //! open several clients for concurrency — the server batches across
 //! connections, which is where the fused-scan amortization comes from.
+//!
+//! A draining server answers every frame with `ShuttingDown`; the
+//! client surfaces that as the distinct, retryable
+//! [`NetError::Draining`] so callers can reconnect elsewhere (or later)
+//! instead of treating the drain window as a hard failure.
 
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use crate::api::{Effort, QueryMode};
 use crate::coordinator::net::wire::{
-    read_frame, write_frame, ErrorFrame, Frame, HitsFrame, SearchFrame, StatsFrame, WireError,
+    read_frame, write_frame, CompactFrame, ErrorCode, ErrorFrame, Frame, HitsFrame, MutateFrame,
+    MutateOp, MutatedFrame, SearchFrame, StatsFrame, WireError, MAX_FRAME_LEN, MAX_HITS,
 };
+use crate::tensor::Tensor;
 
 /// Client-side failure: a transport/protocol error, a typed server
 /// error reply, or an unexpected frame type.
@@ -21,6 +28,10 @@ pub enum NetError {
     Wire(WireError),
     /// The server replied with a typed error frame.
     Server(ErrorFrame),
+    /// The server is draining for shutdown (`ShuttingDown` reply). The
+    /// request was *not* served; retry against another replica or after
+    /// the restart completes.
+    Draining(ErrorFrame),
     /// The server replied with a frame that doesn't answer the request.
     Unexpected(&'static str),
 }
@@ -30,6 +41,7 @@ impl std::fmt::Display for NetError {
         match self {
             NetError::Wire(e) => write!(f, "wire error: {e}"),
             NetError::Server(e) => write!(f, "server error [{}]: {}", e.code, e.message),
+            NetError::Draining(e) => write!(f, "server draining (retryable): {}", e.message),
             NetError::Unexpected(what) => write!(f, "unexpected reply frame: {what}"),
         }
     }
@@ -50,11 +62,32 @@ impl From<std::io::Error> for NetError {
 }
 
 impl NetError {
-    /// The server's error frame, when that's what this is.
+    /// Split a server error reply into the retryable drain case and
+    /// everything else.
+    fn from_reply(e: ErrorFrame) -> NetError {
+        if e.code == ErrorCode::ShuttingDown {
+            NetError::Draining(e)
+        } else {
+            NetError::Server(e)
+        }
+    }
+
+    /// The server's error frame, when that's what this is (including
+    /// the drain reply).
     pub fn server_error(&self) -> Option<&ErrorFrame> {
         match self {
-            NetError::Server(e) => Some(e),
+            NetError::Server(e) | NetError::Draining(e) => Some(e),
             _ => None,
+        }
+    }
+
+    /// True when retrying the same request (against another replica or
+    /// after a backoff) can succeed without changing it.
+    pub fn is_retryable(&self) -> bool {
+        match self {
+            NetError::Draining(_) => true,
+            NetError::Server(e) => e.code == ErrorCode::Overloaded,
+            _ => false,
         }
     }
 }
@@ -145,7 +178,7 @@ impl NetClient {
         });
         match self.round_trip(&frame)? {
             Frame::Hits(h) => Ok(h),
-            Frame::Error(e) => Err(NetError::Server(e)),
+            Frame::Error(e) => Err(NetError::from_reply(e)),
             _ => Err(NetError::Unexpected("search wants Hits or Error")),
         }
     }
@@ -157,7 +190,7 @@ impl NetClient {
         match self.round_trip(&Frame::Ping { token })? {
             Frame::Pong { token: t } if t == token => Ok(()),
             Frame::Pong { .. } => Err(NetError::Unexpected("pong token mismatch")),
-            Frame::Error(e) => Err(NetError::Server(e)),
+            Frame::Error(e) => Err(NetError::from_reply(e)),
             _ => Err(NetError::Unexpected("ping wants Pong")),
         }
     }
@@ -167,8 +200,93 @@ impl NetClient {
     pub fn stats(&mut self) -> Result<StatsFrame, NetError> {
         match self.round_trip(&Frame::StatsRequest)? {
             Frame::Stats(s) => Ok(s),
-            Frame::Error(e) => Err(NetError::Server(e)),
+            Frame::Error(e) => Err(NetError::from_reply(e)),
             _ => Err(NetError::Unexpected("stats wants Stats")),
+        }
+    }
+
+    /// Check a mutation's size against the wire caps *before* sending,
+    /// so an oversized batch is a typed local error instead of a frame
+    /// the server rejects (or a desynced stream).
+    fn check_mutation_size(n_ids: usize, n_floats: usize) -> Result<(), NetError> {
+        if n_ids > MAX_HITS {
+            return Err(NetError::Wire(WireError::Oversized {
+                what: "mutation payload",
+                declared: n_ids as u64,
+                cap: MAX_HITS as u64,
+            }));
+        }
+        // conservative frame-size bound: 4 bytes per id/float plus
+        // generous header room
+        let bytes = 4 * (n_ids as u64 + n_floats as u64) + 1024;
+        if bytes > MAX_FRAME_LEN as u64 {
+            return Err(NetError::Wire(WireError::Oversized {
+                what: "mutation payload",
+                declared: bytes,
+                cap: MAX_FRAME_LEN as u64,
+            }));
+        }
+        Ok(())
+    }
+
+    fn mutate(&mut self, frame: MutateFrame) -> Result<MutatedFrame, NetError> {
+        Self::check_mutation_size(frame.ids.len(), frame.vectors.len())?;
+        match self.round_trip(&Frame::Mutate(frame))? {
+            Frame::Mutated(m) => Ok(m),
+            Frame::Error(e) => Err(NetError::from_reply(e)),
+            _ => Err(NetError::Unexpected("mutate wants Mutated or Error")),
+        }
+    }
+
+    /// Append `vecs` (rows × dim) to a mutable collection; returns the
+    /// assigned ids (in row order) plus post-mutation len/generation.
+    pub fn insert(&mut self, collection: &str, vecs: &Tensor) -> Result<MutatedFrame, NetError> {
+        self.mutate(MutateFrame {
+            collection: collection.to_string(),
+            op: MutateOp::Insert,
+            ids: Vec::new(),
+            dim: vecs.shape().last().copied().unwrap_or(0) as u32,
+            vectors: vecs.data().to_vec(),
+        })
+    }
+
+    /// Replace-or-create: `ids[i]` gets row `i` of `vecs`. The reply
+    /// echoes the ids.
+    pub fn upsert(
+        &mut self,
+        collection: &str,
+        ids: &[u32],
+        vecs: &Tensor,
+    ) -> Result<MutatedFrame, NetError> {
+        self.mutate(MutateFrame {
+            collection: collection.to_string(),
+            op: MutateOp::Upsert,
+            ids: ids.to_vec(),
+            dim: vecs.shape().last().copied().unwrap_or(0) as u32,
+            vectors: vecs.data().to_vec(),
+        })
+    }
+
+    /// Tombstone `ids` (idempotent; unknown ids are ignored server-side).
+    pub fn delete(&mut self, collection: &str, ids: &[u32]) -> Result<MutatedFrame, NetError> {
+        self.mutate(MutateFrame {
+            collection: collection.to_string(),
+            op: MutateOp::Delete,
+            ids: ids.to_vec(),
+            dim: 0,
+            vectors: Vec::new(),
+        })
+    }
+
+    /// Fold the collection's delta + tombstones into a fresh sealed
+    /// generation (blocks until the new generation is committed).
+    pub fn compact(&mut self, collection: &str) -> Result<MutatedFrame, NetError> {
+        match self.round_trip(&Frame::Compact(CompactFrame {
+            collection: collection.to_string(),
+        }))? {
+            Frame::Mutated(m) => Ok(m),
+            Frame::Error(e) => Err(NetError::from_reply(e)),
+            _ => Err(NetError::Unexpected("compact wants Mutated or Error")),
         }
     }
 

@@ -21,5 +21,6 @@ pub use client::{NetClient, NetError, SearchOptions};
 pub use engine::{NetReply, NetRequest, SubmitError, Tenant, TenantStats};
 pub use server::{NetServer, NetServerConfig};
 pub use wire::{
-    CollectionStats, ErrorCode, ErrorFrame, Frame, HitsFrame, SearchFrame, StatsFrame, WireError,
+    CollectionStats, CompactFrame, ErrorCode, ErrorFrame, Frame, HitsFrame, MutateFrame, MutateOp,
+    MutatedFrame, SearchFrame, StatsFrame, WireError,
 };

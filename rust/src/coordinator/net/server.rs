@@ -8,8 +8,12 @@
 //!           │   desyncing mid-frame; slow-loris frame timeout
 //!           ├── draining? -> every frame answers ShuttingDown + close
 //!           ├── Ping -> Pong, StatsRequest -> Stats
-//!           └── Search -> validate k -> Tenant::submit (bounded) ->
-//!               block on reply
+//!           ├── Search -> validate k -> Tenant::submit (bounded) ->
+//!           │   block on reply
+//!           └── Mutate/Compact -> route to the mutable collection,
+//!               apply on the connection thread (the collection's own
+//!               mutation mutex serializes writers; searches keep
+//!               serving the old generation until the swap commits)
 //!  Tenant (one per catalog collection)
 //!     └── worker thread: Batcher -> deadline triage -> map pass ->
 //!         fused (k, effort) group scans -> per-request replies
@@ -32,9 +36,13 @@ use anyhow::{Context, Result};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::net::engine::{NetRequest, Tenant};
 use crate::coordinator::net::wire::{
-    read_frame_idle, write_frame, ErrorCode, ErrorFrame, Frame, StatsFrame, WireError, MAX_HITS,
+    read_frame_idle, write_frame, ErrorCode, ErrorFrame, Frame, MutateFrame, MutateOp,
+    MutatedFrame, StatsFrame, WireError, MAX_HITS,
 };
 use crate::index::catalog::Catalog;
+use crate::index::segment::{Compactor, CompactorConfig, MutableCollection};
+use crate::index::VectorIndex;
+use crate::tensor::Tensor;
 use crate::util::timer::LatencyHistogram;
 
 /// Tuning knobs for the TCP front-end.
@@ -74,6 +82,11 @@ impl Default for NetServerConfig {
 
 struct Shared {
     tenants: BTreeMap<String, Arc<Tenant>>,
+    /// Mutable collections by name (a subset of `tenants`' names):
+    /// searches go through the tenant worker like any collection, while
+    /// Mutate/Compact frames route here. The collection's own mutation
+    /// mutex serializes writers, so connection threads apply directly.
+    mutables: BTreeMap<String, Arc<MutableCollection>>,
     shutting: AtomicBool,
     live_connections: AtomicUsize,
     cfg: NetServerConfig,
@@ -109,6 +122,9 @@ pub struct NetServer {
     shared: Arc<Shared>,
     local_addr: SocketAddr,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// One background compaction worker per mutable collection
+    /// (stopped and joined by [`NetServer::shutdown`] / drop).
+    compactors: Vec<Compactor>,
 }
 
 impl NetServer {
@@ -122,6 +138,7 @@ impl NetServer {
         cfg: NetServerConfig,
     ) -> Result<NetServer> {
         let mut tenants = BTreeMap::new();
+        let mut mutables = BTreeMap::new();
         for entry in catalog.entries() {
             let tenant = Tenant::start(
                 &entry.name,
@@ -132,15 +149,41 @@ impl NetServer {
             )
             .with_context(|| format!("starting worker for collection '{}'", entry.name))?;
             tenants.insert(entry.name.clone(), tenant);
+            if let Some(coll) = &entry.mutable {
+                mutables.insert(entry.name.clone(), coll.clone());
+            }
         }
         anyhow::ensure!(!tenants.is_empty(), "catalog has no collections to serve");
-        NetServer::serve(tenants, addr, cfg)
+        let mut server = NetServer::serve_mutable(tenants, mutables, addr, cfg)?;
+        // one background compaction worker per mutable collection; a
+        // worker only ever calls `compact()`, which swaps generations
+        // under a brief write lock, so searches are never blocked
+        for coll in server.shared.mutables.values() {
+            server
+                .compactors
+                .push(Compactor::spawn(coll.clone(), CompactorConfig::default())?);
+        }
+        Ok(server)
     }
 
     /// Serve an explicit tenant map (the catalog-free entry point used
-    /// by tests and embedded setups).
+    /// by tests and embedded setups). Mutate/Compact frames answer
+    /// `Unsupported` — use [`NetServer::serve_mutable`] to accept them.
     pub fn serve(
         tenants: BTreeMap<String, Arc<Tenant>>,
+        addr: impl ToSocketAddrs,
+        cfg: NetServerConfig,
+    ) -> Result<NetServer> {
+        NetServer::serve_mutable(tenants, BTreeMap::new(), addr, cfg)
+    }
+
+    /// [`NetServer::serve`] plus a map of mutable collections that
+    /// accept Mutate/Compact frames. Every mutable name should also be
+    /// a tenant (that is what serves its searches); no compaction
+    /// workers are spawned here — callers own that policy.
+    pub fn serve_mutable(
+        tenants: BTreeMap<String, Arc<Tenant>>,
+        mutables: BTreeMap<String, Arc<MutableCollection>>,
         addr: impl ToSocketAddrs,
         cfg: NetServerConfig,
     ) -> Result<NetServer> {
@@ -150,6 +193,7 @@ impl NetServer {
         listener.set_nonblocking(true)?;
         let shared = Arc::new(Shared {
             tenants,
+            mutables,
             shutting: AtomicBool::new(false),
             live_connections: AtomicUsize::new(0),
             cfg,
@@ -162,6 +206,7 @@ impl NetServer {
             shared,
             local_addr,
             accept_thread: Some(accept_thread),
+            compactors: Vec::new(),
         })
     }
 
@@ -200,6 +245,16 @@ impl NetServer {
         }
         for tenant in self.shared.tenants.values() {
             tenant.join();
+        }
+        // stop compaction workers, then seal whatever delta state is
+        // left so a restart reopens everything this process accepted
+        for c in self.compactors.drain(..) {
+            c.stop();
+        }
+        for (name, coll) in &self.shared.mutables {
+            if let Err(e) = coll.commit() {
+                eprintln!("amips serve: final commit of '{name}' failed: {e:#}");
+            }
         }
     }
 }
@@ -319,8 +374,30 @@ fn handle_connection(mut stream: TcpStream, shared: &Shared) {
                     return;
                 }
             }
+            Frame::Mutate(m) => {
+                let frame = match serve_mutate(m, shared) {
+                    Ok(done) => Frame::Mutated(done),
+                    Err(e) => Frame::Error(e),
+                };
+                if write_frame(&mut stream, &frame).is_err() {
+                    return;
+                }
+            }
+            Frame::Compact(cf) => {
+                let frame = match serve_compact(&cf.collection, shared) {
+                    Ok(done) => Frame::Mutated(done),
+                    Err(e) => Frame::Error(e),
+                };
+                if write_frame(&mut stream, &frame).is_err() {
+                    return;
+                }
+            }
             // server-to-client frames arriving here are protocol abuse
-            Frame::Hits(_) | Frame::Error(_) | Frame::Pong { .. } | Frame::Stats(_) => {
+            Frame::Hits(_)
+            | Frame::Error(_)
+            | Frame::Pong { .. }
+            | Frame::Stats(_)
+            | Frame::Mutated(_) => {
                 send_error(
                     &mut stream,
                     ErrorCode::BadRequest,
@@ -397,4 +474,100 @@ fn serve_search(
             message: "worker dropped the request".into(),
         }),
     }
+}
+
+/// Find the named mutable collection, distinguishing "immutable" from
+/// "unknown" so clients get an actionable error.
+fn find_mutable<'a>(
+    name: &str,
+    shared: &'a Shared,
+) -> Result<&'a Arc<MutableCollection>, ErrorFrame> {
+    match shared.mutables.get(name) {
+        Some(coll) => Ok(coll),
+        None if shared.tenants.contains_key(name) => Err(ErrorFrame {
+            code: ErrorCode::Unsupported,
+            message: format!("collection '{name}' is immutable (built artifact, not .seg)"),
+        }),
+        None => Err(ErrorFrame {
+            code: ErrorCode::UnknownCollection,
+            message: format!("no collection '{name}'"),
+        }),
+    }
+}
+
+/// Apply one mutation frame on the connection thread. The collection's
+/// internal mutation mutex serializes concurrent writers per collection;
+/// searches proceed under the read lock throughout.
+fn serve_mutate(m: MutateFrame, shared: &Shared) -> Result<MutatedFrame, ErrorFrame> {
+    let coll = find_mutable(&m.collection, shared)?;
+    let bad = |message: String| ErrorFrame {
+        code: ErrorCode::BadRequest,
+        message,
+    };
+    let dim = m.dim as usize;
+    // the decoder already guaranteed vectors.len() % dim == 0 (and
+    // dim == 0 ⟹ no vectors); here we check op-specific shape rules
+    let rows = if dim > 0 { m.vectors.len() / dim } else { 0 };
+    let started = Instant::now();
+    let ids = match m.op {
+        MutateOp::Insert => {
+            if !m.ids.is_empty() {
+                return Err(bad("insert must not carry ids (they are assigned)".into()));
+            }
+            if rows == 0 {
+                return Err(bad("insert carries no vectors".into()));
+            }
+            let vecs = Tensor::from_vec(&[rows, dim], m.vectors);
+            coll.insert(&vecs).map_err(|e| bad(format!("{e:#}")))?
+        }
+        MutateOp::Upsert => {
+            if rows == 0 {
+                return Err(bad("upsert carries no vectors".into()));
+            }
+            if m.ids.len() != rows {
+                return Err(bad(format!(
+                    "upsert has {} ids for {} vector rows",
+                    m.ids.len(),
+                    rows
+                )));
+            }
+            let vecs = Tensor::from_vec(&[rows, dim], m.vectors);
+            coll.upsert(&m.ids, &vecs).map_err(|e| bad(format!("{e:#}")))?;
+            m.ids
+        }
+        MutateOp::Delete => {
+            if m.ids.is_empty() {
+                return Err(bad("delete carries no ids".into()));
+            }
+            if rows != 0 {
+                return Err(bad("delete must not carry vectors".into()));
+            }
+            coll.delete(&m.ids).map_err(|e| bad(format!("{e:#}")))?;
+            m.ids
+        }
+    };
+    Ok(MutatedFrame {
+        ids,
+        len: coll.len() as u64,
+        gen: coll.generation(),
+        server_micros: started.elapsed().as_micros() as u64,
+    })
+}
+
+/// Fold the named collection's delta + tombstones into a fresh sealed
+/// generation. Runs on the connection thread; searches keep serving the
+/// old generation until the swap commits.
+fn serve_compact(name: &str, shared: &Shared) -> Result<MutatedFrame, ErrorFrame> {
+    let coll = find_mutable(name, shared)?;
+    let started = Instant::now();
+    let gen = coll.compact().map_err(|e| ErrorFrame {
+        code: ErrorCode::Internal,
+        message: format!("compaction failed: {e:#}"),
+    })?;
+    Ok(MutatedFrame {
+        ids: Vec::new(),
+        len: coll.len() as u64,
+        gen,
+        server_micros: started.elapsed().as_micros() as u64,
+    })
 }

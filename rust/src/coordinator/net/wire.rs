@@ -20,8 +20,10 @@
 //! Frame types: `Search` (collection + query + k/effort/mode + optional
 //! deadline) answered by `Hits` or `Error`; `Ping` answered by `Pong`;
 //! `StatsRequest` answered by `Stats` (server-wide latency percentiles,
-//! queue depth and per-collection counters). Error replies carry a
-//! stable [`ErrorCode`] so clients can react to `Overloaded` /
+//! queue depth and per-collection counters); `Mutate`
+//! (insert/upsert/delete against a mutable collection) and `Compact`
+//! answered by `Mutated` or `Error`. Error replies carry a stable
+//! [`ErrorCode`] so clients can react to `Overloaded` /
 //! `DeadlineExpired` / `ShuttingDown` without string matching.
 
 use std::io::{Read, Write};
@@ -60,6 +62,9 @@ mod tag {
     pub const PONG: u8 = 5;
     pub const STATS_REQUEST: u8 = 6;
     pub const STATS: u8 = 7;
+    pub const MUTATE: u8 = 8;
+    pub const MUTATED: u8 = 9;
+    pub const COMPACT: u8 = 10;
 }
 
 /// Stable error codes carried by `Error` frames.
@@ -228,6 +233,49 @@ pub struct StatsFrame {
     pub collections: Vec<CollectionStats>,
 }
 
+/// Mutation kinds carried by a [`MutateFrame`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MutateOp {
+    /// Append `vectors` as new rows; the reply's ids are the assigned
+    /// global ids. `ids` must be empty.
+    Insert,
+    /// Replace-or-create: `ids[i]` gets `vectors` row `i`.
+    Upsert,
+    /// Remove `ids`; `vectors` must be empty.
+    Delete,
+}
+
+/// A mutation request against a mutable collection. `vectors` is
+/// row-major `rows × dim`; the decoder enforces `vectors.len()` to be
+/// a multiple of `dim` (and empty exactly when `dim` is 0), so a
+/// decoded frame always has a well-defined row count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MutateFrame {
+    pub collection: String,
+    pub op: MutateOp,
+    pub ids: Vec<u32>,
+    pub dim: u32,
+    pub vectors: Vec<f32>,
+}
+
+/// Reply to `Mutate`/`Compact`: the affected (or assigned) ids, the
+/// collection's live row count and committed-or-swapped generation
+/// after the operation, and the server-observed latency.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MutatedFrame {
+    pub ids: Vec<u32>,
+    pub len: u64,
+    pub gen: u64,
+    pub server_micros: u64,
+}
+
+/// A compaction request: fold the named collection's delta + sealed
+/// segments + tombstones into a fresh sealed generation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompactFrame {
+    pub collection: String,
+}
+
 /// One decoded frame.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Frame {
@@ -238,6 +286,9 @@ pub enum Frame {
     Pong { token: u64 },
     StatsRequest,
     Stats(StatsFrame),
+    Mutate(MutateFrame),
+    Mutated(MutatedFrame),
+    Compact(CompactFrame),
 }
 
 // ---------------------------------------------------------------------------
@@ -363,6 +414,46 @@ pub(crate) fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
                 put_u64(&mut b, c.queue_depth);
             }
             tag::STATS
+        }
+        Frame::Mutate(m) => {
+            put_str(&mut b, &m.collection);
+            b.push(match m.op {
+                MutateOp::Insert => 0,
+                MutateOp::Upsert => 1,
+                MutateOp::Delete => 2,
+            });
+            let ni = m.ids.len().min(MAX_HITS);
+            put_u32(&mut b, ni as u32);
+            for &id in &m.ids[..ni] {
+                put_u32(&mut b, id);
+            }
+            put_u32(&mut b, m.dim);
+            // emit whole rows only: a ragged tail (or floats with a
+            // zero dim) would be rejected by our own decoder
+            let nf = match m.dim as usize {
+                0 => 0,
+                d => (m.vectors.len() / d) * d,
+            };
+            put_u32(&mut b, nf as u32);
+            for &v in &m.vectors[..nf] {
+                put_f32(&mut b, v);
+            }
+            tag::MUTATE
+        }
+        Frame::Mutated(m) => {
+            let ni = m.ids.len().min(MAX_HITS);
+            put_u32(&mut b, ni as u32);
+            for &id in &m.ids[..ni] {
+                put_u32(&mut b, id);
+            }
+            put_u64(&mut b, m.len);
+            put_u64(&mut b, m.gen);
+            put_u64(&mut b, m.server_micros);
+            tag::MUTATED
+        }
+        Frame::Compact(cf) => {
+            put_str(&mut b, &cf.collection);
+            tag::COMPACT
         }
     };
     (t, b)
@@ -605,6 +696,72 @@ pub(crate) fn decode_payload(t: u8, payload: &[u8]) -> Result<Frame, WireError> 
                 collections,
             })
         }
+        tag::MUTATE => {
+            let collection = c.string(MAX_NAME_LEN, "collection name")?;
+            let op = match c.u8("mutate op")? {
+                0 => MutateOp::Insert,
+                1 => MutateOp::Upsert,
+                2 => MutateOp::Delete,
+                o => return Err(WireError::Malformed(format!("unknown mutate op {o}"))),
+            };
+            let ni = c.u32("mutate id count")? as usize;
+            let ni = c.count(ni, MAX_HITS, 4, "mutate id count")?;
+            let mut ids = Vec::with_capacity(ni);
+            for _ in 0..ni {
+                ids.push(c.u32("mutate ids")?);
+            }
+            let dim = c.u32("mutate dim")?;
+            if dim as usize > MAX_DIM {
+                return Err(WireError::Oversized {
+                    what: "mutate dim",
+                    declared: dim as u64,
+                    cap: MAX_DIM as u64,
+                });
+            }
+            let nf = c.u32("mutate vector count")? as usize;
+            let nf = c.count(nf, MAX_FRAME_LEN as usize / 4, 4, "mutate vector count")?;
+            // structural invariants, so decoded frames always have a
+            // well-defined row count: floats come in whole rows, and a
+            // zero dim means no floats at all
+            if dim == 0 && nf != 0 {
+                return Err(WireError::Malformed(
+                    "mutate vectors present but dim is 0".into(),
+                ));
+            }
+            if dim > 0 && nf % dim as usize != 0 {
+                return Err(WireError::Malformed(format!(
+                    "mutate vector count {nf} is not a multiple of dim {dim}"
+                )));
+            }
+            let mut vectors = Vec::with_capacity(nf);
+            for _ in 0..nf {
+                vectors.push(c.f32("mutate vectors")?);
+            }
+            Frame::Mutate(MutateFrame {
+                collection,
+                op,
+                ids,
+                dim,
+                vectors,
+            })
+        }
+        tag::MUTATED => {
+            let ni = c.u32("mutated id count")? as usize;
+            let ni = c.count(ni, MAX_HITS, 4, "mutated id count")?;
+            let mut ids = Vec::with_capacity(ni);
+            for _ in 0..ni {
+                ids.push(c.u32("mutated ids")?);
+            }
+            Frame::Mutated(MutatedFrame {
+                ids,
+                len: c.u64("mutated len")?,
+                gen: c.u64("mutated gen")?,
+                server_micros: c.u64("server_micros")?,
+            })
+        }
+        tag::COMPACT => Frame::Compact(CompactFrame {
+            collection: c.string(MAX_NAME_LEN, "collection name")?,
+        }),
         t => return Err(WireError::UnknownTag(t)),
     };
     c.finish("frame")?;
@@ -749,6 +906,36 @@ mod tests {
                     expired: 3,
                     queue_depth: 4,
                 }],
+            }),
+            Frame::Mutate(MutateFrame {
+                collection: "docs".into(),
+                op: MutateOp::Insert,
+                ids: vec![],
+                dim: 4,
+                vectors: vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8],
+            }),
+            Frame::Mutate(MutateFrame {
+                collection: "docs".into(),
+                op: MutateOp::Upsert,
+                ids: vec![7, 9],
+                dim: 2,
+                vectors: vec![1.0, 2.0, 3.0, 4.0],
+            }),
+            Frame::Mutate(MutateFrame {
+                collection: "docs".into(),
+                op: MutateOp::Delete,
+                ids: vec![3, 5, 8],
+                dim: 0,
+                vectors: vec![],
+            }),
+            Frame::Mutated(MutatedFrame {
+                ids: vec![40, 41],
+                len: 12,
+                gen: 3,
+                server_micros: 250,
+            }),
+            Frame::Compact(CompactFrame {
+                collection: "docs".into(),
             }),
         ]
     }
@@ -898,7 +1085,7 @@ mod tests {
             });
             assert!(res.is_ok(), "decoder panicked on case {case}");
             // pure noise straight into the payload decoder
-            let tag = (rng.below(10) + 1) as u8;
+            let tag = (rng.below(14) + 1) as u8; // valid tags 1..=10 plus a few unknown
             let noise: Vec<u8> = (0..rng.below(64)).map(|_| rng.below(256) as u8).collect();
             let res = std::panic::catch_unwind(move || {
                 let _ = decode_payload(tag, &noise);
@@ -940,6 +1127,82 @@ mod tests {
                 assert_eq!(h.scores, vec![0.9, 0.8]);
             }
             other => panic!("expected hits, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mutate_structural_invariants_enforced() {
+        // ragged float tail is truncated to whole rows at encode time
+        let f = Frame::Mutate(MutateFrame {
+            collection: "c".into(),
+            op: MutateOp::Insert,
+            ids: vec![],
+            dim: 3,
+            vectors: vec![1.0, 2.0, 3.0, 4.0], // 1⅓ rows
+        });
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        match read_frame(&mut buf.as_slice()).unwrap() {
+            Frame::Mutate(m) => assert_eq!(m.vectors, vec![1.0, 2.0, 3.0]),
+            other => panic!("expected mutate, got {other:?}"),
+        }
+        // zero dim with floats attached: dropped at encode, rejected at decode
+        let f = Frame::Mutate(MutateFrame {
+            collection: "c".into(),
+            op: MutateOp::Delete,
+            ids: vec![1],
+            dim: 0,
+            vectors: vec![9.0],
+        });
+        let (t, payload) = encode_payload(&f);
+        match decode_payload(t, &payload).unwrap() {
+            Frame::Mutate(m) => assert!(m.vectors.is_empty()),
+            other => panic!("expected mutate, got {other:?}"),
+        }
+        // hand-build a ragged frame: decoder must reject it as malformed
+        let mut p = Vec::new();
+        put_str(&mut p, "c");
+        p.push(0); // insert
+        put_u32(&mut p, 0); // no ids
+        put_u32(&mut p, 3); // dim 3
+        put_u32(&mut p, 4); // but 4 floats
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            put_f32(&mut p, v);
+        }
+        assert!(matches!(
+            decode_payload(tag::MUTATE, &p),
+            Err(WireError::Malformed(_))
+        ));
+        // unknown op byte
+        let mut p = Vec::new();
+        put_str(&mut p, "c");
+        p.push(7);
+        put_u32(&mut p, 0);
+        put_u32(&mut p, 0);
+        put_u32(&mut p, 0);
+        assert!(matches!(
+            decode_payload(tag::MUTATE, &p),
+            Err(WireError::Malformed(_))
+        ));
+        // oversized dim is a typed cap error
+        let mut p = Vec::new();
+        put_str(&mut p, "c");
+        p.push(0);
+        put_u32(&mut p, 0);
+        put_u32(&mut p, (MAX_DIM as u32) + 1);
+        put_u32(&mut p, 0);
+        assert!(matches!(
+            decode_payload(tag::MUTATE, &p),
+            Err(WireError::Oversized { .. })
+        ));
+        // declared id count past the bytes present must not allocate
+        let mut p = Vec::new();
+        put_str(&mut p, "c");
+        p.push(2);
+        put_u32(&mut p, u32::MAX);
+        match decode_payload(tag::MUTATE, &p) {
+            Err(WireError::Oversized { .. }) | Err(WireError::Truncated { .. }) => {}
+            other => panic!("expected typed cap error, got {other:?}"),
         }
     }
 

@@ -11,8 +11,17 @@
 //! ```text
 //! <root>/catalog.tsv     # name<TAB>spec<TAB>artifact[<TAB>mapper], one per line
 //! <root>/<name>.ami      # versioned index artifact (index::artifact)
+//! <root>/<name>.seg/     # OR a mutable collection directory (index::segment):
+//!                        #   gen-<n>.tsv generation manifests + seg-*.ams segments
 //! <root>/<name>.map.amm  # optional trained query-map model artifact
 //! ```
+//!
+//! A manifest row whose artifact column ends in `.seg` names a
+//! *mutable* collection: the column is a directory managed by
+//! [`MutableCollection`] (generation manifests + sealed segments)
+//! instead of a monolithic artifact, and the loaded entry exposes the
+//! collection through [`CatalogEntry::mutable`] so callers can
+//! insert/upsert/delete/compact while the same `Arc` serves searches.
 //!
 //! The optional fourth manifest column names a persisted c=1 model
 //! artifact ([`crate::model::artifact`]); collections carrying one serve
@@ -25,6 +34,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::index::segment::MutableCollection;
 use crate::index::spec::{BuildCtx, IndexSpec};
 use crate::index::{artifact, VectorIndex};
 use crate::model::{self, AmortizedModel, RustModel};
@@ -32,6 +42,9 @@ use crate::tensor::Tensor;
 
 /// Manifest file name inside a catalog directory.
 pub const MANIFEST_FILE: &str = "catalog.tsv";
+
+/// Artifact-column suffix marking a mutable collection directory.
+pub const MUTABLE_SUFFIX: &str = ".seg";
 
 /// One served collection: the spec it was built from, where its
 /// artifact lives, and the loaded index (a batched
@@ -43,6 +56,10 @@ pub struct CatalogEntry {
     pub spec: IndexSpec,
     pub path: PathBuf,
     pub index: Arc<dyn VectorIndex>,
+    /// For mutable collections (`<name>.seg` rows): the same object as
+    /// `index`, typed for mutation — insert/upsert/delete/compact.
+    /// `None` for immutable artifact-backed collections.
+    pub mutable: Option<Arc<MutableCollection>>,
     /// Optional trained query mapper persisted next to the index
     /// artifact ([`Catalog::attach_mapper`]).
     pub mapper_path: Option<PathBuf>,
@@ -133,14 +150,21 @@ fn load_entry(
     mapper_file: Option<&str>,
 ) -> Result<CatalogEntry> {
     let path = root.join(file);
-    let index = artifact::load(&path)?;
-    ensure!(
-        index.name() == spec.name(),
-        "collection '{name}': artifact {} holds a '{}' backbone but the manifest spec says '{}'",
-        path.display(),
-        index.name(),
-        spec.name()
-    );
+    let (index, mutable): (Arc<dyn VectorIndex>, Option<Arc<MutableCollection>>) =
+        if file.ends_with(MUTABLE_SUFFIX) {
+            let coll = Arc::new(MutableCollection::open(&path, spec.clone())?);
+            (coll.clone() as Arc<dyn VectorIndex>, Some(coll))
+        } else {
+            let index = artifact::load(&path)?;
+            ensure!(
+                index.name() == spec.name(),
+                "collection '{name}': artifact {} holds a '{}' backbone but the manifest spec says '{}'",
+                path.display(),
+                index.name(),
+                spec.name()
+            );
+            (Arc::from(index), None)
+        };
     let (mapper_path, mapper) = match mapper_file {
         Some(mf) => {
             let mpath = root.join(mf);
@@ -165,7 +189,8 @@ fn load_entry(
         name: name.to_string(),
         spec,
         path,
-        index: Arc::from(index),
+        index,
+        mutable,
         mapper_path,
         mapper,
     })
@@ -312,6 +337,7 @@ impl Catalog {
                 spec: spec.clone(),
                 path,
                 index: Arc::from(index),
+                mutable: None,
                 mapper_path: None,
                 mapper: None,
             },
@@ -363,9 +389,65 @@ impl Catalog {
             spec: spec.clone(),
             path,
             index: Arc::from(index),
+            mutable: None,
             mapper_path: None,
             mapper: None,
         })
+    }
+
+    /// Initialize an empty *mutable* collection (generation 0) and
+    /// register it in the catalog at `root`. Manifest-append style
+    /// like [`Catalog::append_collection`]: no existing artifact is
+    /// deserialized, and the catalog is created if absent. The `spec`
+    /// is what future compactions build with; `dim` is fixed for the
+    /// collection's lifetime.
+    pub fn create_mutable(
+        root: impl Into<PathBuf>,
+        name: &str,
+        spec: &IndexSpec,
+        dim: usize,
+        seed: u64,
+    ) -> Result<CatalogEntry> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating catalog dir {}", root.display()))?;
+        ensure!(
+            valid_name(name),
+            "collection name '{name}' must be non-empty and use only [A-Za-z0-9._-]"
+        );
+        let manifest = root.join(MANIFEST_FILE);
+        let mut rows = if manifest.exists() {
+            let text = std::fs::read_to_string(&manifest)
+                .with_context(|| format!("reading catalog manifest {}", manifest.display()))?;
+            manifest_rows(&text, &manifest)?
+        } else {
+            Vec::new()
+        };
+        ensure!(
+            !rows.iter().any(|(n, _, _, _)| n == name),
+            "collection '{name}' already exists in {}",
+            root.display()
+        );
+        let file = format!("{name}{MUTABLE_SUFFIX}");
+        let path = root.join(&file);
+        let coll = Arc::new(MutableCollection::create(&path, spec.clone(), dim, seed)?);
+        rows.push((name.to_string(), spec.clone(), file, None));
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        write_manifest_rows(&root, &rows)?;
+        Ok(CatalogEntry {
+            name: name.to_string(),
+            spec: spec.clone(),
+            path,
+            index: coll.clone() as Arc<dyn VectorIndex>,
+            mutable: Some(coll),
+            mapper_path: None,
+            mapper: None,
+        })
+    }
+
+    /// The mutable handle of a loaded collection, if it is one.
+    pub fn mutable(&self, name: &str) -> Option<&Arc<MutableCollection>> {
+        self.entries.get(name)?.mutable.as_ref()
     }
 
     /// Persist `model` as the query mapper of an existing collection:
@@ -395,6 +477,10 @@ impl Catalog {
             "query mapper '{}' must have c=1, got c={}",
             model.label(),
             model.n_heads()
+        );
+        ensure!(
+            !row.2.ends_with(MUTABLE_SUFFIX),
+            "collection '{name}' is mutable; attaching query mappers to mutable collections is not supported yet"
         );
         // validate the dimension against the index artifact header only
         // (cheap: no payload is decoded)
@@ -454,5 +540,31 @@ mod tests {
         assert!(!valid_name("has space"));
         assert!(!valid_name("sub/dir"));
         assert!(!valid_name("tab\tname"));
+    }
+
+    #[test]
+    fn mutable_collection_round_trips_through_manifest() {
+        use crate::util::{Rng, TempDir};
+        let tmp = TempDir::new("catalog-mut");
+        let spec = IndexSpec::default_for("flat").unwrap();
+        let entry = Catalog::create_mutable(tmp.path(), "mut", &spec, 8, 7).unwrap();
+        assert!(entry.path.is_dir());
+        let coll = entry.mutable.as_ref().unwrap();
+        let mut keys = Tensor::zeros(&[12, 8]);
+        Rng::new(1).fill_normal(keys.data_mut(), 1.0);
+        coll.insert(&keys).unwrap();
+        coll.commit().unwrap();
+        // duplicate registration is refused
+        assert!(Catalog::create_mutable(tmp.path(), "mut", &spec, 8, 7).is_err());
+        // full reopen loads the committed generation behind the same API
+        let cat = Catalog::open(tmp.path()).unwrap();
+        let got = cat.get("mut").unwrap();
+        assert_eq!((got.index.len(), got.index.dim()), (12, 8));
+        assert_eq!(got.index.name(), "mutable");
+        assert!(cat.mutable("mut").is_some());
+        assert!(cat.mutable("missing").is_none());
+        // single-collection open works too and stays typed
+        let one = Catalog::open_collection(tmp.path(), "mut").unwrap();
+        assert!(one.mutable.is_some());
     }
 }

@@ -14,6 +14,8 @@
 //!   full-dim rescoring
 //! * [`shard`] — sharded serving: any leaf backbone per key partition,
 //!   fan-out search + global top-k merge (`sharded(shards=8,inner=...)`)
+//! * [`segment`] — mutable collections: delta + sealed segments,
+//!   tombstones, generation manifests, background compaction
 //!
 //! Construction goes through the typed [`spec::IndexSpec`] family
 //! (`IndexSpec::build` is the one entry point; `--spec
@@ -30,6 +32,7 @@ pub mod kmeans;
 pub mod leanvec;
 pub mod pq;
 pub mod scann;
+pub mod segment;
 pub mod shard;
 pub mod soar;
 pub mod spec;
@@ -38,6 +41,7 @@ pub mod traits;
 
 pub use artifact::{load, load_from, save};
 pub use catalog::{Catalog, CatalogEntry};
+pub use segment::{Compactor, CompactorConfig, MutableCollection};
 pub use shard::ShardedIndex;
 pub use spec::{
     auto_pq_m, leanvec_target_dim, BuildCtx, FlatSpec, IndexSpec, IvfSpec, LeanVecSpec, PqSpec,

@@ -1,0 +1,705 @@
+//! [`MutableCollection`]: the user-facing mutable index handle.
+//!
+//! Layering (newest data first):
+//!
+//! ```text
+//!   search ──fan-out──► delta (exact flat scan, in RAM)
+//!                     ► sealed[N-1] … sealed[0] (any backbone)
+//!                        └ per-segment tombstone masks
+//!          merge per-segment TopK on *global* ids
+//! ```
+//!
+//! Concurrency contract:
+//! * mutations (`insert`/`upsert`/`delete`) and generation changes
+//!   (`commit`/`compact`) are serialized by one mutex per collection;
+//! * searches take the state read lock only, so they run concurrently
+//!   with each other and with the slow offline part of a compaction —
+//!   the only write-lock hold is the O(1) generation swap;
+//! * global ids are assigned once and never reused, so results are
+//!   stable across compactions (the acceptance bar: bit-identical
+//!   search results across a generation swap).
+//!
+//! Durability contract: `commit()` seals the delta + tombstones into a
+//! new generation manifest; `compact()` additionally folds everything
+//! into one fresh sealed segment built through
+//! [`IndexSpec::build`]. Mutations *between* commits live in RAM only
+//! — a crash recovers to the last committed generation, exactly.
+
+use std::collections::{HashMap, HashSet};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::api::Effort;
+use crate::index::spec::{BuildCtx, IndexSpec};
+use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
+use crate::tensor::Tensor;
+
+use super::delta::DeltaSegment;
+use super::manifest::{self, GenManifest};
+use super::sealed::SealedSegment;
+
+/// Where one live global id currently resolves.
+#[derive(Clone, Copy, Debug)]
+enum Loc {
+    /// Row index within the delta segment.
+    Delta(usize),
+    /// `(sealed segment index, local row)`.
+    Sealed(usize, u32),
+}
+
+/// Everything searches read and mutations rewrite. Swapped wholesale
+/// (under a brief write lock) when a generation commits.
+struct State {
+    gen: u64,
+    next_id: u32,
+    sealed: Vec<Arc<SealedSegment>>,
+    /// Per sealed segment: local rows masked by a delete/upsert.
+    dead: Vec<HashSet<u32>>,
+    delta: DeltaSegment,
+    /// Live gid → current location; absent means deleted or never
+    /// assigned.
+    locate: HashMap<u32, Loc>,
+}
+
+impl State {
+    fn empty(dim: usize) -> State {
+        State {
+            gen: 0,
+            next_id: 0,
+            sealed: Vec::new(),
+            dead: Vec::new(),
+            delta: DeltaSegment::new(dim),
+            locate: HashMap::new(),
+        }
+    }
+
+    fn live_len(&self) -> usize {
+        self.locate.len()
+    }
+
+    fn tombstones(&self) -> usize {
+        self.dead.iter().map(|d| d.len()).sum()
+    }
+}
+
+/// A mutable, crash-recoverable collection over immutable segments.
+pub struct MutableCollection {
+    dir: PathBuf,
+    spec: IndexSpec,
+    dim: usize,
+    seed: u64,
+    /// Serializes mutations and generation changes. Never held while
+    /// waiting on searches.
+    mutate: Mutex<()>,
+    state: RwLock<State>,
+}
+
+impl MutableCollection {
+    /// Initialize a fresh collection directory and commit generation 0
+    /// (empty). Refuses a directory that already holds generations.
+    pub fn create(dir: &Path, spec: IndexSpec, dim: usize, seed: u64) -> Result<MutableCollection> {
+        ensure!(dim > 0, "collection dim must be positive");
+        spec.validate()?;
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating collection directory {}", dir.display()))?;
+        if !manifest::list_generations(dir)?.is_empty() {
+            bail!(
+                "collection directory {} already holds committed generations; open it instead",
+                dir.display()
+            );
+        }
+        let m = GenManifest {
+            gen: 0,
+            dim,
+            seed,
+            next_id: 0,
+            segments: Vec::new(),
+            tombstones: Vec::new(),
+        };
+        m.write(dir)?;
+        Ok(MutableCollection {
+            dir: dir.to_path_buf(),
+            spec,
+            dim,
+            seed,
+            mutate: Mutex::new(()),
+            state: RwLock::new(State::empty(dim)),
+        })
+    }
+
+    /// Reopen from the newest generation whose manifest *and* every
+    /// listed segment fully validate. Torn or corrupt newer
+    /// generations are skipped — that is the crash-recovery path: a
+    /// kill mid-compaction leaves either a missing/torn `gen-<n+1>`
+    /// (recover to `n`) or a complete one (recover to `n+1`), never
+    /// anything in between.
+    pub fn open(dir: &Path, spec: IndexSpec) -> Result<MutableCollection> {
+        spec.validate()?;
+        let gens = manifest::list_generations(dir)?;
+        if gens.is_empty() {
+            bail!(
+                "no committed generations in collection directory {}",
+                dir.display()
+            );
+        }
+        let mut first_err = None;
+        for (_, path) in &gens {
+            match Self::load_generation(dir, path) {
+                Ok((state, meta)) => {
+                    return Ok(MutableCollection {
+                        dir: dir.to_path_buf(),
+                        spec,
+                        dim: meta.dim,
+                        seed: meta.seed,
+                        mutate: Mutex::new(()),
+                        state: RwLock::new(state),
+                    });
+                }
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        Err(first_err.unwrap()).with_context(|| {
+            format!(
+                "no generation in {} survives validation ({} tried)",
+                dir.display(),
+                gens.len()
+            )
+        })
+    }
+
+    fn load_generation(dir: &Path, path: &Path) -> Result<(State, GenManifest)> {
+        let m = GenManifest::read(path)?;
+        ensure!(m.dim > 0, "generation manifest records dim 0");
+        let mut sealed = Vec::with_capacity(m.segments.len());
+        let mut by_file = HashMap::new();
+        for (si, file) in m.segments.iter().enumerate() {
+            let seg = Arc::new(SealedSegment::load(&dir.join(file))?);
+            ensure!(
+                seg.dim() == m.dim,
+                "segment {file} has dim {} but the generation records {}",
+                seg.dim(),
+                m.dim
+            );
+            if by_file.insert(file.as_str(), si).is_some() {
+                bail!("generation lists segment {file} twice");
+            }
+            sealed.push(seg);
+        }
+        let mut dead: Vec<HashSet<u32>> = vec![HashSet::new(); sealed.len()];
+        for (file, lid) in &m.tombstones {
+            let si = by_file[file.as_str()]; // parse() guarantees membership
+            ensure!(
+                (*lid as usize) < sealed[si].len(),
+                "tombstone row {lid} out of range for segment {file}"
+            );
+            dead[si].insert(*lid);
+        }
+        let mut locate = HashMap::new();
+        for (si, seg) in sealed.iter().enumerate() {
+            for (lid, &gid) in seg.ids().iter().enumerate() {
+                if dead[si].contains(&(lid as u32)) {
+                    continue;
+                }
+                ensure!(
+                    gid < m.next_id,
+                    "segment {} holds id {gid} >= next_id {}",
+                    seg.file(),
+                    m.next_id
+                );
+                if locate.insert(gid, Loc::Sealed(si, lid as u32)).is_some() {
+                    bail!("id {gid} is live in two segments: corrupt generation");
+                }
+            }
+        }
+        let state = State {
+            gen: m.gen,
+            next_id: m.next_id,
+            delta: DeltaSegment::new(m.dim),
+            sealed,
+            dead,
+            locate,
+        };
+        Ok((state, m))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Last committed (or swapped-in) generation number.
+    pub fn generation(&self) -> u64 {
+        self.state.read().unwrap().gen
+    }
+
+    /// Live rows in the delta (compaction-pressure signal).
+    pub fn delta_live(&self) -> usize {
+        self.state.read().unwrap().delta.live()
+    }
+
+    /// Masked sealed rows (tombstone-debt signal).
+    pub fn tombstone_count(&self) -> usize {
+        self.state.read().unwrap().tombstones()
+    }
+
+    /// Append `vecs` as new rows; returns the assigned global ids
+    /// (dense, monotonically increasing, never reused).
+    pub fn insert(&self, vecs: &Tensor) -> Result<Vec<u32>> {
+        ensure!(vecs.rows() > 0, "insert needs at least one row");
+        ensure!(
+            vecs.row_width() == self.dim,
+            "insert dim {} != collection dim {}",
+            vecs.row_width(),
+            self.dim
+        );
+        let _m = self.mutate.lock().unwrap();
+        let mut st = self.state.write().unwrap();
+        ensure!(
+            (st.next_id as u64) + (vecs.rows() as u64) <= u32::MAX as u64,
+            "id space exhausted"
+        );
+        let mut out = Vec::with_capacity(vecs.rows());
+        for r in 0..vecs.rows() {
+            let gid = st.next_id;
+            st.next_id += 1;
+            let row = st.delta.push(gid, vecs.row(r));
+            st.locate.insert(gid, Loc::Delta(row));
+            out.push(gid);
+        }
+        Ok(out)
+    }
+
+    /// Replace (or create) the rows at `ids`; `ids[i]` gets `vecs`
+    /// row `i`. Later duplicates within one call win.
+    pub fn upsert(&self, ids: &[u32], vecs: &Tensor) -> Result<()> {
+        ensure!(
+            ids.len() == vecs.rows(),
+            "upsert got {} ids for {} rows",
+            ids.len(),
+            vecs.rows()
+        );
+        ensure!(!ids.is_empty(), "upsert needs at least one row");
+        ensure!(
+            vecs.row_width() == self.dim,
+            "upsert dim {} != collection dim {}",
+            vecs.row_width(),
+            self.dim
+        );
+        let _m = self.mutate.lock().unwrap();
+        let mut st = self.state.write().unwrap();
+        for (r, &gid) in ids.iter().enumerate() {
+            ensure!(gid < u32::MAX, "id {gid} is reserved");
+            if let Some(loc) = st.locate.remove(&gid) {
+                Self::kill(&mut st, loc);
+            }
+            if gid >= st.next_id {
+                st.next_id = gid + 1;
+            }
+            let row = st.delta.push(gid, vecs.row(r));
+            st.locate.insert(gid, Loc::Delta(row));
+        }
+        Ok(())
+    }
+
+    /// Remove rows by id; unknown/already-deleted ids are ignored.
+    /// Returns how many rows were actually removed.
+    pub fn delete(&self, ids: &[u32]) -> Result<usize> {
+        let _m = self.mutate.lock().unwrap();
+        let mut st = self.state.write().unwrap();
+        let mut removed = 0;
+        for gid in ids {
+            if let Some(loc) = st.locate.remove(gid) {
+                Self::kill(&mut st, loc);
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+
+    fn kill(st: &mut State, loc: Loc) {
+        match loc {
+            Loc::Delta(row) => st.delta.kill(row),
+            Loc::Sealed(si, lid) => {
+                st.dead[si].insert(lid);
+            }
+        }
+    }
+
+    /// Fan-out search: every sealed segment is over-fetched by its
+    /// tombstone count (so ≥ k live candidates survive masking — this
+    /// is what keeps `Exhaustive` exact under churn), remapped to
+    /// global ids and merged with the delta scan in one shared top-k.
+    fn search_state(&self, st: &State, query: &[f32], k: usize, effort: Effort) -> SearchResult {
+        let k = k.max(1);
+        let mut top = TopK::new(k);
+        let mut cost = SearchCost::default();
+        for (si, seg) in st.sealed.iter().enumerate() {
+            let dead = &st.dead[si];
+            let kk = k.saturating_add(dead.len()).min(seg.len());
+            if kk == 0 {
+                continue;
+            }
+            let res = seg.search_local(query, kk, effort);
+            cost.add(res.cost);
+            for (j, &lid) in res.ids.iter().enumerate() {
+                if !dead.contains(&lid) {
+                    top.offer(res.scores[j], seg.ids()[lid as usize]);
+                }
+            }
+        }
+        cost.add(st.delta.scan(query, &mut top));
+        let (ids, scores) = top.into_sorted();
+        SearchResult { ids, scores, cost }
+    }
+
+    /// Seal the delta (if non-empty) as a new flat segment and commit
+    /// a new generation recording current segments + tombstones.
+    /// Cheap: no index rebuild. Returns the new generation number.
+    pub fn commit(&self) -> Result<u64> {
+        let _m = self.mutate.lock().unwrap();
+        self.commit_locked()
+    }
+
+    fn commit_locked(&self) -> Result<u64> {
+        // Snapshot under a read lock; the mutate mutex (held by our
+        // caller) guarantees nothing changes until we swap.
+        let (gen, next_id, mut segments, tombstones, gathered) = {
+            let st = self.state.read().unwrap();
+            let segments: Vec<String> =
+                st.sealed.iter().map(|s| s.file().to_string()).collect();
+            let mut tombstones = Vec::new();
+            for (si, dead) in st.dead.iter().enumerate() {
+                let mut lids: Vec<u32> = dead.iter().copied().collect();
+                lids.sort_unstable();
+                for lid in lids {
+                    tombstones.push((st.sealed[si].file().to_string(), lid));
+                }
+            }
+            (st.gen, st.next_id, segments, tombstones, st.delta.gather_sorted())
+        };
+        let new_gen = gen + 1;
+        let mut new_seg = None;
+        if let Some((ids, keys)) = gathered {
+            let file = SealedSegment::file_name(new_gen, segments.len());
+            let path = self.dir.join(&file);
+            SealedSegment::write(&path, &ids, &keys, None)?;
+            // reload through the validating (and mmap-aware) path
+            new_seg = Some(Arc::new(SealedSegment::load(&path)?));
+            segments.push(file);
+        }
+        GenManifest {
+            gen: new_gen,
+            dim: self.dim,
+            seed: self.seed,
+            next_id,
+            segments,
+            tombstones,
+        }
+        .write(&self.dir)?;
+        {
+            let mut st = self.state.write().unwrap();
+            st.gen = new_gen;
+            if let Some(seg) = new_seg {
+                let si = st.sealed.len();
+                for (lid, &gid) in seg.ids().iter().enumerate() {
+                    st.locate.insert(gid, Loc::Sealed(si, lid as u32));
+                }
+                st.sealed.push(seg);
+                st.dead.push(HashSet::new());
+                st.delta = DeltaSegment::new(self.dim);
+            }
+        }
+        self.gc(new_gen);
+        Ok(new_gen)
+    }
+
+    /// Fold delta + all sealed segments + tombstones into one fresh
+    /// sealed segment built through [`IndexSpec::build`], then commit.
+    /// The expensive build runs without the state write lock — old
+    /// generation serves until the O(1) swap. Returns the new
+    /// generation number.
+    pub fn compact(&self) -> Result<u64> {
+        let _m = self.mutate.lock().unwrap();
+        let (gen, next_id, mut live) = {
+            let st = self.state.read().unwrap();
+            let mut live: Vec<(u32, Vec<f32>)> = Vec::with_capacity(st.live_len());
+            for (si, seg) in st.sealed.iter().enumerate() {
+                for (lid, &gid) in seg.ids().iter().enumerate() {
+                    if !st.dead[si].contains(&(lid as u32)) {
+                        live.push((gid, seg.keys().row(lid).to_vec()));
+                    }
+                }
+            }
+            for r in 0..st.delta.rows() {
+                if st.delta.is_alive(r) {
+                    live.push((st.delta.id_of(r), st.delta.row(r).to_vec()));
+                }
+            }
+            (st.gen, st.next_id, live)
+        };
+        live.sort_unstable_by_key(|(gid, _)| *gid);
+        let new_gen = gen + 1;
+        let mut segments = Vec::new();
+        let mut new_seg = None;
+        if !live.is_empty() {
+            let ids: Vec<u32> = live.iter().map(|(gid, _)| *gid).collect();
+            let mut data = Vec::with_capacity(live.len() * self.dim);
+            for (_, row) in &live {
+                data.extend_from_slice(row);
+            }
+            let keys = Tensor::from_vec(&[live.len(), self.dim], data);
+            // flat segments are served by direct scan over the raw
+            // keys — embedding a flat artifact would store them twice
+            let built = match self.spec {
+                IndexSpec::Flat(_) => None,
+                _ => Some(
+                    self.spec
+                        .build(&keys, &BuildCtx::seeded(self.seed ^ new_gen))?,
+                ),
+            };
+            let file = SealedSegment::file_name(new_gen, 0);
+            let path = self.dir.join(&file);
+            SealedSegment::write(&path, &ids, &keys, built.as_deref())?;
+            new_seg = Some(Arc::new(SealedSegment::load(&path)?));
+            segments.push(file);
+        }
+        GenManifest {
+            gen: new_gen,
+            dim: self.dim,
+            seed: self.seed,
+            next_id,
+            segments,
+            tombstones: Vec::new(),
+        }
+        .write(&self.dir)?;
+        {
+            let mut st = self.state.write().unwrap();
+            st.gen = new_gen;
+            st.sealed.clear();
+            st.dead.clear();
+            st.locate.clear();
+            if let Some(seg) = new_seg {
+                for (lid, &gid) in seg.ids().iter().enumerate() {
+                    st.locate.insert(gid, Loc::Sealed(0, lid as u32));
+                }
+                st.sealed.push(seg);
+                st.dead.push(HashSet::new());
+            }
+            st.delta = DeltaSegment::new(self.dim);
+        }
+        self.gc(new_gen);
+        Ok(new_gen)
+    }
+
+    /// Best-effort cleanup after a commit: keep the two newest valid
+    /// generations (current + one fallback) and every segment they
+    /// reference; drop older manifests, unreferenced segments, torn
+    /// `.tmp` files and any poison manifest claiming a future
+    /// generation. Failures are ignored — GC never blocks a commit.
+    fn gc(&self, newest: u64) {
+        let Ok(gens) = manifest::list_generations(&self.dir) else {
+            return;
+        };
+        let mut keep_gens: HashSet<u64> = HashSet::new();
+        let mut keep_files: HashSet<String> = HashSet::new();
+        for (g, path) in &gens {
+            if keep_gens.len() >= 2 || *g > newest {
+                continue;
+            }
+            if let Ok(m) = GenManifest::read(path) {
+                keep_gens.insert(*g);
+                keep_files.extend(m.segments.iter().cloned());
+            }
+        }
+        let Ok(rd) = std::fs::read_dir(&self.dir) else {
+            return;
+        };
+        for entry in rd.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let junk = if name.ends_with(".tmp") {
+                true
+            } else if let Some(g) = manifest::parse_gen_file_name(name) {
+                !keep_gens.contains(&g)
+            } else if name.starts_with("seg-") && name.ends_with(".ams") {
+                !keep_files.contains(name)
+            } else {
+                false
+            };
+            if junk {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+}
+
+impl VectorIndex for MutableCollection {
+    fn name(&self) -> &str {
+        "mutable"
+    }
+
+    /// Live rows (inserted minus deleted), across delta + sealed.
+    fn len(&self) -> usize {
+        self.state.read().unwrap().live_len()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_cells(&self) -> usize {
+        let st = self.state.read().unwrap();
+        st.sealed
+            .iter()
+            .map(|s| s.index().n_cells())
+            .max()
+            .unwrap_or(1)
+            .max(1)
+    }
+
+    fn search_effort(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult {
+        let st = self.state.read().unwrap();
+        self.search_state(&st, query, k, effort)
+    }
+
+    /// The spec future compactions build with (not necessarily what
+    /// every current segment was built with).
+    fn spec(&self) -> IndexSpec {
+        self.spec.clone()
+    }
+
+    fn write_payload(&self, _w: &mut dyn Write) -> Result<()> {
+        bail!(
+            "mutable collections persist as generation manifests (gen-*.tsv), \
+             not monolithic artifacts; use commit()/compact()"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Rng, TempDir};
+
+    fn rows(n: usize, d: usize, seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(&[n, d]);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        crate::tensor::normalize_rows(&mut t);
+        t
+    }
+
+    fn flat() -> IndexSpec {
+        IndexSpec::default_for("flat").unwrap()
+    }
+
+    #[test]
+    fn create_refuses_reinit_and_open_recovers() {
+        let tmp = TempDir::new("mcoll");
+        let dir = tmp.join("c.seg");
+        let c = MutableCollection::create(&dir, flat(), 8, 1).unwrap();
+        assert!(MutableCollection::create(&dir, flat(), 8, 1).is_err());
+        let ids = c.insert(&rows(10, 8, 2)).unwrap();
+        assert_eq!(ids, (0..10).collect::<Vec<u32>>());
+        assert_eq!(c.len(), 10);
+        // unsynced mutations are RAM-only: reopen sees generation 0
+        let again = MutableCollection::open(&dir, flat()).unwrap();
+        assert_eq!((again.len(), again.generation()), (0, 0));
+        // after commit, reopen sees everything
+        c.commit().unwrap();
+        let again = MutableCollection::open(&dir, flat()).unwrap();
+        assert_eq!((again.len(), again.generation()), (10, 1));
+    }
+
+    #[test]
+    fn insert_delete_upsert_search_lifecycle() {
+        let tmp = TempDir::new("mcoll");
+        let c = MutableCollection::create(&tmp.join("c.seg"), flat(), 4, 1).unwrap();
+        c.insert(&rows(20, 4, 3)).unwrap();
+        c.commit().unwrap(); // rows now sealed
+        assert_eq!(c.delete(&[3, 7, 3, 999]).unwrap(), 2);
+        assert_eq!(c.len(), 18);
+        assert_eq!(c.tombstone_count(), 2);
+        let q = rows(1, 4, 4);
+        let res = c.search_effort(q.row(0), 20, Effort::Exhaustive);
+        assert_eq!(res.ids.len(), 18);
+        assert!(!res.ids.contains(&3) && !res.ids.contains(&7));
+        // upsert resurrects a deleted id with a fresh vector
+        c.upsert(&[3], &rows(1, 4, 5)).unwrap();
+        assert_eq!(c.len(), 19);
+        let res = c.search_effort(q.row(0), 30, Effort::Exhaustive);
+        assert!(res.ids.contains(&3));
+        // upsert past the end mints ids
+        c.upsert(&[40], &rows(1, 4, 6)).unwrap();
+        let ids = c.insert(&rows(1, 4, 7)).unwrap();
+        assert_eq!(ids, vec![41]);
+    }
+
+    #[test]
+    fn compact_preserves_results_and_gcs_old_files() {
+        let tmp = TempDir::new("mcoll");
+        let dir = tmp.join("c.seg");
+        let c = MutableCollection::create(&dir, flat(), 8, 1).unwrap();
+        c.insert(&rows(50, 8, 2)).unwrap();
+        c.commit().unwrap();
+        c.delete(&(0..10).collect::<Vec<u32>>()).unwrap();
+        c.insert(&rows(5, 8, 3)).unwrap();
+        let q = rows(3, 8, 4);
+        let before: Vec<SearchResult> = (0..3)
+            .map(|i| c.search_effort(q.row(i), 12, Effort::Exhaustive))
+            .collect();
+        let gen = c.compact().unwrap();
+        assert_eq!(c.generation(), gen);
+        assert_eq!(c.tombstone_count(), 0);
+        for (i, want) in before.iter().enumerate() {
+            let got = c.search_effort(q.row(i), 12, Effort::Exhaustive);
+            assert_eq!(got.ids, want.ids, "query {i}");
+            assert_eq!(got.scores, want.scores, "query {i}");
+        }
+        // reopen from disk: same story
+        let again = MutableCollection::open(&dir, flat()).unwrap();
+        for (i, want) in before.iter().enumerate() {
+            let got = again.search_effort(q.row(i), 12, Effort::Exhaustive);
+            assert_eq!(got.ids, want.ids, "reopened query {i}");
+            assert_eq!(got.scores, want.scores, "reopened query {i}");
+        }
+        // GC keeps at most two generations' worth of files around
+        let gens = manifest::list_generations(&dir).unwrap();
+        assert!(gens.len() <= 2, "gc left {} manifests", gens.len());
+    }
+
+    #[test]
+    fn compact_empty_collection_is_fine() {
+        let tmp = TempDir::new("mcoll");
+        let c = MutableCollection::create(&tmp.join("c.seg"), flat(), 4, 1).unwrap();
+        let gen = c.compact().unwrap();
+        assert_eq!(gen, 1);
+        assert_eq!(c.len(), 0);
+        let ids = c.insert(&rows(2, 4, 2)).unwrap();
+        assert_eq!(ids, vec![0, 1]);
+        // delete everything, compact down to zero segments
+        c.delete(&ids).unwrap();
+        c.compact().unwrap();
+        let again = MutableCollection::open(&c.dir().to_path_buf(), flat()).unwrap();
+        assert_eq!(again.len(), 0);
+        // ids are never reused even across an empty compaction
+        assert_eq!(again.insert(&rows(1, 4, 3)).unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn rejects_shape_mismatches() {
+        let tmp = TempDir::new("mcoll");
+        let c = MutableCollection::create(&tmp.join("c.seg"), flat(), 4, 1).unwrap();
+        assert!(c.insert(&rows(1, 5, 2)).is_err());
+        assert!(c.insert(&Tensor::zeros(&[0, 4])).is_err());
+        assert!(c.upsert(&[0, 1], &rows(1, 4, 2)).is_err());
+        assert!(c.upsert(&[], &Tensor::zeros(&[0, 4])).is_err());
+    }
+}

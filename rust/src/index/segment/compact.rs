@@ -1,0 +1,158 @@
+//! Background compaction: a per-collection worker thread that watches
+//! delta growth and tombstone debt and folds them away with
+//! [`MutableCollection::compact`].
+//!
+//! The worker only ever *calls* `compact()` — all correctness lives in
+//! the collection (mutation mutex, read-mostly state, O(1) generation
+//! swap), so a compaction pass never blocks searches and never races
+//! mutations. Errors are counted and logged, not fatal: a failed pass
+//! leaves the previous generation serving and the next poll retries.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::collection::MutableCollection;
+
+/// When the worker decides a pass is worth it.
+#[derive(Clone, Copy, Debug)]
+pub struct CompactorConfig {
+    /// Compact once this many live delta rows accumulate.
+    pub delta_threshold: usize,
+    /// … or this many sealed rows are tombstone-masked.
+    pub tombstone_threshold: usize,
+    /// How often the worker re-checks the pressure signals.
+    pub poll_interval: Duration,
+}
+
+impl Default for CompactorConfig {
+    fn default() -> Self {
+        CompactorConfig {
+            delta_threshold: 4096,
+            tombstone_threshold: 1024,
+            poll_interval: Duration::from_millis(200),
+        }
+    }
+}
+
+/// Handle to one collection's background compaction thread.
+pub struct Compactor {
+    stop: Arc<AtomicBool>,
+    passes: Arc<AtomicU64>,
+    errors: Arc<AtomicU64>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Compactor {
+    /// Spawn the worker. It polls until [`Compactor::stop`] (or drop).
+    pub fn spawn(coll: Arc<MutableCollection>, cfg: CompactorConfig) -> std::io::Result<Compactor> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let passes = Arc::new(AtomicU64::new(0));
+        let errors = Arc::new(AtomicU64::new(0));
+        let (stop2, passes2, errors2) = (stop.clone(), passes.clone(), errors.clone());
+        let handle = std::thread::Builder::new()
+            .name("amips-compactor".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Acquire) {
+                    std::thread::sleep(cfg.poll_interval);
+                    if stop2.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let due = coll.delta_live() >= cfg.delta_threshold.max(1)
+                        || coll.tombstone_count() >= cfg.tombstone_threshold.max(1);
+                    if !due {
+                        continue;
+                    }
+                    match coll.compact() {
+                        Ok(_) => {
+                            passes2.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            errors2.fetch_add(1, Ordering::Relaxed);
+                            eprintln!("amips compactor: pass failed: {e:#}");
+                        }
+                    }
+                }
+            })?;
+        Ok(Compactor {
+            stop,
+            passes,
+            errors,
+            handle: Some(handle),
+        })
+    }
+
+    /// Completed compaction passes.
+    pub fn passes(&self) -> u64 {
+        self.passes.load(Ordering::Relaxed)
+    }
+
+    /// Failed compaction passes (previous generation kept serving).
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Signal the worker and join it.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Compactor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::spec::IndexSpec;
+    use crate::tensor::Tensor;
+    use crate::util::{Rng, TempDir};
+
+    #[test]
+    fn compacts_when_delta_grows_past_threshold() {
+        let tmp = TempDir::new("compactor");
+        let spec = IndexSpec::default_for("flat").unwrap();
+        let coll = Arc::new(MutableCollection::create(&tmp.join("c.seg"), spec, 8, 1).unwrap());
+        let mut keys = Tensor::zeros(&[64, 8]);
+        Rng::new(2).fill_normal(keys.data_mut(), 1.0);
+        coll.insert(&keys).unwrap();
+        let cfg = CompactorConfig {
+            delta_threshold: 32,
+            tombstone_threshold: 1024,
+            poll_interval: Duration::from_millis(5),
+        };
+        let worker = Compactor::spawn(coll.clone(), cfg).unwrap();
+        // the worker should fold the 64-row delta within a few polls
+        for _ in 0..400 {
+            if coll.delta_live() == 0 && coll.generation() > 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        worker.stop();
+        assert_eq!(coll.delta_live(), 0, "delta never compacted");
+        assert!(coll.generation() >= 1);
+        assert_eq!(coll.len(), 64);
+    }
+
+    #[test]
+    fn idle_worker_stops_cleanly() {
+        let tmp = TempDir::new("compactor");
+        let spec = IndexSpec::default_for("flat").unwrap();
+        let coll = Arc::new(MutableCollection::create(&tmp.join("c.seg"), spec, 4, 1).unwrap());
+        let worker = Compactor::spawn(coll.clone(), CompactorConfig::default()).unwrap();
+        drop(worker); // drop path joins too
+        assert_eq!(coll.generation(), 0);
+    }
+}

@@ -1,0 +1,198 @@
+//! The delta segment: an append-friendly in-RAM buffer holding every
+//! row written since the last commit, searched by exact flat scan.
+//!
+//! Rows are appended in arrival order and never moved; deletes and
+//! upserts mark the old row dead in place (`alive` bitmap), so a row
+//! index handed out by [`DeltaSegment::push`] stays valid for the
+//! lifetime of the delta. Sealing gathers the live rows *sorted by
+//! global id* (restoring the strictly-increasing id-map invariant
+//! sealed segments rely on) and the delta starts over empty.
+
+use crate::index::traits::{SearchCost, TopK};
+use crate::tensor::{dot, Tensor};
+
+/// In-RAM segment of recent writes. Not `Sync` by itself — the owning
+/// collection guards it with its state lock.
+pub struct DeltaSegment {
+    dim: usize,
+    data: Vec<f32>, // rows * dim, dead rows kept in place
+    ids: Vec<u32>,  // global id per row (dead rows keep theirs)
+    alive: Vec<bool>,
+    live: usize,
+}
+
+impl DeltaSegment {
+    pub fn new(dim: usize) -> DeltaSegment {
+        assert!(dim > 0, "delta segment dim must be positive");
+        DeltaSegment {
+            dim,
+            data: Vec::new(),
+            ids: Vec::new(),
+            alive: Vec::new(),
+            live: 0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Total rows ever appended since the last seal, dead included.
+    pub fn rows(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Rows that are still visible to search.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Append one row; returns its delta-row index.
+    pub fn push(&mut self, gid: u32, row: &[f32]) -> usize {
+        assert_eq!(row.len(), self.dim, "delta row width {} != dim {}", row.len(), self.dim);
+        let r = self.ids.len();
+        self.data.extend_from_slice(row);
+        self.ids.push(gid);
+        self.alive.push(true);
+        self.live += 1;
+        r
+    }
+
+    /// Mark a row dead (idempotent).
+    pub fn kill(&mut self, row: usize) {
+        if self.alive[row] {
+            self.alive[row] = false;
+            self.live -= 1;
+        }
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.dim..(r + 1) * self.dim]
+    }
+
+    pub fn id_of(&self, r: usize) -> u32 {
+        self.ids[r]
+    }
+
+    pub fn is_alive(&self, r: usize) -> bool {
+        self.alive[r]
+    }
+
+    /// Exact scan over live rows, offering global ids into the shared
+    /// top-k. Costs mirror [`crate::index::flat::FlatIndex`]: two
+    /// flops per scanned dim, dead rows skipped without scoring.
+    pub fn scan(&self, query: &[f32], top: &mut TopK) -> SearchCost {
+        let mut scanned = 0u64;
+        for r in 0..self.rows() {
+            if !self.alive[r] {
+                continue;
+            }
+            top.offer(dot(query, self.row(r)), self.ids[r]);
+            scanned += 1;
+        }
+        SearchCost {
+            flops: scanned * self.dim as u64 * 2,
+            keys_scanned: scanned,
+            cells_probed: 0,
+        }
+    }
+
+    /// Gather the live rows sorted by global id: the `(ids, keys)`
+    /// pair a sealed segment is written from. Returns `None` when no
+    /// row is live.
+    pub fn gather_sorted(&self) -> Option<(Vec<u32>, Tensor)> {
+        if self.live == 0 {
+            return None;
+        }
+        let mut order: Vec<usize> = (0..self.rows()).filter(|&r| self.alive[r]).collect();
+        order.sort_by_key(|&r| self.ids[r]);
+        let mut ids = Vec::with_capacity(order.len());
+        let mut data = Vec::with_capacity(order.len() * self.dim);
+        for &r in &order {
+            ids.push(self.ids[r]);
+            data.extend_from_slice(self.row(r));
+        }
+        let keys = Tensor::from_vec(&[order.len(), self.dim], data);
+        Some((ids, keys))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Effort;
+    use crate::index::flat::FlatIndex;
+    use crate::index::traits::VectorIndex;
+    use crate::util::Rng;
+
+    fn row(seed: u64, d: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; d];
+        Rng::new(seed).fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn push_kill_and_live_counts() {
+        let mut delta = DeltaSegment::new(4);
+        let a = delta.push(10, &row(1, 4));
+        let b = delta.push(11, &row(2, 4));
+        assert_eq!((delta.rows(), delta.live()), (2, 2));
+        delta.kill(a);
+        delta.kill(a); // idempotent
+        assert_eq!((delta.rows(), delta.live()), (2, 1));
+        assert!(!delta.is_alive(a));
+        assert!(delta.is_alive(b));
+        assert_eq!(delta.id_of(b), 11);
+    }
+
+    #[test]
+    fn scan_matches_flat_over_live_rows() {
+        let d = 8;
+        let mut delta = DeltaSegment::new(d);
+        let mut live = Vec::new();
+        for i in 0..30u64 {
+            let r = delta.push(100 + i as u32, &row(i, d));
+            if i % 3 == 0 {
+                delta.kill(r);
+            } else {
+                live.push((100 + i as u32, row(i, d)));
+            }
+        }
+        let q = row(99, d);
+        let mut top = TopK::new(5);
+        let cost = delta.scan(&q, &mut top);
+        let (got_ids, got_scores) = top.into_sorted();
+        assert_eq!(cost.keys_scanned, live.len() as u64);
+
+        let mut data = Vec::new();
+        for (_, v) in &live {
+            data.extend_from_slice(v);
+        }
+        let flat = FlatIndex::new(Tensor::from_vec(&[live.len(), d], data));
+        let want = flat.search_effort(&q, 5, Effort::Exhaustive);
+        let want_ids: Vec<u32> = want.ids.iter().map(|&i| live[i as usize].0).collect();
+        assert_eq!(got_ids, want_ids);
+        assert_eq!(got_scores, want.scores);
+    }
+
+    #[test]
+    fn gather_sorted_restores_monotone_ids() {
+        let mut delta = DeltaSegment::new(2);
+        delta.push(5, &[1.0, 0.0]);
+        let dead = delta.push(1, &[0.0, 1.0]);
+        delta.push(3, &[0.5, 0.5]);
+        delta.kill(dead);
+        // arrival order deliberately disagrees with id order
+        delta.push(2, &[0.25, 0.75]);
+        let (ids, keys) = delta.gather_sorted().unwrap();
+        assert_eq!(ids, vec![2, 3, 5]);
+        assert_eq!(keys.rows(), 3);
+        assert_eq!(keys.row(2), &[1.0, 0.0][..]);
+        let empty = DeltaSegment::new(2);
+        assert!(empty.gather_sorted().is_none());
+    }
+}

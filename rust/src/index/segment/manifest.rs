@@ -1,0 +1,334 @@
+//! Generation manifests: the commit records of a mutable collection.
+//!
+//! One committed generation is one `gen-<n>.tsv` file in the
+//! collection directory — a human-auditable TSV listing the sealed
+//! segments and tombstones that make up that generation, finished by
+//! an FNV-1a checksum over every preceding byte (the same hash the
+//! AMIX artifact container uses). Manifests are written to a `.tmp`
+//! sibling and renamed into place, so a crash leaves either the old
+//! committed generation or the new one — never a half-written record
+//! under the committed name.
+//!
+//! ```text
+//! # amips generation manifest v1
+//! gen     3
+//! dim     32
+//! seed    7
+//! next_id 4096
+//! segment seg-000003-0.ams
+//! tombstone       seg-000003-0.ams        17
+//! checksum        9f3c2a1b00e4d577
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::index::artifact::fnv1a64;
+
+/// Parsed contents of one `gen-<n>.tsv` commit record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GenManifest {
+    /// Generation number; also encoded in the file name.
+    pub gen: u64,
+    /// Key dimensionality of every segment in this generation.
+    pub dim: usize,
+    /// Build seed compactions fold into [`crate::index::BuildCtx`].
+    pub seed: u64,
+    /// Next unassigned global id — ids are never reused.
+    pub next_id: u32,
+    /// Sealed segment file names, in search fan-out order.
+    pub segments: Vec<String>,
+    /// `(segment file, local row)` pairs masked at search time.
+    pub tombstones: Vec<(String, u32)>,
+}
+
+impl GenManifest {
+    /// Canonical file name of a generation's manifest.
+    pub fn file_name(gen: u64) -> String {
+        format!("gen-{gen:06}.tsv")
+    }
+
+    /// Render to the checksummed TSV text.
+    pub fn render(&self) -> String {
+        let mut out = String::from("# amips generation manifest v1\n");
+        out.push_str(&format!("gen\t{}\n", self.gen));
+        out.push_str(&format!("dim\t{}\n", self.dim));
+        out.push_str(&format!("seed\t{}\n", self.seed));
+        out.push_str(&format!("next_id\t{}\n", self.next_id));
+        for seg in &self.segments {
+            out.push_str(&format!("segment\t{seg}\n"));
+        }
+        for (seg, lid) in &self.tombstones {
+            out.push_str(&format!("tombstone\t{seg}\t{lid}\n"));
+        }
+        out.push_str(&format!("checksum\t{:016x}\n", fnv1a64(out.as_bytes())));
+        out
+    }
+
+    /// Strict parse + checksum verification of [`render`]ed text.
+    /// Anything off — missing keys, unknown keys, malformed counts,
+    /// trailing bytes, a checksum mismatch — is a typed error, so a
+    /// torn or bit-flipped manifest can never be half-trusted.
+    pub fn parse(text: &str) -> Result<GenManifest> {
+        if !text.ends_with('\n') {
+            bail!("generation manifest not newline-terminated (torn write?)");
+        }
+        let pos = match text.rfind("\nchecksum\t") {
+            Some(p) => p + 1,
+            None => bail!("generation manifest missing checksum line"),
+        };
+        let prefix = &text[..pos];
+        let mut tail = text[pos..].lines();
+        let sum_line = tail.next().unwrap_or_default();
+        if tail.any(|l| !l.trim().is_empty()) {
+            bail!("generation manifest has content after the checksum line");
+        }
+        let want = sum_line
+            .strip_prefix("checksum\t")
+            .and_then(|h| u64::from_str_radix(h.trim(), 16).ok())
+            .context("generation manifest checksum line malformed")?;
+        let got = fnv1a64(prefix.as_bytes());
+        if got != want {
+            bail!("generation manifest checksum mismatch: computed {got:016x}, recorded {want:016x}");
+        }
+
+        let (mut gen, mut dim, mut seed, mut next_id) = (None, None, None, None);
+        let mut segments = Vec::new();
+        let mut tombstones = Vec::new();
+        for (ln, line) in prefix.lines().enumerate() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let key = parts.next().unwrap_or_default();
+            let val = parts.next();
+            match key {
+                "gen" | "dim" | "seed" | "next_id" => {
+                    let v: u64 = val
+                        .and_then(|v| v.parse().ok())
+                        .with_context(|| format!("manifest line {}: bad {key} value", ln + 1))?;
+                    if parts.next().is_some() {
+                        bail!("manifest line {}: trailing fields after {key}", ln + 1);
+                    }
+                    let slot = match key {
+                        "gen" => &mut gen,
+                        "dim" => &mut dim,
+                        "seed" => &mut seed,
+                        _ => &mut next_id,
+                    };
+                    if slot.replace(v).is_some() {
+                        bail!("manifest line {}: duplicate {key}", ln + 1);
+                    }
+                }
+                "segment" => {
+                    let file = val.context("manifest segment line missing file")?;
+                    check_segment_name(file)?;
+                    if parts.next().is_some() {
+                        bail!("manifest line {}: trailing fields after segment", ln + 1);
+                    }
+                    segments.push(file.to_string());
+                }
+                "tombstone" => {
+                    let file = val.context("manifest tombstone line missing file")?;
+                    check_segment_name(file)?;
+                    let lid: u32 = parts
+                        .next()
+                        .and_then(|v| v.parse().ok())
+                        .with_context(|| format!("manifest line {}: bad tombstone row", ln + 1))?;
+                    if parts.next().is_some() {
+                        bail!("manifest line {}: trailing fields after tombstone", ln + 1);
+                    }
+                    tombstones.push((file.to_string(), lid));
+                }
+                other => bail!("manifest line {}: unknown key {other:?}", ln + 1),
+            }
+        }
+        let m = GenManifest {
+            gen: gen.context("generation manifest missing gen")?,
+            dim: dim.context("generation manifest missing dim")? as usize,
+            seed: seed.context("generation manifest missing seed")?,
+            next_id: u32::try_from(next_id.context("generation manifest missing next_id")?)
+                .context("generation manifest next_id exceeds u32")?,
+            segments,
+            tombstones,
+        };
+        for (file, _) in &m.tombstones {
+            if !m.segments.contains(file) {
+                bail!("generation manifest tombstone references unlisted segment {file:?}");
+            }
+        }
+        Ok(m)
+    }
+
+    /// Read + parse + cross-check that the file name encodes the same
+    /// generation the record claims (catches stray copies/renames).
+    pub fn read(path: &Path) -> Result<GenManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading generation manifest {}", path.display()))?;
+        let m = Self::parse(&text)
+            .with_context(|| format!("parsing generation manifest {}", path.display()))?;
+        let named = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .and_then(parse_gen_file_name);
+        if named != Some(m.gen) {
+            bail!(
+                "generation manifest {} records gen {} but is named for {:?}",
+                path.display(),
+                m.gen,
+                named
+            );
+        }
+        Ok(m)
+    }
+
+    /// Commit this manifest: write `gen-<n>.tsv.tmp`, fsync-free
+    /// rename into place (same discipline as the catalog manifest).
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(Self::file_name(self.gen));
+        let tmp = dir.join(format!("{}.tmp", Self::file_name(self.gen)));
+        std::fs::write(&tmp, self.render())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("committing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// Segment file names live flat inside the collection directory; a
+/// manifest can never point the loader anywhere else.
+fn check_segment_name(name: &str) -> Result<()> {
+    let ok = name.starts_with("seg-")
+        && name.ends_with(".ams")
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '.' || c == '_');
+    if !ok {
+        bail!("manifest references invalid segment file name {name:?}");
+    }
+    Ok(())
+}
+
+/// `gen-000123.tsv` → `Some(123)`.
+pub(crate) fn parse_gen_file_name(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("gen-")?.strip_suffix(".tsv")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Enumerate committed generations in `dir`, newest first. Files that
+/// merely look similar (`.tmp` leftovers, foreign names) are ignored.
+pub fn list_generations(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut found = Vec::new();
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing collection directory {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(gen) = parse_gen_file_name(name) {
+            found.push((gen, entry.path()));
+        }
+    }
+    found.sort_by(|a, b| b.0.cmp(&a.0));
+    Ok(found)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn sample() -> GenManifest {
+        GenManifest {
+            gen: 3,
+            dim: 32,
+            seed: 7,
+            next_id: 4096,
+            segments: vec!["seg-000003-0.ams".into(), "seg-000002-1.ams".into()],
+            tombstones: vec![("seg-000002-1.ams".into(), 17), ("seg-000002-1.ams".into(), 2)],
+        }
+    }
+
+    #[test]
+    fn render_parse_round_trip() {
+        let m = sample();
+        assert_eq!(GenManifest::parse(&m.render()).unwrap(), m);
+    }
+
+    #[test]
+    fn every_byte_flip_is_detected() {
+        let text = sample().render();
+        let bytes = text.as_bytes();
+        for i in 0..bytes.len() {
+            let mut mutated = bytes.to_vec();
+            mutated[i] ^= 0x11;
+            let Ok(s) = String::from_utf8(mutated) else { continue };
+            assert!(
+                GenManifest::parse(&s).is_err(),
+                "flip at byte {i} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn truncations_are_detected() {
+        let text = sample().render();
+        for cut in 0..text.len() {
+            if !text.is_char_boundary(cut) {
+                continue;
+            }
+            assert!(GenManifest::parse(&text[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn rejects_structural_abuse() {
+        // content after the checksum line
+        let mut text = sample().render();
+        text.push_str("segment\tseg-evil-0.ams\n");
+        assert!(GenManifest::parse(&text).is_err());
+        // tombstone pointing at an unlisted segment
+        let mut m = sample();
+        m.tombstones.push(("seg-999999-9.ams".into(), 0));
+        assert!(GenManifest::parse(&m.render()).is_err());
+        // path traversal in a segment name never parses
+        let mut m = sample();
+        m.segments.push("../../etc/passwd".into());
+        assert!(GenManifest::parse(&m.render()).is_err());
+    }
+
+    #[test]
+    fn write_then_read_and_name_cross_check() {
+        let tmp = TempDir::new("genman");
+        let m = sample();
+        let path = m.write(tmp.path()).unwrap();
+        assert_eq!(GenManifest::read(&path).unwrap(), m);
+        assert!(!tmp.join("gen-000003.tsv.tmp").exists());
+        // a renamed copy is refused even though its checksum is fine
+        let copy = tmp.join("gen-000009.tsv");
+        std::fs::copy(&path, &copy).unwrap();
+        assert!(GenManifest::read(&copy).is_err());
+    }
+
+    #[test]
+    fn list_generations_newest_first() {
+        let tmp = TempDir::new("genlist");
+        for gen in [1u64, 4, 2] {
+            let mut m = sample();
+            m.gen = gen;
+            m.write(tmp.path()).unwrap();
+        }
+        std::fs::write(tmp.join("gen-000009.tsv.tmp"), b"torn").unwrap();
+        std::fs::write(tmp.join("notes.txt"), b"x").unwrap();
+        let gens: Vec<u64> = list_generations(tmp.path())
+            .unwrap()
+            .into_iter()
+            .map(|(g, _)| g)
+            .collect();
+        assert_eq!(gens, vec![4, 2, 1]);
+    }
+}

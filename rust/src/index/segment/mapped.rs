@@ -1,0 +1,178 @@
+//! Byte source for sealed segment files: `mmap(2)` under the `mmap`
+//! feature (zero-copy page-cache startup), plain `std::fs::read` into
+//! RAM otherwise. No new crates — the mmap path is a two-symbol libc
+//! FFI that std already links against on unix.
+
+use std::fs::File;
+use std::io::{self, Read};
+use std::path::Path;
+
+/// An immutable byte buffer backed either by an anonymous read of the
+/// file or (with `--features mmap` on unix) by a private read-only
+/// mapping. Deref to `&[u8]` and hand it to the segment decoder.
+pub struct Mapped {
+    inner: Inner,
+}
+
+enum Inner {
+    Ram(Vec<u8>),
+    #[cfg(all(feature = "mmap", unix))]
+    Map(map::MapHandle),
+}
+
+impl Mapped {
+    /// Read (or map) an entire file. Empty files yield an empty slice
+    /// through the RAM path: `mmap` with `len == 0` is EINVAL.
+    pub fn open(path: &Path) -> io::Result<Mapped> {
+        let mut f = File::open(path)?;
+        let len = f.metadata()?.len();
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "segment file larger than address space",
+            ));
+        }
+        #[cfg(all(feature = "mmap", unix))]
+        {
+            if len > 0 {
+                match map::MapHandle::map(&f, len as usize) {
+                    Ok(m) => return Ok(Mapped { inner: Inner::Map(m) }),
+                    // e.g. a filesystem that refuses mappings — fall
+                    // back to the portable read-into-RAM path.
+                    Err(_) => {}
+                }
+            }
+        }
+        let mut buf = Vec::with_capacity(len as usize);
+        f.read_to_end(&mut buf)?;
+        Ok(Mapped { inner: Inner::Ram(buf) })
+    }
+
+    /// Wrap an in-RAM buffer (used by tests and by writers that keep
+    /// the bytes they just produced).
+    pub fn from_vec(buf: Vec<u8>) -> Mapped {
+        Mapped { inner: Inner::Ram(buf) }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.inner {
+            Inner::Ram(v) => v,
+            #[cfg(all(feature = "mmap", unix))]
+            Inner::Map(m) => m.as_slice(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::ops::Deref for Mapped {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+#[cfg(all(feature = "mmap", unix))]
+mod map {
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    use core::ffi::{c_int, c_void};
+
+    const PROT_READ: c_int = 1;
+    const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    /// A private read-only mapping of one whole file, unmapped on drop.
+    pub(super) struct MapHandle {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // The mapping is read-only and owned exclusively by this handle.
+    unsafe impl Send for MapHandle {}
+    unsafe impl Sync for MapHandle {}
+
+    impl MapHandle {
+        pub(super) fn map(f: &File, len: usize) -> io::Result<MapHandle> {
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    f.as_raw_fd(),
+                    0,
+                )
+            };
+            // MAP_FAILED is (void*)-1 on every unix we target.
+            if ptr as isize == -1 || ptr.is_null() {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(MapHandle { ptr, len })
+        }
+
+        pub(super) fn as_slice(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for MapHandle {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    #[test]
+    fn open_reads_whole_file() {
+        let tmp = TempDir::new("mapped");
+        let path = tmp.join("blob.bin");
+        let bytes: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&path, &bytes).unwrap();
+        let m = Mapped::open(&path).unwrap();
+        assert_eq!(&m[..], &bytes[..]);
+        assert_eq!(m.len(), 10_000);
+    }
+
+    #[test]
+    fn open_empty_file_is_empty_slice() {
+        let tmp = TempDir::new("mapped");
+        let path = tmp.join("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let m = Mapped::open(&path).unwrap();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let tmp = TempDir::new("mapped");
+        assert!(Mapped::open(&tmp.join("nope.bin")).is_err());
+    }
+}

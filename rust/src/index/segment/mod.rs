@@ -1,0 +1,53 @@
+//! Mutable collections: a generation/segment lifecycle on top of the
+//! immutable backbones.
+//!
+//! Every backbone in [`crate::index`] is build-once: great for the
+//! paper's experiments, useless for a database that churns under a
+//! live server. This module layers mutability *around* them instead of
+//! inside them, LSM-style:
+//!
+//! * [`DeltaSegment`] — a small append-friendly in-RAM segment holding
+//!   rows inserted (or upserted) since the last commit. Searched by
+//!   exact flat scan, so recent writes are always served exactly.
+//! * [`SealedSegment`] — an immutable on-disk segment (`seg-*.ams`):
+//!   a checksummed container holding the row→global-id map, the raw
+//!   key vectors (the source of truth future compactions rebuild
+//!   from), and optionally an embedded AMIX artifact for any backbone.
+//!   Sealed payloads are memory-mapped under the `mmap` feature and
+//!   read into RAM otherwise (see [`mapped`]).
+//! * tombstones — per-segment sets of dead local rows. Deletes and
+//!   upserts never rewrite a sealed segment; they mask rows at search
+//!   time and are folded away by the next compaction.
+//! * [`GenManifest`] — `gen-<n>.tsv`, the versioned, FNV-checksummed,
+//!   write-then-rename commit record listing the live segments and
+//!   tombstones of one generation. Crash at any point recovers to the
+//!   last generation whose manifest *and* every listed segment check
+//!   out; torn manifests, stale `.tmp` files and orphan segments are
+//!   skipped and garbage-collected.
+//! * [`MutableCollection`] — the user-facing handle tying it together:
+//!   `insert`/`upsert`/`delete` are serialized by an internal mutex,
+//!   searches fan out over delta + sealed segments under a read lock
+//!   and merge per-segment [`crate::index::traits::TopK`] results with
+//!   tombstone masking, and `commit`/`compact` advance the generation.
+//!   It implements [`crate::index::VectorIndex`], so the whole serving
+//!   stack (tenant workers, TCP front-end, CLI) works unchanged on a
+//!   churning collection.
+//! * [`Compactor`] — a background worker that watches delta growth and
+//!   tombstone debt and folds everything into one fresh sealed segment
+//!   through the existing [`crate::index::IndexSpec::build`] path.
+//!   Searches are never blocked: the old generation serves until the
+//!   new one commits in an O(1) pointer swap.
+
+pub mod collection;
+pub mod compact;
+pub mod delta;
+pub mod manifest;
+pub mod mapped;
+pub mod sealed;
+
+pub use collection::MutableCollection;
+pub use compact::{Compactor, CompactorConfig};
+pub use delta::DeltaSegment;
+pub use manifest::GenManifest;
+pub use mapped::Mapped;
+pub use sealed::SealedSegment;

@@ -1,0 +1,352 @@
+//! Sealed segments: the immutable on-disk unit of a mutable
+//! collection (`seg-<gen>-<i>.ams`).
+//!
+//! A sealed segment is a checksummed container (magic `AMSG`) holding
+//! three things:
+//!
+//! 1. the local-row → global-id map (strictly increasing, so the
+//!    per-backbone tie-break toward lower local id maps exactly onto
+//!    the collection-wide tie-break toward lower global id),
+//! 2. the raw key vectors — the source of truth future compactions
+//!    rebuild from (lossy backbones like PQ cannot reproduce them),
+//! 3. optionally an embedded AMIX artifact for any backbone; when
+//!    absent the segment is served by an exact flat scan over the raw
+//!    keys (the common case for freshly sealed deltas).
+//!
+//! Files are written to a `.tmp` sibling and renamed into place, and
+//! are only ever referenced by a generation manifest *after* the
+//! rename — so a crash mid-write leaves an orphan the loader never
+//! trusts and the next commit garbage-collects.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::api::Effort;
+use crate::index::artifact::{self, fnv1a64, r_tensor, r_u8s, r_u32s, r_u64, w_tensor, w_u8s, w_u32s, w_u64};
+use crate::index::flat::FlatIndex;
+use crate::index::traits::{SearchResult, VectorIndex};
+use crate::tensor::Tensor;
+
+use super::mapped::Mapped;
+
+/// Magic bytes of the sealed-segment container.
+pub const SEG_MAGIC: &[u8; 4] = b"AMSG";
+/// Container version this build reads and writes.
+pub const SEG_VERSION: u32 = 1;
+/// Same implausibility cap as the AMIX container.
+const MAX_ELEMS: u64 = 1 << 31;
+
+enum Body {
+    /// No embedded artifact: serve by exact flat scan over raw keys.
+    Flat(FlatIndex),
+    /// Embedded backbone artifact + the raw keys it was built from.
+    Backbone {
+        keys: Tensor,
+        index: Box<dyn VectorIndex>,
+    },
+}
+
+/// One immutable, loaded (or mapped) segment of a mutable collection.
+pub struct SealedSegment {
+    file: String,
+    ids: Vec<u32>,
+    body: Body,
+}
+
+impl SealedSegment {
+    /// Canonical file name: generation that sealed it + ordinal within
+    /// that generation.
+    pub fn file_name(gen: u64, ordinal: usize) -> String {
+        format!("seg-{gen:06}-{ordinal}.ams")
+    }
+
+    /// Number of rows (dead or alive — tombstones live outside).
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.keys().row_width()
+    }
+
+    /// File name within the collection directory.
+    pub fn file(&self) -> &str {
+        &self.file
+    }
+
+    /// Local row → global id map (strictly increasing).
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    /// Raw key vectors, `[len, dim]`.
+    pub fn keys(&self) -> &Tensor {
+        match &self.body {
+            Body::Flat(f) => f.keys(),
+            Body::Backbone { keys, .. } => keys,
+        }
+    }
+
+    /// The serving index (flat scan or the embedded backbone).
+    pub fn index(&self) -> &dyn VectorIndex {
+        match &self.body {
+            Body::Flat(f) => f,
+            Body::Backbone { index, .. } => index.as_ref(),
+        }
+    }
+
+    /// Top-k in *local* row ids; the collection remaps through
+    /// [`SealedSegment::ids`] and masks tombstones.
+    pub fn search_local(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult {
+        self.index().search_effort(query, k, effort)
+    }
+
+    /// Serialize `ids` + raw `keys` (+ optionally a backbone artifact
+    /// built over those keys) and commit via write-then-rename.
+    pub fn write(
+        path: &Path,
+        ids: &[u32],
+        keys: &Tensor,
+        index: Option<&dyn VectorIndex>,
+    ) -> Result<()> {
+        ensure!(
+            ids.len() == keys.rows(),
+            "sealed segment id map covers {} rows but keys have {}",
+            ids.len(),
+            keys.rows()
+        );
+        ensure!(!ids.is_empty(), "refusing to seal an empty segment");
+        ensure!(
+            ids.windows(2).all(|w| w[0] < w[1]),
+            "sealed segment ids must be strictly increasing"
+        );
+        let mut payload = Vec::new();
+        w_u32s(&mut payload, ids)?;
+        w_tensor(&mut payload, keys)?;
+        let mut art = Vec::new();
+        if let Some(index) = index {
+            ensure!(
+                index.len() == keys.rows() && index.dim() == keys.row_width(),
+                "embedded index shape {}x{} disagrees with keys {}x{}",
+                index.len(),
+                index.dim(),
+                keys.rows(),
+                keys.row_width()
+            );
+            index.save(&mut art)?;
+        }
+        w_u8s(&mut payload, &art)?;
+
+        let tmp = path.with_extension("ams.tmp");
+        let mut bytes = Vec::with_capacity(payload.len() + 64);
+        bytes.write_all(SEG_MAGIC)?;
+        artifact::w_u32(&mut bytes, SEG_VERSION)?;
+        w_u64(&mut bytes, keys.row_width() as u64)?;
+        w_u64(&mut bytes, keys.rows() as u64)?;
+        w_u64(&mut bytes, payload.len() as u64)?;
+        bytes.write_all(&payload)?;
+        w_u64(&mut bytes, fnv1a64(&payload))?;
+        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path).with_context(|| format!("sealing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load (mmap under the `mmap` feature) + fully validate one
+    /// segment file. Every structural claim is checked before use:
+    /// magic/version, checksum over the payload, id-map monotonicity,
+    /// shape agreement between header, keys and any embedded artifact.
+    pub fn load(path: &Path) -> Result<SealedSegment> {
+        let file = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .context("segment path has no file name")?
+            .to_string();
+        let mapped = Mapped::open(path)
+            .with_context(|| format!("opening sealed segment {}", path.display()))?;
+        Self::decode(&mapped, file)
+            .with_context(|| format!("loading sealed segment {}", path.display()))
+    }
+
+    fn decode(bytes: &[u8], file: String) -> Result<SealedSegment> {
+        let mut r: &[u8] = bytes;
+        let mut magic = [0u8; 4];
+        std::io::Read::read_exact(&mut r, &mut magic).context("reading segment magic")?;
+        ensure!(
+            &magic == SEG_MAGIC,
+            "bad sealed segment magic {magic:?} (expected {SEG_MAGIC:?})"
+        );
+        let version = artifact::r_u32(&mut r)?;
+        ensure!(
+            version == SEG_VERSION,
+            "unsupported sealed segment version {version} (this build reads {SEG_VERSION})"
+        );
+        let dim = r_u64(&mut r)?;
+        let len = r_u64(&mut r)?;
+        ensure!(
+            dim > 0 && dim <= MAX_ELEMS && len > 0 && len <= MAX_ELEMS,
+            "implausible sealed segment shape {len}x{dim}"
+        );
+        let plen = r_u64(&mut r)?;
+        ensure!(
+            plen <= r.len() as u64,
+            "sealed segment truncated: payload claims {plen} bytes, {} remain",
+            r.len()
+        );
+        let (payload, mut rest) = r.split_at(plen as usize);
+        let want = r_u64(&mut rest).context("sealed segment truncated: missing checksum")?;
+        let got = fnv1a64(payload);
+        ensure!(
+            got == want,
+            "sealed segment checksum mismatch (stored {want:#018x}, computed {got:#018x}): corrupt file"
+        );
+        ensure!(
+            rest.is_empty(),
+            "sealed segment has {} trailing bytes after checksum",
+            rest.len()
+        );
+
+        let mut p: &[u8] = payload;
+        let ids = r_u32s(&mut p)?;
+        let keys = r_tensor(&mut p)?;
+        let art = r_u8s(&mut p)?;
+        ensure!(p.is_empty(), "sealed segment payload has trailing bytes");
+        ensure!(
+            ids.len() as u64 == len && keys.rows() as u64 == len,
+            "sealed segment header advertises {len} rows but decodes {} ids over {} keys",
+            ids.len(),
+            keys.rows()
+        );
+        ensure!(
+            keys.row_width() as u64 == dim,
+            "sealed segment header advertises dim {dim} but keys decode to {}",
+            keys.row_width()
+        );
+        ensure!(
+            ids.windows(2).all(|w| w[0] < w[1]),
+            "sealed segment id map is not strictly increasing: corrupt file"
+        );
+        let body = if art.is_empty() {
+            Body::Flat(FlatIndex::new(keys))
+        } else {
+            let mut ar: &[u8] = &art;
+            let index = artifact::load_from(&mut ar)?;
+            if index.len() != keys.rows() || index.dim() != keys.row_width() {
+                bail!(
+                    "embedded artifact shape {}x{} disagrees with segment keys {}x{}",
+                    index.len(),
+                    index.dim(),
+                    keys.rows(),
+                    keys.row_width()
+                );
+            }
+            Body::Backbone { keys, index }
+        };
+        Ok(SealedSegment { file, ids, body })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::spec::{BuildCtx, IndexSpec};
+    use crate::util::{Rng, TempDir};
+
+    fn unit(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        crate::tensor::normalize_rows(&mut t);
+        t
+    }
+
+    #[test]
+    fn flat_round_trip_scans_exactly() {
+        let tmp = TempDir::new("sealed");
+        let keys = unit(&[64, 8], 1);
+        let ids: Vec<u32> = (0..64).map(|i| i * 3).collect();
+        let path = tmp.join(&SealedSegment::file_name(1, 0));
+        SealedSegment::write(&path, &ids, &keys, None).unwrap();
+        let seg = SealedSegment::load(&path).unwrap();
+        assert_eq!((seg.len(), seg.dim()), (64, 8));
+        assert_eq!(seg.ids(), &ids[..]);
+        let q = unit(&[1, 8], 2);
+        let want = FlatIndex::new(keys).search_effort(q.row(0), 5, Effort::Exhaustive);
+        let got = seg.search_local(q.row(0), 5, Effort::Exhaustive);
+        assert_eq!(want.ids, got.ids);
+        assert_eq!(want.scores, got.scores);
+        assert!(!tmp.join("seg-000001-0.ams.tmp").exists());
+    }
+
+    #[test]
+    fn backbone_round_trip_preserves_raw_keys() {
+        let tmp = TempDir::new("sealed");
+        let keys = unit(&[120, 16], 3);
+        let ids: Vec<u32> = (0..120).collect();
+        let idx = IndexSpec::default_for("ivf")
+            .unwrap()
+            .with_nlist(4)
+            .build(&keys, &BuildCtx::seeded(7))
+            .unwrap();
+        let path = tmp.join(&SealedSegment::file_name(2, 1));
+        SealedSegment::write(&path, &ids, &keys, Some(idx.as_ref())).unwrap();
+        let seg = SealedSegment::load(&path).unwrap();
+        assert_eq!(seg.index().name(), "ivf");
+        assert_eq!(seg.keys().data(), keys.data());
+        let q = unit(&[1, 16], 4);
+        let want = idx.search_effort(q.row(0), 7, Effort::Exhaustive);
+        let got = seg.search_local(q.row(0), 7, Effort::Exhaustive);
+        assert_eq!(want.ids, got.ids);
+    }
+
+    #[test]
+    fn rejects_malformed_writes() {
+        let tmp = TempDir::new("sealed");
+        let keys = unit(&[8, 4], 5);
+        let path = tmp.join("seg-000001-0.ams");
+        // id count mismatch
+        assert!(SealedSegment::write(&path, &[1, 2], &keys, None).is_err());
+        // non-monotone ids
+        let ids: Vec<u32> = (0..8).rev().collect();
+        assert!(SealedSegment::write(&path, &ids, &keys, None).is_err());
+        // empty segment
+        assert!(SealedSegment::write(&path, &[], &Tensor::zeros(&[0, 4]), None).is_err());
+    }
+
+    #[test]
+    fn corruption_is_typed_never_trusted() {
+        let tmp = TempDir::new("sealed");
+        let keys = unit(&[32, 8], 6);
+        let ids: Vec<u32> = (0..32).collect();
+        let path = tmp.join("seg-000001-0.ams");
+        SealedSegment::write(&path, &ids, &keys, None).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        let mut rng = Rng::new(9);
+        for case in 0..crate::util::prop_cases(120) {
+            let mut bytes = clean.clone();
+            if case % 3 == 0 {
+                bytes.truncate(rng.below(bytes.len()));
+            } else {
+                let i = rng.below(bytes.len());
+                bytes[i] ^= (1 + rng.below(255)) as u8;
+            }
+            if bytes == clean {
+                continue;
+            }
+            let corrupt = tmp.join("seg-000002-0.ams");
+            std::fs::write(&corrupt, &bytes).unwrap();
+            match SealedSegment::load(&corrupt) {
+                // typed error: the common, expected outcome
+                Err(_) => {}
+                // a flip the checksum cannot see (e.g. inside the
+                // already-verified header echo) must still produce a
+                // structurally valid segment
+                Ok(seg) => assert_eq!(seg.len(), seg.ids().len()),
+            }
+        }
+    }
+}

@@ -8,10 +8,19 @@
 //! amips search    [--backend ivf | --spec "ivf(nlist=64)"] [--n 20000]
 //!                 [--d 32] [--k 10]           # pure-Rust API demo/sweep
 //! amips build     --catalog DIR --name NAME [--spec "scann(nlist=64)"]
-//!                 [--keys f.amt | --n 20000 --d 32]
+//!                 [--keys f.amt | --n 20000 --d 32] [--mutable]
 //!                 # specs compose: --spec "sharded(shards=8,inner=ivf(nlist=64))"
 //!                 #                partitions keys and fans search out per shard
+//!                 # --mutable creates a `<name>.seg` mutable collection
+//!                 # (delta + sealed segments) instead of a frozen artifact
 //!                                             # train once, persist artifact
+//! amips upsert    --name NAME (--addr HOST:PORT | --catalog DIR)
+//!                 [--ids 1,2,3] [--n ROWS] [--d 32] [--seed S]
+//!                 # insert (no --ids) or upsert synthetic rows into a
+//!                 # mutable collection; direct --catalog mode commits
+//! amips delete    --name NAME (--addr HOST:PORT | --catalog DIR) --ids 1,2,3
+//! amips compact   --name NAME (--addr HOST:PORT | --catalog DIR)
+//!                 # fold delta + tombstones into a fresh sealed generation
 //! amips train     [--model keynet|supportnet] [--n 20000 --d 32 --c 1]
 //!                 [--steps N --lr F --h H --layers L] [--out model.amm]
 //!                 [--catalog DIR --name NAME [--spec "ivf(nlist=64)"]]
@@ -52,6 +61,9 @@ fn run() -> Result<()> {
         Some("gen-data") => cmd_gen_data(&args),
         Some("search") => cmd_search(&args),
         Some("build") => cmd_build(&args),
+        Some("upsert") => cmd_mutate(&args, "upsert"),
+        Some("delete") => cmd_mutate(&args, "delete"),
+        Some("compact") => cmd_compact(&args),
         // `serve --catalog` is pure Rust (prebuilt artifacts, optional
         // trained mapper); plain `serve` drives the AOT KeyNet mapper
         // and needs `xla`. `train`/`eval` run the pure-Rust backend by
@@ -69,7 +81,7 @@ fn run() -> Result<()> {
         None => {
             println!("amips {} — amortized MIPS coordinator", amips::version());
             println!(
-                "commands: list | gen-data | search | build | train | eval | serve --catalog [--listen] | probe | route | serve"
+                "commands: list | gen-data | search | build | upsert | delete | compact | train | eval | serve --catalog [--listen] | probe | route | serve"
             );
             Ok(())
         }
@@ -232,6 +244,7 @@ fn cmd_build(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 20_000)?;
     let d = args.get_usize("d", 32)?;
     let seed = args.get_u64("seed", 42)?;
+    let mutable = args.has("mutable");
     args.reject_unknown()?;
 
     // synthetic keys come from the shared corpus generator, so an index
@@ -248,18 +261,37 @@ fn cmd_build(args: &Args) -> Result<()> {
     // manifest-only append: existing artifacts in the catalog are not
     // deserialized just to add one more collection
     let timer = Timer::start();
-    let entry = Catalog::append_collection(
-        &catalog_dir,
-        &name,
-        &spec,
-        &keys,
-        &BuildCtx {
-            sample_queries: sample_queries.as_ref(),
-            seed,
-        },
-    )?;
+    let entry = if mutable {
+        // mutable lifecycle: create the `<name>.seg` directory, load the
+        // keys as the first delta, seal generation 1 so a fresh process
+        // (or a crash right after this command) sees all of them
+        let entry = Catalog::create_mutable(&catalog_dir, &name, &spec, keys.shape()[1], seed)?;
+        let coll = entry.mutable.as_ref().expect("create_mutable entry");
+        coll.insert(&keys)?;
+        coll.commit()?;
+        entry
+    } else {
+        Catalog::append_collection(
+            &catalog_dir,
+            &name,
+            &spec,
+            &keys,
+            &BuildCtx {
+                sample_queries: sample_queries.as_ref(),
+                seed,
+            },
+        )?
+    };
     let build_s = timer.elapsed_s();
-    let bytes = std::fs::metadata(&entry.path)?.len();
+    let bytes = if entry.path.is_dir() {
+        let mut total = 0u64;
+        for f in std::fs::read_dir(&entry.path)? {
+            total += f?.metadata()?.len();
+        }
+        total
+    } else {
+        std::fs::metadata(&entry.path)?.len()
+    };
 
     let mut rep = Report::new(&format!("build {name} -> {}", entry.path.display()));
     rep.header(&["collection", "spec", "keys", "d", "artifact KiB", "build s"]);
@@ -275,6 +307,171 @@ fn cmd_build(args: &Args) -> Result<()> {
         "serve it with: amips serve --catalog {catalog_dir} --collection {name}"
     ));
     rep.emit("build");
+    Ok(())
+}
+
+/// Comma-separated id list: `--ids 1,2,3`.
+fn parse_ids(s: &str) -> Result<Vec<u32>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.parse::<u32>()
+                .map_err(|e| anyhow::anyhow!("bad id '{t}' in --ids: {e}"))
+        })
+        .collect()
+}
+
+/// `amips upsert` / `amips delete`: apply one mutation to a mutable
+/// collection, either over TCP (`--addr`, served by the running
+/// process) or directly against the catalog on disk (`--catalog`,
+/// commits a new generation before returning so the change is durable).
+fn cmd_mutate(args: &Args, op: &str) -> Result<()> {
+    use amips::coordinator::net::NetClient;
+    use amips::index::{Catalog, VectorIndex};
+    use amips::util::Timer;
+    use std::time::Duration;
+
+    let name = args.require("name")?.to_string();
+    let addr = args.get("addr").map(str::to_string);
+    let catalog_dir = args.get("catalog").map(str::to_string);
+    anyhow::ensure!(
+        addr.is_some() != catalog_dir.is_some(),
+        "pass exactly one of --addr HOST:PORT (TCP) or --catalog DIR (direct)"
+    );
+    let ids: Vec<u32> = match args.get("ids") {
+        Some(s) => parse_ids(s)?,
+        None => Vec::new(),
+    };
+    // upsert/insert rows come from the shared synthetic corpus
+    // generator, so smoke scripts get deterministic vectors
+    let vecs = if op == "delete" {
+        anyhow::ensure!(!ids.is_empty(), "delete needs --ids 1,2,3");
+        None
+    } else {
+        let d = args.get_usize("d", 32)?;
+        let rows = if ids.is_empty() {
+            args.get_usize("n", 1)?
+        } else {
+            ids.len()
+        };
+        anyhow::ensure!(rows >= 1, "need at least one row (--n or --ids)");
+        let seed = args.get_u64("seed", 42)?;
+        Some(fixtures::synth_keys(rows, d, seed))
+    };
+    args.reject_unknown()?;
+
+    let (done_ids, len, gen, micros, via) = match (&addr, &catalog_dir) {
+        (Some(a), None) => {
+            let mut client = NetClient::connect(a.as_str())?;
+            client.set_timeout(Some(Duration::from_secs(30)))?;
+            let m = match &vecs {
+                None => client.delete(&name, &ids)?,
+                Some(v) if ids.is_empty() => client.insert(&name, v)?,
+                Some(v) => client.upsert(&name, &ids, v)?,
+            };
+            (m.ids, m.len, m.gen, m.server_micros, format!("tcp {a}"))
+        }
+        (None, Some(dir)) => {
+            let catalog = Catalog::open(dir)?;
+            let coll = catalog.mutable(&name).ok_or_else(|| {
+                anyhow::anyhow!("'{name}' is not a mutable collection in {dir}")
+            })?;
+            let timer = Timer::start();
+            let out_ids = match &vecs {
+                None => {
+                    coll.delete(&ids)?;
+                    ids.clone()
+                }
+                Some(v) if ids.is_empty() => coll.insert(v)?,
+                Some(v) => {
+                    coll.upsert(&ids, v)?;
+                    ids.clone()
+                }
+            };
+            let gen = coll.commit()?;
+            (
+                out_ids,
+                coll.len() as u64,
+                gen,
+                (timer.elapsed_s() * 1e6) as u64,
+                format!("catalog {dir}"),
+            )
+        }
+        _ => unreachable!("exactly one of addr/catalog ensured above"),
+    };
+
+    let effective = if vecs.is_none() {
+        "delete"
+    } else if ids.is_empty() {
+        "insert"
+    } else {
+        "upsert"
+    };
+    let mut rep = Report::new(&format!("{effective} {name} via {via}"));
+    rep.header(&["op", "rows", "live len", "generation", "micros"]);
+    rep.row(&[
+        effective.into(),
+        done_ids.len().to_string(),
+        len.to_string(),
+        gen.to_string(),
+        micros.to_string(),
+    ]);
+    if !done_ids.is_empty() {
+        let show: Vec<String> = done_ids.iter().take(8).map(u32::to_string).collect();
+        let ell = if done_ids.len() > 8 { ", …" } else { "" };
+        rep.note(format!("ids: {}{}", show.join(", "), ell));
+    }
+    rep.emit("mutate");
+    Ok(())
+}
+
+/// `amips compact`: fold a mutable collection's delta + tombstones into
+/// a fresh sealed generation (TCP or direct catalog mode, like
+/// [`cmd_mutate`]).
+fn cmd_compact(args: &Args) -> Result<()> {
+    use amips::coordinator::net::NetClient;
+    use amips::index::{Catalog, VectorIndex};
+    use amips::util::Timer;
+    use std::time::Duration;
+
+    let name = args.require("name")?.to_string();
+    let addr = args.get("addr").map(str::to_string);
+    let catalog_dir = args.get("catalog").map(str::to_string);
+    anyhow::ensure!(
+        addr.is_some() != catalog_dir.is_some(),
+        "pass exactly one of --addr HOST:PORT (TCP) or --catalog DIR (direct)"
+    );
+    args.reject_unknown()?;
+
+    let (len, gen, micros, via) = match (&addr, &catalog_dir) {
+        (Some(a), None) => {
+            let mut client = NetClient::connect(a.as_str())?;
+            client.set_timeout(Some(Duration::from_secs(120)))?;
+            let m = client.compact(&name)?;
+            (m.len, m.gen, m.server_micros, format!("tcp {a}"))
+        }
+        (None, Some(dir)) => {
+            let catalog = Catalog::open(dir)?;
+            let coll = catalog.mutable(&name).ok_or_else(|| {
+                anyhow::anyhow!("'{name}' is not a mutable collection in {dir}")
+            })?;
+            let timer = Timer::start();
+            let gen = coll.compact()?;
+            (
+                coll.len() as u64,
+                gen,
+                (timer.elapsed_s() * 1e6) as u64,
+                format!("catalog {dir}"),
+            )
+        }
+        _ => unreachable!("exactly one of addr/catalog ensured above"),
+    };
+
+    let mut rep = Report::new(&format!("compact {name} via {via}"));
+    rep.header(&["live len", "generation", "micros"]);
+    rep.row(&[len.to_string(), gen.to_string(), micros.to_string()]);
+    rep.emit("compact");
     Ok(())
 }
 
@@ -635,10 +832,23 @@ fn cmd_probe(args: &Args) -> Result<()> {
     args.reject_unknown()?;
     let timeout = Some(Duration::from_secs(5));
 
-    // 1. liveness
+    // 1. liveness. A draining server is not *down* — report the drain
+    // window distinctly (the typed retryable reply) instead of failing
+    // the probe like a dead or misbehaving endpoint.
     let mut client = NetClient::connect(addr.as_str())?;
     client.set_timeout(timeout)?;
-    client.ping()?;
+    match client.ping() {
+        Ok(()) => {}
+        Err(NetError::Draining(e)) => {
+            let mut rep = Report::new(&format!("probe {addr}"));
+            rep.header(&["check", "typed reply"]);
+            rep.row(&["ping".into(), format!("draining ({})", e.code)]);
+            rep.note("server is shutting down (retryable); re-probe after the restart completes");
+            rep.emit("probe");
+            return Ok(());
+        }
+        Err(e) => return Err(e.into()),
+    }
     let stats = client.stats()?;
 
     // 2. malformed-frame probes: each opens a fresh connection (a

@@ -288,7 +288,7 @@ fn shutdown_completes_under_ping_spam() {
             loop {
                 match client.ping() {
                     Ok(()) => {}
-                    Err(NetError::Server(e)) => {
+                    Err(NetError::Draining(e)) => {
                         assert_eq!(e.code, ErrorCode::ShuttingDown);
                         break;
                     }
@@ -332,8 +332,13 @@ fn graceful_shutdown_drains_and_closes_cleanly() {
 
     match idle.ping() {
         Ok(()) => panic!("draining server must not answer new pings"),
-        Err(NetError::Server(e)) => assert_eq!(e.code, ErrorCode::ShuttingDown),
-        Err(_) => {} // closed before the ping: also clean
+        Err(NetError::Draining(e)) => {
+            assert_eq!(e.code, ErrorCode::ShuttingDown);
+        }
+        Err(e) => assert!(
+            !matches!(e, NetError::Server(_)),
+            "drain reply must be the typed retryable variant, got {e}"
+        ),
     }
 
     // the port is released: fresh connections fail, or at best get a

@@ -1,0 +1,302 @@
+//! Mutable-collection lifecycle properties (pure Rust — default
+//! features): randomized insert/delete/upsert traces must make a
+//! [`MutableCollection`] *bit-identical* at `Effort::Exhaustive` to a
+//! from-scratch [`FlatIndex`] over the post-trace key set — before and
+//! after `commit()`/`compact()` and across a reopen — plus concurrent
+//! search-during-compaction consistency and the crash-recovery
+//! contract for generations.
+
+use amips::api::Effort;
+use amips::index::flat::FlatIndex;
+use amips::index::{IndexSpec, MutableCollection, VectorIndex};
+use amips::tensor::Tensor;
+use amips::util::{prop_cases, Rng, TempDir};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+const D: usize = 12;
+
+fn rand_rows(rng: &mut Rng, n: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[n, D]);
+    rng.fill_normal(t.data_mut(), 1.0);
+    t
+}
+
+/// The oracle: the live `(gid, key)` set, gid-sorted (which is exactly
+/// the order a compacted segment stores), as a flat index plus the
+/// local→global id map.
+fn reference(model: &BTreeMap<u32, Vec<f32>>) -> Option<(FlatIndex, Vec<u32>)> {
+    if model.is_empty() {
+        return None;
+    }
+    let gids: Vec<u32> = model.keys().copied().collect();
+    let mut data = Vec::with_capacity(model.len() * D);
+    for row in model.values() {
+        data.extend_from_slice(row);
+    }
+    Some((FlatIndex::new(Tensor::from_vec(&[gids.len(), D], data)), gids))
+}
+
+/// Exhaustive search on the collection must match the oracle bit-for-bit
+/// (ids after the local→global remap, scores exactly).
+fn assert_matches_reference(
+    coll: &MutableCollection,
+    model: &BTreeMap<u32, Vec<f32>>,
+    queries: &Tensor,
+    label: &str,
+) {
+    assert_eq!(coll.len(), model.len(), "{label}: live count");
+    let Some((flat, gids)) = reference(model) else {
+        let got = coll.search_effort(queries.row(0), 3, Effort::Exhaustive);
+        assert!(got.ids.is_empty(), "{label}: empty collection returned hits");
+        return;
+    };
+    for q in 0..queries.rows() {
+        for k in [1usize, 5, 17] {
+            let want = flat.search_effort(queries.row(q), k, Effort::Exhaustive);
+            let want_ids: Vec<u32> = want.ids.iter().map(|&l| gids[l as usize]).collect();
+            let got = coll.search_effort(queries.row(q), k, Effort::Exhaustive);
+            assert_eq!(got.ids, want_ids, "{label}: q{q} k{k} ids");
+            assert_eq!(got.scores, want.scores, "{label}: q{q} k{k} scores");
+        }
+    }
+}
+
+/// Satellite: the randomized-trace equivalence property. Traces mix
+/// inserts, deletes (live, repeated and unknown ids), upserts (existing
+/// and fresh ids) with interleaved commits and compactions; equivalence
+/// is checked mid-trace, post-trace, after commit, after compact and
+/// after a fresh-process reopen.
+#[test]
+fn random_trace_matches_flat_rebuild_before_and_after_compaction() {
+    for case in 0..prop_cases(8) {
+        let seed = 0x5E6 + case as u64;
+        let mut rng = Rng::new(seed);
+        let tmp = TempDir::new("amips-seg-trace");
+        let dir = tmp.join("c.seg");
+        let spec = IndexSpec::default_for("flat").unwrap();
+        let coll = MutableCollection::create(&dir, spec.clone(), D, seed).unwrap();
+        let mut model: BTreeMap<u32, Vec<f32>> = BTreeMap::new();
+        let queries = rand_rows(&mut rng, 4);
+
+        for step in 0..40 {
+            match rng.below(10) {
+                // inserts dominate so the collection actually grows
+                0..=4 => {
+                    let n = 1 + rng.below(6);
+                    let vecs = rand_rows(&mut rng, n);
+                    let ids = coll.insert(&vecs).unwrap();
+                    assert_eq!(ids.len(), n);
+                    for (r, gid) in ids.into_iter().enumerate() {
+                        assert!(
+                            model.insert(gid, vecs.row(r).to_vec()).is_none(),
+                            "id {gid} reused"
+                        );
+                    }
+                }
+                5 | 6 => {
+                    // deletes: live ids, already-deleted ids and ids
+                    // never assigned — all legal, only live ones count
+                    let live: Vec<u32> = model.keys().copied().collect();
+                    let mut ids = Vec::new();
+                    for _ in 0..1 + rng.below(3) {
+                        if !live.is_empty() && rng.below(4) != 0 {
+                            ids.push(live[rng.below(live.len())]);
+                        } else {
+                            ids.push(9_000_000 + rng.below(100) as u32);
+                        }
+                    }
+                    coll.delete(&ids).unwrap();
+                    for gid in ids {
+                        model.remove(&gid);
+                    }
+                }
+                7 | 8 => {
+                    // upserts: half replace a live id, half mint a
+                    // chosen (possibly far-ahead) id
+                    let live: Vec<u32> = model.keys().copied().collect();
+                    let n = 1 + rng.below(3);
+                    let vecs = rand_rows(&mut rng, n);
+                    let mut ids = Vec::new();
+                    for i in 0..n {
+                        let gid = if !live.is_empty() && rng.below(2) == 0 {
+                            live[rng.below(live.len())]
+                        } else {
+                            1_000_000 + (step * 10 + i) as u32
+                        };
+                        ids.push(gid);
+                    }
+                    coll.upsert(&ids, &vecs).unwrap();
+                    for (r, &gid) in ids.iter().enumerate() {
+                        // later duplicates within one call win, exactly
+                        // like the map insert here
+                        model.insert(gid, vecs.row(r).to_vec());
+                    }
+                }
+                _ => {
+                    if rng.below(2) == 0 {
+                        coll.commit().unwrap();
+                    } else {
+                        coll.compact().unwrap();
+                    }
+                }
+            }
+            if step % 13 == 12 {
+                assert_matches_reference(&coll, &model, &queries, &format!("case {case} step {step}"));
+            }
+        }
+
+        assert_matches_reference(&coll, &model, &queries, &format!("case {case} post-trace"));
+        coll.commit().unwrap();
+        assert_matches_reference(&coll, &model, &queries, &format!("case {case} post-commit"));
+        coll.compact().unwrap();
+        assert_matches_reference(&coll, &model, &queries, &format!("case {case} post-compact"));
+
+        // fresh-process stand-in: reopen from disk. Everything was
+        // committed by the compact, so the reopened collection is the
+        // same key set.
+        drop(coll);
+        let reopened = MutableCollection::open(&dir, spec).unwrap();
+        assert_matches_reference(&reopened, &model, &queries, &format!("case {case} reopened"));
+    }
+}
+
+/// Searches racing a compaction must always see a complete consistent
+/// key set: the old generation until the O(1) swap, the new one after.
+/// With no concurrent mutations both are the same set, so every result
+/// must equal the oracle bit-for-bit *throughout* the fold.
+#[test]
+fn searches_stay_consistent_across_generation_swap() {
+    let mut rng = Rng::new(77);
+    let tmp = TempDir::new("amips-seg-swap");
+    let spec = IndexSpec::default_for("ivf").unwrap().with_nlist(4);
+    let coll = Arc::new(MutableCollection::create(&tmp.join("c.seg"), spec, D, 77).unwrap());
+    let mut model = BTreeMap::new();
+    let vecs = rand_rows(&mut rng, 300);
+    let ids = coll.insert(&vecs).unwrap();
+    for (r, gid) in ids.iter().enumerate() {
+        model.insert(*gid, vecs.row(r).to_vec());
+    }
+    coll.delete(&ids[250..]).unwrap();
+    for gid in &ids[250..] {
+        model.remove(gid);
+    }
+    let (flat, gids) = reference(&model).unwrap();
+    let query = rand_rows(&mut rng, 1);
+    let want = flat.search_effort(query.row(0), 10, Effort::Exhaustive);
+    let want_ids: Vec<u32> = want.ids.iter().map(|&l| gids[l as usize]).collect();
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let searcher = {
+        let (coll, stop, query) = (coll.clone(), stop.clone(), query.clone());
+        let (want_ids, want_scores) = (want_ids.clone(), want.scores.clone());
+        std::thread::spawn(move || {
+            let mut checked = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                let got = coll.search_effort(query.row(0), 10, Effort::Exhaustive);
+                assert_eq!(got.ids, want_ids, "racing search diverged");
+                assert_eq!(got.scores, want_scores, "racing search diverged");
+                checked += 1;
+            }
+            checked
+        })
+    };
+    // several full folds while the searcher hammers away
+    for _ in 0..4 {
+        coll.compact().unwrap();
+    }
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    let checked = searcher.join().unwrap();
+    assert!(checked > 0, "searcher never ran");
+    assert_eq!(coll.len(), 250);
+}
+
+/// Acceptance: a kill at any point during compaction leaves a layout
+/// that reopens to the last *committed* generation. Simulated by
+/// snapshotting the directory before a compact and replaying every
+/// torn variant: output segment only, segment + torn tmp manifest,
+/// segment + truncated committed manifest.
+#[test]
+fn kill_during_compaction_recovers_last_committed_generation() {
+    let mut rng = Rng::new(99);
+    let tmp = TempDir::new("amips-seg-kill");
+    let dir = tmp.join("c.seg");
+    let spec = IndexSpec::default_for("flat").unwrap();
+    let coll = MutableCollection::create(&dir, spec.clone(), D, 99).unwrap();
+    let vecs = rand_rows(&mut rng, 60);
+    let ids = coll.insert(&vecs).unwrap();
+    coll.delete(&ids[..5]).unwrap();
+    let committed = coll.commit().unwrap();
+    let query = rand_rows(&mut rng, 1);
+    let want = coll.search_effort(query.row(0), 8, Effort::Exhaustive);
+    drop(coll);
+
+    // the compaction sequence is: write seg-<n+1>-000.ams, write
+    // gen-<n+1>.tsv.tmp, rename to gen-<n+1>.tsv. A kill between any
+    // two steps leaves one of these layouts:
+    let next = committed + 1;
+    let torn_layouts: Vec<Vec<(String, Vec<u8>)>> = vec![
+        // after the segment write only
+        vec![(format!("seg-{next:06}-000.ams"), b"AMSG\x01torn".to_vec())],
+        // after segment + tmp manifest
+        vec![
+            (format!("seg-{next:06}-000.ams"), b"AMSG\x01torn".to_vec()),
+            (format!("gen-{next:06}.tsv.tmp"), b"# amips generation".to_vec()),
+        ],
+        // a torn rename target (e.g. power loss mid-write on a
+        // filesystem without atomic rename durability)
+        vec![(
+            format!("gen-{next:06}.tsv"),
+            b"# amips generation manifest v1\ngen\t".to_vec(),
+        )],
+    ];
+    for (case, files) in torn_layouts.iter().enumerate() {
+        for (name, bytes) in files {
+            std::fs::write(dir.join(name), bytes).unwrap();
+        }
+        let reopened = MutableCollection::open(&dir, spec.clone()).unwrap();
+        assert_eq!(
+            reopened.generation(),
+            committed,
+            "case {case}: must recover to the committed generation"
+        );
+        assert_eq!(reopened.len(), 55, "case {case}");
+        let got = reopened.search_effort(query.row(0), 8, Effort::Exhaustive);
+        assert_eq!(got.ids, want.ids, "case {case}");
+        assert_eq!(got.scores, want.scores, "case {case}");
+        for (name, _) in files {
+            std::fs::remove_file(dir.join(name)).ok();
+        }
+    }
+
+    // and a *completed* compaction (all three steps) moves forward
+    let coll = MutableCollection::open(&dir, spec.clone()).unwrap();
+    let done = coll.compact().unwrap();
+    assert_eq!(done, committed + 1);
+    drop(coll);
+    let reopened = MutableCollection::open(&dir, spec).unwrap();
+    assert_eq!(reopened.generation(), committed + 1);
+    let got = reopened.search_effort(query.row(0), 8, Effort::Exhaustive);
+    assert_eq!(got.ids, want.ids);
+    assert_eq!(got.scores, want.scores);
+}
+
+/// Ids are never reused across delete/compact cycles — the uniqueness
+/// guarantee callers key caches on.
+#[test]
+fn ids_are_never_reused_across_generations() {
+    let mut rng = Rng::new(3);
+    let tmp = TempDir::new("amips-seg-ids");
+    let spec = IndexSpec::default_for("flat").unwrap();
+    let coll = MutableCollection::create(&tmp.join("c.seg"), spec, D, 3).unwrap();
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..6 {
+        let ids = coll.insert(&rand_rows(&mut rng, 10)).unwrap();
+        for gid in &ids {
+            assert!(seen.insert(*gid), "id {gid} reused");
+        }
+        coll.delete(&ids).unwrap();
+        coll.compact().unwrap();
+        assert_eq!(coll.len(), 0);
+    }
+}
