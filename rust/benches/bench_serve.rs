@@ -1,10 +1,19 @@
-//! §Serve: open-loop load generator for the TCP front-end. Poisson
-//! arrivals at a target QPS are fanned over several blocking
-//! [`NetClient`] connections; per-request latency is measured from the
-//! *scheduled* arrival time (open-loop semantics: a server that falls
-//! behind accrues queueing delay instead of silently throttling the
-//! offered load). Reports client-side p50/p99/p999 + throughput and
-//! emits machine-readable `BENCH_serve.json`.
+//! §Serve: load generator for the TCP front-end, in two phases.
+//!
+//! **Open loop**: Poisson arrivals at a target QPS are fanned over
+//! several blocking [`NetClient`] connections; per-request latency is
+//! measured from the *scheduled* arrival time (open-loop semantics: a
+//! server that falls behind accrues queueing delay instead of silently
+//! throttling the offered load).
+//!
+//! **Closed loop, pipelined**: one connection keeps `inflight ∈
+//! {1, 4, 16}` wire-v2 requests outstanding (inflight=1 is the
+//! strict-alternation one-shot baseline); throughput and claim latency
+//! per window size land in `row="pipelined"` JSON rows, so the
+//! pipelining win at equal offered load is a diffable number.
+//!
+//! Reports client-side p50/p99/p999 + throughput and emits
+//! machine-readable `BENCH_serve.json`.
 //!
 //! Knobs (env):
 //!   AMIPS_SERVE_ADDR        target an already-running `amips serve
@@ -16,6 +25,8 @@
 //!   AMIPS_SERVE_SECONDS     run length (default 3)
 //!   AMIPS_SERVE_CLIENTS     connections (default 4)
 //!   AMIPS_SERVE_DEADLINE_MS per-request deadline (default none)
+//!   AMIPS_SERVE_PIPELINE_REQUESTS  closed-loop requests per window
+//!                           (default 2000; 0 skips the sweep)
 //!
 //! Exits nonzero when no request succeeds — CI's serve-smoke job treats
 //! that as a failed deployment, not an empty report.
@@ -59,6 +70,78 @@ struct ClientOutcome {
     overloaded: usize,
     expired: usize,
     other_errors: usize,
+}
+
+/// One closed-loop run: keep `window` requests in flight on one
+/// connection until `requests` have completed. `window == 1` (or a v1
+/// server) is the strict-alternation one-shot baseline; otherwise the
+/// wire-v2 submit/claim pipeline. Latency is submit→claim per request.
+fn closed_loop(
+    addr: &str,
+    collection: &str,
+    pool: &Tensor,
+    requests: usize,
+    window: usize,
+    opts: SearchOptions,
+) -> Result<(ClientOutcome, f64, u8)> {
+    use std::collections::HashMap;
+    let mut client = NetClient::connect(addr)?;
+    client.set_timeout(Some(Duration::from_secs(30)))?;
+    let version = client.version();
+    let pipelined = window > 1 && version >= 2;
+    let mut out = ClientOutcome {
+        latencies_s: Vec::new(),
+        ok: 0,
+        overloaded: 0,
+        expired: 0,
+        other_errors: 0,
+    };
+    let count_err = |e: &NetError, out: &mut ClientOutcome| {
+        use amips::coordinator::net::ErrorCode;
+        match e.server_error().map(|f| f.code) {
+            Some(ErrorCode::Overloaded) => out.overloaded += 1,
+            Some(ErrorCode::DeadlineExpired) => out.expired += 1,
+            _ => out.other_errors += 1,
+        }
+    };
+    let t0 = Instant::now();
+    if !pipelined {
+        for i in 0..requests {
+            let t = Instant::now();
+            match client.search(collection, pool.row(i % pool.rows()), opts) {
+                Ok(_) => {
+                    out.ok += 1;
+                    out.latencies_s.push(t.elapsed().as_secs_f64());
+                }
+                Err(e) => count_err(&e, &mut out),
+            }
+        }
+    } else {
+        let mut inflight: HashMap<u64, Instant> = HashMap::new();
+        let mut submitted = 0usize;
+        let mut done = 0usize;
+        while done < requests {
+            while submitted < requests && inflight.len() < window {
+                let id =
+                    client.submit_search(collection, pool.row(submitted % pool.rows()), opts)?;
+                inflight.insert(id, Instant::now());
+                submitted += 1;
+            }
+            let reply = client.recv_any()?;
+            let since = inflight
+                .remove(&reply.request_id)
+                .ok_or_else(|| anyhow::anyhow!("completion for unknown id"))?;
+            match reply.reply {
+                Ok(_) => {
+                    out.ok += 1;
+                    out.latencies_s.push(since.elapsed().as_secs_f64());
+                }
+                Err(e) => count_err(&NetError::Server(e), &mut out),
+            }
+            done += 1;
+        }
+    }
+    Ok((out, t0.elapsed().as_secs_f64(), version))
 }
 
 fn main() -> Result<()> {
@@ -259,6 +342,60 @@ fn main() -> Result<()> {
                 None => JsonVal::F(f64::NAN), // rendered as null
             }),
         ]);
+    }
+    // closed-loop pipelined sweep: same server, one connection, fixed
+    // request count per window; inflight=1 is the one-shot baseline
+    // the pipelined rows are compared against
+    let pipeline_requests = env_usize("AMIPS_SERVE_PIPELINE_REQUESTS", 2000);
+    if pipeline_requests > 0 {
+        let mut prep = Report::new(&format!(
+            "bench_serve: closed-loop pipelined sweep, {pipeline_requests} requests/window ({collection})"
+        ));
+        prep.header(&["inflight", "ok", "errors", "qps", "p50 ms", "p99 ms", "mode"]);
+        for window in [1usize, 4, 16] {
+            let (out, wall, version) = closed_loop(
+                &addr,
+                &collection,
+                &pool,
+                pipeline_requests,
+                window,
+                opts,
+            )?;
+            let mut lats = out.latencies_s.clone();
+            lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let (p50, p99) = (quantile(&lats, 0.5), quantile(&lats, 0.99));
+            let errors = out.overloaded + out.expired + out.other_errors;
+            let qps_closed = out.ok as f64 / wall.max(1e-9);
+            let mode = if window > 1 && version >= 2 {
+                "pipelined"
+            } else {
+                "one-shot"
+            };
+            prep.row(&[
+                window.to_string(),
+                format!("{}/{pipeline_requests}", out.ok),
+                errors.to_string(),
+                format!("{qps_closed:.0}"),
+                format!("{:.2}", p50 * 1e3),
+                format!("{:.2}", p99 * 1e3),
+                mode.into(),
+            ]);
+            json.push(&[
+                ("row", JsonVal::S("pipelined".into())),
+                ("inflight", JsonVal::I(window as u64)),
+                ("wire_version", JsonVal::I(version as u64)),
+                ("requests", JsonVal::I(pipeline_requests as u64)),
+                ("ok", JsonVal::I(out.ok as u64)),
+                ("overloaded", JsonVal::I(out.overloaded as u64)),
+                ("expired", JsonVal::I(out.expired as u64)),
+                ("errors", JsonVal::I(out.other_errors as u64)),
+                ("qps_achieved", JsonVal::F(qps_closed)),
+                ("p50_ms", JsonVal::F(p50 * 1e3)),
+                ("p99_ms", JsonVal::F(p99 * 1e3)),
+            ]);
+        }
+        prep.note("claim latency is submit->claim on one connection; throughput scales with the in-flight window until the batcher saturates");
+        prep.emit("bench_serve_pipelined");
     }
     json.emit();
 

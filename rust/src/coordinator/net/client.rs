@@ -1,22 +1,43 @@
-//! Blocking client SDK for the AMTP wire protocol.
+//! Client SDK for the AMTP wire protocol: a blocking one-shot API
+//! (unchanged since v1) plus a pipelined mode over wire v2.
 //!
-//! A [`NetClient`] wraps one TCP connection. Calls are synchronous
-//! request/reply (the protocol is strictly alternating per connection);
-//! open several clients for concurrency — the server batches across
-//! connections, which is where the fused-scan amortization comes from.
+//! A [`NetClient`] wraps one TCP connection. At connect it negotiates
+//! the wire version by sending a v2 `Ping`: a v2 server answers
+//! `Pong`, a legacy v1 server rejects the version with a typed
+//! `Unsupported` (or just closes), and the client transparently
+//! reconnects pinned to v1. [`NetClient::version`] reports the result.
+//!
+//! **One-shot mode** (any version): [`NetClient::search`] and friends
+//! are synchronous request/reply. Over v1 the protocol is strictly
+//! alternating; over v2 the same calls ride the id-tagged frames, so
+//! mixing them with pipelined traffic is safe.
+//!
+//! **Pipelined mode** (v2 only): [`NetClient::submit_search`] sends a
+//! request and returns its client-assigned id without waiting;
+//! completions arrive in whatever order the server finishes them and
+//! are claimed by [`NetClient::wait_search`] (replies for other ids
+//! are buffered, never lost) or drained in completion order with
+//! [`NetClient::recv_any`]. [`NetClient::search_many`] wraps the
+//! window-keeping loop: up to `window` requests in flight, results
+//! returned in input order.
 //!
 //! A draining server answers every frame with `ShuttingDown`; the
 //! client surfaces that as the distinct, retryable
-//! [`NetError::Draining`] so callers can reconnect elsewhere (or later)
-//! instead of treating the drain window as a hard failure.
+//! [`NetError::Draining`] so callers can reconnect elsewhere (or
+//! later) instead of treating the drain window as a hard failure. A
+//! connection-scoped error (request id 0, e.g. the drain notice)
+//! fails *every* outstanding pipelined request with that same typed
+//! error — retryable ones can be re-submitted on a fresh connection.
 
-use std::net::{TcpStream, ToSocketAddrs};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use crate::api::{Effort, QueryMode};
 use crate::coordinator::net::wire::{
-    read_frame, write_frame, CompactFrame, ErrorCode, ErrorFrame, Frame, HitsFrame, MutateFrame,
-    MutateOp, MutatedFrame, SearchFrame, StatsFrame, WireError, MAX_FRAME_LEN, MAX_HITS,
+    read_frame, write_frame_versioned, CompactFrame, ErrorCode, ErrorFrame, Frame, HitsFrame,
+    MutateFrame, MutateOp, MutatedFrame, SearchFrame, StatsFrame, WireError, MAX_FRAME_LEN,
+    MAX_HITS, V1, VERSION,
 };
 use crate::tensor::Tensor;
 
@@ -129,21 +150,83 @@ impl SearchOptions {
     }
 }
 
-/// One blocking connection to an `amips serve --listen` server.
+/// One completed pipelined request, claimed in completion order by
+/// [`NetClient::recv_any`].
+#[derive(Debug)]
+pub struct PipelineReply {
+    pub request_id: u64,
+    pub reply: Result<HitsFrame, ErrorFrame>,
+}
+
+/// One connection to an `amips serve --listen` server.
 pub struct NetClient {
     stream: TcpStream,
     next_token: u64,
+    /// Wire version negotiated at connect (v1 against legacy servers).
+    version: u8,
+    /// Client-assigned request ids, never reused within a connection.
+    next_id: u64,
+    /// Ids submitted and not yet completed.
+    inflight: std::collections::HashSet<u64>,
+    /// Completions that arrived while waiting for a different id (or a
+    /// control reply); claimed later without another read.
+    pending: Vec<(u64, Frame)>,
+    /// Set when a connection-scoped server error (request id 0, e.g.
+    /// the drain notice) arrives: every outstanding and future request
+    /// on this connection fails with this same typed error.
+    poisoned: Option<ErrorFrame>,
 }
 
 impl NetClient {
-    /// Connect to a serving address (e.g. `"127.0.0.1:7771"`).
+    /// Connect to a serving address (e.g. `"127.0.0.1:7771"`),
+    /// negotiating the newest wire version the server speaks.
     pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient, NetError> {
         let stream = TcpStream::connect(addr)?;
+        let peer = stream.peer_addr()?;
+        let mut client = NetClient::from_stream(stream, VERSION);
+        // a v2 probe: Pong = the server speaks v2; a typed version
+        // rejection (legacy servers answer Unsupported, then close) or
+        // a bare close = reconnect pinned to v1
+        match client.ping() {
+            Ok(()) => Ok(client),
+            Err(NetError::Server(e)) if e.code == ErrorCode::Unsupported => {
+                NetClient::connect_v1(peer)
+            }
+            Err(NetError::Wire(WireError::BadVersion(_)))
+            | Err(NetError::Wire(WireError::Closed)) => NetClient::connect_v1(peer),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Connect pinned to the legacy v1 protocol (no pipelining). Used
+    /// by the negotiation fallback; public for tests and for talking
+    /// to old servers without the probe round-trip.
+    pub fn connect_v1(addr: impl ToSocketAddrs) -> Result<NetClient, NetError> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(NetClient::from_stream(stream, V1))
+    }
+
+    fn from_stream(stream: TcpStream, version: u8) -> NetClient {
         let _ = stream.set_nodelay(true);
-        Ok(NetClient {
+        NetClient {
             stream,
             next_token: 1,
-        })
+            version,
+            next_id: 1,
+            inflight: std::collections::HashSet::new(),
+            pending: Vec::new(),
+            poisoned: None,
+        }
+    }
+
+    /// The negotiated wire version (2, or 1 against a legacy server).
+    pub fn version(&self) -> u8 {
+        self.version
+    }
+
+    /// Pipelined requests submitted and not yet claimed.
+    pub fn outstanding(&self) -> usize {
+        self.inflight.len() + self.pending.len()
     }
 
     /// Bound how long any single reply may take (`None` = wait forever).
@@ -152,31 +235,264 @@ impl NetClient {
         Ok(())
     }
 
-    fn round_trip(&mut self, frame: &Frame) -> Result<Frame, NetError> {
-        write_frame(&mut self.stream, frame).map_err(WireError::Io)?;
-        Ok(read_frame(&mut self.stream)?)
+    fn check_poisoned(&self) -> Result<(), NetError> {
+        match &self.poisoned {
+            Some(e) => Err(NetError::from_reply(e.clone())),
+            None => Ok(()),
+        }
     }
 
-    /// Top-`k` search of `query` against `collection`.
-    pub fn search(
-        &mut self,
-        collection: &str,
-        query: &[f32],
-        opts: SearchOptions,
-    ) -> Result<HitsFrame, NetError> {
+    fn send(&mut self, frame: &Frame) -> Result<(), NetError> {
+        self.check_poisoned()?;
+        write_frame_versioned(&mut self.stream, frame, self.version).map_err(WireError::Io)?;
+        Ok(())
+    }
+
+    /// Read one frame and sort it: `Ok(Some(..))` is an id-tagged
+    /// completion for an outstanding request, `Ok(None)` is a control
+    /// reply handed back through `out`. Conn-scoped errors poison the
+    /// connection.
+    fn read_sorted(&mut self) -> Result<SortedFrame, NetError> {
+        self.check_poisoned()?;
+        let frame = read_frame(&mut self.stream)?;
+        let id = match &frame {
+            Frame::Hits(h) => h.request_id,
+            Frame::Mutated(m) => m.request_id,
+            Frame::Error(e) => e.request_id,
+            _ => return Ok(SortedFrame::Control(frame)),
+        };
+        if let Frame::Error(e) = &frame {
+            // id 0 = connection-scoped (drain notice, decode eviction):
+            // no single request is being answered, every outstanding
+            // one is dead. Over v1 all errors are id-0 by construction
+            // and there is no pipeline, so the error is simply the
+            // current request's reply.
+            if id == 0 && self.version >= 2 {
+                self.poisoned = Some(e.clone());
+                return Err(NetError::from_reply(e.clone()));
+            }
+        }
+        if self.version < 2 || (id == 0 && !self.inflight.contains(&0)) {
+            // v1 (or an untracked id-0 reply): strict alternation, the
+            // frame answers the one request in flight
+            return Ok(SortedFrame::Control(frame));
+        }
+        if !self.inflight.remove(&id) {
+            return Err(NetError::Unexpected("reply for an id that is not in flight"));
+        }
+        Ok(SortedFrame::Tagged(id, frame))
+    }
+
+    /// Block for the reply to a specific outstanding id, buffering
+    /// completions for other ids as they arrive.
+    fn wait_tagged(&mut self, id: u64) -> Result<Frame, NetError> {
+        if let Some(pos) = self.pending.iter().position(|(pid, _)| *pid == id) {
+            return Ok(self.pending.swap_remove(pos).1);
+        }
+        loop {
+            match self.read_sorted()? {
+                SortedFrame::Tagged(got, frame) if got == id => return Ok(frame),
+                SortedFrame::Tagged(got, frame) => self.pending.push((got, frame)),
+                SortedFrame::Control(_) => {
+                    return Err(NetError::Unexpected("control frame while waiting for an id"))
+                }
+            }
+        }
+    }
+
+    /// Block for a control reply (Pong/Stats), buffering pipelined
+    /// completions that land first.
+    fn wait_control(&mut self) -> Result<Frame, NetError> {
+        loop {
+            match self.read_sorted()? {
+                SortedFrame::Control(frame) => return Ok(frame),
+                SortedFrame::Tagged(id, frame) => self.pending.push((id, frame)),
+            }
+        }
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn search_frame(collection: &str, query: &[f32], opts: SearchOptions, id: u64) -> Frame {
         let deadline_micros = opts
             .deadline
             .map(|d| (d.as_micros().min(u64::MAX as u128) as u64).max(1))
             .unwrap_or(0);
-        let frame = Frame::Search(SearchFrame {
+        Frame::Search(SearchFrame {
+            request_id: id,
             collection: collection.to_string(),
             k: opts.k as u32,
             effort: opts.effort,
             mode: opts.mode,
             deadline_micros,
             query: query.to_vec(),
-        });
-        match self.round_trip(&frame)? {
+        })
+    }
+
+    // -----------------------------------------------------------------
+    // Pipelined mode (wire v2)
+    // -----------------------------------------------------------------
+
+    /// Submit a search without waiting for its reply; returns the
+    /// request id to claim it with ([`NetClient::wait_search`] /
+    /// [`NetClient::recv_any`]). Requires a v2 server.
+    pub fn submit_search(
+        &mut self,
+        collection: &str,
+        query: &[f32],
+        opts: SearchOptions,
+    ) -> Result<u64, NetError> {
+        if self.version < 2 {
+            return Err(NetError::Unexpected(
+                "server speaks wire v1: pipelined mode unavailable",
+            ));
+        }
+        let id = self.fresh_id();
+        let frame = Self::search_frame(collection, query, opts, id);
+        self.send(&frame)?;
+        self.inflight.insert(id);
+        Ok(id)
+    }
+
+    /// Claim the reply to one submitted search (blocking; replies for
+    /// other ids that arrive first are buffered, not lost).
+    pub fn wait_search(&mut self, id: u64) -> Result<HitsFrame, NetError> {
+        match self.wait_tagged(id)? {
+            Frame::Hits(h) => Ok(h),
+            Frame::Error(e) => Err(NetError::from_reply(e)),
+            _ => Err(NetError::Unexpected("search wants Hits or Error")),
+        }
+    }
+
+    /// Claim the next completion in whatever order the server finished
+    /// them. Errors that answer a specific request come back as
+    /// `Ok(PipelineReply { reply: Err(..) })`; connection-level
+    /// failures are `Err`.
+    pub fn recv_any(&mut self) -> Result<PipelineReply, NetError> {
+        if let Some((request_id, frame)) = self.pending.pop() {
+            return Self::into_pipeline_reply(request_id, frame);
+        }
+        loop {
+            match self.read_sorted()? {
+                SortedFrame::Tagged(id, frame) => return Self::into_pipeline_reply(id, frame),
+                SortedFrame::Control(_) => {
+                    return Err(NetError::Unexpected("control frame while draining completions"))
+                }
+            }
+        }
+    }
+
+    fn into_pipeline_reply(request_id: u64, frame: Frame) -> Result<PipelineReply, NetError> {
+        let reply = match frame {
+            Frame::Hits(h) => Ok(h),
+            Frame::Error(e) => Err(e),
+            _ => return Err(NetError::Unexpected("completion wants Hits or Error")),
+        };
+        Ok(PipelineReply { request_id, reply })
+    }
+
+    /// Pipelined batch search: keep up to `window` requests in flight
+    /// on this one connection, return per-query results in input
+    /// order. Over a v1 server this degrades to sequential one-shot
+    /// requests (window 1), so callers need no version check.
+    ///
+    /// Transport-level failures abort the whole call (`Err`); typed
+    /// per-request server errors land in that query's slot.
+    pub fn search_many(
+        &mut self,
+        collection: &str,
+        queries: &[&[f32]],
+        opts: SearchOptions,
+        window: usize,
+    ) -> Result<Vec<Result<HitsFrame, NetError>>, NetError> {
+        let window = window.max(1);
+        if self.version < 2 || window == 1 {
+            let mut out = Vec::with_capacity(queries.len());
+            for q in queries {
+                out.push(self.search(collection, q, opts));
+            }
+            return Ok(out);
+        }
+        let mut results: Vec<Option<Result<HitsFrame, NetError>>> =
+            (0..queries.len()).map(|_| None).collect();
+        let mut id_to_slot: HashMap<u64, usize> = HashMap::new();
+        let mut next = 0usize;
+        let mut done = 0usize;
+        while done < queries.len() {
+            // fill the window
+            while next < queries.len() && id_to_slot.len() < window {
+                match self.submit_search(collection, queries[next], opts) {
+                    Ok(id) => {
+                        id_to_slot.insert(id, next);
+                        next += 1;
+                    }
+                    Err(e) => {
+                        // a failed *send* is connection-fatal (the
+                        // frame may be half-written); a poisoned
+                        // connection fails outstanding slots below
+                        return Err(e);
+                    }
+                }
+            }
+            match self.recv_any() {
+                Ok(done_reply) => {
+                    let Some(slot) = id_to_slot.remove(&done_reply.request_id) else {
+                        return Err(NetError::Unexpected("completion for an unknown id"));
+                    };
+                    results[slot] = Some(done_reply.reply.map_err(NetError::from_reply));
+                    done += 1;
+                }
+                Err(NetError::Draining(_)) | Err(NetError::Server(_)) => {
+                    // connection-scoped typed error: every outstanding
+                    // slot gets the same typed failure (retryable for
+                    // drains), already-completed slots keep their hits
+                    for (_, slot) in id_to_slot.drain() {
+                        results[slot] = Some(Err(self
+                            .poisoned
+                            .clone()
+                            .map(NetError::from_reply)
+                            .unwrap_or(NetError::Unexpected("connection failed"))));
+                        done += 1;
+                    }
+                    // unsent queries also fail with the same error
+                    for slot in next..queries.len() {
+                        results[slot] = Some(Err(self
+                            .poisoned
+                            .clone()
+                            .map(NetError::from_reply)
+                            .unwrap_or(NetError::Unexpected("connection failed"))));
+                        done += 1;
+                    }
+                    next = queries.len();
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(results.into_iter().map(|r| r.expect("all slots filled")).collect())
+    }
+
+    // -----------------------------------------------------------------
+    // One-shot mode (any version)
+    // -----------------------------------------------------------------
+
+    /// Top-`k` search of `query` against `collection` (blocking).
+    pub fn search(
+        &mut self,
+        collection: &str,
+        query: &[f32],
+        opts: SearchOptions,
+    ) -> Result<HitsFrame, NetError> {
+        if self.version >= 2 {
+            let id = self.submit_search(collection, query, opts)?;
+            return self.wait_search(id);
+        }
+        let frame = Self::search_frame(collection, query, opts, 0);
+        self.send(&frame)?;
+        match self.wait_control()? {
             Frame::Hits(h) => Ok(h),
             Frame::Error(e) => Err(NetError::from_reply(e)),
             _ => Err(NetError::Unexpected("search wants Hits or Error")),
@@ -187,7 +503,8 @@ impl NetClient {
     pub fn ping(&mut self) -> Result<(), NetError> {
         let token = self.next_token;
         self.next_token += 1;
-        match self.round_trip(&Frame::Ping { token })? {
+        self.send(&Frame::Ping { token })?;
+        match self.wait_control()? {
             Frame::Pong { token: t } if t == token => Ok(()),
             Frame::Pong { .. } => Err(NetError::Unexpected("pong token mismatch")),
             Frame::Error(e) => Err(NetError::from_reply(e)),
@@ -198,7 +515,8 @@ impl NetClient {
     /// Fetch server-wide stats (latency percentiles, queue depth,
     /// per-collection counters).
     pub fn stats(&mut self) -> Result<StatsFrame, NetError> {
-        match self.round_trip(&Frame::StatsRequest)? {
+        self.send(&Frame::StatsRequest)?;
+        match self.wait_control()? {
             Frame::Stats(s) => Ok(s),
             Frame::Error(e) => Err(NetError::from_reply(e)),
             _ => Err(NetError::Unexpected("stats wants Stats")),
@@ -229,19 +547,37 @@ impl NetClient {
         Ok(())
     }
 
-    fn mutate(&mut self, frame: MutateFrame) -> Result<MutatedFrame, NetError> {
-        Self::check_mutation_size(frame.ids.len(), frame.vectors.len())?;
-        match self.round_trip(&Frame::Mutate(frame))? {
+    /// Wait for the Mutated reply to `id` (v2) or the next control
+    /// reply (v1).
+    fn wait_mutated(&mut self, id: u64) -> Result<MutatedFrame, NetError> {
+        let frame = if self.version >= 2 {
+            self.wait_tagged(id)?
+        } else {
+            self.wait_control()?
+        };
+        match frame {
             Frame::Mutated(m) => Ok(m),
             Frame::Error(e) => Err(NetError::from_reply(e)),
             _ => Err(NetError::Unexpected("mutate wants Mutated or Error")),
         }
     }
 
+    fn mutate(&mut self, mut frame: MutateFrame) -> Result<MutatedFrame, NetError> {
+        Self::check_mutation_size(frame.ids.len(), frame.vectors.len())?;
+        let id = if self.version >= 2 { self.fresh_id() } else { 0 };
+        frame.request_id = id;
+        self.send(&Frame::Mutate(frame))?;
+        if self.version >= 2 {
+            self.inflight.insert(id);
+        }
+        self.wait_mutated(id)
+    }
+
     /// Append `vecs` (rows × dim) to a mutable collection; returns the
     /// assigned ids (in row order) plus post-mutation len/generation.
     pub fn insert(&mut self, collection: &str, vecs: &Tensor) -> Result<MutatedFrame, NetError> {
         self.mutate(MutateFrame {
+            request_id: 0,
             collection: collection.to_string(),
             op: MutateOp::Insert,
             ids: Vec::new(),
@@ -259,6 +595,7 @@ impl NetClient {
         vecs: &Tensor,
     ) -> Result<MutatedFrame, NetError> {
         self.mutate(MutateFrame {
+            request_id: 0,
             collection: collection.to_string(),
             op: MutateOp::Upsert,
             ids: ids.to_vec(),
@@ -270,6 +607,7 @@ impl NetClient {
     /// Tombstone `ids` (idempotent; unknown ids are ignored server-side).
     pub fn delete(&mut self, collection: &str, ids: &[u32]) -> Result<MutatedFrame, NetError> {
         self.mutate(MutateFrame {
+            request_id: 0,
             collection: collection.to_string(),
             op: MutateOp::Delete,
             ids: ids.to_vec(),
@@ -281,13 +619,15 @@ impl NetClient {
     /// Fold the collection's delta + tombstones into a fresh sealed
     /// generation (blocks until the new generation is committed).
     pub fn compact(&mut self, collection: &str) -> Result<MutatedFrame, NetError> {
-        match self.round_trip(&Frame::Compact(CompactFrame {
+        let id = if self.version >= 2 { self.fresh_id() } else { 0 };
+        self.send(&Frame::Compact(CompactFrame {
+            request_id: id,
             collection: collection.to_string(),
-        }))? {
-            Frame::Mutated(m) => Ok(m),
-            Frame::Error(e) => Err(NetError::from_reply(e)),
-            _ => Err(NetError::Unexpected("compact wants Mutated or Error")),
+        }))?;
+        if self.version >= 2 {
+            self.inflight.insert(id);
         }
+        self.wait_mutated(id)
     }
 
     /// Escape hatch for probes and tests: send raw bytes, then try to
@@ -298,4 +638,12 @@ impl NetClient {
         self.stream.flush()?;
         Ok(read_frame(&mut self.stream)?)
     }
+}
+
+/// How [`NetClient::read_sorted`] classified one incoming frame.
+enum SortedFrame {
+    /// A completion for an outstanding request id.
+    Tagged(u64, Frame),
+    /// A control reply (Pong/Stats), or any v1 frame.
+    Control(Frame),
 }

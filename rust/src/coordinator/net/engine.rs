@@ -34,6 +34,58 @@ use crate::util::timer::LatencyHistogram;
 /// Reply to one admitted request: hits or a typed error.
 pub type NetReply = Result<HitsFrame, ErrorFrame>;
 
+/// A completed reply tagged with the request id it answers, bound for
+/// a pipelined connection's writer thread.
+pub struct TaggedReply {
+    pub request_id: u64,
+    pub reply: NetReply,
+}
+
+/// Where a completed request's reply goes. Strict-alternation (v1)
+/// connections and in-process callers block on a one-shot channel;
+/// pipelined (v2) connections route the reply — stamped with its
+/// request id — into the connection's bounded reply queue, where a
+/// dedicated writer thread serializes completions in whatever order
+/// they finish.
+#[derive(Clone)]
+pub enum ReplySink {
+    Oneshot(SyncSender<NetReply>),
+    Queued {
+        request_id: u64,
+        tx: SyncSender<TaggedReply>,
+    },
+}
+
+impl ReplySink {
+    /// Deliver the reply. For queued sinks the frame's `request_id` is
+    /// stamped here, so tenant workers never need to know which id (or
+    /// wire version) a request arrived under. A send to a
+    /// disconnected sink is a no-op: the connection is gone and the
+    /// reply has nowhere to go.
+    ///
+    /// Queued sends use the *blocking* `send`, but can never actually
+    /// block: a connection admits at most `max_inflight` requests and
+    /// its reply queue holds `max_inflight` slots, and a slot is only
+    /// reused after its previous reply has been drained by the writer.
+    pub fn send(&self, mut reply: NetReply) {
+        match self {
+            ReplySink::Oneshot(tx) => {
+                let _ = tx.send(reply);
+            }
+            ReplySink::Queued { request_id, tx } => {
+                match &mut reply {
+                    Ok(h) => h.request_id = *request_id,
+                    Err(e) => e.request_id = *request_id,
+                }
+                let _ = tx.send(TaggedReply {
+                    request_id: *request_id,
+                    reply,
+                });
+            }
+        }
+    }
+}
+
 /// One admitted search request queued for a tenant worker.
 pub struct NetRequest {
     pub query: Vec<f32>,
@@ -43,7 +95,7 @@ pub struct NetRequest {
     /// Absolute expiry; checked when the batch is drained, before scan.
     pub deadline: Option<Instant>,
     pub enqueued: Instant,
-    pub reply: SyncSender<NetReply>,
+    pub reply: ReplySink,
 }
 
 /// Why [`Tenant::submit`] refused a request.
@@ -205,7 +257,8 @@ fn reply_err(req: &NetRequest, stats: &TenantStats, code: ErrorCode, message: St
     } else {
         stats.errors.fetch_add(1, Ordering::Relaxed);
     }
-    let _ = req.reply.send(Err(ErrorFrame { code, message }));
+    // id 0 here; queued sinks stamp the real request id on send
+    req.reply.send(Err(ErrorFrame::conn(code, message)));
 }
 
 /// Serve one drained batch: deadline fast-fail and validation first,
@@ -338,6 +391,7 @@ fn serve_net_batch(
         let results = crate::api::search_batch_parallel(index, &gq, *k, *effort);
         for (&i, res) in members.iter().zip(results) {
             replies[i] = Some(HitsFrame {
+                request_id: 0, // stamped by the reply sink
                 ids: res.ids,
                 scores: res.scores,
                 keys_scanned: res.cost.keys_scanned,
@@ -355,7 +409,7 @@ fn serve_net_batch(
                 hits.server_micros = latency.as_micros().min(u64::MAX as u128) as u64;
                 stats.served.fetch_add(1, Ordering::Relaxed);
                 stats.latency.lock().unwrap().record(latency.as_secs_f64());
-                let _ = req.reply.send(Ok(hits));
+                req.reply.send(Ok(hits));
             }
             None => {
                 let msg = map_err.clone().unwrap_or_else(|| "internal error".into());
@@ -390,7 +444,7 @@ mod tests {
                 mode: QueryMode::Original,
                 deadline: None,
                 enqueued: Instant::now(),
-                reply: rtx,
+                reply: ReplySink::Oneshot(rtx),
             },
             rrx,
         )
@@ -410,6 +464,23 @@ mod tests {
             },
             rx,
         )
+    }
+
+    #[test]
+    fn queued_sink_stamps_request_ids() {
+        let (tx, rx) = sync_channel(2);
+        let sink = ReplySink::Queued { request_id: 42, tx };
+        sink.send(Ok(HitsFrame::default()));
+        sink.send(Err(ErrorFrame::conn(ErrorCode::Internal, "x".into())));
+        let a = rx.recv().unwrap();
+        assert_eq!(a.request_id, 42);
+        assert_eq!(a.reply.unwrap().request_id, 42);
+        let b = rx.recv().unwrap();
+        assert_eq!(b.request_id, 42);
+        assert_eq!(b.reply.unwrap_err().request_id, 42);
+        // disconnected sink: send is a silent no-op, not a panic
+        drop(rx);
+        sink.send(Ok(HitsFrame::default()));
     }
 
     #[test]
@@ -505,7 +576,7 @@ mod tests {
                 mode: QueryMode::Original,
                 deadline: Some(Instant::now() + Duration::from_micros(1)),
                 enqueued: Instant::now(),
-                reply: rtx,
+                reply: ReplySink::Oneshot(rtx),
             })
             .unwrap();
         let err = rrx.recv().unwrap().unwrap_err();
@@ -590,7 +661,7 @@ mod tests {
                 mode: QueryMode::Mapped,
                 deadline: None,
                 enqueued: Instant::now(),
-                reply: rtx,
+                reply: ReplySink::Oneshot(rtx),
             })
             .unwrap();
         assert_eq!(

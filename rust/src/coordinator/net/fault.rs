@@ -1,0 +1,244 @@
+//! Deterministic fault injection for the net stack (test support).
+//!
+//! [`FaultyStream`] wraps any `Read + Write` transport and misbehaves
+//! on purpose, driven entirely by a seeded [`Rng`] so every failure a
+//! sweep finds is replayable from its printed seed:
+//!
+//! * **byte-split writes** — each write forwards a random 1..=`max_chunk`
+//!   prefix, so frames cross the wire in arbitrary fragments and the
+//!   peer's decoder sees every possible partial-header/partial-payload
+//!   boundary;
+//! * **injected delays** — with probability `delay_prob` a chunk (or a
+//!   read) first sleeps `delay`, simulating a slow or bursty peer;
+//! * **half-write-then-drop** — after `cut_after` total bytes the
+//!   stream forwards one final short write and then fails every
+//!   subsequent operation with `BrokenPipe`; dropping the wrapper then
+//!   closes the inner transport mid-frame, which is exactly the torn
+//!   state a crashed client leaves behind;
+//! * **stalled reads** — the same `delay` machinery applies on the
+//!   read path (slow-loris from the server's perspective).
+//!
+//! The wrapper lives in the library (not under `#[cfg(test)]`) so
+//! integration tests and benches can use it, but it is test support:
+//! nothing in the serving path constructs one.
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use crate::util::Rng;
+
+/// What misbehavior to inject, and with what RNG seed. The default
+/// plan is a no-op passthrough.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// Seed for the wrapper's private RNG (print it on failure).
+    pub seed: u64,
+    /// Forward at most this many bytes per write call (0 or
+    /// `usize::MAX` disables splitting; 1 = strict byte-at-a-time).
+    pub max_chunk: usize,
+    /// Per-operation probability, in permille (0..=1000), of sleeping
+    /// `delay` before the operation proceeds.
+    pub delay_permille: u32,
+    /// The injected sleep.
+    pub delay: Duration,
+    /// Fail every operation after this many bytes have been written
+    /// (the crossing write is forwarded short first: a half-written
+    /// frame, then the drop). `u64::MAX` disables.
+    pub cut_after: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            max_chunk: 0,
+            delay_permille: 0,
+            delay: Duration::from_millis(0),
+            cut_after: u64::MAX,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// A frame-tearing plan: tiny write chunks with occasional short
+    /// delays, no cut. Exercises every partial-frame boundary.
+    pub fn splitter(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            max_chunk: 3,
+            delay_permille: 100,
+            delay: Duration::from_micros(200),
+            ..FaultPlan::default()
+        }
+    }
+
+    /// A crash plan: byte-split writes that die after `cut_after`
+    /// bytes, leaving a torn frame on the wire.
+    pub fn cutter(seed: u64, cut_after: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            max_chunk: 5,
+            cut_after,
+            ..FaultPlan::default()
+        }
+    }
+}
+
+/// A misbehaving transport. See the module doc.
+pub struct FaultyStream<S> {
+    inner: S,
+    rng: Rng,
+    plan: FaultPlan,
+    written: u64,
+    cut: bool,
+}
+
+impl<S> FaultyStream<S> {
+    pub fn new(inner: S, plan: FaultPlan) -> FaultyStream<S> {
+        FaultyStream {
+            inner,
+            rng: Rng::new(plan.seed),
+            plan,
+            written: 0,
+            cut: false,
+        }
+    }
+
+    /// True once the cut point has been crossed (every further
+    /// operation fails with `BrokenPipe`).
+    pub fn is_cut(&self) -> bool {
+        self.cut
+    }
+
+    /// Total bytes forwarded to the inner writer.
+    pub fn bytes_written(&self) -> u64 {
+        self.written
+    }
+
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+
+    fn maybe_delay(&mut self) {
+        if self.plan.delay_permille > 0
+            && (self.rng.below(1000) as u32) < self.plan.delay_permille
+        {
+            std::thread::sleep(self.plan.delay);
+        }
+    }
+
+    fn broken() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::BrokenPipe, "fault injection: stream cut")
+    }
+}
+
+impl<S: Write> Write for FaultyStream<S> {
+    /// Forward a random-size prefix of `buf` (callers' `write_all`
+    /// loops re-enter for the rest, so a frame crosses in fragments).
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.cut {
+            return Err(Self::broken());
+        }
+        if buf.is_empty() {
+            return self.inner.write(buf);
+        }
+        self.maybe_delay();
+        let mut n = match self.plan.max_chunk {
+            0 | usize::MAX => buf.len(),
+            cap => 1 + self.rng.below(cap.min(buf.len())),
+        };
+        // crossing the cut point: forward the short remainder, then die
+        if self.written + n as u64 >= self.plan.cut_after {
+            n = (self.plan.cut_after - self.written) as usize;
+            self.cut = true;
+            if n == 0 {
+                return Err(Self::broken());
+            }
+        }
+        let n = self.inner.write(&buf[..n])?;
+        self.written += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        if self.cut {
+            return Err(Self::broken());
+        }
+        self.inner.flush()
+    }
+}
+
+impl<S: Read> Read for FaultyStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.cut {
+            return Err(Self::broken());
+        }
+        self.maybe_delay();
+        self.inner.read(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passthrough_by_default() {
+        let mut s = FaultyStream::new(Vec::new(), FaultPlan::default());
+        s.write_all(b"hello world").unwrap();
+        assert_eq!(s.get_ref().as_slice(), b"hello world");
+        assert!(!s.is_cut());
+    }
+
+    #[test]
+    fn splitter_preserves_bytes_and_is_deterministic() {
+        let payload: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        let mut first_chunks = None;
+        for _ in 0..2 {
+            let mut s = FaultyStream::new(CountingWriter::default(), FaultPlan::splitter(7));
+            s.write_all(&payload).unwrap();
+            let w = s.into_inner();
+            assert_eq!(w.bytes, payload, "splitting must not reorder or drop");
+            assert!(w.calls > payload.len() / 3, "writes were not split");
+            // same seed, same fragmentation
+            match &first_chunks {
+                None => first_chunks = Some(w.calls),
+                Some(c) => assert_eq!(*c, w.calls, "same seed must split identically"),
+            }
+        }
+    }
+
+    #[test]
+    fn cutter_half_writes_then_fails() {
+        let mut s = FaultyStream::new(Vec::new(), FaultPlan::cutter(3, 10));
+        let err = s.write_all(&[0xAB; 64]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe);
+        assert!(s.is_cut());
+        assert_eq!(s.bytes_written(), 10, "exactly cut_after bytes escape");
+        assert_eq!(s.get_ref().len(), 10);
+        // everything after the cut fails too
+        assert!(s.write(&[1]).is_err());
+        assert!(s.flush().is_err());
+    }
+
+    #[derive(Default)]
+    struct CountingWriter {
+        bytes: Vec<u8>,
+        calls: usize,
+    }
+
+    impl Write for CountingWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.calls += 1;
+            self.bytes.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+}

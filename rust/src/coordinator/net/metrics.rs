@@ -1,0 +1,155 @@
+//! The metrics side-listener: a second TCP port serving plain-text
+//! health/metrics scrapes so monitoring never contends with the data
+//! plane (no shared listener, no shared connection threads, no AMTP
+//! framing to negotiate).
+//!
+//! The protocol is deliberately trivial — connect, receive one
+//! snapshot of `key value` / `key{label="x"} value` lines, connection
+//! closes. No request is read at all (`nc host port` works, and so
+//! does any Prometheus-style line scraper pointed at the raw stream).
+//! Because the listener never reads, hostile input is structurally
+//! harmless: any bytes a client sends are simply never looked at, the
+//! snapshot is written under a write timeout, and the socket is shut
+//! down — no parser to crash, no read to hang on.
+
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, ToSocketAddrs};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What the listener scrapes: a metrics snapshot plus the shutdown
+/// flag that tells the accept loop to exit. Implemented by the net
+/// server's shared state; tests can provide their own.
+pub trait MetricsSource: Send + Sync {
+    /// Render one plain-text snapshot (newline-terminated lines).
+    fn render(&self) -> String;
+    /// True once the owning server is draining; the listener exits.
+    fn shutting(&self) -> bool;
+}
+
+/// A running metrics listener (join it after the source starts
+/// reporting `shutting() == true`).
+pub struct MetricsListener {
+    local_addr: SocketAddr,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsListener {
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Join the accept thread. Returns promptly once the source's
+    /// `shutting()` flag is up (the accept loop polls it).
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// How long one scrape write may take before the connection is
+/// abandoned (a stalled scraper must not pin the accept thread).
+const SCRAPE_WRITE_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// Poll cadence for the shutdown flag on a quiet listener.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Bind `addr` and serve snapshots of `source` until it reports
+/// shutting down.
+pub fn spawn(
+    addr: impl ToSocketAddrs,
+    source: Arc<dyn MetricsSource>,
+) -> std::io::Result<MetricsListener> {
+    let listener = TcpListener::bind(addr)?;
+    let local_addr = listener.local_addr()?;
+    // nonblocking accept so the loop can poll the shutdown flag
+    listener.set_nonblocking(true)?;
+    let handle = std::thread::Builder::new()
+        .name("amips-metrics".into())
+        .spawn(move || accept_loop(listener, source))?;
+    Ok(MetricsListener {
+        local_addr,
+        handle: Some(handle),
+    })
+}
+
+fn accept_loop(listener: TcpListener, source: Arc<dyn MetricsSource>) {
+    loop {
+        if source.shutting() {
+            return;
+        }
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                // one snapshot per connection; errors (peer gone, write
+                // timeout) just drop the connection — the next scrape
+                // gets a fresh one
+                let _ = stream.set_write_timeout(Some(SCRAPE_WRITE_TIMEOUT));
+                let _ = stream.set_nodelay(true);
+                let body = source.render();
+                if stream.write_all(body.as_bytes()).is_ok() {
+                    let _ = stream.flush();
+                }
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+            Err(e) if crate::coordinator::net::wire::is_timeout(&e) => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    struct FakeSource {
+        stop: AtomicBool,
+    }
+
+    impl MetricsSource for FakeSource {
+        fn render(&self) -> String {
+            "amips_test_metric 1\namips_test_gauge{collection=\"docs\"} 2\n".into()
+        }
+        fn shutting(&self) -> bool {
+            self.stop.load(Ordering::SeqCst)
+        }
+    }
+
+    fn scrape(addr: SocketAddr, send_garbage: bool) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        if send_garbage {
+            // the listener never reads: arbitrary bytes must not hang,
+            // panic, or corrupt the snapshot
+            let _ = s.write_all(b"GET / HTTP/1.1\r\n\x00\xff garbage \r\n\r\n");
+        }
+        let mut body = String::new();
+        s.read_to_string(&mut body).unwrap();
+        body
+    }
+
+    #[test]
+    fn serves_snapshot_and_ignores_input() {
+        let source = Arc::new(FakeSource {
+            stop: AtomicBool::new(false),
+        });
+        let listener = spawn("127.0.0.1:0", source.clone() as Arc<dyn MetricsSource>).unwrap();
+        let addr = listener.local_addr();
+        for garbage in [false, true, true, false] {
+            let body = scrape(addr, garbage);
+            assert!(body.contains("amips_test_metric 1"), "{body:?}");
+            assert!(
+                body.contains("amips_test_gauge{collection=\"docs\"} 2"),
+                "{body:?}"
+            );
+        }
+        source.stop.store(true, Ordering::SeqCst);
+        listener.join();
+    }
+}

@@ -7,18 +7,33 @@
 //! [`crate::index::Catalog`] ([`engine`], [`server`]), plus a blocking
 //! client SDK ([`client`]).
 //!
-//! Entry points: `amips serve --catalog <dir> --listen <addr>` on the
-//! CLI, [`NetServer::serve_catalog`] in the library, [`NetClient`] on
-//! the client side, and the `bench_serve` load generator for open-loop
-//! latency/throughput measurement.
+//! Entry points: `amips serve --catalog <dir> --listen <addr>
+//! [--metrics-port <p>]` on the CLI, [`NetServer::serve_catalog`] in
+//! the library, [`NetClient`] on the client side (blocking one-shot
+//! and pipelined modes), and the `bench_serve` load generator for
+//! open-loop latency/throughput and closed-loop pipelined measurement.
+//!
+//! Wire protocol v2 carries a client-assigned `request_id` on
+//! Search/Mutate/Compact frames, echoed on Hits/Mutated/Error, so one
+//! connection can keep up to `max_inflight` requests in flight and
+//! receive completions out of order ([`wire`], [`server`]). v1 clients
+//! keep working unchanged (strict request/reply alternation; the
+//! server answers every frame in the version it arrived at). A
+//! separate metrics listener ([`metrics`]) exports per-tenant
+//! latency/queue/in-flight counters as plain text. [`fault`] provides
+//! the seeded fault-injection stream wrapper the net test suites use.
 
 pub mod client;
 pub mod engine;
+pub mod fault;
+pub mod metrics;
 pub mod server;
 pub mod wire;
 
-pub use client::{NetClient, NetError, SearchOptions};
-pub use engine::{NetReply, NetRequest, SubmitError, Tenant, TenantStats};
+pub use client::{NetClient, NetError, PipelineReply, SearchOptions};
+pub use engine::{NetReply, NetRequest, ReplySink, SubmitError, TaggedReply, Tenant, TenantStats};
+pub use fault::{FaultPlan, FaultyStream};
+pub use metrics::{MetricsListener, MetricsSource};
 pub use server::{NetServer, NetServerConfig};
 pub use wire::{
     CollectionStats, CompactFrame, ErrorCode, ErrorFrame, Frame, HitsFrame, MutateFrame, MutateOp,

@@ -1,43 +1,67 @@
-//! The TCP front-end: accept loop, per-connection frame loop, tenant
-//! routing, stats aggregation and graceful shutdown.
+//! The TCP front-end: accept loop, per-connection frame loop with
+//! request pipelining, tenant routing, stats aggregation, the
+//! metrics listener, and graceful shutdown.
 //!
 //! ```text
 //!  TcpListener (nonblocking poll, shutdown-aware)
-//!     └── connection thread per client (capped)
+//!     └── connection reader thread per client (capped)
 //!           ├── read_frame_idle: idle-poll for the stop flag without
 //!           │   desyncing mid-frame; slow-loris frame timeout
 //!           ├── draining? -> every frame answers ShuttingDown + close
-//!           ├── Ping -> Pong, StatsRequest -> Stats
-//!           ├── Search -> validate k -> Tenant::submit (bounded) ->
-//!           │   block on reply
+//!           ├── Ping -> Pong, StatsRequest -> Stats (direct write)
+//!           ├── Search v2 -> dup-id / max_inflight admission ->
+//!           │   Tenant::submit with a Queued reply sink; completions
+//!           │   flow out of order through the writer thread below
+//!           ├── Search v1 -> Tenant::submit -> block on reply
+//!           │   (legacy strict alternation, unchanged)
 //!           └── Mutate/Compact -> route to the mutable collection,
-//!               apply on the connection thread (the collection's own
-//!               mutation mutex serializes writers; searches keep
-//!               serving the old generation until the swap commits)
+//!               apply on the reader thread in arrival order (the
+//!               collection's own mutation mutex serializes writers;
+//!               searches keep serving the old generation until the
+//!               swap commits)
+//!     └── connection writer thread: drains a bounded reply queue of
+//!         id-tagged completions; every frame write (reader- or
+//!         writer-side) goes through one shared stream mutex so frames
+//!         never interleave
 //!  Tenant (one per catalog collection)
 //!     └── worker thread: Batcher -> deadline triage -> map pass ->
 //!         fused (k, effort) group scans -> per-request replies
+//!  Metrics TcpListener (optional, --metrics-port)
+//!     └── write-only text scrape per connection; never contends with
+//!         the data plane
 //! ```
+//!
+//! **Pipelining invariant.** A connection may have at most
+//! `max_inflight` v2 searches admitted at once; its reply queue holds
+//! exactly `max_inflight` slots, and the per-connection in-flight
+//! count is decremented only *after* a reply has been drained from the
+//! queue. Each in-flight request therefore contributes at most one
+//! queued reply and the tenant worker's queued send can never block —
+//! a slow-reading client stalls its own writer thread (bounded by the
+//! stream write timeout), never a shared tenant worker. Admission past
+//! the cap is a typed [`ErrorCode::Overloaded`] echoing the request
+//! id, not an unbounded buffer.
 //!
 //! Every failure a client can cause — unknown collection, bad frame,
 //! full queue, expired deadline, draining server — is answered with a
 //! typed [`ErrorFrame`] before the connection is (at worst) closed;
 //! nothing hangs a socket and nothing allocates beyond the wire caps.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::sync_channel;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::BatchPolicy;
-use crate::coordinator::net::engine::{NetRequest, Tenant};
+use crate::coordinator::net::engine::{NetRequest, ReplySink, TaggedReply, Tenant};
+use crate::coordinator::net::metrics::{self, MetricsListener, MetricsSource};
 use crate::coordinator::net::wire::{
-    read_frame_idle, write_frame, ErrorCode, ErrorFrame, Frame, MutateFrame, MutateOp,
-    MutatedFrame, StatsFrame, WireError, MAX_HITS,
+    read_frame_idle, write_frame_versioned, ErrorCode, ErrorFrame, Frame, MutateFrame, MutateOp,
+    MutatedFrame, SearchFrame, StatsFrame, WireError, MAX_HITS, V1, VERSION,
 };
 use crate::index::catalog::Catalog;
 use crate::index::segment::{Compactor, CompactorConfig, MutableCollection};
@@ -65,6 +89,15 @@ pub struct NetServerConfig {
     /// notice the stop flag before proceeding without them (they exit
     /// on their own; shutdown just stops blocking on stragglers).
     pub drain_timeout: Duration,
+    /// Per-connection cap on concurrently admitted v2 searches; the
+    /// cap also sizes the connection's bounded reply queue. Admission
+    /// past it answers a typed [`ErrorCode::Overloaded`] echoing the
+    /// request id.
+    pub max_inflight: usize,
+    /// When set, a second listener on this address serves plain-text
+    /// metrics scrapes (one snapshot per connection, then close) so
+    /// scrapers never touch the data plane.
+    pub metrics_addr: Option<SocketAddr>,
 }
 
 impl Default for NetServerConfig {
@@ -76,8 +109,18 @@ impl Default for NetServerConfig {
             idle_timeout: Duration::from_millis(50),
             frame_timeout: Duration::from_secs(2),
             drain_timeout: Duration::from_secs(10),
+            max_inflight: 32,
+            metrics_addr: None,
         }
     }
+}
+
+/// Pass/error counter handles of one background compaction worker,
+/// published to the metrics listener.
+struct CompactorCounters {
+    collection: String,
+    passes: Arc<AtomicU64>,
+    errors: Arc<AtomicU64>,
 }
 
 struct Shared {
@@ -89,6 +132,12 @@ struct Shared {
     mutables: BTreeMap<String, Arc<MutableCollection>>,
     shutting: AtomicBool,
     live_connections: AtomicUsize,
+    /// Server-wide count of pipelined searches currently admitted into
+    /// tenant queues (exported by the metrics listener).
+    inflight: AtomicUsize,
+    /// Filled in by [`NetServer::serve_catalog`] after the compaction
+    /// workers spawn.
+    compactor_counters: Mutex<Vec<CompactorCounters>>,
     cfg: NetServerConfig,
 }
 
@@ -115,6 +164,90 @@ impl Shared {
         out.max_s = hist.max_s();
         out
     }
+
+    /// Render one plain-text metrics snapshot (`key value` /
+    /// `key{label="x"} value` lines, Prometheus-style). Collection
+    /// names come from the catalog (trusted, wire-capped); quotes and
+    /// backslashes are escaped anyway so a hostile name can't break a
+    /// scraper's line parser.
+    fn render_metrics(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let mut out = String::with_capacity(1024);
+        out.push_str(&format!(
+            "amips_build_info{{version=\"{}\",wire_version=\"{VERSION}\"}} 1\n",
+            env!("CARGO_PKG_VERSION")
+        ));
+        out.push_str(&format!(
+            "amips_connections {}\n",
+            self.live_connections.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!(
+            "amips_inflight_requests {}\n",
+            self.inflight.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!("amips_max_inflight {}\n", self.cfg.max_inflight));
+        out.push_str(&format!(
+            "amips_draining {}\n",
+            self.shutting.load(Ordering::SeqCst) as u8
+        ));
+        for (name, tenant) in &self.tenants {
+            let name = esc(name);
+            let c = tenant.collection_stats();
+            let label = format!("{{collection=\"{name}\"}}");
+            out.push_str(&format!("amips_tenant_served_total{label} {}\n", c.served));
+            out.push_str(&format!("amips_tenant_errors_total{label} {}\n", c.errors));
+            out.push_str(&format!(
+                "amips_tenant_overloaded_total{label} {}\n",
+                c.overloaded
+            ));
+            out.push_str(&format!(
+                "amips_tenant_expired_total{label} {}\n",
+                c.expired
+            ));
+            out.push_str(&format!(
+                "amips_tenant_queue_depth{label} {}\n",
+                c.queue_depth
+            ));
+            let hist = tenant.stats().latency.lock().unwrap().snapshot();
+            for (q, v) in [
+                ("0.5", hist.p50_s()),
+                ("0.99", hist.p99_s()),
+                ("0.999", hist.p999_s()),
+            ] {
+                out.push_str(&format!(
+                    "amips_tenant_latency_seconds{{collection=\"{name}\",quantile=\"{q}\"}} {v}\n"
+                ));
+            }
+            out.push_str(&format!(
+                "amips_tenant_latency_seconds_max{label} {}\n",
+                hist.max_s()
+            ));
+        }
+        for c in self.compactor_counters.lock().unwrap().iter() {
+            let label = format!("{{collection=\"{}\"}}", esc(&c.collection));
+            out.push_str(&format!(
+                "amips_compactor_passes_total{label} {}\n",
+                c.passes.load(Ordering::Relaxed)
+            ));
+            out.push_str(&format!(
+                "amips_compactor_errors_total{label} {}\n",
+                c.errors.load(Ordering::Relaxed)
+            ));
+        }
+        out
+    }
+}
+
+impl MetricsSource for Shared {
+    fn render(&self) -> String {
+        self.render_metrics()
+    }
+
+    fn shutting(&self) -> bool {
+        self.shutting.load(Ordering::SeqCst)
+    }
 }
 
 /// A running TCP search server over a catalog of collections.
@@ -125,6 +258,8 @@ pub struct NetServer {
     /// One background compaction worker per mutable collection
     /// (stopped and joined by [`NetServer::shutdown`] / drop).
     compactors: Vec<Compactor>,
+    /// The optional metrics listener (`cfg.metrics_addr`).
+    metrics: Option<MetricsListener>,
 }
 
 impl NetServer {
@@ -158,10 +293,20 @@ impl NetServer {
         // one background compaction worker per mutable collection; a
         // worker only ever calls `compact()`, which swaps generations
         // under a brief write lock, so searches are never blocked
-        for coll in server.shared.mutables.values() {
+        for (name, coll) in &server.shared.mutables {
+            let compactor = Compactor::spawn(coll.clone(), CompactorConfig::default())?;
+            let (passes, errors) = compactor.counter_handles();
             server
-                .compactors
-                .push(Compactor::spawn(coll.clone(), CompactorConfig::default())?);
+                .shared
+                .compactor_counters
+                .lock()
+                .unwrap()
+                .push(CompactorCounters {
+                    collection: name.clone(),
+                    passes,
+                    errors,
+                });
+            server.compactors.push(compactor);
         }
         Ok(server)
     }
@@ -196,8 +341,17 @@ impl NetServer {
             mutables,
             shutting: AtomicBool::new(false),
             live_connections: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
+            compactor_counters: Mutex::new(Vec::new()),
             cfg,
         });
+        let metrics = match cfg.metrics_addr {
+            Some(addr) => Some(
+                metrics::spawn(addr, shared.clone() as Arc<dyn MetricsSource>)
+                    .context("binding metrics listener")?,
+            ),
+            None => None,
+        };
         let shared2 = shared.clone();
         let accept_thread = std::thread::Builder::new()
             .name("amips-net-accept".into())
@@ -207,12 +361,18 @@ impl NetServer {
             local_addr,
             accept_thread: Some(accept_thread),
             compactors: Vec::new(),
+            metrics,
         })
     }
 
     /// The bound address (resolves `:0` to the actual ephemeral port).
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
+    }
+
+    /// The metrics listener's bound address, when one was configured.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics.as_ref().map(|m| m.local_addr())
     }
 
     /// Snapshot server-wide stats (same data as the wire `Stats` frame).
@@ -256,6 +416,9 @@ impl NetServer {
                 eprintln!("amips serve: final commit of '{name}' failed: {e:#}");
             }
         }
+        if let Some(m) = self.metrics.take() {
+            m.join();
+        }
     }
 }
 
@@ -264,6 +427,9 @@ impl Drop for NetServer {
         self.shared.shutting.store(true, Ordering::SeqCst);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
+        }
+        if let Some(m) = self.metrics.take() {
+            m.join();
         }
     }
 }
@@ -277,12 +443,14 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
             Ok((stream, _peer)) => {
                 if shared.live_connections.load(Ordering::SeqCst) >= shared.cfg.max_connections {
                     let mut stream = stream;
-                    let _ = write_frame(
+                    // written at v1: decodable by every client vintage
+                    let _ = write_frame_versioned(
                         &mut stream,
-                        &Frame::Error(ErrorFrame {
-                            code: ErrorCode::Overloaded,
-                            message: "connection limit reached".into(),
-                        }),
+                        &Frame::Error(ErrorFrame::conn(
+                            ErrorCode::Overloaded,
+                            "connection limit reached".into(),
+                        )),
+                        V1,
                     );
                     continue;
                 }
@@ -309,86 +477,197 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     }
 }
 
-/// Best-effort typed error reply (the peer may already be gone).
-fn send_error(stream: &mut TcpStream, code: ErrorCode, message: String) {
-    let _ = write_frame(stream, &Frame::Error(ErrorFrame { code, message }));
+/// Per-connection pipelining state. The reader thread owns the
+/// decoding loop; `write` is a `try_clone` of the same socket shared
+/// with the writer thread, and *every* frame write goes through its
+/// mutex so frames never interleave on the wire.
+struct Conn {
+    write: Arc<Mutex<TcpStream>>,
+    /// v2 searches currently admitted into tenant queues. Incremented
+    /// at admission (reader thread), decremented by the writer thread
+    /// only after the reply has been drained from the queue — that
+    /// ordering is what makes queued sends non-blocking (see the
+    /// module doc).
+    inflight: Arc<AtomicUsize>,
+    /// In-flight request ids; a duplicate is a client bug answered
+    /// with a typed `BadRequest` echoing the id.
+    ids: Arc<Mutex<HashSet<u64>>>,
+    /// Cleared by the writer thread when the peer stops accepting
+    /// writes; the reader polls it and closes.
+    alive: Arc<AtomicBool>,
+    /// Owned (not cloned into long-lived state) so it drops when the
+    /// reader exits: once every in-flight [`ReplySink`] clone is gone
+    /// too, the channel disconnects and the writer thread exits.
+    reply_tx: SyncSender<TaggedReply>,
 }
 
-fn handle_connection(mut stream: TcpStream, shared: &Shared) {
+impl Conn {
+    /// Clone the socket and spawn the detached writer thread. The
+    /// writer outlives the reader on purpose: replies still queued at
+    /// reader exit (client gone, drain, desync) are flushed
+    /// best-effort before the channel disconnects.
+    fn start(stream: &TcpStream, shared: &Arc<Shared>) -> std::io::Result<Conn> {
+        let write = Arc::new(Mutex::new(stream.try_clone()?));
+        let (reply_tx, reply_rx) =
+            sync_channel::<TaggedReply>(shared.cfg.max_inflight.max(1));
+        let conn = Conn {
+            write: write.clone(),
+            inflight: Arc::new(AtomicUsize::new(0)),
+            ids: Arc::new(Mutex::new(HashSet::new())),
+            alive: Arc::new(AtomicBool::new(true)),
+            reply_tx,
+        };
+        let (inflight, ids, alive) = (conn.inflight.clone(), conn.ids.clone(), conn.alive.clone());
+        let shared = shared.clone();
+        std::thread::Builder::new()
+            .name("amips-net-writer".into())
+            .spawn(move || {
+                while let Ok(done) = reply_rx.recv() {
+                    if alive.load(Ordering::SeqCst) {
+                        let frame = match done.reply {
+                            Ok(hits) => Frame::Hits(hits),
+                            Err(e) => Frame::Error(e),
+                        };
+                        // queued replies only exist on v2 connections
+                        let mut w = write.lock().unwrap();
+                        if write_frame_versioned(&mut *w, &frame, VERSION).is_err() {
+                            alive.store(false, Ordering::SeqCst);
+                        }
+                    }
+                    // free the slot only after the drain: the queue can
+                    // never hold more replies than admitted requests
+                    ids.lock().unwrap().remove(&done.request_id);
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                    shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                }
+            })?;
+        Ok(conn)
+    }
+
+    /// Write one frame under the stream mutex, echoing the request's
+    /// wire version. `false` means the peer is unreachable.
+    fn write(&self, frame: &Frame, version: u8) -> bool {
+        let mut w = self.write.lock().unwrap();
+        let ok = write_frame_versioned(&mut *w, frame, version).is_ok();
+        if !ok {
+            self.alive.store(false, Ordering::SeqCst);
+        }
+        ok
+    }
+
+    /// Best-effort typed error reply (the peer may already be gone).
+    fn send_error(&self, version: u8, request_id: u64, code: ErrorCode, message: String) {
+        self.write(
+            &Frame::Error(ErrorFrame {
+                request_id,
+                code,
+                message,
+            }),
+            version,
+        );
+    }
+}
+
+fn handle_connection(stream: TcpStream, shared: &Arc<Shared>) {
+    let mut stream = stream;
     let _ = stream.set_nodelay(true);
+    // a peer that stops reading can stall a write (and the shared
+    // write mutex) for at most this long before the connection dies
+    let _ = stream.set_write_timeout(Some(shared.cfg.frame_timeout.max(Duration::from_millis(1))));
+    let Ok(conn) = Conn::start(&stream, shared) else {
+        return;
+    };
     loop {
-        let frame = match read_frame_idle(
+        if !conn.alive.load(Ordering::SeqCst) {
+            return;
+        }
+        let (frame, version) = match read_frame_idle(
             &mut stream,
             shared.cfg.idle_timeout,
             shared.cfg.frame_timeout,
         ) {
-            Ok(Some(f)) => f,
+            Ok(Some(fv)) => fv,
             Ok(None) => {
                 // quiet socket: poll the shutdown flag and keep waiting
                 if shared.shutting.load(Ordering::SeqCst) {
-                    send_error(
-                        &mut stream,
-                        ErrorCode::ShuttingDown,
-                        "server is draining".into(),
-                    );
+                    conn.send_error(V1, 0, ErrorCode::ShuttingDown, "server is draining".into());
                     return;
                 }
                 continue;
             }
             Err(WireError::Closed) => return,
             Err(e) => {
-                // a decode error desyncs the stream: typed reply, close
-                send_error(&mut stream, e.reply_code(), e.to_string());
+                // a decode error desyncs the stream: typed reply, close.
+                // Written at v1 (no id to echo anyway) so every client
+                // vintage can decode its eviction notice.
+                conn.send_error(V1, 0, e.reply_code(), e.to_string());
                 return;
             }
         };
         // once draining, EVERY frame type gets ShuttingDown and a close
         // — a client spamming Ping/Stats faster than the idle timeout
-        // must not keep its thread (and thus shutdown()) alive forever
+        // must not keep its thread (and thus shutdown()) alive forever.
+        // In-flight pipelined replies still flush through the writer.
         if shared.shutting.load(Ordering::SeqCst) {
-            send_error(
-                &mut stream,
-                ErrorCode::ShuttingDown,
-                "server is draining".into(),
-            );
+            conn.send_error(version, 0, ErrorCode::ShuttingDown, "server is draining".into());
             return;
         }
         match frame {
             Frame::Ping { token } => {
-                if write_frame(&mut stream, &Frame::Pong { token }).is_err() {
+                if !conn.write(&Frame::Pong { token }, version) {
                     return;
                 }
             }
             Frame::StatsRequest => {
-                if write_frame(&mut stream, &Frame::Stats(shared.stats_frame())).is_err() {
+                if !conn.write(&Frame::Stats(shared.stats_frame()), version) {
                     return;
                 }
             }
+            // v2: admit into the pipeline, reply routed by id later
+            Frame::Search(s) if version >= 2 => {
+                if !admit_pipelined_search(s, version, &conn, shared) {
+                    return;
+                }
+            }
+            // v1: legacy strict alternation, block for the reply
             Frame::Search(s) => {
-                let reply = serve_search(s, shared);
-                let frame = match reply {
+                let frame = match serve_search_blocking(s, shared) {
                     Ok(hits) => Frame::Hits(hits),
                     Err(e) => Frame::Error(e),
                 };
-                if write_frame(&mut stream, &frame).is_err() {
+                if !conn.write(&frame, version) {
                     return;
                 }
             }
             Frame::Mutate(m) => {
+                let id = m.request_id;
                 let frame = match serve_mutate(m, shared) {
-                    Ok(done) => Frame::Mutated(done),
-                    Err(e) => Frame::Error(e),
+                    Ok(mut done) => {
+                        done.request_id = id;
+                        Frame::Mutated(done)
+                    }
+                    Err(mut e) => {
+                        e.request_id = id;
+                        Frame::Error(e)
+                    }
                 };
-                if write_frame(&mut stream, &frame).is_err() {
+                if !conn.write(&frame, version) {
                     return;
                 }
             }
             Frame::Compact(cf) => {
+                let id = cf.request_id;
                 let frame = match serve_compact(&cf.collection, shared) {
-                    Ok(done) => Frame::Mutated(done),
-                    Err(e) => Frame::Error(e),
+                    Ok(mut done) => {
+                        done.request_id = id;
+                        Frame::Mutated(done)
+                    }
+                    Err(mut e) => {
+                        e.request_id = id;
+                        Frame::Error(e)
+                    }
                 };
-                if write_frame(&mut stream, &frame).is_err() {
+                if !conn.write(&frame, version) {
                     return;
                 }
             }
@@ -398,8 +677,9 @@ fn handle_connection(mut stream: TcpStream, shared: &Shared) {
             | Frame::Pong { .. }
             | Frame::Stats(_)
             | Frame::Mutated(_) => {
-                send_error(
-                    &mut stream,
+                conn.send_error(
+                    version,
+                    0,
                     ErrorCode::BadRequest,
                     "client sent a server-side frame".into(),
                 );
@@ -409,15 +689,60 @@ fn handle_connection(mut stream: TcpStream, shared: &Shared) {
     }
 }
 
-/// Route one search frame to its tenant and block for the reply.
-fn serve_search(
-    s: crate::coordinator::net::wire::SearchFrame,
-    shared: &Shared,
-) -> Result<crate::coordinator::net::wire::HitsFrame, ErrorFrame> {
+/// Admit one v2 search into the connection's pipeline: duplicate-id
+/// and `max_inflight` checks, then a tenant submit with a queued reply
+/// sink. Rejections are answered directly (they never held a queue
+/// slot). Returns `false` when the connection is unwritable.
+fn admit_pipelined_search(
+    s: SearchFrame,
+    version: u8,
+    conn: &Conn,
+    shared: &Arc<Shared>,
+) -> bool {
+    let id = s.request_id;
+    if conn.inflight.load(Ordering::SeqCst) >= shared.cfg.max_inflight {
+        let msg = format!(
+            "connection already has {} requests in flight (max_inflight {})",
+            conn.inflight.load(Ordering::SeqCst),
+            shared.cfg.max_inflight
+        );
+        conn.send_error(version, id, ErrorCode::Overloaded, msg);
+        return conn.alive.load(Ordering::SeqCst);
+    }
+    if !conn.ids.lock().unwrap().insert(id) {
+        let msg = format!("request id {id} is already in flight on this connection");
+        conn.send_error(version, id, ErrorCode::BadRequest, msg);
+        return conn.alive.load(Ordering::SeqCst);
+    }
+    conn.inflight.fetch_add(1, Ordering::SeqCst);
+    shared.inflight.fetch_add(1, Ordering::SeqCst);
+    let sink = ReplySink::Queued {
+        request_id: id,
+        tx: conn.reply_tx.clone(),
+    };
+    if let Err(e) = admit_search(s, shared, sink) {
+        // never admitted: no reply will flow through the queue, so
+        // undo the slot accounting and answer directly
+        conn.ids.lock().unwrap().remove(&id);
+        conn.inflight.fetch_sub(1, Ordering::SeqCst);
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        let mut e = e;
+        e.request_id = id;
+        conn.write(&Frame::Error(e), version);
+        return conn.alive.load(Ordering::SeqCst);
+    }
+    true
+}
+
+/// Validate one search frame and submit it to its tenant with the
+/// given reply sink. `Err` means the request was never admitted (the
+/// caller replies directly); `Ok` means exactly one reply will reach
+/// the sink.
+fn admit_search(s: SearchFrame, shared: &Shared, sink: ReplySink) -> Result<(), ErrorFrame> {
     let Some(tenant) = shared.tenants.get(&s.collection) else {
-        return Err(ErrorFrame {
-            code: ErrorCode::UnknownCollection,
-            message: format!(
+        return Err(ErrorFrame::conn(
+            ErrorCode::UnknownCollection,
+            format!(
                 "no collection '{}' (serving: {})",
                 s.collection,
                 shared
@@ -427,16 +752,16 @@ fn serve_search(
                     .collect::<Vec<_>>()
                     .join(", ")
             ),
-        });
+        ));
     };
     // reject a hostile k at admission, before anything downstream can
     // use it as an allocation size (the tenant triage re-checks for
     // callers that bypass the wire)
     if s.k == 0 || s.k as usize > MAX_HITS {
-        return Err(ErrorFrame {
-            code: ErrorCode::BadRequest,
-            message: format!("k {} outside [1, {MAX_HITS}]", s.k),
-        });
+        return Err(ErrorFrame::conn(
+            ErrorCode::BadRequest,
+            format!("k {} outside [1, {MAX_HITS}]", s.k),
+        ));
     }
     let enqueued = Instant::now();
     let deadline = if s.deadline_micros > 0 {
@@ -444,7 +769,6 @@ fn serve_search(
     } else {
         None
     };
-    let (rtx, rrx) = sync_channel(1);
     let req = NetRequest {
         query: s.query,
         k: s.k as usize,
@@ -452,12 +776,12 @@ fn serve_search(
         mode: s.mode,
         deadline,
         enqueued,
-        reply: rtx,
+        reply: sink,
     };
-    if let Err(e) = tenant.submit(req) {
-        return Err(ErrorFrame {
-            code: e.code(),
-            message: match e {
+    tenant.submit(req).map_err(|e| {
+        ErrorFrame::conn(
+            e.code(),
+            match e {
                 crate::coordinator::net::engine::SubmitError::Overloaded => {
                     format!("collection '{}' queue is full", s.collection)
                 }
@@ -465,14 +789,23 @@ fn serve_search(
                     "server is draining".into()
                 }
             },
-        });
-    }
+        )
+    })
+}
+
+/// Route one v1 search frame to its tenant and block for the reply.
+fn serve_search_blocking(
+    s: SearchFrame,
+    shared: &Shared,
+) -> Result<crate::coordinator::net::wire::HitsFrame, ErrorFrame> {
+    let (rtx, rrx) = sync_channel(1);
+    admit_search(s, shared, ReplySink::Oneshot(rtx))?;
     match rrx.recv() {
         Ok(reply) => reply,
-        Err(_) => Err(ErrorFrame {
-            code: ErrorCode::Internal,
-            message: "worker dropped the request".into(),
-        }),
+        Err(_) => Err(ErrorFrame::conn(
+            ErrorCode::Internal,
+            "worker dropped the request".into(),
+        )),
     }
 }
 
@@ -484,14 +817,14 @@ fn find_mutable<'a>(
 ) -> Result<&'a Arc<MutableCollection>, ErrorFrame> {
     match shared.mutables.get(name) {
         Some(coll) => Ok(coll),
-        None if shared.tenants.contains_key(name) => Err(ErrorFrame {
-            code: ErrorCode::Unsupported,
-            message: format!("collection '{name}' is immutable (built artifact, not .seg)"),
-        }),
-        None => Err(ErrorFrame {
-            code: ErrorCode::UnknownCollection,
-            message: format!("no collection '{name}'"),
-        }),
+        None if shared.tenants.contains_key(name) => Err(ErrorFrame::conn(
+            ErrorCode::Unsupported,
+            format!("collection '{name}' is immutable (built artifact, not .seg)"),
+        )),
+        None => Err(ErrorFrame::conn(
+            ErrorCode::UnknownCollection,
+            format!("no collection '{name}'"),
+        )),
     }
 }
 
@@ -500,10 +833,7 @@ fn find_mutable<'a>(
 /// searches proceed under the read lock throughout.
 fn serve_mutate(m: MutateFrame, shared: &Shared) -> Result<MutatedFrame, ErrorFrame> {
     let coll = find_mutable(&m.collection, shared)?;
-    let bad = |message: String| ErrorFrame {
-        code: ErrorCode::BadRequest,
-        message,
-    };
+    let bad = |message: String| ErrorFrame::conn(ErrorCode::BadRequest, message);
     let dim = m.dim as usize;
     // the decoder already guaranteed vectors.len() % dim == 0 (and
     // dim == 0 ⟹ no vectors); here we check op-specific shape rules
@@ -547,6 +877,7 @@ fn serve_mutate(m: MutateFrame, shared: &Shared) -> Result<MutatedFrame, ErrorFr
         }
     };
     Ok(MutatedFrame {
+        request_id: 0, // stamped by the caller from the request frame
         ids,
         len: coll.len() as u64,
         gen: coll.generation(),
@@ -560,11 +891,11 @@ fn serve_mutate(m: MutateFrame, shared: &Shared) -> Result<MutatedFrame, ErrorFr
 fn serve_compact(name: &str, shared: &Shared) -> Result<MutatedFrame, ErrorFrame> {
     let coll = find_mutable(name, shared)?;
     let started = Instant::now();
-    let gen = coll.compact().map_err(|e| ErrorFrame {
-        code: ErrorCode::Internal,
-        message: format!("compaction failed: {e:#}"),
-    })?;
+    let gen = coll
+        .compact()
+        .map_err(|e| ErrorFrame::conn(ErrorCode::Internal, format!("compaction failed: {e:#}")))?;
     Ok(MutatedFrame {
+        request_id: 0, // stamped by the caller from the request frame
         ids: Vec::new(),
         len: coll.len() as u64,
         gen,

@@ -25,6 +25,24 @@
 //! answered by `Mutated` or `Error`. Error replies carry a stable
 //! [`ErrorCode`] so clients can react to `Overloaded` /
 //! `DeadlineExpired` / `ShuttingDown` without string matching.
+//!
+//! **Versioning.** Two wire versions coexist; the header's version byte
+//! selects the payload layout *per frame*:
+//!
+//! * **v1** — strict request/reply alternation, no request ids (the
+//!   PR 6/7 protocol, kept bit-compatible for legacy clients).
+//! * **v2** — `Search`/`Mutate`/`Compact` payloads begin with a
+//!   client-assigned `request_id: u64`, echoed at the head of
+//!   `Hits`/`Mutated`/`Error` replies. Ids make replies self-describing,
+//!   so a connection may keep many requests in flight and receive
+//!   completions out of order. `Ping`/`Pong`/`StatsRequest`/`Stats`
+//!   payloads are identical in both versions (the ping token already
+//!   serves as a correlation id).
+//!
+//! A server replies in the version of the frame it is answering; a
+//! client discovers the server's ceiling by sending a v2 `Ping` at
+//! connect and downgrading on a typed version rejection (see
+//! `NetClient::connect`).
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -34,8 +52,13 @@ use crate::api::{Effort, QueryMode};
 
 /// Per-frame magic bytes ("AMips Transport Protocol").
 pub const MAGIC: [u8; 4] = *b"AMTP";
-/// Protocol version spoken by this build.
-pub const VERSION: u8 = 1;
+/// Newest protocol version spoken by this build (request ids,
+/// out-of-order completion).
+pub const VERSION: u8 = 2;
+/// The legacy strict-alternation protocol (no request ids).
+pub const V1: u8 = 1;
+/// Oldest version this build still decodes.
+pub const MIN_VERSION: u8 = 1;
 /// Frame header size: magic + version + tag + payload length.
 pub const HEADER_LEN: usize = 10;
 /// Hard cap on one frame's payload (guards decoder allocations).
@@ -177,6 +200,8 @@ impl WireError {
 /// batch is drained after the budget has elapsed.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SearchFrame {
+    /// Client-assigned correlation id (v2 only; 0 on decoded v1 frames).
+    pub request_id: u64,
     pub collection: String,
     pub k: u32,
     pub effort: Effort,
@@ -189,6 +214,8 @@ pub struct SearchFrame {
 /// and the server-observed latency.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct HitsFrame {
+    /// Echo of the request's id (v2 only; 0 over v1).
+    pub request_id: u64,
     pub ids: Vec<u32>,
     pub scores: Vec<f32>,
     pub keys_scanned: u64,
@@ -201,8 +228,24 @@ pub struct HitsFrame {
 /// A typed error reply.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ErrorFrame {
+    /// Echo of the failing request's id (v2 only). 0 when the failure
+    /// predates id extraction (undecodable frame, connection-level
+    /// notice) — pipelined clients treat id-0 errors as
+    /// connection-scoped rather than request-scoped.
+    pub request_id: u64,
     pub code: ErrorCode,
     pub message: String,
+}
+
+impl ErrorFrame {
+    /// Connection-scoped error (no specific request to blame).
+    pub fn conn(code: ErrorCode, message: String) -> ErrorFrame {
+        ErrorFrame {
+            request_id: 0,
+            code,
+            message,
+        }
+    }
 }
 
 /// Per-collection row inside a [`StatsFrame`].
@@ -251,6 +294,8 @@ pub enum MutateOp {
 /// decoded frame always has a well-defined row count.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MutateFrame {
+    /// Client-assigned correlation id (v2 only; 0 on decoded v1 frames).
+    pub request_id: u64,
     pub collection: String,
     pub op: MutateOp,
     pub ids: Vec<u32>,
@@ -263,6 +308,8 @@ pub struct MutateFrame {
 /// after the operation, and the server-observed latency.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct MutatedFrame {
+    /// Echo of the request's id (v2 only; 0 over v1).
+    pub request_id: u64,
     pub ids: Vec<u32>,
     pub len: u64,
     pub gen: u64,
@@ -273,6 +320,8 @@ pub struct MutatedFrame {
 /// segments + tombstones into a fresh sealed generation.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CompactFrame {
+    /// Client-assigned correlation id (v2 only; 0 on decoded v1 frames).
+    pub request_id: u64,
     pub collection: String,
 }
 
@@ -338,11 +387,18 @@ fn encode_mode(b: &mut Vec<u8>, m: QueryMode) {
     });
 }
 
-/// Encode one frame's `(tag, payload)` pair.
-pub(crate) fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
+/// Encode one frame's `(tag, payload)` pair for the given wire
+/// `version`. In v2 the six request/reply tags that correlate by id
+/// lead their payload with the `request_id: u64`; in v1 that field is
+/// simply omitted (legacy layout, id information is lost).
+pub(crate) fn encode_payload(frame: &Frame, version: u8) -> (u8, Vec<u8>) {
     let mut b = Vec::new();
+    let v2 = version >= 2;
     let t = match frame {
         Frame::Search(s) => {
+            if v2 {
+                put_u64(&mut b, s.request_id);
+            }
             put_str(&mut b, &s.collection);
             put_u32(&mut b, s.k);
             encode_effort(&mut b, s.effort);
@@ -355,6 +411,9 @@ pub(crate) fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
             tag::SEARCH
         }
         Frame::Hits(h) => {
+            if v2 {
+                put_u64(&mut b, h.request_id);
+            }
             // enforce the decoder's own caps at encode time: a frame we
             // emit must be one our decoder accepts (ids/scores lengths
             // can only disagree through a server bug; emit the prefix
@@ -375,6 +434,9 @@ pub(crate) fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
             tag::HITS
         }
         Frame::Error(e) => {
+            if v2 {
+                put_u64(&mut b, e.request_id);
+            }
             put_u16(&mut b, e.code as u16);
             let mut cut = e.message.len().min(MAX_MSG_LEN);
             while cut > 0 && !e.message.is_char_boundary(cut) {
@@ -416,6 +478,9 @@ pub(crate) fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
             tag::STATS
         }
         Frame::Mutate(m) => {
+            if v2 {
+                put_u64(&mut b, m.request_id);
+            }
             put_str(&mut b, &m.collection);
             b.push(match m.op {
                 MutateOp::Insert => 0,
@@ -441,6 +506,9 @@ pub(crate) fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
             tag::MUTATE
         }
         Frame::Mutated(m) => {
+            if v2 {
+                put_u64(&mut b, m.request_id);
+            }
             let ni = m.ids.len().min(MAX_HITS);
             put_u32(&mut b, ni as u32);
             for &id in &m.ids[..ni] {
@@ -452,6 +520,9 @@ pub(crate) fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
             tag::MUTATED
         }
         Frame::Compact(cf) => {
+            if v2 {
+                put_u64(&mut b, cf.request_id);
+            }
             put_str(&mut b, &cf.collection);
             tag::COMPACT
         }
@@ -459,12 +530,24 @@ pub(crate) fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
     (t, b)
 }
 
-/// Write one frame (header + payload) in a single buffered write.
+/// Write one frame (header + payload) in a single buffered write, at
+/// the latest protocol version.
 pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
-    let (t, payload) = encode_payload(frame);
+    write_frame_versioned(w, frame, VERSION)
+}
+
+/// Write one frame at an explicit wire version (servers echo the
+/// version of the request they are answering; downgraded clients pin
+/// v1).
+pub fn write_frame_versioned<W: Write>(
+    w: &mut W,
+    frame: &Frame,
+    version: u8,
+) -> std::io::Result<()> {
+    let (t, payload) = encode_payload(frame, version);
     let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
     buf.extend_from_slice(&MAGIC);
-    buf.push(VERSION);
+    buf.push(version);
     buf.push(t);
     buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     buf.extend_from_slice(&payload);
@@ -596,12 +679,15 @@ fn decode_mode(c: &mut Cur) -> Result<QueryMode, WireError> {
     })
 }
 
-/// Decode one payload. Public within the crate so fuzz tests can hit the
-/// decoder without a socket.
-pub(crate) fn decode_payload(t: u8, payload: &[u8]) -> Result<Frame, WireError> {
+/// Decode one payload at the given wire `version`. Public within the
+/// crate so fuzz tests can hit the decoder without a socket. Decoded
+/// v1 frames carry `request_id == 0`.
+pub(crate) fn decode_payload(t: u8, payload: &[u8], version: u8) -> Result<Frame, WireError> {
     let mut c = Cur::new(payload);
+    let v2 = version >= 2;
     let frame = match t {
         tag::SEARCH => {
+            let request_id = if v2 { c.u64("request id")? } else { 0 };
             let collection = c.string(MAX_NAME_LEN, "collection name")?;
             let k = c.u32("k")?;
             let effort = decode_effort(&mut c)?;
@@ -614,6 +700,7 @@ pub(crate) fn decode_payload(t: u8, payload: &[u8]) -> Result<Frame, WireError> 
                 query.push(c.f32("query values")?);
             }
             Frame::Search(SearchFrame {
+                request_id,
                 collection,
                 k,
                 effort,
@@ -623,6 +710,7 @@ pub(crate) fn decode_payload(t: u8, payload: &[u8]) -> Result<Frame, WireError> 
             })
         }
         tag::HITS => {
+            let request_id = if v2 { c.u64("request id")? } else { 0 };
             let n = c.u32("hit count")? as usize;
             let n = c.count(n, MAX_HITS, 8, "hit count")?;
             let mut ids = Vec::with_capacity(n);
@@ -634,6 +722,7 @@ pub(crate) fn decode_payload(t: u8, payload: &[u8]) -> Result<Frame, WireError> 
                 scores.push(c.f32("hit scores")?);
             }
             Frame::Hits(HitsFrame {
+                request_id,
                 ids,
                 scores,
                 keys_scanned: c.u64("keys_scanned")?,
@@ -644,11 +733,16 @@ pub(crate) fn decode_payload(t: u8, payload: &[u8]) -> Result<Frame, WireError> 
             })
         }
         tag::ERROR => {
+            let request_id = if v2 { c.u64("request id")? } else { 0 };
             let raw = c.u16("error code")?;
             let code = ErrorCode::from_u16(raw)
                 .ok_or_else(|| WireError::Malformed(format!("unknown error code {raw}")))?;
             let message = c.string(MAX_MSG_LEN, "error message")?;
-            Frame::Error(ErrorFrame { code, message })
+            Frame::Error(ErrorFrame {
+                request_id,
+                code,
+                message,
+            })
         }
         tag::PING => Frame::Ping {
             token: c.u64("ping token")?,
@@ -697,6 +791,7 @@ pub(crate) fn decode_payload(t: u8, payload: &[u8]) -> Result<Frame, WireError> 
             })
         }
         tag::MUTATE => {
+            let request_id = if v2 { c.u64("request id")? } else { 0 };
             let collection = c.string(MAX_NAME_LEN, "collection name")?;
             let op = match c.u8("mutate op")? {
                 0 => MutateOp::Insert,
@@ -738,6 +833,7 @@ pub(crate) fn decode_payload(t: u8, payload: &[u8]) -> Result<Frame, WireError> 
                 vectors.push(c.f32("mutate vectors")?);
             }
             Frame::Mutate(MutateFrame {
+                request_id,
                 collection,
                 op,
                 ids,
@@ -746,6 +842,7 @@ pub(crate) fn decode_payload(t: u8, payload: &[u8]) -> Result<Frame, WireError> 
             })
         }
         tag::MUTATED => {
+            let request_id = if v2 { c.u64("request id")? } else { 0 };
             let ni = c.u32("mutated id count")? as usize;
             let ni = c.count(ni, MAX_HITS, 4, "mutated id count")?;
             let mut ids = Vec::with_capacity(ni);
@@ -753,28 +850,35 @@ pub(crate) fn decode_payload(t: u8, payload: &[u8]) -> Result<Frame, WireError> 
                 ids.push(c.u32("mutated ids")?);
             }
             Frame::Mutated(MutatedFrame {
+                request_id,
                 ids,
                 len: c.u64("mutated len")?,
                 gen: c.u64("mutated gen")?,
                 server_micros: c.u64("server_micros")?,
             })
         }
-        tag::COMPACT => Frame::Compact(CompactFrame {
-            collection: c.string(MAX_NAME_LEN, "collection name")?,
-        }),
+        tag::COMPACT => {
+            let request_id = if v2 { c.u64("request id")? } else { 0 };
+            Frame::Compact(CompactFrame {
+                request_id,
+                collection: c.string(MAX_NAME_LEN, "collection name")?,
+            })
+        }
         t => return Err(WireError::UnknownTag(t)),
     };
     c.finish("frame")?;
     Ok(frame)
 }
 
-/// Validate a frame header, returning `(tag, payload_len)`.
-fn decode_header(h: &[u8; HEADER_LEN]) -> Result<(u8, usize), WireError> {
+/// Validate a frame header, returning `(version, tag, payload_len)`.
+/// Any version in `MIN_VERSION..=VERSION` is accepted; the caller
+/// decodes the payload at the frame's own version.
+fn decode_header(h: &[u8; HEADER_LEN]) -> Result<(u8, u8, usize), WireError> {
     let magic: [u8; 4] = h[0..4].try_into().expect("4 bytes");
     if magic != MAGIC {
         return Err(WireError::BadMagic(magic));
     }
-    if h[4] != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&h[4]) {
         return Err(WireError::BadVersion(h[4]));
     }
     let len = u32::from_le_bytes(h[6..10].try_into().expect("4 bytes"));
@@ -785,7 +889,7 @@ fn decode_header(h: &[u8; HEADER_LEN]) -> Result<(u8, usize), WireError> {
             cap: MAX_FRAME_LEN as u64,
         });
     }
-    Ok((h[5], len as usize))
+    Ok((h[4], h[5], len as usize))
 }
 
 fn read_exact_or<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<(), WireError> {
@@ -800,12 +904,18 @@ fn read_exact_or<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<(), WireError> {
 
 /// Blocking read of one frame (client side and tests).
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    read_frame_versioned(r).map(|(f, _)| f)
+}
+
+/// Blocking read of one frame plus the wire version it arrived at, so
+/// a server can echo the request's version on its reply.
+pub fn read_frame_versioned<R: Read>(r: &mut R) -> Result<(Frame, u8), WireError> {
     let mut header = [0u8; HEADER_LEN];
     read_exact_or(r, &mut header)?;
-    let (t, len) = decode_header(&header)?;
+    let (v, t, len) = decode_header(&header)?;
     let mut payload = vec![0u8; len];
     read_exact_or(r, &mut payload)?;
-    decode_payload(t, &payload)
+    decode_payload(t, &payload, v).map(|f| (f, v))
 }
 
 /// True when `e` is a read-timeout error (both kinds platforms use).
@@ -826,7 +936,7 @@ pub fn read_frame_idle(
     stream: &mut TcpStream,
     idle: Duration,
     frame_timeout: Duration,
-) -> Result<Option<Frame>, WireError> {
+) -> Result<Option<(Frame, u8)>, WireError> {
     stream.set_read_timeout(Some(idle.max(Duration::from_millis(1))))?;
     let mut header = [0u8; HEADER_LEN];
     match stream.read(&mut header) {
@@ -840,22 +950,22 @@ pub fn read_frame_idle(
         Err(e) if is_timeout(&e) => return Ok(None),
         Err(e) => return Err(WireError::Io(e)),
     }
-    let (t, len) = decode_header(&header)?;
+    let (v, t, len) = decode_header(&header)?;
     stream.set_read_timeout(Some(frame_timeout.max(Duration::from_millis(1))))?;
     let mut payload = vec![0u8; len];
     read_exact_or(stream, &mut payload)?;
-    decode_payload(t, &payload).map(Some)
+    decode_payload(t, &payload, v).map(|f| Some((f, v)))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::prop_cases;
-    use crate::util::Rng;
 
     fn sample_frames() -> Vec<Frame> {
         vec![
             Frame::Search(SearchFrame {
+                request_id: 0xDEAD_BEEF_0001,
                 collection: "docs".into(),
                 k: 10,
                 effort: Effort::Probes(4),
@@ -864,6 +974,7 @@ mod tests {
                 query: vec![0.25, -1.5, 3.0],
             }),
             Frame::Search(SearchFrame {
+                request_id: u64::MAX,
                 collection: "x".into(),
                 k: 1,
                 effort: Effort::Frac(0.5),
@@ -872,6 +983,7 @@ mod tests {
                 query: vec![],
             }),
             Frame::Hits(HitsFrame {
+                request_id: 17,
                 ids: vec![7, 3, 9],
                 scores: vec![0.9, 0.5, -0.25],
                 keys_scanned: 123,
@@ -881,6 +993,7 @@ mod tests {
                 server_micros: 1234,
             }),
             Frame::Error(ErrorFrame {
+                request_id: 3,
                 code: ErrorCode::Overloaded,
                 message: "queue full".into(),
             }),
@@ -908,6 +1021,7 @@ mod tests {
                 }],
             }),
             Frame::Mutate(MutateFrame {
+                request_id: 21,
                 collection: "docs".into(),
                 op: MutateOp::Insert,
                 ids: vec![],
@@ -915,6 +1029,7 @@ mod tests {
                 vectors: vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8],
             }),
             Frame::Mutate(MutateFrame {
+                request_id: 22,
                 collection: "docs".into(),
                 op: MutateOp::Upsert,
                 ids: vec![7, 9],
@@ -922,6 +1037,7 @@ mod tests {
                 vectors: vec![1.0, 2.0, 3.0, 4.0],
             }),
             Frame::Mutate(MutateFrame {
+                request_id: 23,
                 collection: "docs".into(),
                 op: MutateOp::Delete,
                 ids: vec![3, 5, 8],
@@ -929,15 +1045,33 @@ mod tests {
                 vectors: vec![],
             }),
             Frame::Mutated(MutatedFrame {
+                request_id: 23,
                 ids: vec![40, 41],
                 len: 12,
                 gen: 3,
                 server_micros: 250,
             }),
             Frame::Compact(CompactFrame {
+                request_id: 24,
                 collection: "docs".into(),
             }),
         ]
+    }
+
+    /// The same frame with its correlation id zeroed — what a v1
+    /// round-trip is expected to preserve.
+    fn without_id(frame: &Frame) -> Frame {
+        let mut f = frame.clone();
+        match &mut f {
+            Frame::Search(s) => s.request_id = 0,
+            Frame::Hits(h) => h.request_id = 0,
+            Frame::Error(e) => e.request_id = 0,
+            Frame::Mutate(m) => m.request_id = 0,
+            Frame::Mutated(m) => m.request_id = 0,
+            Frame::Compact(cf) => cf.request_id = 0,
+            _ => {}
+        }
+        f
     }
 
     #[test]
@@ -945,8 +1079,44 @@ mod tests {
         for frame in sample_frames() {
             let mut buf = Vec::new();
             write_frame(&mut buf, &frame).unwrap();
-            let back = read_frame(&mut buf.as_slice()).unwrap();
+            let (back, v) = read_frame_versioned(&mut buf.as_slice()).unwrap();
+            assert_eq!(v, VERSION);
             assert_eq!(frame, back, "{frame:?}");
+        }
+    }
+
+    #[test]
+    fn v1_round_trip_drops_request_ids() {
+        // the legacy layout has no id field: encoding at v1 and reading
+        // back must yield the same frame with the id zeroed, and the
+        // reader must report the frame's own version
+        for frame in sample_frames() {
+            let mut buf = Vec::new();
+            write_frame_versioned(&mut buf, &frame, V1).unwrap();
+            let (back, v) = read_frame_versioned(&mut buf.as_slice()).unwrap();
+            assert_eq!(v, V1);
+            assert_eq!(without_id(&frame), back, "{frame:?}");
+        }
+    }
+
+    #[test]
+    fn v1_and_v2_encodings_differ_only_by_id_prefix() {
+        // the six correlated tags gain exactly 8 leading payload bytes
+        // in v2; control frames are bit-identical across versions
+        for frame in sample_frames() {
+            let (t1, p1) = encode_payload(&frame, V1);
+            let (t2, p2) = encode_payload(&frame, VERSION);
+            assert_eq!(t1, t2);
+            match frame {
+                Frame::Ping { .. }
+                | Frame::Pong { .. }
+                | Frame::StatsRequest
+                | Frame::Stats(_) => assert_eq!(p1, p2, "{frame:?}"),
+                _ => {
+                    assert_eq!(p2.len(), p1.len() + 8, "{frame:?}");
+                    assert_eq!(&p2[8..], &p1[..], "{frame:?}");
+                }
+            }
         }
     }
 
@@ -961,6 +1131,7 @@ mod tests {
             Effort::Auto,
         ] {
             let f = Frame::Search(SearchFrame {
+                request_id: 1,
                 collection: "c".into(),
                 k: 3,
                 effort,
@@ -986,12 +1157,18 @@ mod tests {
             read_frame(&mut bad.as_slice()),
             Err(WireError::BadMagic(_))
         ));
-        // version
+        // versions outside MIN_VERSION..=VERSION, both sides
         let mut bad = buf.clone();
         bad[4] = 99;
         assert!(matches!(
             read_frame(&mut bad.as_slice()),
             Err(WireError::BadVersion(99))
+        ));
+        let mut bad = buf.clone();
+        bad[4] = 0;
+        assert!(matches!(
+            read_frame(&mut bad.as_slice()),
+            Err(WireError::BadVersion(0))
         ));
         // tag
         let mut bad = buf.clone();
@@ -1016,6 +1193,7 @@ mod tests {
         ));
         // query dim larger than the bytes present: must not allocate it
         let f = Frame::Search(SearchFrame {
+            request_id: 1,
             collection: "c".into(),
             k: 1,
             effort: Effort::Auto,
@@ -1023,24 +1201,28 @@ mod tests {
             deadline_micros: 0,
             query: vec![1.0, 2.0],
         });
-        let (t, mut payload) = encode_payload(&f);
-        // the dim field sits 4 bytes before the two query floats
-        let dim_off = payload.len() - 8 - 4;
-        payload[dim_off..dim_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
-        match decode_payload(t, &payload) {
-            Err(WireError::Oversized { .. }) | Err(WireError::Truncated { .. }) => {}
-            other => panic!("expected typed cap error, got {other:?}"),
+        for version in [V1, VERSION] {
+            let (t, mut payload) = encode_payload(&f, version);
+            // the dim field sits 4 bytes before the two query floats
+            let dim_off = payload.len() - 8 - 4;
+            payload[dim_off..dim_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+            match decode_payload(t, &payload, version) {
+                Err(WireError::Oversized { .. }) | Err(WireError::Truncated { .. }) => {}
+                other => panic!("expected typed cap error, got {other:?}"),
+            }
         }
     }
 
     #[test]
     fn trailing_bytes_rejected() {
-        let (t, mut payload) = encode_payload(&Frame::Ping { token: 7 });
-        payload.push(0);
-        assert!(matches!(
-            decode_payload(t, &payload),
-            Err(WireError::Malformed(_))
-        ));
+        for version in [V1, VERSION] {
+            let (t, mut payload) = encode_payload(&Frame::Ping { token: 7 }, version);
+            payload.push(0);
+            assert!(matches!(
+                decode_payload(t, &payload, version),
+                Err(WireError::Malformed(_))
+            ));
+        }
     }
 
     #[test]
@@ -1061,17 +1243,19 @@ mod tests {
 
     #[test]
     fn fuzz_decoder_never_panics() {
-        // random byte flips and truncations over every frame type, plus
-        // pure-noise payloads under every tag: the decoder must return
-        // a typed result (flips inside float payloads may still decode
-        // Ok) and never panic or over-allocate.
+        // random byte flips and truncations over every frame type *in
+        // both wire versions*, plus pure-noise payloads under every tag
+        // at each version: the decoder must return a typed result
+        // (flips inside float payloads may still decode Ok) and never
+        // panic or over-allocate.
         let cases = prop_cases(200);
-        let mut rng = Rng::new(0xA317);
+        let mut rng = crate::util::test_rng(0xA317);
         let frames = sample_frames();
         for case in 0..cases {
             let base = &frames[case % frames.len()];
+            let version = if rng.below(2) == 0 { V1 } else { VERSION };
             let mut buf = Vec::new();
-            write_frame(&mut buf, base).unwrap();
+            write_frame_versioned(&mut buf, base, version).unwrap();
             let mut mutated = buf.clone();
             for _ in 0..1 + rng.below(4) {
                 let i = rng.below(mutated.len());
@@ -1088,9 +1272,17 @@ mod tests {
             let tag = (rng.below(14) + 1) as u8; // valid tags 1..=10 plus a few unknown
             let noise: Vec<u8> = (0..rng.below(64)).map(|_| rng.below(256) as u8).collect();
             let res = std::panic::catch_unwind(move || {
-                let _ = decode_payload(tag, &noise);
+                let _ = decode_payload(tag, &noise, version);
             });
             assert!(res.is_ok(), "payload decoder panicked on case {case}");
+            // cross-version confusion: bytes encoded at one version,
+            // decoded at the other — must stay typed, never panic
+            let (t, payload) = encode_payload(base, version);
+            let other = if version == V1 { VERSION } else { V1 };
+            let res = std::panic::catch_unwind(move || {
+                let _ = decode_payload(t, &payload, other);
+            });
+            assert!(res.is_ok(), "cross-version decode panicked on case {case}");
         }
     }
 
@@ -1134,6 +1326,7 @@ mod tests {
     fn mutate_structural_invariants_enforced() {
         // ragged float tail is truncated to whole rows at encode time
         let f = Frame::Mutate(MutateFrame {
+            request_id: 1,
             collection: "c".into(),
             op: MutateOp::Insert,
             ids: vec![],
@@ -1148,18 +1341,20 @@ mod tests {
         }
         // zero dim with floats attached: dropped at encode, rejected at decode
         let f = Frame::Mutate(MutateFrame {
+            request_id: 2,
             collection: "c".into(),
             op: MutateOp::Delete,
             ids: vec![1],
             dim: 0,
             vectors: vec![9.0],
         });
-        let (t, payload) = encode_payload(&f);
-        match decode_payload(t, &payload).unwrap() {
+        let (t, payload) = encode_payload(&f, VERSION);
+        match decode_payload(t, &payload, VERSION).unwrap() {
             Frame::Mutate(m) => assert!(m.vectors.is_empty()),
             other => panic!("expected mutate, got {other:?}"),
         }
-        // hand-build a ragged frame: decoder must reject it as malformed
+        // hand-build a ragged frame (legacy v1 layout, no id prefix):
+        // decoder must reject it as malformed
         let mut p = Vec::new();
         put_str(&mut p, "c");
         p.push(0); // insert
@@ -1170,7 +1365,7 @@ mod tests {
             put_f32(&mut p, v);
         }
         assert!(matches!(
-            decode_payload(tag::MUTATE, &p),
+            decode_payload(tag::MUTATE, &p, V1),
             Err(WireError::Malformed(_))
         ));
         // unknown op byte
@@ -1181,7 +1376,7 @@ mod tests {
         put_u32(&mut p, 0);
         put_u32(&mut p, 0);
         assert!(matches!(
-            decode_payload(tag::MUTATE, &p),
+            decode_payload(tag::MUTATE, &p, V1),
             Err(WireError::Malformed(_))
         ));
         // oversized dim is a typed cap error
@@ -1192,7 +1387,7 @@ mod tests {
         put_u32(&mut p, (MAX_DIM as u32) + 1);
         put_u32(&mut p, 0);
         assert!(matches!(
-            decode_payload(tag::MUTATE, &p),
+            decode_payload(tag::MUTATE, &p, V1),
             Err(WireError::Oversized { .. })
         ));
         // declared id count past the bytes present must not allocate
@@ -1200,7 +1395,7 @@ mod tests {
         put_str(&mut p, "c");
         p.push(2);
         put_u32(&mut p, u32::MAX);
-        match decode_payload(tag::MUTATE, &p) {
+        match decode_payload(tag::MUTATE, &p, V1) {
             Err(WireError::Oversized { .. }) | Err(WireError::Truncated { .. }) => {}
             other => panic!("expected typed cap error, got {other:?}"),
         }

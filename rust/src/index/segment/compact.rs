@@ -93,6 +93,12 @@ impl Compactor {
         self.errors.load(Ordering::Relaxed)
     }
 
+    /// Shared handles to the (passes, errors) counters, for exporters
+    /// that outlive-or-predate this handle (e.g. the metrics listener).
+    pub fn counter_handles(&self) -> (Arc<AtomicU64>, Arc<AtomicU64>) {
+        (self.passes.clone(), self.errors.clone())
+    }
+
     /// Signal the worker and join it.
     pub fn stop(mut self) {
         self.shutdown();

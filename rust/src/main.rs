@@ -32,10 +32,14 @@
 //!                 # serve mapped queries (Sec. 4.4) by default
 //! amips serve     --catalog DIR --listen ADDR [--port-file F]
 //!                 [--serve-seconds S] [--queue-cap N] [--max-conns N]
+//!                 [--max-inflight N] [--metrics-port P]
 //!                 # TCP front-end over the whole catalog (AMTP framed
-//!                 # protocol); clients use NetClient or bench_serve
-//! amips probe     --addr HOST:PORT   # wire-protocol health probe:
-//!                 # ping/stats plus malformed-frame robustness checks
+//!                 # protocol, wire v2 pipelining); clients use
+//!                 # NetClient or bench_serve; --metrics-port binds a
+//!                 # second plain-text scrape listener
+//! amips probe     --addr HOST:PORT [--metrics HOST:PORT]
+//!                 # wire-protocol health probe: ping/stats, malformed-
+//!                 # frame robustness checks, optional metrics scrape
 //! amips train     --config <name> [--steps N] [--lr F] [--verbose]   (xla)
 //! amips eval      --config <name> [--steps N]                        (xla)
 //! amips route     --dataset nq-s --config <name> [--topk 1..5]       (xla)
@@ -761,9 +765,26 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
     let max_conns = args.get_usize("max-conns", 256)?;
     let max_batch = args.get_usize("batch-max", 256)?;
     let batch_wait_ms = args.get_u64("batch-wait-ms", 2)?;
+    let max_inflight = args.get_usize("max-inflight", 32)?;
+    // 0 = metrics listener disabled; any other port binds a second,
+    // write-only plain-text listener on the same interface
+    let metrics_port = args.get_u64("metrics-port", 0)?;
     args.reject_unknown()?;
 
     let catalog = Catalog::open(&dir)?;
+    let metrics_addr = if metrics_port > 0 {
+        use std::net::ToSocketAddrs as _;
+        let host = listen.rsplit_once(':').map(|(h, _)| h).unwrap_or("127.0.0.1");
+        let spec = format!("{host}:{metrics_port}");
+        Some(
+            spec.to_socket_addrs()
+                .map_err(|e| anyhow::anyhow!("bad --metrics-port ({spec}): {e}"))?
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("--metrics-port resolved to no address"))?,
+        )
+    } else {
+        None
+    };
     let cfg = NetServerConfig {
         policy: BatchPolicy {
             max_batch: max_batch.max(1),
@@ -771,6 +792,8 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
         },
         queue_cap: queue_cap.max(1),
         max_connections: max_conns.max(1),
+        max_inflight: max_inflight.max(1),
+        metrics_addr,
         ..NetServerConfig::default()
     };
     let server = NetServer::serve_catalog(&catalog, listen.as_str(), cfg)?;
@@ -778,6 +801,9 @@ fn cmd_serve_listen(args: &Args) -> Result<()> {
     // announce the resolved address first (":0" binds an ephemeral
     // port); scripts either parse this line or read --port-file
     println!("amips serve: listening on {addr}");
+    if let Some(m) = server.metrics_addr() {
+        println!("amips serve: metrics on {m}");
+    }
     let names: Vec<&str> = catalog.names();
     println!("amips serve: collections: {}", names.join(", "));
     use std::io::Write as _;
@@ -829,6 +855,7 @@ fn cmd_probe(args: &Args) -> Result<()> {
     use std::time::Duration;
 
     let addr = args.require("addr")?.to_string();
+    let metrics = args.get("metrics").map(str::to_string);
     args.reject_unknown()?;
     let timeout = Some(Duration::from_secs(5));
 
@@ -901,7 +928,29 @@ fn cmd_probe(args: &Args) -> Result<()> {
         }
     }
 
-    // 3. the server survived every probe
+    // 3. the metrics side-listener, when asked: it must serve a
+    // non-empty snapshot even to a client that sends garbage first
+    // (the listener never reads, so hostile bytes are structurally
+    // inert)
+    let metrics_lines = match &metrics {
+        Some(maddr) => {
+            use std::io::{Read as _, Write as _};
+            let mut s = std::net::TcpStream::connect(maddr.as_str())?;
+            s.set_read_timeout(timeout)?;
+            s.set_write_timeout(timeout)?;
+            let _ = s.write_all(b"GET / HTTP/1.1\r\n\x00\xff not a scrape \r\n\r\n");
+            let mut body = String::new();
+            s.read_to_string(&mut body)?;
+            ensure!(
+                body.contains("amips_build_info"),
+                "metrics scrape missing build info: {body:?}"
+            );
+            Some(body.lines().count())
+        }
+        None => None,
+    };
+
+    // 4. the server survived every probe
     client.ping().map_err(|e| match e {
         NetError::Wire(w) => anyhow::anyhow!("server unhealthy after probes: {w}"),
         other => anyhow::anyhow!("server unhealthy after probes: {other}"),
@@ -909,9 +958,12 @@ fn cmd_probe(args: &Args) -> Result<()> {
 
     let mut rep = Report::new(&format!("probe {addr}"));
     rep.header(&["check", "typed reply"]);
-    rep.row(&["ping".into(), "pong".into()]);
+    rep.row(&["ping".into(), format!("pong (wire v{})", client.version())]);
     for (name, code) in &checks {
         rep.row(&[name.to_string(), code.to_string()]);
+    }
+    if let Some(n) = metrics_lines {
+        rep.row(&["metrics scrape".into(), format!("{n} lines")]);
     }
     rep.row(&["ping after probes".into(), "pong".into()]);
     rep.note(format!(

@@ -22,3 +22,33 @@ pub fn prop_cases(default: usize) -> usize {
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
 }
+
+/// Suite-wide seed override for randomized tests: `AMIPS_TEST_SEED`
+/// parsed as u64 (decimal, or hex with an `0x` prefix), 0 when unset
+/// or unparseable. Every seeded test mixes this into its own fixed
+/// per-test tag via [`test_rng`], so the default (unset ⇒ 0 ⇒ XOR is
+/// the identity) reproduces the historical streams bit-for-bit while
+/// one env var re-seeds the whole suite at once.
+pub fn test_seed() -> u64 {
+    std::env::var("AMIPS_TEST_SEED")
+        .ok()
+        .and_then(|v| {
+            let v = v.trim();
+            match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+                Some(hex) => u64::from_str_radix(hex, 16).ok(),
+                None => v.parse().ok(),
+            }
+        })
+        .unwrap_or(0)
+}
+
+/// A test RNG derived from a fixed per-test `tag` XOR the suite-wide
+/// [`test_seed`]. Prints the effective seed to stderr — captured by
+/// the harness and therefore shown exactly when the test fails — so
+/// any red randomized run is reproducible with
+/// `AMIPS_TEST_SEED=<seed> cargo test <name>`.
+pub fn test_rng(tag: u64) -> Rng {
+    let seed = tag ^ test_seed();
+    eprintln!("AMIPS_TEST_SEED effective seed: {seed:#x} (tag {tag:#x})");
+    Rng::new(seed)
+}

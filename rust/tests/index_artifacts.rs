@@ -9,7 +9,7 @@ use amips::api::{Effort, SearchRequest, Searcher};
 use amips::coordinator::{BatchPolicy, Server, ServerConfig};
 use amips::index::{load_from, BuildCtx, Catalog, IndexSpec, VectorIndex, BACKBONES};
 use amips::tensor::{normalize_rows, Tensor};
-use amips::util::{prop_cases, Rng, TempDir};
+use amips::util::{prop_cases, test_rng, TempDir};
 use std::time::Duration;
 
 const N: usize = 400;
@@ -18,7 +18,7 @@ const NLIST: usize = 8;
 
 fn unit(shape: &[usize], seed: u64) -> Tensor {
     let mut t = Tensor::zeros(shape);
-    Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+    test_rng(seed).fill_normal(t.data_mut(), 1.0);
     normalize_rows(&mut t);
     t
 }
@@ -207,7 +207,7 @@ fn artifact_corruption_fuzz_never_panics() {
 
     let keys = unit(&[160, D], 21);
     let queries = unit(&[2, D], 22);
-    let mut rng = Rng::new(23);
+    let mut rng = test_rng(23);
     let mut labels: Vec<String> = BACKBONES.iter().map(|n| n.to_string()).collect();
     labels.push("sharded(shards=3,inner=ivf(nlist=4))".to_string());
     labels.push("sharded(shards=2,assign=contiguous,inner=flat)".to_string());
@@ -450,7 +450,7 @@ fn generation_manifest_corruption_fuzz_never_panics() {
 
     let newest = dir.join("gen-000002.tsv");
     let pristine = std::fs::read(&newest).unwrap();
-    let mut rng = Rng::new(35);
+    let mut rng = test_rng(35);
     for case in 0..prop_cases(60) {
         let mut bad = pristine.clone();
         if case % 3 == 2 {
@@ -510,7 +510,7 @@ fn torn_segment_corruption_fuzz_never_panics() {
         .to_string();
     let seg_path = dir.join(&seg_file);
     let pristine = std::fs::read(&seg_path).unwrap();
-    let mut rng = Rng::new(37);
+    let mut rng = test_rng(37);
     for case in 0..prop_cases(60) {
         let mut bad = pristine.clone();
         if case % 3 == 2 {

@@ -1,0 +1,329 @@
+//! Fault-injection and hostile-peer tests for the net stack.
+//!
+//! Server side: a seeded [`FaultyStream`] sweep tears client frames at
+//! arbitrary byte boundaries, injects delays, and half-writes then
+//! drops mid-frame; every outcome must be a correct reply or a typed
+//! error — never a panic, a desynced stream, or a wedged shutdown.
+//!
+//! Client side: [`NetClient`] against hostile servers — a mid-reply
+//! connection drop, an oversized Hits frame (must be a typed error
+//! before any allocation), and a legacy server rejecting wire v2 (the
+//! client downgrades to v1 transparently).
+//!
+//! Metrics listener: seeded garbage on the scrape port must never
+//! hang, panic, or corrupt a snapshot (the listener never reads).
+//!
+//! Every random choice derives from `amips::util::test_rng`, so any
+//! failure replays with `AMIPS_TEST_SEED=<printed seed>`.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use amips::api::Effort;
+use amips::coordinator::net::wire::{self, ErrorCode, ErrorFrame, Frame, HitsFrame, SearchFrame};
+use amips::coordinator::net::{
+    FaultPlan, FaultyStream, NetClient, NetError, NetServer, NetServerConfig, Tenant, WireError,
+};
+use amips::coordinator::BatchPolicy;
+use amips::index::ivf::IvfIndex;
+use amips::index::VectorIndex;
+use amips::tensor::{normalize_rows, Tensor};
+use amips::util::{test_rng, Rng};
+
+fn unit(shape: &[usize], seed: u64) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+    normalize_rows(&mut t);
+    t
+}
+
+/// One-collection server over a small IVF index.
+fn small_server(cfg: NetServerConfig) -> (NetServer, String, Arc<IvfIndex>) {
+    let keys = unit(&[500, 8], 41);
+    let index = Arc::new(IvfIndex::build(&keys, 4, 4, 42));
+    let tenant = Tenant::start(
+        "docs",
+        index.clone() as Arc<dyn VectorIndex>,
+        None,
+        BatchPolicy::default(),
+        256,
+    )
+    .unwrap();
+    let mut tenants = BTreeMap::new();
+    tenants.insert("docs".to_string(), tenant);
+    let server = NetServer::serve(tenants, "127.0.0.1:0", cfg).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, addr, index)
+}
+
+fn search_frame(id: u64, query: &[f32]) -> Frame {
+    Frame::Search(SearchFrame {
+        request_id: id,
+        collection: "docs".to_string(),
+        k: 3,
+        effort: Effort::Exhaustive,
+        mode: amips::api::QueryMode::Original,
+        deadline_micros: 0,
+        query: query.to_vec(),
+    })
+}
+
+#[test]
+fn splitter_sweep_torn_frames_still_get_correct_replies() {
+    let (server, addr, index) = small_server(NetServerConfig::default());
+    let queries = unit(&[6, 8], 43);
+    let mut seed_rng = test_rng(0xFA01);
+    for round in 0..5 {
+        let seed = seed_rng.below(1 << 31) as u64;
+        let stream = TcpStream::connect(addr.as_str()).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(20)))
+            .unwrap();
+        // every write crosses the wire in 1..=3 byte fragments with
+        // injected delays: the server's decoder sees every possible
+        // partial-header/partial-payload boundary
+        let mut fs = FaultyStream::new(stream, FaultPlan::splitter(seed));
+        wire::write_frame_versioned(&mut fs, &Frame::Ping { token: round }, wire::VERSION)
+            .unwrap_or_else(|e| panic!("seed {seed}: ping write: {e}"));
+        match wire::read_frame(&mut fs) {
+            Ok(Frame::Pong { token }) => assert_eq!(token, round, "seed {seed}"),
+            other => panic!("seed {seed}: wanted Pong, got {other:?}"),
+        }
+        for (i, qi) in (0..queries.rows()).enumerate() {
+            let q = queries.row(qi);
+            let id = 100 + i as u64;
+            wire::write_frame_versioned(&mut fs, &search_frame(id, q), wire::VERSION)
+                .unwrap_or_else(|e| panic!("seed {seed}: search write: {e}"));
+            match wire::read_frame(&mut fs) {
+                Ok(Frame::Hits(h)) => {
+                    let direct = index.search_effort(q, 3, Effort::Exhaustive);
+                    assert_eq!(h.request_id, id, "seed {seed}, query {qi}");
+                    assert_eq!(h.ids, direct.ids, "seed {seed}, query {qi}");
+                    assert_eq!(h.scores, direct.scores, "seed {seed}, query {qi}");
+                }
+                other => panic!("seed {seed}: wanted Hits, got {other:?}"),
+            }
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn cutter_sweep_half_written_frames_never_wedge_the_server() {
+    let (server, addr, index) = small_server(NetServerConfig::default());
+    let q = unit(&[1, 8], 44);
+    let mut seed_rng = test_rng(0xFA02);
+    // cut points spanning torn-magic, torn-header, and torn-payload
+    for cut_after in [1u64, 4, 9, 10, 13, 27, 48] {
+        let seed = seed_rng.below(1 << 31) as u64;
+        let stream = TcpStream::connect(addr.as_str()).unwrap();
+        let mut fs = FaultyStream::new(stream, FaultPlan::cutter(seed, cut_after));
+        // the frame dies mid-wire; the client crashes (drops the socket)
+        let err = wire::write_frame_versioned(&mut fs, &search_frame(1, q.row(0)), wire::VERSION)
+            .expect_err("the cut must surface as a write error");
+        assert_eq!(
+            err.kind(),
+            std::io::ErrorKind::BrokenPipe,
+            "seed {seed}, cut {cut_after}"
+        );
+        drop(fs); // torn frame left on the server's read side
+    }
+    // the server took 7 torn frames and still serves healthy clients
+    let mut healthy = NetClient::connect(addr.as_str()).unwrap();
+    healthy.set_timeout(Some(Duration::from_secs(20))).unwrap();
+    healthy.ping().unwrap();
+    let hits = healthy
+        .search(
+            "docs",
+            q.row(0),
+            amips::coordinator::net::SearchOptions::top_k(3).effort(Effort::Exhaustive),
+        )
+        .unwrap();
+    let direct = index.search_effort(q.row(0), 3, Effort::Exhaustive);
+    assert_eq!(hits.ids, direct.ids);
+    // ... and shutdown is not wedged by the torn connections
+    let start = Instant::now();
+    server.shutdown();
+    assert!(
+        start.elapsed() < Duration::from_secs(15),
+        "shutdown wedged after torn frames ({}s)",
+        start.elapsed().as_secs()
+    );
+}
+
+/// Bind a one-connection hostile server; `behave` gets the accepted
+/// stream.
+fn hostile_server<F>(behave: F) -> (SocketAddr, std::thread::JoinHandle<()>)
+where
+    F: FnOnce(TcpStream) + Send + 'static,
+{
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(20)))
+            .unwrap();
+        behave(stream);
+    });
+    (addr, handle)
+}
+
+/// Answer the client's negotiation probe as a v2 server would.
+fn answer_probe(s: &mut TcpStream) {
+    match wire::read_frame(s).unwrap() {
+        Frame::Ping { token } => {
+            wire::write_frame_versioned(s, &Frame::Pong { token }, wire::VERSION).unwrap()
+        }
+        other => panic!("hostile server wanted the probe Ping, got {other:?}"),
+    }
+}
+
+#[test]
+fn mid_reply_connection_drop_is_a_typed_wire_error() {
+    let (addr, handle) = hostile_server(|mut s| {
+        answer_probe(&mut s);
+        let _search = wire::read_frame(&mut s).unwrap();
+        // encode a full Hits reply, send half of it, vanish
+        let mut buf = Vec::new();
+        let hits = Frame::Hits(HitsFrame {
+            request_id: 1,
+            ids: vec![1, 2, 3],
+            scores: vec![0.5, 0.4, 0.3],
+            ..HitsFrame::default()
+        });
+        wire::write_frame_versioned(&mut buf, &hits, wire::VERSION).unwrap();
+        s.write_all(&buf[..buf.len() / 2]).unwrap();
+        let _ = s.flush();
+        // drop: the client is left with half a frame
+    });
+    let mut client = NetClient::connect(addr).unwrap();
+    client.set_timeout(Some(Duration::from_secs(10))).unwrap();
+    let q = [0.5f32; 8];
+    let err = client
+        .search(
+            "docs",
+            &q,
+            amips::coordinator::net::SearchOptions::top_k(3),
+        )
+        .expect_err("half a reply must not parse");
+    assert!(
+        matches!(err, NetError::Wire(_)),
+        "mid-reply drop must be a wire error, got {err}"
+    );
+    handle.join().unwrap();
+}
+
+#[test]
+fn oversized_hits_from_a_hostile_server_is_typed_before_allocation() {
+    let (addr, handle) = hostile_server(|mut s| {
+        answer_probe(&mut s);
+        let _search = wire::read_frame(&mut s).unwrap();
+        // header declaring a 4 GiB payload; a client that trusted it
+        // would try to allocate that much before reading a byte
+        let mut header = Vec::new();
+        header.extend_from_slice(&wire::MAGIC);
+        header.push(wire::VERSION);
+        header.push(2); // Hits tag
+        header.extend_from_slice(&u32::MAX.to_le_bytes());
+        s.write_all(&header).unwrap();
+        let _ = s.flush();
+    });
+    let mut client = NetClient::connect(addr).unwrap();
+    client.set_timeout(Some(Duration::from_secs(10))).unwrap();
+    let q = [0.5f32; 8];
+    let err = client
+        .search(
+            "docs",
+            &q,
+            amips::coordinator::net::SearchOptions::top_k(3),
+        )
+        .expect_err("an oversized reply must be rejected");
+    match err {
+        NetError::Wire(WireError::Oversized { declared, cap, .. }) => {
+            assert!(declared > cap, "declared {declared} vs cap {cap}");
+        }
+        other => panic!("wanted a typed Oversized wire error, got {other}"),
+    }
+    handle.join().unwrap();
+}
+
+#[test]
+fn legacy_server_rejecting_v2_downgrades_the_client_to_v1() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = std::thread::spawn(move || {
+        // connection 1: the v2 probe. A legacy server fails the header
+        // version check and answers a typed Unsupported at v1, then
+        // closes — exactly what the PR-era v1 server does.
+        let (mut s1, _) = listener.accept().unwrap();
+        let mut header = [0u8; 10];
+        s1.read_exact(&mut header).unwrap();
+        assert_eq!(&header[..4], &wire::MAGIC, "client spoke AMTP");
+        assert_eq!(header[4], wire::VERSION, "probe is the newest version");
+        wire::write_frame_versioned(
+            &mut s1,
+            &Frame::Error(ErrorFrame::conn(
+                ErrorCode::Unsupported,
+                "unsupported wire version 2".into(),
+            )),
+            wire::V1,
+        )
+        .unwrap();
+        drop(s1);
+        // connection 2: the downgraded v1 session
+        let (mut s2, _) = listener.accept().unwrap();
+        while let Ok(Frame::Ping { token }) = wire::read_frame(&mut s2) {
+            wire::write_frame_versioned(&mut s2, &Frame::Pong { token }, wire::V1).unwrap();
+        }
+    });
+    let mut client = NetClient::connect(addr).unwrap();
+    assert_eq!(client.version(), wire::V1, "negotiation downgraded");
+    client.set_timeout(Some(Duration::from_secs(10))).unwrap();
+    client.ping().unwrap();
+    drop(client);
+    handle.join().unwrap();
+}
+
+#[test]
+fn metrics_listener_survives_seeded_garbage() {
+    let cfg = NetServerConfig {
+        metrics_addr: Some("127.0.0.1:0".parse().unwrap()),
+        ..NetServerConfig::default()
+    };
+    let (server, _addr, _index) = small_server(cfg);
+    let maddr = server.metrics_addr().expect("metrics listener configured");
+    let mut seed_rng = test_rng(0xFA03);
+    for _ in 0..8 {
+        let seed = seed_rng.below(1 << 31) as u64;
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(512);
+        let garbage: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let mut s = TcpStream::connect(maddr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // the listener never reads, so any bytes — HTTP, AMTP, noise —
+        // are inert; the write may fail once the snapshot side closes,
+        // which is also fine
+        let _ = s.write_all(&garbage);
+        let mut body = String::new();
+        s.read_to_string(&mut body)
+            .unwrap_or_else(|e| panic!("seed {seed}: scrape read failed: {e}"));
+        assert!(
+            body.contains("amips_build_info"),
+            "seed {seed}: snapshot missing build info: {body:?}"
+        );
+        assert!(
+            body.contains("amips_tenant_served_total{collection=\"docs\"}"),
+            "seed {seed}: snapshot missing per-tenant lines: {body:?}"
+        );
+    }
+    let start = Instant::now();
+    server.shutdown();
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "metrics listener wedged shutdown"
+    );
+}

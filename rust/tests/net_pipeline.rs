@@ -1,0 +1,394 @@
+//! End-to-end tests for wire-v2 pipelining: one connection keeps many
+//! id-tagged requests in flight, completions arrive out of order, and
+//! every reply is matched back to its request by id.
+//!
+//! The load-bearing claims:
+//!  * a pipelined workload (interleaved Search and Mutate, replies
+//!    claimed in shuffled order) is **bit-identical** to the same
+//!    workload run sequentially over the one-shot API;
+//!  * admission past `max_inflight` and duplicate in-flight ids are
+//!    *typed* errors echoing the offending id — the connection
+//!    survives;
+//!  * a server draining mid-pipeline yields only correct replies or
+//!    typed retryable errors, and the retried requests succeed against
+//!    a second server.
+//!
+//! All randomness (claim-order shuffles) derives from
+//! `amips::util::test_rng`, so `AMIPS_TEST_SEED` replays a failure.
+
+use std::collections::BTreeMap;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use amips::api::{Effort, QueryMode};
+use amips::coordinator::net::wire::{self, Frame, SearchFrame};
+use amips::coordinator::net::{
+    ErrorCode, NetClient, NetError, NetServer, NetServerConfig, SearchOptions, Tenant,
+};
+use amips::coordinator::BatchPolicy;
+use amips::index::ivf::IvfIndex;
+use amips::index::{BuildCtx, Catalog, IndexSpec, VectorIndex};
+use amips::tensor::{normalize_rows, Tensor};
+use amips::util::{test_rng, Rng, TempDir};
+
+const D: usize = 8;
+
+fn unit(shape: &[usize], seed: u64) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+    normalize_rows(&mut t);
+    t
+}
+
+/// Fisher–Yates with the repo RNG (no std shuffle to stay seedable).
+fn shuffled(n: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut v: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        v.swap(i, rng.below(i + 1));
+    }
+    v
+}
+
+/// Catalog with an immutable IVF collection ("docs") and an empty
+/// mutable one ("scratch").
+fn catalog_fixture(tmp: &TempDir) -> Catalog {
+    let root = tmp.join("catalog");
+    let keys = unit(&[240, D], 11);
+    {
+        let mut catalog = Catalog::create(&root).unwrap();
+        let ivf = IndexSpec::default_for("ivf").unwrap().with_nlist(4);
+        catalog
+            .build_collection("docs", &ivf, &keys, &BuildCtx::seeded(13))
+            .unwrap();
+    }
+    let spec = IndexSpec::default_for("flat").unwrap();
+    Catalog::create_mutable(&root, "scratch", &spec, D, 14).unwrap();
+    Catalog::open(&root).unwrap()
+}
+
+#[test]
+fn pipelined_interleaved_matches_one_shot_bit_for_bit() {
+    let tmp = TempDir::new("amips-net-pipeline");
+    let catalog = catalog_fixture(&tmp);
+    let cfg = NetServerConfig {
+        max_inflight: 16,
+        ..NetServerConfig::default()
+    };
+    let server = NetServer::serve_catalog(&catalog, "127.0.0.1:0", cfg).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let rounds = 2usize;
+    let per_round = 16usize; // == max_inflight: the full window
+    let queries = unit(&[rounds * per_round, D], 31);
+    let opts = SearchOptions::top_k(5).effort(Effort::Exhaustive);
+
+    // sequential one-shot baseline over its own connection
+    let baseline: Vec<_> = {
+        let mut one = NetClient::connect(addr.as_str()).unwrap();
+        one.set_timeout(Some(Duration::from_secs(20))).unwrap();
+        (0..queries.rows())
+            .map(|i| one.search("docs", queries.row(i), opts).unwrap())
+            .collect()
+    };
+
+    let mut client = NetClient::connect(addr.as_str()).unwrap();
+    client.set_timeout(Some(Duration::from_secs(20))).unwrap();
+    assert_eq!(client.version(), wire::VERSION, "negotiation picked v2");
+    let mut rng = test_rng(0x91BE);
+
+    for round in 0..rounds {
+        // fill the window, interleaving blocking mutations of the
+        // *other* collection between submissions (their Mutated replies
+        // arrive tagged and may interleave with search completions; the
+        // demux must buffer, not drop)
+        let mut ids = Vec::with_capacity(per_round);
+        let mut inserted = 0u64;
+        for j in 0..per_round {
+            let q = round * per_round + j;
+            ids.push(client.submit_search("docs", queries.row(q), opts).unwrap());
+            if j % 5 == 2 {
+                let vecs = unit(&[3, D], 40 + (round * per_round + j) as u64);
+                let done = client.insert("scratch", &vecs).unwrap();
+                inserted += 3;
+                assert_eq!(done.ids.len(), 3, "round {round} insert {j}");
+                assert!(done.len >= inserted, "round {round}: len must grow");
+            }
+        }
+        // claim every reply in a shuffled order: out-of-order claims
+        // exercise the completion buffer in both directions
+        for &j in &shuffled(per_round, &mut rng) {
+            let q = round * per_round + j;
+            let hits = client.wait_search(ids[j]).unwrap();
+            assert_eq!(hits.request_id, ids[j], "echoed id, query {q}");
+            assert_eq!(hits.ids, baseline[q].ids, "ids, query {q}");
+            assert_eq!(hits.scores, baseline[q].scores, "scores, query {q}");
+        }
+        assert_eq!(client.outstanding(), 0, "round {round} fully claimed");
+    }
+
+    // the same connection still serves one-shot traffic afterwards
+    client.ping().unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.errors, 0);
+    server.shutdown();
+}
+
+/// Slow single tenant: a big exhaustive corpus behind a long batch
+/// window, so admitted requests stay in flight long enough to observe
+/// cap and duplicate-id behavior deterministically.
+fn slow_server(max_inflight: usize, max_wait: Duration) -> (NetServer, String, Arc<IvfIndex>) {
+    let keys = unit(&[20_000, 16], 18);
+    let index = Arc::new(IvfIndex::build(&keys, 8, 4, 19));
+    let tenant = Tenant::start(
+        "docs",
+        index.clone() as Arc<dyn VectorIndex>,
+        None,
+        BatchPolicy {
+            max_batch: 64,
+            max_wait,
+        },
+        1024,
+    )
+    .unwrap();
+    let mut tenants = BTreeMap::new();
+    tenants.insert("docs".to_string(), tenant);
+    let cfg = NetServerConfig {
+        max_inflight,
+        ..NetServerConfig::default()
+    };
+    let server = NetServer::serve(tenants, "127.0.0.1:0", cfg).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, addr, index)
+}
+
+#[test]
+fn admission_past_max_inflight_is_typed_overloaded_echoing_the_id() {
+    let (server, addr, _index) = slow_server(2, Duration::from_millis(150));
+    let q = unit(&[1, 16], 20);
+    let opts = SearchOptions::top_k(3).effort(Effort::Exhaustive);
+
+    let mut client = NetClient::connect(addr.as_str()).unwrap();
+    client.set_timeout(Some(Duration::from_secs(20))).unwrap();
+    // 6 submits land within the 150ms batch window: 2 admitted, 4 over
+    // the cap — each rejection a typed Overloaded echoing its own id
+    let ids: Vec<u64> = (0..6)
+        .map(|_| client.submit_search("docs", q.row(0), opts).unwrap())
+        .collect();
+    let (mut ok, mut overloaded) = (0usize, 0usize);
+    for _ in 0..ids.len() {
+        let reply = client.recv_any().unwrap();
+        assert!(ids.contains(&reply.request_id), "unknown id echoed");
+        match reply.reply {
+            Ok(hits) => {
+                assert_eq!(hits.request_id, reply.request_id);
+                ok += 1;
+            }
+            Err(e) => {
+                assert_eq!(e.code, ErrorCode::Overloaded, "only typed overload");
+                assert_eq!(e.request_id, reply.request_id);
+                overloaded += 1;
+            }
+        }
+    }
+    assert_eq!(ok, 2, "exactly max_inflight admitted");
+    assert_eq!(overloaded, 4, "the rest typed-rejected");
+    // the connection survived the rejections
+    client.ping().unwrap();
+    assert!(client.search("docs", q.row(0), opts).is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn duplicate_inflight_id_is_typed_bad_request() {
+    let (server, addr, _index) = slow_server(8, Duration::from_millis(150));
+    let q = unit(&[1, 16], 21);
+
+    // hand-rolled frames: NetClient never reuses ids, so speak wire
+    // directly to force the duplicate
+    let mut stream = TcpStream::connect(addr.as_str()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(20)))
+        .unwrap();
+    let frame = Frame::Search(SearchFrame {
+        request_id: 7,
+        collection: "docs".to_string(),
+        k: 3,
+        effort: Effort::Exhaustive,
+        mode: QueryMode::Original,
+        deadline_micros: 0,
+        query: q.row(0).to_vec(),
+    });
+    wire::write_frame_versioned(&mut stream, &frame, wire::VERSION).unwrap();
+    wire::write_frame_versioned(&mut stream, &frame, wire::VERSION).unwrap();
+
+    // the duplicate is rejected immediately (typed, echoing id 7) while
+    // the original is still in its batch window; the original then
+    // completes normally
+    let (mut got_hits, mut got_dup) = (false, false);
+    for _ in 0..2 {
+        match wire::read_frame(&mut stream).unwrap() {
+            Frame::Error(e) => {
+                assert_eq!(e.code, ErrorCode::BadRequest);
+                assert_eq!(e.request_id, 7, "rejection echoes the duplicate id");
+                got_dup = true;
+            }
+            Frame::Hits(h) => {
+                assert_eq!(h.request_id, 7);
+                got_hits = true;
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert!(got_hits && got_dup);
+    // the connection survived: the id is free again after completion
+    wire::write_frame_versioned(&mut stream, &frame, wire::VERSION).unwrap();
+    match wire::read_frame(&mut stream).unwrap() {
+        Frame::Hits(h) => assert_eq!(h.request_id, 7),
+        other => panic!("id 7 should be reusable after completion, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn draining_mid_pipeline_is_retryable_and_retries_succeed() {
+    // two servers over the same index: A drains mid-pipeline, failed
+    // requests retry against B; every query must end up served with
+    // results bit-identical to a direct index search
+    let (server_a, addr_a, index) = slow_server(16, Duration::from_millis(1));
+    let keys_dim = 16usize;
+    let tenant_b = Tenant::start(
+        "docs",
+        index.clone() as Arc<dyn VectorIndex>,
+        None,
+        BatchPolicy::default(),
+        1024,
+    )
+    .unwrap();
+    let mut tenants = BTreeMap::new();
+    tenants.insert("docs".to_string(), tenant_b);
+    let server_b = NetServer::serve(tenants, "127.0.0.1:0", NetServerConfig::default()).unwrap();
+    let addr_b = server_b.local_addr().to_string();
+
+    let total = 3000usize;
+    let window = 8usize;
+    let queries = unit(&[64, keys_dim], 22);
+    let opts = SearchOptions::top_k(3).effort(Effort::Probes(2));
+
+    let mut client = NetClient::connect(addr_a.as_str()).unwrap();
+    client.set_timeout(Some(Duration::from_secs(20))).unwrap();
+
+    let stop = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(25));
+        server_a.shutdown();
+    });
+
+    let mut results: Vec<Option<amips::coordinator::net::HitsFrame>> = vec![None; total];
+    let mut inflight: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+    let mut next = 0usize;
+    let mut failed: Vec<usize> = Vec::new();
+    'outer: while next < total || !inflight.is_empty() {
+        while next < total && inflight.len() < window {
+            match client.submit_search("docs", queries.row(next % queries.rows()), opts) {
+                Ok(id) => {
+                    inflight.insert(id, next);
+                    next += 1;
+                }
+                Err(e) => {
+                    assert!(
+                        e.is_retryable() || matches!(e, NetError::Wire(_)),
+                        "mid-drain submit failed non-retryably: {e}"
+                    );
+                    break 'outer;
+                }
+            }
+        }
+        match client.recv_any() {
+            Ok(reply) => {
+                let slot = inflight.remove(&reply.request_id).expect("known id");
+                match reply.reply {
+                    Ok(hits) => results[slot] = Some(hits),
+                    Err(e) => {
+                        assert_eq!(
+                            e.code,
+                            ErrorCode::ShuttingDown,
+                            "mid-drain per-request errors must be the typed drain"
+                        );
+                        failed.push(slot);
+                    }
+                }
+            }
+            Err(e) => {
+                assert!(
+                    e.is_retryable() || matches!(e, NetError::Wire(_)),
+                    "mid-drain failure must be retryable or a clean close: {e}"
+                );
+                break;
+            }
+        }
+    }
+    stop.join().unwrap();
+
+    // everything not served by A retries on B (pipelined there too)
+    failed.extend(inflight.into_values());
+    failed.extend(next..total);
+    let served_by_a = total - failed.len();
+    let mut retry = NetClient::connect(addr_b.as_str()).unwrap();
+    retry.set_timeout(Some(Duration::from_secs(20))).unwrap();
+    let retry_queries: Vec<&[f32]> = failed
+        .iter()
+        .map(|&slot| queries.row(slot % queries.rows()))
+        .collect();
+    let retried = retry
+        .search_many("docs", &retry_queries, opts, window)
+        .unwrap();
+    for (k, r) in retried.into_iter().enumerate() {
+        results[failed[k]] = Some(r.expect("retry against a healthy server succeeds"));
+    }
+
+    // all served, bit-identical to the direct index search
+    for (slot, hits) in results.iter().enumerate() {
+        let hits = hits.as_ref().expect("every slot served by A or B");
+        let direct = index.search_effort(queries.row(slot % queries.rows()), 3, Effort::Probes(2));
+        assert_eq!(hits.ids, direct.ids, "slot {slot}");
+        assert_eq!(hits.scores, direct.scores, "slot {slot}");
+    }
+    assert!(
+        served_by_a > 0,
+        "shutdown raced ahead of the whole workload; nothing exercised the drain"
+    );
+    server_b.shutdown();
+}
+
+#[test]
+fn v1_client_still_works_against_a_v2_server() {
+    let tmp = TempDir::new("amips-net-v1-compat");
+    let catalog = catalog_fixture(&tmp);
+    let server =
+        NetServer::serve_catalog(&catalog, "127.0.0.1:0", NetServerConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let queries = unit(&[4, D], 33);
+    let opts = SearchOptions::top_k(5).effort(Effort::Exhaustive);
+
+    let mut v2 = NetClient::connect(addr.as_str()).unwrap();
+    v2.set_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut v1 = NetClient::connect_v1(addr.as_str()).unwrap();
+    v1.set_timeout(Some(Duration::from_secs(20))).unwrap();
+    assert_eq!(v1.version(), wire::V1);
+
+    for i in 0..queries.rows() {
+        let a = v1.search("docs", queries.row(i), opts).unwrap();
+        let b = v2.search("docs", queries.row(i), opts).unwrap();
+        assert_eq!(a.request_id, 0, "v1 replies carry no id");
+        assert_eq!(a.ids, b.ids, "query {i}");
+        assert_eq!(a.scores, b.scores, "query {i}");
+    }
+    // pipelined mode is a typed local error on a v1 connection, not a
+    // protocol desync
+    assert!(matches!(
+        v1.submit_search("docs", queries.row(0), opts),
+        Err(NetError::Unexpected(_))
+    ));
+    v1.ping().unwrap();
+    server.shutdown();
+}

@@ -16,12 +16,12 @@ use amips::index::traits::{TopK, VectorIndex};
 use amips::index::{flat::FlatIndex, ivf::IvfIndex, kmeans::KMeans, soar::SoarIndex};
 use amips::index::{BuildCtx, IndexSpec};
 use amips::tensor::{dot, normalize_rows, Tensor};
-use amips::util::{prop_cases, Rng};
+use amips::util::{prop_cases, test_rng};
 use std::time::Duration;
 
 fn unit(shape: &[usize], seed: u64) -> Tensor {
     let mut t = Tensor::zeros(shape);
-    Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+    test_rng(seed).fill_normal(t.data_mut(), 1.0);
     normalize_rows(&mut t);
     t
 }
@@ -35,7 +35,7 @@ fn prop_topk_offer_matches_push() {
     // the scan-loop fast path (early-reject against floor()) must be
     // result-identical to naive push on any stream — including NaN
     // (fails every comparison), ±inf, and heavy ties at the floor
-    let mut rng = Rng::new(512);
+    let mut rng = test_rng(512);
     for case in 0..prop_cases(300) {
         let n = 1 + rng.below(300);
         let k = 1 + rng.below(24);
@@ -64,7 +64,7 @@ fn prop_topk_offer_matches_push() {
 
 #[test]
 fn prop_topk_matches_sort() {
-    let mut rng = Rng::new(100);
+    let mut rng = test_rng(100);
     for case in 0..prop_cases(300) {
         let n = 1 + rng.below(200);
         let k = 1 + rng.below(20);
@@ -97,7 +97,7 @@ fn prop_topk_matches_sort() {
 
 #[test]
 fn prop_ivf_results_subset_of_keys_and_sorted() {
-    let mut rng = Rng::new(200);
+    let mut rng = test_rng(200);
     for case in 0..prop_cases(30) as u64 {
         let n = 50 + rng.below(400);
         let d = 8 + 8 * rng.below(4);
@@ -122,7 +122,7 @@ fn prop_ivf_results_subset_of_keys_and_sorted() {
 #[test]
 fn prop_ivf_recall_monotone_in_nprobe() {
     // Top-1 score found can only improve as more cells are probed.
-    let mut rng = Rng::new(300);
+    let mut rng = test_rng(300);
     for case in 0..prop_cases(20) as u64 {
         let n = 100 + rng.below(300);
         let keys = unit(&[n, 16], 3000 + case);
@@ -144,7 +144,7 @@ fn prop_ivf_recall_monotone_in_nprobe() {
 
 #[test]
 fn prop_soar_full_probe_equals_flat_and_never_duplicates() {
-    let mut rng = Rng::new(400);
+    let mut rng = test_rng(400);
     for case in 0..prop_cases(15) as u64 {
         let n = 80 + rng.below(200);
         let keys = unit(&[n, 12], 5000 + case);
@@ -166,7 +166,7 @@ fn prop_soar_full_probe_equals_flat_and_never_duplicates() {
 fn prop_parallel_batch_search_matches_sequential() {
     // the blanket Searcher impl fans the batch out over the thread pool;
     // results must be identical to one-query-at-a-time scans, in order
-    let mut rng = Rng::new(450);
+    let mut rng = test_rng(450);
     for case in 0..prop_cases(10) as u64 {
         let n = 100 + rng.below(300);
         let nq = 1 + rng.below(60);
@@ -194,7 +194,7 @@ fn prop_parallel_batch_search_matches_sequential() {
 
 #[test]
 fn prop_kmeans_partition_is_total_and_consistent() {
-    let mut rng = Rng::new(500);
+    let mut rng = test_rng(500);
     for case in 0..prop_cases(10) as u64 {
         let n = 60 + rng.below(300);
         let c = 2 + rng.below(8);
@@ -227,7 +227,7 @@ fn prop_kmeans_partition_is_total_and_consistent() {
 
 #[test]
 fn prop_ground_truth_is_argmax_within_cluster() {
-    let mut rng = Rng::new(600);
+    let mut rng = test_rng(600);
     for case in 0..prop_cases(10) as u64 {
         let n = 50 + rng.below(150);
         let c = 1 + rng.below(5);
@@ -260,7 +260,7 @@ fn prop_ground_truth_is_argmax_within_cluster() {
 
 #[test]
 fn prop_centroid_router_accuracy_monotone_in_k() {
-    let mut rng = Rng::new(700);
+    let mut rng = test_rng(700);
     for case in 0..prop_cases(10) as u64 {
         let c = 4 + rng.below(8);
         let centroids = unit(&[c, 16], 10_000 + case);
@@ -307,7 +307,7 @@ fn prop_routing_accuracy_bounds() {
 
 #[test]
 fn prop_batcher_conserves_items() {
-    let mut rng = Rng::new(800);
+    let mut rng = test_rng(800);
     for case in 0..prop_cases(20) {
         let total = 1 + rng.below(500);
         let max_batch = 1 + rng.below(64);
@@ -348,7 +348,7 @@ fn merge_into(from: TopK, into: &mut TopK) {
 
 #[test]
 fn prop_topk_shard_merge_equals_concatenated_stream() {
-    let mut rng = Rng::new(150);
+    let mut rng = test_rng(150);
     for case in 0..prop_cases(300) {
         let n = 1 + rng.below(300);
         let k = 1 + rng.below(25);
@@ -437,7 +437,7 @@ fn topk_merge_edge_cases() {
 
 #[test]
 fn prop_sharded_flat_exhaustive_bit_identical_to_flat() {
-    let mut rng = Rng::new(160);
+    let mut rng = test_rng(160);
     for case in 0..prop_cases(120) as u64 {
         let n = 1 + rng.below(250);
         let d = 1 + rng.below(24);
@@ -476,7 +476,7 @@ fn prop_sharded_flat_exhaustive_bit_identical_to_flat() {
 
 #[test]
 fn prop_tensor_io_roundtrip() {
-    let mut rng = Rng::new(900);
+    let mut rng = test_rng(900);
     for case in 0..prop_cases(50) {
         let rank = rng.below(3) + 1;
         let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(20)).collect();

@@ -14,11 +14,11 @@ use amips::coordinator::router::CentroidRouter;
 use amips::index::ivf::IvfIndex;
 use amips::index::{flat::FlatIndex, BuildCtx, IndexSpec, VectorIndex, BACKBONES};
 use amips::tensor::{normalize_rows, Tensor};
-use amips::util::{prop_cases, Rng};
+use amips::util::{prop_cases, test_rng};
 
 fn unit(shape: &[usize], seed: u64) -> Tensor {
     let mut t = Tensor::zeros(shape);
-    Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+    test_rng(seed).fill_normal(t.data_mut(), 1.0);
     normalize_rows(&mut t);
     t
 }
@@ -281,7 +281,7 @@ fn mapped_searcher_reproduces_seed_pipeline_semantics() {
 
     // mapped == manually mapping the batch, then searching
     let mut w = Tensor::zeros(&[D, D]);
-    let mut rng = Rng::new(10);
+    let mut rng = test_rng(10);
     rng.fill_normal(w.data_mut(), 0.3);
     let map = LinearQueryMap::new("rand", w);
     let searcher = MappedSearcher::mapped(&ivf, &map);

@@ -10,7 +10,7 @@ use amips::api::Effort;
 use amips::index::flat::FlatIndex;
 use amips::index::{IndexSpec, MutableCollection, VectorIndex};
 use amips::tensor::Tensor;
-use amips::util::{prop_cases, Rng, TempDir};
+use amips::util::{prop_cases, test_rng, Rng, TempDir};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -71,7 +71,7 @@ fn assert_matches_reference(
 fn random_trace_matches_flat_rebuild_before_and_after_compaction() {
     for case in 0..prop_cases(8) {
         let seed = 0x5E6 + case as u64;
-        let mut rng = Rng::new(seed);
+        let mut rng = test_rng(seed);
         let tmp = TempDir::new("amips-seg-trace");
         let dir = tmp.join("c.seg");
         let spec = IndexSpec::default_for("flat").unwrap();
@@ -167,7 +167,7 @@ fn random_trace_matches_flat_rebuild_before_and_after_compaction() {
 /// must equal the oracle bit-for-bit *throughout* the fold.
 #[test]
 fn searches_stay_consistent_across_generation_swap() {
-    let mut rng = Rng::new(77);
+    let mut rng = test_rng(77);
     let tmp = TempDir::new("amips-seg-swap");
     let spec = IndexSpec::default_for("ivf").unwrap().with_nlist(4);
     let coll = Arc::new(MutableCollection::create(&tmp.join("c.seg"), spec, D, 77).unwrap());
@@ -218,7 +218,7 @@ fn searches_stay_consistent_across_generation_swap() {
 /// segment + truncated committed manifest.
 #[test]
 fn kill_during_compaction_recovers_last_committed_generation() {
-    let mut rng = Rng::new(99);
+    let mut rng = test_rng(99);
     let tmp = TempDir::new("amips-seg-kill");
     let dir = tmp.join("c.seg");
     let spec = IndexSpec::default_for("flat").unwrap();
@@ -285,7 +285,7 @@ fn kill_during_compaction_recovers_last_committed_generation() {
 /// guarantee callers key caches on.
 #[test]
 fn ids_are_never_reused_across_generations() {
-    let mut rng = Rng::new(3);
+    let mut rng = test_rng(3);
     let tmp = TempDir::new("amips-seg-ids");
     let spec = IndexSpec::default_for("flat").unwrap();
     let coll = MutableCollection::create(&tmp.join("c.seg"), spec, D, 3).unwrap();
