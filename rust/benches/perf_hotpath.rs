@@ -5,7 +5,15 @@
 //! bit-identical in results, so any ratio is pure memory/cache
 //! behavior. A machine-readable `BENCH_hotpath.json` is emitted next to
 //! the aligned-text table so the bench trajectory can be tracked across
-//! commits.
+//! commits (`scripts/bench_gate.py` compares it against the committed
+//! baseline in CI).
+//!
+//! Every row carries a `kernel` field naming the dispatch tier it ran
+//! under (`avx2fma` / `neon` / `scalar`), and the whole suite runs
+//! twice in one artifact — once on the detected SIMD tier, once
+//! force-pinned to scalar — so one JSON file captures both the SIMD
+//! speedup and the portable floor. Under `AMIPS_FORCE_SCALAR=1` only
+//! the scalar pass runs.
 //!
 //! Corpus size scales with `AMIPS_BENCH_N` / `AMIPS_BENCH_D` (CI's
 //! perf-smoke job runs a tiny synthetic corpus; local runs default to a
@@ -14,8 +22,9 @@
 use amips::api::{Effort, SearchRequest, Searcher};
 use amips::bench_support::fixtures;
 use amips::bench_support::report::{JsonRows, JsonVal, Report};
+use amips::index::pq::Pq;
 use amips::index::{flat::FlatIndex, ivf::IvfIndex, pq::PqIndex, traits::VectorIndex};
-use amips::tensor::{gemm_nt, normalize_rows, Tensor};
+use amips::tensor::{gemm_nt, kernels, normalize_rows, Tensor};
 use amips::util::timer::{time_reps, Stats};
 use amips::util::Rng;
 use anyhow::Result;
@@ -31,9 +40,11 @@ fn env_usize(name: &str, default: usize) -> usize {
 /// Time per-query and fused-batched scans of `index` over the first `b`
 /// queries, emitting one text row + one JSON row per mode. Flops come
 /// from the index's own SearchCost (identical on both paths).
+#[allow(clippy::too_many_arguments)]
 fn bench_pair(
     rep: &mut Report,
     json: &mut JsonRows,
+    kernel: &str,
     backend: &str,
     index: &dyn VectorIndex,
     queries: &Tensor,
@@ -61,7 +72,7 @@ fn bench_pair(
         let gflops = flops as f64 / t.mean / 1e9;
         let qps = b as f64 / t.mean;
         rep.row(&[
-            format!("{backend} {mode}"),
+            format!("{backend} {mode} [{kernel}]"),
             format!("B={b}"),
             format!("{:.3} ms", t.mean * 1e3),
             format!("{:.3} ms", t.p95 * 1e3),
@@ -71,6 +82,7 @@ fn bench_pair(
         json.push(&[
             ("backend", JsonVal::S(backend.to_string())),
             ("mode", JsonVal::S(mode.to_string())),
+            ("kernel", JsonVal::S(kernel.to_string())),
             ("batch", JsonVal::I(b as u64)),
             ("n", JsonVal::I(index.len() as u64)),
             ("d", JsonVal::I(index.dim() as u64)),
@@ -80,6 +92,127 @@ fn bench_pair(
             ("qps", JsonVal::F(qps)),
         ]);
     }
+}
+
+/// One full pass of the suite under the currently pinned dispatch tier.
+#[allow(clippy::too_many_arguments)]
+fn run_suite(
+    rep: &mut Report,
+    json: &mut JsonRows,
+    kernel: &str,
+    keys: &Tensor,
+    queries: &Tensor,
+    flat: &FlatIndex,
+    pq: &PqIndex,
+    ivf: &IvfIndex,
+    pq_m: usize,
+) {
+    let (n, d) = (keys.rows(), keys.row_width());
+    let nq = queries.rows();
+
+    // ---- 1. batched vs per-query scans: flat / PQ / IVF ----------------
+    let backends: [(&str, &dyn VectorIndex, Effort); 3] = [
+        ("flat", flat, Effort::Exhaustive),
+        ("pq", pq, Effort::Auto),
+        ("ivf", ivf, Effort::Probes(8)),
+    ];
+    for (backend, index, effort) in backends {
+        for b in [1usize, 8, 64] {
+            bench_pair(rep, json, kernel, backend, index, queries, b, effort);
+        }
+    }
+
+    // ---- 2. raw gemm_nt batch scoring (kernel ceiling) -----------------
+    let mut out = Tensor::zeros(&[nq, n]);
+    let t = Stats::from(&time_reps(1, 4, || {
+        gemm_nt(queries, keys, &mut out);
+    }));
+    let gflops = (nq * n * d * 2) as f64 / t.mean / 1e9;
+    rep.row(&[
+        format!("gemm_nt [{kernel}]"),
+        format!("{nq}x{n}"),
+        format!("{:.2} ms", t.mean * 1e3),
+        format!("{:.2} ms", t.p95 * 1e3),
+        format!("{gflops:.2} GFLOP/s"),
+        String::new(),
+    ]);
+    json.push(&[
+        ("backend", JsonVal::S("gemm_nt".into())),
+        ("mode", JsonVal::S("kernel".into())),
+        ("kernel", JsonVal::S(kernel.to_string())),
+        ("batch", JsonVal::I(nq as u64)),
+        ("n", JsonVal::I(n as u64)),
+        ("d", JsonVal::I(d as u64)),
+        ("mean_s", JsonVal::F(t.mean)),
+        ("p95_s", JsonVal::F(t.p95)),
+        ("gflops", JsonVal::F(gflops)),
+        ("qps", JsonVal::F(nq as f64 / t.mean)),
+    ]);
+
+    // ---- 3. raw ADC code-matrix scans (8-bit and 4-bit packed) ---------
+    // A lookup+add is counted as 2 "flops" so the tiers compare on one
+    // scale; the interesting number is rows/s anyway.
+    for bits in [8usize, 4] {
+        let pqq = Pq::train_with_bits(keys, pq_m, 3, 1.0, bits, 42);
+        let codes = pqq.encode(keys);
+        let cw = pqq.code_width();
+        let table = pqq.adc_table(queries.row(0));
+        let t = Stats::from(&time_reps(1, 8, || {
+            let mut acc = 0.0f32;
+            for i in 0..n {
+                acc += pqq.adc_score(&table, &codes[i * cw..(i + 1) * cw]);
+            }
+            black_box(acc);
+        }));
+        let gflops = (n * pq_m * 2) as f64 / t.mean / 1e9;
+        let backend = format!("adc_scan{bits}");
+        rep.row(&[
+            format!("{backend} [{kernel}]"),
+            format!("{n}x{pq_m}"),
+            format!("{:.3} ms", t.mean * 1e3),
+            format!("{:.3} ms", t.p95 * 1e3),
+            format!("{gflops:.2} GFLOP/s"),
+            format!("{:.0} Mrow/s", n as f64 / t.mean / 1e6),
+        ]);
+        json.push(&[
+            ("backend", JsonVal::S(backend)),
+            ("mode", JsonVal::S("kernel".into())),
+            ("kernel", JsonVal::S(kernel.to_string())),
+            ("batch", JsonVal::I(1)),
+            ("n", JsonVal::I(n as u64)),
+            ("d", JsonVal::I(d as u64)),
+            ("mean_s", JsonVal::F(t.mean)),
+            ("p95_s", JsonVal::F(t.p95)),
+            ("gflops", JsonVal::F(gflops)),
+            ("qps", JsonVal::F(1.0 / t.mean)),
+        ]);
+    }
+
+    // ---- 4. threaded batched Searcher over the pool --------------------
+    let req = SearchRequest::top_k(10).effort(Effort::Probes(8));
+    let t = Stats::from(&time_reps(1, 4, || {
+        black_box(ivf.search(queries, &req).unwrap());
+    }));
+    rep.row(&[
+        format!("ivf batch (Searcher) [{kernel}]"),
+        format!("{nq} queries"),
+        format!("{:.2} ms", t.mean * 1e3),
+        format!("{:.2} ms", t.p95 * 1e3),
+        String::new(),
+        format!("{:.0} q/s", nq as f64 / t.mean),
+    ]);
+    json.push(&[
+        ("backend", JsonVal::S("ivf".into())),
+        ("mode", JsonVal::S("searcher_threaded".into())),
+        ("kernel", JsonVal::S(kernel.to_string())),
+        ("batch", JsonVal::I(nq as u64)),
+        ("n", JsonVal::I(n as u64)),
+        ("d", JsonVal::I(d as u64)),
+        ("mean_s", JsonVal::F(t.mean)),
+        ("p95_s", JsonVal::F(t.p95)),
+        ("gflops", JsonVal::F(f64::NAN)),
+        ("qps", JsonVal::F(nq as f64 / t.mean)),
+    ]);
 }
 
 fn main() -> Result<()> {
@@ -95,76 +228,32 @@ fn main() -> Result<()> {
     rep.header(&["path", "unit", "mean", "p95", "throughput", "rate"]);
     let mut json = JsonRows::new("hotpath");
 
-    // ---- 1. batched vs per-query scans: flat / PQ / IVF ----------------
+    // Indexes are built once (training quality is not what's timed) and
+    // scanned under each dispatch tier.
     let flat = FlatIndex::new(keys.clone());
     let pq_m = [8usize, 4, 2, 1].into_iter().find(|m| d % m == 0).unwrap_or(1);
-    let pq = PqIndex::build(&keys, pq_m, 3, 1.0, 42);
+    let pq = PqIndex::build(&keys, pq_m, 3, 1.0, 8, 42);
     let ivf = IvfIndex::build(&keys, fixtures::default_nlist(n), 10, 42);
-    let backends: [(&str, &dyn VectorIndex, Effort); 3] = [
-        ("flat", &flat, Effort::Exhaustive),
-        ("pq", &pq, Effort::Auto),
-        ("ivf", &ivf, Effort::Probes(8)),
-    ];
-    for (backend, index, effort) in backends {
-        for b in [1usize, 8, 64] {
-            bench_pair(&mut rep, &mut json, backend, index, &queries, b, effort);
-        }
+
+    // Detected tier first, then the forced-scalar floor (skipped when
+    // the detected tier already is scalar, e.g. AMIPS_FORCE_SCALAR=1).
+    let detected = kernels::tier_name().to_string();
+    let mut modes = vec![(false, detected.clone())];
+    if detected != "scalar" {
+        modes.push((true, "scalar".to_string()));
     }
-
-    // ---- 2. raw gemm_nt batch scoring (kernel ceiling) -----------------
-    let mut out = Tensor::zeros(&[nq, n]);
-    let t = Stats::from(&time_reps(1, 4, || {
-        gemm_nt(&queries, &keys, &mut out);
-    }));
-    let gflops = (nq * n * d * 2) as f64 / t.mean / 1e9;
-    rep.row(&[
-        "gemm_nt".into(),
-        format!("{nq}x{n}"),
-        format!("{:.2} ms", t.mean * 1e3),
-        format!("{:.2} ms", t.p95 * 1e3),
-        format!("{gflops:.2} GFLOP/s"),
-        String::new(),
-    ]);
-    json.push(&[
-        ("backend", JsonVal::S("gemm_nt".into())),
-        ("mode", JsonVal::S("kernel".into())),
-        ("batch", JsonVal::I(nq as u64)),
-        ("n", JsonVal::I(n as u64)),
-        ("d", JsonVal::I(d as u64)),
-        ("mean_s", JsonVal::F(t.mean)),
-        ("p95_s", JsonVal::F(t.p95)),
-        ("gflops", JsonVal::F(gflops)),
-        ("qps", JsonVal::F(nq as f64 / t.mean)),
-    ]);
-
-    // ---- 3. threaded batched Searcher over the pool --------------------
-    let req = SearchRequest::top_k(10).effort(Effort::Probes(8));
-    let t = Stats::from(&time_reps(1, 4, || {
-        black_box(ivf.search(&queries, &req).unwrap());
-    }));
-    rep.row(&[
-        "ivf batch (Searcher)".into(),
-        format!("{nq} queries"),
-        format!("{:.2} ms", t.mean * 1e3),
-        format!("{:.2} ms", t.p95 * 1e3),
-        String::new(),
-        format!("{:.0} q/s", nq as f64 / t.mean),
-    ]);
-    json.push(&[
-        ("backend", JsonVal::S("ivf".into())),
-        ("mode", JsonVal::S("searcher_threaded".into())),
-        ("batch", JsonVal::I(nq as u64)),
-        ("n", JsonVal::I(n as u64)),
-        ("d", JsonVal::I(d as u64)),
-        ("mean_s", JsonVal::F(t.mean)),
-        ("p95_s", JsonVal::F(t.p95)),
-        ("gflops", JsonVal::F(f64::NAN)),
-        ("qps", JsonVal::F(nq as f64 / t.mean)),
-    ]);
+    for (force, kernel) in &modes {
+        kernels::force_scalar(*force);
+        run_suite(
+            &mut rep, &mut json, kernel, &keys, &queries, &flat, &pq, &ivf, pq_m,
+        );
+    }
+    kernels::force_scalar(false);
 
     rep.note(format!(
-        "corpus {n}x{d} (AMIPS_BENCH_N/AMIPS_BENCH_D to rescale); batched and \
-         per-query paths are bit-identical in results, so ratios are pure \
+        "corpus {n}x{d} (AMIPS_BENCH_N/AMIPS_BENCH_D to rescale); detected \
+         kernel tier: {detected}; batched and per-query paths are \
+         bit-identical in results per tier, so ratios are pure \
          kernel/cache effects"
     ));
     rep.emit("perf_hotpath");

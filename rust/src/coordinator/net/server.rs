@@ -176,8 +176,9 @@ impl Shared {
         }
         let mut out = String::with_capacity(1024);
         out.push_str(&format!(
-            "amips_build_info{{version=\"{}\",wire_version=\"{VERSION}\"}} 1\n",
-            env!("CARGO_PKG_VERSION")
+            "amips_build_info{{version=\"{}\",wire_version=\"{VERSION}\",kernel=\"{}\"}} 1\n",
+            env!("CARGO_PKG_VERSION"),
+            crate::tensor::kernels::tier_name()
         ));
         out.push_str(&format!(
             "amips_connections {}\n",

@@ -8,7 +8,7 @@
 //!
 //! ```text
 //! magic    b"AMIX"
-//! version  u32 (currently 1)
+//! version  u32 (currently 2; version-1 artifacts still load)
 //! backbone len-prefixed utf8 tag ("ivf", "scann", ...)
 //! dim      u64
 //! len      u64 (number of indexed keys)
@@ -34,8 +34,14 @@ use crate::tensor::Tensor;
 
 /// Artifact magic bytes.
 pub const MAGIC: &[u8; 4] = b"AMIX";
-/// Current artifact format version.
-pub const VERSION: u32 = 1;
+/// Current artifact format version. Version 2 added the compact-storage
+/// payload fields (`storage=f16` key matrices, 4-bit packed PQ codes);
+/// writers always emit the current version.
+pub const VERSION: u32 = 2;
+/// Oldest artifact version this build still reads. Version-1 payloads
+/// decode bit-identically to the build that wrote them (the readers
+/// default the new fields to f32 storage / 8-bit codes).
+pub const MIN_VERSION: u32 = 1;
 /// Conventional file extension for index artifacts.
 pub const EXTENSION: &str = "ami";
 /// Upper bound on any element count read from disk — corrupt length
@@ -44,6 +50,7 @@ const MAX_ELEMS: u64 = 1 << 31;
 
 /// Parsed artifact header (everything before the payload).
 pub struct ArtifactHeader {
+    pub version: u32,
     pub backbone: String,
     pub dim: usize,
     pub len: usize,
@@ -120,6 +127,16 @@ pub(crate) fn w_usizes(w: &mut dyn Write, v: &[usize]) -> Result<()> {
     for &x in v {
         w_u64(w, x as u64)?;
     }
+    Ok(())
+}
+
+pub(crate) fn w_u16s(w: &mut dyn Write, v: &[u16]) -> Result<()> {
+    w_u64(w, v.len() as u64)?;
+    let mut buf = Vec::with_capacity(v.len() * 2);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
     Ok(())
 }
 
@@ -203,6 +220,16 @@ pub(crate) fn r_usizes(r: &mut dyn Read) -> Result<Vec<usize>> {
     Ok(out)
 }
 
+pub(crate) fn r_u16s(r: &mut dyn Read) -> Result<Vec<u16>> {
+    let n = checked_len(r_u64(r)?, "u16 array")?;
+    let mut raw = vec![0u8; n * 2];
+    r.read_exact(&mut raw).context("artifact truncated")?;
+    Ok(raw
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect())
+}
+
 pub(crate) fn r_tensor(r: &mut dyn Read) -> Result<Tensor> {
     let mut r = r;
     Tensor::read_from(&mut r)
@@ -245,14 +272,16 @@ pub fn read_header(r: &mut dyn Read) -> Result<ArtifactHeader> {
     );
     let version = r_u32(r)?;
     ensure!(
-        version == VERSION,
-        "unsupported index artifact version {version} (this build reads version {VERSION})"
+        (MIN_VERSION..=VERSION).contains(&version),
+        "unsupported index artifact version {version} \
+         (this build reads versions {MIN_VERSION}..={VERSION})"
     );
     let backbone = r_str(r)?;
     let dim = checked_len(r_u64(r)?, "dim")?;
     let len = checked_len(r_u64(r)?, "len")?;
     let spec = r_str(r)?;
     Ok(ArtifactHeader {
+        version,
         backbone,
         dim,
         len,
@@ -275,14 +304,19 @@ pub fn load_from(r: &mut dyn Read) -> Result<Box<dyn VectorIndex>> {
         "index artifact checksum mismatch (stored {want:#018x}, computed {got:#018x}): corrupt file"
     );
     let mut cur: &[u8] = &payload;
+    // Backbones whose payloads grew in v2 take the header version and
+    // default the new fields when reading a v1 stream; the rest are
+    // version-stable (the sharded payload embeds fully framed per-shard
+    // artifacts, which carry their own versions).
+    let v = header.version;
     let index: Box<dyn VectorIndex> = match header.backbone.as_str() {
-        "flat" => Box::new(flat::FlatIndex::read_payload(&mut cur)?),
+        "flat" => Box::new(flat::FlatIndex::read_payload(&mut cur, v)?),
         "ivf" => Box::new(ivf::IvfIndex::read_payload(&mut cur)?),
-        "pq" => Box::new(pq::PqIndex::read_payload(&mut cur)?),
+        "pq" => Box::new(pq::PqIndex::read_payload(&mut cur, v)?),
         "sq8" => Box::new(sq::SqIndex::read_payload(&mut cur)?),
-        "scann" => Box::new(scann::ScannIndex::read_payload(&mut cur)?),
+        "scann" => Box::new(scann::ScannIndex::read_payload(&mut cur, v)?),
         "soar" => Box::new(soar::SoarIndex::read_payload(&mut cur)?),
-        "leanvec" => Box::new(leanvec::LeanVecIndex::read_payload(&mut cur)?),
+        "leanvec" => Box::new(leanvec::LeanVecIndex::read_payload(&mut cur, v)?),
         "sharded" => Box::new(shard::ShardedIndex::read_payload(&mut cur)?),
         other => bail!("unknown backbone tag '{other}' in index artifact"),
     };
@@ -368,9 +402,19 @@ mod tests {
         write_framed(&mut buf, "ivf", 16, 400, "ivf(nlist=8,iters=15)", b"payload").unwrap();
         let mut r: &[u8] = &buf;
         let h = read_header(&mut r).unwrap();
+        assert_eq!(h.version, VERSION);
         assert_eq!(h.backbone, "ivf");
         assert_eq!((h.dim, h.len), (16, 400));
         assert_eq!(h.spec, "ivf(nlist=8,iters=15)");
+
+        // a version-1 header still parses (backwards compatibility)
+        let mut v1 = buf.clone();
+        v1[4] = 1;
+        assert_eq!(read_header(&mut v1.as_slice()).unwrap().version, 1);
+        // version 0 predates the format and is rejected
+        let mut v0 = buf.clone();
+        v0[4] = 0;
+        assert!(read_header(&mut v0.as_slice()).is_err());
 
         // corrupt magic
         let mut bad = buf.clone();

@@ -1,6 +1,11 @@
 //! Exhaustive (flat) MIPS index: the exact baseline every approximate
 //! backbone is measured against, and the "exact search within selected
 //! clusters" stage of the routing experiments (Sec. 4.3).
+//!
+//! Keys live in a [`KeyStore`] — full f32 rows by default, compact
+//! binary16 rows with `flat(storage=f16)` — and every score goes
+//! through the dispatched kernels, so per-query and batched results
+//! stay bit-identical to each other for either storage.
 
 use std::io::{Read, Write};
 
@@ -8,33 +13,58 @@ use anyhow::Result;
 
 use crate::api::Effort;
 use crate::index::artifact;
+use crate::index::keystore::{KeyStore, Storage};
 use crate::index::spec::{FlatSpec, IndexSpec};
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
-use crate::tensor::{dot, gemm_nt_tile, Tensor};
+use crate::tensor::Tensor;
 
 /// Brute-force scan over all keys.
 pub struct FlatIndex {
-    keys: Tensor, // [n, d]
+    keys: KeyStore, // [n, d]
 }
 
 impl FlatIndex {
     pub fn new(keys: Tensor) -> Self {
-        FlatIndex { keys }
+        FlatIndex {
+            keys: KeyStore::F32(keys),
+        }
     }
 
+    /// Build with an explicit key-storage precision (the
+    /// `flat(storage=...)` spec knob).
+    pub fn with_storage(keys: Tensor, storage: Storage) -> Self {
+        FlatIndex {
+            keys: KeyStore::new(keys, storage),
+        }
+    }
+
+    /// The f32 key matrix. Panics under `storage=f16` — callers that
+    /// must work for any storage go through [`FlatIndex::store`] (every
+    /// in-repo caller constructs via [`FlatIndex::new`], which is
+    /// always f32).
     pub fn keys(&self) -> &Tensor {
+        self.keys.as_f32()
+    }
+
+    /// The key store itself (any storage).
+    pub fn store(&self) -> &KeyStore {
         &self.keys
     }
 
     pub fn d(&self) -> usize {
-        self.keys.row_width()
+        self.keys.dim()
     }
 
-    /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
-    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<FlatIndex> {
-        Ok(FlatIndex {
-            keys: artifact::r_tensor(r)?,
-        })
+    /// Deserialize from an artifact payload (see
+    /// [`crate::index::artifact`]). Version-1 payloads are a bare f32
+    /// tensor; version-2 payloads carry a storage-tagged [`KeyStore`].
+    pub(crate) fn read_payload(r: &mut dyn Read, version: u32) -> Result<FlatIndex> {
+        let keys = if version < 2 {
+            KeyStore::F32(artifact::r_tensor(r)?)
+        } else {
+            KeyStore::read_payload(r)?
+        };
+        Ok(FlatIndex { keys })
     }
 
     /// Exact top-k over an explicit subset of key ids (cluster scan).
@@ -42,7 +72,7 @@ impl FlatIndex {
         let d = self.d();
         let mut top = TopK::new(k);
         for &id in ids {
-            top.offer(dot(query, self.keys.row(id as usize)), id);
+            top.offer(self.keys.score(query, id as usize), id);
         }
         let (ids_out, scores) = top.into_sorted();
         SearchResult {
@@ -62,7 +92,7 @@ impl FlatIndex {
         let d = self.d();
         let mut top = TopK::new(k);
         for id in 0..n {
-            top.offer(dot(query, self.keys.row(id)), id as u32);
+            top.offer(self.keys.score(query, id), id as u32);
         }
         let (ids, scores) = top.into_sorted();
         SearchResult {
@@ -83,7 +113,7 @@ impl VectorIndex for FlatIndex {
     }
 
     fn len(&self) -> usize {
-        self.keys.rows()
+        self.keys.len()
     }
 
     fn dim(&self) -> usize {
@@ -94,12 +124,13 @@ impl VectorIndex for FlatIndex {
         self.scan_all(query, k)
     }
 
-    /// Fused batched scan: score query-tiles × key-tiles through the
-    /// [`gemm_nt_tile`] kernel, so each key tile is streamed from memory
+    /// Fused batched scan: score query-tiles × key-tiles through
+    /// [`KeyStore::scan_tile`], so each key tile is streamed from memory
     /// once per *batch* instead of once per query, then feed per-query
-    /// [`TopK`]s. Same `dot` per (query, key) pair as
-    /// [`FlatIndex::search_effort`], so results and costs are
-    /// bit-identical.
+    /// [`TopK`]s through the SIMD-prefiltered [`TopK::offer_block`].
+    /// Same dispatched kernel per (query, key) pair as
+    /// [`FlatIndex::search_effort`] and a selection that is independent
+    /// of push order, so results and costs are bit-identical.
     fn search_batch_effort(
         &self,
         queries: &Tensor,
@@ -121,16 +152,10 @@ impl VectorIndex for FlatIndex {
         while j0 < n {
             let j1 = (j0 + KEY_TILE).min(n);
             let w = j1 - j0;
-            gemm_nt_tile(
-                queries.data(),
-                &self.keys.data()[j0 * d..j1 * d],
-                d,
-                &mut scores[..b * w],
-            );
+            self.keys
+                .scan_tile(queries.data(), b, j0, j1, &mut scores[..b * w]);
             for (q, top) in tops.iter_mut().enumerate() {
-                for (jj, &s) in scores[q * w..(q + 1) * w].iter().enumerate() {
-                    top.offer(s, (j0 + jj) as u32);
-                }
+                top.offer_block(&scores[q * w..(q + 1) * w], j0 as u32);
             }
             j0 = j1;
         }
@@ -148,17 +173,20 @@ impl VectorIndex for FlatIndex {
     }
 
     fn spec(&self) -> IndexSpec {
-        IndexSpec::Flat(FlatSpec)
+        IndexSpec::Flat(FlatSpec {
+            storage: self.keys.storage(),
+        })
     }
 
     fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
-        artifact::w_tensor(w, &self.keys)
+        self.keys.write_payload(w)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::dot;
     use crate::util::Rng;
 
     fn randt(shape: &[usize], seed: u64) -> Tensor {
@@ -210,19 +238,42 @@ mod tests {
 
     #[test]
     fn batched_scan_is_bit_identical_to_per_query() {
-        // odd sizes so the key tiling hits a partial last tile
-        let keys = randt(&[301, 24], 9);
-        let idx = FlatIndex::new(keys);
-        let q = randt(&[7, 24], 10);
-        let batched = idx.search_batch_effort(&q, 5, Effort::Auto);
-        assert_eq!(batched.len(), 7);
-        for i in 0..7 {
-            let single = idx.search_effort(q.row(i), 5, Effort::Auto);
-            assert_eq!(batched[i].ids, single.ids, "query {i}");
-            assert_eq!(batched[i].scores, single.scores, "query {i}");
-            assert_eq!(batched[i].cost, single.cost, "query {i}");
+        // odd sizes so the key tiling hits a partial last tile, for
+        // both storage precisions
+        for storage in [Storage::F32, Storage::F16] {
+            let keys = randt(&[301, 24], 9);
+            let idx = FlatIndex::with_storage(keys, storage);
+            let q = randt(&[7, 24], 10);
+            let batched = idx.search_batch_effort(&q, 5, Effort::Auto);
+            assert_eq!(batched.len(), 7);
+            for i in 0..7 {
+                let single = idx.search_effort(q.row(i), 5, Effort::Auto);
+                assert_eq!(batched[i].ids, single.ids, "{storage:?} query {i}");
+                assert_eq!(batched[i].scores, single.scores, "{storage:?} query {i}");
+                assert_eq!(batched[i].cost, single.cost, "{storage:?} query {i}");
+            }
+            assert!(idx
+                .search_batch_effort(&Tensor::zeros(&[0, 24]), 5, Effort::Auto)
+                .is_empty());
         }
-        assert!(idx.search_batch_effort(&Tensor::zeros(&[0, 24]), 5, Effort::Auto).is_empty());
+    }
+
+    #[test]
+    fn f16_storage_ranks_like_f32_on_separated_data() {
+        // well-separated scores: f16 rounding (~2^-11 relative) cannot
+        // reorder them, so the id ranking must match exactly
+        let keys = randt(&[120, 32], 11);
+        let q = randt(&[1, 32], 12);
+        let f32_idx = FlatIndex::new(keys.clone());
+        let f16_idx = FlatIndex::with_storage(keys, Storage::F16);
+        assert_eq!(f16_idx.spec().to_string(), "flat(storage=f16)");
+        let a = f32_idx.search_effort(q.row(0), 5, Effort::Exhaustive);
+        let b = f16_idx.search_effort(q.row(0), 5, Effort::Exhaustive);
+        // scores differ only by storage rounding
+        for (x, y) in a.scores.iter().zip(&b.scores) {
+            assert!((x - y).abs() <= 2e-2 * (1.0 + x.abs()), "{x} vs {y}");
+        }
+        assert_eq!(a.cost, b.cost);
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! Key-matrix storage for the exact-scoring backbones: full-precision
+//! f32 rows (the default) or compact binary16 rows (`storage=f16`),
+//! which halve scan-path memory bandwidth at ~2⁻¹¹ relative rounding
+//! error per stored coordinate.
+//!
+//! Scoring goes through the dispatched kernels
+//! ([`crate::tensor::kernels::dot`] / [`dot_f16`]), so the per-query
+//! and batched scan paths of an index share one kernel per (query, key)
+//! pair and stay bit-identical to each other regardless of storage.
+//!
+//! [`dot_f16`]: crate::tensor::kernels::dot_f16
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::index::artifact;
+use crate::tensor::half::{decode_f16, encode_f16};
+use crate::tensor::{gemm_nt_tile, kernels, Tensor};
+
+/// Key-matrix precision knob (`storage=` in flat/leanvec specs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Storage {
+    /// Full-precision f32 rows — bit-identical to the pre-knob behavior.
+    #[default]
+    F32,
+    /// binary16 rows, dequantized inside the scoring kernel.
+    F16,
+}
+
+impl Storage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Storage::F32 => "f32",
+            Storage::F16 => "f16",
+        }
+    }
+}
+
+impl std::fmt::Display for Storage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Storage {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Storage> {
+        match s {
+            "f32" => Ok(Storage::F32),
+            "f16" => Ok(Storage::F16),
+            other => bail!("unknown storage '{other}' (expected f32 or f16)"),
+        }
+    }
+}
+
+/// A key matrix in its selected storage precision.
+pub enum KeyStore {
+    F32(Tensor),
+    F16 { n: usize, d: usize, rows: Vec<u16> },
+}
+
+impl KeyStore {
+    /// Encode `keys` (`[n, d]`) into the requested storage. `F32` keeps
+    /// the tensor untouched (bit-identical scores); `F16` rounds each
+    /// coordinate to nearest-even binary16 once, at build time.
+    pub fn new(keys: Tensor, storage: Storage) -> KeyStore {
+        match storage {
+            Storage::F32 => KeyStore::F32(keys),
+            Storage::F16 => KeyStore::F16 {
+                n: keys.rows(),
+                d: keys.row_width(),
+                rows: encode_f16(keys.data()),
+            },
+        }
+    }
+
+    pub fn storage(&self) -> Storage {
+        match self {
+            KeyStore::F32(_) => Storage::F32,
+            KeyStore::F16 { .. } => Storage::F16,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            KeyStore::F32(t) => t.rows(),
+            KeyStore::F16 { n, .. } => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            KeyStore::F32(t) => t.row_width(),
+            KeyStore::F16 { d, .. } => *d,
+        }
+    }
+
+    /// The underlying f32 tensor. Panics for f16 storage — callers that
+    /// need raw rows regardless of storage should use [`to_tensor`]
+    /// (which decodes) or [`score`] (which never materializes rows).
+    ///
+    /// [`to_tensor`]: KeyStore::to_tensor
+    /// [`score`]: KeyStore::score
+    pub fn as_f32(&self) -> &Tensor {
+        match self {
+            KeyStore::F32(t) => t,
+            KeyStore::F16 { .. } => {
+                panic!("KeyStore::as_f32 on f16 storage (use to_tensor/score)")
+            }
+        }
+    }
+
+    /// Decode to a dense f32 tensor (copies; exact for f32 storage,
+    /// the stored — already rounded — values for f16).
+    pub fn to_tensor(&self) -> Tensor {
+        match self {
+            KeyStore::F32(t) => t.clone(),
+            KeyStore::F16 { n, d, rows } => Tensor::from_vec(&[*n, *d], decode_f16(rows)),
+        }
+    }
+
+    /// Inner product of `query` with stored row `id`, through the
+    /// dispatched kernel for this storage.
+    #[inline]
+    pub fn score(&self, query: &[f32], id: usize) -> f32 {
+        match self {
+            KeyStore::F32(t) => kernels::dot(query, t.row(id)),
+            KeyStore::F16 { d, rows, .. } => {
+                kernels::dot_f16(query, &rows[id * d..(id + 1) * d])
+            }
+        }
+    }
+
+    /// Score a tile: `out[i * (j1 - j0) + (j - j0)] = <a_i, key_j>` for
+    /// `a` holding `m` rows of width `dim()`. The f32 arm runs the
+    /// fused [`gemm_nt_tile`] kernel; the f16 arm scores row-by-row
+    /// through the same [`kernels::dot_f16`] as [`score`], so both arms
+    /// stay bit-identical to their per-query path.
+    ///
+    /// [`score`]: KeyStore::score
+    pub fn scan_tile(&self, a: &[f32], m: usize, j0: usize, j1: usize, out: &mut [f32]) {
+        let d = self.dim();
+        let w = j1 - j0;
+        debug_assert_eq!(a.len(), m * d);
+        debug_assert!(out.len() >= m * w);
+        match self {
+            KeyStore::F32(t) => {
+                gemm_nt_tile(a, &t.data()[j0 * d..j1 * d], d, &mut out[..m * w]);
+            }
+            KeyStore::F16 { rows, .. } => {
+                for i in 0..m {
+                    let q = &a[i * d..(i + 1) * d];
+                    for j in j0..j1 {
+                        out[i * w + (j - j0)] = kernels::dot_f16(q, &rows[j * d..(j + 1) * d]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Serialize: a storage tag, then the payload for that storage.
+    pub fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        match self {
+            KeyStore::F32(t) => {
+                artifact::w_u32(w, 0)?;
+                artifact::w_tensor(w, t)
+            }
+            KeyStore::F16 { n, d, rows } => {
+                artifact::w_u32(w, 1)?;
+                artifact::w_u64(w, *n as u64)?;
+                artifact::w_u64(w, *d as u64)?;
+                artifact::w_u16s(w, rows)
+            }
+        }
+    }
+
+    /// Deserialize a tagged key store (artifact version ≥ 2 layout).
+    /// Version-1 payloads have no tag — their readers call
+    /// `artifact::r_tensor` directly and wrap it in `KeyStore::F32`.
+    pub fn read_payload(r: &mut dyn Read) -> Result<KeyStore> {
+        match artifact::r_u32(r)? {
+            0 => Ok(KeyStore::F32(artifact::r_tensor(r)?)),
+            1 => {
+                let n = artifact::r_u64(r)? as usize;
+                let d = artifact::r_u64(r)? as usize;
+                let rows = artifact::r_u16s(r)?;
+                ensure!(
+                    n.checked_mul(d).is_some_and(|e| e == rows.len()),
+                    "f16 key store advertises {n}x{d} but holds {} halves",
+                    rows.len()
+                );
+                Ok(KeyStore::F16 { n, d, rows })
+            }
+            other => bail!("unknown key-store storage tag {other} in artifact"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(seed).fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    #[test]
+    fn f32_store_is_transparent() {
+        let keys = randt(&[20, 16], 1);
+        let ks = KeyStore::new(keys.clone(), Storage::F32);
+        assert_eq!(ks.storage(), Storage::F32);
+        assert_eq!((ks.len(), ks.dim()), (20, 16));
+        let q = randt(&[1, 16], 2);
+        for i in 0..20 {
+            assert_eq!(
+                ks.score(q.row(0), i).to_bits(),
+                crate::tensor::dot(q.row(0), keys.row(i)).to_bits()
+            );
+        }
+        assert_eq!(ks.to_tensor().data(), keys.data());
+        assert_eq!(ks.as_f32().data(), keys.data());
+    }
+
+    #[test]
+    fn f16_store_scores_close_and_self_consistently() {
+        let keys = randt(&[30, 24], 3);
+        let ks = KeyStore::new(keys.clone(), Storage::F16);
+        assert_eq!(ks.storage(), Storage::F16);
+        let q = randt(&[1, 24], 4);
+        let decoded = ks.to_tensor();
+        for i in 0..30 {
+            let s = ks.score(q.row(0), i);
+            let exact = crate::tensor::dot(q.row(0), keys.row(i));
+            // storage rounding only: ~2^-11 per coordinate
+            assert!((s - exact).abs() <= 2e-2 * (1.0 + exact.abs()), "row {i}");
+            // scoring the decoded tensor must agree within kernel tolerance
+            let dec = crate::tensor::dot(q.row(0), decoded.row(i));
+            assert!((s - dec).abs() <= 1e-4, "row {i}: {s} vs {dec}");
+        }
+    }
+
+    #[test]
+    fn scan_tile_matches_score_bitwise() {
+        for storage in [Storage::F32, Storage::F16] {
+            let keys = randt(&[37, 16], 5);
+            let ks = KeyStore::new(keys, storage);
+            let q = randt(&[3, 16], 6);
+            let (j0, j1) = (8, 37);
+            let mut out = vec![0.0f32; 3 * (j1 - j0)];
+            ks.scan_tile(q.data(), 3, j0, j1, &mut out);
+            for i in 0..3 {
+                for j in j0..j1 {
+                    let got = out[i * (j1 - j0) + (j - j0)];
+                    let want = ks.score(q.row(i), j);
+                    assert_eq!(got.to_bits(), want.to_bits(), "{storage:?} q{i} k{j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn payload_round_trips_bitwise() {
+        for storage in [Storage::F32, Storage::F16] {
+            let ks = KeyStore::new(randt(&[11, 8], 7), storage);
+            let mut buf = Vec::new();
+            ks.write_payload(&mut buf).unwrap();
+            let back = KeyStore::read_payload(&mut buf.as_slice()).unwrap();
+            assert_eq!(back.storage(), storage);
+            assert_eq!((back.len(), back.dim()), (11, 8));
+            assert_eq!(back.to_tensor().data(), ks.to_tensor().data());
+        }
+        // corrupt tag
+        let mut buf = Vec::new();
+        artifact::w_u32(&mut buf, 9).unwrap();
+        assert!(KeyStore::read_payload(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn storage_knob_parses_and_prints() {
+        assert_eq!("f16".parse::<Storage>().unwrap(), Storage::F16);
+        assert_eq!("f32".parse::<Storage>().unwrap(), Storage::F32);
+        assert!("f64".parse::<Storage>().is_err());
+        assert_eq!(Storage::F16.to_string(), "f16");
+        assert_eq!(Storage::default(), Storage::F32);
+    }
+}

@@ -14,6 +14,7 @@ use anyhow::{ensure, Result};
 use crate::api::Effort;
 use crate::index::artifact;
 use crate::index::ivf::IvfIndex;
+use crate::index::keystore::{KeyStore, Storage};
 use crate::index::spec::{IndexSpec, LeanVecSpec};
 use crate::index::traits::{SearchResult, TopK, VectorIndex};
 use crate::tensor::{dot, gemm_nt_tile, pca_project, power_iteration_pca, Tensor};
@@ -24,7 +25,11 @@ pub struct LeanVecIndex {
     comps: Tensor,  // [d_low, d]
     mean: Vec<f32>, // [d]
     inner: IvfIndex,
-    keys: Tensor, // full-dim keys for re-ranking
+    /// Full-dim keys for re-ranking (f32 or compact f16 — the
+    /// `leanvec(storage=...)` knob: LeanVec's whole premise is that
+    /// full-precision rescoring memory dominates, so this is where the
+    /// compact storage pays off most).
+    keys: KeyStore,
     pub rerank: usize,
     /// Whether the projection was fitted on keys ∪ queries (spec echo).
     query_aware: bool,
@@ -32,12 +37,14 @@ pub struct LeanVecIndex {
 
 impl LeanVecIndex {
     /// Build with target dimension `d_low`; optional `queries` sample
-    /// makes the projection query-aware.
+    /// makes the projection query-aware. `storage` selects the re-rank
+    /// key precision.
     pub fn build(
         keys: &Tensor,
         d_low: usize,
         nlist: usize,
         queries: Option<&Tensor>,
+        storage: Storage,
         seed: u64,
     ) -> LeanVecIndex {
         let d = keys.row_width();
@@ -61,35 +68,41 @@ impl LeanVecIndex {
             comps,
             mean,
             inner,
-            keys: keys.clone(),
+            keys: KeyStore::new(keys.clone(), storage),
             rerank: 32,
             query_aware: queries.is_some(),
         }
     }
 
     /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
-    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<LeanVecIndex> {
+    /// Version-1 payloads store the re-rank keys as a bare f32 tensor;
+    /// version-2 payloads carry a storage-tagged [`KeyStore`].
+    pub(crate) fn read_payload(r: &mut dyn Read, version: u32) -> Result<LeanVecIndex> {
         let comps = artifact::r_tensor(r)?;
         let mean = artifact::r_f32s(r)?;
-        let keys = artifact::r_tensor(r)?;
+        let keys = if version < 2 {
+            KeyStore::F32(artifact::r_tensor(r)?)
+        } else {
+            KeyStore::read_payload(r)?
+        };
         let inner = IvfIndex::read_payload(r)?;
         // clamp as in ScannIndex::read_payload: rerank > len is
         // behaviorally identical to len, and a crafted huge value must
         // not reach TopK's preallocation
-        let rerank = (artifact::r_u64(r)? as usize).min(keys.rows().max(1));
+        let rerank = (artifact::r_u64(r)? as usize).min(keys.len().max(1));
         let query_aware = artifact::r_bool(r)?;
         let d_low = comps.rows();
-        let d = keys.row_width();
+        let d = keys.dim();
         ensure!(
             comps.row_width() == d
                 && mean.len() == d
                 && inner.dim() == d_low
-                && inner.len() == keys.rows(),
+                && inner.len() == keys.len(),
             "inconsistent LeanVec payload: d={d}, d_low={d_low}, {} mean, inner {}x{}, {} keys",
             mean.len(),
             inner.len(),
             inner.dim(),
-            keys.rows()
+            keys.len()
         );
         Ok(LeanVecIndex {
             d,
@@ -130,12 +143,14 @@ impl LeanVecIndex {
         low
     }
 
-    /// Stage 3 shared by the per-query and batched paths: exact
-    /// full-dimension re-rank of the reduced-space candidates.
+    /// Stage 3 shared by the per-query and batched paths: full-dimension
+    /// re-rank of the reduced-space candidates at the stored key
+    /// precision (exact for f32 storage; f16 rescoring rounds each key
+    /// element once but keeps the f32 accumulator).
     fn rerank_exact(&self, query: &[f32], cand: SearchResult, k: usize) -> SearchResult {
         let mut top = TopK::new(k);
         for &id in &cand.ids {
-            top.offer(dot(query, self.keys.row(id as usize)), id);
+            top.offer(self.keys.score(query, id as usize), id);
         }
         let (ids, scores) = top.into_sorted();
         let mut cost = cand.cost;
@@ -151,7 +166,7 @@ impl VectorIndex for LeanVecIndex {
     }
 
     fn len(&self) -> usize {
-        self.keys.rows()
+        self.keys.len()
     }
 
     fn dim(&self) -> usize {
@@ -214,13 +229,14 @@ impl VectorIndex for LeanVecIndex {
             d_low: Some(self.d_low),
             nlist: self.inner.nlist,
             query_aware: self.query_aware,
+            storage: self.keys.storage(),
         })
     }
 
     fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
         artifact::w_tensor(w, &self.comps)?;
         artifact::w_f32s(w, &self.mean)?;
-        artifact::w_tensor(w, &self.keys)?;
+        self.keys.write_payload(w)?;
         self.inner.write_payload(w)?;
         artifact::w_u64(w, self.rerank as u64)?;
         artifact::w_bool(w, self.query_aware)
@@ -244,7 +260,7 @@ mod tests {
     #[test]
     fn full_probe_recall_reasonable() {
         let keys = unit_keys(500, 32, 1);
-        let lv = LeanVecIndex::build(&keys, 16, 10, None, 2);
+        let lv = LeanVecIndex::build(&keys, 16, 10, None, Storage::F32, 2);
         let flat = FlatIndex::new(keys.clone());
         let q = unit_keys(40, 32, 3);
         let mut hits = 0;
@@ -261,7 +277,7 @@ mod tests {
     #[test]
     fn reduced_scan_flops_below_flat() {
         let keys = unit_keys(600, 64, 4);
-        let lv = LeanVecIndex::build(&keys, 16, 12, None, 5);
+        let lv = LeanVecIndex::build(&keys, 16, 12, None, Storage::F32, 5);
         let q = unit_keys(1, 64, 6);
         let res = lv.search_effort(q.row(0), 1, Effort::Probes(3));
         let flat_flops = (600 * 64 * 2) as u64;
@@ -272,7 +288,7 @@ mod tests {
     fn query_aware_projection_builds() {
         let keys = unit_keys(300, 32, 7);
         let queries = unit_keys(50, 32, 8);
-        let lv = LeanVecIndex::build(&keys, 8, 6, Some(&queries), 9);
+        let lv = LeanVecIndex::build(&keys, 8, 6, Some(&queries), Storage::F32, 9);
         let res = lv.search_effort(queries.row(0), 3, Effort::Probes(2));
         assert_eq!(res.ids.len(), 3);
     }
@@ -280,23 +296,53 @@ mod tests {
     #[test]
     fn batched_search_is_bit_identical_to_per_query() {
         let keys = unit_keys(300, 24, 13);
-        let lv = LeanVecIndex::build(&keys, 8, 6, None, 14);
         let q = unit_keys(7, 24, 15);
-        for effort in [Effort::Probes(2), Effort::Auto, Effort::Exhaustive] {
-            let batched = lv.search_batch_effort(&q, 4, effort);
-            for i in 0..7 {
-                let single = lv.search_effort(q.row(i), 4, effort);
-                assert_eq!(batched[i].ids, single.ids, "{effort:?} query {i}");
-                assert_eq!(batched[i].scores, single.scores, "{effort:?} query {i}");
-                assert_eq!(batched[i].cost, single.cost, "{effort:?} query {i}");
+        for storage in [Storage::F32, Storage::F16] {
+            let lv = LeanVecIndex::build(&keys, 8, 6, None, storage, 14);
+            for effort in [Effort::Probes(2), Effort::Auto, Effort::Exhaustive] {
+                let batched = lv.search_batch_effort(&q, 4, effort);
+                for i in 0..7 {
+                    let single = lv.search_effort(q.row(i), 4, effort);
+                    assert_eq!(batched[i].ids, single.ids, "{storage:?} {effort:?} query {i}");
+                    assert_eq!(
+                        batched[i].scores, single.scores,
+                        "{storage:?} {effort:?} query {i}"
+                    );
+                    assert_eq!(
+                        batched[i].cost, single.cost,
+                        "{storage:?} {effort:?} query {i}"
+                    );
+                }
             }
+        }
+    }
+
+    #[test]
+    fn f16_storage_rescoring_stays_close_to_f32() {
+        let keys = unit_keys(300, 32, 20);
+        let q = unit_keys(8, 32, 21);
+        let full = LeanVecIndex::build(&keys, 8, 6, None, Storage::F32, 22);
+        let compact = LeanVecIndex::build(&keys, 8, 6, None, Storage::F16, 22);
+        assert_eq!(
+            compact.spec().to_string(),
+            "leanvec(d_low=8,nlist=6,query_aware=false,storage=f16)"
+        );
+        for i in 0..8 {
+            let a = full.search_effort(q.row(i), 3, Effort::Exhaustive);
+            let b = compact.search_effort(q.row(i), 3, Effort::Exhaustive);
+            // same candidate pipeline, keys rounded once to binary16:
+            // scores differ only by that rounding
+            for (x, y) in a.scores.iter().zip(&b.scores) {
+                assert!((x - y).abs() <= 2e-2 * (1.0 + x.abs()), "query {i}: {x} vs {y}");
+            }
+            assert_eq!(a.cost, b.cost, "query {i}");
         }
     }
 
     #[test]
     fn exhaustive_effort_is_exact() {
         let keys = unit_keys(300, 32, 10);
-        let lv = LeanVecIndex::build(&keys, 8, 6, None, 11);
+        let lv = LeanVecIndex::build(&keys, 8, 6, None, Storage::F32, 11);
         let flat = FlatIndex::new(keys.clone());
         let q = unit_keys(10, 32, 12);
         for i in 0..10 {

@@ -28,6 +28,7 @@ pub mod artifact;
 pub mod catalog;
 pub mod flat;
 pub mod ivf;
+pub mod keystore;
 pub mod kmeans;
 pub mod leanvec;
 pub mod pq;
@@ -41,6 +42,7 @@ pub mod traits;
 
 pub use artifact::{load, load_from, save};
 pub use catalog::{Catalog, CatalogEntry};
+pub use keystore::{KeyStore, Storage};
 pub use segment::{Compactor, CompactorConfig, MutableCollection};
 pub use shard::ShardedIndex;
 pub use spec::{

@@ -3,10 +3,13 @@
 //! the ScaNN-analog backbone.
 //!
 //! Vectors are split into `m` subvectors of `dsub = d/m` dims; each
-//! subspace gets a 256-entry codebook (one byte per subvector). Scoring a
-//! query against a code is `m` table lookups after one table build of
-//! `m * 256 * dsub` multiply-adds per query (ADC — asymmetric distance
-//! computation).
+//! subspace gets a `2^bits`-entry codebook. At the default `bits=8`
+//! that is one byte per subvector (256 codewords); `bits=4` packs two
+//! subspace codes per byte (16 codewords), halving code storage.
+//! Scoring a query against a code is `m` table lookups after one table
+//! build of `m * 2^bits * dsub` multiply-adds per query (ADC —
+//! asymmetric distance computation). The code-matrix scan dispatches
+//! through [`crate::tensor::kernels`] (`adc_scan8`/`adc_scan4`).
 //!
 //! Anisotropic training reweights the k-means objective so error
 //! *parallel* to the data vector (which perturbs inner products with
@@ -22,29 +25,48 @@ use crate::api::Effort;
 use crate::index::artifact;
 use crate::index::spec::{IndexSpec, PqSpec};
 use crate::index::traits::{rerank_depth, SearchCost, SearchResult, TopK, VectorIndex};
-use crate::tensor::{dot, gemm_nt_tile, Tensor};
+use crate::tensor::{dot, gemm_nt_tile, kernels, Tensor};
 use crate::util::Rng;
 
 /// Trained product quantizer.
 pub struct Pq {
     pub m: usize,
     pub dsub: usize,
-    /// [m, 256, dsub] codebooks flattened.
+    /// Per-subspace code width in bits (8 or 4).
+    bits: usize,
+    /// [m, 2^bits, dsub] codebooks flattened.
     codebooks: Vec<f32>,
 }
 
+/// Codewords per subspace at the default 8-bit code width.
 pub const CODE_K: usize = 256;
 
 impl Pq {
-    /// Train on `x` [n, d]. `eta` > 1 enables anisotropic weighting
-    /// (parallel-error penalty); `eta = 1` is classic PQ.
+    /// Train on `x` [n, d] with the default 8-bit codes. `eta` > 1
+    /// enables anisotropic weighting (parallel-error penalty); `eta = 1`
+    /// is classic PQ.
     pub fn train(x: &Tensor, m: usize, iters: usize, eta: f32, seed: u64) -> Pq {
+        Self::train_with_bits(x, m, iters, eta, 8, seed)
+    }
+
+    /// [`Pq::train`] with an explicit per-subspace code width
+    /// (`bits` ∈ {4, 8}; the `bits=` spec knob).
+    pub fn train_with_bits(
+        x: &Tensor,
+        m: usize,
+        iters: usize,
+        eta: f32,
+        bits: usize,
+        seed: u64,
+    ) -> Pq {
         let (n, d) = (x.rows(), x.row_width());
         assert!(d % m == 0, "d={d} must divide into m={m} subspaces");
+        assert!(bits == 8 || bits == 4, "bits={bits} must be 4 or 8");
         let dsub = d / m;
-        let k = CODE_K.min(n.max(2));
+        let kk = 1usize << bits;
+        let k = kk.min(n.max(2));
         let mut rng = Rng::new(seed);
-        let mut codebooks = vec![0.0f32; m * CODE_K * dsub];
+        let mut codebooks = vec![0.0f32; m * kk * dsub];
 
         // Precompute per-vector norms for anisotropic weighting.
         let norms: Vec<f32> = (0..n)
@@ -57,7 +79,7 @@ impl Pq {
             for c in 0..k {
                 let pick = rng.below(n);
                 let src = &x.row(pick)[col0..col0 + dsub];
-                codebooks[(sub * CODE_K + c) * dsub..][..dsub].copy_from_slice(src);
+                codebooks[(sub * kk + c) * dsub..][..dsub].copy_from_slice(src);
             }
             let mut assign = vec![0usize; n];
             for _ in 0..iters {
@@ -66,7 +88,7 @@ impl Pq {
                     let v = &x.row(i)[col0..col0 + dsub];
                     let mut best = (0usize, f32::MAX);
                     for c in 0..k {
-                        let cw = &codebooks[(sub * CODE_K + c) * dsub..][..dsub];
+                        let cw = &codebooks[(sub * kk + c) * dsub..][..dsub];
                         let err = Self::weighted_err(v, cw, x.row(i), col0, norms[i], eta);
                         if err < best.1 {
                             best = (c, err);
@@ -90,18 +112,62 @@ impl Pq {
                 for c in 0..k {
                     if wsum[c] > 0.0 {
                         for j in 0..dsub {
-                            codebooks[(sub * CODE_K + c) * dsub + j] =
+                            codebooks[(sub * kk + c) * dsub + j] =
                                 (sums[c * dsub + j] / wsum[c]) as f32;
                         }
                     } else {
                         let pick = rng.below(n);
                         let src = &x.row(pick)[col0..col0 + dsub];
-                        codebooks[(sub * CODE_K + c) * dsub..][..dsub].copy_from_slice(src);
+                        codebooks[(sub * kk + c) * dsub..][..dsub].copy_from_slice(src);
                     }
                 }
             }
         }
-        Pq { m, dsub, codebooks }
+        Pq {
+            m,
+            dsub,
+            bits,
+            codebooks,
+        }
+    }
+
+    /// Per-subspace code width in bits (8 or 4).
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Codewords per subspace (`2^bits`).
+    #[inline]
+    pub fn kk(&self) -> usize {
+        1 << self.bits
+    }
+
+    /// Bytes per encoded vector: `m` at 8 bits, `⌈m/2⌉` at 4 bits
+    /// (two subspace codes per byte, low nibble first).
+    #[inline]
+    pub fn code_width(&self) -> usize {
+        match self.bits {
+            8 => self.m,
+            _ => self.m.div_ceil(2),
+        }
+    }
+
+    /// f32 entries in one ADC table: `m * 2^bits`.
+    #[inline]
+    pub fn table_width(&self) -> usize {
+        self.m * self.kk()
+    }
+
+    /// The code of subspace `sub` inside one encoded row.
+    #[inline]
+    fn code_at(&self, code: &[u8], sub: usize) -> usize {
+        match self.bits {
+            8 => code[sub] as usize,
+            _ => {
+                let byte = code[sub >> 1];
+                (if sub & 1 == 0 { byte & 0x0F } else { byte >> 4 }) as usize
+            }
+        }
     }
 
     /// Anisotropic quantization error for a candidate codeword: decompose
@@ -132,18 +198,21 @@ impl Pq {
         eta * par + orth
     }
 
-    /// Encode all rows of `x` -> [n, m] bytes.
+    /// Encode all rows of `x` -> [n, code_width] bytes (nibble-packed
+    /// at 4 bits).
     pub fn encode(&self, x: &Tensor) -> Vec<u8> {
         let (n, d) = (x.rows(), x.row_width());
         assert_eq!(d, self.m * self.dsub);
-        let mut codes = vec![0u8; n * self.m];
+        let kk = self.kk();
+        let cw_len = self.code_width();
+        let mut codes = vec![0u8; n * cw_len];
         for i in 0..n {
             for sub in 0..self.m {
                 let col0 = sub * self.dsub;
                 let v = &x.row(i)[col0..col0 + self.dsub];
                 let mut best = (0usize, f32::MAX);
-                for c in 0..CODE_K {
-                    let cw = &self.codebooks[(sub * CODE_K + c) * self.dsub..][..self.dsub];
+                for c in 0..kk {
+                    let cw = &self.codebooks[(sub * kk + c) * self.dsub..][..self.dsub];
                     let mut e = 0.0;
                     for j in 0..self.dsub {
                         let r = v[j] - cw[j];
@@ -153,103 +222,132 @@ impl Pq {
                         best = (c, e);
                     }
                 }
-                codes[i * self.m + sub] = best.0 as u8;
+                match self.bits {
+                    8 => codes[i * cw_len + sub] = best.0 as u8,
+                    _ => {
+                        let slot = &mut codes[i * cw_len + (sub >> 1)];
+                        if sub & 1 == 0 {
+                            *slot |= best.0 as u8;
+                        } else {
+                            *slot |= (best.0 as u8) << 4;
+                        }
+                    }
+                }
             }
         }
         codes
     }
 
-    /// Build the ADC lookup table for a query: [m, 256] inner products.
+    /// Build the ADC lookup table for a query: [m, 2^bits] inner
+    /// products.
     pub fn adc_table(&self, query: &[f32]) -> Vec<f32> {
         assert_eq!(query.len(), self.m * self.dsub);
-        let mut table = vec![0.0f32; self.m * CODE_K];
+        let kk = self.kk();
+        let mut table = vec![0.0f32; self.m * kk];
         for sub in 0..self.m {
             let q = &query[sub * self.dsub..(sub + 1) * self.dsub];
-            for c in 0..CODE_K {
-                let cw = &self.codebooks[(sub * CODE_K + c) * self.dsub..][..self.dsub];
-                table[sub * CODE_K + c] = dot(q, cw);
+            for c in 0..kk {
+                let cw = &self.codebooks[(sub * kk + c) * self.dsub..][..self.dsub];
+                table[sub * kk + c] = dot(q, cw);
             }
         }
         table
     }
 
-    /// Build the ADC tables for a whole query batch — `[b, m*256]`
+    /// Build the ADC tables for a whole query batch — `[b, m*2^bits]`
     /// rows, each laid out exactly like one [`Pq::adc_table`] — with
-    /// one [`gemm_nt_tile`] per subspace over the 256 codewords, so a
+    /// one [`gemm_nt_tile`] per subspace over the codewords, so a
     /// subspace codebook is streamed once per *batch* instead of once
     /// per query. Scores go through the same `dot` as `adc_table`, so
     /// each row is bit-identical to the per-query table.
     pub fn adc_tables_batch(&self, queries: &Tensor) -> Vec<f32> {
         let b = queries.rows();
-        let (m, dsub) = (self.m, self.dsub);
+        let (m, dsub, kk) = (self.m, self.dsub, self.kk());
         assert_eq!(queries.row_width(), m * dsub);
-        let mut tables = vec![0.0f32; b * m * CODE_K];
+        let mut tables = vec![0.0f32; b * m * kk];
         let mut qsub = vec![0.0f32; b * dsub];
-        let mut block = vec![0.0f32; b * CODE_K];
+        let mut block = vec![0.0f32; b * kk];
         for sub in 0..m {
             for q in 0..b {
                 qsub[q * dsub..(q + 1) * dsub]
                     .copy_from_slice(&queries.row(q)[sub * dsub..(sub + 1) * dsub]);
             }
-            let cb = &self.codebooks[sub * CODE_K * dsub..(sub + 1) * CODE_K * dsub];
+            let cb = &self.codebooks[sub * kk * dsub..(sub + 1) * kk * dsub];
             gemm_nt_tile(&qsub, cb, dsub, &mut block);
             for q in 0..b {
-                tables[q * m * CODE_K + sub * CODE_K..][..CODE_K]
-                    .copy_from_slice(&block[q * CODE_K..(q + 1) * CODE_K]);
+                tables[q * m * kk + sub * kk..][..kk]
+                    .copy_from_slice(&block[q * kk..(q + 1) * kk]);
             }
         }
         tables
     }
 
     /// Approximate inner product of the query (via its ADC table) with a
-    /// stored code.
+    /// stored code, through the dispatched scan kernel for this code
+    /// width.
     #[inline]
     pub fn adc_score(&self, table: &[f32], code: &[u8]) -> f32 {
-        let mut s = 0.0;
-        for sub in 0..self.m {
-            s += table[sub * CODE_K + code[sub] as usize];
+        match self.bits {
+            8 => kernels::adc_scan8(table, code),
+            _ => kernels::adc_scan4(table, code, self.m),
         }
-        s
     }
 
     /// FLOPs to build one ADC table.
     pub fn table_flops(&self) -> u64 {
-        (self.m * CODE_K * self.dsub * 2) as u64
+        (self.table_width() * self.dsub * 2) as u64
     }
 
     /// Reconstruct a vector from its code (testing/diagnostics).
     pub fn decode(&self, code: &[u8]) -> Vec<f32> {
+        let kk = self.kk();
         let mut out = vec![0.0f32; self.m * self.dsub];
         for sub in 0..self.m {
-            let cw = &self.codebooks[(sub * CODE_K + code[sub] as usize) * self.dsub..][..self.dsub];
+            let c = self.code_at(code, sub);
+            let cw = &self.codebooks[(sub * kk + c) * self.dsub..][..self.dsub];
             out[sub * self.dsub..(sub + 1) * self.dsub].copy_from_slice(cw);
         }
         out
     }
 
     /// Serialize the trained quantizer (shared by PqIndex and ScannIndex
-    /// artifacts).
+    /// artifacts). Always writes the current (v2) layout, which adds the
+    /// `bits` field.
     pub(crate) fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
         artifact::w_u64(w, self.m as u64)?;
         artifact::w_u64(w, self.dsub as u64)?;
+        artifact::w_u64(w, self.bits as u64)?;
         artifact::w_f32s(w, &self.codebooks)
     }
 
     /// Deserialize a trained quantizer from an artifact payload.
-    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<Pq> {
+    /// Version-1 payloads predate the `bits` field and are always 8-bit.
+    pub(crate) fn read_payload(r: &mut dyn Read, version: u32) -> Result<Pq> {
         let m = artifact::r_u64(r)? as usize;
         let dsub = artifact::r_u64(r)? as usize;
+        let bits = if version < 2 {
+            8
+        } else {
+            artifact::r_u64(r)? as usize
+        };
         ensure!(
             (1..=65_536).contains(&m) && (1..=65_536).contains(&dsub),
             "implausible PQ dims m={m} dsub={dsub}"
         );
+        ensure!(bits == 8 || bits == 4, "implausible PQ bits={bits}");
         let codebooks = artifact::r_f32s(r)?;
+        let kk = 1usize << bits;
         ensure!(
-            codebooks.len() == m * CODE_K * dsub,
-            "PQ codebook size {} != m*{CODE_K}*dsub ({m}*{CODE_K}*{dsub})",
+            codebooks.len() == m * kk * dsub,
+            "PQ codebook size {} != m*{kk}*dsub ({m}*{kk}*{dsub})",
             codebooks.len()
         );
-        Ok(Pq { m, dsub, codebooks })
+        Ok(Pq {
+            m,
+            dsub,
+            bits,
+            codebooks,
+        })
     }
 }
 
@@ -262,7 +360,7 @@ impl Pq {
 pub struct PqIndex {
     d: usize,
     pq: Pq,
-    codes: Vec<u8>, // [n, m]
+    codes: Vec<u8>, // [n, code_width]
     /// Full-precision keys for exact re-ranking.
     keys: Tensor,
     /// Default re-rank depth under `Effort::Auto` / `Effort::Probes`.
@@ -274,8 +372,15 @@ pub struct PqIndex {
 }
 
 impl PqIndex {
-    pub fn build(keys: &Tensor, m: usize, iters: usize, eta: f32, seed: u64) -> PqIndex {
-        let pq = Pq::train(keys, m, iters, eta, seed);
+    pub fn build(
+        keys: &Tensor,
+        m: usize,
+        iters: usize,
+        eta: f32,
+        bits: usize,
+        seed: u64,
+    ) -> PqIndex {
+        let pq = Pq::train_with_bits(keys, m, iters, eta, bits, seed);
         let codes = pq.encode(keys);
         PqIndex {
             d: keys.row_width(),
@@ -289,9 +394,9 @@ impl PqIndex {
     }
 
     /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
-    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<PqIndex> {
+    pub(crate) fn read_payload(r: &mut dyn Read, version: u32) -> Result<PqIndex> {
         let d = artifact::r_u64(r)? as usize;
-        let pq = Pq::read_payload(r)?;
+        let pq = Pq::read_payload(r, version)?;
         let codes = artifact::r_u8s(r)?;
         let keys = artifact::r_tensor(r)?;
         let rerank = artifact::r_u64(r)? as usize;
@@ -300,10 +405,11 @@ impl PqIndex {
         ensure!(
             d == pq.m * pq.dsub
                 && keys.row_width() == d
-                && codes.len() == keys.rows() * pq.m,
-            "inconsistent PQ payload: d={d}, m={}, dsub={}, {} codes, {} keys",
+                && codes.len() == keys.rows() * pq.code_width(),
+            "inconsistent PQ payload: d={d}, m={}, dsub={}, bits={}, {} codes, {} keys",
             pq.m,
             pq.dsub,
+            pq.bits,
             codes.len(),
             keys.rows()
         );
@@ -348,10 +454,11 @@ impl VectorIndex for PqIndex {
     }
 
     fn len(&self) -> usize {
-        if self.pq.m == 0 {
+        let cw = self.pq.code_width();
+        if cw == 0 {
             0
         } else {
-            self.codes.len() / self.pq.m
+            self.codes.len() / cw
         }
     }
 
@@ -361,13 +468,13 @@ impl VectorIndex for PqIndex {
 
     fn search_effort(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult {
         let n = self.len();
-        let m = self.pq.m;
+        let cw = self.pq.code_width();
         let rerank = rerank_depth(n, k, self.rerank, effort);
         // 1. ADC scan of every code
         let table = self.pq.adc_table(query);
         let mut cand = TopK::new(rerank);
         for i in 0..n {
-            let score = self.pq.adc_score(&table, &self.codes[i * m..(i + 1) * m]);
+            let score = self.pq.adc_score(&table, &self.codes[i * cw..(i + 1) * cw]);
             cand.offer(score, i as u32);
         }
         // 2. exact re-rank
@@ -385,7 +492,7 @@ impl VectorIndex for PqIndex {
             return Vec::new();
         }
         let n = self.len();
-        let m = self.pq.m;
+        let cw = self.pq.code_width();
         let rerank = rerank_depth(n, k, self.rerank, effort);
         // Exhaustive-depth rerank would hold `b` candidate heaps of
         // capacity n at once; the per-row scan is bit-identical and
@@ -396,10 +503,10 @@ impl VectorIndex for PqIndex {
                 .collect();
         }
         let tables = self.pq.adc_tables_batch(queries);
-        let tw = m * CODE_K;
+        let tw = self.pq.table_width();
         let mut cands: Vec<TopK> = (0..b).map(|_| TopK::new(rerank)).collect();
         for i in 0..n {
-            let code = &self.codes[i * m..(i + 1) * m];
+            let code = &self.codes[i * cw..(i + 1) * cw];
             for (q, cand) in cands.iter_mut().enumerate() {
                 cand.offer(self.pq.adc_score(&tables[q * tw..(q + 1) * tw], code), i as u32);
             }
@@ -416,6 +523,7 @@ impl VectorIndex for PqIndex {
             m: Some(self.pq.m),
             iters: self.iters,
             eta: self.eta,
+            bits: self.pq.bits,
         })
     }
 
@@ -459,6 +567,61 @@ mod tests {
         }
         let mae = err / (20.0 * 500.0);
         assert!(mae < 0.15, "ADC mean abs err {mae}");
+    }
+
+    #[test]
+    fn four_bit_codes_pack_and_score() {
+        let keys = unit_keys(400, 32, 30);
+        let pq = Pq::train_with_bits(&keys, 8, 8, 1.0, 4, 31);
+        assert_eq!((pq.bits(), pq.kk()), (4, 16));
+        assert_eq!(pq.code_width(), 4); // 8 subspaces packed 2/byte
+        assert_eq!(pq.table_width(), 8 * 16);
+        let codes = pq.encode(&keys);
+        assert_eq!(codes.len(), 400 * 4);
+        let q = unit_keys(10, 32, 32);
+        let cw = pq.code_width();
+        let mut err = 0.0f64;
+        for i in 0..10 {
+            let table = pq.adc_table(q.row(i));
+            assert_eq!(table.len(), pq.table_width());
+            for kidx in 0..400 {
+                let code = &codes[kidx * cw..(kidx + 1) * cw];
+                let approx = pq.adc_score(&table, code);
+                // adc_score must equal the manual table walk over
+                // unpacked nibbles (scalar reference semantics)
+                let mut manual = 0.0f32;
+                for sub in 0..8 {
+                    let byte = code[sub >> 1];
+                    let nib = if sub & 1 == 0 { byte & 0x0F } else { byte >> 4 };
+                    manual += table[sub * 16 + nib as usize];
+                }
+                assert!((approx - manual).abs() <= 1e-4, "key {kidx}");
+                err += ((approx - dot(q.row(i), keys.row(kidx))) as f64).abs();
+            }
+        }
+        // 16 codewords are coarse, but still informative
+        let mae = err / (10.0 * 400.0);
+        assert!(mae < 0.3, "4-bit ADC mean abs err {mae}");
+        // decode round-trips through the packed representation
+        let rec = pq.decode(&codes[..cw]);
+        assert_eq!(rec.len(), 32);
+    }
+
+    #[test]
+    fn odd_m_four_bit_uses_padded_final_byte() {
+        let keys = unit_keys(200, 15, 33);
+        let pq = Pq::train_with_bits(&keys, 5, 6, 1.0, 4, 34);
+        assert_eq!(pq.code_width(), 3); // ⌈5/2⌉
+        let codes = pq.encode(&keys);
+        assert_eq!(codes.len(), 200 * 3);
+        // the high nibble of the last byte is padding and stays zero
+        for i in 0..200 {
+            assert_eq!(codes[i * 3 + 2] >> 4, 0, "row {i}");
+        }
+        let q = unit_keys(1, 15, 35);
+        let table = pq.adc_table(q.row(0));
+        let s = pq.adc_score(&table, &codes[..3]);
+        assert!(s.is_finite());
     }
 
     #[test]
@@ -510,56 +673,69 @@ mod tests {
         let keys = unit_keys(300, 16, 9);
         let pq = Pq::train(&keys, 4, 4, 1.0, 10);
         assert_eq!(pq.table_flops(), (4 * 256 * 4 * 2) as u64);
+        let pq4 = Pq::train_with_bits(&keys, 4, 4, 1.0, 4, 10);
+        assert_eq!(pq4.table_flops(), (4 * 16 * 4 * 2) as u64);
     }
 
     #[test]
     fn pq_index_exhaustive_is_exact() {
         let keys = unit_keys(400, 32, 11);
-        let idx = PqIndex::build(&keys, 8, 8, 1.0, 12);
-        let q = unit_keys(10, 32, 13);
-        for i in 0..10 {
-            let res = idx.search_effort(q.row(i), 1, Effort::Exhaustive);
-            // oracle: exact argmax
-            let mut best = (0u32, f32::NEG_INFINITY);
-            for kidx in 0..400 {
-                let s = dot(q.row(i), keys.row(kidx));
-                if s > best.1 {
-                    best = (kidx as u32, s);
+        for bits in [8usize, 4] {
+            let idx = PqIndex::build(&keys, 8, 8, 1.0, bits, 12);
+            let q = unit_keys(10, 32, 13);
+            for i in 0..10 {
+                let res = idx.search_effort(q.row(i), 1, Effort::Exhaustive);
+                // oracle: exact argmax — Exhaustive re-ranks everything
+                // against the exact f32 keys, so even 16-codeword ADC
+                // cannot miss it
+                let mut best = (0u32, f32::NEG_INFINITY);
+                for kidx in 0..400 {
+                    let s = dot(q.row(i), keys.row(kidx));
+                    if s > best.1 {
+                        best = (kidx as u32, s);
+                    }
                 }
+                assert_eq!(res.ids[0], best.0, "bits={bits} query {i}");
+                assert!((res.scores[0] - best.1).abs() < 1e-5);
             }
-            assert_eq!(res.ids[0], best.0, "query {i}");
-            assert!((res.scores[0] - best.1).abs() < 1e-5);
         }
     }
 
     #[test]
     fn batch_adc_tables_match_per_query_tables() {
         let keys = unit_keys(300, 32, 20);
-        let pq = Pq::train(&keys, 8, 6, 1.0, 21);
-        let q = unit_keys(9, 32, 22);
-        let tables = pq.adc_tables_batch(&q);
-        let tw = 8 * CODE_K;
-        for i in 0..9 {
-            assert_eq!(
-                &tables[i * tw..(i + 1) * tw],
-                &pq.adc_table(q.row(i))[..],
-                "query {i}"
-            );
+        for bits in [8usize, 4] {
+            let pq = Pq::train_with_bits(&keys, 8, 6, 1.0, bits, 21);
+            let q = unit_keys(9, 32, 22);
+            let tables = pq.adc_tables_batch(&q);
+            let tw = pq.table_width();
+            for i in 0..9 {
+                assert_eq!(
+                    &tables[i * tw..(i + 1) * tw],
+                    &pq.adc_table(q.row(i))[..],
+                    "bits={bits} query {i}"
+                );
+            }
         }
     }
 
     #[test]
     fn batched_search_is_bit_identical_to_per_query() {
         let keys = unit_keys(250, 16, 23);
-        let idx = PqIndex::build(&keys, 4, 6, 1.0, 24);
-        let q = unit_keys(6, 16, 25);
-        for effort in [Effort::Auto, Effort::Probes(3), Effort::Exhaustive] {
-            let batched = idx.search_batch_effort(&q, 4, effort);
-            for i in 0..6 {
-                let single = idx.search_effort(q.row(i), 4, effort);
-                assert_eq!(batched[i].ids, single.ids, "{effort:?} query {i}");
-                assert_eq!(batched[i].scores, single.scores, "{effort:?} query {i}");
-                assert_eq!(batched[i].cost, single.cost, "{effort:?} query {i}");
+        for bits in [8usize, 4] {
+            let idx = PqIndex::build(&keys, 4, 6, 1.0, bits, 24);
+            let q = unit_keys(6, 16, 25);
+            for effort in [Effort::Auto, Effort::Probes(3), Effort::Exhaustive] {
+                let batched = idx.search_batch_effort(&q, 4, effort);
+                for i in 0..6 {
+                    let single = idx.search_effort(q.row(i), 4, effort);
+                    assert_eq!(batched[i].ids, single.ids, "bits={bits} {effort:?} query {i}");
+                    assert_eq!(
+                        batched[i].scores, single.scores,
+                        "bits={bits} {effort:?} query {i}"
+                    );
+                    assert_eq!(batched[i].cost, single.cost, "bits={bits} {effort:?} query {i}");
+                }
             }
         }
     }
@@ -567,7 +743,7 @@ mod tests {
     #[test]
     fn pq_index_effort_scales_rerank_cost() {
         let keys = unit_keys(300, 16, 14);
-        let idx = PqIndex::build(&keys, 4, 6, 1.0, 15);
+        let idx = PqIndex::build(&keys, 4, 6, 1.0, 8, 15);
         let q = unit_keys(1, 16, 16);
         let cheap = idx.search_effort(q.row(0), 1, Effort::Auto).cost;
         let scaled = idx.search_effort(q.row(0), 1, Effort::Probes(4)).cost;

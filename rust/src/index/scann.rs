@@ -18,7 +18,7 @@ use crate::api::Effort;
 use crate::index::artifact;
 use crate::index::ivf::{invert_to_probers, rank_cells_tensor};
 use crate::index::kmeans::KMeans;
-use crate::index::pq::{Pq, CODE_K};
+use crate::index::pq::Pq;
 use crate::index::spec::{IndexSpec, ScannSpec};
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
 use crate::tensor::{dot, Tensor};
@@ -43,13 +43,15 @@ pub struct ScannIndex {
 
 impl ScannIndex {
     /// Build: `nlist` coarse cells (IVF-default Lloyd schedule), `m` PQ
-    /// subspaces trained for `iters` iterations at anisotropy `eta`.
+    /// subspaces trained for `iters` iterations at anisotropy `eta`,
+    /// with `bits`-wide codes (8 default, 4 packs two per byte).
     pub fn build(
         keys: &Tensor,
         nlist: usize,
         m: usize,
         iters: usize,
         eta: f32,
+        bits: usize,
         seed: u64,
     ) -> ScannIndex {
         let n = keys.rows();
@@ -57,7 +59,7 @@ impl ScannIndex {
         let km = KMeans::fit(keys, nlist, 15, seed);
         // PQ trained on residual-free vectors (unit-norm data): simpler
         // and adequate at this scale; anisotropy is the differentiator.
-        let pq = Pq::train(keys, m, iters, eta, seed ^ 0x5CA);
+        let pq = Pq::train_with_bits(keys, m, iters, eta, bits, seed ^ 0x5CA);
 
         let mut counts = vec![0usize; nlist];
         for &a in &km.assign {
@@ -94,13 +96,14 @@ impl ScannIndex {
     }
 
     /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
-    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<ScannIndex> {
+    /// Version-1 payloads carry an 8-bit-only [`Pq`].
+    pub(crate) fn read_payload(r: &mut dyn Read, version: u32) -> Result<ScannIndex> {
         let centroids = artifact::r_tensor(r)?;
         let packed = artifact::r_tensor(r)?;
         let codes = artifact::r_u8s(r)?;
         let ids = artifact::r_u32s(r)?;
         let offsets = artifact::r_usizes(r)?;
-        let pq = Pq::read_payload(r)?;
+        let pq = Pq::read_payload(r, version)?;
         // rerank > len behaves identically to len (at most len candidates
         // exist), so clamping keeps search semantics while preventing a
         // crafted huge value from blowing up TopK's preallocation
@@ -114,7 +117,7 @@ impl ScannIndex {
                 && centroids.row_width() == d
                 && d == pq.m * pq.dsub
                 && packed.rows() == ids.len()
-                && codes.len() == ids.len() * pq.m
+                && codes.len() == ids.len() * pq.code_width()
                 && offsets.len() == nlist + 1
                 && offsets.last().copied() == Some(ids.len())
                 && offsets.windows(2).all(|w| w[0] <= w[1]),
@@ -151,13 +154,15 @@ impl ScannIndex {
 
         // 2. ADC scan of probed cells
         let table = self.pq.adc_table(query);
-        let m = self.pq.m;
+        let cw = self.pq.code_width();
         let mut cand = TopK::new(rerank.max(k));
         let mut scanned = 0u64;
         for &cell in &cells {
             let (s, e) = (self.offsets[cell as usize], self.offsets[cell as usize + 1]);
             for pos in s..e {
-                let score = self.pq.adc_score(&table, &self.codes[pos * m..(pos + 1) * m]);
+                let score = self
+                    .pq
+                    .adc_score(&table, &self.codes[pos * cw..(pos + 1) * cw]);
                 cand.offer(score, pos as u32);
             }
             scanned += (e - s) as u64;
@@ -256,8 +261,8 @@ impl VectorIndex for ScannIndex {
         let probers = invert_to_probers(&cells, self.nlist);
         // 2. grouped ADC scan with per-batch tables
         let tables = self.pq.adc_tables_batch(queries);
-        let m = self.pq.m;
-        let tw = m * CODE_K;
+        let cw = self.pq.code_width();
+        let tw = self.pq.table_width();
         let mut cands: Vec<TopK> = (0..b).map(|_| TopK::new(rerank.max(k))).collect();
         let mut scanned = vec![0u64; b];
         for (cell, qs) in probers.iter().enumerate() {
@@ -266,7 +271,7 @@ impl VectorIndex for ScannIndex {
             }
             let (s, e) = (self.offsets[cell], self.offsets[cell + 1]);
             for pos in s..e {
-                let code = &self.codes[pos * m..(pos + 1) * m];
+                let code = &self.codes[pos * cw..(pos + 1) * cw];
                 for &q in qs {
                     let q = q as usize;
                     cands[q].offer(
@@ -293,6 +298,7 @@ impl VectorIndex for ScannIndex {
             m: Some(self.pq.m),
             iters: self.iters,
             eta: self.eta,
+            bits: self.pq.bits(),
         })
     }
 
@@ -326,7 +332,7 @@ mod tests {
     #[test]
     fn high_probe_recall_reasonable() {
         let keys = unit_keys(600, 32, 1);
-        let scann = ScannIndex::build(&keys, 12, 8, 10, 4.0, 2);
+        let scann = ScannIndex::build(&keys, 12, 8, 10, 4.0, 8, 2);
         let flat = FlatIndex::new(keys.clone());
         let q = unit_keys(40, 32, 3);
         let mut hits = 0;
@@ -342,14 +348,19 @@ mod tests {
 
     #[test]
     fn exhaustive_effort_is_exact() {
+        // holds for both code widths: Exhaustive re-ranks every scanned
+        // candidate against the exact f32 keys, so even 16-codeword ADC
+        // cannot drop the true top-k
         let keys = unit_keys(400, 32, 10);
-        let scann = ScannIndex::build(&keys, 8, 8, 10, 4.0, 11);
         let flat = FlatIndex::new(keys.clone());
         let q = unit_keys(15, 32, 12);
-        for i in 0..15 {
-            let a = scann.search_effort(q.row(i), 3, Effort::Exhaustive);
-            let b = flat.search_effort(q.row(i), 3, Effort::Exhaustive);
-            assert_eq!(a.ids, b.ids, "query {i}");
+        for bits in [8usize, 4] {
+            let scann = ScannIndex::build(&keys, 8, 8, 10, 4.0, bits, 11);
+            for i in 0..15 {
+                let a = scann.search_effort(q.row(i), 3, Effort::Exhaustive);
+                let b = flat.search_effort(q.row(i), 3, Effort::Exhaustive);
+                assert_eq!(a.ids, b.ids, "bits={bits} query {i}");
+            }
         }
     }
 
@@ -358,7 +369,7 @@ mod tests {
         // ADC scoring must cost far fewer flops than exact scan at the
         // same number of keys visited.
         let keys = unit_keys(800, 32, 4);
-        let scann = ScannIndex::build(&keys, 8, 8, 10, 4.0, 5);
+        let scann = ScannIndex::build(&keys, 8, 8, 10, 4.0, 8, 5);
         let q = unit_keys(1, 32, 6);
         let res = scann.search_effort(q.row(0), 1, Effort::Probes(8)); // all cells
         let flat_flops = (800 * 32 * 2) as u64;
@@ -373,15 +384,23 @@ mod tests {
     #[test]
     fn batched_search_is_bit_identical_to_per_query() {
         let keys = unit_keys(300, 16, 13);
-        let scann = ScannIndex::build(&keys, 6, 4, 8, 4.0, 14);
         let q = unit_keys(7, 16, 15);
-        for effort in [Effort::Probes(2), Effort::Auto, Effort::Exhaustive] {
-            let batched = scann.search_batch_effort(&q, 4, effort);
-            for i in 0..7 {
-                let single = scann.search_effort(q.row(i), 4, effort);
-                assert_eq!(batched[i].ids, single.ids, "{effort:?} query {i}");
-                assert_eq!(batched[i].scores, single.scores, "{effort:?} query {i}");
-                assert_eq!(batched[i].cost, single.cost, "{effort:?} query {i}");
+        for bits in [8usize, 4] {
+            let scann = ScannIndex::build(&keys, 6, 4, 8, 4.0, bits, 14);
+            for effort in [Effort::Probes(2), Effort::Auto, Effort::Exhaustive] {
+                let batched = scann.search_batch_effort(&q, 4, effort);
+                for i in 0..7 {
+                    let single = scann.search_effort(q.row(i), 4, effort);
+                    assert_eq!(batched[i].ids, single.ids, "bits={bits} {effort:?} query {i}");
+                    assert_eq!(
+                        batched[i].scores, single.scores,
+                        "bits={bits} {effort:?} query {i}"
+                    );
+                    assert_eq!(
+                        batched[i].cost, single.cost,
+                        "bits={bits} {effort:?} query {i}"
+                    );
+                }
             }
         }
     }
@@ -389,7 +408,7 @@ mod tests {
     #[test]
     fn results_sorted_and_unique() {
         let keys = unit_keys(300, 16, 7);
-        let scann = ScannIndex::build(&keys, 6, 4, 10, 4.0, 8);
+        let scann = ScannIndex::build(&keys, 6, 4, 10, 4.0, 8, 8);
         let q = unit_keys(1, 16, 9);
         let res = scann.search_effort(q.row(0), 8, Effort::Probes(3));
         for w in res.scores.windows(2) {

@@ -14,6 +14,7 @@ use std::fmt;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use crate::index::keystore::Storage;
 use crate::index::{flat, ivf, leanvec, pq, scann, shard, soar, sq, VectorIndex, BACKBONES};
 use crate::tensor::Tensor;
 
@@ -40,9 +41,13 @@ impl BuildCtx<'_> {
     }
 }
 
-/// Exhaustive scan; nothing to configure.
+/// Exhaustive scan. `storage` selects the key-matrix precision
+/// (`f32` default, `f16` compact rows scored through the dequantizing
+/// kernel).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub struct FlatSpec;
+pub struct FlatSpec {
+    pub storage: Storage,
+}
 
 /// IVF-Flat: `nlist` coarse cells, `iters` Lloyd iterations.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -62,12 +67,15 @@ impl Default for IvfSpec {
 
 /// Flat product quantization: `m` subspaces (`None` = largest of
 /// 8/4/2/1 dividing the key dim), `iters` codebook Lloyd iterations,
-/// `eta` anisotropic parallel-error weight (`1` = classic PQ).
+/// `eta` anisotropic parallel-error weight (`1` = classic PQ), `bits`
+/// per subspace code (8 = 256 codewords, the default; 4 = 16 codewords
+/// packed two per byte, halving code storage).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PqSpec {
     pub m: Option<usize>,
     pub iters: usize,
     pub eta: f32,
+    pub bits: usize,
 }
 
 impl Default for PqSpec {
@@ -76,6 +84,7 @@ impl Default for PqSpec {
             m: None,
             iters: 10,
             eta: 1.0,
+            bits: 8,
         }
     }
 }
@@ -85,13 +94,15 @@ impl Default for PqSpec {
 pub struct SqSpec;
 
 /// ScaNN analog: IVF cells + anisotropic PQ scoring. `iters` are the PQ
-/// codebook iterations (the coarse quantizer uses the IVF default).
+/// codebook iterations (the coarse quantizer uses the IVF default);
+/// `bits` is the per-subspace code width as in [`PqSpec`].
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ScannSpec {
     pub nlist: usize,
     pub m: Option<usize>,
     pub iters: usize,
     pub eta: f32,
+    pub bits: usize,
 }
 
 impl Default for ScannSpec {
@@ -101,6 +112,7 @@ impl Default for ScannSpec {
             m: None,
             iters: 10,
             eta: 4.0,
+            bits: 8,
         }
     }
 }
@@ -126,11 +138,13 @@ impl Default for SoarSpec {
 /// [`leanvec_target_dim`]), IVF in the reduced space, full-dim re-rank.
 /// `query_aware` fits the projection on keys ∪ sample queries when the
 /// build context provides a sample.
+/// `storage` selects the precision of the full-dim re-rank rows.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LeanVecSpec {
     pub d_low: Option<usize>,
     pub nlist: usize,
     pub query_aware: bool,
+    pub storage: Storage,
 }
 
 impl Default for LeanVecSpec {
@@ -139,6 +153,7 @@ impl Default for LeanVecSpec {
             d_low: None,
             nlist: DEFAULT_NLIST,
             query_aware: true,
+            storage: Storage::F32,
         }
     }
 }
@@ -193,7 +208,7 @@ impl Default for ShardedSpec {
         ShardedSpec {
             shards: 8,
             assign: ShardAssign::RoundRobin,
-            inner: Box::new(IndexSpec::Flat(FlatSpec)),
+            inner: Box::new(IndexSpec::Flat(FlatSpec::default())),
         }
     }
 }
@@ -267,7 +282,7 @@ impl IndexSpec {
     /// The default spec for a backbone name.
     pub fn default_for(name: &str) -> Result<IndexSpec> {
         Ok(match name {
-            "flat" => IndexSpec::Flat(FlatSpec),
+            "flat" => IndexSpec::Flat(FlatSpec::default()),
             "ivf" => IndexSpec::Ivf(IvfSpec::default()),
             "pq" => IndexSpec::Pq(PqSpec::default()),
             "sq8" => IndexSpec::Sq(SqSpec),
@@ -303,7 +318,7 @@ impl IndexSpec {
             IndexSpec::Soar(s) => s.nlist = nlist,
             IndexSpec::LeanVec(s) => s.nlist = nlist,
             IndexSpec::Sharded(s) => {
-                let inner = std::mem::replace(&mut *s.inner, IndexSpec::Flat(FlatSpec));
+                let inner = std::mem::replace(&mut *s.inner, IndexSpec::Flat(FlatSpec::default()));
                 *s.inner = inner.with_nlist(nlist);
             }
             _ => {}
@@ -325,6 +340,13 @@ impl IndexSpec {
             );
             Ok(())
         }
+        fn bits_ok(bits: usize, spec: &IndexSpec) -> Result<()> {
+            ensure!(
+                bits == 8 || bits == 4,
+                "bits must be 4 or 8 in '{spec}', got {bits}"
+            );
+            Ok(())
+        }
         match self {
             IndexSpec::Flat(_) | IndexSpec::Sq(_) => Ok(()),
             IndexSpec::Ivf(s) => {
@@ -336,7 +358,8 @@ impl IndexSpec {
                     pos(m, "m", self)?;
                 }
                 pos(s.iters, "iters", self)?;
-                eta_ok(s.eta, self)
+                eta_ok(s.eta, self)?;
+                bits_ok(s.bits, self)
             }
             IndexSpec::Scann(s) => {
                 pos(s.nlist, "nlist", self)?;
@@ -344,7 +367,8 @@ impl IndexSpec {
                     pos(m, "m", self)?;
                 }
                 pos(s.iters, "iters", self)?;
-                eta_ok(s.eta, self)
+                eta_ok(s.eta, self)?;
+                bits_ok(s.bits, self)
             }
             IndexSpec::Soar(s) => {
                 pos(s.nlist, "nlist", self)?;
@@ -391,17 +415,21 @@ impl IndexSpec {
             );
         }
         Ok(match self {
-            IndexSpec::Flat(_) => Box::new(flat::FlatIndex::new(keys.clone())),
+            IndexSpec::Flat(s) => {
+                Box::new(flat::FlatIndex::with_storage(keys.clone(), s.storage))
+            }
             IndexSpec::Ivf(s) => Box::new(ivf::IvfIndex::build(keys, s.nlist, s.iters, ctx.seed)),
             IndexSpec::Pq(s) => {
                 let m = resolve_pq_m(s.m, d)?;
-                Box::new(pq::PqIndex::build(keys, m, s.iters, s.eta, ctx.seed))
+                Box::new(pq::PqIndex::build(
+                    keys, m, s.iters, s.eta, s.bits, ctx.seed,
+                ))
             }
             IndexSpec::Sq(_) => Box::new(sq::SqIndex::build(keys)),
             IndexSpec::Scann(s) => {
                 let m = resolve_pq_m(s.m, d)?;
                 Box::new(scann::ScannIndex::build(
-                    keys, s.nlist, m, s.iters, s.eta, ctx.seed,
+                    keys, s.nlist, m, s.iters, s.eta, s.bits, ctx.seed,
                 ))
             }
             IndexSpec::Soar(s) => {
@@ -421,7 +449,7 @@ impl IndexSpec {
                     None
                 };
                 Box::new(leanvec::LeanVecIndex::build(
-                    keys, d_low, s.nlist, queries, ctx.seed,
+                    keys, d_low, s.nlist, queries, s.storage, ctx.seed,
                 ))
             }
             IndexSpec::Sharded(s) => Box::new(shard::ShardedIndex::build(keys, s, ctx)?),
@@ -438,29 +466,54 @@ fn fmt_auto(v: Option<usize>) -> String {
 
 impl fmt::Display for IndexSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // The compact-storage knobs print only when non-default, so spec
+        // echoes persisted before the knobs existed ("flat",
+        // "pq(m=4,iters=10,eta=1)") still render and re-parse unchanged.
         match self {
-            IndexSpec::Flat(_) => write!(f, "flat"),
+            IndexSpec::Flat(s) => {
+                if s.storage == Storage::F32 {
+                    write!(f, "flat")
+                } else {
+                    write!(f, "flat(storage={})", s.storage)
+                }
+            }
             IndexSpec::Ivf(s) => write!(f, "ivf(nlist={},iters={})", s.nlist, s.iters),
             IndexSpec::Pq(s) => {
-                write!(f, "pq(m={},iters={},eta={})", fmt_auto(s.m), s.iters, s.eta)
+                write!(f, "pq(m={},iters={},eta={}", fmt_auto(s.m), s.iters, s.eta)?;
+                if s.bits != 8 {
+                    write!(f, ",bits={}", s.bits)?;
+                }
+                write!(f, ")")
             }
             IndexSpec::Sq(_) => write!(f, "sq8"),
-            IndexSpec::Scann(s) => write!(
-                f,
-                "scann(nlist={},m={},iters={},eta={})",
-                s.nlist,
-                fmt_auto(s.m),
-                s.iters,
-                s.eta
-            ),
+            IndexSpec::Scann(s) => {
+                write!(
+                    f,
+                    "scann(nlist={},m={},iters={},eta={}",
+                    s.nlist,
+                    fmt_auto(s.m),
+                    s.iters,
+                    s.eta
+                )?;
+                if s.bits != 8 {
+                    write!(f, ",bits={}", s.bits)?;
+                }
+                write!(f, ")")
+            }
             IndexSpec::Soar(s) => write!(f, "soar(nlist={},spill={})", s.nlist, s.spill),
-            IndexSpec::LeanVec(s) => write!(
-                f,
-                "leanvec(d_low={},nlist={},query_aware={})",
-                fmt_auto(s.d_low),
-                s.nlist,
-                s.query_aware
-            ),
+            IndexSpec::LeanVec(s) => {
+                write!(
+                    f,
+                    "leanvec(d_low={},nlist={},query_aware={}",
+                    fmt_auto(s.d_low),
+                    s.nlist,
+                    s.query_aware
+                )?;
+                if s.storage != Storage::F32 {
+                    write!(f, ",storage={}", s.storage)?;
+                }
+                write!(f, ")")
+            }
             IndexSpec::Sharded(s) => write!(
                 f,
                 "sharded(shards={},assign={},inner={})",
@@ -544,6 +597,13 @@ impl Knobs {
         }
     }
 
+    fn storage_or(&mut self, default: Storage) -> Result<Storage> {
+        match self.take("storage") {
+            Some(v) => v.parse(),
+            None => Ok(default),
+        }
+    }
+
     fn auto_or(&mut self, key: &str, default: Option<usize>) -> Result<Option<usize>> {
         match self.take(key) {
             Some(v) if v == "auto" => Ok(None),
@@ -598,7 +658,9 @@ impl std::str::FromStr for IndexSpec {
         };
         let mut knobs = Knobs::parse(body)?;
         let spec = match name {
-            "flat" => IndexSpec::Flat(FlatSpec),
+            "flat" => IndexSpec::Flat(FlatSpec {
+                storage: knobs.storage_or(Storage::F32)?,
+            }),
             "sq8" => IndexSpec::Sq(SqSpec),
             "ivf" => {
                 let dflt = IvfSpec::default();
@@ -613,6 +675,7 @@ impl std::str::FromStr for IndexSpec {
                     m: knobs.auto_or("m", dflt.m)?,
                     iters: knobs.usize_or("iters", dflt.iters)?,
                     eta: knobs.f32_or("eta", dflt.eta)?,
+                    bits: knobs.usize_or("bits", dflt.bits)?,
                 })
             }
             "scann" => {
@@ -622,6 +685,7 @@ impl std::str::FromStr for IndexSpec {
                     m: knobs.auto_or("m", dflt.m)?,
                     iters: knobs.usize_or("iters", dflt.iters)?,
                     eta: knobs.f32_or("eta", dflt.eta)?,
+                    bits: knobs.usize_or("bits", dflt.bits)?,
                 })
             }
             "soar" => {
@@ -637,6 +701,7 @@ impl std::str::FromStr for IndexSpec {
                     d_low: knobs.auto_or("d_low", dflt.d_low)?,
                     nlist: knobs.usize_or("nlist", dflt.nlist)?,
                     query_aware: knobs.bool_or("query_aware", dflt.query_aware)?,
+                    storage: knobs.storage_or(dflt.storage)?,
                 })
             }
             "sharded" => {
@@ -728,7 +793,7 @@ mod tests {
         let b: IndexSpec = "ivf()".parse().unwrap();
         assert_eq!(b, IndexSpec::Ivf(IvfSpec::default()));
         let c: IndexSpec = "flat".parse().unwrap();
-        assert_eq!(c, IndexSpec::Flat(FlatSpec));
+        assert_eq!(c, IndexSpec::Flat(FlatSpec::default()));
     }
 
     #[test]
@@ -745,6 +810,12 @@ mod tests {
             "pq(m=0)",
             "pq(eta=0)",
             "pq(eta=nan)",
+            "pq(bits=3)",
+            "pq(bits=16)",
+            "scann(bits=0)",
+            "flat(storage=f64)",
+            "flat(bogus=1)",
+            "leanvec(storage=f8)",
             "soar(spill=0)",
             "leanvec(d_low=0)",
             "leanvec(query_aware=maybe)",
@@ -802,6 +873,45 @@ mod tests {
         assert_eq!(
             resized.to_string(),
             "sharded(shards=8,assign=round_robin,inner=ivf(nlist=16,iters=15))"
+        );
+    }
+
+    #[test]
+    fn compact_storage_knobs_round_trip_and_stay_silent_by_default() {
+        // default echoes are unchanged from before the knobs existed
+        assert_eq!(IndexSpec::Flat(FlatSpec::default()).to_string(), "flat");
+        assert_eq!(
+            IndexSpec::Pq(PqSpec::default()).to_string(),
+            "pq(m=auto,iters=10,eta=1)"
+        );
+        assert_eq!(
+            IndexSpec::LeanVec(LeanVecSpec::default()).to_string(),
+            "leanvec(d_low=auto,nlist=64,query_aware=true)"
+        );
+        // non-default knobs print and round-trip
+        for text in [
+            "flat(storage=f16)",
+            "pq(m=4,iters=10,eta=1,bits=4)",
+            "scann(nlist=64,m=auto,iters=10,eta=4,bits=4)",
+            "leanvec(d_low=auto,nlist=64,query_aware=true,storage=f16)",
+        ] {
+            let spec: IndexSpec = text.parse().unwrap();
+            assert_eq!(spec.to_string(), text);
+        }
+        let s: IndexSpec = "pq(bits=4)".parse().unwrap();
+        assert_eq!(
+            s,
+            IndexSpec::Pq(PqSpec {
+                bits: 4,
+                ..PqSpec::default()
+            })
+        );
+        let s: IndexSpec = "flat(storage=f16)".parse().unwrap();
+        assert_eq!(
+            s,
+            IndexSpec::Flat(FlatSpec {
+                storage: Storage::F16
+            })
         );
     }
 

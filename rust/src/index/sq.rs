@@ -82,14 +82,12 @@ impl SqIndex {
         (qs, dot(query, &self.lo))
     }
 
-    /// Approximate inner product of a transformed query against a code.
+    /// Approximate inner product of a transformed query against a code,
+    /// through the dispatched dequant-dot kernel
+    /// ([`crate::tensor::kernels::sq8_dot`]).
     #[inline]
     fn scaled_score(qs: &[f32], code: &[u8], q_dot_lo: f32) -> f32 {
-        let mut s = 0.0f32;
-        for (&x, &c) in qs.iter().zip(code) {
-            s += x * c as f32;
-        }
-        s + q_dot_lo
+        crate::tensor::kernels::sq8_dot(qs, code) + q_dot_lo
     }
 
     /// Stage 2 shared by the per-query and batched paths: exact re-rank

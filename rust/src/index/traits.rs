@@ -232,6 +232,35 @@ impl TopK {
         self.push(score, id);
     }
 
+    /// Offer a contiguous block of scores for consecutive ids
+    /// `first_id..first_id + scores.len()` — the batched-scan fast
+    /// path. A SIMD compare ([`kernels::not_below_mask`]) drops whole
+    /// lanes strictly below the floor before any heap work.
+    ///
+    /// Result-identical to calling [`TopK::offer`] per element: the
+    /// mask is computed against the floor at the *start* of each chunk,
+    /// which can only be ≤ the live floor — so every dropped candidate
+    /// (strictly below the stale floor, hence below the live one, and
+    /// never NaN since NaN fails `<`) is one `offer` would also have
+    /// rejected, and every survivor goes through the same `offer`.
+    /// TopK selection is push-order independent, so admitting a
+    /// soon-to-be-evicted candidate never changes the final set.
+    ///
+    /// [`kernels::not_below_mask`]: crate::tensor::kernels::not_below_mask
+    pub fn offer_block(&mut self, scores: &[f32], first_id: u32) {
+        use crate::tensor::kernels;
+        let w = kernels::prefilter_width();
+        for (c, chunk) in scores.chunks(w).enumerate() {
+            let base = first_id + (c * w) as u32;
+            let mut mask = kernels::not_below_mask(chunk, self.floor());
+            while mask != 0 {
+                let i = mask.trailing_zeros() as usize;
+                mask &= mask - 1;
+                self.offer(chunk[i], base + i as u32);
+            }
+        }
+    }
+
     /// Drain into descending-score order.
     pub fn into_sorted(mut self) -> (Vec<u32>, Vec<f32>) {
         // `push` maps NaN to -inf, so partial_cmp cannot fail here; the
@@ -312,6 +341,30 @@ mod tests {
                 b.offer(s, i as u32);
             }
             assert_eq!(a.into_sorted(), b.into_sorted(), "{scores:?}");
+        }
+    }
+
+    #[test]
+    fn topk_offer_block_equals_offer_per_element() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(42);
+        for n in [0usize, 1, 7, 8, 9, 63, 200] {
+            let mut scores = vec![0.0f32; n];
+            rng.fill_normal(&mut scores, 1.0);
+            if n > 4 {
+                scores[1] = f32::NAN;
+                scores[3] = f32::INFINITY;
+                scores[4] = f32::NEG_INFINITY;
+            }
+            for k in [1usize, 3, 16] {
+                let mut a = TopK::new(k);
+                let mut b = TopK::new(k);
+                for (i, &s) in scores.iter().enumerate() {
+                    a.offer(s, 100 + i as u32);
+                }
+                b.offer_block(&scores, 100);
+                assert_eq!(a.into_sorted(), b.into_sorted(), "n={n} k={k}");
+            }
         }
     }
 

@@ -1,0 +1,168 @@
+//! Minimal IEEE 754 binary16 ("f16") codec — no external crate, just the
+//! bit manipulation. Used by the compact `storage=f16` key matrices
+//! (see `crate::index::keystore`): keys are stored as 16-bit patterns
+//! and dequantized to f32 inside the scoring kernels, halving scan-path
+//! memory bandwidth.
+//!
+//! Conversion contract:
+//! - `f16_from_f32` rounds to nearest-even, overflows to ±inf, flushes
+//!   sub-2⁻²⁵ magnitudes to signed zero, and maps every NaN to a quiet
+//!   NaN (payload not preserved).
+//! - `f16_to_f32` is exact (every binary16 value is representable in
+//!   f32), so `f16_from_f32(f16_to_f32(h)) == h` for every non-NaN bit
+//!   pattern `h` — tested exhaustively over all 2¹⁶ patterns below.
+
+/// Convert an `f32` to the nearest binary16 bit pattern
+/// (round-to-nearest-even).
+pub fn f16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // inf stays inf; NaN becomes a quiet NaN (mantissa must stay
+        // non-zero or the NaN would silently turn into inf)
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127;
+    if e >= 16 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e >= -14 {
+        // normal binary16: narrow the mantissa 23 -> 10 bits with RNE;
+        // a mantissa carry overflows into the exponent, which is still
+        // the correctly rounded result (next binade, or inf at the top)
+        let man16 = man >> 13;
+        let rem = man & 0x1FFF;
+        let mut h = sign as u32 | (((e + 15) as u32) << 10) | man16;
+        if rem > 0x1000 || (rem == 0x1000 && (man16 & 1) == 1) {
+            h += 1;
+        }
+        return h as u16;
+    }
+    if e >= -25 {
+        // subnormal binary16: shift the (implicit-1) mantissa into place
+        let man = man | 0x0080_0000;
+        let shift = (-14 - e) as u32 + 13; // 14..=24
+        let man16 = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut h = sign as u32 | man16;
+        if rem > half || (rem == half && (man16 & 1) == 1) {
+            h += 1;
+        }
+        return h as u16;
+    }
+    sign // underflow to signed zero
+}
+
+/// Convert a binary16 bit pattern to the `f32` it denotes (exact).
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1F;
+    let man = (h & 0x03FF) as u32;
+    match exp {
+        0 => {
+            // subnormal (or zero): value = man * 2^-24, exact in f32
+            // (man <= 1023 and the scale is a power of two)
+            let mag = man as f32 * f32::from_bits(0x3380_0000);
+            f32::from_bits(mag.to_bits() | sign)
+        }
+        0x1F => f32::from_bits(sign | 0x7F80_0000 | (man << 13)),
+        e => f32::from_bits(sign | ((e as u32 + 112) << 23) | (man << 13)),
+    }
+}
+
+/// Encode a whole f32 slice to binary16 bit patterns.
+pub fn encode_f16(src: &[f32]) -> Vec<u16> {
+    src.iter().map(|&x| f16_from_f32(x)).collect()
+}
+
+/// Decode a binary16 slice back to f32.
+pub fn decode_f16(src: &[u16]) -> Vec<f32> {
+    src.iter().map(|&h| f16_to_f32(h)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specials_round_trip() {
+        assert_eq!(f16_from_f32(0.0), 0x0000);
+        assert_eq!(f16_from_f32(-0.0), 0x8000);
+        assert_eq!(f16_from_f32(1.0), 0x3C00);
+        assert_eq!(f16_from_f32(-2.0), 0xC000);
+        assert_eq!(f16_from_f32(65504.0), 0x7BFF); // f16::MAX
+        assert_eq!(f16_from_f32(f32::INFINITY), 0x7C00);
+        assert_eq!(f16_from_f32(f32::NEG_INFINITY), 0xFC00);
+        assert!(f16_to_f32(f16_from_f32(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_to_f32(0x0001), f32::from_bits(0x3380_0000)); // 2^-24
+        assert_eq!(f16_to_f32(0x8000), 0.0);
+        assert!(f16_to_f32(0x8000).is_sign_negative());
+    }
+
+    #[test]
+    fn overflow_and_underflow() {
+        assert_eq!(f16_from_f32(1e9), 0x7C00); // -> +inf
+        assert_eq!(f16_from_f32(-1e9), 0xFC00);
+        assert_eq!(f16_from_f32(1e-10), 0x0000); // -> +0
+        assert_eq!(f16_from_f32(-1e-10), 0x8000); // -> -0
+        // 65520 is the RNE midpoint between f16::MAX and the (absent)
+        // next binade: rounds up to inf
+        assert_eq!(f16_from_f32(65520.0), 0x7C00);
+        assert_eq!(f16_from_f32(65519.9), 0x7BFF);
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly between 1.0 and the next f16 (1 + 2^-10):
+        // ties to even -> 1.0
+        assert_eq!(f16_from_f32(1.0 + 2f32.powi(-11)), 0x3C00);
+        // nudge above the midpoint -> rounds up
+        assert_eq!(f16_from_f32(1.0 + 2f32.powi(-11) + 2f32.powi(-20)), 0x3C01);
+        // 1 + 3*2^-11 ties between 0x3C01 and 0x3C02 -> even (0x3C02)
+        assert_eq!(f16_from_f32(1.0 + 3.0 * 2f32.powi(-11)), 0x3C02);
+    }
+
+    #[test]
+    fn exhaustive_bit_pattern_round_trip() {
+        // every non-NaN binary16 value is exact in f32 and must survive
+        // the round trip bit-for-bit (NaNs collapse to the quiet NaN)
+        for h in 0..=u16::MAX {
+            let is_nan = (h >> 10) & 0x1F == 0x1F && h & 0x03FF != 0;
+            let f = f16_to_f32(h);
+            if is_nan {
+                assert!(f.is_nan(), "{h:#06x}");
+            } else {
+                assert_eq!(f16_from_f32(f), h, "{h:#06x} -> {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_within_half_ulp() {
+        // binary16 has 11 significand bits: RNE keeps relative error
+        // <= 2^-11 for normal-range values
+        let mut x = 1.0e-4f32;
+        while x < 6.0e4 {
+            let back = f16_to_f32(f16_from_f32(x));
+            let rel = ((back - x) / x).abs();
+            assert!(rel <= 4.9e-4, "x={x} back={back} rel={rel}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn slice_helpers_round_trip() {
+        let src = [0.0f32, 1.5, -3.25, 1e-5, 1e5];
+        let enc = encode_f16(&src);
+        let dec = decode_f16(&enc);
+        assert_eq!(dec.len(), 5);
+        assert_eq!(dec[0], 0.0);
+        assert_eq!(dec[1], 1.5);
+        assert_eq!(dec[2], -3.25);
+    }
+}

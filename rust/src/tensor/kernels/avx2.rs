@@ -1,0 +1,219 @@
+//! AVX2+FMA kernel tier (x86-64, runtime-detected). Every function is
+//! `#[target_feature]`-gated and only reachable through the dispatch
+//! wrappers in `crate::tensor::kernels`, which verify
+//! `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")`
+//! before taking this path — that detection is the entire safety
+//! argument for the `unsafe` here (plus in-bounds pointer arithmetic,
+//! which each loop guards with explicit `i + LANES <= n` bounds).
+//!
+//! These kernels re-associate the reduction (8-lane FMA accumulators +
+//! a horizontal tree sum), so they are *not* bit-identical to the
+//! scalar tier; they satisfy the tolerance contract documented in
+//! `crate::tensor::kernels`.
+
+#![cfg(target_arch = "x86_64")]
+
+use core::arch::x86_64::*;
+
+use crate::tensor::half::f16_to_f32;
+
+/// Horizontal sum of an 8-lane register (tree reduction).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum256(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<0b01>(s, s));
+    _mm_cvtss_f32(s)
+}
+
+/// 32-wide blocked dot: four 8-lane FMA accumulators, then an 8-wide
+/// cleanup loop, a horizontal tree sum, and a sequential scalar tail.
+///
+/// # Safety
+/// Requires AVX2+FMA at runtime; `a.len() == b.len()`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+        acc1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(i + 8)),
+            _mm256_loadu_ps(bp.add(i + 8)),
+            acc1,
+        );
+        acc2 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(i + 16)),
+            _mm256_loadu_ps(bp.add(i + 16)),
+            acc2,
+        );
+        acc3 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(i + 24)),
+            _mm256_loadu_ps(bp.add(i + 24)),
+            acc3,
+        );
+        i += 32;
+    }
+    while i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+        i += 8;
+    }
+    let mut s = hsum256(_mm256_add_ps(
+        _mm256_add_ps(acc0, acc1),
+        _mm256_add_ps(acc2, acc3),
+    ));
+    while i < n {
+        s += *ap.add(i) * *bp.add(i);
+        i += 1;
+    }
+    s
+}
+
+/// f16 dequant-dot via F16C: 16 halves per iteration expanded with
+/// `vcvtph2ps` (exact), then the same FMA accumulation as [`dot`].
+///
+/// # Safety
+/// Requires AVX2+FMA+F16C at runtime; `a.len() == b.len()`.
+#[target_feature(enable = "avx2,fma,f16c")]
+pub unsafe fn dot_f16(a: &[f32], b: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let h = _mm256_loadu_si256(bp.add(i) as *const __m256i);
+        let lo = _mm256_cvtph_ps(_mm256_castsi256_si128(h));
+        let hi = _mm256_cvtph_ps(_mm256_extracti128_si256::<1>(h));
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), lo, acc0);
+        acc1 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i + 8)), hi, acc1);
+        i += 16;
+    }
+    let mut s = hsum256(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        s += *ap.add(i) * f16_to_f32(*bp.add(i));
+        i += 1;
+    }
+    s
+}
+
+/// SQ8 dequant-dot: 16 code bytes widened u8→i32→f32 per iteration
+/// (exact conversions), FMA-accumulated in two 8-lane registers.
+///
+/// # Safety
+/// Requires AVX2+FMA at runtime; `qs.len() == code.len()`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn sq8_dot(qs: &[f32], code: &[u8]) -> f32 {
+    debug_assert_eq!(qs.len(), code.len());
+    let n = qs.len();
+    let qp = qs.as_ptr();
+    let cp = code.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let bytes = _mm_loadu_si128(cp.add(i) as *const __m128i);
+        let lo = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(bytes));
+        let hi = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128::<8>(bytes)));
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(qp.add(i)), lo, acc0);
+        acc1 = _mm256_fmadd_ps(_mm256_loadu_ps(qp.add(i + 8)), hi, acc1);
+        i += 16;
+    }
+    let mut s = hsum256(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        s += *qp.add(i) * (*cp.add(i)) as f32;
+        i += 1;
+    }
+    s
+}
+
+/// 8-bit ADC scan: gather 8 table entries per iteration
+/// (`vpgatherdps` over indices `sub * 256 + code[sub]`), tree-summed.
+///
+/// # Safety
+/// Requires AVX2 at runtime; `table.len() >= code.len() * 256`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn adc_scan8(table: &[f32], code: &[u8]) -> f32 {
+    let m = code.len();
+    debug_assert!(table.len() >= m * 256);
+    let tp = table.as_ptr();
+    let cp = code.as_ptr();
+    let lane = _mm256_setr_epi32(0, 256, 512, 768, 1024, 1280, 1536, 1792);
+    let mut acc = _mm256_setzero_ps();
+    let mut sub = 0usize;
+    while sub + 8 <= m {
+        let bytes = _mm_loadl_epi64(cp.add(sub) as *const __m128i);
+        let idx = _mm256_add_epi32(_mm256_cvtepu8_epi32(bytes), lane);
+        let idx = _mm256_add_epi32(idx, _mm256_set1_epi32((sub * 256) as i32));
+        acc = _mm256_add_ps(acc, _mm256_i32gather_ps::<4>(tp, idx));
+        sub += 8;
+    }
+    let mut s = hsum256(acc);
+    while sub < m {
+        s += *tp.add(sub * 256 + *cp.add(sub) as usize);
+        sub += 1;
+    }
+    s
+}
+
+/// 4-bit packed ADC scan over an `[m, 16]` table: 8 subspaces (4 bytes)
+/// per iteration — bytes are duplicated into 8 lanes, nibble-shifted
+/// with `vpsrlvd`, masked, and gathered.
+///
+/// # Safety
+/// Requires AVX2 at runtime; `packed.len() * 2 >= m` and
+/// `table.len() >= m * 16`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn adc_scan4(table: &[f32], packed: &[u8], m: usize) -> f32 {
+    debug_assert!(packed.len() * 2 >= m);
+    debug_assert!(table.len() >= m * 16);
+    let tp = table.as_ptr();
+    let cp = packed.as_ptr();
+    let lane = _mm256_setr_epi32(0, 16, 32, 48, 64, 80, 96, 112);
+    let shifts = _mm256_setr_epi32(0, 4, 0, 4, 0, 4, 0, 4);
+    let dup = _mm_setr_epi8(0, 0, 1, 1, 2, 2, 3, 3, -1, -1, -1, -1, -1, -1, -1, -1);
+    let mut acc = _mm256_setzero_ps();
+    let mut sub = 0usize;
+    while sub + 8 <= m {
+        // 4 packed bytes -> lanes [b0,b0,b1,b1,b2,b2,b3,b3]
+        let raw = _mm_set1_epi32((cp.add(sub >> 1) as *const i32).read_unaligned());
+        let lanes = _mm256_cvtepu8_epi32(_mm_shuffle_epi8(raw, dup));
+        let nib = _mm256_and_si256(_mm256_srlv_epi32(lanes, shifts), _mm256_set1_epi32(0xF));
+        let idx = _mm256_add_epi32(_mm256_add_epi32(nib, lane), _mm256_set1_epi32((sub * 16) as i32));
+        acc = _mm256_add_ps(acc, _mm256_i32gather_ps::<4>(tp, idx));
+        sub += 8;
+    }
+    let mut s = hsum256(acc);
+    while sub < m {
+        let byte = *cp.add(sub >> 1);
+        let nib = if sub & 1 == 0 { byte & 0x0F } else { byte >> 4 };
+        s += *tp.add(sub * 16 + nib as usize);
+        sub += 1;
+    }
+    s
+}
+
+/// [`super::scalar::not_below_mask`] over one full 8-lane chunk:
+/// `_CMP_NLT_UQ` is exactly `!(x < floor)` (true for NaN lanes).
+///
+/// # Safety
+/// Requires AVX2 at runtime; `chunk.len() == 8`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn not_below_mask8(chunk: &[f32], floor: f32) -> u32 {
+    debug_assert_eq!(chunk.len(), 8);
+    let v = _mm256_loadu_ps(chunk.as_ptr());
+    let m = _mm256_cmp_ps::<_CMP_NLT_UQ>(v, _mm256_set1_ps(floor));
+    _mm256_movemask_ps(m) as u32
+}

@@ -1,0 +1,481 @@
+//! Runtime-dispatched SIMD kernels for the four hottest scoring loops:
+//! the `dot` behind `gemm_nt_tile` and every scan, the PQ ADC
+//! code-matrix scans (8-bit and 4-bit packed), the SQ8 dequant-dot, and
+//! the `TopK::offer` pre-filter compare.
+//!
+//! # Tiers
+//!
+//! | tier      | arch    | gate                                              |
+//! |-----------|---------|---------------------------------------------------|
+//! | `avx2fma` | x86-64  | `is_x86_feature_detected!("avx2")` + `("fma")`    |
+//! | `neon`    | aarch64 | `is_aarch64_feature_detected!("neon")`            |
+//! | `scalar`  | any     | always available; forced by `AMIPS_FORCE_SCALAR=1`|
+//!
+//! The tier is detected once (first kernel call) and cached in an
+//! atomic; `AMIPS_FORCE_SCALAR=1` in the environment pins the scalar
+//! tier for the whole process, and [`force_scalar`] lets benches sweep
+//! both dispatch modes in-process. The scalar tier is the exact
+//! pre-dispatch kernel code, so it stays bit-identical to every
+//! baseline produced before this layer existed.
+//!
+//! # Numerical contract
+//!
+//! Within one process the active tier never changes (detection is
+//! cached), and the per-query and batched search paths call the same
+//! kernel per (query, key) pair — so the PR 5 batched ≡ per-query
+//! bit-identity contract holds *within every tier*. Across tiers, SIMD
+//! re-association changes low-order bits; every tier `t` must satisfy,
+//! for each kernel:
+//!
+//! ```text
+//! |kernel_t(x) - kernel_scalar(x)| <= 16 · ε · Σᵢ |termᵢ|  (ε = f32::EPSILON)
+//! ```
+//!
+//! where `termᵢ` are the products being summed (`aᵢ·bᵢ` for the dots,
+//! table entries for the ADC scans), plus a 1e-6 absolute floor for
+//! near-zero sums. NaN and ±inf propagate identically in kind: if the
+//! scalar kernel returns NaN (any NaN term, or mixed-sign infinities),
+//! every tier returns NaN; a single-signed infinite sum stays the same
+//! signed infinity. `tests/properties.rs` enforces both clauses across
+//! every available tier, remainder-lane dims included. The
+//! `not_below_mask` pre-filter is exact (a comparison, not an
+//! accumulation) and bit-identical across tiers.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+pub mod scalar;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// A dispatch tier. `Scalar` is always available; the SIMD tiers exist
+/// only on their architecture and only when the CPU reports the
+/// features at runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Avx2Fma,
+    Neon,
+    Scalar,
+}
+
+impl Tier {
+    /// Stable tier name, as reported in `BENCH_hotpath.json` rows and
+    /// the `amips_build_info` metrics line: `avx2fma` / `neon` /
+    /// `scalar`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Avx2Fma => "avx2fma",
+            Tier::Neon => "neon",
+            Tier::Scalar => "scalar",
+        }
+    }
+}
+
+const TIER_UNSET: u8 = 0;
+const TIER_SCALAR: u8 = 1;
+const TIER_AVX2: u8 = 2;
+const TIER_NEON: u8 = 3;
+
+/// Cached detection result (one of the `TIER_*` constants above).
+static TIER: AtomicU8 = AtomicU8::new(TIER_UNSET);
+/// Whether F16C conversion is available alongside the AVX2 tier
+/// (0 unset / 1 no / 2 yes). All AVX2 parts ship F16C, but the gate is
+/// a separate CPUID bit so it is detected separately.
+static F16C: AtomicU8 = AtomicU8::new(0);
+
+fn detect() -> u8 {
+    if std::env::var("AMIPS_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false) {
+        return TIER_SCALAR;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return TIER_AVX2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return TIER_NEON;
+        }
+    }
+    TIER_SCALAR
+}
+
+#[inline]
+fn tier_code() -> u8 {
+    let t = TIER.load(Ordering::Relaxed);
+    if t != TIER_UNSET {
+        return t;
+    }
+    let t = detect();
+    TIER.store(t, Ordering::Relaxed);
+    t
+}
+
+#[inline]
+#[cfg(target_arch = "x86_64")]
+fn has_f16c() -> bool {
+    let f = F16C.load(Ordering::Relaxed);
+    if f != 0 {
+        return f == 2;
+    }
+    let yes = is_x86_feature_detected!("f16c");
+    F16C.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+    yes
+}
+
+/// The active dispatch tier (detected once, then cached).
+#[inline]
+pub fn tier() -> Tier {
+    match tier_code() {
+        TIER_AVX2 => Tier::Avx2Fma,
+        TIER_NEON => Tier::Neon,
+        _ => Tier::Scalar,
+    }
+}
+
+/// The active tier's stable name (`avx2fma` / `neon` / `scalar`).
+pub fn tier_name() -> &'static str {
+    tier().name()
+}
+
+/// Pin (or unpin) the scalar tier for this process — the in-process
+/// equivalent of `AMIPS_FORCE_SCALAR=1`, used by `perf_hotpath` to
+/// sweep both dispatch modes into one artifact. `force_scalar(false)`
+/// re-runs detection (which re-consults the environment) on the next
+/// kernel call. Not safe to flip concurrently with result-comparing
+/// work on other threads; tests that compare tiers use the `*_with`
+/// entry points instead.
+pub fn force_scalar(on: bool) {
+    TIER.store(if on { TIER_SCALAR } else { TIER_UNSET }, Ordering::SeqCst);
+}
+
+/// Every tier the current host can execute, scalar first. Property
+/// tests iterate this to compare each tier against scalar.
+pub fn available_tiers() -> Vec<Tier> {
+    let mut tiers = vec![Tier::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        tiers.push(Tier::Avx2Fma);
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        tiers.push(Tier::Neon);
+    }
+    tiers
+}
+
+#[cold]
+fn unavailable(t: Tier) -> ! {
+    panic!("kernel tier {t:?} is not available on this host");
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched kernels. Each has a `*_with(tier, ..)` twin that runs a
+// specific tier (panicking if the host lacks it) so tests can compare
+// tiers without mutating the global dispatch state.
+// ---------------------------------------------------------------------------
+
+/// Dispatched inner product — the single scoring kernel behind
+/// `gemm_nt_tile`, every scan loop, and every exact re-rank.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    match tier_code() {
+        #[cfg(target_arch = "x86_64")]
+        TIER_AVX2 => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        TIER_NEON => unsafe { neon::dot(a, b) },
+        _ => scalar::dot(a, b),
+    }
+}
+
+/// [`dot`] forced onto a specific tier (testing).
+pub fn dot_with(t: Tier, a: &[f32], b: &[f32]) -> f32 {
+    match t {
+        Tier::Scalar => scalar::dot(a, b),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma if available_tiers().contains(&t) => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon if available_tiers().contains(&t) => unsafe { neon::dot(a, b) },
+        other => unavailable(other),
+    }
+}
+
+/// Dispatched f16 dequant-dot (`storage=f16` key rows). The AVX2 tier
+/// uses F16C expansion when the CPU has it; the NEON tier falls back to
+/// the scalar kernel (conversion-only f16 support is not assumed).
+#[inline]
+pub fn dot_f16(a: &[f32], b: &[u16]) -> f32 {
+    match tier_code() {
+        #[cfg(target_arch = "x86_64")]
+        TIER_AVX2 if has_f16c() => unsafe { avx2::dot_f16(a, b) },
+        _ => scalar::dot_f16(a, b),
+    }
+}
+
+/// [`dot_f16`] forced onto a specific tier (testing).
+pub fn dot_f16_with(t: Tier, a: &[f32], b: &[u16]) -> f32 {
+    match t {
+        Tier::Scalar | Tier::Neon => scalar::dot_f16(a, b),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma if available_tiers().contains(&t) => {
+            if has_f16c() {
+                unsafe { avx2::dot_f16(a, b) }
+            } else {
+                scalar::dot_f16(a, b)
+            }
+        }
+        other => unavailable(other),
+    }
+}
+
+/// Dispatched SQ8 dequant-dot: `Σ qs[j] * code[j]` (the caller adds its
+/// `<query, lo>` constant).
+#[inline]
+pub fn sq8_dot(qs: &[f32], code: &[u8]) -> f32 {
+    match tier_code() {
+        #[cfg(target_arch = "x86_64")]
+        TIER_AVX2 => unsafe { avx2::sq8_dot(qs, code) },
+        #[cfg(target_arch = "aarch64")]
+        TIER_NEON => unsafe { neon::sq8_dot(qs, code) },
+        _ => scalar::sq8_dot(qs, code),
+    }
+}
+
+/// [`sq8_dot`] forced onto a specific tier (testing).
+pub fn sq8_dot_with(t: Tier, qs: &[f32], code: &[u8]) -> f32 {
+    match t {
+        Tier::Scalar => scalar::sq8_dot(qs, code),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma if available_tiers().contains(&t) => unsafe { avx2::sq8_dot(qs, code) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon if available_tiers().contains(&t) => unsafe { neon::sq8_dot(qs, code) },
+        other => unavailable(other),
+    }
+}
+
+/// Dispatched 8-bit ADC scan: `Σ_sub table[sub * 256 + code[sub]]`
+/// (table laid out `[m, 256]`). AVX2 gathers 8 entries per step; NEON
+/// has no gather and uses the scalar loop.
+#[inline]
+pub fn adc_scan8(table: &[f32], code: &[u8]) -> f32 {
+    match tier_code() {
+        #[cfg(target_arch = "x86_64")]
+        TIER_AVX2 => unsafe { avx2::adc_scan8(table, code) },
+        _ => scalar::adc_scan8(table, code),
+    }
+}
+
+/// [`adc_scan8`] forced onto a specific tier (testing).
+pub fn adc_scan8_with(t: Tier, table: &[f32], code: &[u8]) -> f32 {
+    match t {
+        Tier::Scalar | Tier::Neon => scalar::adc_scan8(table, code),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma if available_tiers().contains(&t) => unsafe { avx2::adc_scan8(table, code) },
+        other => unavailable(other),
+    }
+}
+
+/// Dispatched 4-bit packed ADC scan (table laid out `[m, 16]`, two
+/// subspace codes per byte, low nibble first).
+#[inline]
+pub fn adc_scan4(table: &[f32], packed: &[u8], m: usize) -> f32 {
+    match tier_code() {
+        #[cfg(target_arch = "x86_64")]
+        TIER_AVX2 => unsafe { avx2::adc_scan4(table, packed, m) },
+        _ => scalar::adc_scan4(table, packed, m),
+    }
+}
+
+/// [`adc_scan4`] forced onto a specific tier (testing).
+pub fn adc_scan4_with(t: Tier, table: &[f32], packed: &[u8], m: usize) -> f32 {
+    match t {
+        Tier::Scalar | Tier::Neon => scalar::adc_scan4(table, packed, m),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma if available_tiers().contains(&t) => unsafe {
+            avx2::adc_scan4(table, packed, m)
+        },
+        other => unavailable(other),
+    }
+}
+
+/// Dispatched `TopK::offer` pre-filter: bitmask of `chunk` entries NOT
+/// strictly below `floor` (bit `i` ⇔ `!(chunk[i] < floor)`; NaN lanes
+/// are kept, exactly the candidates `offer` forwards to `push`).
+/// `chunk.len()` must be ≤ 32; SIMD paths cover the full-width lanes
+/// and defer ragged chunks to the scalar loop. Exact on every tier.
+#[inline]
+pub fn not_below_mask(chunk: &[f32], floor: f32) -> u32 {
+    match tier_code() {
+        #[cfg(target_arch = "x86_64")]
+        TIER_AVX2 if chunk.len() == 8 => unsafe { avx2::not_below_mask8(chunk, floor) },
+        #[cfg(target_arch = "aarch64")]
+        TIER_NEON if chunk.len() == 4 => unsafe { neon::not_below_mask4(chunk, floor) },
+        _ => scalar::not_below_mask(chunk, floor),
+    }
+}
+
+/// The chunk width [`not_below_mask`] can filter in one SIMD compare on
+/// the active tier (8 on AVX2, 4 on NEON, 16 scalar — a cheap unrolled
+/// loop either way).
+#[inline]
+pub fn prefilter_width() -> usize {
+    match tier_code() {
+        TIER_AVX2 => 8,
+        TIER_NEON => 4,
+        _ => 16,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::half::f16_from_f32;
+    use crate::util::Rng;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        Rng::new(seed).fill_normal(&mut v, 1.0);
+        v
+    }
+
+    fn tol(terms: impl Iterator<Item = f32>) -> f32 {
+        16.0 * f32::EPSILON * terms.map(|t| t.abs()).sum::<f32>() + 1e-6
+    }
+
+    #[test]
+    fn tier_name_is_stable() {
+        assert_eq!(Tier::Avx2Fma.name(), "avx2fma");
+        assert_eq!(Tier::Neon.name(), "neon");
+        assert_eq!(Tier::Scalar.name(), "scalar");
+        // whatever the host, the active tier is one of the published names
+        assert!(["avx2fma", "neon", "scalar"].contains(&tier_name()));
+        assert_eq!(available_tiers()[0], Tier::Scalar);
+    }
+
+    #[test]
+    fn force_scalar_pins_and_releases() {
+        let natural = tier();
+        force_scalar(true);
+        assert_eq!(tier(), Tier::Scalar);
+        // the dispatched kernel now routes through the scalar tier
+        let (a, b) = (randv(37, 1), randv(37, 2));
+        assert_eq!(dot(&a, &b).to_bits(), scalar::dot(&a, &b).to_bits());
+        force_scalar(false);
+        assert_eq!(tier(), natural);
+    }
+
+    #[test]
+    fn every_tier_matches_scalar_dot_within_tolerance() {
+        for t in available_tiers() {
+            for n in [0usize, 1, 3, 7, 8, 15, 16, 31, 32, 64, 100, 127] {
+                let a = randv(n, 10 + n as u64);
+                let b = randv(n, 20 + n as u64);
+                let want = scalar::dot(&a, &b);
+                let got = dot_with(t, &a, &b);
+                let bound = tol(a.iter().zip(&b).map(|(x, y)| x * y));
+                assert!(
+                    (got - want).abs() <= bound,
+                    "{t:?} n={n}: {got} vs {want} (bound {bound})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_tier_matches_scalar_sq8_dot() {
+        let mut rng = Rng::new(7);
+        for t in available_tiers() {
+            for n in [0usize, 1, 7, 8, 15, 16, 17, 33, 64, 100] {
+                let qs = randv(n, 30 + n as u64);
+                let code: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+                let want = scalar::sq8_dot(&qs, &code);
+                let got = sq8_dot_with(t, &qs, &code);
+                let bound = tol(qs.iter().zip(&code).map(|(x, &c)| x * c as f32));
+                assert!(
+                    (got - want).abs() <= bound,
+                    "{t:?} n={n}: {got} vs {want} (bound {bound})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_tier_matches_scalar_adc_scans() {
+        let mut rng = Rng::new(8);
+        for t in available_tiers() {
+            for m in [1usize, 4, 7, 8, 9, 16, 24] {
+                let table8 = randv(m * 256, 40 + m as u64);
+                let code8: Vec<u8> = (0..m).map(|_| rng.below(256) as u8).collect();
+                let want = scalar::adc_scan8(&table8, &code8);
+                let got = adc_scan8_with(t, &table8, &code8);
+                let bound = tol(code8.iter().enumerate().map(|(s, &c)| table8[s * 256 + c as usize]));
+                assert!((got - want).abs() <= bound, "{t:?} adc8 m={m}");
+
+                let table4 = randv(m * 16, 50 + m as u64);
+                let packed: Vec<u8> = (0..m.div_ceil(2)).map(|_| rng.below(256) as u8).collect();
+                let want = scalar::adc_scan4(&table4, &packed, m);
+                let got = adc_scan4_with(t, &table4, &packed, m);
+                assert!((got - want).abs() <= bound.max(1e-4), "{t:?} adc4 m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_tier_matches_scalar_dot_f16() {
+        for t in available_tiers() {
+            for n in [0usize, 1, 7, 8, 15, 16, 17, 64, 100] {
+                let a = randv(n, 60 + n as u64);
+                let b: Vec<u16> = randv(n, 70 + n as u64)
+                    .into_iter()
+                    .map(f16_from_f32)
+                    .collect();
+                let want = scalar::dot_f16(&a, &b);
+                let got = dot_f16_with(t, &a, &b);
+                let bound = tol(a.iter().zip(&b).map(|(x, &h)| x * crate::tensor::half::f16_to_f32(h)));
+                assert!(
+                    (got - want).abs() <= bound,
+                    "{t:?} n={n}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn not_below_mask_is_exact_on_every_tier_path() {
+        // exercise both the SIMD full-chunk widths and ragged chunks
+        let scores = [0.5f32, -1.0, f32::NAN, 0.0, 2.0, -0.5, 0.5, 3.0, 1.0];
+        for floor in [f32::NEG_INFINITY, -0.5, 0.0, 0.5, 10.0] {
+            for len in 0..=scores.len() {
+                let chunk = &scores[..len];
+                let want = scalar::not_below_mask(chunk, floor);
+                assert_eq!(not_below_mask(chunk, floor), want, "len={len} floor={floor}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_propagate_in_kind() {
+        for t in available_tiers() {
+            for n in [1usize, 5, 8, 33, 100] {
+                // one NaN term anywhere -> NaN on every tier
+                let mut a = randv(n, 80 + n as u64);
+                let b = randv(n, 90 + n as u64);
+                a[n / 2] = f32::NAN;
+                assert!(dot_with(t, &a, &b).is_nan(), "{t:?} NaN n={n}");
+                // a single +inf product (all other terms finite) -> +inf
+                let mut a = randv(n, 81 + n as u64);
+                a[n / 2] = f32::INFINITY;
+                let mut b = randv(n, 91 + n as u64);
+                b[n / 2] = 1.0;
+                let got = dot_with(t, &a, &b);
+                assert!(
+                    got.is_infinite() && got.is_sign_positive(),
+                    "{t:?} inf n={n}: {got}"
+                );
+            }
+        }
+    }
+}

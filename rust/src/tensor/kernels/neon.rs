@@ -1,0 +1,101 @@
+//! NEON kernel tier (aarch64). NEON is architecturally mandatory on
+//! aarch64, but the dispatch wrappers in `crate::tensor::kernels` still
+//! verify `is_aarch64_feature_detected!("neon")` before taking this
+//! path — that plus in-bounds pointer arithmetic is the safety argument
+//! for the `unsafe` here.
+//!
+//! Like the AVX2 tier, these kernels re-associate the reduction (4-lane
+//! FMA accumulators + `vaddvq` horizontal sums) and satisfy the
+//! tolerance contract in `crate::tensor::kernels`, not bit-identity.
+//! NEON has no gather instruction, so the ADC scans and the f16
+//! dequant-dot fall back to the scalar kernels inside this tier (the
+//! fallback is per-kernel and deterministic, so batched ≡ per-query
+//! still holds).
+
+#![cfg(target_arch = "aarch64")]
+
+use core::arch::aarch64::*;
+
+/// 16-wide blocked dot: four 4-lane FMA accumulators, a 4-wide cleanup
+/// loop, `vaddvq` horizontal sums, and a sequential scalar tail.
+///
+/// # Safety
+/// Requires NEON at runtime; `a.len() == b.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut acc2 = vdupq_n_f32(0.0);
+    let mut acc3 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 16 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(ap.add(i + 4)), vld1q_f32(bp.add(i + 4)));
+        acc2 = vfmaq_f32(acc2, vld1q_f32(ap.add(i + 8)), vld1q_f32(bp.add(i + 8)));
+        acc3 = vfmaq_f32(acc3, vld1q_f32(ap.add(i + 12)), vld1q_f32(bp.add(i + 12)));
+        i += 16;
+    }
+    while i + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+        i += 4;
+    }
+    let mut s = vaddvq_f32(vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3)));
+    while i < n {
+        s += *ap.add(i) * *bp.add(i);
+        i += 1;
+    }
+    s
+}
+
+/// SQ8 dequant-dot: 8 code bytes per iteration widened
+/// u8→u16→u32→f32 (exact conversions), FMA-accumulated in two 4-lane
+/// registers.
+///
+/// # Safety
+/// Requires NEON at runtime; `qs.len() == code.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn sq8_dot(qs: &[f32], code: &[u8]) -> f32 {
+    debug_assert_eq!(qs.len(), code.len());
+    let n = qs.len();
+    let qp = qs.as_ptr();
+    let cp = code.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let wide = vmovl_u8(vld1_u8(cp.add(i)));
+        let lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(wide)));
+        let hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(wide)));
+        acc0 = vfmaq_f32(acc0, vld1q_f32(qp.add(i)), lo);
+        acc1 = vfmaq_f32(acc1, vld1q_f32(qp.add(i + 4)), hi);
+        i += 8;
+    }
+    let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+    while i < n {
+        s += *qp.add(i) * (*cp.add(i)) as f32;
+        i += 1;
+    }
+    s
+}
+
+/// [`super::scalar::not_below_mask`] over one full 4-lane chunk:
+/// `!(x < floor)` per lane (NaN lanes kept), packed into bits 0..4.
+///
+/// # Safety
+/// Requires NEON at runtime; `chunk.len() == 4`.
+#[target_feature(enable = "neon")]
+pub unsafe fn not_below_mask4(chunk: &[f32], floor: f32) -> u32 {
+    debug_assert_eq!(chunk.len(), 4);
+    let v = vld1q_f32(chunk.as_ptr());
+    // vcltq is false for NaN, so the complement keeps NaN lanes — the
+    // exact `!(x < floor)` predicate `TopK::offer` uses
+    let below = vcltq_f32(v, vdupq_n_f32(floor));
+    let keep = vmvnq_u32(below);
+    let weights: [u32; 4] = [1, 2, 4, 8];
+    let bits = vandq_u32(keep, vld1q_u32(weights.as_ptr()));
+    vaddvq_u32(bits)
+}

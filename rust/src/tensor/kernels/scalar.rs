@@ -1,0 +1,141 @@
+//! Scalar reference kernels — the always-available dispatch tier and
+//! the bit-identity anchor for every other tier.
+//!
+//! `dot` is the exact pre-dispatch kernel body (16-wide blocks, four
+//! independent 4-lane accumulators, sequential tail): moving it here
+//! changed no instruction order, so the scalar tier scores
+//! bit-identically to every artifact and test baseline produced before
+//! the dispatch layer existed. The same holds for `sq8_dot` (the old
+//! `SqIndex::scaled_score` loop) and `adc_scan8` (the old
+//! `Pq::adc_score` loop).
+
+use crate::tensor::half::f16_to_f32;
+
+/// `dot(a, b)` with 4-way unrolled independent accumulators.
+///
+/// Reduction order (the scalar-tier contract — see
+/// `crate::tensor::kernels` for the cross-tier tolerance): the input is
+/// cut into 16-element blocks; block `c` accumulates four sequential
+/// 4-element partial sums `t0..t3` (lanes `[0..4)`, `[4..8)`, `[8..12)`,
+/// `[12..16)`) which are added into four running sums `s0..s3`; the
+/// remainder is summed sequentially into `tail`; the result is
+/// `s0 + s1 + s2 + s3 + tail` in exactly that order.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 16;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    // 16-wide blocks; LLVM maps each 4-lane accumulator onto vector FMAs.
+    for c in 0..chunks {
+        let i = c * 16;
+        let (a0, b0) = (&a[i..i + 16], &b[i..i + 16]);
+        let mut t0 = 0.0f32;
+        let mut t1 = 0.0f32;
+        let mut t2 = 0.0f32;
+        let mut t3 = 0.0f32;
+        for j in 0..4 {
+            t0 += a0[j] * b0[j];
+            t1 += a0[4 + j] * b0[4 + j];
+            t2 += a0[8 + j] * b0[8 + j];
+            t3 += a0[12 + j] * b0[12 + j];
+        }
+        s0 += t0;
+        s1 += t1;
+        s2 += t2;
+        s3 += t3;
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 16..n {
+        tail += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+/// Dequantized inner product against f16-stored keys, mirroring the
+/// blocked reduction structure of [`dot`] (each `b` element is expanded
+/// to f32 before the multiply, which is exact, so the only divergence
+/// from an f32 dot is the f16 storage rounding itself).
+#[inline]
+pub fn dot_f16(a: &[f32], b: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 16;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 16;
+        let (a0, b0) = (&a[i..i + 16], &b[i..i + 16]);
+        let mut t0 = 0.0f32;
+        let mut t1 = 0.0f32;
+        let mut t2 = 0.0f32;
+        let mut t3 = 0.0f32;
+        for j in 0..4 {
+            t0 += a0[j] * f16_to_f32(b0[j]);
+            t1 += a0[4 + j] * f16_to_f32(b0[4 + j]);
+            t2 += a0[8 + j] * f16_to_f32(b0[8 + j]);
+            t3 += a0[12 + j] * f16_to_f32(b0[12 + j]);
+        }
+        s0 += t0;
+        s1 += t1;
+        s2 += t2;
+        s3 += t3;
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 16..n {
+        tail += a[i] * f16_to_f32(b[i]);
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+/// SQ8 dequant-dot: `Σ qs[j] * code[j]` — the exact sequential loop the
+/// pre-dispatch `SqIndex::scaled_score` used (the caller adds the
+/// `<query, lo>` constant).
+#[inline]
+pub fn sq8_dot(qs: &[f32], code: &[u8]) -> f32 {
+    let mut s = 0.0f32;
+    for (&x, &c) in qs.iter().zip(code) {
+        s += x * c as f32;
+    }
+    s
+}
+
+/// 8-bit ADC scan: `Σ_sub table[sub * 256 + code[sub]]` — the exact
+/// sequential loop the pre-dispatch `Pq::adc_score` used.
+#[inline]
+pub fn adc_scan8(table: &[f32], code: &[u8]) -> f32 {
+    let mut s = 0.0f32;
+    for (sub, &c) in code.iter().enumerate() {
+        s += table[sub * 256 + c as usize];
+    }
+    s
+}
+
+/// 4-bit packed ADC scan over an `[m, 16]` table: subspace `2i` lives
+/// in the low nibble of byte `i`, subspace `2i+1` in the high nibble.
+#[inline]
+pub fn adc_scan4(table: &[f32], packed: &[u8], m: usize) -> f32 {
+    debug_assert!(packed.len() * 2 >= m);
+    let mut s = 0.0f32;
+    for sub in 0..m {
+        let byte = packed[sub >> 1];
+        let nib = if sub & 1 == 0 { byte & 0x0F } else { byte >> 4 };
+        s += table[sub * 16 + nib as usize];
+    }
+    s
+}
+
+/// Bitmask of entries NOT strictly below `floor` (bit `i` set iff
+/// `!(chunk[i] < floor)`) for a chunk of at most 32 scores. NaN compares
+/// false under `<`, so NaN lanes are kept — exactly the set of
+/// candidates `TopK::offer` would forward to `push`.
+#[inline]
+pub fn not_below_mask(chunk: &[f32], floor: f32) -> u32 {
+    debug_assert!(chunk.len() <= 32);
+    let mut mask = 0u32;
+    for (i, &s) in chunk.iter().enumerate() {
+        if !(s < floor) {
+            mask |= 1 << i;
+        }
+    }
+    mask
+}

@@ -2,44 +2,30 @@
 //! dot products, row normalization, and a power-iteration PCA used by the
 //! LeanVec-like index and the Fig. 29 diagnostics.
 //!
-//! Written to autovectorize under `-C target-cpu=native` (AVX-512 here):
-//! the inner loops are straight-line f32 FMA chains over contiguous rows
-//! with 4 independent accumulators to hide FMA latency.
+//! The inner-product kernel dispatches through
+//! [`crate::tensor::kernels`] (AVX2+FMA / NEON when the CPU has them,
+//! the scalar reference tier otherwise or under `AMIPS_FORCE_SCALAR=1`);
+//! everything else here is straight-line f32 code with independent
+//! accumulators that LLVM autovectorizes.
 
+use crate::tensor::kernels;
 use crate::tensor::Tensor;
 use crate::util::threads::parallel_rows_mut;
 
-/// `dot(a, b)` with 4-way unrolled independent accumulators.
+/// `dot(a, b)`, dispatched through [`crate::tensor::kernels`].
+///
+/// Reduction-order contract: the *scalar tier* result is pinned to the
+/// documented block order of [`kernels::scalar::dot`] (16-element
+/// blocks, four sequential 4-lane partials, `s0+s1+s2+s3+tail`) and is
+/// bit-identical to this function's pre-dispatch behavior. SIMD tiers
+/// re-associate the sum and agree with scalar only within the tolerance
+/// contract documented in [`crate::tensor::kernels`]. Within one
+/// process the tier is fixed, so any two `dot` calls on the same inputs
+/// are bit-identical to each other — which is what the batched ≡
+/// per-query contract relies on.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 16;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    // 16-wide blocks; LLVM maps each 4-lane accumulator onto vector FMAs.
-    for c in 0..chunks {
-        let i = c * 16;
-        let (a0, b0) = (&a[i..i + 16], &b[i..i + 16]);
-        let mut t0 = 0.0f32;
-        let mut t1 = 0.0f32;
-        let mut t2 = 0.0f32;
-        let mut t3 = 0.0f32;
-        for j in 0..4 {
-            t0 += a0[j] * b0[j];
-            t1 += a0[4 + j] * b0[4 + j];
-            t2 += a0[8 + j] * b0[8 + j];
-            t3 += a0[12 + j] * b0[12 + j];
-        }
-        s0 += t0;
-        s1 += t1;
-        s2 += t2;
-        s3 += t3;
-    }
-    let mut tail = 0.0f32;
-    for i in chunks * 16..n {
-        tail += a[i] * b[i];
-    }
-    s0 + s1 + s2 + s3 + tail
+    kernels::dot(a, b)
 }
 
 /// `y += alpha * x`.

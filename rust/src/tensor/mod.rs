@@ -1,5 +1,12 @@
 //! Dense row-major f32 tensors + the linear algebra the substrates need.
+//!
+//! The hot scoring loops route through [`kernels`], a runtime-dispatched
+//! layer with AVX2+FMA / NEON tiers and a bit-identical scalar fallback
+//! (`AMIPS_FORCE_SCALAR=1` pins it). [`half`] is the binary16 codec
+//! behind the compact `storage=f16` key matrices.
 
+pub mod half;
+pub mod kernels;
 mod linalg;
 #[allow(clippy::module_inception)]
 mod tensor;

@@ -611,3 +611,210 @@ fn catalog_open_rejects_manifest_artifact_mismatch() {
     std::fs::write(&manifest, "only-one-field\n").unwrap();
     assert!(Catalog::open(&root).is_err());
 }
+
+// ---------------------------------------------------------------------------
+// Version-2 compact-storage payloads (storage=f16 / bits=4) and the v1
+// backwards-compatibility contract
+// ---------------------------------------------------------------------------
+
+/// Round-trip + corruption fuzz for every compact-storage variant: the
+/// v2 payload fields (f16 key rows, 4-bit packed codes) must survive
+/// save → load with bit-identical hits, and byte flips / truncations
+/// must yield typed errors or consistent indexes — never panics.
+#[test]
+fn compact_storage_artifacts_round_trip_and_survive_corruption() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let keys = unit(&[160, D], 52);
+    let queries = unit(&[4, D], 53);
+    let specs = [
+        "flat(storage=f16)",
+        "pq(bits=4)",
+        "scann(nlist=8,bits=4)",
+        "leanvec(nlist=8,storage=f16)",
+    ];
+    let mut rng = test_rng(55);
+    for spec_str in specs {
+        let spec: IndexSpec = spec_str.parse().unwrap();
+        let idx = spec
+            .build(
+                &keys,
+                &BuildCtx {
+                    sample_queries: Some(&queries),
+                    seed: 54,
+                },
+            )
+            .unwrap_or_else(|e| panic!("{spec_str}: {e:#}"));
+        assert_round_trips(idx.as_ref(), &queries, spec_str);
+
+        let bytes = save_bytes(idx.as_ref());
+        let (n_orig, d_orig) = (idx.len(), idx.dim());
+        for case in 0..prop_cases(40) {
+            let mut bad = bytes.clone();
+            let pos = rng.below(bad.len());
+            bad[pos] ^= (1 + rng.below(255)) as u8;
+            let outcome = catch_unwind(AssertUnwindSafe(|| load_from(&mut bad.as_slice())));
+            let loaded = outcome.unwrap_or_else(|_| {
+                panic!("{spec_str} case {case}: load panicked after flipping byte {pos}")
+            });
+            if let Ok(loaded) = loaded {
+                assert_eq!(
+                    (loaded.len(), loaded.dim()),
+                    (n_orig, d_orig),
+                    "{spec_str} case {case}: flip at {pos} loaded an inconsistent index"
+                );
+                let res = catch_unwind(AssertUnwindSafe(|| {
+                    loaded.search_effort(queries.row(0), 3, Effort::Exhaustive)
+                }));
+                assert!(
+                    res.is_ok(),
+                    "{spec_str} case {case}: search panicked after flip at {pos}"
+                );
+            }
+        }
+        for case in 0..prop_cases(30) {
+            let cut = rng.below(bytes.len());
+            let outcome = catch_unwind(AssertUnwindSafe(|| load_from(&mut &bytes[..cut])));
+            let loaded = outcome.unwrap_or_else(|_| {
+                panic!("{spec_str} case {case}: load panicked on truncation at {cut}")
+            });
+            assert!(
+                loaded.is_err(),
+                "{spec_str} case {case}: truncation at {cut} of {} must fail",
+                bytes.len()
+            );
+        }
+    }
+}
+
+/// Local FNV-1a (the artifact checksum) so the tests below can reframe
+/// payloads without crate-private helpers.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Offset + length of the payload inside a framed artifact
+/// (magic, version u32, tag str, dim u64, len u64, spec str, plen u64).
+fn frame_payload(bytes: &[u8]) -> (usize, usize) {
+    let tag_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let mut off = 12 + tag_len + 16;
+    let spec_len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+    off += 4 + spec_len;
+    let plen = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+    (off + 8, plen)
+}
+
+/// Rebuild the artifact as version 1 around a hand-edited payload
+/// (header copied, version field rewritten, length + checksum redone).
+fn reframe_v1(bytes: &[u8], new_payload: &[u8]) -> Vec<u8> {
+    let (pstart, _) = frame_payload(bytes);
+    let mut out = bytes[..pstart - 8].to_vec();
+    out[4..8].copy_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&(new_payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(new_payload);
+    out.extend_from_slice(&fnv1a64(new_payload).to_le_bytes());
+    out
+}
+
+/// Bytes consumed by one tensor at the head of `cur`.
+fn tensor_len(cur: &[u8]) -> usize {
+    let mut r: &[u8] = cur;
+    Tensor::read_from(&mut r).unwrap();
+    cur.len() - r.len()
+}
+
+/// Bytes consumed by one u64-length-prefixed array of `elem`-byte items.
+fn arr_len(cur: &[u8], elem: usize) -> usize {
+    8 + u64::from_le_bytes(cur[..8].try_into().unwrap()) as usize * elem
+}
+
+fn assert_loads_identically(
+    v1: &[u8],
+    orig: &dyn VectorIndex,
+    queries: &Tensor,
+    label: &str,
+) {
+    let loaded = load_from(&mut &v1[..]).unwrap_or_else(|e| panic!("{label}: {e:#}"));
+    assert_eq!(loaded.spec(), orig.spec(), "{label}");
+    let req = SearchRequest::top_k(5).effort(Effort::Exhaustive);
+    let a = orig.search(queries, &req).unwrap();
+    let b = loaded.search(queries, &req).unwrap();
+    for q in 0..queries.rows() {
+        assert_eq!(a.hits[q].ids, b.hits[q].ids, "{label} q{q}");
+        assert_eq!(a.hits[q].scores, b.hits[q].scores, "{label} q{q}");
+    }
+}
+
+/// The binding v1 contract: version-1 artifacts (which predate the
+/// storage tag and the PQ `bits` field) must load bit-identically to
+/// the f32/8-bit build that would have written them. v1 streams are
+/// constructed by hand here — current writers always emit v2, so this
+/// is exactly the archived-artifact scenario.
+#[test]
+fn hand_built_v1_artifacts_load_bit_identically() {
+    let keys = unit(&[N, D], 50);
+    let queries = unit(&[8, D], 51);
+
+    // flat: the v1 payload is the bare f32 key tensor (v2 prefixes a
+    // u32 storage tag)
+    let flat = build("flat", &keys, &queries);
+    let v2 = save_bytes(flat.as_ref());
+    let (pstart, plen) = frame_payload(&v2);
+    let payload = &v2[pstart..pstart + plen];
+    assert_eq!(&payload[..4], &0u32.to_le_bytes(), "f32 storage tag");
+    let v1 = reframe_v1(&v2, &payload[4..]);
+    assert_loads_identically(&v1, flat.as_ref(), &queries, "flat v1");
+
+    // pq: the v1 payload lacks the `bits` u64 between (d, m, dsub) and
+    // the codebooks
+    let pq = build("pq", &keys, &queries);
+    let v2 = save_bytes(pq.as_ref());
+    let (pstart, plen) = frame_payload(&v2);
+    let payload = &v2[pstart..pstart + plen];
+    assert_eq!(
+        &payload[24..32],
+        &8u64.to_le_bytes(),
+        "v2 bits field after d/m/dsub"
+    );
+    let mut p1 = payload[..24].to_vec();
+    p1.extend_from_slice(&payload[32..]);
+    let v1 = reframe_v1(&v2, &p1);
+    assert_loads_identically(&v1, pq.as_ref(), &queries, "pq v1");
+
+    // scann: same `bits` removal, after centroids/packed tensors and the
+    // codes/ids/offsets arrays + the quantizer's (m, dsub)
+    let scann = build("scann", &keys, &queries);
+    let v2 = save_bytes(scann.as_ref());
+    let (pstart, plen) = frame_payload(&v2);
+    let payload = &v2[pstart..pstart + plen];
+    let mut off = tensor_len(payload); // centroids
+    off += tensor_len(&payload[off..]); // packed keys
+    off += arr_len(&payload[off..], 1); // codes
+    off += arr_len(&payload[off..], 4); // ids
+    off += arr_len(&payload[off..], 8); // offsets
+    off += 16; // m, dsub
+    assert_eq!(&payload[off..off + 8], &8u64.to_le_bytes(), "scann bits");
+    let mut p1 = payload[..off].to_vec();
+    p1.extend_from_slice(&payload[off + 8..]);
+    let v1 = reframe_v1(&v2, &p1);
+    assert_loads_identically(&v1, scann.as_ref(), &queries, "scann v1");
+
+    // leanvec: the v1 payload stores the re-rank keys as a bare tensor —
+    // drop the u32 storage tag after the comps tensor + mean array
+    let lv = build("leanvec", &keys, &queries);
+    let v2 = save_bytes(lv.as_ref());
+    let (pstart, plen) = frame_payload(&v2);
+    let payload = &v2[pstart..pstart + plen];
+    let mut off = tensor_len(payload); // comps
+    off += arr_len(&payload[off..], 4); // mean
+    assert_eq!(&payload[off..off + 4], &0u32.to_le_bytes(), "leanvec tag");
+    let mut p1 = payload[..off].to_vec();
+    p1.extend_from_slice(&payload[off + 4..]);
+    let v1 = reframe_v1(&v2, &p1);
+    assert_loads_identically(&v1, lv.as_ref(), &queries, "leanvec v1");
+}

@@ -191,9 +191,18 @@ fn mapped_pipeline_runs_on_every_backend() {
     let nlist = 8;
     let backends: Vec<Box<dyn amips::index::VectorIndex>> = vec![
         Box::new(IvfIndex::build(&ds.keys, nlist, 8, 1)),
-        Box::new(amips::index::scann::ScannIndex::build(&ds.keys, nlist, 8, 10, 4.0, 1)),
+        Box::new(amips::index::scann::ScannIndex::build(
+            &ds.keys, nlist, 8, 10, 4.0, 8, 1,
+        )),
         Box::new(amips::index::soar::SoarIndex::build(&ds.keys, nlist, 4, 1)),
-        Box::new(amips::index::leanvec::LeanVecIndex::build(&ds.keys, 16, nlist, None, 1)),
+        Box::new(amips::index::leanvec::LeanVecIndex::build(
+            &ds.keys,
+            16,
+            nlist,
+            None,
+            amips::index::Storage::F32,
+            1,
+        )),
     ];
     let req = SearchRequest::top_k(5)
         .effort(Effort::Probes(2))

@@ -315,6 +315,15 @@ fn metrics_listener_survives_seeded_garbage() {
             body.contains("amips_build_info"),
             "seed {seed}: snapshot missing build info: {body:?}"
         );
+        // the detected kernel dispatch tier is exported as a build_info
+        // label (satellite of the SIMD-dispatch PR)
+        assert!(
+            body.contains(&format!(
+                "kernel=\"{}\"",
+                amips::tensor::kernels::tier_name()
+            )),
+            "seed {seed}: snapshot missing kernel tier label: {body:?}"
+        );
         assert!(
             body.contains("amips_tenant_served_total{collection=\"docs\"}"),
             "seed {seed}: snapshot missing per-tenant lines: {body:?}"

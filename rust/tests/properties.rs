@@ -488,3 +488,73 @@ fn prop_tensor_io_roundtrip() {
         assert_eq!(t, back, "case {case} shape {shape:?}");
     }
 }
+
+// ---------------------------------------------------------------------------
+// Kernel dispatch: every available tier agrees with the scalar reference
+// within the documented tolerance, on remainder-lane dims and non-finite
+// inputs alike (the contract in `tensor::kernels`' module docs)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dot_tiers_agree_with_scalar_within_contract() {
+    use amips::tensor::kernels::{self, Tier};
+    let dims = [1usize, 3, 7, 8, 15, 64, 100, 127];
+    let mut rng = test_rng(1000);
+    for case in 0..prop_cases(60) {
+        let d = dims[rng.below(dims.len())];
+        let scale = [0.1f32, 1.0, 100.0][rng.below(3)];
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        rng.fill_normal(&mut a, scale);
+        rng.fill_normal(&mut b, scale);
+        let want = kernels::dot_with(Tier::Scalar, &a, &b);
+        let bound = 16.0 * f32::EPSILON
+            * a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum::<f32>()
+            + 1e-6;
+        for t in kernels::available_tiers() {
+            let got = kernels::dot_with(t, &a, &b);
+            assert!(
+                (got - want).abs() <= bound,
+                "case {case} {t:?} d={d}: {got} vs {want} (bound {bound})"
+            );
+        }
+        // the public dispatched entry point must agree with *some* tier's
+        // answer (it is one of them by construction)
+        let dispatched = kernels::dot(&a, &b);
+        assert!(
+            (dispatched - want).abs() <= bound,
+            "case {case} dispatched d={d}"
+        );
+    }
+}
+
+#[test]
+fn prop_dot_tiers_propagate_non_finite_in_kind() {
+    use amips::tensor::kernels;
+    let dims = [1usize, 3, 7, 8, 15, 64, 100, 127];
+    let mut rng = test_rng(1001);
+    for case in 0..prop_cases(40) {
+        let d = dims[rng.below(dims.len())];
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let poison = rng.below(d);
+        let (val, check): (f32, fn(f32) -> bool) = match case % 3 {
+            0 => (f32::NAN, f32::is_nan),
+            1 => {
+                b[poison] = 1.0;
+                (f32::INFINITY, |s: f32| s == f32::INFINITY)
+            }
+            _ => {
+                b[poison] = 1.0;
+                (f32::NEG_INFINITY, |s: f32| s == f32::NEG_INFINITY)
+            }
+        };
+        a[poison] = val;
+        for t in kernels::available_tiers() {
+            let got = kernels::dot_with(t, &a, &b);
+            assert!(check(got), "case {case} {t:?} d={d} poison={poison}: {got}");
+        }
+    }
+}

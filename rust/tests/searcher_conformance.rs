@@ -397,3 +397,114 @@ fn searcher_trait_objects_compose() {
     let batch = index.search(&queries, &req).unwrap();
     assert_eq!(one.hits[0].ids, batch.hits[0].ids);
 }
+
+// ---------------------------------------------------------------------------
+// Compact key storage (storage=f16 / bits=4): tolerance-tiered conformance
+// ---------------------------------------------------------------------------
+
+fn build_spec(spec: &str, keys: &Tensor, queries: &Tensor, seed: u64) -> Box<dyn VectorIndex> {
+    spec.parse::<IndexSpec>()
+        .unwrap_or_else(|e| panic!("{spec}: {e:#}"))
+        .build(
+            keys,
+            &BuildCtx {
+                sample_queries: Some(queries),
+                seed,
+            },
+        )
+        .unwrap_or_else(|e| panic!("{spec}: {e:#}"))
+}
+
+#[test]
+fn four_bit_pq_variants_stay_exact_at_max_effort() {
+    // Exact tier of the tolerance contract: 4-bit codes only steer the
+    // candidate pass; Effort::Exhaustive re-ranks every candidate
+    // against the exact f32 keys, so the f32 flat truth must still be
+    // matched exactly.
+    let keys = unit(&[N, D], 60);
+    let queries = unit(&[NQ, D], 61);
+    let req = SearchRequest::top_k(3).effort(Effort::Exhaustive);
+    let truth = FlatIndex::new(keys.clone()).search(&queries, &req).unwrap();
+    for spec in ["pq(bits=4)".to_string(), format!("scann(nlist={NLIST},bits=4)")] {
+        let index = build_spec(&spec, &keys, &queries, 62);
+        assert!(index.spec().to_string().contains("bits=4"), "{spec}");
+        assert_matches_flat_at_max_effort(index.as_ref(), &spec, &queries, &truth, &req);
+    }
+}
+
+#[test]
+fn f16_storage_variants_agree_with_f16_flat_truth() {
+    // Tolerance tier: f16 storage rounds each key element once, so the
+    // ground truth for id agreement is the f16 flat scan itself (same
+    // rounded keys, exhaustive), while scores must sit inside the
+    // binary16 rounding envelope of the f32 truth. Exact id-set
+    // agreement at Exhaustive is still required — just against the
+    // storage-matched truth.
+    let keys = unit(&[N, D], 63);
+    let queries = unit(&[NQ, D], 64);
+    let req = SearchRequest::top_k(3).effort(Effort::Exhaustive);
+    let f32_truth = FlatIndex::new(keys.clone()).search(&queries, &req).unwrap();
+    let f16_flat = build_spec("flat(storage=f16)", &keys, &queries, 65);
+    let f16_truth = f16_flat.search(&queries, &req).unwrap();
+    // unit vectors, d=16: per-score f16 rounding error is bounded by
+    // ||q||·||k||·2^-11 ≈ 5e-4; 1e-2 leaves a wide margin
+    for q in 0..NQ {
+        for (got, want) in f16_truth.hits[q].scores.iter().zip(&f32_truth.hits[q].scores) {
+            assert!(
+                (got - want).abs() <= 1e-2 * (1.0 + want.abs()),
+                "flat(storage=f16) q{q}: {got} vs f32 {want}"
+            );
+        }
+    }
+    let lv = build_spec(
+        &format!("leanvec(nlist={NLIST},storage=f16)"),
+        &keys,
+        &queries,
+        66,
+    );
+    let resp = lv.search(&queries, &req).unwrap();
+    for q in 0..NQ {
+        let mut a = resp.hits[q].ids.clone();
+        let mut b = f16_truth.hits[q].ids.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "leanvec(storage=f16) q{q}: id set vs f16 flat truth");
+        for (got, want) in resp.hits[q].scores.iter().zip(&f32_truth.hits[q].scores) {
+            assert!(
+                (got - want).abs() <= 1e-2 * (1.0 + want.abs()),
+                "leanvec(storage=f16) q{q}: {got} vs f32 {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn compact_storage_batched_is_bit_identical_to_per_query() {
+    // The PR 5 fused-path contract extends to every compact-storage
+    // variant: same dispatched kernel per (query, key) pair on both
+    // paths, so ids, scores and costs match bitwise.
+    let keys = unit(&[N, D], 67);
+    let queries = unit(&[NQ, D], 68);
+    let specs = [
+        "flat(storage=f16)".to_string(),
+        "pq(bits=4)".to_string(),
+        format!("scann(nlist={NLIST},bits=4)"),
+        format!("leanvec(nlist={NLIST},storage=f16)"),
+    ];
+    for spec in &specs {
+        let index = build_spec(spec, &keys, &queries, 69);
+        for effort in [Effort::Probes(2), Effort::Auto, Effort::Exhaustive] {
+            for b in [1usize, 5, NQ] {
+                let qb = queries.gather_rows(&(0..b).collect::<Vec<_>>());
+                let batched = index.search_batch_effort(&qb, 4, effort);
+                for q in 0..b {
+                    let single = index.search_effort(qb.row(q), 4, effort);
+                    let ctx = format!("{spec} {effort:?} b={b} q{q}");
+                    assert_eq!(batched[q].ids, single.ids, "{ctx}");
+                    assert_eq!(batched[q].scores, single.scores, "{ctx}");
+                    assert_eq!(batched[q].cost, single.cost, "{ctx}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,134 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over the hot-path bench trajectory.
+
+Compares the BENCH_hotpath.json produced by the current run against the
+committed baseline at the repo root and fails (exit 1) when any row's
+GFLOP/s drops by more than --threshold (default 25%) relative to the
+baseline. Rows are keyed by (backend, mode, kernel, batch) so the SIMD
+and forced-scalar passes gate independently.
+
+Intentional softness — this is a regression tripwire, not a lab:
+  * rows missing from either side are warned about, never fatal (the
+    detected kernel tier differs across machines, so a baseline recorded
+    on avx2fma hardware has rows a NEON/scalar runner can't produce);
+  * rows without a finite positive gflops value (e.g. the threaded
+    Searcher row) are skipped;
+  * a baseline marked "provisional": true (hand-written placeholder,
+    committed before the first hardware run) downgrades every failure to
+    advisory and exits 0 — replace it with real CI output to arm the
+    gate.
+
+CI skips the whole step when the PR carries the `skip-bench-gate` label
+(for intentional trade-offs; say why in the PR description).
+
+Usage:
+    python3 scripts/bench_gate.py \
+        --current rust/BENCH_hotpath.json --baseline BENCH_hotpath.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+KEY_FIELDS = ("backend", "mode", "kernel", "batch")
+
+
+def row_key(row):
+    return tuple(row.get(f) for f in KEY_FIELDS)
+
+
+def gated_rows(doc):
+    """Map row key -> gflops for every row with a usable throughput."""
+    out = {}
+    for row in doc.get("rows", []):
+        g = row.get("gflops")
+        if not isinstance(g, (int, float)) or not math.isfinite(g) or g <= 0:
+            continue
+        out[row_key(row)] = float(g)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", required=True, help="JSON from this run")
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="max tolerated fractional GFLOP/s drop (default 0.25)",
+    )
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline_doc = json.load(f)
+    with open(args.current) as f:
+        current_doc = json.load(f)
+
+    provisional = bool(baseline_doc.get("provisional"))
+    baseline = gated_rows(baseline_doc)
+    current = gated_rows(current_doc)
+
+    if not baseline:
+        print("bench gate: baseline has no gatable rows; nothing to compare")
+        return 0
+
+    failures = []
+    compared = 0
+    for key, base_g in sorted(baseline.items()):
+        cur_g = current.get(key)
+        label = "/".join(str(k) for k in key)
+        if cur_g is None:
+            print(f"  warn: {label}: row missing from current run (skipped)")
+            continue
+        compared += 1
+        drop = (base_g - cur_g) / base_g
+        status = "ok"
+        if drop > args.threshold:
+            status = "FAIL"
+            failures.append((label, base_g, cur_g, drop))
+        print(
+            f"  {status:4} {label}: {base_g:.2f} -> {cur_g:.2f} GFLOP/s "
+            f"({-drop:+.1%})"
+        )
+
+    for key in sorted(set(current) - set(baseline)):
+        label = "/".join(str(k) for k in key)
+        print(f"  note: {label}: new row with no baseline (not gated)")
+
+    if compared == 0:
+        print("bench gate: no overlapping rows (different machine tier?); passing")
+        return 0
+
+    if failures:
+        print(
+            f"\nbench gate: {len(failures)}/{compared} rows regressed more than "
+            f"{args.threshold:.0%}:"
+        )
+        for label, base_g, cur_g, drop in failures:
+            print(f"  {label}: {base_g:.2f} -> {cur_g:.2f} GFLOP/s (-{drop:.1%})")
+        if provisional:
+            print(
+                "baseline is marked provisional (hand-written placeholder) — "
+                "advisory only. Replace BENCH_hotpath.json with real CI "
+                "output and drop the marker to arm the gate."
+            )
+            return 0
+        print(
+            "If the regression is an intentional trade-off, apply the "
+            "`skip-bench-gate` label and explain it in the PR; otherwise "
+            "refresh the baseline from a CI artifact alongside the fix."
+        )
+        return 1
+
+    suffix = " (provisional baseline — advisory)" if provisional else ""
+    print(f"\nbench gate: all {compared} rows within {args.threshold:.0%}{suffix}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
