@@ -1,0 +1,173 @@
+//! §Perf: cold-open cost of the serving path — the time from "artifact
+//! on disk, nothing decoded" to a ready index, and the resident memory
+//! that readiness costs, as the corpus grows. With the aligned v3
+//! layout under `--features mmap`, open is O(headers): the key matrix
+//! stays in the page cache and faults in on first search, so the
+//! cold-open row should be flat in `n` while the decode-into-RAM build
+//! (default features) grows linearly. The first-query row then pays the
+//! page-fault bill exactly once.
+//!
+//! Rows land in `BENCH_startup.json` (modes `cold_open` / `first_query`
+//! / `warm_query`); CI merges them into the uploaded
+//! `BENCH_hotpath.json` via `scripts/bench_merge.py`. They carry no
+//! `gflops` field value, so `scripts/bench_gate.py` skips them — these
+//! are trajectory rows, not gated ones.
+//!
+//! Corpus sizes scale with `AMIPS_STARTUP_NS` (comma-separated, default
+//! `2000,8000,32000`) and `AMIPS_BENCH_D` (default 32).
+
+use amips::api::Effort;
+use amips::bench_support::fixtures;
+use amips::bench_support::report::{JsonRows, JsonVal, Report};
+use amips::index::{BuildCtx, Catalog, IndexSpec};
+use amips::util::timer::{time_reps, Stats};
+use amips::util::TempDir;
+use anyhow::Result;
+use std::hint::black_box;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_ns() -> Vec<usize> {
+    std::env::var("AMIPS_STARTUP_NS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .filter(|ns: &Vec<usize>| !ns.is_empty())
+        .unwrap_or_else(|| vec![2000, 8000, 32000])
+}
+
+/// (VmRSS, VmHWM) in KiB from /proc/self/status — 0 off linux, where
+/// the RSS columns are merely absent from the trajectory.
+fn rss_kb() -> (u64, u64) {
+    #[cfg(target_os = "linux")]
+    {
+        if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+            let grab = |key: &str| {
+                s.lines()
+                    .find(|l| l.starts_with(key))
+                    .and_then(|l| l.split_whitespace().nth(1))
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(0)
+            };
+            return (grab("VmRSS:"), grab("VmHWM:"));
+        }
+    }
+    (0, 0)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_row(
+    json: &mut JsonRows,
+    mode: &str,
+    n: usize,
+    d: usize,
+    t: &Stats,
+    rss_kb_now: u64,
+    rss_kb_delta: u64,
+) {
+    json.push(&[
+        ("backend", JsonVal::S("flat".into())),
+        ("mode", JsonVal::S(mode.into())),
+        ("kernel", JsonVal::S("-".into())),
+        ("batch", JsonVal::I(1)),
+        ("n", JsonVal::I(n as u64)),
+        ("d", JsonVal::I(d as u64)),
+        ("mean_s", JsonVal::F(t.mean)),
+        ("p95_s", JsonVal::F(t.p95)),
+        // no throughput: the gate keys on finite positive gflops, so
+        // these rows ride along ungated
+        ("gflops", JsonVal::F(f64::NAN)),
+        ("qps", JsonVal::F(1.0 / t.mean)),
+        ("rss_kb", JsonVal::I(rss_kb_now)),
+        ("rss_delta_kb", JsonVal::I(rss_kb_delta)),
+    ]);
+}
+
+fn main() -> Result<()> {
+    let ns = env_ns();
+    let d = env_usize("AMIPS_BENCH_D", 32);
+    let mapped = cfg!(feature = "mmap");
+
+    let mut rep = Report::new("§Perf: cold-open time + resident memory vs corpus size");
+    rep.header(&["corpus", "phase", "mean", "p95", "RSS", "ΔRSS"]);
+    let mut json = JsonRows::new("startup");
+
+    let mut open_means = Vec::new();
+    for &n in &ns {
+        let tmp = TempDir::new("amips-startup");
+        let root = tmp.join("catalog");
+        {
+            let keys = fixtures::synth_keys(n, d, 42);
+            let spec: IndexSpec = "flat".parse()?;
+            let mut catalog = Catalog::create(&root)?;
+            catalog.build_collection("docs", &spec, &keys, &BuildCtx::seeded(7))?;
+        } // builder state dropped: only the on-disk artifact survives
+
+        // cold open, repeated: each rep re-opens from the path and drops
+        // the entry. The page cache is warm (we just wrote the file) —
+        // what's measured is decode work, the thing the zero-copy layout
+        // removes.
+        let (rss0, _) = rss_kb();
+        let reps = 10;
+        let open = Stats::from(&time_reps(1, reps, || {
+            black_box(Catalog::open_collection(&root, "docs").unwrap());
+        }));
+        let (rss_open, _) = rss_kb();
+        open_means.push(open.mean);
+
+        // hold one open entry and pay the first (faulting) query, then a
+        // warm one
+        let entry = Catalog::open_collection(&root, "docs")?;
+        let query = fixtures::synth_keys(1, d, 9);
+        let first = Stats::from(&time_reps(1, 1, || {
+            black_box(entry.index.search_effort(query.row(0), 10, Effort::Exhaustive));
+        }));
+        let (rss_first, hwm) = rss_kb();
+        let warm = Stats::from(&time_reps(1, 5, || {
+            black_box(entry.index.search_effort(query.row(0), 10, Effort::Exhaustive));
+        }));
+
+        let fmt_ms = |t: &Stats| format!("{:.3} ms", t.mean * 1e3);
+        let fmt_p95 = |t: &Stats| format!("{:.3} ms", t.p95 * 1e3);
+        for (phase, t, rss, delta) in [
+            ("cold_open", &open, rss_open, rss_open.saturating_sub(rss0)),
+            ("first_query", &first, rss_first, rss_first.saturating_sub(rss_open)),
+            ("warm_query", &warm, rss_first, 0),
+        ] {
+            rep.row(&[
+                format!("{n}x{d}"),
+                phase.to_string(),
+                fmt_ms(t),
+                fmt_p95(t),
+                format!("{} KiB", rss),
+                format!("{} KiB", delta),
+            ]);
+            push_row(&mut json, phase, n, d, t, rss, delta);
+        }
+        let _ = hwm; // VmHWM is process-wide; the per-size delta is the signal
+    }
+
+    if let (Some(first), Some(last)) = (open_means.first(), open_means.last()) {
+        let ratio = last / first.max(1e-9);
+        rep.note(format!(
+            "cold-open scaling: {:.2}x from n={} to n={} (mapped={mapped}; \
+             a zero-copy open should stay near 1x, a decode-into-RAM open \
+             grows with the corpus)",
+            ratio,
+            ns.first().unwrap(),
+            ns.last().unwrap(),
+        ));
+    }
+    rep.note(
+        "AMIPS_STARTUP_NS / AMIPS_BENCH_D to rescale; RSS columns read \
+         /proc/self/status (0 off linux)"
+            .to_string(),
+    );
+    rep.emit("bench_startup");
+    json.emit();
+    Ok(())
+}

@@ -193,6 +193,16 @@ impl Shared {
             "amips_draining {}\n",
             self.shutting.load(Ordering::SeqCst) as u8
         ));
+        // zero-copy accounting (process-wide): bytes served as borrowed
+        // views of mapped containers vs bytes decoded into fresh RAM
+        out.push_str(&format!(
+            "amips_mapped_bytes {}\n",
+            crate::tensor::mapped::stats::mapped_bytes()
+        ));
+        out.push_str(&format!(
+            "amips_copied_bytes {}\n",
+            crate::tensor::mapped::stats::copied_bytes()
+        ));
         for (name, tenant) in &self.tenants {
             let name = esc(name);
             let c = tenant.collection_stats();
@@ -224,6 +234,16 @@ impl Shared {
             out.push_str(&format!(
                 "amips_tenant_latency_seconds_max{label} {}\n",
                 hist.max_s()
+            ));
+        }
+        for (name, coll) in &self.mutables {
+            let label = format!("{{collection=\"{}\"}}", esc(name));
+            let (mapped, copied) = coll.segment_open_stats();
+            out.push_str(&format!(
+                "amips_tenant_segments_mapped{label} {mapped}\n"
+            ));
+            out.push_str(&format!(
+                "amips_tenant_segments_copied{label} {copied}\n"
             ));
         }
         for c in self.compactor_counters.lock().unwrap().iter() {

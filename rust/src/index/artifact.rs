@@ -3,50 +3,75 @@
 //! storage) to every serving replica, and reload it without re-running
 //! k-means/PQ training.
 //!
-//! Layout (little-endian throughout, reusing the [`Tensor`] codec for
-//! every dense block):
+//! Layout (little-endian throughout):
 //!
 //! ```text
 //! magic    b"AMIX"
-//! version  u32 (currently 2; version-1 artifacts still load)
+//! version  u32 (currently 3; version-1/2 artifacts still load)
 //! backbone len-prefixed utf8 tag ("ivf", "scann", ...)
 //! dim      u64
 //! len      u64 (number of indexed keys)
 //! spec     len-prefixed utf8 IndexSpec echo ("ivf(nlist=64,iters=15)")
+//! pad      u32 length + zero bytes (v3+: places the payload base on a
+//!          64-byte file offset)
 //! payload  u64 length + backbone-specific bytes
 //! checksum u64 FNV-1a over the payload
 //! ```
+//!
+//! Version 3 is the *aligned* layout: inside the payload, every bulk
+//! block (f32 key matrices, f16 rows, SQ8/PQ code matrices, id maps)
+//! is written as a 64-byte-aligned, length-prefixed section with an
+//! explicit self-describing pad. Because the payload base itself lands
+//! on a 64-byte file offset (and mappings are page-aligned), a reader
+//! holding the file as an `Arc<Mapped>` can serve those sections as
+//! borrowed [`Section`] views — the kernels then scan straight from
+//! the page cache with zero deserialize. Readers go through [`Src`],
+//! which remembers the backing mapping; misaligned sections, RAM-backed
+//! buffers on odd addresses, or big-endian hosts silently fall back to
+//! the decode-and-copy path (checked in [`Section::view`], never UB).
 //!
 //! Every [`VectorIndex`] knows how to write its payload
 //! ([`VectorIndex::write_payload`]) and the framed artifact
 //! ([`VectorIndex::save`]); [`load`]/[`load_from`] read the header,
 //! verify the checksum and dispatch on the backbone tag. Corrupt
 //! headers, short reads and checksum mismatches are errors, never
-//! panics.
+//! panics. One deliberate exception: [`load`] of a *mapped* v3 file
+//! skips the full-payload checksum — verifying it would fault in every
+//! page and defeat the O(1) lazy open — and relies on the structural
+//! bounds checks instead; byte-stream loads and pre-v3 files verify in
+//! full as before.
 
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::index::{flat, ivf, leanvec, pq, scann, shard, soar, sq, VectorIndex};
+use crate::tensor::mapped::{stats, Mapped, Pod, Section};
 use crate::tensor::Tensor;
 
 /// Artifact magic bytes.
 pub const MAGIC: &[u8; 4] = b"AMIX";
 /// Current artifact format version. Version 2 added the compact-storage
 /// payload fields (`storage=f16` key matrices, 4-bit packed PQ codes);
-/// writers always emit the current version.
-pub const VERSION: u32 = 2;
-/// Oldest artifact version this build still reads. Version-1 payloads
-/// decode bit-identically to the build that wrote them (the readers
-/// default the new fields to f32 storage / 8-bit codes).
+/// version 3 is the 64-byte-aligned zero-copy layout. Writers always
+/// emit the current version.
+pub const VERSION: u32 = 3;
+/// Oldest artifact version this build still reads. Version-1/2 payloads
+/// decode bit-identically to the build that wrote them, through the
+/// decode-into-RAM path.
 pub const MIN_VERSION: u32 = 1;
 /// Conventional file extension for index artifacts.
 pub const EXTENSION: &str = "ami";
 /// Upper bound on any element count read from disk — corrupt length
 /// fields must fail fast instead of attempting a huge allocation.
 const MAX_ELEMS: u64 = 1 << 31;
+/// Alignment of every bulk section in a v3 payload. 64 divides the
+/// 4096-byte page size, so page-aligned mappings keep it for free, and
+/// it covers every vector ISA this repo dispatches to (AVX-512 wants
+/// at most 64).
+pub(crate) const SECTION_ALIGN: usize = 64;
 
 /// Parsed artifact header (everything before the payload).
 pub struct ArtifactHeader {
@@ -236,10 +261,210 @@ pub(crate) fn r_tensor(r: &mut dyn Read) -> Result<Tensor> {
 }
 
 // ---------------------------------------------------------------------------
+// Src: the payload cursor the zero-copy readers decode through.
+// ---------------------------------------------------------------------------
+
+/// A payload cursor over an in-memory byte slice that remembers the
+/// backing [`Mapped`] buffer (when there is one), so section readers
+/// can hand out borrowed [`Section`] views instead of copies. It
+/// implements [`Read`], so every legacy `r_*` helper works on it
+/// unchanged — version-stable payload fields keep their old codecs.
+pub struct Src<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    map: Option<&'a Arc<Mapped>>,
+    /// Byte offset of `buf[0]` within `map` (0 when unmapped).
+    base: usize,
+}
+
+impl<'a> Src<'a> {
+    /// Cursor over plain bytes — every section decodes by copy.
+    pub fn new(buf: &'a [u8]) -> Src<'a> {
+        Src {
+            buf,
+            pos: 0,
+            map: None,
+            base: 0,
+        }
+    }
+
+    /// Cursor over `buf`, which must be a subslice of `map`'s bytes —
+    /// aligned sections then decode as borrowed views of the mapping.
+    pub fn mapped(buf: &'a [u8], map: &'a Arc<Mapped>) -> Src<'a> {
+        let base = (buf.as_ptr() as usize).wrapping_sub(map.as_slice().as_ptr() as usize);
+        debug_assert!(base.checked_add(buf.len()).is_some_and(|e| e <= map.len()));
+        Src {
+            buf,
+            pos: 0,
+            map: Some(map),
+            base,
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Whether the cursor is backed by a real file mapping (not a RAM
+    /// fallback buffer).
+    fn backed_by_map(&self) -> bool {
+        self.map.is_some_and(|m| m.is_map())
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.remaining() >= n,
+            "artifact truncated: wanted {n} bytes, {} remain",
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+}
+
+impl Read for Src<'_> {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        let n = out.len().min(self.remaining());
+        out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Aligned (v3) section codecs.
+// ---------------------------------------------------------------------------
+
+/// Pad `w` with a self-describing gap (u32 pad length + that many zero
+/// bytes) so the next byte lands on a [`SECTION_ALIGN`] boundary
+/// relative to the payload start. Framing places the payload base on a
+/// 64-byte *file* offset, so payload-relative alignment is file (and
+/// mapping) alignment.
+pub(crate) fn w_align(w: &mut Vec<u8>) -> Result<()> {
+    let pad = (SECTION_ALIGN - ((w.len() + 4) % SECTION_ALIGN)) % SECTION_ALIGN;
+    w_u32(w, pad as u32)?;
+    w.resize(w.len() + pad, 0);
+    Ok(())
+}
+
+/// Consume a pad written by [`w_align`].
+pub(crate) fn r_align(src: &mut Src) -> Result<()> {
+    let pad = r_u32(&mut *src)? as usize;
+    ensure!(
+        pad < SECTION_ALIGN,
+        "implausible section pad {pad} in artifact"
+    );
+    src.take(pad)
+        .context("artifact truncated inside section pad")?;
+    Ok(())
+}
+
+fn w_section_raw(w: &mut Vec<u8>, n: usize, bytes: impl FnOnce(&mut Vec<u8>)) -> Result<()> {
+    w_u64(w, n as u64)?;
+    w_align(w)?;
+    bytes(w);
+    Ok(())
+}
+
+/// Aligned byte-matrix section (PQ/SQ8 code matrices).
+pub(crate) fn w_section_u8s(w: &mut Vec<u8>, v: &[u8]) -> Result<()> {
+    w_section_raw(w, v.len(), |w| w.extend_from_slice(v))
+}
+
+/// Aligned u16 section (f16 key rows).
+pub(crate) fn w_section_u16s(w: &mut Vec<u8>, v: &[u16]) -> Result<()> {
+    w_section_raw(w, v.len(), |w| {
+        for &x in v {
+            w.extend_from_slice(&x.to_le_bytes());
+        }
+    })
+}
+
+/// Aligned u32 section (sealed-segment id maps).
+pub(crate) fn w_section_u32s(w: &mut Vec<u8>, v: &[u32]) -> Result<()> {
+    w_section_raw(w, v.len(), |w| {
+        for &x in v {
+            w.extend_from_slice(&x.to_le_bytes());
+        }
+    })
+}
+
+/// Aligned f32 section (key matrices).
+pub(crate) fn w_section_f32s(w: &mut Vec<u8>, v: &[f32]) -> Result<()> {
+    w_section_raw(w, v.len(), |w| {
+        for &x in v {
+            w.extend_from_slice(&x.to_le_bytes());
+        }
+    })
+}
+
+/// Read an aligned section: a borrowed view of the backing mapping
+/// when the checked accessor admits it, a decoded copy otherwise.
+pub(crate) fn r_section<T: Pod>(src: &mut Src) -> Result<Section<T>> {
+    let n = checked_len(r_u64(&mut *src)?, "section")?;
+    r_align(src)?;
+    let bytes = n
+        .checked_mul(std::mem::size_of::<T>())
+        .context("section byte length overflows")?;
+    let off = src.base + src.pos;
+    let map = src.map.cloned();
+    let raw = src.take(bytes).context("artifact section truncated")?;
+    if let Some(map) = &map {
+        if let Some(sec) = Section::<T>::view(map, off, n) {
+            return Ok(sec);
+        }
+    }
+    stats::add_copied(bytes as u64);
+    Ok(Section::from_le_bytes(raw))
+}
+
+/// v3 tensor codec: rank + dims, then an aligned f32 section. (The
+/// legacy `w_tensor`/`r_tensor` codec — magic-prefixed, unaligned —
+/// stays for version-stable payload fields and `.amt` files.)
+pub(crate) fn w_tensor_v3(w: &mut Vec<u8>, t: &Tensor) -> Result<()> {
+    w_u32(w, t.shape().len() as u32)?;
+    for &d in t.shape() {
+        w_u64(w, d as u64)?;
+    }
+    w_section_f32s(w, t.data())
+}
+
+pub(crate) fn r_tensor_v3(src: &mut Src) -> Result<Tensor> {
+    let rank = r_u32(&mut *src)? as usize;
+    ensure!(rank <= 8, "implausible tensor rank {rank} in artifact");
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        let dim = r_u64(&mut *src)?;
+        ensure!(
+            dim > 0 && dim <= MAX_ELEMS,
+            "implausible tensor dim {dim} in artifact"
+        );
+        shape.push(dim as usize);
+    }
+    let n = match shape.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d)) {
+        Some(n) if n as u64 <= MAX_ELEMS => n,
+        _ => bail!("implausible tensor element count for shape {shape:?}"),
+    };
+    let data: Section<f32> = r_section(src)?;
+    ensure!(
+        data.len() == n,
+        "tensor section holds {} elements, shape {shape:?} wants {n}",
+        data.len()
+    );
+    Ok(Tensor::from_section(&shape, data))
+}
+
+// ---------------------------------------------------------------------------
 // Framing
 // ---------------------------------------------------------------------------
 
-/// Write a complete framed artifact: header, payload, checksum.
+/// Write a complete framed artifact: header, pad (so the payload base
+/// sits on a 64-byte file offset), payload, checksum.
 pub(crate) fn write_framed(
     w: &mut dyn Write,
     backbone: &str,
@@ -248,20 +473,28 @@ pub(crate) fn write_framed(
     spec: &str,
     payload: &[u8],
 ) -> Result<()> {
-    w.write_all(MAGIC)?;
-    w_u32(w, VERSION)?;
-    w_str(w, backbone)?;
-    w_u64(w, dim as u64)?;
-    w_u64(w, len as u64)?;
-    w_str(w, spec)?;
-    w_u64(w, payload.len() as u64)?;
+    let mut head = Vec::with_capacity(64 + backbone.len() + spec.len());
+    head.extend_from_slice(MAGIC);
+    w_u32(&mut head, VERSION)?;
+    w_str(&mut head, backbone)?;
+    w_u64(&mut head, dim as u64)?;
+    w_u64(&mut head, len as u64)?;
+    w_str(&mut head, spec)?;
+    // self-describing pad so that after the pad AND the payload-length
+    // u64, the payload base is SECTION_ALIGN-aligned from frame start
+    let pad = (SECTION_ALIGN - ((head.len() + 4 + 8) % SECTION_ALIGN)) % SECTION_ALIGN;
+    w_u32(&mut head, pad as u32)?;
+    head.resize(head.len() + pad, 0);
+    w_u64(&mut head, payload.len() as u64)?;
+    w.write_all(&head)?;
     w.write_all(payload)?;
     w_u64(w, fnv1a64(payload))?;
     Ok(())
 }
 
 /// Read and validate the artifact header (magic, version, tag, shape,
-/// spec echo), leaving the reader positioned at the payload length.
+/// spec echo), leaving the reader positioned at the header pad (v3+)
+/// or the payload length (v1/v2).
 pub fn read_header(r: &mut dyn Read) -> Result<ArtifactHeader> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)
@@ -289,35 +522,37 @@ pub fn read_header(r: &mut dyn Read) -> Result<ArtifactHeader> {
     })
 }
 
-/// Load a boxed index from any reader, verifying the checksum before a
-/// single payload byte is interpreted.
-pub fn load_from(r: &mut dyn Read) -> Result<Box<dyn VectorIndex>> {
-    let header = read_header(r)?;
-    let plen = checked_len(r_u64(r)?, "payload")?;
-    let mut payload = vec![0u8; plen];
-    r.read_exact(&mut payload)
-        .with_context(|| format!("index artifact truncated: expected a {plen}-byte payload"))?;
-    let want = r_u64(r).context("index artifact truncated: missing checksum")?;
-    let got = fnv1a64(&payload);
+/// Consume the v3 header pad (no-op for earlier versions).
+fn skip_header_pad(r: &mut dyn Read, version: u32) -> Result<()> {
+    if version < 3 {
+        return Ok(());
+    }
+    let pad = r_u32(r)? as usize;
     ensure!(
-        got == want,
-        "index artifact checksum mismatch (stored {want:#018x}, computed {got:#018x}): corrupt file"
+        pad < SECTION_ALIGN,
+        "implausible header pad {pad} in artifact"
     );
-    let mut cur: &[u8] = &payload;
-    // Backbones whose payloads grew in v2 take the header version and
-    // default the new fields when reading a v1 stream; the rest are
-    // version-stable (the sharded payload embeds fully framed per-shard
-    // artifacts, which carry their own versions).
+    let mut buf = [0u8; SECTION_ALIGN];
+    r.read_exact(&mut buf[..pad])
+        .context("artifact truncated inside header pad")?;
+    Ok(())
+}
+
+/// Dispatch one decoded payload on the backbone tag. Backbones whose
+/// payloads changed across versions take the header version; the rest
+/// are version-stable (the sharded payload embeds fully framed
+/// per-shard artifacts, which carry their own versions).
+fn decode_backbone(header: &ArtifactHeader, cur: &mut Src) -> Result<Box<dyn VectorIndex>> {
     let v = header.version;
     let index: Box<dyn VectorIndex> = match header.backbone.as_str() {
-        "flat" => Box::new(flat::FlatIndex::read_payload(&mut cur, v)?),
-        "ivf" => Box::new(ivf::IvfIndex::read_payload(&mut cur)?),
-        "pq" => Box::new(pq::PqIndex::read_payload(&mut cur, v)?),
-        "sq8" => Box::new(sq::SqIndex::read_payload(&mut cur)?),
-        "scann" => Box::new(scann::ScannIndex::read_payload(&mut cur, v)?),
-        "soar" => Box::new(soar::SoarIndex::read_payload(&mut cur)?),
-        "leanvec" => Box::new(leanvec::LeanVecIndex::read_payload(&mut cur, v)?),
-        "sharded" => Box::new(shard::ShardedIndex::read_payload(&mut cur)?),
+        "flat" => Box::new(flat::FlatIndex::read_payload(cur, v)?),
+        "ivf" => Box::new(ivf::IvfIndex::read_payload(&mut *cur)?),
+        "pq" => Box::new(pq::PqIndex::read_payload(cur, v)?),
+        "sq8" => Box::new(sq::SqIndex::read_payload(cur, v)?),
+        "scann" => Box::new(scann::ScannIndex::read_payload(&mut *cur, v)?),
+        "soar" => Box::new(soar::SoarIndex::read_payload(&mut *cur)?),
+        "leanvec" => Box::new(leanvec::LeanVecIndex::read_payload(cur, v)?),
+        "sharded" => Box::new(shard::ShardedIndex::read_payload(&mut *cur)?),
         other => bail!("unknown backbone tag '{other}' in index artifact"),
     };
     ensure!(
@@ -331,12 +566,92 @@ pub fn load_from(r: &mut dyn Read) -> Result<Box<dyn VectorIndex>> {
     Ok(index)
 }
 
-/// Load an index artifact from disk.
+/// Load a boxed index from any byte stream, verifying the checksum
+/// before a single payload byte is interpreted. This path always
+/// decodes into RAM (no mapping to borrow from).
+pub fn load_from(r: &mut dyn Read) -> Result<Box<dyn VectorIndex>> {
+    let header = read_header(r)?;
+    skip_header_pad(r, header.version)?;
+    let plen = checked_len(r_u64(r)?, "payload")?;
+    let mut payload = vec![0u8; plen];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("index artifact truncated: expected a {plen}-byte payload"))?;
+    let want = r_u64(r).context("index artifact truncated: missing checksum")?;
+    let got = fnv1a64(&payload);
+    ensure!(
+        got == want,
+        "index artifact checksum mismatch (stored {want:#018x}, computed {got:#018x}): corrupt file"
+    );
+    decode_backbone(&header, &mut Src::new(&payload))
+}
+
+/// Decode one framed artifact starting at `src`'s position, serving
+/// aligned sections as borrowed views of `src`'s backing mapping.
+///
+/// Lazy-open rule: for a v3 frame on a *real* mapping, the full-payload
+/// checksum is skipped — verifying it would fault in every page, making
+/// cold open O(corpus) again. The structural bounds checks (section
+/// pads, lengths, shape cross-checks) still run; RAM-backed buffers and
+/// pre-v3 frames verify the checksum in full.
+pub(crate) fn load_from_src(src: &mut Src) -> Result<Box<dyn VectorIndex>> {
+    let header = read_header(&mut *src)?;
+    skip_header_pad(&mut *src, header.version)?;
+    let plen = checked_len(r_u64(&mut *src)?, "payload")?;
+    let off = src.base + src.pos;
+    let map = src.map;
+    let payload = src.take(plen).with_context(|| {
+        format!("index artifact truncated: expected a {plen}-byte payload")
+    })?;
+    let want = r_u64(&mut *src).context("index artifact truncated: missing checksum")?;
+    let lazy = header.version >= 3 && src.backed_by_map();
+    if !lazy {
+        let got = fnv1a64(payload);
+        ensure!(
+            got == want,
+            "index artifact checksum mismatch (stored {want:#018x}, computed {got:#018x}): corrupt file"
+        );
+    }
+    let mut cur = match map {
+        Some(m) => {
+            debug_assert_eq!(off, (payload.as_ptr() as usize) - (m.as_slice().as_ptr() as usize));
+            Src::mapped(payload, m)
+        }
+        None => Src::new(payload),
+    };
+    decode_backbone(&header, &mut cur)
+}
+
+/// Load an index artifact from a shared mapping (zero-copy when the
+/// layout allows; the decode-into-RAM fallback otherwise). `label` is
+/// only used in the legacy-fallback warning.
+pub fn load_mapped(map: &Arc<Mapped>, label: &str) -> Result<Box<dyn VectorIndex>> {
+    let mut src = Src::mapped(map.as_slice(), map);
+    // peek the version for the one-line legacy warning without
+    // disturbing the cursor
+    if map.is_map() && map.len() >= 8 {
+        let v = u32::from_le_bytes([map[4], map[5], map[6], map[7]]);
+        if (MIN_VERSION..3).contains(&v) {
+            eprintln!(
+                "amips: {label}: legacy v{v} artifact under mmap — decoding by copy \
+                 (re-save to get the zero-copy v{VERSION} layout)"
+            );
+            stats::add_copied(map.len() as u64);
+        }
+    }
+    load_from_src(&mut src)
+}
+
+/// Load an index artifact from disk, through a shared [`Mapped`]
+/// buffer: mmap under `--features mmap` (v3 artifacts then serve their
+/// key/code sections straight from the page cache), a whole-file read
+/// otherwise.
 pub fn load(path: &Path) -> Result<Box<dyn VectorIndex>> {
-    let f = std::fs::File::open(path)
-        .with_context(|| format!("opening index artifact {}", path.display()))?;
-    let mut r = std::io::BufReader::new(f);
-    load_from(&mut r).with_context(|| format!("loading index artifact {}", path.display()))
+    let map = Arc::new(
+        Mapped::open(path)
+            .with_context(|| format!("opening index artifact {}", path.display()))?,
+    );
+    load_mapped(&map, &path.display().to_string())
+        .with_context(|| format!("loading index artifact {}", path.display()))
 }
 
 /// Save an index artifact to disk.
@@ -373,6 +688,7 @@ mod tests {
         w_u32s(&mut buf, &[9, 8]).unwrap();
         w_f32s(&mut buf, &[0.5, -1.0]).unwrap();
         w_usizes(&mut buf, &[4, 0, 11]).unwrap();
+        w_u16s(&mut buf, &[515, 1027]).unwrap();
         let mut r: &[u8] = &buf;
         assert_eq!(r_u32(&mut r).unwrap(), 7);
         assert_eq!(r_u64(&mut r).unwrap(), 1 << 40);
@@ -383,6 +699,7 @@ mod tests {
         assert_eq!(r_u32s(&mut r).unwrap(), vec![9, 8]);
         assert_eq!(r_f32s(&mut r).unwrap(), vec![0.5, -1.0]);
         assert_eq!(r_usizes(&mut r).unwrap(), vec![4, 0, 11]);
+        assert_eq!(r_u16s(&mut r).unwrap(), vec![515, 1027]);
         assert!(r.is_empty());
     }
 
@@ -394,6 +711,89 @@ mod tests {
         assert!(r_u8s(&mut r).is_err());
         let mut r: &[u8] = &[1, 2];
         assert!(r_u64(&mut r).is_err());
+    }
+
+    #[test]
+    fn aligned_sections_round_trip_and_self_describe() {
+        let mut buf = Vec::new();
+        w_u32(&mut buf, 0xDEAD).unwrap(); // odd prefix: pad must adapt
+        w_section_f32s(&mut buf, &[1.0, -2.5, 3.25]).unwrap();
+        w_section_u8s(&mut buf, &[7, 8, 9]).unwrap();
+        w_section_u16s(&mut buf, &[1000, 2000]).unwrap();
+        w_section_u32s(&mut buf, &[5, 6]).unwrap();
+        let mut src = Src::new(&buf);
+        assert_eq!(r_u32(&mut src).unwrap(), 0xDEAD);
+        let f: Section<f32> = r_section(&mut src).unwrap();
+        assert_eq!(&f[..], &[1.0, -2.5, 3.25]);
+        assert!(!f.is_view()); // no backing map
+        let b: Section<u8> = r_section(&mut src).unwrap();
+        assert_eq!(&b[..], &[7, 8, 9]);
+        let h: Section<u16> = r_section(&mut src).unwrap();
+        assert_eq!(&h[..], &[1000, 2000]);
+        let u: Section<u32> = r_section(&mut src).unwrap();
+        assert_eq!(&u[..], &[5, 6]);
+        assert!(src.is_empty());
+    }
+
+    #[test]
+    fn section_pad_lands_on_the_boundary() {
+        for prefix in [0usize, 1, 4, 63, 64, 65, 100] {
+            let mut buf = vec![0u8; prefix];
+            w_align(&mut buf).unwrap();
+            assert_eq!(buf.len() % SECTION_ALIGN, 0, "prefix {prefix}");
+        }
+    }
+
+    #[test]
+    fn bogus_section_pad_is_rejected() {
+        let mut buf = Vec::new();
+        w_u64(&mut buf, 1).unwrap(); // section length
+        w_u32(&mut buf, 64).unwrap(); // pad claims >= SECTION_ALIGN
+        buf.resize(buf.len() + 128, 0);
+        let mut src = Src::new(&buf);
+        assert!(r_section::<f32>(&mut src).is_err());
+    }
+
+    #[test]
+    fn v3_tensor_codec_round_trips() {
+        let t = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let mut buf = Vec::new();
+        w_tensor_v3(&mut buf, &t).unwrap();
+        let back = r_tensor_v3(&mut Src::new(&buf)).unwrap();
+        assert_eq!(back, t);
+        // zero dim / hostile rank rejected
+        let mut bad = Vec::new();
+        w_u32(&mut bad, 2).unwrap();
+        w_u64(&mut bad, 5).unwrap();
+        w_u64(&mut bad, 0).unwrap();
+        assert!(r_tensor_v3(&mut Src::new(&bad)).is_err());
+    }
+
+    #[test]
+    fn mapped_src_serves_views_when_aligned() {
+        let mut buf = Vec::new();
+        w_section_f32s(&mut buf, &[0.5f32; 32]).unwrap();
+        let map = Arc::new(Mapped::from_vec(buf));
+        let mut src = Src::mapped(map.as_slice(), &map);
+        let sec: Section<f32> = r_section(&mut src).unwrap();
+        assert_eq!(&sec[..], &[0.5f32; 32]);
+        // view iff the runtime base address is f32-aligned — either
+        // way the decoded values are identical (checked above)
+        let aligned = map.as_slice().as_ptr() as usize % 4 == 0;
+        if cfg!(target_endian = "little") && aligned {
+            assert!(sec.is_view());
+        }
+    }
+
+    #[test]
+    fn framed_payload_base_is_section_aligned() {
+        for (backbone, spec) in [("ivf", "ivf(nlist=8,iters=15)"), ("flat", "flat")] {
+            let mut buf = Vec::new();
+            write_framed(&mut buf, backbone, 16, 400, spec, b"payload").unwrap();
+            // payload base = total - payload - checksum
+            let base = buf.len() - b"payload".len() - 8;
+            assert_eq!(base % SECTION_ALIGN, 0, "{backbone}");
+        }
     }
 
     #[test]

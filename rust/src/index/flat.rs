@@ -7,12 +7,10 @@
 //! through the dispatched kernels, so per-query and batched results
 //! stay bit-identical to each other for either storage.
 
-use std::io::{Read, Write};
-
 use anyhow::Result;
 
 use crate::api::Effort;
-use crate::index::artifact;
+use crate::index::artifact::{self, Src};
 use crate::index::keystore::{KeyStore, Storage};
 use crate::index::spec::{FlatSpec, IndexSpec};
 use crate::index::traits::{SearchCost, SearchResult, TopK, VectorIndex};
@@ -57,13 +55,15 @@ impl FlatIndex {
 
     /// Deserialize from an artifact payload (see
     /// [`crate::index::artifact`]). Version-1 payloads are a bare f32
-    /// tensor; version-2 payloads carry a storage-tagged [`KeyStore`].
-    pub(crate) fn read_payload(r: &mut dyn Read, version: u32) -> Result<FlatIndex> {
+    /// tensor; version-2+ payloads carry a storage-tagged [`KeyStore`]
+    /// (aligned, and zero-copy from a mapping, at version 3).
+    pub(crate) fn read_payload(src: &mut Src, version: u32) -> Result<FlatIndex> {
         let keys = if version < 2 {
-            KeyStore::F32(artifact::r_tensor(r)?)
+            KeyStore::F32(artifact::r_tensor(&mut *src)?)
         } else {
-            KeyStore::read_payload(r)?
+            KeyStore::read_payload(src, version)?
         };
+        keys.advise_sequential();
         Ok(FlatIndex { keys })
     }
 
@@ -178,8 +178,12 @@ impl VectorIndex for FlatIndex {
         })
     }
 
-    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+    fn write_payload(&self, w: &mut Vec<u8>) -> Result<()> {
         self.keys.write_payload(w)
+    }
+
+    fn zero_copy(&self) -> bool {
+        self.keys.is_view()
     }
 }
 

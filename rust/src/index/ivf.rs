@@ -9,7 +9,7 @@
 //! integration; swapping centroid ranking for a learned router is
 //! [`crate::api::RoutedSearcher`] over [`IvfIndex::search_cells`].
 
-use std::io::{Read, Write};
+use std::io::Read;
 
 use anyhow::{ensure, Result};
 
@@ -351,7 +351,7 @@ impl VectorIndex for IvfIndex {
         })
     }
 
-    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+    fn write_payload(&self, w: &mut Vec<u8>) -> Result<()> {
         artifact::w_tensor(w, &self.centroids)?;
         artifact::w_tensor(w, &self.packed)?;
         artifact::w_u32s(w, &self.ids)?;

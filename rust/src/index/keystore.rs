@@ -10,12 +10,11 @@
 //!
 //! [`dot_f16`]: crate::tensor::kernels::dot_f16
 
-use std::io::{Read, Write};
-
 use anyhow::{bail, ensure, Result};
 
-use crate::index::artifact;
+use crate::index::artifact::{self, Src};
 use crate::tensor::half::{decode_f16, encode_f16};
+use crate::tensor::mapped::Section;
 use crate::tensor::{gemm_nt_tile, kernels, Tensor};
 
 /// Key-matrix precision knob (`storage=` in flat/leanvec specs).
@@ -54,10 +53,17 @@ impl std::str::FromStr for Storage {
     }
 }
 
-/// A key matrix in its selected storage precision.
+/// A key matrix in its selected storage precision. Both arms hold
+/// their rows in a [`Section`]-backed container, so on the zero-copy
+/// artifact read paths the scan kernels pull key bytes straight from
+/// the mapped file instead of a decoded copy.
 pub enum KeyStore {
     F32(Tensor),
-    F16 { n: usize, d: usize, rows: Vec<u16> },
+    F16 {
+        n: usize,
+        d: usize,
+        rows: Section<u16>,
+    },
 }
 
 impl KeyStore {
@@ -70,7 +76,7 @@ impl KeyStore {
             Storage::F16 => KeyStore::F16 {
                 n: keys.rows(),
                 d: keys.row_width(),
-                rows: encode_f16(keys.data()),
+                rows: Section::owned(encode_f16(keys.data())),
             },
         }
     }
@@ -120,7 +126,27 @@ impl KeyStore {
     pub fn to_tensor(&self) -> Tensor {
         match self {
             KeyStore::F32(t) => t.clone(),
-            KeyStore::F16 { n, d, rows } => Tensor::from_vec(&[*n, *d], decode_f16(rows)),
+            KeyStore::F16 { n, d, rows } => {
+                Tensor::from_vec(&[*n, *d], decode_f16(rows.as_slice()))
+            }
+        }
+    }
+
+    /// Whether the stored rows are a borrowed view of a mapped
+    /// container (zero-copy) rather than an owned RAM buffer.
+    pub fn is_view(&self) -> bool {
+        match self {
+            KeyStore::F32(t) => t.is_view(),
+            KeyStore::F16 { rows, .. } => rows.is_view(),
+        }
+    }
+
+    /// Sequential-scan `madvise` hint for view-backed rows (no-op when
+    /// owned).
+    pub fn advise_sequential(&self) {
+        match self {
+            KeyStore::F32(t) => t.advise_sequential(),
+            KeyStore::F16 { rows, .. } => rows.advise_sequential(),
         }
     }
 
@@ -163,32 +189,48 @@ impl KeyStore {
         }
     }
 
-    /// Serialize: a storage tag, then the payload for that storage.
-    pub fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+    /// Serialize: a storage tag, then the payload for that storage, in
+    /// the current (aligned v3) layout — the row matrix lands in a
+    /// 64-byte-aligned section so readers can serve it in place.
+    pub fn write_payload(&self, w: &mut Vec<u8>) -> Result<()> {
         match self {
             KeyStore::F32(t) => {
                 artifact::w_u32(w, 0)?;
-                artifact::w_tensor(w, t)
+                artifact::w_tensor_v3(w, t)
             }
             KeyStore::F16 { n, d, rows } => {
                 artifact::w_u32(w, 1)?;
                 artifact::w_u64(w, *n as u64)?;
                 artifact::w_u64(w, *d as u64)?;
-                artifact::w_u16s(w, rows)
+                artifact::w_section_u16s(w, rows.as_slice())
             }
         }
     }
 
-    /// Deserialize a tagged key store (artifact version ≥ 2 layout).
-    /// Version-1 payloads have no tag — their readers call
-    /// `artifact::r_tensor` directly and wrap it in `KeyStore::F32`.
-    pub fn read_payload(r: &mut dyn Read) -> Result<KeyStore> {
-        match artifact::r_u32(r)? {
-            0 => Ok(KeyStore::F32(artifact::r_tensor(r)?)),
+    /// Deserialize a tagged key store. `version` is the artifact
+    /// version: ≥ 3 reads the aligned zero-copy layout (rows become
+    /// borrowed views when the source is a real mapping), 2 the legacy
+    /// unaligned one. Version-1 payloads have no tag — their readers
+    /// call `artifact::r_tensor` directly and wrap it in
+    /// `KeyStore::F32`.
+    pub fn read_payload(src: &mut Src, version: u32) -> Result<KeyStore> {
+        match artifact::r_u32(&mut *src)? {
+            0 => {
+                let t = if version >= 3 {
+                    artifact::r_tensor_v3(src)?
+                } else {
+                    artifact::r_tensor(&mut *src)?
+                };
+                Ok(KeyStore::F32(t))
+            }
             1 => {
-                let n = artifact::r_u64(r)? as usize;
-                let d = artifact::r_u64(r)? as usize;
-                let rows = artifact::r_u16s(r)?;
+                let n = artifact::r_u64(&mut *src)? as usize;
+                let d = artifact::r_u64(&mut *src)? as usize;
+                let rows = if version >= 3 {
+                    artifact::r_section::<u16>(src)?
+                } else {
+                    Section::owned(artifact::r_u16s(&mut *src)?)
+                };
                 ensure!(
                     n.checked_mul(d).is_some_and(|e| e == rows.len()),
                     "f16 key store advertises {n}x{d} but holds {} halves",
@@ -272,15 +314,16 @@ mod tests {
             let ks = KeyStore::new(randt(&[11, 8], 7), storage);
             let mut buf = Vec::new();
             ks.write_payload(&mut buf).unwrap();
-            let back = KeyStore::read_payload(&mut buf.as_slice()).unwrap();
+            let back = KeyStore::read_payload(&mut Src::new(&buf), artifact::VERSION).unwrap();
             assert_eq!(back.storage(), storage);
             assert_eq!((back.len(), back.dim()), (11, 8));
             assert_eq!(back.to_tensor().data(), ks.to_tensor().data());
+            assert!(!back.is_view()); // no backing map on this path
         }
         // corrupt tag
         let mut buf = Vec::new();
         artifact::w_u32(&mut buf, 9).unwrap();
-        assert!(KeyStore::read_payload(&mut buf.as_slice()).is_err());
+        assert!(KeyStore::read_payload(&mut Src::new(&buf), artifact::VERSION).is_err());
     }
 
     #[test]

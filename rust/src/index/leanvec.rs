@@ -7,12 +7,10 @@
 //! query-aware refinement is approximated by optionally fitting PCA on
 //! the union of keys and sample queries.
 
-use std::io::{Read, Write};
-
 use anyhow::{ensure, Result};
 
 use crate::api::Effort;
-use crate::index::artifact;
+use crate::index::artifact::{self, Src};
 use crate::index::ivf::IvfIndex;
 use crate::index::keystore::{KeyStore, Storage};
 use crate::index::spec::{IndexSpec, LeanVecSpec};
@@ -76,21 +74,24 @@ impl LeanVecIndex {
 
     /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
     /// Version-1 payloads store the re-rank keys as a bare f32 tensor;
-    /// version-2 payloads carry a storage-tagged [`KeyStore`].
-    pub(crate) fn read_payload(r: &mut dyn Read, version: u32) -> Result<LeanVecIndex> {
-        let comps = artifact::r_tensor(r)?;
-        let mean = artifact::r_f32s(r)?;
+    /// version-2+ payloads carry a storage-tagged [`KeyStore`] (aligned,
+    /// and zero-copy from a mapping, at version 3). The projection,
+    /// mean and reduced-space IVF stay small, version-stable fields.
+    pub(crate) fn read_payload(src: &mut Src, version: u32) -> Result<LeanVecIndex> {
+        let comps = artifact::r_tensor(&mut *src)?;
+        let mean = artifact::r_f32s(&mut *src)?;
         let keys = if version < 2 {
-            KeyStore::F32(artifact::r_tensor(r)?)
+            KeyStore::F32(artifact::r_tensor(&mut *src)?)
         } else {
-            KeyStore::read_payload(r)?
+            KeyStore::read_payload(src, version)?
         };
-        let inner = IvfIndex::read_payload(r)?;
+        let inner = IvfIndex::read_payload(&mut *src)?;
         // clamp as in ScannIndex::read_payload: rerank > len is
         // behaviorally identical to len, and a crafted huge value must
         // not reach TopK's preallocation
-        let rerank = (artifact::r_u64(r)? as usize).min(keys.len().max(1));
-        let query_aware = artifact::r_bool(r)?;
+        let rerank = (artifact::r_u64(&mut *src)? as usize).min(keys.len().max(1));
+        let query_aware = artifact::r_bool(&mut *src)?;
+        keys.advise_sequential();
         let d_low = comps.rows();
         let d = keys.dim();
         ensure!(
@@ -233,13 +234,17 @@ impl VectorIndex for LeanVecIndex {
         })
     }
 
-    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+    fn write_payload(&self, w: &mut Vec<u8>) -> Result<()> {
         artifact::w_tensor(w, &self.comps)?;
         artifact::w_f32s(w, &self.mean)?;
         self.keys.write_payload(w)?;
         self.inner.write_payload(w)?;
         artifact::w_u64(w, self.rerank as u64)?;
         artifact::w_bool(w, self.query_aware)
+    }
+
+    fn zero_copy(&self) -> bool {
+        self.keys.is_view()
     }
 }
 

@@ -22,9 +22,10 @@ use std::io::{Read, Write};
 use anyhow::{ensure, Result};
 
 use crate::api::Effort;
-use crate::index::artifact;
+use crate::index::artifact::{self, Src};
 use crate::index::spec::{IndexSpec, PqSpec};
 use crate::index::traits::{rerank_depth, SearchCost, SearchResult, TopK, VectorIndex};
+use crate::tensor::mapped::Section;
 use crate::tensor::{dot, gemm_nt_tile, kernels, Tensor};
 use crate::util::Rng;
 
@@ -360,7 +361,9 @@ impl Pq {
 pub struct PqIndex {
     d: usize,
     pq: Pq,
-    codes: Vec<u8>, // [n, code_width]
+    /// [n, code_width] — a borrowed container view on the zero-copy
+    /// artifact read path, owned RAM otherwise.
+    codes: Section<u8>,
     /// Full-precision keys for exact re-ranking.
     keys: Tensor,
     /// Default re-rank depth under `Effort::Auto` / `Effort::Probes`.
@@ -385,7 +388,7 @@ impl PqIndex {
         PqIndex {
             d: keys.row_width(),
             pq,
-            codes,
+            codes: Section::owned(codes),
             keys: keys.clone(),
             rerank: 32,
             iters,
@@ -393,15 +396,27 @@ impl PqIndex {
         }
     }
 
-    /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
-    pub(crate) fn read_payload(r: &mut dyn Read, version: u32) -> Result<PqIndex> {
-        let d = artifact::r_u64(r)? as usize;
-        let pq = Pq::read_payload(r, version)?;
-        let codes = artifact::r_u8s(r)?;
-        let keys = artifact::r_tensor(r)?;
-        let rerank = artifact::r_u64(r)? as usize;
-        let iters = artifact::r_u64(r)? as usize;
-        let eta = artifact::r_f32(r)?;
+    /// Deserialize from an artifact payload (see
+    /// [`crate::index::artifact`]). At version ≥ 3 the code matrix and
+    /// re-rank keys sit in aligned sections and come back as borrowed
+    /// views of a mapped source; earlier versions decode by copy.
+    pub(crate) fn read_payload(src: &mut Src, version: u32) -> Result<PqIndex> {
+        let d = artifact::r_u64(&mut *src)? as usize;
+        let pq = Pq::read_payload(&mut *src, version)?;
+        let codes = if version >= 3 {
+            artifact::r_section::<u8>(src)?
+        } else {
+            Section::owned(artifact::r_u8s(&mut *src)?)
+        };
+        let keys = if version >= 3 {
+            artifact::r_tensor_v3(src)?
+        } else {
+            artifact::r_tensor(&mut *src)?
+        };
+        let rerank = artifact::r_u64(&mut *src)? as usize;
+        let iters = artifact::r_u64(&mut *src)? as usize;
+        let eta = artifact::r_f32(&mut *src)?;
+        codes.advise_sequential();
         ensure!(
             d == pq.m * pq.dsub
                 && keys.row_width() == d
@@ -527,14 +542,18 @@ impl VectorIndex for PqIndex {
         })
     }
 
-    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+    fn write_payload(&self, w: &mut Vec<u8>) -> Result<()> {
         artifact::w_u64(w, self.d as u64)?;
         self.pq.write_payload(w)?;
-        artifact::w_u8s(w, &self.codes)?;
-        artifact::w_tensor(w, &self.keys)?;
+        artifact::w_section_u8s(w, &self.codes)?;
+        artifact::w_tensor_v3(w, &self.keys)?;
         artifact::w_u64(w, self.rerank as u64)?;
         artifact::w_u64(w, self.iters as u64)?;
         artifact::w_f32(w, self.eta)
+    }
+
+    fn zero_copy(&self) -> bool {
+        self.codes.is_view() && self.keys.is_view()
     }
 }
 

@@ -10,7 +10,7 @@
 //! `Effort::Exhaustive` additionally widens the exact re-rank to every
 //! scanned candidate, making the answer exact.
 
-use std::io::{Read, Write};
+use std::io::Read;
 
 use anyhow::{ensure, Result};
 
@@ -302,7 +302,7 @@ impl VectorIndex for ScannIndex {
         })
     }
 
-    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+    fn write_payload(&self, w: &mut Vec<u8>) -> Result<()> {
         artifact::w_tensor(w, &self.centroids)?;
         artifact::w_tensor(w, &self.packed)?;
         artifact::w_u8s(w, &self.codes)?;

@@ -26,7 +26,6 @@
 //! — a crash recovers to the last committed generation, exactly.
 
 use std::collections::{HashMap, HashSet};
-use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, RwLock};
 
@@ -248,6 +247,19 @@ impl MutableCollection {
     /// Masked sealed rows (tombstone-debt signal).
     pub fn tombstone_count(&self) -> usize {
         self.state.read().unwrap().tombstones()
+    }
+
+    /// How the current generation's sealed segments were opened:
+    /// `(mapped, copied)` counts, where `mapped` segments serve their
+    /// key matrices as borrowed views of the file mapping (zero-copy
+    /// v2 containers under `--features mmap`) and `copied` ones
+    /// decoded into RAM (legacy v1 containers, misaligned layouts, or
+    /// builds without the feature). Exported per tenant by the metrics
+    /// listener.
+    pub fn segment_open_stats(&self) -> (u64, u64) {
+        let st = self.state.read().unwrap();
+        let mapped = st.sealed.iter().filter(|s| s.zero_copy()).count() as u64;
+        (mapped, st.sealed.len() as u64 - mapped)
     }
 
     /// Append `vecs` as new rows; returns the assigned global ids
@@ -576,7 +588,7 @@ impl VectorIndex for MutableCollection {
         self.spec.clone()
     }
 
-    fn write_payload(&self, _w: &mut dyn Write) -> Result<()> {
+    fn write_payload(&self, _w: &mut Vec<u8>) -> Result<()> {
         bail!(
             "mutable collections persist as generation manifests (gen-*.tsv), \
              not monolithic artifacts; use commit()/compact()"

@@ -42,12 +42,13 @@ pub mod collection;
 pub mod compact;
 pub mod delta;
 pub mod manifest;
-pub mod mapped;
 pub mod sealed;
 
 pub use collection::MutableCollection;
 pub use compact::{Compactor, CompactorConfig};
 pub use delta::DeltaSegment;
 pub use manifest::GenManifest;
-pub use mapped::Mapped;
+// `Mapped` moved down to the tensor layer (PR 10) so `Tensor` itself
+// can hold borrowed views; re-exported here for existing callers.
+pub use crate::tensor::Mapped;
 pub use sealed::SealedSegment;

@@ -13,6 +13,21 @@
 //!    absent the segment is served by an exact flat scan over the raw
 //!    keys (the common case for freshly sealed deltas).
 //!
+//! Container version 2 is the *aligned* layout: a separately
+//! checksummed fixed header, a self-describing pad that places the
+//! payload base on a 64-byte file offset, and 64-byte-aligned,
+//! length-prefixed sections for the id map, the key matrix and the
+//! embedded artifact. Loaded through an `Arc<`[`Mapped`]`>`, those
+//! sections come back as borrowed views — the scan kernels read key
+//! bytes straight from the page cache, and opening a segment faults in
+//! pages only as searches touch them. For that reason a *mapped* v2
+//! load verifies the header checksum eagerly but skips the full-payload
+//! checksum (verifying it would fault in every page and make open
+//! O(corpus) again); byte-stream loads and version-1 files verify in
+//! full, exactly as before. Version-1 segments still load bit-
+//! identically through the decode-into-RAM path (with a one-line note
+//! when that happens under a real mapping).
+//!
 //! Files are written to a `.tmp` sibling and renamed into place, and
 //! are only ever referenced by a generation manifest *after* the
 //! rename — so a crash mid-write leaves an orphan the loader never
@@ -20,23 +35,30 @@
 
 use std::io::Write;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::api::Effort;
-use crate::index::artifact::{self, fnv1a64, r_tensor, r_u8s, r_u32s, r_u64, w_tensor, w_u8s, w_u32s, w_u64};
+use crate::index::artifact::{
+    self, fnv1a64, r_tensor, r_u8s, r_u32s, r_u64, w_u64, Src,
+};
 use crate::index::flat::FlatIndex;
 use crate::index::traits::{SearchResult, VectorIndex};
-use crate::tensor::Tensor;
-
-use super::mapped::Mapped;
+use crate::tensor::mapped::{stats, Section};
+use crate::tensor::{Mapped, Tensor};
 
 /// Magic bytes of the sealed-segment container.
 pub const SEG_MAGIC: &[u8; 4] = b"AMSG";
-/// Container version this build reads and writes.
-pub const SEG_VERSION: u32 = 1;
+/// Container version this build writes (and the newest it reads).
+pub const SEG_VERSION: u32 = 2;
+/// Oldest container version this build still reads.
+pub const SEG_MIN_VERSION: u32 = 1;
 /// Same implausibility cap as the AMIX container.
 const MAX_ELEMS: u64 = 1 << 31;
+/// Byte length of the fixed, separately checksummed v2 header prefix:
+/// magic + version + dim + len + plen.
+const V2_HEAD: usize = 4 + 4 + 8 + 8 + 8;
 
 enum Body {
     /// No embedded artifact: serve by exact flat scan over raw keys.
@@ -51,7 +73,7 @@ enum Body {
 /// One immutable, loaded (or mapped) segment of a mutable collection.
 pub struct SealedSegment {
     file: String,
-    ids: Vec<u32>,
+    ids: Section<u32>,
     body: Body,
 }
 
@@ -101,6 +123,12 @@ impl SealedSegment {
         }
     }
 
+    /// Whether this segment serves its key matrix as a borrowed view
+    /// of the file mapping (zero-copy) rather than a decoded RAM copy.
+    pub fn zero_copy(&self) -> bool {
+        self.keys().is_view()
+    }
+
     /// Top-k in *local* row ids; the collection remaps through
     /// [`SealedSegment::ids`] and masks tombstones.
     pub fn search_local(&self, query: &[f32], k: usize, effort: Effort) -> SearchResult {
@@ -108,7 +136,8 @@ impl SealedSegment {
     }
 
     /// Serialize `ids` + raw `keys` (+ optionally a backbone artifact
-    /// built over those keys) and commit via write-then-rename.
+    /// built over those keys) in the aligned v2 layout and commit via
+    /// write-then-rename.
     pub fn write(
         path: &Path,
         ids: &[u32],
@@ -126,9 +155,11 @@ impl SealedSegment {
             ids.windows(2).all(|w| w[0] < w[1]),
             "sealed segment ids must be strictly increasing"
         );
+        // The payload base lands on a 64-byte file offset (see below),
+        // so payload-relative section alignment is file alignment.
         let mut payload = Vec::new();
-        w_u32s(&mut payload, ids)?;
-        w_tensor(&mut payload, keys)?;
+        artifact::w_section_u32s(&mut payload, ids)?;
+        artifact::w_tensor_v3(&mut payload, keys)?;
         let mut art = Vec::new();
         if let Some(index) = index {
             ensure!(
@@ -141,15 +172,27 @@ impl SealedSegment {
             );
             index.save(&mut art)?;
         }
-        w_u8s(&mut payload, &art)?;
+        // Align the embedded artifact's frame start: its own header pad
+        // then places the inner payload on a 64-byte file offset too,
+        // so the backbone's sections map zero-copy as well.
+        w_u64(&mut payload, art.len() as u64)?;
+        artifact::w_align(&mut payload)?;
+        payload.write_all(&art)?;
 
         let tmp = path.with_extension("ams.tmp");
-        let mut bytes = Vec::with_capacity(payload.len() + 64);
+        let mut bytes = Vec::with_capacity(payload.len() + 128);
         bytes.write_all(SEG_MAGIC)?;
         artifact::w_u32(&mut bytes, SEG_VERSION)?;
         w_u64(&mut bytes, keys.row_width() as u64)?;
         w_u64(&mut bytes, keys.rows() as u64)?;
         w_u64(&mut bytes, payload.len() as u64)?;
+        debug_assert_eq!(bytes.len(), V2_HEAD);
+        // the fixed header gets its own checksum so a lazy (mapped)
+        // open can validate everything it trusts without touching the
+        // payload pages
+        w_u64(&mut bytes, fnv1a64(&bytes[..V2_HEAD]))?;
+        artifact::w_align(&mut bytes)?;
+        debug_assert_eq!(bytes.len() % artifact::SECTION_ALIGN, 0);
         bytes.write_all(&payload)?;
         w_u64(&mut bytes, fnv1a64(&payload))?;
         std::fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
@@ -157,35 +200,129 @@ impl SealedSegment {
         Ok(())
     }
 
-    /// Load (mmap under the `mmap` feature) + fully validate one
-    /// segment file. Every structural claim is checked before use:
-    /// magic/version, checksum over the payload, id-map monotonicity,
-    /// shape agreement between header, keys and any embedded artifact.
+    /// Load (mmap under the `mmap` feature) + validate one segment
+    /// file. Every structural claim is checked before use: magic /
+    /// version, checksums (see the module doc for what a lazy mapped
+    /// open verifies), id-map monotonicity, shape agreement between
+    /// header, keys and any embedded artifact.
     pub fn load(path: &Path) -> Result<SealedSegment> {
         let file = path
             .file_name()
             .and_then(|n| n.to_str())
             .context("segment path has no file name")?
             .to_string();
-        let mapped = Mapped::open(path)
-            .with_context(|| format!("opening sealed segment {}", path.display()))?;
+        let mapped = Arc::new(
+            Mapped::open(path)
+                .with_context(|| format!("opening sealed segment {}", path.display()))?,
+        );
         Self::decode(&mapped, file)
             .with_context(|| format!("loading sealed segment {}", path.display()))
     }
 
-    fn decode(bytes: &[u8], file: String) -> Result<SealedSegment> {
-        let mut r: &[u8] = bytes;
+    /// Decode a segment container from a shared mapping (or RAM
+    /// buffer). Exposed to the collection layer so lazy opens can
+    /// reuse an already-open mapping.
+    pub(crate) fn decode(map: &Arc<Mapped>, file: String) -> Result<SealedSegment> {
+        let bytes = map.as_slice();
+        ensure!(bytes.len() >= 8, "sealed segment truncated before version");
+        ensure!(
+            &bytes[..4] == SEG_MAGIC,
+            "bad sealed segment magic {:?} (expected {SEG_MAGIC:?})",
+            &bytes[..4]
+        );
+        let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+        match version {
+            1 => {
+                if map.is_map() {
+                    eprintln!(
+                        "amips: {file}: legacy v1 sealed segment under mmap — decoding by \
+                         copy (recompact to get the zero-copy v{SEG_VERSION} layout)"
+                    );
+                    stats::add_copied(bytes.len() as u64);
+                }
+                Self::decode_v1(bytes, file)
+            }
+            2 => Self::decode_v2(map, file),
+            other => bail!(
+                "unsupported sealed segment version {other} \
+                 (this build reads versions {SEG_MIN_VERSION}..={SEG_VERSION})"
+            ),
+        }
+    }
+
+    /// The aligned v2 layout: header + header checksum, pad, aligned
+    /// payload sections, payload checksum.
+    fn decode_v2(map: &Arc<Mapped>, file: String) -> Result<SealedSegment> {
+        let bytes = map.as_slice();
+        let mut src = Src::mapped(bytes, map);
         let mut magic = [0u8; 4];
-        std::io::Read::read_exact(&mut r, &mut magic).context("reading segment magic")?;
+        std::io::Read::read_exact(&mut src, &mut magic).context("reading segment magic")?;
+        let _version = artifact::r_u32(&mut src)?;
+        let dim = r_u64(&mut src)?;
+        let len = r_u64(&mut src)?;
         ensure!(
-            &magic == SEG_MAGIC,
-            "bad sealed segment magic {magic:?} (expected {SEG_MAGIC:?})"
+            dim > 0 && dim <= MAX_ELEMS && len > 0 && len <= MAX_ELEMS,
+            "implausible sealed segment shape {len}x{dim}"
         );
-        let version = artifact::r_u32(&mut r)?;
+        let plen = r_u64(&mut src)?;
         ensure!(
-            version == SEG_VERSION,
-            "unsupported sealed segment version {version} (this build reads {SEG_VERSION})"
+            plen <= bytes.len() as u64,
+            "sealed segment truncated: payload claims {plen} bytes of a {}-byte file",
+            bytes.len()
         );
+        let want_head = r_u64(&mut src).context("sealed segment truncated: missing header checksum")?;
+        let got_head = fnv1a64(&bytes[..V2_HEAD]);
+        ensure!(
+            got_head == want_head,
+            "sealed segment header checksum mismatch (stored {want_head:#018x}, computed {got_head:#018x}): corrupt file"
+        );
+        let pad = artifact::r_u32(&mut src)? as usize;
+        ensure!(
+            pad < artifact::SECTION_ALIGN,
+            "implausible sealed segment header pad {pad}"
+        );
+        src.take(pad).context("sealed segment truncated inside header pad")?;
+        let payload = src
+            .take(plen as usize)
+            .context("sealed segment truncated inside payload")?;
+        let want = r_u64(&mut src).context("sealed segment truncated: missing checksum")?;
+        ensure!(
+            src.is_empty(),
+            "sealed segment has {} trailing bytes after checksum",
+            src.remaining()
+        );
+        // Lazy open: on a real mapping the payload checksum is skipped
+        // (it would fault in every page); the header checksum above and
+        // the structural checks below still gate everything we trust.
+        if !map.is_map() {
+            let got = fnv1a64(payload);
+            ensure!(
+                got == want,
+                "sealed segment checksum mismatch (stored {want:#018x}, computed {got:#018x}): corrupt file"
+            );
+        }
+
+        let mut p = Src::mapped(payload, map);
+        let ids: Section<u32> = artifact::r_section(&mut p)?;
+        let keys = artifact::r_tensor_v3(&mut p)?;
+        let art_len = r_u64(&mut p)?;
+        ensure!(
+            art_len <= plen,
+            "sealed segment embedded artifact claims {art_len} bytes of a {plen}-byte payload"
+        );
+        artifact::r_align(&mut p)?;
+        let art = p
+            .take(art_len as usize)
+            .context("sealed segment truncated inside embedded artifact")?;
+        ensure!(p.is_empty(), "sealed segment payload has trailing bytes");
+        Self::assemble(file, ids, keys, art, Some(map), (dim, len))
+    }
+
+    /// The legacy v1 layout: one whole-payload checksum, unaligned
+    /// fields, always decoded into RAM (bit-identical to the build
+    /// that wrote it).
+    fn decode_v1(bytes: &[u8], file: String) -> Result<SealedSegment> {
+        let mut r: &[u8] = &bytes[8..]; // past magic + version
         let dim = r_u64(&mut r)?;
         let len = r_u64(&mut r)?;
         ensure!(
@@ -212,10 +349,22 @@ impl SealedSegment {
         );
 
         let mut p: &[u8] = payload;
-        let ids = r_u32s(&mut p)?;
+        let ids = Section::owned(r_u32s(&mut p)?);
         let keys = r_tensor(&mut p)?;
         let art = r_u8s(&mut p)?;
         ensure!(p.is_empty(), "sealed segment payload has trailing bytes");
+        Self::assemble(file, ids, keys, &art, None, (dim, len))
+    }
+
+    /// Validation + body assembly shared by both layout decoders.
+    fn assemble(
+        file: String,
+        ids: Section<u32>,
+        keys: Tensor,
+        art: &[u8],
+        map: Option<&Arc<Mapped>>,
+        (dim, len): (u64, u64),
+    ) -> Result<SealedSegment> {
         ensure!(
             ids.len() as u64 == len && keys.rows() as u64 == len,
             "sealed segment header advertises {len} rows but decodes {} ids over {} keys",
@@ -231,11 +380,14 @@ impl SealedSegment {
             ids.windows(2).all(|w| w[0] < w[1]),
             "sealed segment id map is not strictly increasing: corrupt file"
         );
+        keys.advise_sequential();
         let body = if art.is_empty() {
             Body::Flat(FlatIndex::new(keys))
         } else {
-            let mut ar: &[u8] = &art;
-            let index = artifact::load_from(&mut ar)?;
+            let index = match map {
+                Some(map) => artifact::load_from_src(&mut Src::mapped(art, map))?,
+                None => artifact::load_from(&mut { art })?,
+            };
             if index.len() != keys.rows() || index.dim() != keys.row_width() {
                 bail!(
                     "embedded artifact shape {}x{} disagrees with segment keys {}x{}",
@@ -304,6 +456,83 @@ mod tests {
     }
 
     #[test]
+    fn v2_layout_aligns_payload_and_sections() {
+        let tmp = TempDir::new("sealed");
+        let keys = unit(&[33, 7], 21); // odd shape: pads must adapt
+        let ids: Vec<u32> = (0..33).collect();
+        let path = tmp.join(&SealedSegment::file_name(3, 0));
+        SealedSegment::write(&path, &ids, &keys, None).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..4], SEG_MAGIC);
+        assert_eq!(
+            u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]),
+            SEG_VERSION
+        );
+        // header checksum covers the fixed prefix
+        let stored = u64::from_le_bytes(bytes[V2_HEAD..V2_HEAD + 8].try_into().unwrap());
+        assert_eq!(stored, fnv1a64(&bytes[..V2_HEAD]));
+        // the pad places the payload base on a 64-byte file offset
+        let pad =
+            u32::from_le_bytes(bytes[V2_HEAD + 8..V2_HEAD + 12].try_into().unwrap()) as usize;
+        let payload_base = V2_HEAD + 8 + 4 + pad;
+        assert_eq!(payload_base % artifact::SECTION_ALIGN, 0);
+        // and the segment still loads + scans exactly
+        let seg = SealedSegment::load(&path).unwrap();
+        assert_eq!(seg.keys().data(), keys.data());
+    }
+
+    #[test]
+    fn hand_framed_v1_stream_loads_bit_identically() {
+        // a v1 container framed by hand with the legacy (unaligned)
+        // codecs — old segments on disk must keep decoding to exactly
+        // the same rows/keys/results as when they were written
+        let tmp = TempDir::new("sealed");
+        let keys = unit(&[40, 8], 31);
+        let ids: Vec<u32> = (0..40).map(|i| i * 2 + 1).collect();
+        let mut payload = Vec::new();
+        artifact::w_u32s(&mut payload, &ids).unwrap();
+        artifact::w_tensor(&mut payload, &keys).unwrap();
+        artifact::w_u8s(&mut payload, &[]).unwrap(); // no embedded artifact
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(SEG_MAGIC);
+        artifact::w_u32(&mut bytes, 1).unwrap();
+        w_u64(&mut bytes, 8).unwrap();
+        w_u64(&mut bytes, 40).unwrap();
+        w_u64(&mut bytes, payload.len() as u64).unwrap();
+        bytes.extend_from_slice(&payload);
+        w_u64(&mut bytes, fnv1a64(&payload)).unwrap();
+        let path = tmp.join("seg-000001-0.ams");
+        std::fs::write(&path, &bytes).unwrap();
+
+        let seg = SealedSegment::load(&path).unwrap();
+        assert_eq!(seg.ids(), &ids[..]);
+        assert_eq!(seg.keys().data(), keys.data());
+        assert!(!seg.zero_copy()); // v1 always decodes by copy
+        let q = unit(&[1, 8], 32);
+        let want = FlatIndex::new(keys).search_effort(q.row(0), 5, Effort::Exhaustive);
+        let got = seg.search_local(q.row(0), 5, Effort::Exhaustive);
+        assert_eq!(want.ids, got.ids);
+        assert_eq!(
+            want.scores.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            got.scores.iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn unknown_version_is_rejected() {
+        let tmp = TempDir::new("sealed");
+        let keys = unit(&[8, 4], 33);
+        let ids: Vec<u32> = (0..8).collect();
+        let path = tmp.join("seg-000001-0.ams");
+        SealedSegment::write(&path, &ids, &keys, None).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] = 0x7F;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = SealedSegment::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+    }
+
+    #[test]
     fn rejects_malformed_writes() {
         let tmp = TempDir::new("sealed");
         let keys = unit(&[8, 4], 5);
@@ -342,9 +571,45 @@ mod tests {
             match SealedSegment::load(&corrupt) {
                 // typed error: the common, expected outcome
                 Err(_) => {}
-                // a flip the checksum cannot see (e.g. inside the
-                // already-verified header echo) must still produce a
+                // a flip the checksums cannot see (e.g. inside the
+                // alignment pad zeros) must still produce a
                 // structurally valid segment
+                Ok(seg) => assert_eq!(seg.len(), seg.ids().len()),
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_fuzz_over_backbone_segments() {
+        // same fuzz, but with an embedded artifact so the flips also
+        // land inside the nested AMIX frame and its aligned sections
+        let tmp = TempDir::new("sealed");
+        let keys = unit(&[48, 8], 41);
+        let ids: Vec<u32> = (0..48).collect();
+        let idx = IndexSpec::default_for("ivf")
+            .unwrap()
+            .with_nlist(4)
+            .build(&keys, &BuildCtx::seeded(42))
+            .unwrap();
+        let path = tmp.join("seg-000001-0.ams");
+        SealedSegment::write(&path, &ids, &keys, Some(idx.as_ref())).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        let mut rng = Rng::new(43);
+        for case in 0..crate::util::prop_cases(120) {
+            let mut bytes = clean.clone();
+            if case % 3 == 0 {
+                bytes.truncate(rng.below(bytes.len()));
+            } else {
+                let i = rng.below(bytes.len());
+                bytes[i] ^= (1 + rng.below(255)) as u8;
+            }
+            if bytes == clean {
+                continue;
+            }
+            let corrupt = tmp.join("seg-000002-0.ams");
+            std::fs::write(&corrupt, &bytes).unwrap();
+            match SealedSegment::load(&corrupt) {
+                Err(_) => {}
                 Ok(seg) => assert_eq!(seg.len(), seg.ids().len()),
             }
         }

@@ -21,7 +21,7 @@
 //! shard's own framed artifact (header + checksum), giving per-shard
 //! integrity checking for free on reload.
 
-use std::io::{Read, Write};
+use std::io::Read;
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -296,7 +296,7 @@ impl VectorIndex for ShardedIndex {
         })
     }
 
-    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+    fn write_payload(&self, w: &mut Vec<u8>) -> Result<()> {
         artifact::w_u32(w, match self.assign {
             ShardAssign::RoundRobin => 0,
             ShardAssign::Contiguous => 1,

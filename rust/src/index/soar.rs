@@ -8,7 +8,7 @@
 //! cell would make the key invisible to a query, the secondary assignment
 //! catches it — fewer probes reach the same recall.
 
-use std::io::{Read, Write};
+use std::io::Read;
 
 use anyhow::{ensure, Result};
 
@@ -280,7 +280,7 @@ impl VectorIndex for SoarIndex {
         })
     }
 
-    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+    fn write_payload(&self, w: &mut Vec<u8>) -> Result<()> {
         artifact::w_tensor(w, &self.centroids)?;
         artifact::w_tensor(w, &self.packed)?;
         artifact::w_u32s(w, &self.ids)?;

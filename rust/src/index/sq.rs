@@ -10,20 +10,20 @@
 //! `Effort::Frac(f)` re-ranks `⌈f·n⌉` candidates exactly and
 //! `Effort::Exhaustive` re-ranks everything (exact).
 
-use std::io::{Read, Write};
-
 use anyhow::{ensure, Result};
 
 use crate::api::Effort;
-use crate::index::artifact;
+use crate::index::artifact::{self, Src};
 use crate::index::spec::{IndexSpec, SqSpec};
 use crate::index::traits::{rerank_depth, SearchCost, SearchResult, TopK, VectorIndex};
+use crate::tensor::mapped::Section;
 use crate::tensor::{dot, Tensor};
 
 pub struct SqIndex {
     d: usize,
-    /// [n, d] u8 codes.
-    codes: Vec<u8>,
+    /// [n, d] u8 codes — a borrowed container view on the zero-copy
+    /// artifact read path, owned RAM otherwise.
+    codes: Section<u8>,
     /// Per-dimension dequantization: value = lo[j] + scale[j] * code.
     lo: Vec<f32>,
     scale: Vec<f32>,
@@ -63,7 +63,7 @@ impl SqIndex {
         }
         SqIndex {
             d,
-            codes,
+            codes: Section::owned(codes),
             lo,
             scale,
             keys: keys.clone(),
@@ -112,14 +112,26 @@ impl SqIndex {
         }
     }
 
-    /// Deserialize from an artifact payload (see [`crate::index::artifact`]).
-    pub(crate) fn read_payload(r: &mut dyn Read) -> Result<SqIndex> {
-        let d = artifact::r_u64(r)? as usize;
-        let codes = artifact::r_u8s(r)?;
-        let lo = artifact::r_f32s(r)?;
-        let scale = artifact::r_f32s(r)?;
-        let keys = artifact::r_tensor(r)?;
-        let rerank = artifact::r_u64(r)? as usize;
+    /// Deserialize from an artifact payload (see
+    /// [`crate::index::artifact`]). At version ≥ 3 the code matrix and
+    /// re-rank keys sit in aligned sections and come back as borrowed
+    /// views of a mapped source; earlier versions decode by copy.
+    pub(crate) fn read_payload(src: &mut Src, version: u32) -> Result<SqIndex> {
+        let d = artifact::r_u64(&mut *src)? as usize;
+        let codes = if version >= 3 {
+            artifact::r_section::<u8>(src)?
+        } else {
+            Section::owned(artifact::r_u8s(&mut *src)?)
+        };
+        let lo = artifact::r_f32s(&mut *src)?;
+        let scale = artifact::r_f32s(&mut *src)?;
+        let keys = if version >= 3 {
+            artifact::r_tensor_v3(src)?
+        } else {
+            artifact::r_tensor(&mut *src)?
+        };
+        let rerank = artifact::r_u64(&mut *src)? as usize;
+        codes.advise_sequential();
         ensure!(
             lo.len() == d
                 && scale.len() == d
@@ -212,13 +224,17 @@ impl VectorIndex for SqIndex {
         IndexSpec::Sq(SqSpec)
     }
 
-    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+    fn write_payload(&self, w: &mut Vec<u8>) -> Result<()> {
         artifact::w_u64(w, self.d as u64)?;
-        artifact::w_u8s(w, &self.codes)?;
+        artifact::w_section_u8s(w, &self.codes)?;
         artifact::w_f32s(w, &self.lo)?;
         artifact::w_f32s(w, &self.scale)?;
-        artifact::w_tensor(w, &self.keys)?;
+        artifact::w_tensor_v3(w, &self.keys)?;
         artifact::w_u64(w, self.rerank as u64)
+    }
+
+    fn zero_copy(&self) -> bool {
+        self.codes.is_view() && self.keys.is_view()
     }
 }
 

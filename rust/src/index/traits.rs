@@ -100,8 +100,18 @@ pub trait VectorIndex: Send + Sync {
     /// Serialize the backbone-specific payload (trained state + packed
     /// storage, no framing). Each backbone pairs this with an inherent
     /// `read_payload` constructor; the framed artifact around it lives
-    /// in [`crate::index::artifact`].
-    fn write_payload(&self, w: &mut dyn Write) -> Result<()>;
+    /// in [`crate::index::artifact`]. The sink is a `Vec<u8>` (not
+    /// `dyn Write`) because the aligned v3 section codecs need the
+    /// current payload offset to place their pads.
+    fn write_payload(&self, w: &mut Vec<u8>) -> Result<()>;
+
+    /// Whether this index currently serves its bulk scan data (key
+    /// matrices, code matrices) as borrowed views of a mapped artifact
+    /// rather than owned RAM copies. `false` for backbones without a
+    /// zero-copy read path and for anything built or decoded in RAM.
+    fn zero_copy(&self) -> bool {
+        false
+    }
 
     /// Serialize the full versioned artifact: header (magic, version,
     /// backbone tag, dim, len, spec echo), payload, checksum. Reload

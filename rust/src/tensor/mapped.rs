@@ -1,0 +1,526 @@
+//! Byte sources and zero-copy sections for the on-disk containers.
+//!
+//! [`Mapped`] is the byte source: `mmap(2)` under the `mmap` feature
+//! (zero-copy page-cache startup), plain `std::fs::read` into RAM
+//! otherwise. No new crates — the mmap path is a three-symbol libc FFI
+//! that std already links against on unix.
+//!
+//! [`Section<T>`] is the zero-copy unit built on top of it: a typed
+//! slice that either owns a `Vec<T>` (the decode-into-RAM path every
+//! pre-v3 container uses) or borrows a range of a shared [`Mapped`]
+//! region, holding the mapping alive via `Arc<Mapped>`. The borrowed
+//! arm is only constructible through the checked [`Section::view`]
+//! accessor, which verifies the *runtime address* alignment (mmap is
+//! page-aligned but a `Vec` fallback need not be), bounds, and target
+//! endianness before casting — callers fall back to a copy when it
+//! returns `None`, never to UB.
+//!
+//! The [`stats`] counters record how many payload bytes were served
+//! borrowed vs. copied; the metrics listener exports them as
+//! `amips_mapped_bytes` / `amips_copied_bytes`.
+
+use std::fs::File;
+use std::io::{self, Read};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Global mapped-vs-copied byte counters (process-wide, monotonic).
+pub mod stats {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static MAPPED: AtomicU64 = AtomicU64::new(0);
+    static COPIED: AtomicU64 = AtomicU64::new(0);
+
+    /// Record `bytes` served as a borrowed view of a mapping.
+    pub fn add_mapped(bytes: u64) {
+        MAPPED.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Record `bytes` decoded into a fresh RAM copy.
+    pub fn add_copied(bytes: u64) {
+        COPIED.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn mapped_bytes() -> u64 {
+        MAPPED.load(Ordering::Relaxed)
+    }
+
+    pub fn copied_bytes() -> u64 {
+        COPIED.load(Ordering::Relaxed)
+    }
+}
+
+/// An immutable byte buffer backed either by an anonymous read of the
+/// file or (with `--features mmap` on unix) by a private read-only
+/// mapping. Deref to `&[u8]` and hand it to a container decoder.
+pub struct Mapped {
+    inner: Inner,
+}
+
+enum Inner {
+    Ram(Vec<u8>),
+    #[cfg(all(feature = "mmap", unix))]
+    Map(map::MapHandle),
+}
+
+impl Mapped {
+    /// Read (or map) an entire file. Empty files yield an empty slice
+    /// through the RAM path: `mmap` with `len == 0` is EINVAL.
+    pub fn open(path: &Path) -> io::Result<Mapped> {
+        let mut f = File::open(path)?;
+        let len = f.metadata()?.len();
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "segment file larger than address space",
+            ));
+        }
+        #[cfg(all(feature = "mmap", unix))]
+        {
+            if len > 0 {
+                match map::MapHandle::map(&f, len as usize) {
+                    Ok(m) => return Ok(Mapped { inner: Inner::Map(m) }),
+                    // e.g. a filesystem that refuses mappings — fall
+                    // back to the portable read-into-RAM path.
+                    Err(_) => {}
+                }
+            }
+        }
+        let mut buf = Vec::with_capacity(len as usize);
+        f.read_to_end(&mut buf)?;
+        Ok(Mapped { inner: Inner::Ram(buf) })
+    }
+
+    /// Wrap an in-RAM buffer (used by tests and by writers that keep
+    /// the bytes they just produced).
+    pub fn from_vec(buf: Vec<u8>) -> Mapped {
+        Mapped { inner: Inner::Ram(buf) }
+    }
+
+    /// Whether this buffer is a real file mapping (page-cache backed)
+    /// rather than an anonymous RAM copy. Lazy opens skip the
+    /// full-payload checksum only for real mappings — verifying it
+    /// would fault in every page and defeat the O(1) open.
+    pub fn is_map(&self) -> bool {
+        match &self.inner {
+            Inner::Ram(_) => false,
+            #[cfg(all(feature = "mmap", unix))]
+            Inner::Map(_) => true,
+        }
+    }
+
+    /// `madvise(MADV_SEQUENTIAL)` on `[off, off + len)` of a real
+    /// mapping — a scan-section hint, ignored on RAM buffers and on
+    /// non-mmap builds. Advisory only: errors are discarded.
+    pub fn advise_sequential(&self, off: usize, len: usize) {
+        let _ = (off, len);
+        match &self.inner {
+            Inner::Ram(_) => {}
+            #[cfg(all(feature = "mmap", unix))]
+            Inner::Map(m) => m.advise_sequential(off, len),
+        }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.inner {
+            Inner::Ram(v) => v,
+            #[cfg(all(feature = "mmap", unix))]
+            Inner::Map(m) => m.as_slice(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::ops::Deref for Mapped {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+/// Element types a [`Section`] may view in place.
+///
+/// # Safety
+///
+/// Implementors assert that every bit pattern is a valid value and the
+/// type has no padding — the borrowed arm casts raw little-endian file
+/// bytes to `&[Self]` after an address-alignment check.
+pub unsafe trait Pod: Copy + Send + Sync + 'static {
+    /// Decode one element from exactly `size_of::<Self>()` LE bytes
+    /// (the copy fallback for misaligned or big-endian hosts).
+    fn from_le_bytes(b: &[u8]) -> Self;
+}
+
+unsafe impl Pod for u8 {
+    fn from_le_bytes(b: &[u8]) -> u8 {
+        b[0]
+    }
+}
+
+unsafe impl Pod for u16 {
+    fn from_le_bytes(b: &[u8]) -> u16 {
+        u16::from_le_bytes([b[0], b[1]])
+    }
+}
+
+unsafe impl Pod for u32 {
+    fn from_le_bytes(b: &[u8]) -> u32 {
+        u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+unsafe impl Pod for f32 {
+    fn from_le_bytes(b: &[u8]) -> f32 {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+/// A typed slice that is either owned (decoded into RAM) or a borrowed
+/// view of a shared [`Mapped`] region. Deref to `&[T]`, so call sites
+/// index it exactly like the `Vec<T>` it replaces; mutation goes
+/// through [`Section::make_owned`] (copy-on-write).
+pub enum Section<T: Pod> {
+    Owned(Vec<T>),
+    View {
+        map: Arc<Mapped>,
+        /// Byte offset of the first element within the mapping.
+        off: usize,
+        /// Element (not byte) count.
+        len: usize,
+    },
+}
+
+impl<T: Pod> Section<T> {
+    pub fn owned(v: Vec<T>) -> Section<T> {
+        Section::Owned(v)
+    }
+
+    /// Decode `raw` (little-endian, `len * size_of::<T>()` bytes) into
+    /// an owned section — the universal fallback path.
+    pub fn from_le_bytes(raw: &[u8]) -> Section<T> {
+        let sz = std::mem::size_of::<T>();
+        debug_assert_eq!(raw.len() % sz, 0);
+        Section::Owned(raw.chunks_exact(sz).map(T::from_le_bytes).collect())
+    }
+
+    /// The checked-alignment accessor: a borrowed view of `len`
+    /// elements starting `off` bytes into `map`, or `None` when the
+    /// cast would be unsound — range out of bounds, the *runtime
+    /// address* `map + off` not aligned for `T` (mmap is page-aligned
+    /// but in-file section offsets and `Vec` fallbacks need not be), or
+    /// a big-endian host (file bytes are LE). Callers treat `None` as
+    /// "copy instead", never as an error.
+    pub fn view(map: &Arc<Mapped>, off: usize, len: usize) -> Option<Section<T>> {
+        if cfg!(target_endian = "big") {
+            return None;
+        }
+        let bytes = len.checked_mul(std::mem::size_of::<T>())?;
+        let end = off.checked_add(bytes)?;
+        if end > map.len() {
+            return None;
+        }
+        let addr = map.as_slice().as_ptr() as usize + off;
+        if addr % std::mem::align_of::<T>() != 0 {
+            return None;
+        }
+        stats::add_mapped(bytes as u64);
+        Some(Section::View {
+            map: Arc::clone(map),
+            off,
+            len,
+        })
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            Section::Owned(v) => v,
+            Section::View { map, off, len } => unsafe {
+                // bounds + alignment + endianness were verified by
+                // `view`; the Arc keeps the mapping alive for &self.
+                std::slice::from_raw_parts(
+                    map.as_slice().as_ptr().add(*off) as *const T,
+                    *len,
+                )
+            },
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Section::Owned(v) => v.len(),
+            Section::View { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_view(&self) -> bool {
+        matches!(self, Section::View { .. })
+    }
+
+    /// Copy-on-write: replace a view with an owned copy (no-op when
+    /// already owned) and return the vector for mutation.
+    pub fn make_owned(&mut self) -> &mut Vec<T> {
+        if self.is_view() {
+            let v = self.as_slice().to_vec();
+            *self = Section::Owned(v);
+        }
+        match self {
+            Section::Owned(v) => v,
+            Section::View { .. } => unreachable!("make_owned replaced the view"),
+        }
+    }
+
+    pub fn to_vec(&self) -> Vec<T> {
+        self.as_slice().to_vec()
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        match self {
+            Section::Owned(v) => v,
+            view => view.as_slice().to_vec(),
+        }
+    }
+
+    /// Pass the sequential-scan hint through to the backing mapping
+    /// (no-op for owned sections).
+    pub fn advise_sequential(&self) {
+        if let Section::View { map, off, len } = self {
+            map.advise_sequential(*off, len * std::mem::size_of::<T>());
+        }
+    }
+}
+
+impl<T: Pod> std::ops::Deref for Section<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> Clone for Section<T> {
+    fn clone(&self) -> Section<T> {
+        match self {
+            Section::Owned(v) => Section::Owned(v.clone()),
+            Section::View { map, off, len } => Section::View {
+                map: Arc::clone(map),
+                off: *off,
+                len: *len,
+            },
+        }
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for Section<T> {
+    fn eq(&self, other: &Section<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod> std::fmt::Debug for Section<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Section")
+            .field("len", &self.len())
+            .field("view", &self.is_view())
+            .finish()
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for Section<T> {
+    fn from(v: Vec<T>) -> Section<T> {
+        Section::Owned(v)
+    }
+}
+
+#[cfg(all(feature = "mmap", unix))]
+mod map {
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    use core::ffi::{c_int, c_void};
+
+    const PROT_READ: c_int = 1;
+    const MAP_PRIVATE: c_int = 2;
+    const MADV_SEQUENTIAL: c_int = 2;
+    /// Conservative page size for rounding `madvise` ranges: real page
+    /// sizes are multiples of 4 KiB on every unix we target, and a
+    /// misrounded hint is merely ignored.
+    const PAGE: usize = 4096;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+    }
+
+    /// A private read-only mapping of one whole file, unmapped on drop.
+    pub(super) struct MapHandle {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // The mapping is read-only and owned exclusively by this handle.
+    unsafe impl Send for MapHandle {}
+    unsafe impl Sync for MapHandle {}
+
+    impl MapHandle {
+        pub(super) fn map(f: &File, len: usize) -> io::Result<MapHandle> {
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    f.as_raw_fd(),
+                    0,
+                )
+            };
+            // MAP_FAILED is (void*)-1 on every unix we target.
+            if ptr as isize == -1 || ptr.is_null() {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(MapHandle { ptr, len })
+        }
+
+        pub(super) fn as_slice(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+
+        pub(super) fn advise_sequential(&self, off: usize, len: usize) {
+            let start = off & !(PAGE - 1);
+            let end = off.saturating_add(len).min(self.len);
+            if start >= end {
+                return;
+            }
+            unsafe {
+                madvise(
+                    (self.ptr as *mut u8).add(start) as *mut c_void,
+                    end - start,
+                    MADV_SEQUENTIAL,
+                );
+            }
+        }
+    }
+
+    impl Drop for MapHandle {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    #[test]
+    fn open_reads_whole_file() {
+        let tmp = TempDir::new("mapped");
+        let path = tmp.join("blob.bin");
+        let bytes: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&path, &bytes).unwrap();
+        let m = Mapped::open(&path).unwrap();
+        assert_eq!(&m[..], &bytes[..]);
+        assert_eq!(m.len(), 10_000);
+    }
+
+    #[test]
+    fn open_empty_file_is_empty_slice() {
+        let tmp = TempDir::new("mapped");
+        let path = tmp.join("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let m = Mapped::open(&path).unwrap();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let tmp = TempDir::new("mapped");
+        assert!(Mapped::open(&tmp.join("nope.bin")).is_err());
+    }
+
+    #[test]
+    fn view_rejects_misaligned_frames() {
+        let m = Arc::new(Mapped::from_vec((0..128).map(|i| i as u8).collect()));
+        let base = m.as_slice().as_ptr() as usize;
+        // an offset whose *runtime address* is ≡ 1 (mod 4): never
+        // f32-aligned regardless of where the allocator placed the Vec
+        let mis = (4 - (base % 4)) % 4 + 1;
+        assert!(Section::<f32>::view(&m, mis, 4).is_none());
+        assert!(Section::<u32>::view(&m, mis, 4).is_none());
+        // u8 views have no alignment requirement
+        assert!(Section::<u8>::view(&m, mis, 4).is_some());
+    }
+
+    #[test]
+    fn view_checks_bounds() {
+        let m = Arc::new(Mapped::from_vec(vec![0u8; 64]));
+        assert!(Section::<u8>::view(&m, 0, 65).is_none());
+        assert!(Section::<u8>::view(&m, 60, 5).is_none());
+        assert!(Section::<f32>::view(&m, 0, 17).is_none());
+        assert!(Section::<u8>::view(&m, usize::MAX, 2).is_none());
+    }
+
+    #[cfg(target_endian = "little")]
+    #[test]
+    fn aligned_view_reads_in_place_and_copies_on_write() {
+        let vals = [1.5f32, -2.25, 3.0, 0.125];
+        let mut bytes = vec![0u8; 16];
+        for (c, v) in bytes.chunks_exact_mut(4).zip(vals) {
+            c.copy_from_slice(&v.to_le_bytes());
+        }
+        let m = Arc::new(Mapped::from_vec(bytes));
+        let base = m.as_slice().as_ptr() as usize;
+        if base % 4 != 0 {
+            // allocator placed the Vec unaligned (legal, just rare):
+            // the accessor must refuse, which IS the contract
+            assert!(Section::<f32>::view(&m, 0, 4).is_none());
+            return;
+        }
+        let mut s = Section::<f32>::view(&m, 0, 4).unwrap();
+        assert!(s.is_view());
+        assert_eq!(&s[..], &vals[..]);
+        // bit-identical to the decode-and-copy path
+        assert_eq!(
+            Section::<f32>::from_le_bytes(m.as_slice()).as_slice(),
+            s.as_slice()
+        );
+        s.make_owned()[0] = 9.0;
+        assert!(!s.is_view());
+        assert_eq!(s[0], 9.0);
+        // the mapping is untouched
+        assert_eq!(m.as_slice()[0..4], 1.5f32.to_le_bytes());
+    }
+
+    #[test]
+    fn stats_counters_are_monotonic() {
+        let before = stats::copied_bytes();
+        stats::add_copied(16);
+        assert!(stats::copied_bytes() >= before + 16);
+        let before = stats::mapped_bytes();
+        stats::add_mapped(8);
+        assert!(stats::mapped_bytes() >= before + 8);
+    }
+}

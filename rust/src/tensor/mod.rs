@@ -8,6 +8,7 @@
 pub mod half;
 pub mod kernels;
 mod linalg;
+pub mod mapped;
 #[allow(clippy::module_inception)]
 mod tensor;
 
@@ -15,4 +16,5 @@ pub use linalg::{
     dot, gemm_nt, gemm_nt_tile, matvec, normalize_rows, pca_project, power_iteration_pca,
     scaled_add,
 };
+pub use mapped::{Mapped, Section};
 pub use tensor::{load_tensor_set, save_tensor_set, Tensor};

@@ -5,11 +5,17 @@
 use anyhow::{bail, Result};
 use std::io::{Read, Write};
 
-/// Row-major f32 tensor.
+use super::mapped::Section;
+
+/// Row-major f32 tensor. The element storage is a [`Section`]: owned
+/// RAM in every build path, or a borrowed view of an `Arc<Mapped>`
+/// container region on the zero-copy artifact read paths. Views are
+/// copy-on-write: any `&mut` access ([`Tensor::data_mut`],
+/// [`Tensor::row_mut`]) silently materializes an owned copy first.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    data: Section<f32>,
 }
 
 /// Magic header for the single-tensor binary format (`.amt`).
@@ -25,7 +31,7 @@ impl Tensor {
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor {
             shape: shape.to_vec(),
-            data: vec![0.0; shape.iter().product()],
+            data: Section::owned(vec![0.0; shape.iter().product()]),
         }
     }
 
@@ -39,6 +45,22 @@ impl Tensor {
         );
         Tensor {
             shape: shape.to_vec(),
+            data: Section::owned(data),
+        }
+    }
+
+    /// Wrap a [`Section`] (owned or a borrowed container view) without
+    /// copying. The zero-copy artifact readers build view tensors here.
+    pub fn from_section(shape: &[usize], data: Section<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} != section len {}",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
             data,
         }
     }
@@ -46,7 +68,7 @@ impl Tensor {
     pub fn scalar(v: f32) -> Tensor {
         Tensor {
             shape: vec![],
-            data: vec![v],
+            data: Section::owned(vec![v]),
         }
     }
 
@@ -60,13 +82,24 @@ impl Tensor {
         self.data.is_empty()
     }
     pub fn data(&self) -> &[f32] {
-        &self.data
+        self.data.as_slice()
     }
+    /// Mutable element access — copies a borrowed view first (COW).
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        self.data.make_owned().as_mut_slice()
     }
     pub fn into_vec(self) -> Vec<f32> {
-        self.data
+        self.data.into_vec()
+    }
+    /// Whether the elements are a borrowed view of a mapped container
+    /// (zero-copy) rather than an owned RAM buffer.
+    pub fn is_view(&self) -> bool {
+        self.data.is_view()
+    }
+    /// Sequential-scan `madvise` hint for view-backed tensors (no-op
+    /// when owned).
+    pub fn advise_sequential(&self) {
+        self.data.advise_sequential()
     }
 
     /// Number of rows when interpreted as a matrix [rows, cols].
@@ -85,12 +118,12 @@ impl Tensor {
 
     pub fn row(&self, i: usize) -> &[f32] {
         let w = self.row_width();
-        &self.data[i * w..(i + 1) * w]
+        &self.data.as_slice()[i * w..(i + 1) * w]
     }
 
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         let w = self.row_width();
-        &mut self.data[i * w..(i + 1) * w]
+        &mut self.data.make_owned()[i * w..(i + 1) * w]
     }
 
     /// Reshape in place (element count must match).
@@ -124,7 +157,7 @@ impl Tensor {
         }
         // SAFETY-free byte copy of f32 LE data.
         let mut buf = Vec::with_capacity(self.data.len() * 4);
-        for &v in &self.data {
+        for &v in self.data.as_slice() {
             buf.extend_from_slice(&v.to_le_bytes());
         }
         w.write_all(&buf)?;
@@ -161,11 +194,14 @@ impl Tensor {
         };
         let mut raw = vec![0u8; n * 4];
         r.read_exact(&mut raw)?;
-        let data = raw
+        let data: Vec<f32> = raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        Ok(Tensor { shape, data })
+        Ok(Tensor {
+            shape,
+            data: Section::owned(data),
+        })
     }
 
     pub fn save(&self, path: &std::path::Path) -> Result<()> {

@@ -698,27 +698,67 @@ fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Offset + length of the payload inside a framed artifact
-/// (magic, version u32, tag str, dim u64, len u64, spec str, plen u64).
-fn frame_payload(bytes: &[u8]) -> (usize, usize) {
+/// Offset just past the spec echo — the end of the version-independent
+/// header fields (magic, version u32, tag str, dim u64, len u64, spec
+/// str).
+fn header_end(bytes: &[u8]) -> usize {
     let tag_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
-    let mut off = 12 + tag_len + 16;
+    let off = 12 + tag_len + 16;
     let spec_len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
-    off += 4 + spec_len;
+    off + 4 + spec_len
+}
+
+/// Offset + length of the payload inside a framed artifact. v3 frames
+/// carry a self-describing pad (u32 length + zeros) between the spec
+/// echo and the payload length; v1/v2 frames go straight to the length.
+fn frame_payload(bytes: &[u8]) -> (usize, usize) {
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    let mut off = header_end(bytes);
+    if version >= 3 {
+        let pad = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        off += 4 + pad;
+    }
     let plen = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
     (off + 8, plen)
 }
 
-/// Rebuild the artifact as version 1 around a hand-edited payload
-/// (header copied, version field rewritten, length + checksum redone).
-fn reframe_v1(bytes: &[u8], new_payload: &[u8]) -> Vec<u8> {
-    let (pstart, _) = frame_payload(bytes);
-    let mut out = bytes[..pstart - 8].to_vec();
-    out[4..8].copy_from_slice(&1u32.to_le_bytes());
+/// Rebuild the artifact as `version` (pad-free v1/v2 framing) around a
+/// hand-edited payload: header fields copied, version field rewritten,
+/// length + checksum redone.
+fn reframe(bytes: &[u8], version: u32, new_payload: &[u8]) -> Vec<u8> {
+    let mut out = bytes[..header_end(bytes)].to_vec();
+    out[4..8].copy_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&(new_payload.len() as u64).to_le_bytes());
     out.extend_from_slice(new_payload);
     out.extend_from_slice(&fnv1a64(new_payload).to_le_bytes());
     out
+}
+
+/// Down-convert the aligned v3 section at the head of `cur` (count u64,
+/// pad u32 + zeros, `elem`-byte LE data) to the legacy
+/// u64-length-prefixed array encoding. Returns (legacy bytes, v3 bytes
+/// consumed).
+fn de_section(cur: &[u8], elem: usize) -> (Vec<u8>, usize) {
+    let count = u64::from_le_bytes(cur[..8].try_into().unwrap()) as usize;
+    let pad = u32::from_le_bytes(cur[8..12].try_into().unwrap()) as usize;
+    let start = 12 + pad;
+    let end = start + count * elem;
+    let mut out = cur[..8].to_vec();
+    out.extend_from_slice(&cur[start..end]);
+    (out, end)
+}
+
+/// Down-convert the v3 tensor at the head of `cur` (rank u32 + dims
+/// u64s + aligned f32 section) to the legacy `AMT1` encoding (magic +
+/// rank + dims + raw data — the element count is implied by the dims).
+fn de_tensor(cur: &[u8]) -> (Vec<u8>, usize) {
+    let rank = u32::from_le_bytes(cur[..4].try_into().unwrap()) as usize;
+    let dims_end = 4 + rank * 8;
+    let (sec, sec_len) = de_section(&cur[dims_end..], 4);
+    let mut out = b"AMT1".to_vec();
+    out.extend_from_slice(&cur[..dims_end]);
+    out.extend_from_slice(&sec[8..]);
+    (out, dims_end + sec_len)
 }
 
 /// Bytes consumed by one tensor at the head of `cur`.
@@ -751,47 +791,61 @@ fn assert_loads_identically(
 }
 
 /// The binding v1 contract: version-1 artifacts (which predate the
-/// storage tag and the PQ `bits` field) must load bit-identically to
-/// the f32/8-bit build that would have written them. v1 streams are
-/// constructed by hand here — current writers always emit v2, so this
-/// is exactly the archived-artifact scenario.
+/// storage tag, the PQ `bits` field and the aligned v3 sections) must
+/// load bit-identically to the f32/8-bit build that would have written
+/// them. v1 streams are constructed by hand here — current writers
+/// always emit v3, so this is exactly the archived-artifact scenario.
 #[test]
 fn hand_built_v1_artifacts_load_bit_identically() {
     let keys = unit(&[N, D], 50);
     let queries = unit(&[8, D], 51);
 
-    // flat: the v1 payload is the bare f32 key tensor (v2 prefixes a
-    // u32 storage tag)
+    // flat: the v1 payload is the bare legacy f32 key tensor (v2+
+    // prefix a u32 storage tag; v3 stores the rows in an aligned
+    // section)
     let flat = build("flat", &keys, &queries);
-    let v2 = save_bytes(flat.as_ref());
-    let (pstart, plen) = frame_payload(&v2);
-    let payload = &v2[pstart..pstart + plen];
+    let v3 = save_bytes(flat.as_ref());
+    let (pstart, plen) = frame_payload(&v3);
+    let payload = &v3[pstart..pstart + plen];
     assert_eq!(&payload[..4], &0u32.to_le_bytes(), "f32 storage tag");
-    let v1 = reframe_v1(&v2, &payload[4..]);
+    let (keys_t, used) = de_tensor(&payload[4..]);
+    assert_eq!(4 + used, plen, "flat payload is tag + key tensor");
+    let v1 = reframe(&v3, 1, &keys_t);
     assert_loads_identically(&v1, flat.as_ref(), &queries, "flat v1");
 
     // pq: the v1 payload lacks the `bits` u64 between (d, m, dsub) and
-    // the codebooks
+    // the codebooks, stores codes as a legacy byte array and keys as a
+    // legacy tensor
     let pq = build("pq", &keys, &queries);
-    let v2 = save_bytes(pq.as_ref());
-    let (pstart, plen) = frame_payload(&v2);
-    let payload = &v2[pstart..pstart + plen];
+    let v3 = save_bytes(pq.as_ref());
+    let (pstart, plen) = frame_payload(&v3);
+    let payload = &v3[pstart..pstart + plen];
     assert_eq!(
         &payload[24..32],
         &8u64.to_le_bytes(),
-        "v2 bits field after d/m/dsub"
+        "bits field after d/m/dsub"
     );
-    let mut p1 = payload[..24].to_vec();
-    p1.extend_from_slice(&payload[32..]);
-    let v1 = reframe_v1(&v2, &p1);
+    let mut p1 = payload[..24].to_vec(); // d, m, dsub (bits dropped)
+    let mut off = 32;
+    off += arr_len(&payload[off..], 4); // codebooks (version-stable)
+    p1.extend_from_slice(&payload[32..off]);
+    let (codes, used) = de_section(&payload[off..], 1);
+    off += used;
+    p1.extend_from_slice(&codes);
+    let (keys_t, used) = de_tensor(&payload[off..]);
+    off += used;
+    p1.extend_from_slice(&keys_t);
+    p1.extend_from_slice(&payload[off..plen]); // rerank, iters, eta
+    let v1 = reframe(&v3, 1, &p1);
     assert_loads_identically(&v1, pq.as_ref(), &queries, "pq v1");
 
-    // scann: same `bits` removal, after centroids/packed tensors and the
-    // codes/ids/offsets arrays + the quantizer's (m, dsub)
+    // scann: its payload is version-stable apart from the `bits` u64 —
+    // remove it after centroids/packed tensors, the codes/ids/offsets
+    // arrays and the quantizer's (m, dsub)
     let scann = build("scann", &keys, &queries);
-    let v2 = save_bytes(scann.as_ref());
-    let (pstart, plen) = frame_payload(&v2);
-    let payload = &v2[pstart..pstart + plen];
+    let v3 = save_bytes(scann.as_ref());
+    let (pstart, plen) = frame_payload(&v3);
+    let payload = &v3[pstart..pstart + plen];
     let mut off = tensor_len(payload); // centroids
     off += tensor_len(&payload[off..]); // packed keys
     off += arr_len(&payload[off..], 1); // codes
@@ -800,21 +854,203 @@ fn hand_built_v1_artifacts_load_bit_identically() {
     off += 16; // m, dsub
     assert_eq!(&payload[off..off + 8], &8u64.to_le_bytes(), "scann bits");
     let mut p1 = payload[..off].to_vec();
-    p1.extend_from_slice(&payload[off + 8..]);
-    let v1 = reframe_v1(&v2, &p1);
+    p1.extend_from_slice(&payload[off + 8..plen]);
+    let v1 = reframe(&v3, 1, &p1);
     assert_loads_identically(&v1, scann.as_ref(), &queries, "scann v1");
 
-    // leanvec: the v1 payload stores the re-rank keys as a bare tensor —
-    // drop the u32 storage tag after the comps tensor + mean array
+    // leanvec: the v1 payload stores the re-rank keys as a bare legacy
+    // tensor — drop the u32 storage tag after the comps tensor + mean
+    // array and de-align the key rows
     let lv = build("leanvec", &keys, &queries);
-    let v2 = save_bytes(lv.as_ref());
-    let (pstart, plen) = frame_payload(&v2);
-    let payload = &v2[pstart..pstart + plen];
+    let v3 = save_bytes(lv.as_ref());
+    let (pstart, plen) = frame_payload(&v3);
+    let payload = &v3[pstart..pstart + plen];
     let mut off = tensor_len(payload); // comps
     off += arr_len(&payload[off..], 4); // mean
     assert_eq!(&payload[off..off + 4], &0u32.to_le_bytes(), "leanvec tag");
     let mut p1 = payload[..off].to_vec();
-    p1.extend_from_slice(&payload[off + 4..]);
-    let v1 = reframe_v1(&v2, &p1);
+    let (keys_t, used) = de_tensor(&payload[off + 4..]);
+    p1.extend_from_slice(&keys_t);
+    p1.extend_from_slice(&payload[off + 4 + used..plen]);
+    let v1 = reframe(&v3, 1, &p1);
     assert_loads_identically(&v1, lv.as_ref(), &queries, "leanvec v1");
+}
+
+/// The v2 contract: version-2 artifacts (tagged key stores and the PQ
+/// `bits` field, but unaligned arrays — the PR 9 layout) must load
+/// bit-identically. Hand-built by de-aligning the v3 writer output for
+/// both section flavors (u8 code matrices, u16 f16 rows) and the v3
+/// tensor codec.
+#[test]
+fn hand_built_v2_artifacts_load_bit_identically() {
+    let keys = unit(&[N, D], 56);
+    let queries = unit(&[8, D], 57);
+
+    // flat f32: storage tag + legacy tensor
+    let flat = build("flat", &keys, &queries);
+    let v3 = save_bytes(flat.as_ref());
+    let (pstart, plen) = frame_payload(&v3);
+    let payload = &v3[pstart..pstart + plen];
+    let mut p2 = payload[..4].to_vec();
+    let (keys_t, used) = de_tensor(&payload[4..]);
+    assert_eq!(4 + used, plen);
+    p2.extend_from_slice(&keys_t);
+    let v2 = reframe(&v3, 2, &p2);
+    assert_loads_identically(&v2, flat.as_ref(), &queries, "flat v2");
+
+    // flat f16: storage tag 1 + n + d + legacy u16 array
+    let spec: IndexSpec = "flat(storage=f16)".parse().unwrap();
+    let f16 = spec
+        .build(
+            &keys,
+            &BuildCtx {
+                sample_queries: Some(&queries),
+                seed: 58,
+            },
+        )
+        .unwrap();
+    let v3 = save_bytes(f16.as_ref());
+    let (pstart, plen) = frame_payload(&v3);
+    let payload = &v3[pstart..pstart + plen];
+    assert_eq!(&payload[..4], &1u32.to_le_bytes(), "f16 storage tag");
+    let mut p2 = payload[..20].to_vec(); // tag, n, d
+    let (rows, used) = de_section(&payload[20..], 2);
+    assert_eq!(20 + used, plen);
+    p2.extend_from_slice(&rows);
+    let v2 = reframe(&v3, 2, &p2);
+    assert_loads_identically(&v2, f16.as_ref(), &queries, "flat-f16 v2");
+
+    // sq8: d + legacy code bytes + lo/scale arrays + legacy tensor +
+    // rerank
+    let sq = build("sq8", &keys, &queries);
+    let v3 = save_bytes(sq.as_ref());
+    let (pstart, plen) = frame_payload(&v3);
+    let payload = &v3[pstart..pstart + plen];
+    let mut p2 = payload[..8].to_vec(); // d
+    let (codes, used) = de_section(&payload[8..], 1);
+    let mut off = 8 + used;
+    p2.extend_from_slice(&codes);
+    let lo = arr_len(&payload[off..], 4);
+    let lo_scale = lo + arr_len(&payload[off + lo..], 4);
+    p2.extend_from_slice(&payload[off..off + lo_scale]);
+    off += lo_scale;
+    let (keys_t, used) = de_tensor(&payload[off..]);
+    off += used;
+    p2.extend_from_slice(&keys_t);
+    assert_eq!(plen - off, 8, "rerank is the final u64");
+    p2.extend_from_slice(&payload[off..plen]);
+    let v2 = reframe(&v3, 2, &p2);
+    assert_loads_identically(&v2, sq.as_ref(), &queries, "sq8 v2");
+}
+
+// ---------------------------------------------------------------------------
+// Version-3 aligned layout: zero-copy file loads
+// ---------------------------------------------------------------------------
+
+/// Tentpole acceptance: an artifact loaded back through the file path
+/// searches bit-identically to the in-RAM index it was saved from, and
+/// under `--features mmap` the scan matrices (f32/f16 key rows, SQ8/PQ
+/// code matrices) are borrowed views of the mapping — no decoded copy.
+#[test]
+fn file_loads_are_bit_identical_and_zero_copy_under_mmap() {
+    let tmp = TempDir::new("amips-zero-copy");
+    let keys = unit(&[N, D], 60);
+    let queries = unit(&[6, D], 61);
+    for (i, spec_str) in ["flat", "flat(storage=f16)", "sq8", "pq", "leanvec"]
+        .iter()
+        .enumerate()
+    {
+        let spec: IndexSpec = match IndexSpec::default_for(spec_str) {
+            Ok(s) => s.with_nlist(NLIST),
+            Err(_) => spec_str.parse().unwrap(),
+        };
+        let idx = spec
+            .build(
+                &keys,
+                &BuildCtx {
+                    sample_queries: Some(&queries),
+                    seed: 62,
+                },
+            )
+            .unwrap_or_else(|e| panic!("{spec_str}: {e:#}"));
+        let path = tmp.join(format!("zc-{i}.ami"));
+        amips::index::save(&path, idx.as_ref()).unwrap();
+        let loaded = amips::index::load(&path).unwrap();
+        // page-aligned mappings + the 64-byte section contract mean the
+        // bulk matrices must come back as views, not copies
+        #[cfg(feature = "mmap")]
+        assert!(
+            loaded.zero_copy(),
+            "{spec_str}: scan matrices should be borrowed from the mapping"
+        );
+        let req = SearchRequest::top_k(5).effort(Effort::Exhaustive);
+        let a = idx.search(&queries, &req).unwrap();
+        let b = loaded.search(&queries, &req).unwrap();
+        for q in 0..queries.rows() {
+            assert_eq!(a.hits[q].ids, b.hits[q].ids, "{spec_str} q{q}");
+            assert_eq!(a.hits[q].scores, b.hits[q].scores, "{spec_str} q{q}");
+        }
+    }
+}
+
+/// Corruption fuzz over the aligned v3 layout through the *file* load
+/// path. Under `--features mmap` this exercises the lazy-open rule —
+/// the payload checksum is skipped for real mappings, so the structural
+/// checks (section pads, lengths, shape cross-checks) alone must turn
+/// every flip into a typed error or a consistent, searchable index.
+/// Never a panic. (NaN scores from a flipped key byte are fine: TopK
+/// ranks NaN as -inf.)
+#[test]
+fn mapped_corruption_fuzz_never_panics() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let tmp = TempDir::new("amips-map-fuzz");
+    let keys = unit(&[160, D], 63);
+    let queries = unit(&[2, D], 64);
+    let path = tmp.join("fuzz.ami");
+    let mut rng = test_rng(65);
+    for spec_str in ["flat", "flat(storage=f16)", "sq8", "pq"] {
+        let spec: IndexSpec = spec_str.parse().unwrap();
+        let idx = spec
+            .build(
+                &keys,
+                &BuildCtx {
+                    sample_queries: Some(&queries),
+                    seed: 66,
+                },
+            )
+            .unwrap();
+        amips::index::save(&path, idx.as_ref()).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let (n_orig, d_orig) = (idx.len(), idx.dim());
+        for case in 0..prop_cases(30) {
+            let mut bad = bytes.clone();
+            if case % 3 == 2 {
+                bad.truncate(rng.below(bad.len()));
+            } else {
+                let pos = rng.below(bad.len());
+                bad[pos] ^= (1 + rng.below(255)) as u8;
+            }
+            std::fs::write(&path, &bad).unwrap();
+            let outcome = catch_unwind(AssertUnwindSafe(|| amips::index::load(&path)));
+            let loaded = outcome.unwrap_or_else(|_| {
+                panic!("{spec_str} case {case}: mapped load panicked")
+            });
+            if let Ok(loaded) = loaded {
+                assert_eq!(
+                    (loaded.len(), loaded.dim()),
+                    (n_orig, d_orig),
+                    "{spec_str} case {case}: corrupt file loaded an inconsistent index"
+                );
+                let res = catch_unwind(AssertUnwindSafe(|| {
+                    loaded.search_effort(queries.row(0), 3, Effort::Exhaustive)
+                }));
+                assert!(
+                    res.is_ok(),
+                    "{spec_str} case {case}: search panicked on a lazily-opened corrupt file"
+                );
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
 }

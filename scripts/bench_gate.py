@@ -12,14 +12,12 @@ Intentional softness — this is a regression tripwire, not a lab:
     detected kernel tier differs across machines, so a baseline recorded
     on avx2fma hardware has rows a NEON/scalar runner can't produce);
   * rows without a finite positive gflops value (e.g. the threaded
-    Searcher row) are skipped;
-  * a baseline marked "provisional": true (hand-written placeholder,
-    committed before the first hardware run) downgrades every failure to
-    advisory and exits 0 — replace it with real CI output to arm the
-    gate.
+    Searcher row and the bench_startup latency/RSS rows) are skipped.
 
-CI skips the whole step when the PR carries the `skip-bench-gate` label
-(for intentional trade-offs; say why in the PR description).
+The gate is ARMED: any gated row regressing past the threshold fails
+the run. CI skips the whole step only when the PR carries the
+`skip-bench-gate` label (for intentional trade-offs; say why in the PR
+description).
 
 Usage:
     python3 scripts/bench_gate.py \
@@ -69,7 +67,6 @@ def main():
     with open(args.current) as f:
         current_doc = json.load(f)
 
-    provisional = bool(baseline_doc.get("provisional"))
     baseline = gated_rows(baseline_doc)
     current = gated_rows(current_doc)
 
@@ -111,13 +108,6 @@ def main():
         )
         for label, base_g, cur_g, drop in failures:
             print(f"  {label}: {base_g:.2f} -> {cur_g:.2f} GFLOP/s (-{drop:.1%})")
-        if provisional:
-            print(
-                "baseline is marked provisional (hand-written placeholder) — "
-                "advisory only. Replace BENCH_hotpath.json with real CI "
-                "output and drop the marker to arm the gate."
-            )
-            return 0
         print(
             "If the regression is an intentional trade-off, apply the "
             "`skip-bench-gate` label and explain it in the PR; otherwise "
@@ -125,8 +115,7 @@ def main():
         )
         return 1
 
-    suffix = " (provisional baseline — advisory)" if provisional else ""
-    print(f"\nbench gate: all {compared} rows within {args.threshold:.0%}{suffix}")
+    print(f"\nbench gate: all {compared} rows within {args.threshold:.0%}")
     return 0
 
 

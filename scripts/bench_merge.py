@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Merge bench row files into one trajectory artifact.
+
+CI runs several pure-Rust benches (perf_hotpath, bench_startup) that
+each emit their own BENCH_<name>.json. The uploaded artifact — and the
+committed baseline scripts/bench_gate.py compares against — is a single
+BENCH_hotpath.json, so the extra benches' rows are folded into it here.
+
+Rows keep their provenance in a `bench` field; duplicate rows (same
+bench + identical content) are dropped so re-running the merge is
+idempotent. The gate keys on (backend, mode, kernel, batch) and skips
+rows without a finite positive gflops, so merged startup rows (which
+carry `"gflops": null`) ride along ungated.
+
+Usage:
+    python3 scripts/bench_merge.py \
+        --into rust/BENCH_hotpath.json rust/BENCH_startup.json [more.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--into", required=True, help="target JSON (modified in place)")
+    ap.add_argument("sources", nargs="+", help="BENCH_*.json files to fold in")
+    args = ap.parse_args()
+
+    target = load(args.into)
+    rows = target.get("rows", [])
+    for row in rows:
+        row.setdefault("bench", target.get("bench", "hotpath"))
+    seen = {json.dumps(r, sort_keys=True) for r in rows}
+
+    added = 0
+    for src_path in args.sources:
+        try:
+            src = load(src_path)
+        except FileNotFoundError:
+            print(f"bench merge: {src_path} missing (bench not run?); skipping")
+            continue
+        name = src.get("bench", src_path)
+        for row in src.get("rows", []):
+            row.setdefault("bench", name)
+            key = json.dumps(row, sort_keys=True)
+            if key in seen:
+                continue
+            seen.add(key)
+            rows.append(row)
+            added += 1
+
+    target["rows"] = rows
+    with open(args.into, "w") as f:
+        json.dump(target, f, indent=2)
+        f.write("\n")
+    print(f"bench merge: {args.into} now holds {len(rows)} rows (+{added})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
